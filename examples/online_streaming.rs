@@ -1,0 +1,91 @@
+//! Online/incremental learning (§5.2): traffic data streams in every few
+//! minutes; pPITC/pPIC assimilate only the *new* blocks' summaries
+//! instead of recomputing history — absorb cost stays flat while a naive
+//! refit grows.
+//!
+//!     cargo run --release --example online_streaming
+
+use pgpr::bench_support::table::{fmt3, Table};
+use pgpr::data::aimpeak::{self, AimpeakConfig};
+use pgpr::data::partition::random_partition;
+use pgpr::gp::support::support_matrix;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::metrics::rmse;
+use pgpr::parallel::online::OnlineGp;
+use pgpr::parallel::{ppitc, ClusterSpec};
+use pgpr::runtime::NativeBackend;
+use pgpr::util::{Pcg64, Stopwatch};
+
+fn main() {
+    let mut rng = Pcg64::seed(99);
+    let m = 4; // machines
+    let per_block = 60; // new points per machine per batch
+    let n_batches = 6;
+    let n_test = 80;
+
+    // stream source: AIMPEAK-like records arriving in time order
+    let (_, ds) = aimpeak::generate(&AimpeakConfig {
+        grid_w: 8, grid_h: 6, seed: 99, ..Default::default()
+    });
+    let need = n_batches * m * per_block + n_test;
+    assert!(ds.len() >= need);
+    let idx = rng.sample_indices(ds.len(), need);
+    let (test_idx, stream_idx) = idx.split_at(n_test);
+    let test = ds.select(test_idx);
+
+    let hyp = SeArd {
+        log_ls: vec![0.3, 0.3, 0.3, 0.3, -0.2],
+        log_sf2: (420.0f64).ln(),
+        log_sn2: (30.0f64).ln(),
+    };
+    let first = ds.select(&stream_idx[..m * per_block]);
+    let xs = support_matrix(&hyp, &first.x, 48);
+
+    let mut online = OnlineGp::new(&hyp, &xs, &NativeBackend,
+                                   ClusterSpec::new(m));
+    let u_blocks = random_partition(n_test, m, &mut rng);
+
+    let mut t = Table::new(
+        "online streaming: absorb cost (incremental) vs naive refit",
+        &["batch", "|D| so far", "absorb_s", "refit_s", "RMSE"],
+    );
+    let mut seen: Vec<usize> = Vec::new();
+    for b in 0..n_batches {
+        let lo = b * m * per_block;
+        let batch_idx = &stream_idx[lo..lo + m * per_block];
+        seen.extend_from_slice(batch_idx);
+
+        // split the arriving batch among machines
+        let blocks: Vec<(Mat, Vec<f64>)> = (0..m)
+            .map(|k| {
+                let rows: Vec<usize> =
+                    batch_idx[k * per_block..(k + 1) * per_block].to_vec();
+                let part = ds.select(&rows);
+                (part.x, part.y)
+            })
+            .collect();
+        let absorb_s = online.absorb(&blocks);
+
+        // naive alternative: rerun the full batch protocol over history
+        let hist = ds.select(&seen);
+        let d_blocks = random_partition(hist.len(), m, &mut rng);
+        let (_, refit_s) = Stopwatch::time(|| {
+            ppitc::run(&hyp, &hist.x, &hist.y, &xs, &test.x, &d_blocks,
+                       &u_blocks, &NativeBackend, &ClusterSpec::new(m))
+        });
+
+        let pred = online.predict_ppitc(&test.x, &u_blocks);
+        t.row(vec![
+            (b + 1).to_string(),
+            hist.len().to_string(),
+            fmt3(absorb_s),
+            fmt3(refit_s),
+            fmt3(rmse(&test.y, &pred.prediction.mean)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("absorb stays ~flat (one new block per machine) while the \
+              naive refit grows with |D| — the §5.2 advantage. pICF has \
+              no such incremental form (paper §5.2, last sentence).");
+}

@@ -1,0 +1,136 @@
+//! END-TO-END DRIVER — real-time traffic-speed prediction, the paper's
+//! motivating AIMPEAK scenario, exercising all three layers:
+//!
+//!   L1/L2  AOT artifacts (Pallas SE-Gram inside the JAX graphs, lowered
+//!          to HLO text) executed via PJRT on the request path;
+//!   L3     rust coordinator: clustering partition, support selection,
+//!          pPIC fit over the simulated 20-node cluster, then a serving
+//!          loop (router + dynamic batcher) under an open-loop request
+//!          stream.
+//!
+//!     make artifacts && cargo run --release --example traffic_monitoring
+//!
+//! Reports: protocol fit metrics, serving latency/throughput, and RMSE /
+//! MNLP against the exact FGP baseline. Recorded in EXPERIMENTS.md
+//! §End-to-end.
+
+use pgpr::bench_support::table::{fmt3, Table};
+use pgpr::data::aimpeak::{self, AimpeakConfig};
+use pgpr::data::partition::cluster_partition;
+use pgpr::gp::likelihood::{learn_hyperparameters, MleConfig};
+use pgpr::gp::support::support_matrix;
+use pgpr::gp::FullGp;
+use pgpr::kernel::SeArd;
+use pgpr::metrics::{mnlp, rmse};
+use pgpr::parallel::{ppic, ClusterSpec};
+use pgpr::runtime::{ArtifactManifest, Backend, NativeBackend, PjrtBackend};
+use pgpr::server::{DynamicBatcher, PredictRequest, ServedModel};
+use pgpr::util::{Pcg64, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg64::seed(420);
+
+    // ---- artifacts: the aimpeak profile pins B=200, S=128, U=150, d=5
+    let manifest = ArtifactManifest::load(
+        pgpr::runtime::artifacts::default_dir())?;
+    let profile = manifest.profile("aimpeak")?.clone();
+    let m = 4; // machines; |D| = m * B exactly (AOT block shape)
+    let n = profile.block * m; // 800
+    let n_test = profile.pred_block * m; // 600
+
+    println!("== generating urban road network + traffic field ==");
+    let (net, ds) = aimpeak::generate(&AimpeakConfig {
+        grid_w: 10,
+        grid_h: 8,
+        seed: 420,
+        ..Default::default()
+    });
+    println!("   {} segments x 54 slots = {} records",
+             net.n_segments(), ds.len());
+    assert!(ds.len() >= n + n_test, "need more records");
+    let idx = rng.sample_indices(ds.len(), n + n_test);
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let train = ds.select(train_idx);
+    let test = ds.select(test_idx);
+
+    // ---- hyperparameters: MLE on a subset (Section 6's procedure)
+    println!("== learning hyperparameters (MLE, Adam, 192-pt subset) ==");
+    let init = SeArd {
+        log_ls: vec![0.3, 0.3, 0.3, 0.3, -0.2],
+        log_sf2: (420.0f64).ln(),
+        log_sn2: (30.0f64).ln(),
+    };
+    let (mle, mle_secs) = Stopwatch::time(|| {
+        learn_hyperparameters(&init, &train.x, &train.y, &MleConfig {
+            iters: 25,
+            subset: 192,
+            seed: 7,
+            ..Default::default()
+        })
+    });
+    let hyp = mle.hyp;
+    println!("   NLML {} -> {} in {:.1}s", fmt3(mle.nlml_trace[0]),
+             fmt3(*mle.nlml_trace.last().unwrap()), mle_secs);
+
+    // ---- support set + clustering partition
+    let xs = support_matrix(&hyp, &train.x, profile.support);
+    let part = cluster_partition(&train.x, &test.x, m, &mut rng);
+
+    // ---- PJRT backend (the three-layer hot path)
+    println!("== loading AOT artifacts (PJRT CPU) ==");
+    let pjrt = PjrtBackend::load(&manifest, "aimpeak")?;
+
+    // ---- pPIC protocol over the simulated cluster, PJRT on the blocks
+    println!("== running pPIC over the simulated {m}-node cluster ==");
+    let out = ppic::run_with_partition(&hyp, &train.x, &train.y, &xs,
+                                       &test.x, &part.d_blocks,
+                                       &part.u_blocks, &pjrt,
+                                       &ClusterSpec::new(m));
+    let ppic_rmse = rmse(&test.y, &out.prediction.mean);
+    let ppic_mnlp = mnlp(&test.y, &out.prediction.mean, &out.prediction.var);
+
+    // ---- exact FGP baseline (the accuracy anchor)
+    let (fgp_pred, fgp_secs) = Stopwatch::time(|| {
+        FullGp::fit(&hyp, &train.x, &train.y).predict(&test.x)
+    });
+
+    let mut t = Table::new(
+        &format!("traffic monitoring: |D|={n}, |U|={n_test}, M={m}, \
+                  |S|={}", profile.support),
+        &["method", "RMSE (km/h)", "MNLP", "time_s"],
+    );
+    t.row(vec!["pPIC (pjrt)".into(), fmt3(ppic_rmse), fmt3(ppic_mnlp),
+               fmt3(out.metrics.makespan)]);
+    t.row(vec!["FGP (exact)".into(), fmt3(rmse(&test.y, &fgp_pred.mean)),
+               fmt3(mnlp(&test.y, &fgp_pred.mean, &fgp_pred.var)),
+               fmt3(fgp_secs)]);
+    println!("{}", t.render());
+
+    // ---- real-time serving: open-loop stream through router + batcher
+    println!("== serving 600 speed queries (router + dynamic batcher) ==");
+    let model = ServedModel::fit(&hyp, &train.x, &train.y, &xs,
+                                 &part.d_blocks, &pjrt);
+    let n_req = n_test;
+    let requests: Vec<PredictRequest> = (0..n_req)
+        .map(|i| PredictRequest {
+            id: i as u64,
+            x: test.x.row(i).to_vec(),
+            arrival_s: i as f64 * 5e-4, // 2000 req/s offered
+        })
+        .collect();
+    for (name, backend) in [("pjrt", &pjrt as &dyn Backend),
+                            ("native", &NativeBackend as &dyn Backend)] {
+        let mut batcher = DynamicBatcher::new(m, profile.d,
+                                              profile.pred_block, 5e-3);
+        let report = model.serve(backend, &requests, &mut batcher);
+        let serve_rmse = rmse(
+            &test.y[..n_req],
+            &report.responses.iter().map(|r| r.mean).collect::<Vec<_>>(),
+        );
+        println!("  [{name:6}] {}  | stream RMSE {}", report.summary(),
+                 fmt3(serve_rmse));
+    }
+    println!("\nall layers composed: Pallas kernel -> JAX graph -> HLO \
+              artifact -> PJRT -> rust coordinator -> served predictions");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX graphs + AOT.
+
+GP regression needs double precision — enable x64 before anything touches
+jax so every graph, test and artifact is f64.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,121 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + write the manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla_extension 0.5.1
+runtime behind the rust `xla` crate rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--profiles tiny,...]
+
+Outputs, per profile P and graph G:
+    artifacts/<P>_<G>.hlo.txt
+plus a single ``artifacts/manifest.json`` describing every artifact's
+input shapes (in call order) and output arity — the rust runtime loads
+artifacts strictly through this manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape profiles pinned at AOT time.  The rust coordinator pads prediction
+# batches up to ``pred_block`` (safe: per-row independent given summaries)
+# and requires data blocks of exactly ``block`` rows (the paper's Def. 1
+# even partition).  ``d`` counts input features; hyp vectors are d+2.
+PROFILES = {
+    # fast profile for unit/integration tests
+    "tiny": {"d": 3, "block": 32, "support": 16, "pred_block": 24, "rank": 16},
+    # AIMPEAK-like: 5-d features (MDS-embedded road network + time)
+    "aimpeak": {"d": 5, "block": 200, "support": 128, "pred_block": 150,
+                "rank": 128},
+    # SARCOS-like: 21-d features (7 pos, 7 vel, 7 acc)
+    "sarcos": {"d": 21, "block": 200, "support": 128, "pred_block": 150,
+               "rank": 256},
+}
+
+FORBIDDEN_CALL_PREFIXES = ("lapack_", "cu", "hip")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graph(name: str, profile: dict):
+    fn, shapes = model.GRAPHS[name]
+    specs = shapes(profile)
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    for bad in FORBIDDEN_CALL_PREFIXES:
+        if f'custom_call_target="{bad}' in text.replace(" ", ""):
+            raise RuntimeError(
+                f"{name}: HLO contains a {bad}* custom-call; the rust "
+                "runtime cannot execute it (use pure-jnp linalg in model.py)"
+            )
+    n_out = len(jax.eval_shape(fn, *specs))
+    inputs = [[f"arg{i}", list(s.shape), str(s.dtype)]
+              for i, s in enumerate(specs)]
+    return text, inputs, n_out
+
+
+def build(out_dir: str, profile_names: list[str]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "dtype": "float64",
+                      "profiles": {}}
+    for pname in profile_names:
+        profile = PROFILES[pname]
+        entry = {k: profile[k] for k in
+                 ("d", "block", "support", "pred_block", "rank")}
+        entry["graphs"] = {}
+        for gname in model.GRAPHS:
+            text, inputs, n_out = lower_graph(gname, profile)
+            fname = f"{pname}_{gname}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["graphs"][gname] = {
+                "file": fname,
+                "inputs": inputs,
+                "outputs": n_out,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+            print(f"  [{pname}/{gname}] {len(text)} chars -> {fname}",
+                  file=sys.stderr)
+        manifest["profiles"][pname] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default=",".join(PROFILES),
+                    help="comma-separated profile names")
+    args = ap.parse_args()
+    names = [p for p in args.profiles.split(",") if p]
+    unknown = set(names) - set(PROFILES)
+    if unknown:
+        raise SystemExit(f"unknown profiles: {sorted(unknown)}")
+    build(args.out_dir, names)
+    print(f"wrote manifest for profiles {names} to {args.out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

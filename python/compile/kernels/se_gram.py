@@ -1,0 +1,114 @@
+"""L1 — tiled squared-exponential (SE) Gram-matrix kernel in Pallas.
+
+This is the compute hot-spot shared by every GP method in the paper
+(FGP, PITC/PIC, ICF and their parallel counterparts): all of them spend
+their leading dense-algebra term building covariance blocks
+``K[i, j] = sf2 * exp(-0.5 * sum_k ((x1[i,k] - x2[j,k]) / ls[k])^2)``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the output is tiled into
+``(T1, T2)`` blocks by a 2-d grid; each grid step holds one ``(T1, d)`` and
+one ``(T2, d)`` input row-block plus the output tile in VMEM.  The pairwise
+squared distance uses the expansion trick
+``|a-b|^2 = |a|^2 + |b|^2 - 2 a.b`` so the inner loop is a small matmul
+(MXU-eligible at larger d) plus fully vectorized VPU work (mul/add/exp).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO ops.  The same
+code path compiles for real TPUs by flipping the flag.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["se_gram", "se_gram_scaled", "pick_tile"]
+
+# Default tile edge.  128 matches the TPU lane width; on CPU (interpret
+# mode) it simply bounds the working set of one grid step.
+DEFAULT_TILE = 128
+
+
+def pick_tile(n: int, target: int = DEFAULT_TILE) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Pallas grids must tile the array exactly; shapes in this project are
+    pinned by the AOT manifest, so we only need *a* divisor, preferring
+    large tiles for fewer grid steps.
+    """
+    if n <= 0:
+        raise ValueError(f"tile target for non-positive n={n}")
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _gram_tile_kernel(x1_ref, x2_ref, o_ref):
+    """One (T1, T2) output tile of exp(-0.5 * pairwise_sqdist)."""
+    x1 = x1_ref[...]  # (T1, d) — pre-scaled by 1/lengthscale
+    x2 = x2_ref[...]  # (T2, d)
+    s1 = jnp.sum(x1 * x1, axis=1, keepdims=True)  # (T1, 1)
+    s2 = jnp.sum(x2 * x2, axis=1, keepdims=True)  # (T2, 1)
+    cross = jnp.dot(x1, x2.T, preferred_element_type=x1.dtype)  # (T1, T2)
+    sq = s1 + s2.T - 2.0 * cross
+    # The expansion trick can go slightly negative for coincident points.
+    sq = jnp.maximum(sq, 0.0)
+    o_ref[...] = jnp.exp(-0.5 * sq)
+
+
+@functools.partial(jax.jit, static_argnames=("tile1", "tile2", "interpret"))
+def se_gram_scaled(x1, x2, *, tile1: int | None = None,
+                   tile2: int | None = None, interpret: bool = True):
+    """``exp(-0.5 * |x1_i - x2_j|^2)`` for pre-scaled inputs.
+
+    Args:
+      x1: ``(n1, d)`` inputs already divided by the ARD length-scales.
+      x2: ``(n2, d)`` likewise.
+      tile1/tile2: output tile edges; must divide n1/n2 (default: largest
+        divisor <= 128).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``(n1, n2)`` unit-variance SE Gram matrix.
+    """
+    n1, d = x1.shape
+    n2, d2 = x2.shape
+    if d != d2:
+        raise ValueError(f"feature dims differ: {d} vs {d2}")
+    t1 = tile1 if tile1 is not None else pick_tile(n1)
+    t2 = tile2 if tile2 is not None else pick_tile(n2)
+    if n1 % t1 or n2 % t2:
+        raise ValueError(f"tiles ({t1},{t2}) must divide shape ({n1},{n2})")
+    grid = (n1 // t1, n2 // t2)
+    return pl.pallas_call(
+        _gram_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((t2, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((t1, t2), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n1, n2), x1.dtype),
+        interpret=interpret,
+    )(x1, x2)
+
+
+def se_gram(x1, x2, log_ls, log_sf2, *, tile1=None, tile2=None,
+            interpret: bool = True):
+    """Full ARD squared-exponential Gram matrix (noise-free).
+
+    ``K[i, j] = exp(log_sf2) * exp(-0.5 * sum_k ((x1[i,k]-x2[j,k]) *
+    exp(-log_ls[k]))^2)``.
+
+    The noise term ``sn2 * I`` of the paper's covariance function is a
+    *diagonal* correction applied by the callers (L2 graphs) only where
+    x1 and x2 index the same point set.
+    """
+    inv_ls = jnp.exp(-log_ls)  # (d,)
+    k = se_gram_scaled(x1 * inv_ls, x2 * inv_ls, tile1=tile1, tile2=tile2,
+                       interpret=interpret)
+    return jnp.exp(log_sf2) * k

@@ -1,0 +1,368 @@
+"""L2 — the paper's GP algebra as jitted JAX graphs, calling the L1 kernel.
+
+Every graph here is lowered once by ``aot.py`` to HLO text and executed
+from the rust coordinator via PJRT.  The graphs implement, block-wise, the
+exact equations of Chen et al. (2013):
+
+  * ``local_summary``    — Definition 2, eqs. (3)-(4): a machine's local
+    summary ``(y_dot_S, Sigma_dot_SS)`` plus the cached Cholesky factor of
+    ``Sigma_{D_m D_m | S}`` reused by the pPIC predictor.
+  * ``ppitc_predict``    — Definition 4, eqs. (7)-(8) (diagonal variance).
+  * ``ppic_predict``     — Definition 5, eqs. (12)-(14) (diagonal variance).
+  * ``icf_local``        — Definition 6, eqs. (19)-(21).
+  * ``icf_global``       — Definition 7, eqs. (22)-(23).
+  * ``icf_predict``      — Definition 8, eqs. (24)-(25) (diagonal variance).
+
+Conventions shared with the rust side (see rust/src/gp/):
+
+  * zero prior mean — the coordinator centers outputs before calling in;
+  * the paper's covariance function includes the noise term
+    ``sn2 * delta``; hence any same-set covariance (``Sigma_BB``) carries
+    ``+ sn2 I`` while cross-set blocks do not;
+  * a relative jitter ``JITTER_SCALE * sf2`` is added to Cholesky inputs;
+  * hyperparameters enter as one vector ``hyp = [log_ls (d), log_sf2,
+    log_sn2]`` so learned values are supplied at run time.
+
+IMPORTANT — no LAPACK custom-calls: on CPU, ``jnp.linalg.cholesky`` and
+``solve_triangular`` lower to ``lapack_*_ffi`` custom-calls that the
+standalone xla_extension runtime used by the rust binary cannot resolve.
+All factorizations/solves below are pure-jnp ``fori_loop`` implementations
+that lower to plain HLO (while / dynamic-update-slice / dot).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.se_gram import se_gram
+
+JITTER_SCALE = 1e-8
+
+__all__ = [
+    "chol", "solve_lower", "solve_upper_t", "cho_solve",
+    "cov", "cov_diag",
+    "local_summary", "ppitc_predict", "ppic_predict",
+    "icf_local", "icf_global", "icf_predict",
+    "GRAPHS",
+]
+
+
+# --------------------------------------------------------------------------
+# Pure-HLO dense linear algebra (no LAPACK custom-calls).
+# --------------------------------------------------------------------------
+
+def chol(a):
+    """Lower-Cholesky factor of SPD ``a`` via a masked fori_loop.
+
+    Right-looking unblocked algorithm; each of the n steps does O(n^2)
+    vector work, lowering to a single HLO while-loop.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        d = jnp.sqrt(a[j, j])
+        col = jnp.where(idx >= j, a[:, j] / d, 0.0)
+        strict = idx > j
+        upd = jnp.outer(col, col)
+        mask = strict[:, None] & strict[None, :]
+        a = a - jnp.where(mask, upd, 0.0)
+        return a.at[:, j].set(col)
+
+    a = jax.lax.fori_loop(0, n, body, a)
+    return jnp.tril(a)
+
+
+def solve_lower(l, b):
+    """Solve ``L y = b`` (L lower-triangular) by forward substitution.
+
+    ``b`` may be a vector ``(n,)`` or matrix ``(n, k)``.
+    """
+    n = l.shape[0]
+    y = jnp.zeros_like(b)
+
+    def body(i, y):
+        s = l[i] @ y  # unsolved rows of y are still zero
+        yi = (b[i] - s) / l[i, i]
+        return y.at[i].set(yi)
+
+    return jax.lax.fori_loop(0, n, body, y)
+
+
+def solve_upper_t(l, y):
+    """Solve ``L^T x = y`` by back substitution (L lower-triangular)."""
+    n = l.shape[0]
+    x = jnp.zeros_like(y)
+
+    def body(t, x):
+        i = n - 1 - t
+        s = l[:, i] @ x
+        xi = (y[i] - s) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, x)
+
+
+def cho_solve(l, b):
+    """Solve ``(L L^T) x = b`` given the lower-Cholesky factor ``L``."""
+    return solve_upper_t(l, solve_lower(l, b))
+
+
+# --------------------------------------------------------------------------
+# Covariance plumbing (L1 kernel entry points).
+# --------------------------------------------------------------------------
+
+def _split_hyp(hyp, d):
+    return hyp[:d], hyp[d], hyp[d + 1]
+
+
+def cov(x1, x2, hyp, *, same: bool, jitter: bool = False):
+    """Prior covariance block ``Sigma_{B B'}`` per the paper's SE function.
+
+    ``same=True`` adds the noise term ``sn2 I`` (Kronecker delta on
+    coincident inputs); ``jitter=True`` additionally stabilizes a block
+    that is about to be factorized.
+    """
+    d = x1.shape[1]
+    log_ls, log_sf2, log_sn2 = _split_hyp(hyp, d)
+    k = se_gram(x1, x2, log_ls, log_sf2)
+    if same:
+        bump = jnp.exp(log_sn2)
+        if jitter:
+            bump = bump + JITTER_SCALE * jnp.exp(log_sf2)
+        k = k + bump * jnp.eye(x1.shape[0], dtype=k.dtype)
+    elif jitter:
+        k = k + JITTER_SCALE * jnp.exp(log_sf2) * jnp.eye(
+            x1.shape[0], dtype=k.dtype)
+    return k
+
+
+def cov_diag(x, hyp):
+    """Diagonal of ``Sigma_BB``: ``sf2 + sn2`` for every input."""
+    d = x.shape[1]
+    _, log_sf2, log_sn2 = _split_hyp(hyp, d)
+    return jnp.full((x.shape[0],), jnp.exp(log_sf2) + jnp.exp(log_sn2),
+                    dtype=x.dtype)
+
+
+def _diag_ab(a, b):
+    """diag(A @ B) for A (u, s), B (s, u) without forming the product."""
+    return jnp.sum(a.T * b, axis=0)
+
+
+# --------------------------------------------------------------------------
+# pPITC / pPIC graphs (Section 3).
+# --------------------------------------------------------------------------
+
+def local_summary(xm, ym, xs, hyp):
+    """Definition 2 — machine m's local summary w.r.t. support set S.
+
+    Returns ``(y_dot_S, Sigma_dot_SS, L_m)`` where ``L_m`` is the
+    Cholesky factor of ``Sigma_{D_m D_m | S}``, cached for pPIC.
+    """
+    k_ss = cov(xs, xs, hyp, same=True, jitter=True)
+    l_ss = chol(k_ss)
+    k_ms = cov(xm, xs, hyp, same=False)                    # (B, S)
+    w = solve_lower(l_ss, k_ms.T)                          # (S, B)
+    q_mm = w.T @ w                                         # Gamma_{mm}
+    sigma_m = cov(xm, xm, hyp, same=True, jitter=True) - q_mm
+    l_m = chol(sigma_m)                                    # (B, B)
+    # one batched solve for [ym | K_ms]: halves the HLO while-loop count
+    # vs two cho_solves (§Perf L2 iteration 1)
+    rhs = jnp.concatenate([ym[:, None], k_ms], axis=1)     # (B, 1+S)
+    sol = cho_solve(l_m, rhs)
+    v, z = sol[:, 0], sol[:, 1:]
+    y_dot = k_ms.T @ v                                     # (S,)  eq. (3)
+    s_dot = k_ms.T @ z                                     # (S, S) eq. (4)
+    return y_dot, s_dot, l_m
+
+
+def ppitc_predict(xu, xs, y_glob, s_glob, hyp):
+    """Definition 4 — pPITC predictive mean and (diagonal) variance."""
+    k_us = cov(xu, xs, hyp, same=False)                    # (U, S)
+    k_ss = cov(xs, xs, hyp, same=True, jitter=True)
+    l_ss = chol(k_ss)
+    l_g = chol(s_glob + JITTER_SCALE * jnp.eye(s_glob.shape[0],
+                                               dtype=s_glob.dtype))
+    # batch the l_g lower solves of [y_glob | K_su] (§Perf L2 iteration 1)
+    rhs_g = jnp.concatenate([y_glob[:, None], k_us.T], axis=1)  # (S, 1+U)
+    low_g = solve_lower(l_g, rhs_g)
+    gy = solve_upper_t(l_g, low_g[:, 0])
+    w2 = low_g[:, 1:]
+    mu = k_us @ gy                                         # eq. (7)
+    w1 = solve_lower(l_ss, k_us.T)                         # (S, U)
+    var = cov_diag(xu, hyp) - jnp.sum(w1 * w1, axis=0) \
+        + jnp.sum(w2 * w2, axis=0)                         # eq. (8) diag
+    return mu, var
+
+
+def ppic_predict(xu, xs, xm, ym, l_m, y_dot_m, s_dot_m, y_glob, s_glob, hyp):
+    """Definition 5 — pPIC predictive mean and (diagonal) variance.
+
+    ``l_m`` is the cached Cholesky factor of ``Sigma_{D_m D_m | S}`` from
+    ``local_summary``; ``(y_dot_m, s_dot_m)`` the machine's own local
+    summary; ``(y_glob, s_glob)`` the global summary.
+    """
+    k_us = cov(xu, xs, hyp, same=False)                    # (U, S)
+    k_um = cov(xu, xm, hyp, same=False)                    # (U, B)
+    k_ms = cov(xm, xs, hyp, same=False)                    # (B, S)
+    k_ss = cov(xs, xs, hyp, same=True, jitter=True)
+    l_ss = chol(k_ss)
+    l_g = chol(s_glob + JITTER_SCALE * jnp.eye(s_glob.shape[0],
+                                               dtype=s_glob.dtype))
+
+    # Local-data terms (Definition 2 with B = U_m) — one batched solve
+    # against l_m for [ym | K_ms | K_mu] (§Perf L2 iteration 1).
+    b_rows = ym.shape[0]
+    s_cols = k_ms.shape[1]
+    rhs_m = jnp.concatenate([ym[:, None], k_ms, k_um.T], axis=1)
+    sol_m = cho_solve(l_m, rhs_m)                          # (B, 1+S+U)
+    v = sol_m[:, 0]
+    z = sol_m[:, 1:1 + s_cols]
+    t = sol_m[:, 1 + s_cols:]
+    y_dot_u = k_um @ v                                     # y_dot_{U_m}^m
+    s_dot_us = k_um @ z                                    # Sigma_dot_{U S}^m
+    s_dot_uu_diag = jnp.sum(k_um.T * t, axis=0)            # diag Sigma_dot_UU
+    del b_rows
+
+    # batched l_ss solves: [Sdot_m | y_dot_m | K_su] share one factor
+    rhs_ss = jnp.concatenate([s_dot_m, y_dot_m[:, None], k_us.T], axis=1)
+    sol_ss = cho_solve(l_ss, rhs_ss)                       # (S, S+1+U)
+    kss_inv_sdot = sol_ss[:, :s_cols]
+    kss_inv_ydot = sol_ss[:, s_cols]
+    p = sol_ss[:, s_cols + 1:]                             # Kss^-1 K_su
+
+    # Phi_{U_m S}^m — eq. (14).
+    phi_us = k_us + k_us @ kss_inv_sdot - s_dot_us         # (U, S)
+
+    # Mean — eq. (12).
+    mu = phi_us @ cho_solve(l_g, y_glob) \
+        - k_us @ kss_inv_ydot + y_dot_u
+
+    # Variance (diagonal) — eq. (13), *corrected*.  As printed, (13) omits
+    # the global-summary term ``+ Phi Sigma_ddot^-1 Phi^T``; deriving the
+    # variance directly from centralized PIC (16) via the same Woodbury
+    # steps as the mean gives
+    #   Sigma+ = Sigma_UU - Phi Kss^-1 K_su + K_us Kss^-1 Sdot_su
+    #            - Sdot_UU + Phi Sddot^-1 Phi^T
+    # and only this form satisfies Theorem 2 (verified in tests against a
+    # literal numpy PIC).  See DESIGN.md "Paper erratum".
+    diag1 = _diag_ab(phi_us, p)                            # diag(Phi Kss^-1 K_su)
+    sdot_su = s_dot_us.T                                   # (S, U)
+    diag2 = jnp.sum(k_us.T * cho_solve(l_ss, sdot_su), axis=0)
+    w_g = solve_lower(l_g, phi_us.T)                       # (S, U)
+    diag3 = jnp.sum(w_g * w_g, axis=0)                     # diag(Phi Sddot^-1 Phi^T)
+    var = cov_diag(xu, hyp) - (diag1 - diag2) - s_dot_uu_diag + diag3
+    return mu, var
+
+
+# --------------------------------------------------------------------------
+# pICF-based GP graphs (Section 4).
+# --------------------------------------------------------------------------
+
+def icf_local(xm, ym, xu, f_m, hyp):
+    """Definition 6 — machine m's ICF local summary.
+
+    ``f_m`` is machine m's (R, B) slab of the incomplete Cholesky factor
+    of the *noise-free* Gram matrix K_DD (the paper's
+    ``Sigma_DD ~ F^T F + sn2 I``).
+    """
+    y_dot = f_m @ ym                                       # (R,)  eq. (19)
+    k_mu = cov(xm, xu, hyp, same=False)                    # (B, U)
+    s_dot = f_m @ k_mu                                     # (R, U) eq. (20)
+    phi_m = f_m @ f_m.T                                    # (R, R) eq. (21)
+    return y_dot, s_dot, phi_m
+
+
+def icf_global(sum_y_dot, sum_s_dot, sum_phi, hyp):
+    """Definition 7 — the master's global summary.
+
+    ``Phi = I + sn^-2 sum Phi_m``;   ``y_glob = Phi^-1 sum y_dot_m``;
+    ``S_glob = Phi^-1 sum s_dot_m``.
+    """
+    r = sum_phi.shape[0]
+    # hyp layout is [log_ls(d), log_sf2, log_sn2] — noise is hyp[-1].
+    inv_sn2 = jnp.exp(-hyp[-1])
+    phi = jnp.eye(r, dtype=sum_phi.dtype) + inv_sn2 * sum_phi
+    l_phi = chol(phi)
+    y_glob = cho_solve(l_phi, sum_y_dot)                   # eq. (22)
+    s_glob = cho_solve(l_phi, sum_s_dot)                   # eq. (23)
+    return y_glob, s_glob
+
+
+def icf_predict(xu, xm, ym, s_dot_m, y_glob, s_glob, hyp):
+    """Definition 8 — machine m's predictive component (diagonal var)."""
+    d = xu.shape[1]
+    inv_sn2 = jnp.exp(-hyp[d + 1])
+    k_um = cov(xu, xm, hyp, same=False)                    # (U, B)
+    mu_m = inv_sn2 * (k_um @ ym) \
+        - inv_sn2 * inv_sn2 * (s_dot_m.T @ y_glob)         # eq. (24)
+    var_m = inv_sn2 * jnp.sum(k_um * k_um, axis=1) \
+        - inv_sn2 * inv_sn2 * jnp.sum(s_dot_m * s_glob, axis=0)  # eq. (25)
+    return mu_m, var_m
+
+
+# --------------------------------------------------------------------------
+# AOT graph registry: name -> (fn, shape builder).
+#
+# The shape builder receives the profile dict (d, block B, support S,
+# pred_block U, rank R) and returns the input ShapeDtypeStructs in call
+# order.  All artifacts are f64.
+# --------------------------------------------------------------------------
+
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+GRAPHS = {
+    "local_summary": (
+        local_summary,
+        lambda p: (
+            _f64(p["block"], p["d"]), _f64(p["block"]),
+            _f64(p["support"], p["d"]), _f64(p["d"] + 2),
+        ),
+    ),
+    "ppitc_predict": (
+        ppitc_predict,
+        lambda p: (
+            _f64(p["pred_block"], p["d"]), _f64(p["support"], p["d"]),
+            _f64(p["support"]), _f64(p["support"], p["support"]),
+            _f64(p["d"] + 2),
+        ),
+    ),
+    "ppic_predict": (
+        ppic_predict,
+        lambda p: (
+            _f64(p["pred_block"], p["d"]), _f64(p["support"], p["d"]),
+            _f64(p["block"], p["d"]), _f64(p["block"]),
+            _f64(p["block"], p["block"]), _f64(p["support"]),
+            _f64(p["support"], p["support"]), _f64(p["support"]),
+            _f64(p["support"], p["support"]), _f64(p["d"] + 2),
+        ),
+    ),
+    "icf_local": (
+        icf_local,
+        lambda p: (
+            _f64(p["block"], p["d"]), _f64(p["block"]),
+            _f64(p["pred_block"], p["d"]), _f64(p["rank"], p["block"]),
+            _f64(p["d"] + 2),
+        ),
+    ),
+    "icf_global": (
+        icf_global,
+        lambda p: (
+            _f64(p["rank"]), _f64(p["rank"], p["pred_block"]),
+            _f64(p["rank"], p["rank"]), _f64(p["d"] + 2),
+        ),
+    ),
+    "icf_predict": (
+        icf_predict,
+        lambda p: (
+            _f64(p["pred_block"], p["d"]), _f64(p["block"], p["d"]),
+            _f64(p["block"]), _f64(p["rank"], p["pred_block"]),
+            _f64(p["rank"]), _f64(p["rank"], p["pred_block"]),
+            _f64(p["d"] + 2),
+        ),
+    ),
+}

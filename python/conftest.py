@@ -1,0 +1,8 @@
+"""pytest bootstrap: make `compile` importable and force x64."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import compile  # noqa: F401  (enables jax x64 at import)

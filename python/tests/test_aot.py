@@ -1,0 +1,87 @@
+"""AOT pipeline checks: manifest integrity + HLO text hygiene.
+
+The rust runtime trusts `artifacts/manifest.json` blindly, so this file is
+the gate: every graph must lower, contain no LAPACK/CUDA custom-calls
+(unresolvable in xla_extension 0.5.1), and declare shapes consistent with
+the model registry.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, ["tiny"])
+    return out, manifest
+
+
+def test_manifest_structure(built):
+    out, manifest = built
+    assert manifest["format"] == "hlo-text"
+    assert manifest["dtype"] == "float64"
+    tiny = manifest["profiles"]["tiny"]
+    assert set(tiny["graphs"]) == set(model.GRAPHS)
+    for g in tiny["graphs"].values():
+        assert os.path.exists(os.path.join(out, g["file"]))
+        assert g["outputs"] >= 2
+        assert all(len(i) == 3 for i in g["inputs"])
+
+
+def test_manifest_json_roundtrip(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+
+
+def test_hlo_text_is_parseable_entrypoint(built):
+    out, manifest = built
+    for g in manifest["profiles"]["tiny"]["graphs"].values():
+        with open(os.path.join(out, g["file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), g["file"]
+        assert "ENTRY" in text, g["file"]
+
+
+def test_no_forbidden_custom_calls(built):
+    out, manifest = built
+    for g in manifest["profiles"]["tiny"]["graphs"].values():
+        with open(os.path.join(out, g["file"])) as f:
+            text = f.read().replace(" ", "")
+        for bad in aot.FORBIDDEN_CALL_PREFIXES:
+            assert f'custom_call_target="{bad}' not in text, g["file"]
+
+
+def test_input_shapes_match_registry(built):
+    _, manifest = built
+    profile = aot.PROFILES["tiny"]
+    for name, g in manifest["profiles"]["tiny"]["graphs"].items():
+        _, shapes = model.GRAPHS[name]
+        want = [list(s.shape) for s in shapes(profile)]
+        got = [i[1] for i in g["inputs"]]
+        assert got == want, name
+
+
+def test_deterministic_lowering(built):
+    """Re-lowering the same graph yields the same HLO text (sha match)."""
+    _, manifest = built
+    text, _, _ = aot.lower_graph("icf_local", aot.PROFILES["tiny"])
+    import hashlib
+    sha = hashlib.sha256(text.encode()).hexdigest()[:16]
+    assert sha == manifest["profiles"]["tiny"]["graphs"]["icf_local"]["sha256"]
+
+
+def test_unknown_profile_rejected():
+    import subprocess, sys
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--profiles", "nope",
+         "--out-dir", "/tmp/_aot_nope"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True)
+    assert r.returncode != 0

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas SE-Gram kernel vs the pure-jnp oracle.
+
+This is the core kernel-level correctness signal: hypothesis sweeps
+shapes, dtypes, tile choices and hyperparameters; every case must match
+``ref.py`` to tight tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.se_gram import se_gram, se_gram_scaled, pick_tile
+from compile.kernels import ref
+
+
+def _rand(rng, *shape, dtype=np.float64):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- pick_tile
+
+@given(n=st.integers(1, 4096), target=st.integers(1, 256))
+def test_pick_tile_divides_and_bounded(n, target):
+    t = pick_tile(n, target)
+    assert 1 <= t <= min(n, target)
+    assert n % t == 0
+
+
+def test_pick_tile_prefers_large():
+    assert pick_tile(256) == 128
+    assert pick_tile(100) == 100
+    assert pick_tile(200, 128) == 100
+    assert pick_tile(7, 4) == 1
+
+
+def test_pick_tile_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        pick_tile(0)
+
+
+# ------------------------------------------------------------ kernel vs ref
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.integers(1, 40),
+    n2=st.integers(1, 40),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_se_gram_scaled_matches_ref(n1, n2, d, seed):
+    rng = np.random.default_rng(seed)
+    x1, x2 = _rand(rng, n1, d), _rand(rng, n2, d)
+    got = se_gram_scaled(x1, x2)
+    want = ref.se_gram_scaled_ref(x1, x2)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.integers(1, 32),
+    n2=st.integers(1, 32),
+    d=st.integers(1, 6),
+    log_sf2=st.floats(-2.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_se_gram_full_matches_ref(n1, n2, d, log_sf2, seed):
+    rng = np.random.default_rng(seed)
+    x1, x2 = _rand(rng, n1, d), _rand(rng, n2, d)
+    log_ls = jnp.asarray(rng.uniform(-1.0, 1.0, d))
+    got = se_gram(x1, x2, log_ls, log_sf2)
+    want = ref.se_gram_ref(x1, x2, log_ls, log_sf2)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("tile1,tile2", [(1, 1), (2, 8), (8, 2), (16, 16)])
+def test_se_gram_tile_invariance(tile1, tile2):
+    """The tiling schedule must not change the numbers."""
+    rng = np.random.default_rng(7)
+    x1, x2 = _rand(rng, 16, 5), _rand(rng, 16, 5)
+    base = ref.se_gram_scaled_ref(x1, x2)
+    got = se_gram_scaled(x1, x2, tile1=tile1, tile2=tile2)
+    np.testing.assert_allclose(got, base, rtol=1e-12, atol=1e-12)
+
+
+def test_se_gram_rejects_nondividing_tiles():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 10, 3)
+    with pytest.raises(ValueError):
+        se_gram_scaled(x, x, tile1=3, tile2=5)
+
+
+def test_se_gram_rejects_dim_mismatch():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        se_gram_scaled(_rand(rng, 4, 3), _rand(rng, 4, 2))
+
+
+def test_se_gram_f32():
+    """f32 path (looser tolerance; artifacts themselves are f64)."""
+    rng = np.random.default_rng(3)
+    x1 = _rand(rng, 12, 4, dtype=np.float32)
+    x2 = _rand(rng, 20, 4, dtype=np.float32)
+    got = se_gram_scaled(x1, x2)
+    assert got.dtype == jnp.float32
+    want = ref.se_gram_scaled_ref(x1, x2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_se_gram_diagonal_is_unit():
+    """k(x, x) == 1 for the scaled kernel (before sf2)."""
+    rng = np.random.default_rng(11)
+    x = _rand(rng, 24, 5)
+    k = se_gram_scaled(x, x)
+    np.testing.assert_allclose(np.diag(k), np.ones(24), rtol=0, atol=1e-12)
+
+
+def test_se_gram_symmetry():
+    rng = np.random.default_rng(13)
+    x = _rand(rng, 18, 4)
+    k = np.asarray(se_gram_scaled(x, x))
+    np.testing.assert_allclose(k, k.T, rtol=0, atol=1e-12)
+
+
+def test_se_gram_bounded():
+    """0 < k <= 1 always (positive-definite SE kernel values)."""
+    rng = np.random.default_rng(17)
+    k = np.asarray(se_gram_scaled(_rand(rng, 30, 6), _rand(rng, 25, 6)))
+    assert (k > 0).all() and (k <= 1.0 + 1e-15).all()
+
+
+def test_se_gram_lengthscale_monotone():
+    """Longer length-scales => higher correlation, pointwise."""
+    rng = np.random.default_rng(19)
+    x1, x2 = _rand(rng, 10, 3), _rand(rng, 10, 3)
+    short = np.asarray(se_gram(x1, x2, jnp.full(3, -1.0), 0.0))
+    longer = np.asarray(se_gram(x1, x2, jnp.full(3, 1.0), 0.0))
+    assert (longer >= short - 1e-15).all()
+
+
+def test_se_cov_full_ref_noise_on_diagonal():
+    rng = np.random.default_rng(23)
+    x = _rand(rng, 9, 3)
+    hyp = (jnp.zeros(3), 0.5, -2.0)
+    k_plain = ref.se_gram_ref(x, x, hyp[0], hyp[1])
+    k_noise = ref.se_cov_full_ref(x, x, hyp[0], hyp[1], hyp[2], same=True)
+    np.testing.assert_allclose(
+        np.asarray(k_noise - k_plain),
+        np.exp(-2.0) * np.eye(9), rtol=1e-12, atol=1e-12)

@@ -1,0 +1,317 @@
+"""L2 correctness: model graphs vs direct numpy oracles.
+
+Three levels:
+  1. the pure-HLO linalg helpers (chol / solves) vs numpy.linalg;
+  2. each graph vs a literal numpy transcription of its equations;
+  3. *assembly* tests — running the per-machine graphs and combining them
+     exactly like the rust coordinator must reproduce the centralized
+     PITC (Thm 1), PIC (Thm 2) and ICF (Thm 3) formulas computed directly
+     in numpy.  These are the paper's equivalence theorems, executable.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng
+
+
+def hyp_vec(d, log_ls=0.0, log_sf2=0.3, log_sn2=-2.0):
+    return jnp.asarray([log_ls] * d + [log_sf2, log_sn2])
+
+
+def np_cov(x1, x2, hyp, same, jitter=False):
+    """numpy transcription of model.cov (incl. noise + jitter policy)."""
+    d = x1.shape[1]
+    k = np.asarray(ref.se_gram_ref(jnp.asarray(x1), jnp.asarray(x2),
+                                   jnp.asarray(hyp[:d]), hyp[d]))
+    if same:
+        bump = np.exp(hyp[d + 1])
+        if jitter:
+            bump += model.JITTER_SCALE * np.exp(hyp[d])
+        k = k + bump * np.eye(len(x1))
+    elif jitter:
+        k = k + model.JITTER_SCALE * np.exp(hyp[d]) * np.eye(len(x1))
+    return k
+
+
+# ------------------------------------------------------------- linalg HLO
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_chol_matches_numpy(n, seed):
+    rng = RNG(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T + n * np.eye(n)
+    got = np.asarray(model.chol(jnp.asarray(spd)))
+    want = np.linalg.cholesky(spd)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20), k=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_solve_lower_and_upper(n, k, seed):
+    rng = RNG(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T + n * np.eye(n)
+    l = np.linalg.cholesky(spd)
+    b = rng.standard_normal((n, k))
+    y = np.asarray(model.solve_lower(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l @ y, b, rtol=1e-9, atol=1e-9)
+    x = np.asarray(model.solve_upper_t(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(l.T @ x, b, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_cho_solve_vector(n, seed):
+    rng = RNG(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T + n * np.eye(n)
+    l = np.linalg.cholesky(spd)
+    b = rng.standard_normal(n)
+    x = np.asarray(model.cho_solve(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(spd @ x, b, rtol=1e-8, atol=1e-8)
+
+
+# --------------------------------------------------------- graph oracles
+
+def make_problem(seed, n=24, m=3, s=6, u=7, d=3):
+    rng = RNG(seed)
+    xd = rng.uniform(-2, 2, (n, d))
+    xs = rng.uniform(-2, 2, (s, d))
+    xu = rng.uniform(-2, 2, (u, d))
+    y = rng.standard_normal(n)
+    hyp = np.asarray([0.2] * d + [0.3, -2.0])
+    blocks = np.split(np.arange(n), m)
+    return xd, xs, xu, y, hyp, blocks
+
+
+def test_local_summary_matches_numpy():
+    xd, xs, _, y, hyp, blocks = make_problem(0)
+    b = blocks[0]
+    xm, ym = xd[b], y[b]
+    y_dot, s_dot, l_m = model.local_summary(
+        jnp.asarray(xm), jnp.asarray(ym), jnp.asarray(xs), jnp.asarray(hyp))
+    # numpy oracle — Definition 2
+    k_ss = np_cov(xs, xs, hyp, same=True, jitter=True)
+    k_ms = np_cov(xm, xs, hyp, same=False)
+    q = k_ms @ np.linalg.solve(k_ss, k_ms.T)
+    sig = np_cov(xm, xm, hyp, same=True, jitter=True) - q
+    np.testing.assert_allclose(np.asarray(l_m) @ np.asarray(l_m).T, sig,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(y_dot),
+                               k_ms.T @ np.linalg.solve(sig, ym),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(s_dot),
+                               k_ms.T @ np.linalg.solve(sig, k_ms),
+                               rtol=1e-8, atol=1e-8)
+
+
+def _global_summary(xd, xs, y, hyp, blocks):
+    """Assemble eqs. (5)-(6) from per-block graph calls."""
+    s = len(xs)
+    y_glob = np.zeros(s)
+    s_glob = np_cov(xs, xs, hyp, same=True)  # Sigma_SS, paper-literal
+    locals_ = []
+    for b in blocks:
+        y_dot, s_dot, l_m = model.local_summary(
+            jnp.asarray(xd[b]), jnp.asarray(y[b]), jnp.asarray(xs),
+            jnp.asarray(hyp))
+        y_glob += np.asarray(y_dot)
+        s_glob += np.asarray(s_dot)
+        locals_.append((np.asarray(y_dot), np.asarray(s_dot),
+                        np.asarray(l_m)))
+    return y_glob, s_glob, locals_
+
+
+def _pitc_direct(xd, xs, xu, y, hyp, blocks):
+    """Centralized PITC — eqs. (9)-(11), literal numpy."""
+    k_ss = np_cov(xs, xs, hyp, same=True, jitter=True)
+    k_ds = np_cov(xd, xs, hyp, same=False)
+    k_us = np_cov(xu, xs, hyp, same=False)
+    kss_inv = np.linalg.inv(k_ss)
+    gamma_dd = k_ds @ kss_inv @ k_ds.T
+    gamma_ud = k_us @ kss_inv @ k_ds.T
+    lam = np.zeros_like(gamma_dd)
+    sig_dd = np_cov(xd, xd, hyp, same=True)
+    for b in blocks:
+        blk = np.ix_(b, b)
+        lam[blk] = (sig_dd - gamma_dd)[blk]
+        # jitter consistency with the graphs
+        lam[blk] += model.JITTER_SCALE * np.exp(hyp[-2]) * np.eye(len(b))
+    a = np.linalg.inv(gamma_dd + lam)
+    mu = gamma_ud @ a @ y
+    gamma_uu = k_us @ kss_inv @ k_us.T
+    sig_uu_diag = np.full(len(xu), np.exp(hyp[-2]) + np.exp(hyp[-1]))
+    var = sig_uu_diag - np.diag(gamma_ud @ a @ gamma_ud.T) \
+        + (np.diag(gamma_uu) - np.diag(gamma_uu))
+    return mu, var
+
+
+def test_theorem1_ppitc_equals_pitc():
+    xd, xs, xu, y, hyp, blocks = make_problem(1)
+    y_glob, s_glob, _ = _global_summary(xd, xs, y, hyp, blocks)
+    mu, var = model.ppitc_predict(
+        jnp.asarray(xu), jnp.asarray(xs), jnp.asarray(y_glob),
+        jnp.asarray(s_glob), jnp.asarray(hyp))
+    mu_d, _ = _pitc_direct(xd, xs, xu, y, hyp, blocks)
+    np.testing.assert_allclose(np.asarray(mu), mu_d, rtol=1e-6, atol=1e-6)
+
+
+def test_ppitc_variance_formula():
+    """Variance (8) directly: Sigma_uu - K_us (Kss^-1 - Sglob^-1) K_su."""
+    xd, xs, xu, y, hyp, blocks = make_problem(2)
+    y_glob, s_glob, _ = _global_summary(xd, xs, y, hyp, blocks)
+    _, var = model.ppitc_predict(
+        jnp.asarray(xu), jnp.asarray(xs), jnp.asarray(y_glob),
+        jnp.asarray(s_glob), jnp.asarray(hyp))
+    k_us = np_cov(xu, xs, hyp, same=False)
+    k_ss = np_cov(xs, xs, hyp, same=True, jitter=True)
+    sg = s_glob + model.JITTER_SCALE * np.eye(len(xs))
+    prior = np.full(len(xu), np.exp(hyp[-2]) + np.exp(hyp[-1]))
+    want = prior - np.diag(
+        k_us @ (np.linalg.inv(k_ss) - np.linalg.inv(sg)) @ k_us.T)
+    np.testing.assert_allclose(np.asarray(var), want, rtol=1e-7, atol=1e-8)
+    assert (np.asarray(var) > 0).all()
+
+
+def _pic_direct(xd, xs, xu, y, hyp, blocks):
+    """Centralized PIC — eqs. (15)-(18), literal numpy."""
+    k_ss = np_cov(xs, xs, hyp, same=True, jitter=True)
+    kss_inv = np.linalg.inv(k_ss)
+    k_ds = np_cov(xd, xs, hyp, same=False)
+    k_us = np_cov(xu, xs, hyp, same=False)
+    gamma_dd = k_ds @ kss_inv @ k_ds.T
+    sig_dd = np_cov(xd, xd, hyp, same=True)
+    lam = np.zeros_like(gamma_dd)
+    for b in blocks:
+        blk = np.ix_(b, b)
+        lam[blk] = (sig_dd - gamma_dd)[blk]
+        lam[blk] += model.JITTER_SCALE * np.exp(hyp[-2]) * np.eye(len(b))
+    a = np.linalg.inv(gamma_dd + lam)
+    # Gamma-tilde: exact cross-covariance on the "own" block (i = m maps
+    # U_m to D_m); here we predict the whole U from machine 0's view is
+    # *not* what PIC does — the assembly test below builds U_m per block.
+    return k_ss, kss_inv, k_ds, k_us, a, lam
+
+
+def test_theorem2_ppic_equals_pic():
+    """Assemble pPIC per machine and compare to centralized PIC (15)-(16)."""
+    xd, xs, xu, y, hyp, blocks = make_problem(3, n=24, m=3, u=9)
+    u_blocks = np.split(np.arange(len(xu)), 3)
+    y_glob, s_glob, locals_ = _global_summary(xd, xs, y, hyp, blocks)
+
+    mu_p = np.zeros(len(xu))
+    var_p = np.zeros(len(xu))
+    for m, (b, ub) in enumerate(zip(blocks, u_blocks)):
+        y_dot, s_dot, l_m = locals_[m]
+        mu, var = model.ppic_predict(
+            jnp.asarray(xu[ub]), jnp.asarray(xs), jnp.asarray(xd[b]),
+            jnp.asarray(y[b]), jnp.asarray(l_m), jnp.asarray(y_dot),
+            jnp.asarray(s_dot), jnp.asarray(y_glob), jnp.asarray(s_glob),
+            jnp.asarray(hyp))
+        mu_p[ub] = np.asarray(mu)
+        var_p[ub] = np.asarray(var)
+
+    # centralized PIC
+    k_ss, kss_inv, k_ds, k_us, a, lam = _pic_direct(
+        xd, xs, xu, y, hyp, blocks)
+    gamma_ud = k_us @ kss_inv @ k_ds.T
+    gt = gamma_ud.copy()
+    for m, (b, ub) in enumerate(zip(blocks, u_blocks)):
+        gt[np.ix_(ub, b)] = np_cov(xu[ub], xd[b], hyp, same=False)
+    mu_c = gt @ a @ y
+    prior = np.full(len(xu), np.exp(hyp[-2]) + np.exp(hyp[-1]))
+    var_c = prior - np.diag(gt @ a @ gt.T)
+    np.testing.assert_allclose(mu_p, mu_c, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(var_p, var_c, rtol=1e-5, atol=1e-6)
+
+
+def test_theorem3_picf_equals_icf():
+    """Assemble pICF from graphs; compare to (28)-(29) with random F."""
+    xd, xs, xu, y, hyp, blocks = make_problem(4, n=24, m=3, u=7)
+    rng = RNG(44)
+    r = 10
+    f = rng.standard_normal((r, len(xd))) * 0.4
+    sn2 = np.exp(hyp[-1])
+
+    sum_y = np.zeros(r)
+    sum_s = np.zeros((r, len(xu)))
+    sum_phi = np.zeros((r, r))
+    for m, b in enumerate(blocks):
+        y_dot, s_dot, phi_m = model.icf_local(
+            jnp.asarray(xd[b]), jnp.asarray(y[b]), jnp.asarray(xu),
+            jnp.asarray(f[:, b]), jnp.asarray(hyp))
+        sum_y += np.asarray(y_dot)
+        sum_s += np.asarray(s_dot)
+        sum_phi += np.asarray(phi_m)
+    # numpy check of the local pieces
+    np.testing.assert_allclose(sum_y, f @ y, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(sum_phi, f @ f.T, rtol=1e-9, atol=1e-9)
+
+    y_glob, s_glob = model.icf_global(
+        jnp.asarray(sum_y), jnp.asarray(sum_s), jnp.asarray(sum_phi),
+        jnp.asarray(hyp))
+
+    mu = np.zeros(len(xu))
+    var_sub = np.zeros(len(xu))
+    for m, b in enumerate(blocks):
+        s_dot_m = f[:, b] @ np_cov(xd[b], xu, hyp, same=False)
+        mu_m, var_m = model.icf_predict(
+            jnp.asarray(xu), jnp.asarray(xd[b]), jnp.asarray(y[b]),
+            jnp.asarray(s_dot_m), y_glob, s_glob, jnp.asarray(hyp))
+        mu += np.asarray(mu_m)
+        var_sub += np.asarray(var_m)
+    prior = np.full(len(xu), np.exp(hyp[-2]) + np.exp(hyp[-1]))
+    var = prior - var_sub
+
+    # centralized ICF — (28)-(29)
+    k_ud = np_cov(xu, xd, hyp, same=False)
+    ainv = np.linalg.inv(f.T @ f + sn2 * np.eye(len(xd)))
+    mu_c = k_ud @ ainv @ y
+    var_c = prior - np.diag(k_ud @ ainv @ k_ud.T)
+    np.testing.assert_allclose(mu, mu_c, rtol=1e-7, atol=1e-8)
+    np.testing.assert_allclose(var, var_c, rtol=1e-6, atol=1e-8)
+
+
+def test_icf_global_solve():
+    """(22)-(23): Phi * y_glob == sum_y."""
+    rng = RNG(5)
+    r, u = 8, 5
+    hyp = np.asarray([0.0, 0.0, 0.3, -1.5])
+    f = rng.standard_normal((r, 20))
+    sum_phi = f @ f.T
+    sum_y = rng.standard_normal(r)
+    sum_s = rng.standard_normal((r, u))
+    y_glob, s_glob = model.icf_global(
+        jnp.asarray(sum_y), jnp.asarray(sum_s), jnp.asarray(sum_phi),
+        jnp.asarray(hyp))
+    phi = np.eye(r) + np.exp(1.5) * sum_phi
+    np.testing.assert_allclose(phi @ np.asarray(y_glob), sum_y,
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(phi @ np.asarray(s_glob), sum_s,
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_cov_diag():
+    x = jnp.asarray(RNG(6).standard_normal((5, 3)))
+    hyp = hyp_vec(3)
+    got = np.asarray(model.cov_diag(x, hyp))
+    np.testing.assert_allclose(
+        got, np.full(5, np.exp(0.3) + np.exp(-2.0)), rtol=1e-12)
+
+
+def test_graph_registry_shapes():
+    """Every registered graph traces at its manifest shapes."""
+    import jax
+    profile = {"d": 3, "block": 8, "support": 4, "pred_block": 6, "rank": 5}
+    for name, (fn, shapes) in model.GRAPHS.items():
+        out = jax.eval_shape(fn, *shapes(profile))
+        assert len(out) >= 2, name

@@ -1,0 +1,194 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  1. **equivalence** — Theorems 1–3 as numbers: max |Δ| between each
+//!     parallel protocol and its centralized counterpart;
+//!  2. **clustering** — the paper's parallelized clustering scheme vs a
+//!     random partition for pPIC (Remark 2 after Def. 5: clustering
+//!     should improve RMSE) including its extra cost;
+//!  3. **online** — §5.2: incremental absorb cost vs naive full refit;
+//!  4. **support** — entropy-selected vs random support set for pPITC.
+//!
+//!     cargo bench --bench ablations
+
+use pgpr::bench_support::table::{fmt3, Table};
+use pgpr::bench_support::workloads::{prepare, Domain};
+use pgpr::data::partition::{cluster_partition, random_partition};
+use pgpr::gp::pic::PicGp;
+use pgpr::gp::pitc::PitcGp;
+use pgpr::gp::icf_gp::IcfGp;
+use pgpr::gp::support::{select_support_random, support_matrix};
+use pgpr::linalg::Mat;
+use pgpr::metrics::rmse;
+use pgpr::parallel::online::OnlineGp;
+use pgpr::parallel::{picf, ppic, ppitc, ClusterSpec};
+use pgpr::runtime::NativeBackend;
+use pgpr::testkit::max_abs_diff;
+use pgpr::util::{Pcg64, Stopwatch};
+
+fn main() {
+    equivalence();
+    clustering();
+    online();
+    support_selection();
+}
+
+/// Theorems 1–3, numerically, at a non-trivial size.
+fn equivalence() {
+    let w = prepare(Domain::Sarcos, 600, 120, 21, false);
+    let m = 6;
+    let mut rng = Pcg64::seed(77);
+    let xs = support_matrix(&w.hyp, &w.train.x, 48);
+    let d_blocks = random_partition(600, m, &mut rng);
+    let u_blocks = random_partition(120, m, &mut rng);
+    let spec = ClusterSpec::new(m);
+
+    let mut t = Table::new(
+        "ablation: Theorem 1-3 equivalence (max |mean Δ| / max |var Δ|)",
+        &["pair", "mean Δ", "var Δ"],
+    );
+
+    let par = ppitc::run(&w.hyp, &w.train.x, &w.train.y, &xs, &w.test.x,
+                         &d_blocks, &u_blocks, &NativeBackend, &spec);
+    let cen = PitcGp::fit(&w.hyp, &w.train.x, &w.train.y, &xs, &d_blocks)
+        .predict(&w.test.x);
+    t.row(vec!["pPITC vs PITC".into(),
+               format!("{:.2e}", max_abs_diff(&par.prediction.mean, &cen.mean)),
+               format!("{:.2e}", max_abs_diff(&par.prediction.var, &cen.var))]);
+
+    let par = ppic::run_with_partition(&w.hyp, &w.train.x, &w.train.y, &xs,
+                                       &w.test.x, &d_blocks, &u_blocks,
+                                       &NativeBackend, &spec);
+    let cen = PicGp::fit(&w.hyp, &w.train.x, &w.train.y, &xs, &d_blocks)
+        .predict(&w.test.x, &u_blocks);
+    t.row(vec!["pPIC vs PIC".into(),
+               format!("{:.2e}", max_abs_diff(&par.prediction.mean, &cen.mean)),
+               format!("{:.2e}", max_abs_diff(&par.prediction.var, &cen.var))]);
+
+    let rank = 96;
+    let par = picf::run(&w.hyp, &w.train.x, &w.train.y, &w.test.x, &d_blocks,
+                        rank, &NativeBackend, &spec);
+    let cen = IcfGp::fit(&w.hyp, &w.train.x, &w.train.y, rank, &d_blocks)
+        .predict(&w.test.x);
+    t.row(vec!["pICF vs ICF".into(),
+               format!("{:.2e}", max_abs_diff(&par.prediction.mean, &cen.mean)),
+               format!("{:.2e}", max_abs_diff(&par.prediction.var, &cen.var))]);
+    println!("{}", t.render());
+}
+
+/// Clustered vs random partition for pPIC.
+fn clustering() {
+    let mut t = Table::new(
+        "ablation: pPIC partitioning — clustered vs random (5 seeds)",
+        &["domain", "RMSE clustered", "RMSE random", "partition cost_s"],
+    );
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        let w = prepare(domain, 800, 160, 31, false);
+        let m = 8;
+        let xs = support_matrix(&w.hyp, &w.train.x, 48);
+        let spec = ClusterSpec::new(m);
+        let (mut rc, mut rr, mut cost) = (0.0, 0.0, 0.0);
+        let seeds = 5;
+        for seed in 0..seeds {
+            let mut rng = Pcg64::seed(100 + seed);
+            let (part, secs) = Stopwatch::time(|| {
+                cluster_partition(&w.train.x, &w.test.x, m, &mut rng)
+            });
+            cost += secs;
+            let out = ppic::run_with_partition(
+                &w.hyp, &w.train.x, &w.train.y, &xs, &w.test.x,
+                &part.d_blocks, &part.u_blocks, &NativeBackend, &spec);
+            rc += rmse(&w.test.y, &out.prediction.mean);
+
+            let d_blocks = random_partition(w.train.len(), m, &mut rng);
+            let u_blocks = random_partition(w.test.len(), m, &mut rng);
+            let out = ppic::run_with_partition(
+                &w.hyp, &w.train.x, &w.train.y, &xs, &w.test.x,
+                &d_blocks, &u_blocks, &NativeBackend, &spec);
+            rr += rmse(&w.test.y, &out.prediction.mean);
+        }
+        let k = seeds as f64;
+        t.row(vec![domain.name().into(), fmt3(rc / k), fmt3(rr / k),
+                   fmt3(cost / k)]);
+    }
+    println!("{}", t.render());
+}
+
+/// §5.2 online absorb vs naive refit.
+fn online() {
+    let w = prepare(Domain::Aimpeak, 1280, 128, 41, false);
+    let m = 4;
+    let per = 64; // per machine per batch
+    let xs = support_matrix(&w.hyp, &w.train.x, 48);
+    let mut og = OnlineGp::new(&w.hyp, &xs, &NativeBackend,
+                               ClusterSpec::new(m));
+    let mut rng = Pcg64::seed(9);
+    let u_blocks = random_partition(w.test.len(), m, &mut rng);
+
+    let mut t = Table::new(
+        "ablation: online absorb vs naive refit (§5.2)",
+        &["batch", "|D|", "absorb_s", "refit_s", "RMSE online"],
+    );
+    let mut seen = 0usize;
+    for b in 0..5 {
+        let lo = b * m * per;
+        let blocks: Vec<(Mat, Vec<f64>)> = (0..m)
+            .map(|k| {
+                let rows: Vec<usize> =
+                    (lo + k * per..lo + (k + 1) * per).collect();
+                let part = w.train.select(&rows);
+                (part.x, part.y)
+            })
+            .collect();
+        let absorb_s = og.absorb(&blocks);
+        seen += m * per;
+        let hist: Vec<usize> = (0..seen).collect();
+        let hist_ds = w.train.select(&hist);
+        let d_blocks = random_partition(seen, m, &mut rng);
+        let (_, refit_s) = Stopwatch::time(|| {
+            ppitc::run(&w.hyp, &hist_ds.x, &hist_ds.y, &xs, &w.test.x,
+                       &d_blocks, &u_blocks, &NativeBackend,
+                       &ClusterSpec::new(m))
+        });
+        let pred = og.predict_ppitc(&w.test.x, &u_blocks);
+        t.row(vec![(b + 1).to_string(), seen.to_string(), fmt3(absorb_s),
+                   fmt3(refit_s),
+                   fmt3(rmse(&w.test.y, &pred.prediction.mean))]);
+    }
+    println!("{}", t.render());
+}
+
+/// Entropy vs random support selection.
+fn support_selection() {
+    let mut t = Table::new(
+        "ablation: support selection — entropy vs random (pPITC RMSE)",
+        &["domain", "|S|", "entropy", "random (avg 5)"],
+    );
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        let w = prepare(domain, 800, 160, 51, false);
+        let m = 8;
+        let spec = ClusterSpec::new(m);
+        let mut rng = Pcg64::seed(4);
+        let d_blocks = random_partition(w.train.len(), m, &mut rng);
+        let u_blocks = random_partition(w.test.len(), m, &mut rng);
+        for s in [16usize, 48] {
+            let xs = support_matrix(&w.hyp, &w.train.x, s);
+            let out = ppitc::run(&w.hyp, &w.train.x, &w.train.y, &xs,
+                                 &w.test.x, &d_blocks, &u_blocks,
+                                 &NativeBackend, &spec);
+            let ent = rmse(&w.test.y, &out.prediction.mean);
+            let mut rnd = 0.0;
+            for seed in 0..5 {
+                let idx = select_support_random(
+                    w.train.len(), s, &mut Pcg64::seed(200 + seed));
+                let xs_r = w.train.x.select_rows(&idx);
+                let out = ppitc::run(&w.hyp, &w.train.x, &w.train.y, &xs_r,
+                                     &w.test.x, &d_blocks, &u_blocks,
+                                     &NativeBackend, &spec);
+                rnd += rmse(&w.test.y, &out.prediction.mean);
+            }
+            t.row(vec![domain.name().into(), s.to_string(), fmt3(ent),
+                       fmt3(rnd / 5.0)]);
+        }
+    }
+    println!("{}", t.render());
+}

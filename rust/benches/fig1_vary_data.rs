@@ -1,0 +1,22 @@
+//! Regenerates Fig. 1 (a–h): RMSE / MNLP / incurred time / speedup vs
+//! data size |D| ∈ {500,1000,1500,2000} (paper: 8k–32k), M=20,
+//! |S|=64 (paper 2048), R=64/128 (paper 2048/4096), both domains.
+//!
+//!     cargo bench --bench fig1_vary_data
+//!
+//! Scale selection: PGPR_BENCH_SCALE=small|paper (default small; see
+//! DESIGN.md §Substitutions for the scaling rationale).
+
+use pgpr::bench_support::figures::{fig1, Scale};
+use pgpr::bench_support::workloads::Domain;
+
+fn main() {
+    let scale = Scale::parse(
+        &std::env::var("PGPR_BENCH_SCALE").unwrap_or_else(|_| "small".into()),
+    )
+    .expect("PGPR_BENCH_SCALE must be small|paper");
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        let t = fig1(domain, scale, 1);
+        println!("{}", t.render());
+    }
+}

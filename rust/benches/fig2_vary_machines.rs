@@ -1,0 +1,18 @@
+//! Regenerates Fig. 2 (a–h): metrics vs machine count M ∈ {4..20} at
+//! fixed |D|=2000 (paper 32000), both domains.
+//!
+//!     cargo bench --bench fig2_vary_machines
+
+use pgpr::bench_support::figures::{fig2, Scale};
+use pgpr::bench_support::workloads::Domain;
+
+fn main() {
+    let scale = Scale::parse(
+        &std::env::var("PGPR_BENCH_SCALE").unwrap_or_else(|_| "small".into()),
+    )
+    .expect("PGPR_BENCH_SCALE must be small|paper");
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        let t = fig2(domain, scale, 1);
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,19 @@
+//! Regenerates Fig. 3 (a–h): metrics vs the low-rank parameter
+//! P = |S| = R (AIMPEAK) / |S| = R/2 (SARCOS), P ∈ {16..128}
+//! (paper 256..2048), |D|=2000, M=20.
+//!
+//!     cargo bench --bench fig3_vary_param
+
+use pgpr::bench_support::figures::{fig3, Scale};
+use pgpr::bench_support::workloads::Domain;
+
+fn main() {
+    let scale = Scale::parse(
+        &std::env::var("PGPR_BENCH_SCALE").unwrap_or_else(|_| "small".into()),
+    )
+    .expect("PGPR_BENCH_SCALE must be small|paper");
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        let t = fig3(domain, scale, 1);
+        println!("{}", t.render());
+    }
+}

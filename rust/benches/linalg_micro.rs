@@ -1,0 +1,74 @@
+//! Micro-benchmarks of the native linear-algebra hot paths (the inputs
+//! to the §Perf optimization loop): Gram construction, matmul variants,
+//! Cholesky, triangular solves, ICF, and the per-block summary ops.
+//!
+//!     cargo bench --bench linalg_micro
+
+use pgpr::bench_support::harness::bench_fn;
+use pgpr::gp::summaries::{local_summary, SupportContext};
+use pgpr::gp::icf_gp::GramSource;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::{cho_solve_mat, cholesky, icf, matmul, matmul_nt,
+                   matmul_tn, Mat};
+use pgpr::util::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::seed(1);
+    let budget = 1.0; // seconds per case
+
+    // dense products at summary-typical shapes
+    for n in [128usize, 256, 512] {
+        let a = Mat::from_vec(n, n, rng.normals(n * n));
+        let b = Mat::from_vec(n, n, rng.normals(n * n));
+        println!("{}", bench_fn(&format!("matmul {n}x{n}"), 50, budget,
+                                || { let _ = matmul(&a, &b); }).report());
+        println!("{}", bench_fn(&format!("matmul_tn {n}x{n}"), 50, budget,
+                                || { let _ = matmul_tn(&a, &b); }).report());
+        println!("{}", bench_fn(&format!("matmul_nt {n}x{n}"), 50, budget,
+                                || { let _ = matmul_nt(&a, &b); }).report());
+    }
+
+    // SPD factorizations
+    for n in [128usize, 256, 512] {
+        let a = Mat::from_vec(n, n, rng.normals(n * n));
+        let mut spd = matmul_nt(&a, &a);
+        spd.add_diag(n as f64);
+        println!("{}", bench_fn(&format!("cholesky {n}"), 50, budget,
+                                || { let _ = cholesky(&spd).unwrap(); })
+                 .report());
+        let l = cholesky(&spd).unwrap();
+        let rhs = Mat::from_vec(n, 64, rng.normals(n * 64));
+        println!("{}", bench_fn(&format!("cho_solve_mat {n}x64"), 50, budget,
+                                || { let _ = cho_solve_mat(&l, &rhs); })
+                 .report());
+    }
+
+    // Gram matrix (the L1 kernel's native mirror)
+    let hyp5 = SeArd::isotropic(5, 1.2, 1.0, 0.1);
+    let hyp21 = SeArd::isotropic(21, 2.0, 1.0, 0.1);
+    for (d, hyp) in [(5usize, &hyp5), (21usize, &hyp21)] {
+        let x1 = Mat::from_vec(512, d, rng.normals(512 * d));
+        let x2 = Mat::from_vec(512, d, rng.normals(512 * d));
+        println!("{}", bench_fn(&format!("se_gram 512x512 d={d}"), 50, budget,
+                                || { let _ = hyp.gram(&x1, &x2); }).report());
+    }
+
+    // pivoted ICF at serving-typical rank
+    let xd = Mat::from_vec(1024, 5, rng.normals(1024 * 5));
+    let src = GramSource { hyp: &hyp5, x: &xd };
+    println!("{}", bench_fn("icf n=1024 R=128", 20, budget,
+                            || { let _ = icf(&src, 128, 0.0); }).report());
+
+    // the per-machine local summary (dominant protocol op)
+    for (b, s) in [(100usize, 64usize), (200, 128)] {
+        let xm = Mat::from_vec(b, 5, rng.normals(b * 5));
+        let xs = Mat::from_vec(s, 5, rng.normals(s * 5));
+        let ym = rng.normals(b);
+        let ctx = SupportContext::new(&hyp5, &xs);
+        println!("{}", bench_fn(&format!("local_summary B={b} S={s}"), 50,
+                                budget,
+                                || { let _ = local_summary(&hyp5, &xm, &ym,
+                                                           &ctx); })
+                 .report());
+    }
+}

@@ -1,0 +1,53 @@
+//! Table 1 empirical check: measured time-scaling exponents in |D| per
+//! method vs the table's dominant analytic terms, plus communication
+//! accounting (bytes/messages vs the O(log M) collective model).
+//!
+//!     cargo bench --bench table1_complexity
+
+use pgpr::bench_support::figures::table1;
+use pgpr::bench_support::table::Table;
+use pgpr::bench_support::workloads::Domain;
+use pgpr::cluster::NetworkModel;
+use pgpr::data::partition::random_partition;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::parallel::{ppitc, ClusterSpec};
+use pgpr::runtime::NativeBackend;
+use pgpr::util::Pcg64;
+
+fn main() {
+    for domain in [Domain::Aimpeak, Domain::Sarcos] {
+        println!("{}", table1(domain, 1).render());
+    }
+
+    // communication column: pPITC bytes are O(|S|^2) independent of |D|
+    // and of |U| (observation g), and messages grow linearly in M while
+    // the modeled round count grows as ceil(log2 M).
+    let mut t = Table::new(
+        "Table 1 check — pPITC communication vs M (|S|=32 fixed)",
+        &["M", "bytes", "messages", "log2 rounds"],
+    );
+    let mut rng = Pcg64::seed(3);
+    let d = 2;
+    let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+    let s = 32;
+    let xs = Mat::from_vec(s, d, rng.normals(s * d));
+    for m in [2usize, 4, 8, 16] {
+        let n = 40 * m;
+        let u = 4 * m;
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let d_blocks = random_partition(n, m, &mut rng);
+        let u_blocks = random_partition(u, m, &mut rng);
+        let out = ppitc::run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                             &NativeBackend, &ClusterSpec::new(m));
+        t.row(vec![
+            m.to_string(),
+            out.metrics.bytes_sent.to_string(),
+            out.metrics.messages.to_string(),
+            NetworkModel::tree_rounds(m).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,247 @@
+//! Figure/table regeneration — one function per evaluation artifact of
+//! Section 6 (see DESIGN.md per-experiment index). Each returns [`Table`]s
+//! with the same series the paper plots; `cargo bench` targets and the
+//! `pgpr sweep` CLI both call through here.
+//!
+//! Scales: `Small` is the default single-host scale documented in
+//! DESIGN.md §Substitutions (≈8× down from the paper); `Paper` uses the
+//! paper's sizes (hours of single-core time — available, not default).
+
+use super::experiments::{run_methods, speedup_order, ExperimentConfig, Method};
+use super::table::{fmt3, Table};
+use super::workloads::{prepare, Domain};
+use crate::runtime::NativeBackend;
+
+/// Sweep scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+/// Fig. 1 — varying data size |D|; M=20, P fixed.
+/// Columns: |D|, method, RMSE, MNLP, time(s), speedup.
+pub fn fig1(domain: Domain, scale: Scale, seed: u64) -> Table {
+    let (sizes, m, p): (Vec<usize>, usize, usize) = match scale {
+        Scale::Small => (vec![500, 1000, 1500, 2000], 20, 128),
+        Scale::Paper => (vec![8000, 16000, 24000, 32000], 20, 2048),
+    };
+    let rank = rank_for(domain, p);
+    let mut t = Table::new(
+        &format!("Fig.1 ({}) — vary |D|, M={m}, |S|={p}, R={rank}",
+                 domain.name()),
+        &["|D|", "method", "RMSE", "MNLP", "time_s", "speedup"],
+    );
+    for &n in &sizes {
+        let u = (n / 10).max(m);
+        let w = prepare(domain, n, u, seed, false);
+        let cfg = ExperimentConfig {
+            machines: m,
+            support_size: p,
+            rank,
+            seed,
+        };
+        let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
+                                  &NativeBackend);
+        for r in &results {
+            t.row(vec![
+                n.to_string(),
+                r.method.name().into(),
+                fmt3(r.rmse),
+                fmt3(r.mnlp),
+                fmt3(r.time_s),
+                r.speedup.map(fmt3).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 2 — varying machine count M; |D|, P fixed.
+pub fn fig2(domain: Domain, scale: Scale, seed: u64) -> Table {
+    let (ms, n, p): (Vec<usize>, usize, usize) = match scale {
+        Scale::Small => (vec![4, 8, 12, 16, 20], 2000, 128),
+        Scale::Paper => (vec![4, 8, 12, 16, 20], 32000, 2048),
+    };
+    let rank = rank_for(domain, p);
+    let mut t = Table::new(
+        &format!("Fig.2 ({}) — vary M, |D|={n}, |S|={p}, R={rank}",
+                 domain.name()),
+        &["M", "method", "RMSE", "MNLP", "time_s", "speedup"],
+    );
+    // one workload shared across M values (paper: same data)
+    let u = (n / 10).max(*ms.iter().max().unwrap());
+    let w = prepare(domain, n, u, seed, false);
+    for &m in &ms {
+        let cfg = ExperimentConfig {
+            machines: m,
+            support_size: p,
+            rank,
+            seed,
+        };
+        let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
+                                  &NativeBackend);
+        for r in &results {
+            t.row(vec![
+                m.to_string(),
+                r.method.name().into(),
+                fmt3(r.rmse),
+                fmt3(r.mnlp),
+                fmt3(r.time_s),
+                r.speedup.map(fmt3).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 3 — varying parameter P = |S| = R (AIMPEAK) or |S| = R/2
+/// (SARCOS); |D|, M fixed. FGP appears once as the flat reference.
+pub fn fig3(domain: Domain, scale: Scale, seed: u64) -> Table {
+    let (ps, n, m): (Vec<usize>, usize, usize) = match scale {
+        Scale::Small => (vec![16, 32, 64, 128], 2000, 20),
+        Scale::Paper => (vec![256, 512, 1024, 2048], 32000, 20),
+    };
+    let mut t = Table::new(
+        &format!("Fig.3 ({}) — vary P, |D|={n}, M={m}", domain.name()),
+        &["P", "method", "RMSE", "MNLP", "time_s", "speedup"],
+    );
+    let u = (n / 10).max(m);
+    let w = prepare(domain, n, u, seed, false);
+    // FGP reference (P-independent)
+    let fgp = run_methods(
+        &w,
+        &ExperimentConfig { machines: m, support_size: ps[0], rank: ps[0],
+                            seed },
+        &[Method::Fgp],
+        &NativeBackend,
+    );
+    t.row(vec![
+        "-".into(),
+        "FGP".into(),
+        fmt3(fgp[0].rmse),
+        fmt3(fgp[0].mnlp),
+        fmt3(fgp[0].time_s),
+        "-".into(),
+    ]);
+    for &p in &ps {
+        let cfg = ExperimentConfig {
+            machines: m,
+            support_size: p,
+            rank: rank_for(domain, p),
+            seed,
+        };
+        let methods = [Method::Pitc, Method::Pic, Method::Icf,
+                       Method::PPitc, Method::PPic, Method::PIcf];
+        let results = run_methods(&w, &cfg, &methods, &NativeBackend);
+        for r in &results {
+            t.row(vec![
+                p.to_string(),
+                r.method.name().into(),
+                fmt3(r.rmse),
+                fmt3(r.mnlp),
+                fmt3(r.time_s),
+                r.speedup.map(fmt3).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table 1 — empirical time-scaling exponents vs the analytic terms:
+/// time each method at |D| = n and 2n and report log2(t₂/t₁), plus the
+/// communication-volume ratio between M and 2M for the parallel methods.
+pub fn table1(domain: Domain, seed: u64) -> Table {
+    let (n1, m, p) = (600usize, 4usize, 32usize);
+    let n2 = 2 * n1;
+    let rank = rank_for(domain, p);
+    let mut t = Table::new(
+        &format!("Table 1 check ({}) — measured scaling in |D| \
+                  (M={m}, |S|={p}, R={rank})", domain.name()),
+        &["method", "t(n)", "t(2n)", "exp≈", "paper dominant term"],
+    );
+    let paper_term = |m: Method| -> &'static str {
+        match m {
+            Method::Fgp => "|D|^3",
+            Method::Pitc | Method::Pic => "|D| (|D|/M)^2",
+            Method::Icf => "R^2 |D| + R|U||D|",
+            Method::PPitc | Method::PPic => "(|D|/M)^3",
+            Method::PIcf => "R^2 |D|/M + R|U||D|/M",
+        }
+    };
+    let u1 = n1 / 10;
+    let w1 = prepare(domain, n1, u1, seed, false);
+    let w2 = prepare(domain, n2, 2 * u1, seed, false);
+    let cfg = |_: usize| ExperimentConfig {
+        machines: m,
+        support_size: p,
+        rank,
+        seed,
+    };
+    let order = speedup_order(&Method::ALL);
+    let r1 = run_methods(&w1, &cfg(n1), &order, &NativeBackend);
+    let r2 = run_methods(&w2, &cfg(n2), &order, &NativeBackend);
+    for method in Method::ALL {
+        let a = r1.iter().find(|r| r.method == method).unwrap();
+        let b = r2.iter().find(|r| r.method == method).unwrap();
+        let exp = (b.time_s / a.time_s).log2();
+        t.row(vec![
+            method.name().into(),
+            fmt3(a.time_s),
+            fmt3(b.time_s),
+            fmt3(exp),
+            paper_term(method).into(),
+        ]);
+    }
+    t
+}
+
+fn rank_for(domain: Domain, p: usize) -> usize {
+    match domain {
+        Domain::Aimpeak => p,      // paper: R = |S|
+        Domain::Sarcos => 2 * p,   // paper: R = 2|S|
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Miniature fig1-shaped sweep (tiny sizes) exercises the plumbing.
+    #[test]
+    fn mini_sweep_runs() {
+        let w = prepare(Domain::Sarcos, 80, 16, 1, false);
+        let cfg = ExperimentConfig {
+            machines: 4,
+            support_size: 8,
+            rank: 12,
+            seed: 1,
+        };
+        let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
+                                  &NativeBackend);
+        assert_eq!(results.len(), 7);
+    }
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("small"), Some(Scale::Small));
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("x"), None);
+    }
+
+    #[test]
+    fn rank_rule_matches_paper() {
+        assert_eq!(rank_for(Domain::Aimpeak, 64), 64);
+        assert_eq!(rank_for(Domain::Sarcos, 64), 128);
+    }
+}

@@ -1,0 +1,84 @@
+//! Micro-benchmark timing loop (the vendor set has no criterion): warm
+//! up, run a target number of iterations or a time budget, report
+//! median/mean/min. Used by `rust/benches/*` with `harness = false`.
+
+use crate::util::Stopwatch;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>5} iters  median {:>12}  mean {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            crate::util::time::fmt_secs(self.median_s),
+            crate::util::time::fmt_secs(self.mean_s),
+            crate::util::time::fmt_secs(self.min_s),
+        )
+    }
+}
+
+/// Benchmark a closure: 1 warmup + up to `max_iters` timed runs, stopping
+/// early once `budget_s` of measurement time is spent (≥1 timed run).
+pub fn bench_fn(
+    name: &str,
+    max_iters: usize,
+    budget_s: f64,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(max_iters.max(1));
+    let total = Stopwatch::new();
+    for _ in 0..max_iters.max(1) {
+        let sw = Stopwatch::new();
+        f();
+        samples.push(sw.elapsed());
+        if total.elapsed() >= budget_s {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let iters = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: samples.iter().sum::<f64>() / iters as f64,
+        median_s: samples[iters / 2],
+        min_s: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut count = 0;
+        let r = bench_fn("noop", 10, 10.0, || {
+            count += 1;
+        });
+        assert_eq!(count, 11); // warmup + 10
+        assert_eq!(r.iters, 10);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s * 10.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let r = bench_fn("sleepy", 1000, 0.02, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(r.iters < 1000);
+        assert!(r.iters >= 1);
+    }
+}

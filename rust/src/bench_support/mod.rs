@@ -1,0 +1,14 @@
+//! Benchmark support: workload preparation, the per-figure experiment
+//! harness, a micro-benchmark timing loop, and table rendering. Shared
+//! by `rust/benches/*` (cargo bench) and the `pgpr sweep` CLI.
+
+pub mod experiments;
+pub mod figures;
+pub mod harness;
+pub mod table;
+pub mod workloads;
+
+pub use experiments::{run_methods, ExperimentConfig, Method, MethodResult};
+pub use harness::{bench_fn, BenchResult};
+pub use table::Table;
+pub use workloads::{prepare, Domain, Workload};

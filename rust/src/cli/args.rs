@@ -1,0 +1,130 @@
+//! Minimal `--key value` / `--flag` argument parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed flags: `--key value` pairs and bare `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if key.is_empty() {
+                bail!("bare '--' not supported");
+            }
+            // `--key=value` or `--key value` or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                out.kv.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                out.kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                out.flags.push(key.to_string());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad number '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    /// Comma-separated list value.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&sv(&["--n", "100", "--learn", "--domain=sarcos"]))
+            .unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 100);
+        assert!(a.flag("learn"));
+        assert_eq!(a.get("domain"), Some("sarcos"));
+        assert_eq!(a.str_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&sv(&["oops"])).is_err());
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let a = Args::parse(&sv(&["--n", "abc"])).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.f64_or("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn list_values() {
+        let a = Args::parse(&sv(&["--methods", "ppic, fgp,pitc"])).unwrap();
+        assert_eq!(a.list("methods"), vec!["ppic", "fgp", "pitc"]);
+        assert!(a.list("nothing").is_empty());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = Args::parse(&sv(&["--lr", "-0.5"])).unwrap();
+        // "-0.5" doesn't start with --, so it's a value
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+}

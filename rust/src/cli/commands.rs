@@ -1,0 +1,244 @@
+//! CLI subcommand implementations.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::args::Args;
+use crate::bench_support::experiments::{
+    run_methods, speedup_order, ExperimentConfig, Method,
+};
+use crate::bench_support::figures::{self, Scale};
+use crate::bench_support::table::{fmt3, Table};
+use crate::bench_support::workloads::{prepare, Domain};
+use crate::data::partition::cluster_partition;
+use crate::gp::likelihood::{learn_hyperparameters, MleConfig};
+use crate::gp::support::support_matrix;
+use crate::runtime::{artifacts, ArtifactManifest, Backend, NativeBackend,
+                     PjrtBackend};
+use crate::server::{DynamicBatcher, PredictRequest, ServedModel};
+use crate::util::Pcg64;
+
+fn parse_domain(args: &Args) -> Result<Domain> {
+    let name = args.str_or("domain", "aimpeak");
+    Domain::parse(name).ok_or_else(|| anyhow!("unknown domain '{name}'"))
+}
+
+/// `pgpr info`
+pub fn info(_args: &Args) -> Result<()> {
+    println!("pgpr {}", crate::version());
+    println!("paper: Chen et al., Parallel Gaussian Process Regression \
+              with Low-Rank Covariance Matrix Approximations (UAI 2013)");
+    let dir = artifacts::default_dir();
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} profiles)", dir.display(),
+                     m.profiles.len());
+            for (name, p) in &m.profiles {
+                println!("  {name}: d={} B={} S={} U={} R={} ({} graphs)",
+                         p.d, p.block, p.support, p.pred_block, p.rank,
+                         p.graphs.len());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// `pgpr predict` — one experiment point, table to stdout.
+pub fn predict(args: &Args) -> Result<()> {
+    let domain = parse_domain(args)?;
+    let n = args.usize_or("n", 1000)?;
+    let m = args.usize_or("m", 8)?;
+    let s = args.usize_or("s", 64)?;
+    let rank = args.usize_or("rank", s)?;
+    let test = args.usize_or("test", (n / 10).max(m))?;
+    let seed = args.u64_or("seed", 1)?;
+    let learn = args.flag("learn");
+
+    let methods: Vec<Method> = if args.get("methods").is_some() {
+        args.list("methods")
+            .iter()
+            .map(|s| Method::parse(s).ok_or_else(|| anyhow!("bad method '{s}'")))
+            .collect::<Result<_>>()?
+    } else {
+        Method::ALL.to_vec()
+    };
+
+    crate::info!("preparing {} workload: n={n} test={test}", domain.name());
+    let w = prepare(domain, n, test, seed, learn);
+    let cfg = ExperimentConfig { machines: m, support_size: s, rank, seed };
+    let results = run_methods(&w, &cfg, &speedup_order(&methods),
+                              &NativeBackend);
+
+    let mut t = Table::new(
+        &format!("{} |D|={n} M={m} |S|={s} R={rank}", domain.name()),
+        &["method", "RMSE", "MNLP", "time_s", "speedup", "bad_var%"],
+    );
+    for r in &results {
+        t.row(vec![
+            r.method.name().into(),
+            fmt3(r.rmse),
+            fmt3(r.mnlp),
+            fmt3(r.time_s),
+            r.speedup.map(fmt3).unwrap_or_else(|| "-".into()),
+            fmt3(100.0 * r.bad_var),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `pgpr sweep` — regenerate a figure/table.
+pub fn sweep(args: &Args) -> Result<()> {
+    let figure = args.str_or("figure", "fig1");
+    let scale = Scale::parse(args.str_or("scale", "small"))
+        .ok_or_else(|| anyhow!("bad --scale"))?;
+    let seed = args.u64_or("seed", 1)?;
+    let domains: Vec<Domain> = match args.get("domain") {
+        Some(d) => vec![Domain::parse(d).ok_or_else(|| anyhow!("bad domain"))?],
+        None => vec![Domain::Aimpeak, Domain::Sarcos],
+    };
+    let mut tables = Vec::new();
+    for domain in domains {
+        let t = match figure {
+            "fig1" => figures::fig1(domain, scale, seed),
+            "fig2" => figures::fig2(domain, scale, seed),
+            "fig3" => figures::fig3(domain, scale, seed),
+            "table1" => figures::table1(domain, seed),
+            other => bail!("unknown figure '{other}'"),
+        };
+        println!("{}", t.render());
+        tables.push(t);
+    }
+    if let Some(path) = args.get("out") {
+        let json = crate::util::json::Json::Arr(
+            tables.iter().map(|t| t.to_json()).collect());
+        std::fs::write(path, json.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `pgpr serve` — serving demo over a profile's shapes.
+pub fn serve(args: &Args) -> Result<()> {
+    let profile = args.str_or("profile", "tiny");
+    let n_requests = args.usize_or("requests", 200)?;
+    let wait_ms = args.f64_or("batch-wait-ms", 2.0)?;
+    let backend_name = args.str_or("backend", "pjrt");
+    let seed = args.u64_or("seed", 1)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts::default_dir);
+
+    let manifest = ArtifactManifest::load(&dir)?;
+    let spec = manifest.profile(profile)?.clone();
+    let m = args.usize_or("m", 4)?;
+    let n = spec.block * m;
+
+    // synthetic workload at the profile's input dimensionality
+    let mut rng = Pcg64::new(seed, 0x5E);
+    let hyp = crate::kernel::SeArd::isotropic(spec.d, 1.0, 1.0, 0.05);
+    let xd = crate::linalg::Mat::from_vec(n, spec.d, rng.normals(n * spec.d));
+    let y = rng.normals(n);
+    let xu_probe = crate::linalg::Mat::from_vec(m, spec.d,
+                                                rng.normals(m * spec.d));
+    let part = cluster_partition(&xd, &xu_probe, m, &mut rng);
+
+    let pjrt;
+    let backend: &dyn Backend = match backend_name {
+        "native" => &NativeBackend,
+        "pjrt" => {
+            pjrt = PjrtBackend::load(&manifest, profile)?;
+            &pjrt
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+
+    crate::info!("fitting served model: profile={profile} n={n} m={m} \
+                  backend={backend_name}");
+    let model = ServedModel::fit(&hyp, &xd, &y,
+        &support_matrix(&hyp, &xd, spec.support), &part.d_blocks, backend);
+
+    let requests: Vec<PredictRequest> = (0..n_requests)
+        .map(|i| PredictRequest {
+            id: i as u64,
+            x: rng.normals(spec.d),
+            arrival_s: i as f64 * 2e-4, // 5k req/s offered load
+        })
+        .collect();
+    let mut batcher = DynamicBatcher::new(m, spec.d, spec.pred_block,
+                                          wait_ms * 1e-3);
+    let report = model.serve(backend, &requests, &mut batcher);
+    println!("serve[{}]: {}", backend.name(), report.summary());
+    Ok(())
+}
+
+/// `pgpr learn` — MLE hyperparameter learning.
+pub fn learn(args: &Args) -> Result<()> {
+    let domain = parse_domain(args)?;
+    let n = args.usize_or("n", 512)?;
+    let iters = args.usize_or("iters", 40)?;
+    let seed = args.u64_or("seed", 1)?;
+    let w = prepare(domain, n, n / 10, seed, false);
+    let cfg = MleConfig {
+        iters,
+        subset: 192.min(w.train.len()),
+        seed,
+        ..Default::default()
+    };
+    let init = domain.default_hyp();
+    let result = learn_hyperparameters(&init, &w.train.x, &w.train.y, &cfg);
+    println!("NLML: {} -> {}",
+             fmt3(result.nlml_trace[0]),
+             fmt3(*result.nlml_trace.last().unwrap()));
+    println!("log_ls  = {:?}",
+             result.hyp.log_ls.iter().map(|v| fmt3(*v)).collect::<Vec<_>>());
+    println!("log_sf2 = {}", fmt3(result.hyp.log_sf2));
+    println!("log_sn2 = {}", fmt3(result.hyp.log_sn2));
+    Ok(())
+}
+
+/// `pgpr selftest` — native vs PJRT agreement on the tiny profile.
+pub fn selftest(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts::default_dir);
+    let manifest = ArtifactManifest::load(&dir)?;
+    let pjrt = PjrtBackend::load(&manifest, "tiny")?;
+    let p = pjrt.profile.clone();
+
+    let mut rng = Pcg64::seed(17);
+    let hyp = crate::kernel::SeArd::isotropic(p.d, 1.0, 1.0, 0.05);
+    let xm = crate::linalg::Mat::from_vec(p.block, p.d,
+                                          rng.normals(p.block * p.d));
+    let xs = crate::linalg::Mat::from_vec(p.support, p.d,
+                                          rng.normals(p.support * p.d));
+    let xu = crate::linalg::Mat::from_vec(p.pred_block, p.d,
+                                          rng.normals(p.pred_block * p.d));
+    let ym = rng.normals(p.block);
+
+    let native = NativeBackend;
+    let l_n = native.local_summary(&hyp, &xm, &ym, &xs);
+    let l_p = pjrt.local_summary(&hyp, &xm, &ym, &xs);
+    let d1 = crate::testkit::max_abs_diff(&l_n.y_dot, &l_p.y_dot);
+
+    let ctx = crate::gp::summaries::SupportContext::new(&hyp, &xs);
+    let glob = crate::gp::summaries::global_summary(&ctx, &[&l_n]);
+    let p_n = native.ppitc_predict(&hyp, &xu, &xs, &glob);
+    let p_p = pjrt.ppitc_predict(&hyp, &xu, &xs, &glob);
+    let d2 = crate::testkit::max_abs_diff(&p_n.mean, &p_p.mean);
+    let q_n = native.ppic_predict(&hyp, &xu, &xs, &xm, &ym, &l_n, &glob);
+    let q_p = pjrt.ppic_predict(&hyp, &xu, &xs, &xm, &ym, &l_p, &glob);
+    let d3 = crate::testkit::max_abs_diff(&q_n.mean, &q_p.mean);
+
+    println!("selftest (tiny profile, native vs pjrt):");
+    println!("  local_summary ydot max|Δ| = {d1:.3e}");
+    println!("  ppitc mean    max|Δ| = {d2:.3e}");
+    println!("  ppic mean     max|Δ| = {d3:.3e}");
+    if d1.max(d2).max(d3) > 1e-8 {
+        bail!("backend disagreement exceeds 1e-8");
+    }
+    println!("  OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! The `pgpr` command-line launcher.
+//!
+//! Subcommands:
+//! * `info`      — version, artifact/profile status
+//! * `predict`   — run selected methods on a workload, print metric table
+//! * `sweep`     — regenerate a paper figure (fig1 | fig2 | fig3 | table1)
+//! * `serve`     — real-time serving demo (router + batcher + backend)
+//! * `learn`     — MLE hyperparameter learning on a workload subset
+//! * `selftest`  — native vs PJRT backend agreement on the tiny profile
+//!
+//! Arg syntax: `--key value` or `--flag`; hand-rolled (no clap offline).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+const USAGE: &str = "\
+pgpr — Parallel Gaussian Process Regression (Chen et al. 2013 reproduction)
+
+USAGE:
+  pgpr <COMMAND> [--key value ...]
+
+COMMANDS:
+  info                               environment + artifact status
+  predict   --domain aimpeak|sarcos --n 1000 --m 8 --s 64 --rank 64
+            [--methods ppic,fgp,...] [--test 200] [--seed 1] [--learn]
+  sweep     --figure fig1|fig2|fig3|table1 [--domain aimpeak|sarcos]
+            [--scale small|paper] [--out results.json]
+  serve     --profile tiny|aimpeak|sarcos [--requests 200] [--batch-wait-ms 2]
+            [--backend pjrt|native] [--artifacts DIR]
+  learn     --domain aimpeak|sarcos [--n 512] [--iters 40] [--seed 1]
+  selftest  [--artifacts DIR]
+
+ENV: PGPR_ARTIFACTS (artifacts dir), PGPR_LOG (error|warn|info|debug)
+";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Dispatch on the subcommand (separated for testing).
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "info" => commands::info(&args),
+        "predict" => commands::predict(&args),
+        "sweep" => commands::sweep(&args),
+        "serve" => commands::serve(&args),
+        "learn" => commands::learn(&args),
+        "selftest" => commands::selftest(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert!(run(&[]).is_ok());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn help_ok() {
+        assert!(run(&["help".into()]).is_ok());
+    }
+
+    #[test]
+    fn info_runs() {
+        assert!(run(&["info".into()]).is_ok());
+    }
+}

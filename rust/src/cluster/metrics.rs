@@ -1,0 +1,79 @@
+//! Per-run accounting: phases, traffic, and the incurred-time breakdown.
+
+/// One labelled phase of a protocol run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    /// makespan when the phase completed (seconds)
+    pub end_makespan: f64,
+}
+
+/// Metrics of one simulated protocol run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub phases: Vec<Phase>,
+    /// total bytes moved over the simulated network
+    pub bytes_sent: usize,
+    /// number of point-to-point messages (tree collectives count their
+    /// rounds × participants)
+    pub messages: usize,
+    /// final makespan = incurred time the paper plots
+    pub makespan: f64,
+    /// sum over nodes of pure compute seconds
+    pub total_compute: f64,
+    /// max over nodes of pure compute seconds (critical-path compute)
+    pub max_compute: f64,
+}
+
+impl RunMetrics {
+    /// Duration of phase `i` (difference of successive end makespans).
+    pub fn phase_duration(&self, i: usize) -> f64 {
+        let end = self.phases[i].end_makespan;
+        let start = if i == 0 { 0.0 } else { self.phases[i - 1].end_makespan };
+        end - start
+    }
+
+    /// Find a phase by name.
+    pub fn phase(&self, name: &str) -> Option<&Phase> {
+        self.phases.iter().find(|p| p.name == name)
+    }
+
+    /// Communication share of the makespan (everything that is not
+    /// critical-path compute).
+    pub fn comm_fraction(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            ((self.makespan - self.max_compute) / self.makespan).max(0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_durations() {
+        let m = RunMetrics {
+            phases: vec![
+                Phase { name: "a".into(), end_makespan: 1.0 },
+                Phase { name: "b".into(), end_makespan: 3.5 },
+            ],
+            makespan: 3.5,
+            ..Default::default()
+        };
+        assert_eq!(m.phase_duration(0), 1.0);
+        assert_eq!(m.phase_duration(1), 2.5);
+        assert_eq!(m.phase("b").unwrap().end_makespan, 3.5);
+        assert!(m.phase("c").is_none());
+    }
+
+    #[test]
+    fn comm_fraction_bounds() {
+        let m = RunMetrics { makespan: 2.0, max_compute: 1.5, ..Default::default() };
+        assert!((m.comm_fraction() - 0.25).abs() < 1e-12);
+        let z = RunMetrics::default();
+        assert_eq!(z.comm_fraction(), 0.0);
+    }
+}

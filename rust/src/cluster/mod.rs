@@ -1,0 +1,23 @@
+//! Discrete-event cluster simulator.
+//!
+//! Stands in for the paper's testbed (20 Xeon nodes on gigabit Ethernet
+//! running MPI) on a single host: every virtual node carries its own
+//! clock; *compute* advances a node's clock by the **measured wall time**
+//! of the real work executed for that node, and *communication* advances
+//! clocks by a gigabit-network cost model with `O(log M)`-round
+//! collectives (Pjesivac-Grbovic et al. 2007 — the model the paper's
+//! Table 1 communication column assumes). Incurred time of a simulated
+//! run is the makespan (max node clock), which is what the paper plots.
+//!
+//! See DESIGN.md §Substitutions for why this preserves the paper's
+//! time/speedup *shape* even though absolute numbers differ.
+
+pub mod metrics;
+pub mod mpi;
+pub mod network;
+pub mod node;
+
+pub use metrics::RunMetrics;
+pub use mpi::Cluster;
+pub use network::NetworkModel;
+pub use node::Node;

@@ -1,0 +1,280 @@
+//! The simulated cluster with MPI-style collectives.
+//!
+//! Execution model: real work runs on the host (one node at a time) and
+//! its measured wall time advances that node's virtual clock;
+//! communication advances clocks per [`NetworkModel`] with binomial-tree
+//! collectives. Node 0 is the master (footnote 1 of the paper: "one of
+//! the M machines can be assigned to be the master").
+
+use super::metrics::{Phase, RunMetrics};
+use super::network::NetworkModel;
+use super::node::Node;
+use crate::util::Stopwatch;
+
+/// A simulated M-node cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub net: NetworkModel,
+    metrics: RunMetrics,
+}
+
+pub const MASTER: usize = 0;
+
+impl Cluster {
+    pub fn new(m: usize, net: NetworkModel) -> Cluster {
+        assert!(m >= 1, "cluster needs at least one node");
+        Cluster {
+            nodes: (0..m).map(Node::new).collect(),
+            net,
+            metrics: RunMetrics::default(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Current makespan (max node clock).
+    pub fn makespan(&self) -> f64 {
+        self.nodes.iter().map(|n| n.clock()).fold(0.0, f64::max)
+    }
+
+    /// Run `work` as node `id`'s local compute; measured wall time
+    /// advances that node's clock.
+    pub fn compute_on<T>(&mut self, id: usize, work: impl FnOnce() -> T) -> T {
+        let (out, secs) = Stopwatch::time(work);
+        self.nodes[id].advance_compute(secs);
+        out
+    }
+
+    /// Run `work(m)` for every node m — conceptually in parallel; the
+    /// host executes them serially, and each node's clock advances by its
+    /// own measured time only.
+    pub fn compute_all<T>(&mut self, mut work: impl FnMut(usize) -> T) -> Vec<T> {
+        (0..self.size())
+            .map(|id| {
+                let (out, secs) = Stopwatch::time(|| work(id));
+                self.nodes[id].advance_compute(secs);
+                out
+            })
+            .collect()
+    }
+
+    /// Charge node `id` a fixed amount of *modeled* compute seconds (used
+    /// when the per-node work is too fine-grained to measure reliably).
+    pub fn charge_compute(&mut self, id: usize, secs: f64) {
+        self.nodes[id].advance_compute(secs);
+    }
+
+    /// Synchronize all clocks at the current makespan (barrier).
+    pub fn barrier(&mut self) {
+        let t = self.makespan();
+        for n in self.nodes.iter_mut() {
+            n.wait_until(t);
+        }
+    }
+
+    /// Reduce `bytes`-sized values from all nodes to the master along a
+    /// binomial tree: ceil(log2 M) rounds. Master ends at
+    /// max(all clocks) + rounds·transfer(bytes).
+    pub fn reduce_to_master(&mut self, bytes: usize) {
+        let m = self.size();
+        if m <= 1 {
+            return;
+        }
+        let t_done = self.makespan() + self.net.collective_time(m, bytes);
+        self.nodes[MASTER].wait_until(t_done);
+        self.metrics.bytes_sent += bytes * (m - 1);
+        self.metrics.messages += m - 1;
+    }
+
+    /// Broadcast `bytes` from the master to all nodes (binomial tree).
+    /// Every node ends at master_clock + rounds·transfer(bytes).
+    pub fn bcast_from_master(&mut self, bytes: usize) {
+        let m = self.size();
+        if m <= 1 {
+            return;
+        }
+        let t_done =
+            self.nodes[MASTER].clock() + self.net.collective_time(m, bytes);
+        for n in self.nodes.iter_mut() {
+            n.wait_until(t_done);
+        }
+        self.metrics.bytes_sent += bytes * (m - 1);
+        self.metrics.messages += m - 1;
+    }
+
+    /// Gather `bytes` from every node to the master: latency amortized
+    /// over a tree (log M rounds) but the master still receives all the
+    /// payload: rounds·latency + (M−1)·bytes/bandwidth.
+    pub fn gather_to_master(&mut self, bytes: usize) {
+        let m = self.size();
+        if m <= 1 {
+            return;
+        }
+        let rounds = NetworkModel::tree_rounds(m) as f64;
+        let t = rounds * self.net.latency_s
+            + ((m - 1) * bytes) as f64 * 8.0
+                / self.net.bandwidth_bps.max(f64::MIN_POSITIVE);
+        let t_done = self.makespan() + t;
+        self.nodes[MASTER].wait_until(t_done);
+        self.metrics.bytes_sent += bytes * (m - 1);
+        self.metrics.messages += m - 1;
+    }
+
+    /// Allreduce of `bytes` across all nodes (butterfly/recursive
+    /// doubling): log M rounds, everyone ends synchronized at
+    /// max(clocks) + rounds·transfer (the MPI_Allreduce/MAXLOC shape the
+    /// row-based parallel ICF uses each iteration).
+    pub fn allreduce(&mut self, bytes: usize) {
+        let m = self.size();
+        if m <= 1 {
+            return;
+        }
+        let t_done = self.makespan() + self.net.collective_time(m, bytes);
+        for n in self.nodes.iter_mut() {
+            n.wait_until(t_done);
+        }
+        // butterfly: every node sends one message per round
+        let rounds = NetworkModel::tree_rounds(m);
+        self.metrics.bytes_sent += bytes * m * rounds / 2;
+        self.metrics.messages += m * rounds / 2;
+    }
+
+    /// All-to-all personalized exchange of `bytes` per pair (the pPIC
+    /// clustering shuffle): each node sends M−1 messages.
+    pub fn alltoall(&mut self, bytes_per_pair: usize) {
+        let m = self.size();
+        if m <= 1 {
+            return;
+        }
+        let per_node = (m - 1) as f64 * self.net.transfer_time(bytes_per_pair);
+        let t_done = self.makespan() + per_node;
+        for n in self.nodes.iter_mut() {
+            n.wait_until(t_done);
+        }
+        self.metrics.bytes_sent += bytes_per_pair * m * (m - 1);
+        self.metrics.messages += m * (m - 1);
+    }
+
+    /// Mark the end of a named protocol phase.
+    pub fn phase(&mut self, name: &str) {
+        self.metrics.phases.push(Phase {
+            name: name.to_string(),
+            end_makespan: self.makespan(),
+        });
+    }
+
+    /// Finish the run and take the metrics.
+    pub fn finish(mut self) -> RunMetrics {
+        self.metrics.makespan = self.makespan();
+        self.metrics.total_compute =
+            self.nodes.iter().map(|n| n.compute_total()).sum();
+        self.metrics.max_compute = self
+            .nodes
+            .iter()
+            .map(|n| n.compute_total())
+            .fold(0.0, f64::max);
+        self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+    use std::time::Duration;
+
+    fn fast_net() -> NetworkModel {
+        NetworkModel { latency_s: 1e-3, bandwidth_bps: 1e9 }
+    }
+
+    #[test]
+    fn compute_all_advances_individual_clocks() {
+        let mut c = Cluster::new(3, NetworkModel::instant());
+        c.compute_all(|id| sleep(Duration::from_millis(2 * (id as u64 + 1))));
+        // node 2 slept longest
+        assert!(c.nodes[2].clock() > c.nodes[0].clock());
+        // makespan is max clock, NOT the sum (that's the parallelism)
+        let sum: f64 = c.nodes.iter().map(|n| n.clock()).sum();
+        assert!(c.makespan() < sum);
+    }
+
+    #[test]
+    fn reduce_only_advances_master_beyond_max() {
+        let mut c = Cluster::new(4, fast_net());
+        c.charge_compute(2, 0.5); // slowest worker
+        c.reduce_to_master(1000);
+        // master waited for node 2 plus 2 rounds of ~1ms
+        assert!(c.nodes[MASTER].clock() >= 0.5 + 2.0 * 1e-3);
+        // other workers unaffected
+        assert_eq!(c.nodes[1].clock(), 0.0);
+    }
+
+    #[test]
+    fn bcast_synchronizes_to_master_time() {
+        let mut c = Cluster::new(4, fast_net());
+        c.charge_compute(MASTER, 1.0);
+        c.bcast_from_master(100);
+        for n in &c.nodes {
+            assert!(n.clock() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn gather_cost_scales_with_payload() {
+        let mut a = Cluster::new(8, fast_net());
+        a.gather_to_master(1_000_000);
+        let mut b = Cluster::new(8, fast_net());
+        b.gather_to_master(10_000_000);
+        assert!(b.nodes[MASTER].clock() > a.nodes[MASTER].clock());
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut c = Cluster::new(5, fast_net());
+        c.reduce_to_master(10);
+        c.bcast_from_master(20);
+        let m = c.finish();
+        assert_eq!(m.bytes_sent, 10 * 4 + 20 * 4);
+        assert_eq!(m.messages, 8);
+    }
+
+    #[test]
+    fn single_node_communication_free() {
+        let mut c = Cluster::new(1, fast_net());
+        c.reduce_to_master(1000);
+        c.bcast_from_master(1000);
+        c.alltoall(1000);
+        let m = c.finish();
+        assert_eq!(m.bytes_sent, 0);
+        assert_eq!(m.makespan, 0.0);
+    }
+
+    #[test]
+    fn phases_and_finish() {
+        let mut c = Cluster::new(2, NetworkModel::instant());
+        c.charge_compute(0, 1.0);
+        c.phase("one");
+        c.charge_compute(1, 3.0);
+        c.phase("two");
+        let m = c.finish();
+        assert_eq!(m.phases.len(), 2);
+        assert_eq!(m.phase_duration(0), 1.0);
+        assert_eq!(m.phase_duration(1), 2.0); // makespan 1 -> 3
+        assert_eq!(m.makespan, 3.0);
+        assert_eq!(m.total_compute, 4.0);
+        assert_eq!(m.max_compute, 3.0);
+    }
+
+    #[test]
+    fn barrier_aligns_clocks() {
+        let mut c = Cluster::new(3, NetworkModel::instant());
+        c.charge_compute(1, 2.0);
+        c.barrier();
+        for n in &c.nodes {
+            assert_eq!(n.clock(), 2.0);
+        }
+    }
+}

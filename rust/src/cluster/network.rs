@@ -1,0 +1,81 @@
+//! Network cost model: per-message latency + bandwidth, gigabit default.
+
+/// Point-to-point message cost model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    /// one-way message latency (seconds)
+    pub latency_s: f64,
+    /// link bandwidth (bits per second)
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    /// Gigabit Ethernet as in the paper's cluster: ~50 µs latency, 1 Gb/s.
+    pub fn gigabit() -> NetworkModel {
+        NetworkModel { latency_s: 50e-6, bandwidth_bps: 1e9 }
+    }
+
+    /// Zero-cost network (ablations: isolate compute).
+    pub fn instant() -> NetworkModel {
+        NetworkModel { latency_s: 0.0, bandwidth_bps: f64::INFINITY }
+    }
+
+    /// Time for one point-to-point message of `bytes`.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64) * 8.0 / self.bandwidth_bps
+    }
+
+    /// Rounds of a binomial-tree collective over `m` participants.
+    pub fn tree_rounds(m: usize) -> usize {
+        if m <= 1 {
+            0
+        } else {
+            usize::BITS as usize - (m - 1).leading_zeros() as usize
+        }
+    }
+
+    /// Cost of a broadcast/reduce of `bytes` over `m` nodes:
+    /// ceil(log2 m) rounds of one message each (the paper's O(log M)).
+    pub fn collective_time(&self, m: usize, bytes: usize) -> f64 {
+        Self::tree_rounds(m) as f64 * self.transfer_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn transfer_time_components() {
+        let net = NetworkModel { latency_s: 1e-3, bandwidth_bps: 8e6 };
+        // 1000 bytes = 8000 bits over 8 Mb/s = 1 ms + 1 ms latency
+        assert_close(net.transfer_time(1000), 2e-3, 1e-12, 0.0);
+    }
+
+    #[test]
+    fn tree_rounds_log2() {
+        assert_eq!(NetworkModel::tree_rounds(1), 0);
+        assert_eq!(NetworkModel::tree_rounds(2), 1);
+        assert_eq!(NetworkModel::tree_rounds(3), 2);
+        assert_eq!(NetworkModel::tree_rounds(4), 2);
+        assert_eq!(NetworkModel::tree_rounds(5), 3);
+        assert_eq!(NetworkModel::tree_rounds(16), 4);
+        assert_eq!(NetworkModel::tree_rounds(20), 5);
+    }
+
+    #[test]
+    fn collective_scales_logarithmically() {
+        let net = NetworkModel::gigabit();
+        let t4 = net.collective_time(4, 1024);
+        let t16 = net.collective_time(16, 1024);
+        assert_close(t16 / t4, 2.0, 1e-12, 0.0); // 4 rounds vs 2
+    }
+
+    #[test]
+    fn instant_network_free() {
+        let net = NetworkModel::instant();
+        assert_eq!(net.transfer_time(1 << 30), 0.0);
+        assert_eq!(net.collective_time(20, 1 << 20), 0.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Virtual cluster node: an id and a monotone clock.
+
+/// One simulated machine. The clock is in seconds since run start and
+/// only ever moves forward.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    clock: f64,
+    /// cumulative compute seconds (excludes waiting on communication)
+    compute_total: f64,
+}
+
+impl Node {
+    pub fn new(id: usize) -> Node {
+        Node { id, clock: 0.0, compute_total: 0.0 }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn compute_total(&self) -> f64 {
+        self.compute_total
+    }
+
+    /// Advance the clock by `secs` of local compute.
+    pub fn advance_compute(&mut self, secs: f64) {
+        assert!(secs >= 0.0, "negative compute time");
+        self.clock += secs;
+        self.compute_total += secs;
+    }
+
+    /// Wait until at least `t` (communication arrival / barrier).
+    pub fn wait_until(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotone() {
+        let mut n = Node::new(0);
+        n.advance_compute(1.5);
+        assert_eq!(n.clock(), 1.5);
+        n.wait_until(1.0); // in the past: no-op
+        assert_eq!(n.clock(), 1.5);
+        n.wait_until(2.0);
+        assert_eq!(n.clock(), 2.0);
+        assert_eq!(n.compute_total(), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_compute_rejected() {
+        Node::new(0).advance_compute(-1.0);
+    }
+}

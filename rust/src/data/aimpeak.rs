@@ -1,0 +1,414 @@
+//! Synthetic AIMPEAK-like spatiotemporal traffic workload.
+//!
+//! The paper's AIMPEAK dataset (41850 records) holds traffic speeds over
+//! 775 road segments × 54 five-minute morning-peak slots; each input is a
+//! 5-d feature vector, and the road network is embedded into Euclidean
+//! space with MDS (footnote 2) so the SE kernel applies.
+//!
+//! This generator reproduces that *structure*:
+//!  1. build an urban road network — a perturbed grid of intersections
+//!     with highway / arterial / slip-road segments carrying (length,
+//!     lanes, speed-limit, direction) attributes;
+//!  2. compute segment-to-segment shortest-path distances (Dijkstra over
+//!     the line graph) and embed segments into `EMBED_DIM` Euclidean
+//!     coordinates with classical MDS — the paper's relational→Euclidean
+//!     trick;
+//!  3. inputs are `(embedding…, time)` (d = EMBED_DIM + 1 = 5, matching
+//!     the paper's dimensionality);
+//!  4. speeds = smooth GP field over the embedding (RFF draw, long
+//!     length-scales — the regime low-rank methods are built for)
+//!     + a road-class baseline + a morning-peak congestion dip,
+//!     rescaled to the paper's mean 49.5 / sd 21.7 km/h.
+
+use super::rff::RffSampler;
+use super::Dataset;
+use crate::kernel::SeArd;
+use crate::linalg::mds::classical_mds;
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// Euclidean embedding dimensionality (spatial part of the input).
+pub const EMBED_DIM: usize = 4;
+/// Number of five-minute slots in the paper's 6:00–10:30 window.
+pub const TIME_SLOTS: usize = 54;
+
+/// Road segment classes with distinct attribute distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoadClass {
+    Highway,
+    Arterial,
+    SlipRoad,
+}
+
+/// One directed road segment.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub from: usize,
+    pub to: usize,
+    pub class: RoadClass,
+    pub length_km: f64,
+    pub lanes: usize,
+    pub speed_limit: f64,
+    /// heading in radians
+    pub direction: f64,
+}
+
+/// A generated road network: intersections on a jittered grid plus the
+/// segment list (line-graph adjacency is derived on demand).
+#[derive(Debug, Clone)]
+pub struct RoadNetwork {
+    pub nodes: Vec<(f64, f64)>,
+    pub segments: Vec<Segment>,
+}
+
+impl RoadNetwork {
+    /// Generate a `gw×gh` jittered-grid city with a highway ring and
+    /// slip-road connectors. Total segments ≈ 2·(2·gw·gh − gw − gh).
+    pub fn generate(gw: usize, gh: usize, rng: &mut Pcg64) -> RoadNetwork {
+        assert!(gw >= 2 && gh >= 2);
+        let mut nodes = Vec::with_capacity(gw * gh);
+        for iy in 0..gh {
+            for ix in 0..gw {
+                nodes.push((
+                    ix as f64 + rng.uniform_in(-0.2, 0.2),
+                    iy as f64 + rng.uniform_in(-0.2, 0.2),
+                ));
+            }
+        }
+        let id = |ix: usize, iy: usize| iy * gw + ix;
+        let mut segments = Vec::new();
+        let mut add_bidirectional =
+            |a: usize, b: usize, class: RoadClass, rng: &mut Pcg64, nodes: &[(f64, f64)]| {
+                let (ax, ay) = nodes[a];
+                let (bx, by) = nodes[b];
+                let base_len = ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt();
+                let (lanes, limit, len_scale) = match class {
+                    RoadClass::Highway => (rng.below(2) + 3, 90.0, 1.6),
+                    RoadClass::Arterial => (rng.below(2) + 2, 60.0, 1.0),
+                    RoadClass::SlipRoad => (1, 40.0, 0.35),
+                };
+                for (f, t) in [(a, b), (b, a)] {
+                    let (fx, fy) = nodes[f];
+                    let (tx, ty) = nodes[t];
+                    segments.push(Segment {
+                        from: f,
+                        to: t,
+                        class,
+                        length_km: base_len * len_scale * rng.uniform_in(0.85, 1.15),
+                        lanes,
+                        speed_limit: limit,
+                        direction: (ty - fy).atan2(tx - fx),
+                    });
+                }
+            };
+        // arterial grid
+        for iy in 0..gh {
+            for ix in 0..gw {
+                if ix + 1 < gw {
+                    add_bidirectional(id(ix, iy), id(ix + 1, iy),
+                                      RoadClass::Arterial, rng, &nodes);
+                }
+                if iy + 1 < gh {
+                    add_bidirectional(id(ix, iy), id(ix, iy + 1),
+                                      RoadClass::Arterial, rng, &nodes);
+                }
+            }
+        }
+        // highway ring on the border rows/cols (upgrade class)
+        for ix in 0..gw - 1 {
+            add_bidirectional(id(ix, 0), id(ix + 1, 0), RoadClass::Highway,
+                              rng, &nodes);
+            add_bidirectional(id(ix, gh - 1), id(ix + 1, gh - 1),
+                              RoadClass::Highway, rng, &nodes);
+        }
+        // slip roads: a few random diagonal connectors
+        let n_slip = (gw * gh) / 4;
+        for _ in 0..n_slip {
+            let a = rng.below(nodes.len());
+            let b = rng.below(nodes.len());
+            if a != b {
+                add_bidirectional(a, b, RoadClass::SlipRoad, rng, &nodes);
+            }
+        }
+        RoadNetwork { nodes, segments }
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Segment-to-segment shortest-path distance matrix over the line
+    /// graph: two segments are adjacent when one ends where the other
+    /// starts; edge weight = mean of their lengths. Dijkstra from every
+    /// segment (sizes here are a few hundred, so O(s² log s) is fine).
+    pub fn segment_distances(&self) -> Mat {
+        let s = self.segments.len();
+        // adjacency: for each node, outgoing segment ids
+        let mut out_of: Vec<Vec<usize>> = vec![Vec::new(); self.nodes.len()];
+        for (i, seg) in self.segments.iter().enumerate() {
+            out_of[seg.from].push(i);
+        }
+        let mut dist = Mat::from_fn(s, s, |_, _| f64::INFINITY);
+        for src in 0..s {
+            // binary-heap Dijkstra over segments
+            use std::cmp::Reverse;
+            use std::collections::BinaryHeap;
+            #[derive(PartialEq)]
+            struct Entry(f64, usize);
+            impl Eq for Entry {}
+            impl PartialOrd for Entry {
+                fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                    Some(self.cmp(o))
+                }
+            }
+            impl Ord for Entry {
+                fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                    self.0.partial_cmp(&o.0).unwrap()
+                        .then(self.1.cmp(&o.1))
+                }
+            }
+            let mut heap = BinaryHeap::new();
+            dist[(src, src)] = 0.0;
+            heap.push(Reverse(Entry(0.0, src)));
+            while let Some(Reverse(Entry(d, seg))) = heap.pop() {
+                if d > dist[(src, seg)] {
+                    continue;
+                }
+                let end = self.segments[seg].to;
+                for &next in &out_of[end] {
+                    let w = 0.5
+                        * (self.segments[seg].length_km
+                            + self.segments[next].length_km);
+                    let nd = d + w;
+                    if nd < dist[(src, next)] {
+                        dist[(src, next)] = nd;
+                        heap.push(Reverse(Entry(nd, next)));
+                    }
+                }
+            }
+        }
+        // symmetrize (directed graph → metric for MDS) and cap
+        // unreachable pairs at a large finite value.
+        let mut maxfin: f64 = 0.0;
+        for v in dist.data.iter() {
+            if v.is_finite() {
+                maxfin = maxfin.max(*v);
+            }
+        }
+        for v in dist.data.iter_mut() {
+            if !v.is_finite() {
+                *v = 2.0 * maxfin;
+            }
+        }
+        let mut sym = dist.clone();
+        for i in 0..s {
+            for j in 0..s {
+                let v = 0.5 * (dist[(i, j)] + dist[(j, i)]);
+                sym[(i, j)] = v;
+                sym[(j, i)] = v;
+            }
+        }
+        sym
+    }
+}
+
+/// Configuration for the AIMPEAK-like dataset.
+#[derive(Debug, Clone)]
+pub struct AimpeakConfig {
+    pub grid_w: usize,
+    pub grid_h: usize,
+    pub time_slots: usize,
+    /// RFF features for the latent field draw.
+    pub rff_features: usize,
+    /// observation noise std-dev (km/h) before rescaling
+    pub noise_std: f64,
+    pub seed: u64,
+}
+
+impl Default for AimpeakConfig {
+    fn default() -> Self {
+        AimpeakConfig {
+            grid_w: 8,
+            grid_h: 6,
+            time_slots: TIME_SLOTS,
+            rff_features: 512,
+            noise_std: 0.35,
+            seed: 2013,
+        }
+    }
+}
+
+/// Generate the dataset: one record per (segment, time-slot).
+///
+/// Inputs are 5-d: the 4-d MDS embedding of the segment (scaled to unit
+/// std per axis) plus the slot time scaled to [0, 3] — comparable ranges
+/// so an isotropic initial length-scale is sane.
+pub fn generate(cfg: &AimpeakConfig) -> (RoadNetwork, Dataset) {
+    let mut rng = Pcg64::new(cfg.seed, 0xA1);
+    let net = RoadNetwork::generate(cfg.grid_w, cfg.grid_h, &mut rng);
+    let s = net.n_segments();
+    let dist = net.segment_distances();
+    let emb = classical_mds(&dist, EMBED_DIM);
+
+    // normalize embedding columns to unit std
+    let mut emb_n = emb.clone();
+    for c in 0..EMBED_DIM {
+        let mean: f64 = (0..s).map(|r| emb[(r, c)]).sum::<f64>() / s as f64;
+        let var: f64 = (0..s)
+            .map(|r| (emb[(r, c)] - mean).powi(2))
+            .sum::<f64>()
+            / s as f64;
+        let std = var.sqrt().max(1e-9);
+        for r in 0..s {
+            emb_n[(r, c)] = (emb[(r, c)] - mean) / std;
+        }
+    }
+
+    // latent smooth field over (embedding, time): long length-scales
+    let field_hyp = SeArd {
+        log_ls: vec![
+            1.2f64.ln(), 1.2f64.ln(), 1.2f64.ln(), 1.2f64.ln(), // space
+            1.0f64.ln(),                                        // time
+        ],
+        log_sf2: 0.0,
+        log_sn2: (1e-6f64).ln(),
+    };
+    let field = RffSampler::draw(&field_hyp, cfg.rff_features, &mut rng);
+
+    let n = s * cfg.time_slots;
+    let mut x = Mat::zeros(n, EMBED_DIM + 1);
+    let mut y = Vec::with_capacity(n);
+    let mut row = 0;
+    for seg in 0..s {
+        let class = net.segments[seg].class;
+        let base = match class {
+            RoadClass::Highway => 1.2,
+            RoadClass::Arterial => 0.0,
+            RoadClass::SlipRoad => -0.8,
+        };
+        for t in 0..cfg.time_slots {
+            let time = 3.0 * t as f64 / cfg.time_slots.max(1) as f64;
+            for c in 0..EMBED_DIM {
+                x[(row, c)] = emb_n[(seg, c)];
+            }
+            x[(row, EMBED_DIM)] = time;
+            // morning-peak dip: worst congestion mid-window
+            let peak = -1.1
+                * (-((time - 1.3) * (time - 1.3)) / 0.5).exp()
+                * (1.0 + 0.3 * base);
+            let latent = field.eval(x.row(row)) + base + peak;
+            y.push(latent + cfg.noise_std * rng.normal());
+            row += 1;
+        }
+    }
+    let mut ds = Dataset::new(x, y);
+    // match the paper's reported statistics
+    ds.rescale_y(49.5, 21.7);
+    (net, ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> AimpeakConfig {
+        AimpeakConfig {
+            grid_w: 4,
+            grid_h: 3,
+            time_slots: 6,
+            rff_features: 64,
+            noise_std: 0.3,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn network_shape_and_classes() {
+        let mut rng = Pcg64::seed(5);
+        let net = RoadNetwork::generate(5, 4, &mut rng);
+        assert_eq!(net.nodes.len(), 20);
+        assert!(net.n_segments() > 40);
+        let classes: Vec<_> = net.segments.iter().map(|s| s.class).collect();
+        assert!(classes.contains(&RoadClass::Highway));
+        assert!(classes.contains(&RoadClass::Arterial));
+        // bidirectional pairs
+        assert_eq!(net.n_segments() % 2, 0);
+    }
+
+    #[test]
+    fn segment_attributes_sane() {
+        let mut rng = Pcg64::seed(6);
+        let net = RoadNetwork::generate(4, 4, &mut rng);
+        for s in &net.segments {
+            assert!(s.length_km > 0.0 && s.length_km < 10.0);
+            assert!(s.lanes >= 1 && s.lanes <= 4);
+            assert!([40.0, 60.0, 90.0].contains(&s.speed_limit));
+            assert!(s.from < net.nodes.len() && s.to < net.nodes.len());
+        }
+    }
+
+    #[test]
+    fn distance_matrix_is_metric_like() {
+        let mut rng = Pcg64::seed(7);
+        let net = RoadNetwork::generate(3, 3, &mut rng);
+        let d = net.segment_distances();
+        let s = net.n_segments();
+        for i in 0..s {
+            assert_eq!(d[(i, i)], 0.0);
+            for j in 0..s {
+                assert!(d[(i, j)] >= 0.0);
+                assert!((d[(i, j)] - d[(j, i)]).abs() < 1e-12);
+                assert!(d[(i, j)].is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_statistics_match_paper() {
+        let (net, ds) = generate(&small_cfg());
+        assert_eq!(ds.len(), net.n_segments() * 6);
+        assert_eq!(ds.dim(), 5);
+        assert!((ds.y_mean() - 49.5).abs() < 1e-6);
+        assert!((ds.y_std() - 21.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let (_, a) = generate(&small_cfg());
+        let (_, b) = generate(&small_cfg());
+        assert_eq!(a.y, b.y);
+        let mut cfg2 = small_cfg();
+        cfg2.seed = 2;
+        let (_, c) = generate(&cfg2);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn time_feature_spans_slots() {
+        let (_, ds) = generate(&small_cfg());
+        let times: Vec<f64> = (0..ds.len()).map(|i| ds.x[(i, EMBED_DIM)]).collect();
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(min, 0.0);
+        assert!(max > 2.0 && max < 3.0);
+    }
+
+    #[test]
+    fn spatially_close_segments_correlated() {
+        // same segment consecutive slots should have closer speeds than
+        // random pairs on average (smooth latent field)
+        let (_, ds) = generate(&AimpeakConfig { time_slots: 10, ..small_cfg() });
+        let mut near = 0.0;
+        let mut cnt = 0.0;
+        for seg in 0..ds.len() / 10 {
+            for t in 0..9 {
+                let i = seg * 10 + t;
+                near += (ds.y[i] - ds.y[i + 1]).abs();
+                cnt += 1.0;
+            }
+        }
+        near /= cnt;
+        let std = ds.y_std();
+        assert!(near < std, "near-slot diff {near} should be < std {std}");
+    }
+}

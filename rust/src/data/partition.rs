@@ -1,0 +1,218 @@
+//! Definition 1 partitions: distribute `(D, y_D)` evenly among M machines.
+//!
+//! Two schemes:
+//! * [`random_partition`] — uniformly random even blocks (the baseline);
+//! * [`cluster_partition`] — the paper's *parallelized clustering scheme*
+//!   (Remark 2 after Definition 5): each machine picks a random cluster
+//!   center from its initial block, every training/test point is assigned
+//!   to the nearest center subject to the hard caps `|D|/M` and `|U|/M`,
+//!   which keeps the partition even (Definition 1) while co-locating
+//!   correlated D_m and U_m — the thing pPIC's local term feeds on.
+
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// Even random partition of `0..n` into `m` blocks. Requires `m | n`
+/// (the paper's Definition 1 assumes even divisibility; callers trim).
+pub fn random_partition(n: usize, m: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(m >= 1 && n % m == 0, "random_partition: {m} must divide {n}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.chunks(n / m).map(|c| c.to_vec()).collect()
+}
+
+/// Result of the clustering scheme: block index lists for D and U.
+#[derive(Debug, Clone)]
+pub struct ClusterPartition {
+    pub d_blocks: Vec<Vec<usize>>,
+    pub u_blocks: Vec<Vec<usize>>,
+    /// chosen cluster-center rows (indices into `xd`)
+    pub centers: Vec<usize>,
+}
+
+/// The paper's parallelized clustering scheme over training inputs `xd`
+/// and test inputs `xu`. Both must divide evenly by `m`.
+pub fn cluster_partition(
+    xd: &Mat,
+    xu: &Mat,
+    m: usize,
+    rng: &mut Pcg64,
+) -> ClusterPartition {
+    let n = xd.rows;
+    let u = xu.rows;
+    assert!(m >= 1 && n % m == 0, "cluster_partition: {m} must divide {n}");
+    assert!(u % m == 0, "cluster_partition: {m} must divide |U|={u}");
+
+    // Step 1 of the scheme: initial random even blocks; machine i picks a
+    // random center from its own local data.
+    let initial = random_partition(n, m, rng);
+    let centers: Vec<usize> = initial
+        .iter()
+        .map(|blk| blk[rng.below(blk.len())])
+        .collect();
+
+    let assign = |x: &Mat, cap: usize, rng: &mut Pcg64| -> Vec<Vec<usize>> {
+        // Each point goes to the nearest center whose block still has
+        // room; points are visited in random order so overflow spills
+        // are unbiased (mirrors the asynchronous sends of the paper's
+        // scheme under the same capacity constraint).
+        let mut order: Vec<usize> = (0..x.rows).collect();
+        rng.shuffle(&mut order);
+        let mut blocks: Vec<Vec<usize>> = vec![Vec::with_capacity(cap); m];
+        for &p in &order {
+            // centers sorted by distance
+            let mut by_dist: Vec<(f64, usize)> = centers
+                .iter()
+                .enumerate()
+                .map(|(c, &ci)| {
+                    let mut s = 0.0;
+                    for col in 0..x.cols.min(xd.cols) {
+                        let diff = x[(p, col)] - xd[(ci, col)];
+                        s += diff * diff;
+                    }
+                    (s, c)
+                })
+                .collect();
+            by_dist.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let slot = by_dist
+                .iter()
+                .find(|(_, c)| blocks[*c].len() < cap)
+                .map(|(_, c)| *c)
+                .expect("capacity sums to n");
+            blocks[slot].push(p);
+        }
+        blocks
+    };
+
+    let d_blocks = assign(xd, n / m, rng);
+    let u_blocks = assign(xu, u / m, rng);
+    ClusterPartition { d_blocks, u_blocks, centers }
+}
+
+/// Check Definition 1 invariants: blocks are disjoint, cover `0..n`, and
+/// all have equal size. Used by tests and debug assertions.
+pub fn is_even_partition(blocks: &[Vec<usize>], n: usize) -> bool {
+    if blocks.is_empty() {
+        return n == 0;
+    }
+    let size = blocks[0].len();
+    if blocks.iter().any(|b| b.len() != size) {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    let mut count = 0;
+    for b in blocks {
+        for &i in b {
+            if i >= n || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+            count += 1;
+        }
+    }
+    count == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::prop_check;
+
+    #[test]
+    fn random_partition_invariants() {
+        prop_check("random-partition", 24, |g| {
+            let m = g.usize_in(1, 9);
+            let per = g.usize_in(1, 12);
+            let n = m * per;
+            let blocks = random_partition(n, m, g.rng());
+            assert_eq!(blocks.len(), m);
+            assert!(is_even_partition(&blocks, n));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn random_partition_requires_divisibility() {
+        random_partition(10, 3, &mut Pcg64::seed(1));
+    }
+
+    #[test]
+    fn cluster_partition_invariants() {
+        prop_check("cluster-partition", 16, |g| {
+            let m = g.usize_in(1, 6);
+            let nd = m * g.usize_in(2, 10);
+            let nu = m * g.usize_in(1, 6);
+            let d = g.usize_in(1, 4);
+            let xd = Mat::from_vec(nd, d, g.normal_vec(nd * d));
+            let xu = Mat::from_vec(nu, d, g.normal_vec(nu * d));
+            let p = cluster_partition(&xd, &xu, m, g.rng());
+            assert!(is_even_partition(&p.d_blocks, nd));
+            assert!(is_even_partition(&p.u_blocks, nu));
+            assert_eq!(p.centers.len(), m);
+            assert!(p.centers.iter().all(|&c| c < nd));
+        });
+    }
+
+    /// Mean squared distance of points to their block's center.
+    fn within_block_sqdist(xd: &Mat, blocks: &[Vec<usize>], centers: &[usize]) -> f64 {
+        let mut s = 0.0;
+        let mut n = 0.0;
+        for (b, blk) in blocks.iter().enumerate() {
+            for &i in blk {
+                for c in 0..xd.cols {
+                    let diff = xd[(i, c)] - xd[(centers[b], c)];
+                    s += diff * diff;
+                }
+                n += 1.0;
+            }
+        }
+        s / n
+    }
+
+    #[test]
+    fn clustering_beats_random_partition_on_locality() {
+        // Two well-separated blobs. The paper's scheme can still draw both
+        // centers from one blob (random pick per initial block), so the
+        // guarantee is statistical: averaged over seeds, nearest-center
+        // assignment puts points much closer to their center than a
+        // random even partition does.
+        let n = 40;
+        let mut cluster_cost = 0.0;
+        let mut random_cost = 0.0;
+        for seed in 0..10 {
+            let mut rng = Pcg64::seed(100 + seed);
+            let mut xd = Mat::zeros(n, 2);
+            for i in 0..n {
+                let offset = if i < n / 2 { -10.0 } else { 10.0 };
+                xd[(i, 0)] = offset + rng.normal() * 0.1;
+                xd[(i, 1)] = rng.normal() * 0.1;
+            }
+            let xu = xd.clone();
+            let p = cluster_partition(&xd, &xu, 2, &mut rng);
+            cluster_cost += within_block_sqdist(&xd, &p.d_blocks, &p.centers);
+            let rp = random_partition(n, 2, &mut rng);
+            random_cost += within_block_sqdist(&xd, &rp, &p.centers);
+        }
+        assert!(
+            cluster_cost < random_cost,
+            "cluster {cluster_cost} vs random {random_cost}"
+        );
+    }
+
+    #[test]
+    fn is_even_partition_detects_violations() {
+        assert!(is_even_partition(&[vec![0, 1], vec![2, 3]], 4));
+        assert!(!is_even_partition(&[vec![0, 1], vec![1, 2]], 4)); // dup
+        assert!(!is_even_partition(&[vec![0], vec![1, 2]], 3)); // uneven
+        assert!(!is_even_partition(&[vec![0, 5]], 2)); // out of range
+        assert!(!is_even_partition(&[vec![0], vec![1]], 3)); // incomplete
+    }
+
+    #[test]
+    fn single_machine_gets_everything() {
+        let mut rng = Pcg64::seed(4);
+        let blocks = random_partition(8, 1, &mut rng);
+        assert_eq!(blocks.len(), 1);
+        assert!(is_even_partition(&blocks, 8));
+    }
+}

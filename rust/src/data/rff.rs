@@ -1,0 +1,123 @@
+//! Random-Fourier-feature (RFF) GP sampler (Rahimi & Recht 2007).
+//!
+//! Drawing an exact GP sample at n points costs O(n³); the synthetic
+//! datasets need smooth latent fields at n ≈ 10⁴–10⁵, so we sample from
+//! the RFF approximation instead: for the ARD-SE kernel,
+//! `f(x) = sqrt(2·sf2/m) · Σ_j a_j · cos(w_j·x + b_j)` with
+//! `w_j ~ N(0, diag(1/ls²))`, `b_j ~ U[0, 2π)`, `a_j ~ N(0,1)` is a GP
+//! draw whose covariance converges to the SE kernel as m → ∞.
+
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// A fixed draw of RFF weights defining one sampled function.
+#[derive(Debug, Clone)]
+pub struct RffSampler {
+    /// m×d frequency matrix (rows w_j, already scaled by 1/ls).
+    w: Mat,
+    /// phase offsets b_j.
+    b: Vec<f64>,
+    /// amplitudes a_j.
+    a: Vec<f64>,
+    /// sqrt(2·sf2/m).
+    scale: f64,
+}
+
+impl RffSampler {
+    /// Draw a function from GP(0, k_hyp) using `m` Fourier features.
+    pub fn draw(hyp: &SeArd, m: usize, rng: &mut Pcg64) -> RffSampler {
+        let d = hyp.dim();
+        let inv_ls: Vec<f64> = hyp.log_ls.iter().map(|l| (-l).exp()).collect();
+        let mut w = Mat::zeros(m, d);
+        for j in 0..m {
+            for c in 0..d {
+                w[(j, c)] = rng.normal() * inv_ls[c];
+            }
+        }
+        let b = (0..m)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        let a = rng.normals(m);
+        RffSampler {
+            w,
+            b,
+            a,
+            scale: (2.0 * hyp.sf2() / m as f64).sqrt(),
+        }
+    }
+
+    /// Evaluate the sampled function at one point.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for j in 0..self.b.len() {
+            let phase = crate::linalg::dot(self.w.row(j), x) + self.b[j];
+            s += self.a[j] * phase.cos();
+        }
+        self.scale * s
+    }
+
+    /// Evaluate at every row of `x`.
+    pub fn eval_all(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows).map(|i| self.eval(x.row(i))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empirical covariance of RFF draws approximates the SE kernel.
+    #[test]
+    fn covariance_converges_to_kernel() {
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 1e-6);
+        let mut rng = Pcg64::seed(42);
+        let x1 = [0.0, 0.0];
+        let x2 = [0.7, -0.3];
+        let n_draws = 400;
+        let mut sum11 = 0.0;
+        let mut sum12 = 0.0;
+        for _ in 0..n_draws {
+            let s = RffSampler::draw(&hyp, 256, &mut rng);
+            let f1 = s.eval(&x1);
+            let f2 = s.eval(&x2);
+            sum11 += f1 * f1;
+            sum12 += f1 * f2;
+        }
+        let var = sum11 / n_draws as f64;
+        let cov = sum12 / n_draws as f64;
+        assert!((var - hyp.sf2()).abs() < 0.15, "var={var}");
+        assert!((cov - hyp.k(&x1, &x2)).abs() < 0.15, "cov={cov}");
+    }
+
+    #[test]
+    fn smoothness_with_long_lengthscale() {
+        let hyp = SeArd::isotropic(1, 5.0, 1.0, 1e-6);
+        let mut rng = Pcg64::seed(7);
+        let s = RffSampler::draw(&hyp, 512, &mut rng);
+        // nearby points give nearby values
+        let f0 = s.eval(&[0.0]);
+        let f1 = s.eval(&[0.05]);
+        assert!((f0 - f1).abs() < 0.1, "not smooth: {f0} vs {f1}");
+    }
+
+    #[test]
+    fn eval_all_matches_eval() {
+        let hyp = SeArd::isotropic(3, 1.0, 2.0, 1e-6);
+        let mut rng = Pcg64::seed(9);
+        let s = RffSampler::draw(&hyp, 64, &mut rng);
+        let x = Mat::from_vec(4, 3, rng.normals(12));
+        let all = s.eval_all(&x);
+        for i in 0..4 {
+            assert_eq!(all[i], s.eval(x.row(i)));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 1e-6);
+        let s1 = RffSampler::draw(&hyp, 32, &mut Pcg64::seed(3));
+        let s2 = RffSampler::draw(&hyp, 32, &mut Pcg64::seed(3));
+        assert_eq!(s1.eval(&[0.3, 0.4]), s2.eval(&[0.3, 0.4]));
+    }
+}

@@ -1,0 +1,150 @@
+//! FGP — the exact full Gaussian process (Section 2), the paper's
+//! baseline: cubic-time fit, all-data predictions via eqs. (1)-(2).
+
+use super::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::{cho_solve_vec, cholesky, matvec, solve_lower_mat, Mat};
+
+/// An exact GP regressor fitted on `(X_D, y_D)`.
+#[derive(Debug, Clone)]
+pub struct FullGp {
+    hyp: SeArd,
+    xd: Mat,
+    /// chol(Σ_DD + jitter)
+    l: Mat,
+    /// α = Σ_DD⁻¹ (y − μ)
+    alpha: Vec<f64>,
+    /// prior mean (empirical train mean)
+    pub y_mean: f64,
+}
+
+impl FullGp {
+    /// Fit: one O(n³) Cholesky of Σ_DD.
+    pub fn fit(hyp: &SeArd, xd: &Mat, y: &[f64]) -> FullGp {
+        assert_eq!(xd.rows, y.len());
+        let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+        let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        let sigma = hyp.cov_same(xd, true);
+        let l = cholesky(&sigma).expect("Σ_DD not SPD");
+        let alpha = cho_solve_vec(&l, &centered);
+        FullGp { hyp: hyp.clone(), xd: xd.clone(), l, alpha, y_mean }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.xd.rows
+    }
+
+    /// Predict eqs. (1)-(2) (diagonal covariance).
+    pub fn predict(&self, xu: &Mat) -> Prediction {
+        let k_ud = self.hyp.cov_cross(xu, &self.xd); // (U, n)
+        let mut mean = matvec(&k_ud, &self.alpha);
+        for m in mean.iter_mut() {
+            *m += self.y_mean;
+        }
+        // diag(K_ud Σ⁻¹ K_du) via W = L⁻¹ K_du
+        let w = solve_lower_mat(&self.l, &k_ud.transpose()); // (n, U)
+        let prior = self.hyp.prior_var();
+        let var = (0..xu.rows)
+            .map(|i| {
+                let t: f64 = (0..self.xd.rows).map(|r| w[(r, i)] * w[(r, i)]).sum();
+                prior - t
+            })
+            .collect();
+        Prediction { mean, var }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::prop_check;
+    use crate::util::Pcg64;
+
+    fn hyp1d() -> SeArd {
+        SeArd::isotropic(1, 0.8, 1.0, 1e-3)
+    }
+
+    #[test]
+    fn interpolates_training_data() {
+        // tiny noise → predictions at training inputs ≈ training outputs
+        let hyp = hyp1d();
+        let xd = Mat::from_vec(8, 1, (0..8).map(|i| i as f64 * 0.5).collect());
+        let y: Vec<f64> = (0..8).map(|i| (i as f64 * 0.5).sin() + 2.0).collect();
+        let gp = FullGp::fit(&hyp, &xd, &y);
+        let pred = gp.predict(&xd);
+        for i in 0..8 {
+            assert!((pred.mean[i] - y[i]).abs() < 0.05, "i={i}");
+            // posterior variance at observed points ≈ noise level
+            assert!(pred.var[i] < 0.1);
+        }
+    }
+
+    #[test]
+    fn reverts_to_prior_far_away() {
+        let hyp = hyp1d();
+        let xd = Mat::from_vec(5, 1, (0..5).map(|i| i as f64 * 0.3).collect());
+        let y = vec![5.0, 5.5, 6.0, 5.5, 5.0];
+        let gp = FullGp::fit(&hyp, &xd, &y);
+        let far = Mat::from_vec(1, 1, vec![100.0]);
+        let pred = gp.predict(&far);
+        // mean reverts to the train mean, variance to the prior
+        assert!((pred.mean[0] - gp.y_mean).abs() < 1e-6);
+        assert!((pred.var[0] - hyp.prior_var()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn variance_shrinks_near_data() {
+        let hyp = hyp1d();
+        let mut rng = Pcg64::seed(3);
+        let xd = Mat::from_vec(10, 1, (0..10).map(|_| rng.uniform_in(-2.0, 2.0)).collect());
+        let y = rng.normals(10);
+        let gp = FullGp::fit(&hyp, &xd, &y);
+        let near = Mat::from_vec(1, 1, vec![xd[(0, 0)] + 0.01]);
+        let far = Mat::from_vec(1, 1, vec![50.0]);
+        assert!(gp.predict(&near).var[0] < gp.predict(&far).var[0]);
+    }
+
+    #[test]
+    fn posterior_variance_bounded_by_prior() {
+        prop_check("fgp-var-bounds", 8, |g| {
+            let n = g.usize_in(2, 12);
+            let d = g.usize_in(1, 3);
+            let hyp = SeArd {
+                log_ls: g.uniform_vec(d, -0.5, 0.5),
+                log_sf2: g.f64_in(-0.5, 0.5),
+                log_sn2: g.f64_in(-3.0, -1.0),
+            };
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let gp = FullGp::fit(&hyp, &xd, &y);
+            let xu = Mat::from_vec(4, d, g.uniform_vec(4 * d, -3.0, 3.0));
+            let pred = gp.predict(&xu);
+            for &v in &pred.var {
+                assert!(v > 0.0 && v <= hyp.prior_var() + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn mean_is_exact_gp_solve() {
+        // verify against the direct formula μ = K_ud (K_dd+sn2 I)⁻¹ y
+        let hyp = hyp1d();
+        let xd = Mat::from_vec(6, 1, vec![0.0, 0.3, 0.9, 1.4, 2.0, 2.7]);
+        let y = vec![1.0, 0.5, -0.2, 0.1, 0.8, 1.5];
+        let gp = FullGp::fit(&hyp, &xd, &y);
+        let xu = Mat::from_vec(2, 1, vec![0.5, 1.7]);
+        let pred = gp.predict(&xu);
+
+        let mean_y = y.iter().sum::<f64>() / 6.0;
+        let centered: Vec<f64> = y.iter().map(|v| v - mean_y).collect();
+        let sigma = hyp.cov_same(&xd, true);
+        let l = cholesky(&sigma).unwrap();
+        let alpha = cho_solve_vec(&l, &centered);
+        let k_ud = hyp.cov_cross(&xu, &xd);
+        let want: Vec<f64> = matvec(&k_ud, &alpha)
+            .iter()
+            .map(|v| v + mean_y)
+            .collect();
+        crate::testkit::assert_all_close(&pred.mean, &want, 1e-12, 1e-12);
+    }
+}

@@ -1,0 +1,243 @@
+//! Centralized ICF-based GP (Section 4), eqs. (28)-(29) — the sequential
+//! counterpart of pICF-based GP (Theorem 3).
+//!
+//! Approximates Σ_DD ≈ FᵀF + sn2·I with a rank-R incomplete Cholesky of
+//! the noise-free Gram matrix, then predicts through the Woodbury
+//! identity — the same algebra Definitions 6–9 distribute.
+
+use super::summaries::{
+    icf_finalize, icf_global, icf_local, icf_predict_component,
+    IcfGlobalSummary, IcfLocalSummary,
+};
+use super::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::icf::KernelSource;
+use crate::linalg::{icf, Mat};
+
+/// Implicit noise-free Gram-matrix source for ICF (never materializes
+/// the n×n matrix; the paper's point is R ≪ n).
+pub struct GramSource<'a> {
+    pub hyp: &'a SeArd,
+    pub x: &'a Mat,
+}
+
+impl KernelSource for GramSource<'_> {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+    fn diag(&self, _i: usize) -> f64 {
+        self.hyp.sf2()
+    }
+    fn row(&self, i: usize, out: &mut [f64]) {
+        let xi = self.x.row(i);
+        for j in 0..self.x.rows {
+            out[j] = self.hyp.k(xi, self.x.row(j));
+        }
+    }
+}
+
+/// Fitted centralized ICF-based GP.
+#[derive(Debug, Clone)]
+pub struct IcfGp {
+    hyp: SeArd,
+    /// per machine: (X_m, centered y_m, F_m slab)
+    blocks: Vec<(Mat, Vec<f64>, Mat)>,
+    /// achieved rank (≤ requested; ICF may converge early)
+    pub rank: usize,
+    pub y_mean: f64,
+}
+
+impl IcfGp {
+    /// Fit: rank-R pivoted ICF of K_DD, then stash per-block slabs F_m
+    /// exactly as Step 2 of the paper distributes them.
+    pub fn fit(
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        rank: usize,
+        d_blocks: &[Vec<usize>],
+    ) -> IcfGp {
+        assert_eq!(xd.rows, y.len());
+        let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+        let src = GramSource { hyp, x: xd };
+        let factor = icf(&src, rank, 0.0);
+        let r = factor.f.rows;
+        let blocks = d_blocks
+            .iter()
+            .map(|blk| {
+                let xm = xd.select_rows(blk);
+                let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
+                // F_m = F[:, blk] (column slab in the block's row order)
+                let mut f_m = Mat::zeros(r, blk.len());
+                for row in 0..r {
+                    for (c, &i) in blk.iter().enumerate() {
+                        f_m[(row, c)] = factor.f[(row, i)];
+                    }
+                }
+                (xm, ym, f_m)
+            })
+            .collect();
+        IcfGp { hyp: hyp.clone(), blocks, rank: r, y_mean }
+    }
+
+    /// Steps 3–6 executed serially: local summaries → global summary →
+    /// predictive components → finalize.
+    pub fn predict(&self, xu: &Mat) -> Prediction {
+        let locals: Vec<IcfLocalSummary> = self
+            .blocks
+            .iter()
+            .map(|(xm, ym, f_m)| icf_local(&self.hyp, xm, ym, xu, f_m))
+            .collect();
+        let refs: Vec<&IcfLocalSummary> = locals.iter().collect();
+        let global: IcfGlobalSummary = icf_global(&self.hyp, &refs);
+        let comps: Vec<Prediction> = self
+            .blocks
+            .iter()
+            .zip(locals.iter())
+            .map(|((xm, ym, _), loc)| {
+                icf_predict_component(&self.hyp, xu, xm, ym, &loc.s_dot, &global)
+            })
+            .collect();
+        let crefs: Vec<&Prediction> = comps.iter().collect();
+        let mut p = icf_finalize(&self.hyp, xu.rows, &crefs);
+        p.shift_mean(self.y_mean);
+        p
+    }
+}
+
+/// Literal transcription of eqs. (28)-(29) with an explicit factor F —
+/// O(|D|³) dense oracle used only by tests (Theorem 3 ground truth).
+pub fn icf_direct_oracle(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xu: &Mat,
+    f: &Mat,
+) -> Prediction {
+    use crate::linalg::{cho_solve_mat, cho_solve_vec, cholesky, matmul_tn, matvec};
+    let n = xd.rows;
+    let y_mean = y.iter().sum::<f64>() / n as f64;
+    let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    // A = FᵀF + sn2 I  (n×n dense — test-only)
+    let mut a = matmul_tn(f, f);
+    a.add_diag(hyp.sn2());
+    let l = cholesky(&a).expect("FᵀF + sn2 I not SPD");
+    let k_ud = hyp.cov_cross(xu, xd);
+    let mut mean = matvec(&k_ud, &cho_solve_vec(&l, &centered));
+    for v in mean.iter_mut() {
+        *v += y_mean;
+    }
+    let w = cho_solve_mat(&l, &k_ud.transpose()); // (n, U)
+    let prior = hyp.prior_var();
+    let var = (0..xu.rows)
+        .map(|i| {
+            let t: f64 = (0..n).map(|r| k_ud[(i, r)] * w[(r, i)]).sum();
+            prior - t
+        })
+        .collect();
+    Prediction { mean, var }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_partition;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_all_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.3, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// Theorem 3: the distributed-form implementation equals the literal
+    /// eqs. (28)-(29) with the same factor F.
+    #[test]
+    fn theorem3_block_equals_direct() {
+        prop_check("thm3-icf", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let u = g.usize_in(1, 5);
+            let rank = g.usize_in(1, n + 1).min(n);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+
+            let model = IcfGp::fit(&hyp, &xd, &y, rank, &d_blocks);
+            let got = model.predict(&xu);
+
+            // reconstruct the full F in training-row order for the oracle
+            let src = GramSource { hyp: &hyp, x: &xd };
+            let factor = icf(&src, rank, 0.0);
+            let want = icf_direct_oracle(&hyp, &xd, &y, &xu, &factor.f);
+            assert_all_close(&got.mean, &want.mean, 1e-6, 1e-6);
+            assert_all_close(&got.var, &want.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// Full rank R = n recovers FGP exactly (ICF becomes exact Cholesky).
+    #[test]
+    fn full_rank_recovers_fgp() {
+        let n = 12;
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.05);
+        let xd = Mat::from_vec(n, 1, (0..n).map(|i| i as f64 * 0.37).collect());
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let blocks = random_partition(n, 3, &mut crate::util::Pcg64::seed(1));
+        let model = IcfGp::fit(&hyp, &xd, &y, n, &blocks);
+        let fgp = crate::gp::FullGp::fit(&hyp, &xd, &y);
+        let xu = Mat::from_vec(5, 1, vec![0.1, 0.9, 1.8, 2.9, 4.0]);
+        let got = model.predict(&xu);
+        let want = fgp.predict(&xu);
+        // jitter policies differ slightly (ICF has none on Σ_DD) — modest tol
+        assert_all_close(&got.mean, &want.mean, 1e-5, 1e-5);
+        assert_all_close(&got.var, &want.var, 1e-5, 1e-5);
+    }
+
+    /// Small rank can produce non-PSD variance (the paper's Remark 2
+    /// after Theorem 3) but larger ranks must fix it.
+    #[test]
+    fn rank_controls_variance_positivity() {
+        let mut rng = crate::util::Pcg64::seed(5);
+        let n = 30;
+        let hyp = SeArd::isotropic(2, 0.4, 1.0, 1e-3);
+        let xd = Mat::from_vec(n, 2, rng.normals(n * 2));
+        let y = rng.normals(n);
+        let blocks = random_partition(n, 5, &mut rng);
+        let xu = Mat::from_vec(8, 2, rng.normals(16));
+        let lo = IcfGp::fit(&hyp, &xd, &y, 2, &blocks).predict(&xu);
+        let hi = IcfGp::fit(&hyp, &xd, &y, n, &blocks).predict(&xu);
+        let neg_lo = crate::metrics::frac_nonpositive_var(&lo.var);
+        let neg_hi = crate::metrics::frac_nonpositive_var(&hi.var);
+        assert!(neg_hi <= neg_lo);
+        assert_eq!(neg_hi, 0.0);
+    }
+
+    /// Prediction error decreases with rank on smooth data.
+    #[test]
+    fn error_decreases_with_rank() {
+        let n = 40;
+        let hyp = SeArd::isotropic(1, 0.8, 1.0, 1e-4);
+        let xd = Mat::from_vec(n, 1, (0..n).map(|i| i as f64 * 0.1).collect());
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1 * 2.0).sin()).collect();
+        let blocks = random_partition(n, 4, &mut crate::util::Pcg64::seed(3));
+        let xu = Mat::from_vec(6, 1, vec![0.15, 0.85, 1.55, 2.25, 2.95, 3.65]);
+        let y_true: Vec<f64> = vec![0.15f64, 0.85, 1.55, 2.25, 2.95, 3.65]
+            .iter()
+            .map(|&x| (2.0 * x).sin())
+            .collect();
+        let mut prev = f64::INFINITY;
+        for rank in [2, 8, 24] {
+            let p = IcfGp::fit(&hyp, &xd, &y, rank, &blocks).predict(&xu);
+            let e = crate::metrics::rmse(&y_true, &p.mean);
+            assert!(e <= prev + 1e-6, "rank {rank}: {e} > {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.05);
+    }
+}

@@ -1,0 +1,95 @@
+//! Gaussian process regression: the exact FGP baseline, the centralized
+//! low-rank approximations (PITC, PIC, ICF-based GP), support-set
+//! selection, and marginal-likelihood hyperparameter learning.
+//!
+//! The *parallel* versions (pPITC/pPIC/pICF) live in [`crate::parallel`];
+//! they reuse the block math in [`summaries`], which mirrors the AOT
+//! graphs in `python/compile/model.py` constant-for-constant so native
+//! and PJRT execution agree numerically.
+
+pub mod fgp;
+pub mod icf_gp;
+pub mod likelihood;
+pub mod pic;
+pub mod pitc;
+pub mod summaries;
+pub mod support;
+
+pub use fgp::FullGp;
+
+/// A predictive Gaussian marginal per test point: mean + variance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+impl Prediction {
+    pub fn empty() -> Prediction {
+        Prediction { mean: Vec::new(), var: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    /// Concatenate block predictions in order.
+    pub fn concat(blocks: Vec<Prediction>) -> Prediction {
+        let mut out = Prediction::empty();
+        for b in blocks {
+            out.mean.extend(b.mean);
+            out.var.extend(b.var);
+        }
+        out
+    }
+
+    /// Scatter block predictions back to original positions: `idx[k]`
+    /// lists the global row of each entry in `blocks[k]`.
+    pub fn scatter(blocks: &[Prediction], idx: &[Vec<usize>], n: usize) -> Prediction {
+        let mut mean = vec![0.0; n];
+        let mut var = vec![0.0; n];
+        for (b, block_idx) in blocks.iter().zip(idx.iter()) {
+            assert_eq!(b.len(), block_idx.len());
+            for (k, &g) in block_idx.iter().enumerate() {
+                mean[g] = b.mean[k];
+                var[g] = b.var[k];
+            }
+        }
+        Prediction { mean, var }
+    }
+
+    /// Shift means by a constant (un-centering).
+    pub fn shift_mean(&mut self, delta: f64) {
+        for m in self.mean.iter_mut() {
+            *m += delta;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_and_scatter() {
+        let a = Prediction { mean: vec![1.0, 2.0], var: vec![0.1, 0.2] };
+        let b = Prediction { mean: vec![3.0], var: vec![0.3] };
+        let c = Prediction::concat(vec![a.clone(), b.clone()]);
+        assert_eq!(c.mean, vec![1.0, 2.0, 3.0]);
+
+        let s = Prediction::scatter(&[a, b], &[vec![2, 0], vec![1]], 3);
+        assert_eq!(s.mean, vec![2.0, 3.0, 1.0]);
+        assert_eq!(s.var, vec![0.2, 0.3, 0.1]);
+    }
+
+    #[test]
+    fn shift_mean() {
+        let mut p = Prediction { mean: vec![1.0, -1.0], var: vec![0.0, 0.0] };
+        p.shift_mean(10.0);
+        assert_eq!(p.mean, vec![11.0, 9.0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! Centralized PIC approximation (Snelson 2007), eqs. (15)-(18) — the
+//! sequential counterpart of pPIC (Theorem 2).
+//!
+//! PIC = PITC + exact cross-covariance on each machine's own
+//! (D_m, U_m) pair, so predictions are tied to the test partition: block
+//! U_m is predicted with machine m's local data. Numerically identical
+//! to pPIC by Theorem 2 (tested against the literal eqs. (15)-(16)).
+
+use super::summaries::{
+    chol_global, global_summary, local_summary, ppic_predict, GlobalSummary,
+    LocalSummary, SupportContext,
+};
+use super::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+
+/// Fitted centralized PIC model (keeps per-block local data).
+#[derive(Debug, Clone)]
+pub struct PicGp {
+    hyp: SeArd,
+    ctx: SupportContext,
+    global: GlobalSummary,
+    l_g: Mat,
+    /// per machine: (X_m, centered y_m, local summary)
+    blocks: Vec<(Mat, Vec<f64>, LocalSummary)>,
+    pub y_mean: f64,
+}
+
+impl PicGp {
+    pub fn fit(
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+    ) -> PicGp {
+        assert_eq!(xd.rows, y.len());
+        let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+        let ctx = SupportContext::new(hyp, xs);
+        let blocks: Vec<_> = d_blocks
+            .iter()
+            .map(|blk| {
+                let xm = xd.select_rows(blk);
+                let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
+                let loc = local_summary(hyp, &xm, &ym, &ctx);
+                (xm, ym, loc)
+            })
+            .collect();
+        let refs: Vec<_> = blocks.iter().map(|(_, _, l)| l).collect();
+        let global = global_summary(&ctx, &refs);
+        let l_g = chol_global(&global);
+        PicGp { hyp: hyp.clone(), ctx, global, l_g, blocks, y_mean }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Predict test block `u_block` rows of `xu` with machine `m`'s view
+    /// (Definition 5). `u_blocks[m]` must index into `xu`.
+    pub fn predict_block(&self, xu_m: &Mat, m: usize) -> Prediction {
+        let (xm, ym, loc) = &self.blocks[m];
+        let mut p = ppic_predict(
+            &self.hyp, xu_m, xm, ym, loc, &self.ctx, &self.global, &self.l_g,
+        );
+        p.shift_mean(self.y_mean);
+        p
+    }
+
+    /// Predict the full test set given its Definition-1 partition.
+    pub fn predict(&self, xu: &Mat, u_blocks: &[Vec<usize>]) -> Prediction {
+        assert_eq!(u_blocks.len(), self.blocks.len());
+        let preds: Vec<Prediction> = u_blocks
+            .iter()
+            .enumerate()
+            .map(|(m, blk)| self.predict_block(&xu.select_rows(blk), m))
+            .collect();
+        Prediction::scatter(&preds, u_blocks, xu.rows)
+    }
+}
+
+/// Literal transcription of eqs. (15)-(18) — O(|D|³) dense oracle used
+/// only by tests (Theorem 2 ground truth).
+pub fn pic_direct_oracle(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    u_blocks: &[Vec<usize>],
+) -> Prediction {
+    use crate::linalg::{cho_solve_mat, cho_solve_vec, cholesky, matmul, matvec};
+    let n = xd.rows;
+    let y_mean = y.iter().sum::<f64>() / n as f64;
+    let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+
+    let ctx = SupportContext::new(hyp, xs);
+    let k_ds = hyp.cov_cross(xd, xs);
+    let k_us = hyp.cov_cross(xu, xs);
+    let kss_inv_ksd = cho_solve_mat(&ctx.l_ss, &k_ds.transpose());
+    let gamma_dd = matmul(&k_ds, &kss_inv_ksd);
+    let gamma_ud = matmul(&k_us, &kss_inv_ksd);
+
+    let sigma_dd = hyp.cov_same(xd, false);
+    let mut a = gamma_dd.clone();
+    for blk in d_blocks {
+        for &i in blk {
+            for &j in blk {
+                a[(i, j)] = sigma_dd[(i, j)];
+            }
+            a[(i, i)] += hyp.jitter();
+        }
+    }
+    let l_a = cholesky(&a).expect("Γ_DD + Λ not SPD");
+
+    // Γ̃_UD: exact cross-covariance on own (U_m, D_m) blocks — eq. (18)
+    let mut gt = gamma_ud.clone();
+    let k_ud = hyp.cov_cross(xu, xd);
+    for (m, ub) in u_blocks.iter().enumerate() {
+        for &ui in ub {
+            for &di in &d_blocks[m] {
+                gt[(ui, di)] = k_ud[(ui, di)];
+            }
+        }
+    }
+
+    let mut mean = matvec(&gt, &cho_solve_vec(&l_a, &centered));
+    for v in mean.iter_mut() {
+        *v += y_mean;
+    }
+    let w = cho_solve_mat(&l_a, &gt.transpose()); // (n, U)
+    let prior = hyp.prior_var();
+    let var = (0..xu.rows)
+        .map(|i| {
+            let t: f64 = (0..n).map(|r| gt[(i, r)] * w[(r, i)]).sum();
+            prior - t
+        })
+        .collect();
+    Prediction { mean, var }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_partition;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_all_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.3, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// Theorem 2: the distributed-form implementation (with the DESIGN.md
+    /// variance erratum fix) equals the literal eqs. (15)-(16).
+    #[test]
+    fn theorem2_block_equals_direct() {
+        prop_check("thm2-pic", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let u = m * g.usize_in(1, 3);
+            let s = g.usize_in(2, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+            let u_blocks = random_partition(u, m, g.rng());
+
+            let model = PicGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+            let got = model.predict(&xu, &u_blocks);
+            let want =
+                pic_direct_oracle(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks);
+            assert_all_close(&got.mean, &want.mean, 1e-6, 1e-6);
+            assert_all_close(&got.var, &want.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// PIC with S = D reduces to FGP as sn2 → 0 (see note in pitc.rs on
+    /// the paper-literal noisy Σ_SS convention).
+    #[test]
+    fn s_equals_d_recovers_fgp() {
+        let n = 10;
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 1e-6);
+        let xd = Mat::from_vec(n, 1, (0..n).map(|i| i as f64 * 0.4).collect());
+        let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.4).cos()).collect();
+        let d_blocks = vec![(0..5).collect::<Vec<_>>(), (5..10).collect()];
+        let model = PicGp::fit(&hyp, &xd, &y, &xd, &d_blocks);
+        let xu = Mat::from_vec(4, 1, vec![0.2, 1.1, 2.3, 3.3]);
+        let u_blocks = vec![vec![0, 1], vec![2, 3]];
+        let got = model.predict(&xu, &u_blocks);
+        let fgp = crate::gp::FullGp::fit(&hyp, &xd, &y);
+        let want = fgp.predict(&xu);
+        assert_all_close(&got.mean, &want.mean, 1e-4, 1e-4);
+        assert_all_close(&got.var, &want.var, 1e-4, 1e-4);
+    }
+
+    /// PIC beats PITC on data where local structure matters (short
+    /// length-scale relative to the support coverage).
+    #[test]
+    fn pic_beats_pitc_on_local_structure() {
+        let mut rng = crate::util::Pcg64::seed(77);
+        let n = 40;
+        let hyp = SeArd::isotropic(1, 0.15, 1.0, 1e-3);
+        let xvals: Vec<f64> = (0..n).map(|i| i as f64 * 0.1).collect();
+        let xd = Mat::from_vec(n, 1, xvals.clone());
+        let y: Vec<f64> = xvals.iter().map(|&x| (7.0 * x).sin()).collect();
+        // sparse support: 4 points — PITC loses the local detail
+        let xs = Mat::from_vec(4, 1, vec![0.0, 1.3, 2.6, 3.9]);
+        // contiguous blocks so U_m sits inside D_m's territory
+        let d_blocks: Vec<Vec<usize>> =
+            (0..4).map(|m| (m * 10..(m + 1) * 10).collect()).collect();
+        let model = PicGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+        let pitc = crate::gp::pitc::PitcGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+
+        // test points near block centers
+        let xu_vals: Vec<f64> = (0..8).map(|i| 0.25 + 0.5 * i as f64).collect();
+        let xu = Mat::from_vec(8, 1, xu_vals.clone());
+        let u_blocks: Vec<Vec<usize>> =
+            (0..4).map(|m| vec![2 * m, 2 * m + 1]).collect();
+        let y_true: Vec<f64> = xu_vals.iter().map(|&x| (7.0 * x).sin()).collect();
+
+        let pic_pred = model.predict(&xu, &u_blocks);
+        let pitc_pred = pitc.predict(&xu);
+        let pic_rmse = crate::metrics::rmse(&y_true, &pic_pred.mean);
+        let pitc_rmse = crate::metrics::rmse(&y_true, &pitc_pred.mean);
+        assert!(
+            pic_rmse < pitc_rmse,
+            "PIC {pic_rmse:.4} should beat PITC {pitc_rmse:.4}"
+        );
+        let _ = rng.next_u64();
+    }
+}

@@ -1,0 +1,479 @@
+//! Block-level summary math shared by the centralized approximations and
+//! the parallel protocols — the rust mirror of `python/compile/model.py`.
+//!
+//! Every function here corresponds 1:1 to an AOT graph (Definitions 2–8
+//! of the paper), with identical jitter conventions, so the native
+//! backend and the PJRT artifacts are interchangeable on the hot path.
+
+use super::Prediction;
+use crate::kernel::{SeArd, JITTER_SCALE};
+use crate::linalg::{
+    cho_solve_mat, cho_solve_vec, cholesky, matmul, matmul_tn, matvec,
+    solve_lower_mat, Mat,
+};
+
+/// Machine m's local summary (Definition 2) plus the cached Cholesky
+/// factor of `Σ_{D_m D_m | S}` reused by pPIC.
+#[derive(Debug, Clone)]
+pub struct LocalSummary {
+    /// `ẏ_S^m` — eq. (3)
+    pub y_dot: Vec<f64>,
+    /// `Σ̇_SS^m` — eq. (4)
+    pub s_dot: Mat,
+    /// chol(Σ_{D_m D_m | S})
+    pub l_m: Mat,
+}
+
+impl LocalSummary {
+    /// Bytes a machine sends to the master (ẏ_S + Σ̇_SS): the paper's
+    /// O(|S|²) message.
+    pub fn message_bytes(&self) -> usize {
+        (self.y_dot.len() + self.s_dot.data.len()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// The global summary (Definition 3): `(ÿ_S, Σ̈_SS)`.
+#[derive(Debug, Clone)]
+pub struct GlobalSummary {
+    pub y: Vec<f64>,
+    pub s: Mat,
+}
+
+impl GlobalSummary {
+    pub fn message_bytes(&self) -> usize {
+        (self.y.len() + self.s.data.len()) * std::mem::size_of::<f64>()
+    }
+}
+
+/// Support-set context precomputed once and shared by all machines:
+/// `Σ_SS` (with noise, paper-literal) and its Cholesky factor.
+#[derive(Debug, Clone)]
+pub struct SupportContext {
+    pub xs: Mat,
+    /// Σ_SS = K_SS + sn2·I (no jitter) — the term entering eq. (6).
+    pub sigma_ss: Mat,
+    /// chol(K_SS + sn2·I + jitter·I)
+    pub l_ss: Mat,
+}
+
+impl SupportContext {
+    pub fn new(hyp: &SeArd, xs: &Mat) -> SupportContext {
+        let sigma_ss = hyp.cov_same(xs, false);
+        let for_chol = hyp.cov_same(xs, true);
+        let l_ss = cholesky(&for_chol).expect("Σ_SS not SPD");
+        SupportContext { xs: xs.clone(), sigma_ss, l_ss }
+    }
+
+    pub fn size(&self) -> usize {
+        self.xs.rows
+    }
+}
+
+/// Definition 2: build machine m's local summary from its block.
+/// Mirror of the `local_summary` AOT graph.
+pub fn local_summary(
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    ctx: &SupportContext,
+) -> LocalSummary {
+    let k_ms = hyp.cov_cross(xm, &ctx.xs); // (B, S)
+    // Q_mm = K_ms · Kss⁻¹ · K_sm  via W = L⁻¹ K_sm
+    let w = solve_lower_mat(&ctx.l_ss, &k_ms.transpose()); // (S, B)
+    let q_mm = matmul_tn(&w, &w); // (B, B)
+    let mut sigma_m = hyp.cov_same(xm, true);
+    sigma_m.sub_assign(&q_mm);
+    let l_m = cholesky(&sigma_m).expect("Σ_mm|S not SPD");
+    let v = cho_solve_vec(&l_m, ym);
+    let y_dot = matvec(&k_ms.transpose(), &v);
+    let z = cho_solve_mat(&l_m, &k_ms); // (B, S)
+    let s_dot = matmul_tn(&k_ms, &z); // (S, S)
+    LocalSummary { y_dot, s_dot, l_m }
+}
+
+/// Definition 3: assimilate local summaries into the global summary.
+pub fn global_summary(ctx: &SupportContext, locals: &[&LocalSummary]) -> GlobalSummary {
+    let s = ctx.size();
+    let mut y = vec![0.0; s];
+    let mut sg = ctx.sigma_ss.clone();
+    for l in locals {
+        assert_eq!(l.y_dot.len(), s);
+        for i in 0..s {
+            y[i] += l.y_dot[i];
+        }
+        sg.add_assign(&l.s_dot);
+    }
+    GlobalSummary { y, s: sg }
+}
+
+/// Incremental assimilation for online learning (§5.2): add one more
+/// machine's local summary to an existing global summary.
+pub fn assimilate(global: &mut GlobalSummary, l: &LocalSummary) {
+    for i in 0..global.y.len() {
+        global.y[i] += l.y_dot[i];
+    }
+    global.s.add_assign(&l.s_dot);
+}
+
+/// Cholesky of the global summary matrix with the absolute jitter used by
+/// the AOT graphs (`JITTER_SCALE`, unscaled — mirrors `model.py`).
+pub fn chol_global(global: &GlobalSummary) -> Mat {
+    let mut sg = global.s.clone();
+    sg.add_diag(JITTER_SCALE);
+    cholesky(&sg).expect("Σ̈_SS not SPD")
+}
+
+/// Definition 4: pPITC predictive distribution for a block U_m.
+/// Mirror of the `ppitc_predict` AOT graph.
+pub fn ppitc_predict(
+    hyp: &SeArd,
+    xu: &Mat,
+    ctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+) -> Prediction {
+    let k_us = hyp.cov_cross(xu, &ctx.xs); // (U, S)
+    let mean = matvec(&k_us, &cho_solve_vec(l_g, &global.y));
+    let w1 = solve_lower_mat(&ctx.l_ss, &k_us.transpose()); // (S, U)
+    let w2 = solve_lower_mat(l_g, &k_us.transpose());
+    let prior = hyp.prior_var();
+    let var = (0..xu.rows)
+        .map(|i| {
+            let t1: f64 = (0..ctx.size()).map(|s| w1[(s, i)] * w1[(s, i)]).sum();
+            let t2: f64 = (0..ctx.size()).map(|s| w2[(s, i)] * w2[(s, i)]).sum();
+            prior - t1 + t2
+        })
+        .collect();
+    Prediction { mean, var }
+}
+
+/// Definition 5: pPIC predictive distribution for machine m's block U_m,
+/// using both the global summary and the machine's own local data.
+/// Mirror of the `ppic_predict` AOT graph (with the DESIGN.md erratum
+/// correction `+ Φ Σ̈⁻¹ Φᵀ` in the variance).
+#[allow(clippy::too_many_arguments)]
+pub fn ppic_predict(
+    hyp: &SeArd,
+    xu: &Mat,
+    xm: &Mat,
+    ym: &[f64],
+    local: &LocalSummary,
+    ctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+) -> Prediction {
+    let s = ctx.size();
+    let u = xu.rows;
+    let k_us = hyp.cov_cross(xu, &ctx.xs); // (U, S)
+    let k_um = hyp.cov_cross(xu, xm); // (U, B)
+    let k_ms = hyp.cov_cross(xm, &ctx.xs); // (B, S)
+
+    // local-data terms (Definition 2 with B = U_m)
+    let v = cho_solve_vec(&local.l_m, ym); // (B,)
+    let y_dot_u = matvec(&k_um, &v); // ẏ_{U_m}^m
+    let z = cho_solve_mat(&local.l_m, &k_ms); // (B, S)
+    let s_dot_us = matmul(&k_um, &z); // Σ̇_US^m (U, S)
+    let t = cho_solve_mat(&local.l_m, &k_um.transpose()); // (B, U)
+    let s_dot_uu_diag: Vec<f64> = (0..u)
+        .map(|i| (0..xm.rows).map(|b| k_um[(i, b)] * t[(b, i)]).sum())
+        .collect();
+
+    // Φ_{U_m S}^m — eq. (14)
+    let kss_inv_sdot = cho_solve_mat(&ctx.l_ss, &local.s_dot); // (S, S)
+    let mut phi_us = matmul(&k_us, &kss_inv_sdot); // (U, S)
+    phi_us.add_assign(&k_us);
+    phi_us.sub_assign(&s_dot_us);
+
+    // mean — eq. (12)
+    let gy = cho_solve_vec(l_g, &global.y);
+    let ky = cho_solve_vec(&ctx.l_ss, &local.y_dot);
+    let mut mean = matvec(&phi_us, &gy);
+    let corr = matvec(&k_us, &ky);
+    for i in 0..u {
+        mean[i] += y_dot_u[i] - corr[i];
+    }
+
+    // variance — eq. (13) corrected (see DESIGN.md "Paper erratum")
+    let p = cho_solve_mat(&ctx.l_ss, &k_us.transpose()); // Kss⁻¹K_su (S,U)
+    let sdot_su_solved = cho_solve_mat(&ctx.l_ss, &s_dot_us.transpose()); // (S,U)
+    let w_g = solve_lower_mat(l_g, &phi_us.transpose()); // (S, U)
+    let prior = hyp.prior_var();
+    let var = (0..u)
+        .map(|i| {
+            let diag1: f64 = (0..s).map(|r| phi_us[(i, r)] * p[(r, i)]).sum();
+            let diag2: f64 =
+                (0..s).map(|r| k_us[(i, r)] * sdot_su_solved[(r, i)]).sum();
+            let diag3: f64 = (0..s).map(|r| w_g[(r, i)] * w_g[(r, i)]).sum();
+            prior - (diag1 - diag2) - s_dot_uu_diag[i] + diag3
+        })
+        .collect();
+    Prediction { mean, var }
+}
+
+// ------------------------------------------------------------------ ICF
+
+/// Machine m's ICF local summary (Definition 6).
+#[derive(Debug, Clone)]
+pub struct IcfLocalSummary {
+    /// `ẏ_m = F_m (y_m - μ_m)` — eq. (19)
+    pub y_dot: Vec<f64>,
+    /// `Σ̇_m = F_m Σ_{D_m U}` — eq. (20), (R × U)
+    pub s_dot: Mat,
+    /// `Φ_m = F_m F_mᵀ` — eq. (21), (R × R)
+    pub phi: Mat,
+}
+
+impl IcfLocalSummary {
+    pub fn message_bytes(&self) -> usize {
+        (self.y_dot.len() + self.s_dot.data.len() + self.phi.data.len())
+            * std::mem::size_of::<f64>()
+    }
+}
+
+/// The ICF global summary (Definition 7): `(ÿ, Σ̈)`.
+#[derive(Debug, Clone)]
+pub struct IcfGlobalSummary {
+    pub y: Vec<f64>,
+    /// (R × U)
+    pub s: Mat,
+}
+
+/// Definition 6 — mirror of the `icf_local` AOT graph. `f_m` is the
+/// machine's (R × B) slab of the ICF factor of the *noise-free* K_DD.
+pub fn icf_local(
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    xu: &Mat,
+    f_m: &Mat,
+) -> IcfLocalSummary {
+    let y_dot = matvec(f_m, ym);
+    let k_mu = hyp.cov_cross(xm, xu); // (B, U)
+    let s_dot = matmul(f_m, &k_mu); // (R, U)
+    let phi = crate::linalg::matmul_nt(f_m, f_m); // (R, R)
+    IcfLocalSummary { y_dot, s_dot, phi }
+}
+
+/// Definition 7 — mirror of the `icf_global` AOT graph.
+pub fn icf_global(hyp: &SeArd, locals: &[&IcfLocalSummary]) -> IcfGlobalSummary {
+    assert!(!locals.is_empty());
+    let r = locals[0].phi.rows;
+    let u = locals[0].s_dot.cols;
+    let mut sum_y = vec![0.0; r];
+    let mut sum_s = Mat::zeros(r, u);
+    let mut phi = Mat::identity(r);
+    let inv_sn2 = 1.0 / hyp.sn2();
+    for l in locals {
+        for i in 0..r {
+            sum_y[i] += l.y_dot[i];
+        }
+        sum_s.add_assign(&l.s_dot);
+        for (p, &q) in phi.data.iter_mut().zip(l.phi.data.iter()) {
+            *p += inv_sn2 * q;
+        }
+    }
+    let l_phi = cholesky(&phi).expect("Φ not SPD");
+    let y = cho_solve_vec(&l_phi, &sum_y);
+    let s = cho_solve_mat(&l_phi, &sum_s);
+    IcfGlobalSummary { y, s }
+}
+
+/// Definition 8 — machine m's predictive *component* (additive), mirror
+/// of the `icf_predict` AOT graph. The master sums components and
+/// finishes with [`icf_finalize`].
+pub fn icf_predict_component(
+    hyp: &SeArd,
+    xu: &Mat,
+    xm: &Mat,
+    ym: &[f64],
+    s_dot_m: &Mat,
+    global: &IcfGlobalSummary,
+) -> Prediction {
+    let inv_sn2 = 1.0 / hyp.sn2();
+    let k_um = hyp.cov_cross(xu, xm); // (U, B)
+    let mut mean = matvec(&k_um, ym);
+    for v in mean.iter_mut() {
+        *v *= inv_sn2;
+    }
+    let st_y = matvec(&s_dot_m.transpose(), &global.y);
+    let u = xu.rows;
+    let r = s_dot_m.rows;
+    for i in 0..u {
+        mean[i] -= inv_sn2 * inv_sn2 * st_y[i];
+    }
+    let var = (0..u)
+        .map(|i| {
+            let kk: f64 = (0..xm.rows).map(|b| k_um[(i, b)] * k_um[(i, b)]).sum();
+            let ss: f64 =
+                (0..r).map(|t| s_dot_m[(t, i)] * global.s[(t, i)]).sum();
+            inv_sn2 * kk - inv_sn2 * inv_sn2 * ss
+        })
+        .collect();
+    Prediction { mean, var }
+}
+
+/// Definition 9: master combines predictive components into the final
+/// distribution: `μ̃ = Σ μ̃^m`, `Σ̃_diag = (sf2+sn2) − Σ σ̃²^m`.
+pub fn icf_finalize(hyp: &SeArd, u: usize, components: &[&Prediction]) -> Prediction {
+    let mut mean = vec![0.0; u];
+    let mut var_sub = vec![0.0; u];
+    for c in components {
+        assert_eq!(c.len(), u);
+        for i in 0..u {
+            mean[i] += c.mean[i];
+            var_sub[i] += c.var[i];
+        }
+    }
+    let prior = hyp.prior_var();
+    let var = var_sub.iter().map(|&v| prior - v).collect();
+    Prediction { mean, var }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_all_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.5, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// ẏ and Σ̇ satisfy their defining equations (3)-(4) directly.
+    #[test]
+    fn local_summary_matches_definitions() {
+        prop_check("local-summary-def", 10, |g| {
+            let d = g.usize_in(1, 4);
+            let b = g.usize_in(2, 8);
+            let s = g.usize_in(1, 6);
+            let hyp = rand_hyp(g, d);
+            let xm = Mat::from_vec(b, d, g.uniform_vec(b * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let ym = g.normal_vec(b);
+            let ctx = SupportContext::new(&hyp, &xs);
+            let loc = local_summary(&hyp, &xm, &ym, &ctx);
+
+            // direct: Σ_mm|S = Σ_mm − K_ms Kss⁻¹ K_sm (with jitters)
+            let k_ms = hyp.cov_cross(&xm, &xs);
+            let q = matmul(
+                &k_ms,
+                &cho_solve_mat(&ctx.l_ss, &k_ms.transpose()),
+            );
+            let mut sig = hyp.cov_same(&xm, true);
+            sig.sub_assign(&q);
+            let recomposed = crate::linalg::matmul_nt(&loc.l_m, &loc.l_m);
+            assert!(recomposed.max_abs_diff(&sig) < 1e-9);
+
+            let l_sig = cholesky(&sig).unwrap();
+            let want_y = matvec(&k_ms.transpose(), &cho_solve_vec(&l_sig, &ym));
+            assert_all_close(&loc.y_dot, &want_y, 1e-8, 1e-8);
+            let want_s =
+                matmul_tn(&k_ms, &cho_solve_mat(&l_sig, &k_ms));
+            assert!(loc.s_dot.max_abs_diff(&want_s) < 1e-8);
+        });
+    }
+
+    /// Global summary sums per eqs. (5)-(6), and assimilate() agrees.
+    #[test]
+    fn global_summary_accumulates() {
+        prop_check("global-summary", 8, |g| {
+            let d = 2;
+            let s = 4;
+            let hyp = rand_hyp(g, d);
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let ctx = SupportContext::new(&hyp, &xs);
+            let mut locals = Vec::new();
+            for _ in 0..3 {
+                let b = 5;
+                let xm = Mat::from_vec(b, d, g.uniform_vec(b * d, -2.0, 2.0));
+                let ym = g.normal_vec(b);
+                locals.push(local_summary(&hyp, &xm, &ym, &ctx));
+            }
+            let refs: Vec<&LocalSummary> = locals.iter().collect();
+            let glob = global_summary(&ctx, &refs);
+
+            // incremental assimilation gives the same result
+            let mut inc = global_summary(&ctx, &refs[..1]);
+            assimilate(&mut inc, refs[1]);
+            assimilate(&mut inc, refs[2]);
+            assert_all_close(&glob.y, &inc.y, 1e-12, 1e-12);
+            assert!(glob.s.max_abs_diff(&inc.s) < 1e-12);
+
+            // Σ̈−Σ_SS = ΣΣ̇ᵐ
+            let mut sum_dot = ctx.sigma_ss.clone();
+            for l in &locals {
+                sum_dot.add_assign(&l.s_dot);
+            }
+            assert!(glob.s.max_abs_diff(&sum_dot) < 1e-12);
+        });
+    }
+
+    /// pPITC variance falls between 0 and the prior variance, and the
+    /// global-summary term only *adds* variance vs. the PITC-free limit.
+    #[test]
+    fn ppitc_prediction_sanity() {
+        prop_check("ppitc-sanity", 8, |g| {
+            let d = 2;
+            let hyp = rand_hyp(g, d);
+            let xs = Mat::from_vec(4, d, g.uniform_vec(8, -2.0, 2.0));
+            let xm = Mat::from_vec(6, d, g.uniform_vec(12, -2.0, 2.0));
+            let ym = g.normal_vec(6);
+            let xu = Mat::from_vec(5, d, g.uniform_vec(10, -2.0, 2.0));
+            let ctx = SupportContext::new(&hyp, &xs);
+            let loc = local_summary(&hyp, &xm, &ym, &ctx);
+            let glob = global_summary(&ctx, &[&loc]);
+            let l_g = chol_global(&glob);
+            let pred = ppitc_predict(&hyp, &xu, &ctx, &glob, &l_g);
+            assert_eq!(pred.len(), 5);
+            for &v in &pred.var {
+                assert!(v > 0.0 && v <= hyp.prior_var() + 1e-9, "var={v}");
+            }
+        });
+    }
+
+    /// ICF pieces satisfy their definitions with a random factor F.
+    #[test]
+    fn icf_summary_definitions() {
+        prop_check("icf-defs", 8, |g| {
+            let d = 2;
+            let (b, u, r) = (5, 4, 3);
+            let hyp = rand_hyp(g, d);
+            let xm = Mat::from_vec(b, d, g.uniform_vec(b * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let ym = g.normal_vec(b);
+            let f_m = Mat::from_vec(r, b, g.normal_vec(r * b));
+            let loc = icf_local(&hyp, &xm, &ym, &xu, &f_m);
+            assert_all_close(&loc.y_dot, &matvec(&f_m, &ym), 1e-12, 1e-12);
+            let want_phi = crate::linalg::matmul_nt(&f_m, &f_m);
+            assert!(loc.phi.max_abs_diff(&want_phi) < 1e-12);
+
+            // global solve satisfies Φ·ÿ = Σẏ
+            let glob = icf_global(&hyp, &[&loc]);
+            let mut phi = Mat::identity(r);
+            let inv_sn2 = 1.0 / hyp.sn2();
+            for i in 0..r {
+                for j in 0..r {
+                    phi[(i, j)] += inv_sn2 * loc.phi[(i, j)];
+                }
+            }
+            let back = matvec(&phi, &glob.y);
+            assert_all_close(&back, &loc.y_dot, 1e-9, 1e-9);
+        });
+    }
+
+    /// Finalize: prior − Σ components.
+    #[test]
+    fn icf_finalize_combines() {
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
+        let c1 = Prediction { mean: vec![1.0, 2.0], var: vec![0.2, 0.3] };
+        let c2 = Prediction { mean: vec![0.5, -1.0], var: vec![0.1, 0.2] };
+        let out = icf_finalize(&hyp, 2, &[&c1, &c2]);
+        assert_all_close(&out.mean, &[1.5, 1.0], 1e-12, 1e-12);
+        let prior = hyp.prior_var();
+        assert_all_close(&out.var, &[prior - 0.3, prior - 0.5], 1e-12, 1e-12);
+    }
+}

@@ -1,0 +1,204 @@
+//! Support-set selection via the differential entropy score criterion
+//! (Lawrence et al. 2003), as prescribed after Definition 2: greedily add
+//! the candidate with the largest posterior variance Σ_xx|S.
+//!
+//! Key identity: the greedy max-posterior-variance rule is exactly the
+//! diagonal-pivoting rule of incomplete Cholesky — after k selections the
+//! residual diagonal of the candidate Gram matrix *is* the vector of
+//! posterior variances given the selected set. So selection reuses the
+//! pivoted ICF machinery and costs O(|S|²·n_candidates) instead of
+//! refitting a GP per step.
+
+use crate::gp::icf_gp::GramSource;
+use crate::kernel::SeArd;
+use crate::linalg::{icf, Mat};
+use crate::util::Pcg64;
+
+/// Greedily select `size` support inputs from `candidates` (rows).
+/// Returns the selected row indices in selection order.
+pub fn select_support_entropy(
+    hyp: &SeArd,
+    candidates: &Mat,
+    size: usize,
+) -> Vec<usize> {
+    assert!(size <= candidates.rows, "support larger than candidate pool");
+    let src = GramSource { hyp, x: candidates };
+    // tol 0: keep pivoting even when residuals get small; pivots are the
+    // greedy max-variance picks.
+    let factor = icf(&src, size, 0.0);
+    factor.pivots
+}
+
+/// Random selection baseline (used by ablations).
+pub fn select_support_random(
+    n_candidates: usize,
+    size: usize,
+    rng: &mut Pcg64,
+) -> Vec<usize> {
+    rng.sample_indices(n_candidates, size)
+}
+
+/// Select support inputs from a candidate pool, returning the actual
+/// support matrix (convenience over [`select_support_entropy`]).
+pub fn support_matrix(hyp: &SeArd, candidates: &Mat, size: usize) -> Mat {
+    let idx = select_support_entropy(hyp, candidates, size);
+    candidates.select_rows(&idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::summaries::SupportContext;
+    use crate::linalg::solve_lower_mat;
+
+    /// Noise-free posterior variance Σ_xx|S of each row of `x` given the
+    /// support set — the selection criterion itself.
+    fn posterior_var(hyp: &SeArd, xs: &Mat, x: &Mat) -> Vec<f64> {
+        let ctx = SupportContext::new(hyp, xs);
+        let k_xs = hyp.cov_cross(x, &ctx.xs);
+        let w = solve_lower_mat(&ctx.l_ss, &k_xs.transpose());
+        (0..x.rows)
+            .map(|i| {
+                let t: f64 = (0..xs.rows).map(|r| w[(r, i)] * w[(r, i)]).sum();
+                hyp.sf2() - t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selection_is_distinct_and_in_range() {
+        let mut rng = Pcg64::seed(1);
+        let hyp = SeArd::isotropic(2, 0.7, 1.0, 1e-3);
+        let x = Mat::from_vec(30, 2, rng.normals(60));
+        let idx = select_support_entropy(&hyp, &x, 10);
+        assert_eq!(idx.len(), 10);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+        assert!(idx.iter().all(|&i| i < 30));
+    }
+
+    #[test]
+    fn first_pick_spreads_coverage() {
+        // on a 1-D line, greedy entropy selection spreads points out:
+        // max pairwise gap of selected set is far below the un-spread
+        // worst case.
+        let n = 50;
+        let hyp = SeArd::isotropic(1, 0.5, 1.0, 1e-3);
+        let x = Mat::from_vec(n, 1, (0..n).map(|i| i as f64 * 0.1).collect());
+        let idx = select_support_entropy(&hyp, &x, 8);
+        let mut coords: Vec<f64> = idx.iter().map(|&i| x[(i, 0)]).collect();
+        coords.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // coverage: every data point within 1.0 of a support point
+        for i in 0..n {
+            let xi = x[(i, 0)];
+            let min_dist = coords
+                .iter()
+                .map(|c| (c - xi).abs())
+                .fold(f64::INFINITY, f64::min);
+            assert!(min_dist < 1.0, "point {xi} uncovered");
+        }
+    }
+
+    #[test]
+    fn entropy_beats_random_on_clustered_data() {
+        // clustered data: random selection oversamples dense clusters;
+        // entropy selection covers all clusters. Compare max residual
+        // posterior variance over the pool.
+        let mut rng = Pcg64::seed(9);
+        let n = 60;
+        let mut x = Mat::zeros(n, 1);
+        for i in 0..n {
+            // three clusters at 0, 10, 20 with sizes 50, 5, 5
+            let c = if i < 50 { 0.0 } else if i < 55 { 10.0 } else { 20.0 };
+            x[(i, 0)] = c + rng.normal() * 0.2;
+        }
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 1e-3);
+
+        let max_resid = |idx: &[usize]| -> f64 {
+            let xs = x.select_rows(idx);
+            let ctx = SupportContext::new(&hyp, &xs);
+            let k_xs = hyp.cov_cross(&x, &ctx.xs);
+            let w = solve_lower_mat(&ctx.l_ss, &k_xs.transpose());
+            (0..n)
+                .map(|i| {
+                    let t: f64 =
+                        (0..idx.len()).map(|r| w[(r, i)] * w[(r, i)]).sum();
+                    hyp.sf2() - t
+                })
+                .fold(0.0f64, f64::max)
+        };
+
+        let ent = select_support_entropy(&hyp, &x, 6);
+        let mut rand_worst: f64 = 0.0;
+        for seed in 0..5 {
+            let r = select_support_random(n, 6, &mut Pcg64::seed(100 + seed));
+            rand_worst += max_resid(&r);
+        }
+        rand_worst /= 5.0;
+        let ent_resid = max_resid(&ent);
+        assert!(
+            ent_resid < rand_worst,
+            "entropy {ent_resid:.4} vs random-avg {rand_worst:.4}"
+        );
+    }
+
+    #[test]
+    fn support_matrix_rows_match_selection() {
+        let mut rng = Pcg64::seed(2);
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 1e-2);
+        let x = Mat::from_vec(15, 2, rng.normals(30));
+        let idx = select_support_entropy(&hyp, &x, 5);
+        let xs = support_matrix(&hyp, &x, 5);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(xs.row(k), x.row(i));
+        }
+    }
+
+    #[test]
+    fn random_baseline_distinct() {
+        let mut rng = Pcg64::seed(3);
+        let idx = select_support_random(20, 7, &mut rng);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 7);
+    }
+
+    /// The greedy pick order matches explicit max-posterior-variance
+    /// re-evaluation (the ICF-pivot identity the module relies on).
+    /// The explicit criterion here is noise-free (Σ_xx|S of the latent
+    /// function), matching the selection's pivoted-ICF formulation; ties
+    /// break toward the smallest index like linalg::icf.
+    #[test]
+    fn pivots_match_explicit_greedy() {
+        let mut rng = Pcg64::seed(4);
+        // noise-free context for the explicit recomputation: sn2 ~ 0
+        let hyp = SeArd::isotropic(1, 0.6, 1.3, 1e-13);
+        let x = Mat::from_vec(12, 1, rng.normals(12));
+        let picks = select_support_entropy(&hyp, &x, 4);
+        let mut chosen: Vec<usize> = Vec::new();
+        for _ in 0..4 {
+            let mut best = usize::MAX;
+            let mut best_v = f64::NEG_INFINITY;
+            for i in 0..12 {
+                if chosen.contains(&i) {
+                    continue;
+                }
+                let v = if chosen.is_empty() {
+                    hyp.sf2()
+                } else {
+                    posterior_var(&hyp, &x.select_rows(&chosen),
+                                  &x.select_rows(&[i]))[0]
+                };
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            chosen.push(best);
+        }
+        assert_eq!(picks, chosen);
+    }
+}

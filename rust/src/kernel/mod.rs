@@ -1,0 +1,5 @@
+//! Covariance functions (the paper's squared-exponential + ARD).
+
+pub mod se;
+
+pub use se::{SeArd, JITTER_SCALE};

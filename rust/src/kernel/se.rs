@@ -1,0 +1,313 @@
+//! ARD squared-exponential covariance function — the paper's Section 6
+//! kernel, shared convention with `python/compile/model.py`:
+//!
+//! `σ_xx' = sf2 · exp(-0.5 · Σ_i ((x_i - x'_i)/ls_i)²) + sn2 · δ_xx'`
+//!
+//! Same-set covariance blocks carry `+ sn2·I`; cross-set blocks do not.
+//! Blocks headed for a Cholesky also get a relative jitter
+//! `JITTER_SCALE · sf2 · I` — identical constants on both language sides
+//! so native and PJRT paths agree to float precision.
+
+use crate::linalg::Mat;
+
+/// Relative jitter applied before factorization (== python JITTER_SCALE).
+pub const JITTER_SCALE: f64 = 1e-8;
+
+/// Hyperparameters of the ARD squared-exponential kernel, stored in log
+/// space (the MLE optimizer works on this vector unconstrained).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeArd {
+    pub log_ls: Vec<f64>,
+    pub log_sf2: f64,
+    pub log_sn2: f64,
+}
+
+impl SeArd {
+    /// Isotropic constructor: all `d` length-scales equal `ls`.
+    pub fn isotropic(d: usize, ls: f64, sf2: f64, sn2: f64) -> SeArd {
+        SeArd {
+            log_ls: vec![ls.ln(); d],
+            log_sf2: sf2.ln(),
+            log_sn2: sn2.ln(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    pub fn sf2(&self) -> f64 {
+        self.log_sf2.exp()
+    }
+
+    pub fn sn2(&self) -> f64 {
+        self.log_sn2.exp()
+    }
+
+    /// Jitter magnitude used before Cholesky factorizations.
+    pub fn jitter(&self) -> f64 {
+        JITTER_SCALE * self.sf2()
+    }
+
+    /// Prior variance of one (noisy) output: sf2 + sn2.
+    pub fn prior_var(&self) -> f64 {
+        self.sf2() + self.sn2()
+    }
+
+    /// Flatten to the artifact hyp-vector layout `[log_ls.., log_sf2,
+    /// log_sn2]` consumed by the AOT graphs.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut v = self.log_ls.clone();
+        v.push(self.log_sf2);
+        v.push(self.log_sn2);
+        v
+    }
+
+    /// Inverse of [`Self::to_vec`].
+    pub fn from_vec(v: &[f64]) -> SeArd {
+        assert!(v.len() >= 3, "hyp vector too short");
+        let d = v.len() - 2;
+        SeArd {
+            log_ls: v[..d].to_vec(),
+            log_sf2: v[d],
+            log_sn2: v[d + 1],
+        }
+    }
+
+    /// Noise-free kernel value k(x, x').
+    pub fn k(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        debug_assert_eq!(x1.len(), self.dim());
+        debug_assert_eq!(x2.len(), self.dim());
+        let mut s = 0.0;
+        for i in 0..x1.len() {
+            let diff = (x1[i] - x2[i]) * (-self.log_ls[i]).exp();
+            s += diff * diff;
+        }
+        self.sf2() * (-0.5 * s).exp()
+    }
+
+    /// Cross-covariance block Σ_{X1 X2} (no noise, no jitter).
+    pub fn cov_cross(&self, x1: &Mat, x2: &Mat) -> Mat {
+        self.gram(x1, x2)
+    }
+
+    /// Same-set covariance block Σ_{XX} = K + sn2·I (+ jitter if
+    /// `for_chol`), matching `model.cov(..., same=True)`.
+    pub fn cov_same(&self, x: &Mat, for_chol: bool) -> Mat {
+        let mut k = self.gram(x, x);
+        let bump = self.sn2() + if for_chol { self.jitter() } else { 0.0 };
+        k.add_diag(bump);
+        k
+    }
+
+    /// Diagonal of Σ_XX: sf2 + sn2 per row.
+    pub fn cov_same_diag(&self, n: usize) -> Vec<f64> {
+        vec![self.prior_var(); n]
+    }
+
+    /// Dense noise-free Gram matrix between row sets. Scales inputs by
+    /// 1/ls once, then uses the expansion trick — mirrors the L1 Pallas
+    /// kernel tile body.
+    pub fn gram(&self, x1: &Mat, x2: &Mat) -> Mat {
+        assert_eq!(x1.cols, self.dim(), "x1 dim");
+        assert_eq!(x2.cols, self.dim(), "x2 dim");
+        let inv_ls: Vec<f64> = self.log_ls.iter().map(|l| (-l).exp()).collect();
+        let scale_rows = |x: &Mat| -> Mat {
+            let mut s = x.clone();
+            for r in 0..s.rows {
+                let row = s.row_mut(r);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v *= inv_ls[c];
+                }
+            }
+            s
+        };
+        let s1 = scale_rows(x1);
+        let s2 = scale_rows(x2);
+        let sq1: Vec<f64> = (0..s1.rows)
+            .map(|i| s1.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        let sq2: Vec<f64> = (0..s2.rows)
+            .map(|i| s2.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        let cross = crate::linalg::matmul_nt(&s1, &s2);
+        let sf2 = self.sf2();
+        let mut k = Mat::zeros(x1.rows, x2.rows);
+        for i in 0..x1.rows {
+            let crow = cross.row(i);
+            let krow = k.row_mut(i);
+            for j in 0..x2.rows {
+                let sq = (sq1[i] + sq2[j] - 2.0 * crow[j]).max(0.0);
+                krow[j] = sf2 * (-0.5 * sq).exp();
+            }
+        }
+        k
+    }
+
+    /// Gram matrix plus its gradients w.r.t. every log-hyperparameter.
+    ///
+    /// Returns `(K, dK)` where `dK[i]` for `i < d` is ∂K/∂log_ls_i,
+    /// `dK[d]` is ∂K/∂log_sf2 and `dK[d+1]` is ∂K/∂log_sn2 (same-set
+    /// noise derivative = sn2·I when `same`). Used by the MLE optimizer.
+    pub fn gram_with_grads(&self, x1: &Mat, x2: &Mat, same: bool) -> (Mat, Vec<Mat>) {
+        let d = self.dim();
+        let k0 = self.gram(x1, x2); // noise-free
+        let mut grads = Vec::with_capacity(d + 2);
+        let inv_ls2: Vec<f64> =
+            self.log_ls.iter().map(|l| (-2.0 * l).exp()).collect();
+        for c in 0..d {
+            // ∂K/∂log_ls_c = K ∘ (x1_c - x2_c)² / ls_c²
+            let mut g = k0.clone();
+            for i in 0..x1.rows {
+                for j in 0..x2.rows {
+                    let diff = x1[(i, c)] - x2[(j, c)];
+                    g[(i, j)] *= diff * diff * inv_ls2[c];
+                }
+            }
+            grads.push(g);
+        }
+        // ∂K/∂log_sf2 = K (noise-free part)
+        grads.push(k0.clone());
+        // ∂K/∂log_sn2 = sn2 · I on same-set blocks, 0 otherwise
+        let mut gn = Mat::zeros(x1.rows, x2.rows);
+        if same {
+            let sn2 = self.sn2();
+            let n = x1.rows.min(x2.rows);
+            for i in 0..n {
+                gn[(i, i)] = sn2;
+            }
+        }
+        grads.push(gn);
+
+        let mut k = k0;
+        if same {
+            k.add_diag(self.sn2());
+        }
+        (k, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_close;
+
+    fn rand_x(g: &mut Gen, n: usize, d: usize) -> Mat {
+        Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0))
+    }
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -1.0, 1.0),
+            log_sf2: g.f64_in(-1.0, 1.0),
+            log_sn2: g.f64_in(-4.0, -1.0),
+        }
+    }
+
+    #[test]
+    fn gram_matches_pointwise_k() {
+        prop_check("gram-pointwise", 16, |g| {
+            let (n1, n2, d) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 5));
+            let hyp = rand_hyp(g, d);
+            let x1 = rand_x(g, n1, d);
+            let x2 = rand_x(g, n2, d);
+            let k = hyp.gram(&x1, &x2);
+            for i in 0..n1 {
+                for j in 0..n2 {
+                    assert_close(k[(i, j)], hyp.k(x1.row(i), x2.row(j)),
+                                 1e-12, 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cov_same_adds_noise_on_diagonal() {
+        prop_check("cov-same-noise", 8, |g| {
+            let (n, d) = (g.usize_in(1, 8), g.usize_in(1, 4));
+            let hyp = rand_hyp(g, d);
+            let x = rand_x(g, n, d);
+            let plain = hyp.gram(&x, &x);
+            let with_noise = hyp.cov_same(&x, false);
+            for i in 0..n {
+                assert_close(with_noise[(i, i)] - plain[(i, i)], hyp.sn2(),
+                             1e-12, 1e-12);
+            }
+            let for_chol = hyp.cov_same(&x, true);
+            assert_close(for_chol[(0, 0)] - with_noise[(0, 0)], hyp.jitter(),
+                         1e-9, 1e-15);
+        });
+    }
+
+    #[test]
+    fn kernel_bounds_and_symmetry() {
+        prop_check("kernel-bounds", 16, |g| {
+            let d = g.usize_in(1, 5);
+            let hyp = rand_hyp(g, d);
+            let a = g.uniform_vec(d, -3.0, 3.0);
+            let b = g.uniform_vec(d, -3.0, 3.0);
+            let kab = hyp.k(&a, &b);
+            assert!(kab > 0.0 && kab <= hyp.sf2() + 1e-15);
+            assert_close(kab, hyp.k(&b, &a), 1e-15, 1e-15);
+            assert_close(hyp.k(&a, &a), hyp.sf2(), 1e-12, 1e-15);
+        });
+    }
+
+    #[test]
+    fn hyp_vec_roundtrip() {
+        let hyp = SeArd {
+            log_ls: vec![0.1, -0.2, 0.3],
+            log_sf2: 0.5,
+            log_sn2: -2.0,
+        };
+        assert_eq!(SeArd::from_vec(&hyp.to_vec()), hyp);
+        assert_eq!(hyp.to_vec().len(), 5);
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        prop_check("kernel-grads-fd", 8, |g| {
+            let (n, d) = (g.usize_in(2, 6), g.usize_in(1, 3));
+            let hyp = rand_hyp(g, d);
+            let x = rand_x(g, n, d);
+            let (_, grads) = hyp.gram_with_grads(&x, &x, true);
+            let eps = 1e-6;
+            for p in 0..d + 2 {
+                let mut hp = hyp.clone();
+                let mut hm = hyp.clone();
+                match p {
+                    _ if p < d => {
+                        hp.log_ls[p] += eps;
+                        hm.log_ls[p] -= eps;
+                    }
+                    _ if p == d => {
+                        hp.log_sf2 += eps;
+                        hm.log_sf2 -= eps;
+                    }
+                    _ => {
+                        hp.log_sn2 += eps;
+                        hm.log_sn2 -= eps;
+                    }
+                }
+                let kp = hp.cov_same(&x, false);
+                let km = hm.cov_same(&x, false);
+                for i in 0..n {
+                    for j in 0..n {
+                        let fd = (kp[(i, j)] - km[(i, j)]) / (2.0 * eps);
+                        assert_close(grads[p][(i, j)], fd, 1e-5, 1e-7);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn isotropic_constructor() {
+        let hyp = SeArd::isotropic(4, 2.0, 1.5, 0.01);
+        assert_eq!(hyp.dim(), 4);
+        assert!((hyp.sf2() - 1.5).abs() < 1e-12);
+        assert!((hyp.sn2() - 0.01).abs() < 1e-12);
+        assert!(hyp.log_ls.iter().all(|&l| (l - 2.0f64.ln()).abs() < 1e-12));
+    }
+}

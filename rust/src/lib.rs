@@ -1,0 +1,40 @@
+//! # pgpr — Parallel Gaussian Process Regression
+//!
+//! A reproduction of Chen et al., *Parallel Gaussian Process Regression
+//! with Low-Rank Covariance Matrix Approximations* (UAI 2013), as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   pPITC / pPIC / pICF-based-GP protocols ([`parallel`]) over a
+//!   discrete-event cluster ([`cluster`]), their centralized counterparts
+//!   and the exact FGP baseline ([`gp`]), plus a real-time prediction
+//!   server ([`server`]).
+//! * **L2/L1 (python, build-time only)** — the GP algebra and the Pallas
+//!   SE-Gram kernel, AOT-lowered to HLO text artifacts executed through
+//!   [`runtime`] (PJRT via the `xla` crate). Python never runs on the
+//!   request path.
+//!
+//! Substrates built from scratch (offline environment; see DESIGN.md):
+//! dense linear algebra ([`linalg`]), covariance functions ([`kernel`]),
+//! synthetic AIMPEAK/SARCOS workloads ([`data`]), a thread pool, JSON,
+//! PRNG ([`util`]), a property-testing mini-framework ([`testkit`]), a
+//! micro-benchmark harness ([`bench_support`]) and a CLI ([`cli`]).
+
+pub mod bench_support;
+pub mod cli;
+pub mod cluster;
+pub mod data;
+pub mod gp;
+pub mod kernel;
+pub mod linalg;
+pub mod metrics;
+pub mod parallel;
+pub mod runtime;
+pub mod server;
+pub mod testkit;
+pub mod util;
+
+/// Crate version (kept in sync with Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

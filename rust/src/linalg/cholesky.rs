@@ -1,0 +1,253 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Mirrors the pure-HLO implementations in `python/compile/model.py` so
+//! the native backend and the PJRT artifacts produce matching numbers.
+
+use super::{dot, Mat};
+
+/// Error for a non-SPD input (reports the failing pivot).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NotSpd {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not SPD: pivot {} = {:.3e}", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotSpd {}
+
+/// Lower Cholesky factor L with A = L·Lᵀ.
+///
+/// Row-oriented (Cholesky–Banachiewicz): fills L one row at a time; inner
+/// products run over contiguous row prefixes.
+pub fn cholesky(a: &Mat) -> Result<Mat, NotSpd> {
+    assert!(a.is_square(), "cholesky of non-square");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let s = dot(&l.row(i)[..j], &l.row(j)[..j]);
+            if i == j {
+                let v = a[(i, i)] - s;
+                if v <= 0.0 || !v.is_finite() {
+                    return Err(NotSpd { pivot: i, value: v });
+                }
+                l[(i, j)] = v.sqrt();
+            } else {
+                l[(i, j)] = (a[(i, j)] - s) / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·y = b (vector) by forward substitution.
+pub fn solve_lower_vec(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let s = dot(&l.row(i)[..i], &y[..i]);
+        y[i] = (b[i] - s) / l[(i, i)];
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (vector) by back substitution.
+pub fn solve_upper_t_vec(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        // Lᵀ[i, j] = L[j, i] for j > i
+        let mut s = 0.0;
+        for j in (i + 1)..n {
+            s += l[(j, i)] * x[j];
+        }
+        x[i] = (y[i] - s) / l[(i, i)];
+    }
+    x
+}
+
+/// Solve (L·Lᵀ)·x = b (vector).
+pub fn cho_solve_vec(l: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_upper_t_vec(l, &solve_lower_vec(l, b))
+}
+
+/// Solve L·Y = B (matrix RHS) by forward substitution on each column,
+/// implemented row-wise for cache friendliness.
+pub fn solve_lower_mat(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n);
+    let mut y = b.clone();
+    for i in 0..n {
+        // y[i,:] = (b[i,:] - L[i,:i]·y[:i,:]) / L[i,i]
+        let (head, tail) = y.data.split_at_mut(i * y.cols);
+        let yrow = &mut tail[..y.cols];
+        for j in 0..i {
+            let lij = l[(i, j)];
+            if lij != 0.0 {
+                let yj = &head[j * b.cols..(j + 1) * b.cols];
+                for c in 0..b.cols {
+                    yrow[c] -= lij * yj[c];
+                }
+            }
+        }
+        let d = l[(i, i)];
+        for v in yrow.iter_mut() {
+            *v /= d;
+        }
+    }
+    y
+}
+
+/// Solve Lᵀ·X = Y (matrix RHS).
+pub fn solve_upper_t_mat(l: &Mat, y: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(y.rows, n);
+    let mut x = y.clone();
+    for i in (0..n).rev() {
+        let (head, tail) = x.data.split_at_mut((i + 1) * x.cols);
+        let xrow = &mut head[i * x.cols..];
+        for j in (i + 1)..n {
+            let lji = l[(j, i)];
+            if lji != 0.0 {
+                let xj = &tail[(j - i - 1) * y.cols..(j - i) * y.cols];
+                for c in 0..y.cols {
+                    xrow[c] -= lji * xj[c];
+                }
+            }
+        }
+        let d = l[(i, i)];
+        for v in xrow.iter_mut() {
+            *v /= d;
+        }
+    }
+    x
+}
+
+/// Solve (L·Lᵀ)·X = B (matrix RHS).
+pub fn cho_solve_mat(l: &Mat, b: &Mat) -> Mat {
+    solve_upper_t_mat(l, &solve_lower_mat(l, b))
+}
+
+/// log det(A) from its Cholesky factor: 2·Σ log L[i,i].
+pub fn logdet_from_chol(l: &Mat) -> f64 {
+    (0..l.rows).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, matvec};
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::{assert_all_close, max_abs_diff};
+
+    fn rand_spd(g: &mut Gen, n: usize) -> Mat {
+        let a = Mat::from_vec(n, n, g.normal_vec(n * n));
+        let mut spd = matmul_nt(&a, &a);
+        spd.add_diag(n as f64);
+        spd
+    }
+
+    #[test]
+    fn factor_recomposes() {
+        prop_check("chol-recompose", 24, |g| {
+            let n = g.usize_in(1, 16);
+            let a = rand_spd(g, n);
+            let l = cholesky(&a).unwrap();
+            let back = matmul_nt(&l, &l);
+            assert!(back.max_abs_diff(&a) < 1e-10, "n={n}");
+            // lower-triangular structure
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let mut a = Mat::identity(3);
+        a[(2, 2)] = -1.0;
+        let err = cholesky(&a).unwrap_err();
+        assert_eq!(err.pivot, 2);
+    }
+
+    #[test]
+    fn vec_solves_residual() {
+        prop_check("chol-solve-vec", 24, |g| {
+            let n = g.usize_in(1, 14);
+            let a = rand_spd(g, n);
+            let l = cholesky(&a).unwrap();
+            let b = g.normal_vec(n);
+            let x = cho_solve_vec(&l, &b);
+            let r = matvec(&a, &x);
+            assert_all_close(&r, &b, 1e-9, 1e-9);
+        });
+    }
+
+    #[test]
+    fn mat_solves_residual() {
+        prop_check("chol-solve-mat", 16, |g| {
+            let n = g.usize_in(1, 12);
+            let k = g.usize_in(1, 6);
+            let a = rand_spd(g, n);
+            let l = cholesky(&a).unwrap();
+            let b = Mat::from_vec(n, k, g.normal_vec(n * k));
+            let x = cho_solve_mat(&l, &b);
+            let r = matmul(&a, &x);
+            assert!(r.max_abs_diff(&b) < 1e-9);
+        });
+    }
+
+    #[test]
+    fn mat_and_vec_solves_agree() {
+        prop_check("solve-consistency", 16, |g| {
+            let n = g.usize_in(1, 10);
+            let a = rand_spd(g, n);
+            let l = cholesky(&a).unwrap();
+            let b = g.normal_vec(n);
+            let via_vec = cho_solve_vec(&l, &b);
+            let via_mat = cho_solve_mat(&l, &Mat::from_vec(n, 1, b)).data;
+            assert!(max_abs_diff(&via_vec, &via_mat) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn triangular_solves_residuals() {
+        prop_check("tri-solves", 16, |g| {
+            let n = g.usize_in(1, 12);
+            let a = rand_spd(g, n);
+            let l = cholesky(&a).unwrap();
+            let b = g.normal_vec(n);
+            let y = solve_lower_vec(&l, &b);
+            assert_all_close(&matvec(&l, &y), &b, 1e-10, 1e-10);
+            let x = solve_upper_t_vec(&l, &b);
+            let lt = l.transpose();
+            assert_all_close(&matvec(&lt, &x), &b, 1e-10, 1e-10);
+        });
+    }
+
+    #[test]
+    fn logdet_matches_identity_scaling() {
+        let mut a = Mat::identity(5);
+        a.scale(4.0);
+        let l = cholesky(&a).unwrap();
+        let want = 5.0 * 4.0f64.ln();
+        assert!((logdet_from_chol(&l) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_by_one() {
+        let a = Mat::from_vec(1, 1, vec![9.0]);
+        let l = cholesky(&a).unwrap();
+        assert_eq!(l[(0, 0)], 3.0);
+        assert_eq!(cho_solve_vec(&l, &[18.0]), vec![2.0]);
+    }
+}

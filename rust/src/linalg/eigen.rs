@@ -1,0 +1,188 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Needed by classical MDS (road-network embedding) and by spectral
+//! diagnostics in tests. Jacobi is simple, numerically robust, and
+//! adequate at the sizes we use (n ≲ 1000).
+
+use super::Mat;
+
+/// Eigen-decomposition of a symmetric matrix: `a = V · diag(w) · Vᵀ`.
+/// Eigenvalues are returned in descending order; `vectors` holds the
+/// corresponding eigenvectors as *columns*.
+#[derive(Debug, Clone)]
+pub struct SymEigen {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi with a convergence threshold on the off-diagonal norm.
+pub fn sym_eigen(a: &Mat) -> SymEigen {
+    assert!(a.is_square(), "sym_eigen of non-square");
+    let n = a.rows;
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::identity(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s.sqrt()
+    };
+
+    let scale = m.max_abs().max(1.0);
+    let tol = 1e-14 * scale * n as f64;
+    for _sweep in 0..100 {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol / (n * n) as f64 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Jacobi rotation (Golub & Van Loan §8.5)
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate rotations
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort descending by eigenvalue
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    SymEigen { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, matmul_tn};
+    use crate::testkit::prop::{prop_check, Gen};
+
+    fn rand_sym(g: &mut Gen, n: usize) -> Mat {
+        let a = Mat::from_vec(n, n, g.normal_vec(n * n));
+        let mut s = a.clone();
+        s.add_assign(&a.transpose());
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        prop_check("eigen-reconstruct", 12, |g| {
+            let n = g.usize_in(1, 10);
+            let a = rand_sym(g, n);
+            let e = sym_eigen(&a);
+            // V diag(w) Vᵀ
+            let mut vd = e.vectors.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    vd[(r, c)] *= e.values[c];
+                }
+            }
+            let back = matmul_nt(&vd, &e.vectors);
+            assert!(back.max_abs_diff(&a) < 1e-8, "n={n}");
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        prop_check("eigen-orthonormal", 12, |g| {
+            let n = g.usize_in(1, 10);
+            let a = rand_sym(g, n);
+            let e = sym_eigen(&a);
+            let vtv = matmul_tn(&e.vectors, &e.vectors);
+            assert!(vtv.max_abs_diff(&Mat::identity(n)) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        prop_check("eigen-sorted", 12, |g| {
+            let n = g.usize_in(2, 10);
+            let e = sym_eigen(&rand_sym(g, n));
+            for w in e.values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 2.0;
+        let e = sym_eigen(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigenpairs_satisfy_av_eq_wv() {
+        let mut rng = crate::util::Pcg64::seed(5);
+        let n = 8;
+        let b = Mat::from_vec(n, n, rng.normals(n * n));
+        let mut a = b.clone();
+        a.add_assign(&b.transpose());
+        let e = sym_eigen(&a);
+        let av = matmul(&a, &e.vectors);
+        for c in 0..n {
+            for r in 0..n {
+                let want = e.values[c] * e.vectors[(r, c)];
+                assert!((av[(r, c)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_matrix_has_nonneg_values() {
+        let mut rng = crate::util::Pcg64::seed(6);
+        let n = 7;
+        let b = Mat::from_vec(n, 4, rng.normals(n * 4));
+        let k = matmul_nt(&b, &b);
+        let e = sym_eigen(&k);
+        assert!(e.values.iter().all(|&w| w > -1e-9));
+        // rank 4: remaining eigenvalues ~ 0
+        assert!(e.values[4..].iter().all(|&w| w.abs() < 1e-8));
+    }
+}

@@ -1,0 +1,239 @@
+//! Row-based incomplete Cholesky factorization (ICF) with diagonal
+//! pivoting — the low-rank handle of the paper's Section 4.
+//!
+//! Produces `F ∈ R^{R×n}` with `FᵀF ≈ K` for an SPD kernel matrix `K`
+//! given *implicitly* by a row oracle, so the full `n×n` matrix is never
+//! materialized (the paper's point: `R ≪ n`). Each iteration selects the
+//! largest residual diagonal as pivot and fills one row of F — the
+//! "row-based" scheme of Chang et al. (2007) that pICF distributes
+//! column-block-wise across machines (see `parallel::picf`).
+
+use super::Mat;
+
+/// Source of kernel matrix entries: `n`, diagonal, and full rows.
+pub trait KernelSource {
+    fn n(&self) -> usize;
+    fn diag(&self, i: usize) -> f64;
+    /// Write row `i` of K into `out` (length n).
+    fn row(&self, i: usize, out: &mut [f64]);
+}
+
+/// A dense matrix as a [`KernelSource`] (tests, small problems).
+pub struct DenseSource<'a>(pub &'a Mat);
+
+impl KernelSource for DenseSource<'_> {
+    fn n(&self) -> usize {
+        self.0.rows
+    }
+    fn diag(&self, i: usize) -> f64 {
+        self.0[(i, i)]
+    }
+    fn row(&self, i: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.0.row(i));
+    }
+}
+
+/// Result of ICF: `f` is R×n with `fᵀf ≈ K`; `pivots[k]` is the column
+/// chosen at step k; `residual` is the final trace of `K − FᵀF`.
+#[derive(Debug, Clone)]
+pub struct IcfFactor {
+    pub f: Mat,
+    pub pivots: Vec<usize>,
+    pub residual: f64,
+}
+
+impl IcfFactor {
+    /// The column block `F_m = F[:, lo..hi]` owned by one machine.
+    pub fn column_block(&self, lo: usize, hi: usize) -> Mat {
+        let r = self.f.rows;
+        let mut out = Mat::zeros(r, hi - lo);
+        for k in 0..r {
+            out.row_mut(k).copy_from_slice(&self.f.row(k)[lo..hi]);
+        }
+        out
+    }
+}
+
+/// Pivoted incomplete Cholesky of rank ≤ `rank`.
+///
+/// Stops early when the residual trace falls below `tol` (pass 0.0 to
+/// force exactly `rank` steps on a full-rank matrix).
+pub fn icf(k: &dyn KernelSource, rank: usize, tol: f64) -> IcfFactor {
+    let n = k.n();
+    let rank = rank.min(n);
+    let mut d: Vec<f64> = (0..n).map(|i| k.diag(i)).collect();
+    let mut f = Mat::zeros(rank, n);
+    let mut pivots = Vec::with_capacity(rank);
+    let mut krow = vec![0.0; n];
+
+    for step in 0..rank {
+        // pivot: largest residual diagonal; ties broken toward the
+        // smallest index (must match parallel::picf::parallel_icf so the
+        // distributed factor is bit-identical to the serial one)
+        let (j, dj) = d.iter().enumerate().fold(
+            (0usize, f64::NEG_INFINITY),
+            |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc },
+        );
+        if dj <= tol || dj <= 0.0 {
+            // converged (or numerically exhausted): truncate F
+            let mut ftrunc = Mat::zeros(step, n);
+            for r in 0..step {
+                ftrunc.row_mut(r).copy_from_slice(f.row(r));
+            }
+            return IcfFactor {
+                f: ftrunc,
+                pivots,
+                residual: d.iter().map(|x| x.max(0.0)).sum(),
+            };
+        }
+        pivots.push(j);
+        let piv = dj.sqrt();
+        k.row(j, &mut krow);
+
+        // f[step, i] = (K[j, i] - Σ_{t<step} f[t, j] f[t, i]) / piv
+        // accumulate the correction without re-reading columns:
+        let (done, frow_tail) = f.data.split_at_mut(step * n);
+        let frow = &mut frow_tail[..n];
+        frow.copy_from_slice(&krow);
+        for t in 0..step {
+            let ftj = done[t * n + j];
+            if ftj != 0.0 {
+                let ft = &done[t * n..(t + 1) * n];
+                for i in 0..n {
+                    frow[i] -= ftj * ft[i];
+                }
+            }
+        }
+        for v in frow.iter_mut() {
+            *v /= piv;
+        }
+        frow[j] = piv; // exact by construction; avoids drift
+
+        // residual diagonal update
+        for i in 0..n {
+            d[i] -= frow[i] * frow[i];
+        }
+        d[j] = 0.0;
+    }
+
+    IcfFactor {
+        f,
+        pivots,
+        residual: d.iter().map(|x| x.max(0.0)).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, matmul_tn};
+    use crate::testkit::prop::{prop_check, Gen};
+
+    fn rand_spd(g: &mut Gen, n: usize) -> Mat {
+        let a = Mat::from_vec(n, n, g.normal_vec(n * n));
+        let mut spd = matmul_nt(&a, &a);
+        spd.add_diag(0.1);
+        spd
+    }
+
+    #[test]
+    fn full_rank_recovers_matrix() {
+        prop_check("icf-full-rank", 16, |g| {
+            let n = g.usize_in(1, 12);
+            let k = rand_spd(g, n);
+            let fac = icf(&DenseSource(&k), n, 0.0);
+            let approx = matmul_tn(&fac.f, &fac.f);
+            assert!(
+                approx.max_abs_diff(&k) < 1e-8,
+                "n={n} resid={}",
+                fac.residual
+            );
+        });
+    }
+
+    #[test]
+    fn truncated_rank_monotone_improvement() {
+        let n = 20;
+        let mut grng = crate::util::Pcg64::seed(4);
+        let a = Mat::from_vec(n, n, grng.normals(n * n));
+        let mut k = matmul_nt(&a, &a);
+        k.add_diag(0.5);
+        let mut prev = f64::INFINITY;
+        for r in [2, 5, 10, 20] {
+            let fac = icf(&DenseSource(&k), r, 0.0);
+            let err = matmul_tn(&fac.f, &fac.f).max_abs_diff(&k);
+            assert!(err <= prev + 1e-9, "rank {r}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn residual_nonincreasing_with_rank() {
+        let mut rng = crate::util::Pcg64::seed(11);
+        let n = 16;
+        let a = Mat::from_vec(n, n, rng.normals(n * n));
+        let mut k = matmul_nt(&a, &a);
+        k.add_diag(0.2);
+        let r1 = icf(&DenseSource(&k), 4, 0.0).residual;
+        let r2 = icf(&DenseSource(&k), 8, 0.0).residual;
+        let r3 = icf(&DenseSource(&k), 16, 0.0).residual;
+        assert!(r1 >= r2 && r2 >= r3);
+        assert!(r3 < 1e-8);
+    }
+
+    #[test]
+    fn pivots_are_distinct() {
+        prop_check("icf-pivots", 12, |g| {
+            let n = g.usize_in(2, 14);
+            let k = rand_spd(g, n);
+            let fac = icf(&DenseSource(&k), n, 0.0);
+            let mut p = fac.pivots.clone();
+            p.sort_unstable();
+            p.dedup();
+            assert_eq!(p.len(), fac.pivots.len());
+        });
+    }
+
+    #[test]
+    fn low_rank_matrix_detected_early() {
+        // rank-3 + tiny ridge: ICF should stop well before n
+        let mut rng = crate::util::Pcg64::seed(21);
+        let n = 15;
+        let b = Mat::from_vec(n, 3, rng.normals(n * 3));
+        let mut k = matmul_nt(&b, &b);
+        k.add_diag(1e-12);
+        let fac = icf(&DenseSource(&k), n, 1e-9);
+        assert!(fac.f.rows <= 5, "rows={}", fac.f.rows);
+        assert!(matmul_tn(&fac.f, &fac.f).max_abs_diff(&k) < 1e-5);
+    }
+
+    #[test]
+    fn column_block_extraction() {
+        let mut rng = crate::util::Pcg64::seed(31);
+        let n = 12;
+        let a = Mat::from_vec(n, n, rng.normals(n * n));
+        let mut k = matmul_nt(&a, &a);
+        k.add_diag(0.3);
+        let fac = icf(&DenseSource(&k), 6, 0.0);
+        let blk = fac.column_block(4, 9);
+        assert_eq!((blk.rows, blk.cols), (6, 5));
+        for r in 0..6 {
+            assert_eq!(blk.row(r), &fac.f.row(r)[4..9]);
+        }
+    }
+
+    #[test]
+    fn approximation_is_psd_bounded() {
+        // FᵀF never overshoots the diagonal: K - FᵀF has nonneg diag
+        prop_check("icf-psd-diag", 12, |g| {
+            let n = g.usize_in(2, 12);
+            let k = rand_spd(g, n);
+            let r = g.usize_in(1, n + 1).min(n);
+            let fac = icf(&DenseSource(&k), r, 0.0);
+            let approx = matmul_tn(&fac.f, &fac.f);
+            for i in 0..n {
+                assert!(k[(i, i)] - approx[(i, i)] > -1e-9);
+            }
+        });
+    }
+}

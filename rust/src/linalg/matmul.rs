@@ -1,0 +1,186 @@
+//! Matrix products, cache-aware for row-major storage.
+//!
+//! `matmul` uses the i-k-j loop order so the inner loop streams rows of B
+//! and C contiguously (auto-vectorizes well); the transposed variants
+//! avoid materializing transposes.
+
+use super::{axpy, dot, Mat};
+
+/// C = A · B.
+///
+/// i-k-j order with a 4-wide k-unrolled microkernel: four rows of B are
+/// combined into C's row per pass, quartering the C-row memory traffic
+/// (the §Perf log shows ~1.9× over the plain axpy loop at 512²).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let n = b.cols;
+    let kk = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        let mut k = 0;
+        while k + 4 <= kk {
+            let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+            let b0 = &b.data[k * n..(k + 1) * n];
+            let b1 = &b.data[(k + 1) * n..(k + 2) * n];
+            let b2 = &b.data[(k + 2) * n..(k + 3) * n];
+            let b3 = &b.data[(k + 3) * n..(k + 4) * n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            k += 4;
+        }
+        while k < kk {
+            let aik = arow[k];
+            if aik != 0.0 {
+                axpy(aik, b.row(k), crow);
+            }
+            k += 1;
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B (A is stored untransposed).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn: {}x{}ᵀ · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.cols, b.cols);
+    for k in 0..a.rows {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for (i, &aki) in arow.iter().enumerate() {
+            if aki != 0.0 {
+                axpy(aki, brow, c.row_mut(i));
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ (B is stored untransposed).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt: {}x{} · {}x{}ᵀ", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// y = A · x.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len(), "matvec shape");
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ · x.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len(), "matvec_t shape");
+    let mut y = vec![0.0; a.cols];
+    for (k, &xk) in x.iter().enumerate() {
+        if xk != 0.0 {
+            axpy(xk, a.row(k), &mut y);
+        }
+    }
+    y
+}
+
+/// diag(A · B) without forming the product (A: m×k, B: k×m).
+pub fn diag_of_product(a: &Mat, b: &Mat) -> Vec<f64> {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.rows, b.cols);
+    (0..a.rows)
+        .map(|i| (0..a.cols).map(|k| a[(i, k)] * b[(k, i)]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::prop_check;
+    use crate::testkit::{assert_all_close, max_abs_diff};
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        Mat::from_fn(a.rows, b.cols, |i, j| {
+            (0..a.cols).map(|k| a[(i, k)] * b[(k, j)]).sum()
+        })
+    }
+
+    fn rand_mat(g: &mut crate::testkit::prop::Gen, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, g.normal_vec(r * c))
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        prop_check("matmul-naive", 24, |g| {
+            let (m, k, n) = (g.usize_in(1, 12), g.usize_in(1, 12), g.usize_in(1, 12));
+            let a = rand_mat(g, m, k);
+            let b = rand_mat(g, k, n);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        prop_check("matmul-trans", 24, |g| {
+            let (m, k, n) = (g.usize_in(1, 10), g.usize_in(1, 10), g.usize_in(1, 10));
+            let a = rand_mat(g, k, m); // used as Aᵀ
+            let b = rand_mat(g, k, n);
+            let via_tn = matmul_tn(&a, &b);
+            let via_plain = matmul(&a.transpose(), &b);
+            assert!(via_tn.max_abs_diff(&via_plain) < 1e-12);
+
+            let c = rand_mat(g, n, k);
+            let d = rand_mat(g, m, k);
+            let via_nt = matmul_nt(&c, &d);
+            let via_plain2 = matmul(&c, &d.transpose());
+            assert!(via_nt.max_abs_diff(&via_plain2) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn matvec_agrees_with_matmul() {
+        prop_check("matvec", 16, |g| {
+            let (m, n) = (g.usize_in(1, 12), g.usize_in(1, 12));
+            let a = rand_mat(g, m, n);
+            let x = g.normal_vec(n);
+            let xm = Mat::from_vec(n, 1, x.clone());
+            let want = matmul(&a, &xm).data;
+            assert!(max_abs_diff(&matvec(&a, &x), &want) < 1e-12);
+            let y = g.normal_vec(m);
+            let want_t = matmul_tn(&a, &Mat::from_vec(m, 1, y.clone())).data;
+            assert!(max_abs_diff(&matvec_t(&a, &y), &want_t) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn diag_of_product_matches() {
+        prop_check("diagprod", 16, |g| {
+            let (m, k) = (g.usize_in(1, 10), g.usize_in(1, 10));
+            let a = rand_mat(g, m, k);
+            let b = rand_mat(g, k, m);
+            let got = diag_of_product(&a, &b);
+            let want = matmul(&a, &b).diag();
+            assert_all_close(&got, &want, 1e-12, 1e-12);
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + 2 * j) as f64);
+        assert_eq!(matmul(&a, &Mat::identity(4)), a);
+        assert_eq!(matmul(&Mat::identity(4), &a), a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        matmul(&Mat::zeros(2, 3), &Mat::zeros(2, 3));
+    }
+}

@@ -1,0 +1,166 @@
+//! Classical multi-dimensional scaling (Torgerson MDS).
+//!
+//! The paper's AIMPEAK domain models a road network with a *relational*
+//! GP; footnote 2 says the segment graph is embedded into Euclidean space
+//! with MDS so the squared-exponential kernel applies. This module is
+//! that embedding: distance matrix → double-centered Gram → top-k
+//! eigenpairs → coordinates.
+
+use super::eigen::sym_eigen;
+use super::Mat;
+
+/// Embed `n` points into `k` dimensions from their pairwise distances.
+///
+/// Returns an `n×k` coordinate matrix whose pairwise Euclidean distances
+/// approximate `dist` (exactly, if `dist` is Euclidean of rank ≤ k).
+/// Eigenvalues ≤ 0 (non-Euclidean directions) are dropped — their
+/// coordinates are zero-filled.
+pub fn classical_mds(dist: &Mat, k: usize) -> Mat {
+    assert!(dist.is_square(), "mds: non-square distance matrix");
+    let n = dist.rows;
+    assert!(k >= 1);
+
+    // B = -1/2 · J · D² · J,  J = I - 11ᵀ/n  (double centering)
+    let mut d2 = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = dist[(i, j)];
+            d2[(i, j)] = v * v;
+        }
+    }
+    let row_mean: Vec<f64> =
+        (0..n).map(|i| d2.row(i).iter().sum::<f64>() / n as f64).collect();
+    let grand = row_mean.iter().sum::<f64>() / n as f64;
+    let mut b = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            b[(i, j)] = -0.5 * (d2[(i, j)] - row_mean[i] - row_mean[j] + grand);
+        }
+    }
+
+    let e = sym_eigen(&b);
+    let mut coords = Mat::zeros(n, k);
+    for c in 0..k.min(n) {
+        let w = e.values[c];
+        if w <= 0.0 {
+            break; // descending order: the rest are non-Euclidean/noise
+        }
+        let s = w.sqrt();
+        for r in 0..n {
+            coords[(r, c)] = e.vectors[(r, c)] * s;
+        }
+    }
+    coords
+}
+
+/// Pairwise Euclidean distance matrix of row-vector points.
+pub fn pairwise_distances(points: &Mat) -> Mat {
+    let n = points.rows;
+    let mut d = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut s = 0.0;
+            for c in 0..points.cols {
+                let diff = points[(i, c)] - points[(j, c)];
+                s += diff * diff;
+            }
+            let v = s.sqrt();
+            d[(i, j)] = v;
+            d[(j, i)] = v;
+        }
+    }
+    d
+}
+
+/// Stress: relative Frobenius error between `dist` and the embedding's
+/// pairwise distances. 0 = perfect.
+pub fn stress(dist: &Mat, coords: &Mat) -> f64 {
+    let recon = pairwise_distances(coords);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..dist.rows {
+        for j in 0..dist.cols {
+            let e = dist[(i, j)] - recon[(i, j)];
+            num += e * e;
+            den += dist[(i, j)] * dist[(i, j)];
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::prop_check;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn recovers_euclidean_configuration() {
+        prop_check("mds-euclidean", 8, |g| {
+            let n = g.usize_in(3, 12);
+            let k = g.usize_in(1, 4);
+            let pts = Mat::from_vec(n, k, g.normal_vec(n * k));
+            let dist = pairwise_distances(&pts);
+            let emb = classical_mds(&dist, k);
+            assert!(stress(&dist, &emb) < 1e-7, "n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn embedding_shape() {
+        let mut rng = Pcg64::seed(2);
+        let pts = Mat::from_vec(6, 2, rng.normals(12));
+        let dist = pairwise_distances(&pts);
+        let emb = classical_mds(&dist, 4);
+        assert_eq!((emb.rows, emb.cols), (6, 4));
+    }
+
+    #[test]
+    fn lower_dim_embedding_reduces_but_bounded() {
+        let mut rng = Pcg64::seed(3);
+        let pts = Mat::from_vec(10, 3, rng.normals(30));
+        let dist = pairwise_distances(&pts);
+        let s3 = stress(&dist, &classical_mds(&dist, 3));
+        let s1 = stress(&dist, &classical_mds(&dist, 1));
+        assert!(s3 < 1e-7);
+        assert!(s1 >= s3);
+        assert!(s1 < 1.0);
+    }
+
+    #[test]
+    fn non_euclidean_graph_distances_still_embed() {
+        // path-graph hop distances (Euclidean in 1-D, actually)
+        let n = 8;
+        let dist = Mat::from_fn(n, n, |i, j| (i as f64 - j as f64).abs());
+        let emb = classical_mds(&dist, 2);
+        assert!(stress(&dist, &emb) < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_all_zero_distances() {
+        let dist = Mat::zeros(5, 5);
+        let emb = classical_mds(&dist, 2);
+        assert!(emb.max_abs() < 1e-10);
+        assert_eq!(stress(&dist, &emb), 0.0);
+    }
+
+    #[test]
+    fn pairwise_distance_properties() {
+        prop_check("pairwise-dist", 8, |g| {
+            let n = g.usize_in(2, 10);
+            let pts = Mat::from_vec(n, 3, g.normal_vec(n * 3));
+            let d = pairwise_distances(&pts);
+            for i in 0..n {
+                assert_eq!(d[(i, i)], 0.0);
+                for j in 0..n {
+                    assert!((d[(i, j)] - d[(j, i)]).abs() < 1e-15);
+                    assert!(d[(i, j)] >= 0.0);
+                }
+            }
+        });
+    }
+}

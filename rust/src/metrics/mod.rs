@@ -1,0 +1,108 @@
+//! The paper's Section 6.1 performance metrics: RMSE, MNLP, incurred
+//! time, and speedup.
+
+/// Root mean square error: sqrt(|U|⁻¹ Σ (y - μ)²).
+pub fn rmse(y_true: &[f64], mean: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), mean.len());
+    assert!(!y_true.is_empty());
+    let s: f64 = y_true
+        .iter()
+        .zip(mean.iter())
+        .map(|(y, m)| (y - m) * (y - m))
+        .sum();
+    (s / y_true.len() as f64).sqrt()
+}
+
+/// Mean negative log probability:
+/// 0.5·|U|⁻¹ Σ ((y-μ)²/σ² + log(2πσ²)).
+///
+/// Negative *variances* (possible for pICF with too-small rank R — the
+/// paper's Remark 2 after Theorem 3) make the log undefined; following
+/// the paper's plots (which show "negative MNLP" pathologies), we clamp
+/// σ² at a tiny positive floor and let the metric blow up rather than
+/// NaN, so the pathology is visible in the curves.
+pub fn mnlp(y_true: &[f64], mean: &[f64], var: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), mean.len());
+    assert_eq!(y_true.len(), var.len());
+    assert!(!y_true.is_empty());
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let s: f64 = (0..y_true.len())
+        .map(|i| {
+            let v = var[i].max(1e-300);
+            let d = y_true[i] - mean[i];
+            d * d / v + (two_pi * v).ln()
+        })
+        .sum();
+    0.5 * s / y_true.len() as f64
+}
+
+/// Fraction of predictive variances that are non-positive (the pICF
+/// pathology indicator).
+pub fn frac_nonpositive_var(var: &[f64]) -> f64 {
+    if var.is_empty() {
+        return 0.0;
+    }
+    var.iter().filter(|&&v| v <= 0.0).count() as f64 / var.len() as f64
+}
+
+/// Speedup of a parallel run over its centralized counterpart
+/// (Section 6.1(d)); ideal speedup is the machine count M.
+pub fn speedup(centralized_secs: f64, parallel_secs: f64) -> f64 {
+    assert!(parallel_secs > 0.0);
+    centralized_secs / parallel_secs
+}
+
+/// Efficiency = speedup / M ∈ (0, 1] against ideal.
+pub fn efficiency(centralized_secs: f64, parallel_secs: f64, m: usize) -> f64 {
+    speedup(centralized_secs, parallel_secs) / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn rmse_known_values() {
+        assert_close(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0, 0.0, 1e-15);
+        assert_close(rmse(&[0.0, 0.0], &[3.0, 4.0]),
+                     (12.5f64).sqrt(), 1e-12, 0.0);
+    }
+
+    #[test]
+    fn mnlp_perfect_prediction_depends_on_variance() {
+        // exact mean: MNLP = 0.5·log(2πσ²); smaller σ is better
+        let tight = mnlp(&[1.0], &[1.0], &[0.01]);
+        let loose = mnlp(&[1.0], &[1.0], &[1.0]);
+        assert!(tight < loose);
+        assert_close(loose, 0.5 * (2.0 * std::f64::consts::PI).ln(), 1e-12, 0.0);
+    }
+
+    #[test]
+    fn mnlp_penalizes_overconfidence() {
+        // wrong mean with tiny variance must be much worse than with
+        // honest variance
+        let overconfident = mnlp(&[0.0], &[3.0], &[1e-4]);
+        let honest = mnlp(&[0.0], &[3.0], &[9.0]);
+        assert!(overconfident > honest);
+    }
+
+    #[test]
+    fn mnlp_survives_nonpositive_variance() {
+        let v = mnlp(&[0.0], &[0.0], &[-1.0]);
+        assert!(v.is_finite() || v == f64::INFINITY);
+        assert_eq!(frac_nonpositive_var(&[-1.0, 0.5, 0.0]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn speedup_and_efficiency() {
+        assert_close(speedup(10.0, 2.0), 5.0, 1e-15, 0.0);
+        assert_close(efficiency(10.0, 2.0, 10), 0.5, 1e-15, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rmse_length_mismatch() {
+        rmse(&[1.0], &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,61 @@
+//! The paper's contribution: parallel GP regression protocols over the
+//! simulated cluster — pPITC (Section 3), pPIC (Definition 5), and
+//! pICF-based GP (Section 4) — plus online/incremental assimilation
+//! (§5.2).
+//!
+//! Every protocol follows the paper's step structure exactly; block-level
+//! math is dispatched through a [`crate::runtime::Backend`] so the same
+//! coordinator code runs on the native backend (sweeps) or the PJRT
+//! artifacts (serving hot path). Equivalence to the centralized
+//! counterparts (Theorems 1–3) is asserted by property tests.
+
+pub mod online;
+pub mod picf;
+pub mod ppic;
+pub mod ppitc;
+
+use crate::cluster::{NetworkModel, RunMetrics};
+use crate::gp::Prediction;
+
+/// Cluster configuration for a protocol run.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub machines: usize,
+    pub net: NetworkModel,
+}
+
+impl ClusterSpec {
+    pub fn new(machines: usize) -> ClusterSpec {
+        ClusterSpec { machines, net: NetworkModel::gigabit() }
+    }
+}
+
+/// Result of a protocol run: the predictive distribution (in original
+/// test-row order) plus the simulated-run metrics.
+#[derive(Debug, Clone)]
+pub struct ProtocolOutput {
+    pub prediction: Prediction,
+    pub metrics: RunMetrics,
+}
+
+/// Bytes of a f64 payload of `n` elements.
+pub(crate) fn f64_bytes(n: usize) -> usize {
+    n * std::mem::size_of::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_spec_default_net() {
+        let s = ClusterSpec::new(8);
+        assert_eq!(s.machines, 8);
+        assert_eq!(s.net, NetworkModel::gigabit());
+    }
+
+    #[test]
+    fn f64_bytes_counts() {
+        assert_eq!(f64_bytes(3), 24);
+    }
+}

@@ -1,0 +1,268 @@
+//! pPIC — Definition 5 over the simulated cluster: pPITC's summary
+//! machinery plus each machine's local data in its own block prediction,
+//! optionally preceded by the parallelized clustering scheme (Remark 2)
+//! whose extra O(|D|) time and O((|D|/M)·log M) traffic Table 1 charges.
+
+use super::{f64_bytes, ClusterSpec, ProtocolOutput};
+use crate::cluster::mpi::MASTER;
+use crate::cluster::Cluster;
+use crate::data::partition::{cluster_partition, random_partition};
+use crate::gp::summaries::{GlobalSummary, SupportContext};
+use crate::gp::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+use crate::util::{Pcg64, Stopwatch};
+
+/// Partitioning mode for Step 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partitioning {
+    /// random even partition (no extra cost)
+    Random,
+    /// the paper's parallelized clustering scheme (charged to the run)
+    Clustered,
+}
+
+/// Run the pPIC protocol. Returns predictions in original `xu` row order.
+///
+/// Unlike [`super::ppitc::run`], the partition is produced *inside* the
+/// run (seeded by `seed`) because the clustering scheme is part of the
+/// protocol and its cost must appear in the metrics.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    partitioning: Partitioning,
+    seed: u64,
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> ProtocolOutput {
+    let m = spec.machines;
+    let n = xd.rows;
+    let u = xu.rows;
+    assert!(n % m == 0 && u % m == 0, "Definition 1 needs m | n and m | u");
+    let s = xs.rows;
+    let mut cluster = Cluster::new(m, spec.net.clone());
+    let mut rng = Pcg64::new(seed, 0x9C);
+
+    // STEP 1: partition. The clustering scheme runs across machines —
+    // each computes distances for its share of points — so its measured
+    // time is divided evenly among nodes, and reassignment is an
+    // all-to-all exchange of ~|D|/M + |U|/M points per machine.
+    let (d_blocks, u_blocks) = match partitioning {
+        Partitioning::Random => {
+            (random_partition(n, m, &mut rng), random_partition(u, m, &mut rng))
+        }
+        Partitioning::Clustered => {
+            let (p, secs) =
+                Stopwatch::time(|| cluster_partition(xd, xu, m, &mut rng));
+            for id in 0..m {
+                cluster.charge_compute(id, secs / m as f64);
+            }
+            let moved_per_pair =
+                ((n / m + u / m) * (xd.cols + 1)) / m.max(1);
+            cluster.alltoall(f64_bytes(moved_per_pair));
+            (p.d_blocks, p.u_blocks)
+        }
+    };
+    cluster.phase("partition");
+
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+
+    // STEP 2: local summaries.
+    let locals = cluster.compute_all(|mid| {
+        let xm = xd.select_rows(&d_blocks[mid]);
+        let ym: Vec<f64> =
+            d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        backend.local_summary(hyp, &xm, &ym, xs)
+    });
+    cluster.phase("local_summary");
+
+    // STEP 3: reduce + assimilate + broadcast.
+    cluster.reduce_to_master(f64_bytes(s * s + s));
+    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+        let ctx = SupportContext::new(hyp, xs);
+        let refs: Vec<_> = locals.iter().collect();
+        crate::gp::summaries::global_summary(&ctx, &refs)
+    });
+    cluster.bcast_from_master(f64_bytes(s * s + s));
+    cluster.phase("global_summary");
+
+    // STEP 4: distributed predictions with local data (Definition 5).
+    let preds: Vec<Prediction> = cluster.compute_all(|mid| {
+        let xu_m = xu.select_rows(&u_blocks[mid]);
+        let xm = xd.select_rows(&d_blocks[mid]);
+        let ym: Vec<f64> =
+            d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        let mut p = backend.ppic_predict(hyp, &xu_m, xs, &xm, &ym,
+                                         &locals[mid], &global);
+        p.shift_mean(y_mean);
+        p
+    });
+    cluster.phase("predict");
+
+    let max_u = u_blocks.iter().map(Vec::len).max().unwrap_or(0);
+    cluster.gather_to_master(f64_bytes(2 * max_u));
+    cluster.phase("collect");
+
+    ProtocolOutput {
+        prediction: Prediction::scatter(&preds, &u_blocks, u),
+        metrics: cluster.finish(),
+    }
+}
+
+/// Deterministic variant taking externally-fixed partitions (tests and
+/// backend-agreement checks need identical blocks across runs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_partition(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    u_blocks: &[Vec<usize>],
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> ProtocolOutput {
+    let m = spec.machines;
+    let s = xs.rows;
+    let mut cluster = Cluster::new(m, spec.net.clone());
+    cluster.phase("partition");
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let locals = cluster.compute_all(|mid| {
+        let xm = xd.select_rows(&d_blocks[mid]);
+        let ym: Vec<f64> =
+            d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        backend.local_summary(hyp, &xm, &ym, xs)
+    });
+    cluster.phase("local_summary");
+    cluster.reduce_to_master(f64_bytes(s * s + s));
+    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+        let ctx = SupportContext::new(hyp, xs);
+        let refs: Vec<_> = locals.iter().collect();
+        crate::gp::summaries::global_summary(&ctx, &refs)
+    });
+    cluster.bcast_from_master(f64_bytes(s * s + s));
+    cluster.phase("global_summary");
+    let preds: Vec<Prediction> = cluster.compute_all(|mid| {
+        let xu_m = xu.select_rows(&u_blocks[mid]);
+        let xm = xd.select_rows(&d_blocks[mid]);
+        let ym: Vec<f64> =
+            d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        let mut p = backend.ppic_predict(hyp, &xu_m, xs, &xm, &ym,
+                                         &locals[mid], &global);
+        p.shift_mean(y_mean);
+        p
+    });
+    cluster.phase("predict");
+    let max_u = u_blocks.iter().map(Vec::len).max().unwrap_or(0);
+    cluster.gather_to_master(f64_bytes(2 * max_u));
+    cluster.phase("collect");
+    ProtocolOutput {
+        prediction: Prediction::scatter(&preds, u_blocks, xu.rows),
+        metrics: cluster.finish(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::pic::{pic_direct_oracle, PicGp};
+    use crate::runtime::NativeBackend;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_all_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.3, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// THEOREM 2, protocol side: distributed pPIC == centralized PIC ==
+    /// the literal eqs. (15)-(16), all on the same partition.
+    #[test]
+    fn theorem2_ppic_equals_centralized_and_direct() {
+        prop_check("thm2-protocol", 6, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let u = m * g.usize_in(1, 3);
+            let s = g.usize_in(2, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+            let u_blocks = random_partition(u, m, g.rng());
+
+            let out = run_with_partition(&hyp, &xd, &y, &xs, &xu, &d_blocks,
+                                         &u_blocks, &NativeBackend,
+                                         &ClusterSpec::new(m));
+            let centralized = PicGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+            let want_c = centralized.predict(&xu, &u_blocks);
+            assert_all_close(&out.prediction.mean, &want_c.mean, 1e-9, 1e-9);
+            assert_all_close(&out.prediction.var, &want_c.var, 1e-9, 1e-9);
+
+            let want_d = pic_direct_oracle(&hyp, &xd, &y, &xs, &xu,
+                                           &d_blocks, &u_blocks);
+            assert_all_close(&out.prediction.mean, &want_d.mean, 1e-6, 1e-6);
+            assert_all_close(&out.prediction.var, &want_d.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// The clustered run includes the partition phase costs (Table 1's
+    /// extra O(|D|) time and alltoall traffic vs random partitioning).
+    #[test]
+    fn clustering_phase_charged() {
+        let mut rng = crate::util::Pcg64::seed(9);
+        let (n, u, s, m, d) = (24, 8, 4, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+
+        let rand_run = run(&hyp, &xd, &y, &xs, &xu, Partitioning::Random, 1,
+                           &NativeBackend, &ClusterSpec::new(m));
+        let clus_run = run(&hyp, &xd, &y, &xs, &xu, Partitioning::Clustered, 1,
+                           &NativeBackend, &ClusterSpec::new(m));
+        // clustered partition phase strictly more expensive
+        let rp = rand_run.metrics.phase_duration(0);
+        let cp = clus_run.metrics.phase_duration(0);
+        assert!(cp > rp, "clustered {cp} vs random {rp}");
+        assert!(clus_run.metrics.bytes_sent > rand_run.metrics.bytes_sent);
+        // both produce finite predictions over all of U
+        assert_eq!(clus_run.prediction.len(), u);
+        assert!(clus_run.prediction.mean.iter().all(|v| v.is_finite()));
+    }
+
+    /// Exact structural identity: PIC with M = 1 *is* FGP, whatever the
+    /// support set — the own-block correction restores Γ_DD + Λ = Σ_DD
+    /// and Γ̃_UD = Σ_UD. Strong end-to-end check of the pPIC algebra.
+    #[test]
+    fn single_machine_ppic_is_fgp() {
+        let mut rng = crate::util::Pcg64::seed(13);
+        let (n, u, d, s) = (14, 5, 2, 3);
+        let hyp = SeArd::isotropic(d, 0.9, 1.3, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+        let d_blocks = vec![(0..n).collect::<Vec<_>>()];
+        let u_blocks = vec![(0..u).collect::<Vec<_>>()];
+        let pic = run_with_partition(&hyp, &xd, &y, &xs, &xu, &d_blocks,
+                                     &u_blocks, &NativeBackend,
+                                     &ClusterSpec::new(1));
+        let fgp = crate::gp::FullGp::fit(&hyp, &xd, &y);
+        let want = fgp.predict(&xu);
+        assert_all_close(&pic.prediction.mean, &want.mean, 1e-6, 1e-6);
+        assert_all_close(&pic.prediction.var, &want.var, 1e-6, 1e-6);
+    }
+}

@@ -1,0 +1,177 @@
+//! pPITC — Section 3, Steps 1–4, over the simulated cluster.
+//!
+//! Step 1 (distribute data) is assumed done (Table 1 assumption (c): the
+//! data is already distributed); Step 2 computes local summaries on every
+//! machine; Step 3 reduces them to the master and broadcasts the global
+//! summary back; Step 4 distributes predictions. A final `collect` phase
+//! gathers predictions to the master for reporting — it is *outside* the
+//! paper's protocol, so it is recorded as a separate phase.
+
+use super::{f64_bytes, ClusterSpec, ProtocolOutput};
+use crate::cluster::mpi::MASTER;
+use crate::cluster::Cluster;
+use crate::gp::summaries::{GlobalSummary, SupportContext};
+use crate::gp::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+
+/// Run the pPITC protocol.
+///
+/// * `d_blocks[m]` / `u_blocks[m]` — machine m's training/test rows
+///   (Definition 1 partitions; use `data::partition`).
+/// * predictions are returned in the original row order of `xu`.
+pub fn run(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    u_blocks: &[Vec<usize>],
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> ProtocolOutput {
+    let m = spec.machines;
+    assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
+    assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
+    let s = xs.rows;
+    let mut cluster = Cluster::new(m, spec.net.clone());
+
+    // prior mean: empirical train mean (known to all machines — each can
+    // compute its block sum; we charge the master the negligible combine)
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+
+    // STEP 2: local summaries, one per machine.
+    let locals = cluster.compute_all(|mid| {
+        let xm = xd.select_rows(&d_blocks[mid]);
+        let ym: Vec<f64> =
+            d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        backend.local_summary(hyp, &xm, &ym, xs)
+    });
+    cluster.phase("local_summary");
+
+    // STEP 3: reduce local summaries to master, assimilate, broadcast.
+    cluster.reduce_to_master(f64_bytes(s * s + s));
+    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+        let ctx = SupportContext::new(hyp, xs);
+        let refs: Vec<_> = locals.iter().collect();
+        crate::gp::summaries::global_summary(&ctx, &refs)
+    });
+    cluster.bcast_from_master(f64_bytes(s * s + s));
+    cluster.phase("global_summary");
+
+    // STEP 4: distributed predictions.
+    let preds: Vec<Prediction> = cluster.compute_all(|mid| {
+        let xu_m = xu.select_rows(&u_blocks[mid]);
+        let mut p = backend.ppitc_predict(hyp, &xu_m, xs, &global);
+        p.shift_mean(y_mean);
+        p
+    });
+    cluster.phase("predict");
+
+    // collect (reporting only; not part of the paper's incurred time)
+    let max_u = u_blocks.iter().map(Vec::len).max().unwrap_or(0);
+    cluster.gather_to_master(f64_bytes(2 * max_u));
+    cluster.phase("collect");
+
+    ProtocolOutput {
+        prediction: Prediction::scatter(&preds, u_blocks, xu.rows),
+        metrics: cluster.finish(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NetworkModel;
+    use crate::data::partition::random_partition;
+    use crate::gp::pitc::PitcGp;
+    use crate::runtime::NativeBackend;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_all_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.3, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// THEOREM 1, protocol side: the full distributed run (partitioned
+    /// predictions included) equals centralized PITC on the same blocks.
+    #[test]
+    fn theorem1_ppitc_equals_centralized_pitc() {
+        prop_check("thm1-protocol", 6, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 5);
+            let n = m * g.usize_in(2, 5);
+            let u = m * g.usize_in(1, 3);
+            let s = g.usize_in(2, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+            let u_blocks = random_partition(u, m, g.rng());
+
+            let out = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                          &NativeBackend, &ClusterSpec::new(m));
+            let centralized = PitcGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+            let want = centralized.predict(&xu);
+            assert_all_close(&out.prediction.mean, &want.mean, 1e-9, 1e-9);
+            assert_all_close(&out.prediction.var, &want.var, 1e-9, 1e-9);
+        });
+    }
+
+    /// Protocol metrics: phases in order, traffic matches the O(|S|² log M)
+    /// communication complexity of Table 1.
+    #[test]
+    fn metrics_shape() {
+        let mut g_rng = crate::util::Pcg64::seed(3);
+        let (n, u, s, m, d) = (12, 4, 3, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, g_rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, g_rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, g_rng.normals(u * d));
+        let y = g_rng.normals(n);
+        let d_blocks = random_partition(n, m, &mut g_rng);
+        let u_blocks = random_partition(u, m, &mut g_rng);
+        let out = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                      &NativeBackend, &ClusterSpec::new(m));
+        let names: Vec<&str> =
+            out.metrics.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names,
+                   vec!["local_summary", "global_summary", "predict", "collect"]);
+        // reduce + bcast of (s²+s) doubles across m-1 senders, plus the
+        // collect gather of 2·u/m values
+        let summary_bytes = 8 * (s * s + s) * (m - 1) * 2;
+        let collect_bytes = 8 * 2 * (u / m) * (m - 1);
+        assert_eq!(out.metrics.bytes_sent, summary_bytes + collect_bytes);
+        assert!(out.metrics.makespan > 0.0);
+        assert!(out.metrics.max_compute <= out.metrics.total_compute);
+    }
+
+    /// The simulated makespan must beat the serial sum of compute when
+    /// M > 1 (that is the whole point of the protocol).
+    #[test]
+    fn parallelism_visible_in_makespan() {
+        let mut rng = crate::util::Pcg64::seed(5);
+        let (n, u, s, m, d) = (60, 10, 6, 5, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+        let d_blocks = random_partition(n, m, &mut rng);
+        let u_blocks = random_partition(u, m, &mut rng);
+        let out = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                      &NativeBackend,
+                      &ClusterSpec { machines: m, net: NetworkModel::instant() });
+        assert!(out.metrics.makespan < out.metrics.total_compute,
+                "makespan {} !< total {}", out.metrics.makespan,
+                out.metrics.total_compute);
+    }
+}

@@ -1,0 +1,228 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime. The runtime only ever loads artifacts through
+//! this manifest — shapes, input order and output arity are all pinned
+//! here at build time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered graph: file name, ordered input shapes, output arity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    pub file: String,
+    /// (name, shape) in call order; scalars are rank-1 [n] vectors here
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: usize,
+    pub sha256: String,
+}
+
+/// One shape profile (d, B, S, U, R) with its six graphs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileSpec {
+    pub name: String,
+    pub d: usize,
+    pub block: usize,
+    pub support: usize,
+    pub pred_block: usize,
+    pub rank: usize,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub profiles: BTreeMap<String, ProfileSpec>,
+}
+
+/// The graph names every profile must provide.
+pub const REQUIRED_GRAPHS: [&str; 6] = [
+    "local_summary",
+    "ppitc_predict",
+    "ppic_predict",
+    "icf_local",
+    "icf_global",
+    "icf_predict",
+];
+
+impl ArtifactManifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        if root.get("dtype").and_then(Json::as_str) != Some("float64") {
+            bail!("manifest dtype is not float64");
+        }
+
+        let mut profiles = BTreeMap::new();
+        let profs = root
+            .get("profiles")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing profiles"))?;
+        for (pname, p) in profs {
+            let field = |k: &str| -> Result<usize> {
+                p.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("profile {pname}: missing {k}"))
+            };
+            let mut graphs = BTreeMap::new();
+            let gobj = p
+                .get("graphs")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("profile {pname}: missing graphs"))?;
+            for (gname, g) in gobj {
+                let file = g
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{pname}/{gname}: missing file"))?
+                    .to_string();
+                let inputs = g
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{pname}/{gname}: missing inputs"))?
+                    .iter()
+                    .map(|i| -> Result<(String, Vec<usize>)> {
+                        let triple = i
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("bad input entry"))?;
+                        let name = triple[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad input name"))?
+                            .to_string();
+                        let shape = triple[1]
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("bad input shape"))?
+                            .iter()
+                            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<usize>>>()?;
+                        Ok((name, shape))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = g
+                    .get("outputs")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{pname}/{gname}: missing outputs"))?;
+                let sha256 = g
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string();
+                graphs.insert(
+                    gname.clone(),
+                    GraphSpec { file, inputs, outputs, sha256 },
+                );
+            }
+            for req in REQUIRED_GRAPHS {
+                if !graphs.contains_key(req) {
+                    bail!("profile {pname}: missing graph {req}");
+                }
+            }
+            profiles.insert(
+                pname.clone(),
+                ProfileSpec {
+                    name: pname.clone(),
+                    d: field("d")?,
+                    block: field("block")?,
+                    support: field("support")?,
+                    pred_block: field("pred_block")?,
+                    rank: field("rank")?,
+                    graphs,
+                },
+            );
+        }
+        Ok(ArtifactManifest { dir, profiles })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileSpec> {
+        self.profiles
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown profile {name} (have: {:?})",
+                                   self.profiles.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of a graph's HLO text file.
+    pub fn graph_path(&self, profile: &str, graph: &str) -> Result<PathBuf> {
+        let p = self.profile(profile)?;
+        let g = p
+            .graphs
+            .get(graph)
+            .ok_or_else(|| anyhow!("profile {profile}: no graph {graph}"))?;
+        Ok(self.dir.join(&g.file))
+    }
+}
+
+/// Default artifacts directory: `$PGPR_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("PGPR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<ArtifactManifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(ArtifactManifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // `make artifacts` must run before `cargo test` (the Makefile
+        // enforces this); skip quietly if absent (e.g. docs-only builds).
+        let Some(m) = repo_artifacts() else { return };
+        let tiny = m.profile("tiny").unwrap();
+        assert_eq!(tiny.d, 3);
+        assert_eq!(tiny.graphs.len(), 6);
+        for g in REQUIRED_GRAPHS {
+            let path = m.graph_path("tiny", g).unwrap();
+            assert!(path.exists(), "{path:?}");
+        }
+        // input shape sanity for local_summary: (B,d), (B,), (S,d), (d+2,)
+        let ls = &tiny.graphs["local_summary"];
+        assert_eq!(ls.inputs[0].1, vec![tiny.block, tiny.d]);
+        assert_eq!(ls.inputs[1].1, vec![tiny.block]);
+        assert_eq!(ls.inputs[2].1, vec![tiny.support, tiny.d]);
+        assert_eq!(ls.inputs[3].1, vec![tiny.d + 2]);
+        assert_eq!(ls.outputs, 3);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let dir = std::env::temp_dir().join("pgpr_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"),
+                       r#"{"format": "protobuf", "dtype": "float64",
+                           "profiles": {}}"#).unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"),
+                       r#"{"format": "hlo-text", "dtype": "float64",
+                           "profiles": {"p": {"d": 1, "block": 2,
+                           "support": 3, "pred_block": 4, "rank": 5,
+                           "graphs": {}}}}"#).unwrap();
+        let err = ArtifactManifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing graph"));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactManifest::load("/nonexistent/really").is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! The [`Backend`] trait: the six block-level operations every protocol
+//! step dispatches through, each corresponding 1:1 to an AOT graph.
+//!
+//! * [`NativeBackend`] — pure-rust (`gp::summaries`), any shapes; used by
+//!   the simulator sweeps and as the numerical reference.
+//! * [`crate::runtime::PjrtBackend`] — executes the HLO-text artifacts on
+//!   the PJRT CPU client; shapes pinned by the manifest; the serving hot
+//!   path. Integration tests assert the two agree.
+
+use crate::gp::summaries::{
+    self, GlobalSummary, IcfGlobalSummary, IcfLocalSummary, LocalSummary,
+    SupportContext,
+};
+use crate::gp::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+
+/// Block-level compute operations (Definitions 2–8 of the paper).
+///
+/// Conventions: `ym` is already centered; every call is self-contained
+/// (stateless w.r.t. previous calls) so implementations are trivially
+/// shareable across simulated nodes.
+pub trait Backend: Send + Sync {
+    /// Definition 2: `(ẏ_S, Σ̇_SS, chol(Σ_mm|S))`.
+    fn local_summary(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xs: &Mat)
+        -> LocalSummary;
+
+    /// Definition 4: pPITC block prediction from the global summary.
+    fn ppitc_predict(&self, hyp: &SeArd, xu: &Mat, xs: &Mat,
+                     glob: &GlobalSummary) -> Prediction;
+
+    /// Definition 5: pPIC block prediction (global + machine-local data).
+    #[allow(clippy::too_many_arguments)]
+    fn ppic_predict(&self, hyp: &SeArd, xu: &Mat, xs: &Mat, xm: &Mat,
+                    ym: &[f64], local: &LocalSummary, glob: &GlobalSummary)
+                    -> Prediction;
+
+    /// Definition 6: ICF local summary from the machine's factor slab.
+    fn icf_local(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xu: &Mat,
+                 f_m: &Mat) -> IcfLocalSummary;
+
+    /// Definition 7: ICF global summary from summed local summaries.
+    fn icf_global(&self, hyp: &SeArd, sum_y: &[f64], sum_s: &Mat,
+                  sum_phi: &Mat) -> IcfGlobalSummary;
+
+    /// Definition 8: machine m's predictive component.
+    fn icf_predict(&self, hyp: &SeArd, xu: &Mat, xm: &Mat, ym: &[f64],
+                   s_dot_m: &Mat, glob: &IcfGlobalSummary) -> Prediction;
+
+    /// Human-readable backend name (logs/metrics).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend delegating to [`crate::gp::summaries`].
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn local_summary(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xs: &Mat)
+        -> LocalSummary
+    {
+        let ctx = SupportContext::new(hyp, xs);
+        summaries::local_summary(hyp, xm, ym, &ctx)
+    }
+
+    fn ppitc_predict(&self, hyp: &SeArd, xu: &Mat, xs: &Mat,
+                     glob: &GlobalSummary) -> Prediction
+    {
+        let ctx = SupportContext::new(hyp, xs);
+        let l_g = summaries::chol_global(glob);
+        summaries::ppitc_predict(hyp, xu, &ctx, glob, &l_g)
+    }
+
+    fn ppic_predict(&self, hyp: &SeArd, xu: &Mat, xs: &Mat, xm: &Mat,
+                    ym: &[f64], local: &LocalSummary, glob: &GlobalSummary)
+                    -> Prediction
+    {
+        let ctx = SupportContext::new(hyp, xs);
+        let l_g = summaries::chol_global(glob);
+        summaries::ppic_predict(hyp, xu, xm, ym, local, &ctx, glob, &l_g)
+    }
+
+    fn icf_local(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xu: &Mat,
+                 f_m: &Mat) -> IcfLocalSummary
+    {
+        summaries::icf_local(hyp, xm, ym, xu, f_m)
+    }
+
+    fn icf_global(&self, hyp: &SeArd, sum_y: &[f64], sum_s: &Mat,
+                  sum_phi: &Mat) -> IcfGlobalSummary
+    {
+        // repackage the pre-summed inputs as a single pseudo-local
+        let pseudo = IcfLocalSummary {
+            y_dot: sum_y.to_vec(),
+            s_dot: sum_s.clone(),
+            phi: sum_phi.clone(),
+        };
+        summaries::icf_global(hyp, &[&pseudo])
+    }
+
+    fn icf_predict(&self, hyp: &SeArd, xu: &Mat, xm: &Mat, ym: &[f64],
+                   s_dot_m: &Mat, glob: &IcfGlobalSummary) -> Prediction
+    {
+        summaries::icf_predict_component(hyp, xu, xm, ym, s_dot_m, glob)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::summaries::global_summary;
+    use crate::testkit::assert_all_close;
+    use crate::util::Pcg64;
+
+    /// The backend indirection must be numerically identical to calling
+    /// gp::summaries directly.
+    #[test]
+    fn native_backend_matches_direct_calls() {
+        let mut rng = Pcg64::seed(21);
+        let d = 2;
+        let (b, s, u) = (6, 4, 5);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.05);
+        let xm = Mat::from_vec(b, d, rng.normals(b * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let ym = rng.normals(b);
+
+        let be = NativeBackend;
+        let loc = be.local_summary(&hyp, &xm, &ym, &xs);
+        let ctx = SupportContext::new(&hyp, &xs);
+        let loc2 = summaries::local_summary(&hyp, &xm, &ym, &ctx);
+        assert_all_close(&loc.y_dot, &loc2.y_dot, 1e-14, 1e-14);
+        assert!(loc.s_dot.max_abs_diff(&loc2.s_dot) < 1e-14);
+
+        let glob = global_summary(&ctx, &[&loc2]);
+        let p1 = be.ppitc_predict(&hyp, &xu, &xs, &glob);
+        let l_g = summaries::chol_global(&glob);
+        let p2 = summaries::ppitc_predict(&hyp, &xu, &ctx, &glob, &l_g);
+        assert_all_close(&p1.mean, &p2.mean, 1e-14, 1e-14);
+        assert_all_close(&p1.var, &p2.var, 1e-14, 1e-14);
+
+        let p3 = be.ppic_predict(&hyp, &xu, &xs, &xm, &ym, &loc, &glob);
+        let p4 = summaries::ppic_predict(&hyp, &xu, &xm, &ym, &loc2, &ctx,
+                                         &glob, &l_g);
+        assert_all_close(&p3.mean, &p4.mean, 1e-14, 1e-14);
+    }
+
+    #[test]
+    fn icf_global_pseudo_local_equivalence() {
+        let mut rng = Pcg64::seed(22);
+        let (r, u) = (4, 3);
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
+        let f = Mat::from_vec(r, 6, rng.normals(r * 6));
+        let phi = crate::linalg::matmul_nt(&f, &f);
+        let sum_y = rng.normals(r);
+        let sum_s = Mat::from_vec(r, u, rng.normals(r * u));
+        let be = NativeBackend;
+        let g = be.icf_global(&hyp, &sum_y, &sum_s, &phi);
+        // Φ g.y == sum_y
+        let mut phi_full = Mat::identity(r);
+        let inv_sn2 = 1.0 / hyp.sn2();
+        for i in 0..r {
+            for j in 0..r {
+                phi_full[(i, j)] += inv_sn2 * phi[(i, j)];
+            }
+        }
+        let back = crate::linalg::matvec(&phi_full, &g.y);
+        assert_all_close(&back, &sum_y, 1e-10, 1e-10);
+    }
+}

@@ -1,0 +1,12 @@
+//! Execution runtime: the [`Backend`] abstraction over the six
+//! block-level graph operations, with a native-rust implementation and a
+//! PJRT implementation that loads the AOT HLO-text artifacts built by
+//! `python/compile/aot.py` (the three-layer hot path).
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, GraphSpec, ProfileSpec};
+pub use backend::{Backend, NativeBackend};
+pub use pjrt::PjrtBackend;

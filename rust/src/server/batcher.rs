@@ -1,0 +1,146 @@
+//! Dynamic batching: group routed requests into per-machine batches,
+//! flushing on size (the AOT `pred_block`) or age (max wait). Classic
+//! serving trade-off: bigger batches amortize the per-call overhead of
+//! the compiled graph; the wait bound caps tail latency.
+
+/// One flushed batch for a machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub machine: usize,
+    /// request ids in batch order
+    pub ids: Vec<u64>,
+    /// row-major query inputs (ids.len() × d)
+    pub xs: Vec<f64>,
+    /// arrival time (seconds) of the oldest request in the batch
+    pub oldest_arrival: f64,
+}
+
+/// Size-or-age batcher with one open batch per machine.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_wait_s: f64,
+    d: usize,
+    open: Vec<Option<Batch>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(machines: usize, d: usize, max_batch: usize, max_wait_s: f64)
+        -> DynamicBatcher
+    {
+        assert!(max_batch >= 1);
+        DynamicBatcher {
+            max_batch,
+            max_wait_s,
+            d,
+            open: (0..machines).map(|_| None).collect(),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Add a routed request; returns a batch if the machine's batch
+    /// became full.
+    pub fn push(&mut self, machine: usize, id: u64, x: &[f64], now: f64)
+        -> Option<Batch>
+    {
+        assert_eq!(x.len(), self.d, "query dim");
+        let slot = &mut self.open[machine];
+        let batch = slot.get_or_insert_with(|| Batch {
+            machine,
+            ids: Vec::with_capacity(self.max_batch),
+            xs: Vec::with_capacity(self.max_batch * self.d),
+            oldest_arrival: now,
+        });
+        batch.ids.push(id);
+        batch.xs.extend_from_slice(x);
+        if batch.ids.len() >= self.max_batch {
+            slot.take()
+        } else {
+            None
+        }
+    }
+
+    /// Flush batches whose oldest request has waited past the bound.
+    pub fn flush_expired(&mut self, now: f64) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for slot in self.open.iter_mut() {
+            let expired = slot
+                .as_ref()
+                .is_some_and(|b| now - b.oldest_arrival >= self.max_wait_s);
+            if expired {
+                out.push(slot.take().unwrap());
+            }
+        }
+        out
+    }
+
+    /// Flush everything (end of stream).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        self.open.iter_mut().filter_map(Option::take).collect()
+    }
+
+    /// Number of requests currently waiting.
+    pub fn pending(&self) -> usize {
+        self.open.iter().flatten().map(|b| b.ids.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = DynamicBatcher::new(2, 1, 3, 1.0);
+        assert!(b.push(0, 1, &[0.1], 0.0).is_none());
+        assert!(b.push(0, 2, &[0.2], 0.0).is_none());
+        let full = b.push(0, 3, &[0.3], 0.0).unwrap();
+        assert_eq!(full.ids, vec![1, 2, 3]);
+        assert_eq!(full.xs, vec![0.1, 0.2, 0.3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_age() {
+        let mut b = DynamicBatcher::new(1, 2, 10, 0.5);
+        b.push(0, 1, &[1.0, 2.0], 0.0);
+        assert!(b.flush_expired(0.4).is_empty());
+        let out = b.flush_expired(0.6);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].oldest_arrival, 0.0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn per_machine_isolation() {
+        let mut b = DynamicBatcher::new(3, 1, 2, 1.0);
+        b.push(0, 1, &[0.0], 0.0);
+        b.push(2, 2, &[0.0], 0.0);
+        assert_eq!(b.pending(), 2);
+        let full = b.push(0, 3, &[0.0], 0.1).unwrap();
+        assert_eq!(full.machine, 0);
+        assert_eq!(b.pending(), 1);
+        let rest = b.flush_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].machine, 2);
+    }
+
+    #[test]
+    fn oldest_arrival_tracked() {
+        let mut b = DynamicBatcher::new(1, 1, 5, 10.0);
+        b.push(0, 1, &[0.0], 3.0);
+        b.push(0, 2, &[0.0], 4.0);
+        let out = b.flush_all();
+        assert_eq!(out[0].oldest_arrival, 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_rejected() {
+        let mut b = DynamicBatcher::new(1, 2, 2, 1.0);
+        b.push(0, 1, &[0.0], 0.0);
+    }
+}

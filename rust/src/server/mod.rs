@@ -1,0 +1,19 @@
+//! Real-time prediction serving — the paper's motivating use case
+//! ("real-time predictions necessary in many time-critical
+//! applications"): a request router, a dynamic batcher, and a serving
+//! loop over a fitted parallel-GP state with the PJRT artifacts on the
+//! hot path (vLLM-router-shaped, scaled to this problem).
+//!
+//! Flow: requests arrive with timestamps → the [`batcher::DynamicBatcher`]
+//! groups them per machine (routed by [`router::Router`] to the machine
+//! whose data is nearest, pPIC-style) → batches are padded to the AOT
+//! `pred_block` shape, executed on a [`crate::runtime::Backend`], and
+//! per-request latencies recorded.
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use router::Router;
+pub use service::{PredictRequest, PredictResponse, ServeReport, ServedModel};

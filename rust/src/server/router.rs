@@ -1,0 +1,121 @@
+//! Request routing: pick the serving machine whose local data is most
+//! correlated with the query (nearest cluster center in kernel-scaled
+//! input space) — the serving-time analogue of the paper's clustering
+//! scheme (Remark 2 after Definition 5), which is what makes pPIC's
+//! local term effective per request.
+
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+
+/// Nearest-center router over M machine centroids.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// M × d centroids (machine m's local-data mean)
+    centers: Mat,
+    /// 1/length-scale per input dimension (kernel-relevant metric)
+    inv_ls: Vec<f64>,
+}
+
+impl Router {
+    /// Build from each machine's local input block.
+    pub fn from_blocks(hyp: &SeArd, blocks: &[&Mat]) -> Router {
+        assert!(!blocks.is_empty());
+        let d = blocks[0].cols;
+        let mut centers = Mat::zeros(blocks.len(), d);
+        for (m, blk) in blocks.iter().enumerate() {
+            assert!(blk.rows > 0, "machine {m} has no data");
+            for c in 0..d {
+                let mean: f64 =
+                    (0..blk.rows).map(|r| blk[(r, c)]).sum::<f64>()
+                        / blk.rows as f64;
+                centers[(m, c)] = mean;
+            }
+        }
+        Router {
+            centers,
+            inv_ls: hyp.log_ls.iter().map(|l| (-l).exp()).collect(),
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.centers.rows
+    }
+
+    /// Machine for one query (nearest centroid in scaled space).
+    pub fn route(&self, x: &[f64]) -> usize {
+        assert_eq!(x.len(), self.centers.cols);
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for m in 0..self.centers.rows {
+            let mut s = 0.0;
+            for c in 0..x.len() {
+                let diff = (x[c] - self.centers[(m, c)]) * self.inv_ls[c];
+                s += diff * diff;
+            }
+            if s < best_d {
+                best_d = s;
+                best = m;
+            }
+        }
+        best
+    }
+
+    /// Route a whole matrix of queries; returns per-row machine ids.
+    pub fn route_all(&self, x: &Mat) -> Vec<usize> {
+        (0..x.rows).map(|r| self.route(x.row(r))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blob_router() -> Router {
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 0.1);
+        let a = Mat::from_vec(3, 2, vec![-5.0, 0.0, -5.1, 0.1, -4.9, -0.1]);
+        let b = Mat::from_vec(3, 2, vec![5.0, 0.0, 5.1, 0.1, 4.9, -0.1]);
+        Router::from_blocks(&hyp, &[&a, &b])
+    }
+
+    #[test]
+    fn routes_to_nearest_blob() {
+        let r = two_blob_router();
+        assert_eq!(r.route(&[-4.0, 0.0]), 0);
+        assert_eq!(r.route(&[4.0, 0.0]), 1);
+        assert_eq!(r.machines(), 2);
+    }
+
+    #[test]
+    fn route_all_matches_route() {
+        let r = two_blob_router();
+        let q = Mat::from_vec(3, 2, vec![-1.0, 0.0, 6.0, 1.0, -9.0, 2.0]);
+        let routed = r.route_all(&q);
+        assert_eq!(routed, vec![r.route(q.row(0)), r.route(q.row(1)),
+                                r.route(q.row(2))]);
+    }
+
+    #[test]
+    fn lengthscales_shape_the_metric() {
+        // dimension 1 has a tiny length-scale => dominates distance
+        let hyp = SeArd {
+            log_ls: vec![0.0, (0.01f64).ln()],
+            log_sf2: 0.0,
+            log_sn2: -2.0,
+        };
+        let a = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Mat::from_vec(1, 2, vec![100.0, 0.3]);
+        let r = Router::from_blocks(&hyp, &[&a, &b]);
+        // near b in dim0, but the tiny dim-1 length-scale dominates:
+        // dim-1 distance decides the route under the scaled metric
+        assert_eq!(r.route(&[90.0, -1.2]), 0);
+        assert_eq!(r.route(&[90.0, 0.3]), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_block_rejected() {
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
+        let empty = Mat::zeros(0, 1);
+        Router::from_blocks(&hyp, &[&empty]);
+    }
+}

@@ -1,0 +1,323 @@
+//! The serving loop: a fitted parallel-GP state + router + batcher +
+//! backend, reporting per-request latency and throughput.
+
+use super::batcher::{Batch, DynamicBatcher};
+use super::router::Router;
+use crate::gp::summaries::{GlobalSummary, LocalSummary, SupportContext};
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+use crate::util::time::{fmt_secs, DurationStats};
+use crate::util::Stopwatch;
+
+/// One prediction request.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub id: u64,
+    pub x: Vec<f64>,
+    /// arrival time offset (seconds from stream start)
+    pub arrival_s: f64,
+}
+
+/// One prediction response.
+#[derive(Debug, Clone)]
+pub struct PredictResponse {
+    pub id: u64,
+    pub mean: f64,
+    pub var: f64,
+    /// completion − arrival (seconds)
+    pub latency_s: f64,
+}
+
+/// Serving metrics for one stream run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub responses: Vec<PredictResponse>,
+    pub latency: DurationStats,
+    /// requests per second of wall time
+    pub throughput: f64,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{} req in {} | {:.0} req/s | batch x̄ {:.1} | p50 {} p95 {} p99 {}",
+            self.responses.len(),
+            fmt_secs(self.wall_s),
+            self.throughput,
+            self.mean_batch_size,
+            fmt_secs(self.latency.p50),
+            fmt_secs(self.latency.p95),
+            fmt_secs(self.latency.p99),
+        )
+    }
+}
+
+/// A fitted pPIC model packaged for serving: support context, global
+/// summary, and each machine's local block + cached summary.
+pub struct ServedModel {
+    pub hyp: SeArd,
+    pub xs: Mat,
+    pub y_mean: f64,
+    pub global: GlobalSummary,
+    /// per machine: (X_m, centered y_m, local summary)
+    pub blocks: Vec<(Mat, Vec<f64>, LocalSummary)>,
+    pub router: Router,
+}
+
+impl ServedModel {
+    /// Fit from partitioned data through `backend` (Steps 1–3 of pPIC;
+    /// predictions are then served per request).
+    pub fn fit(
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+        backend: &dyn Backend,
+    ) -> ServedModel {
+        let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+        let blocks: Vec<(Mat, Vec<f64>, LocalSummary)> = d_blocks
+            .iter()
+            .map(|blk| {
+                let xm = xd.select_rows(blk);
+                let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
+                let loc = backend.local_summary(hyp, &xm, &ym, xs);
+                (xm, ym, loc)
+            })
+            .collect();
+        let ctx = SupportContext::new(hyp, xs);
+        let refs: Vec<&LocalSummary> = blocks.iter().map(|(_, _, l)| l).collect();
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
+        let router = Router::from_blocks(hyp, &xms);
+        ServedModel {
+            hyp: hyp.clone(),
+            xs: xs.clone(),
+            y_mean,
+            global,
+            blocks,
+            router,
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Predict one padded batch on machine `m` (pPIC block prediction).
+    /// `xs_batch` is row-major `rows × d`; `pad_to` pads by repeating the
+    /// first row up to the AOT shape (extra outputs are discarded) —
+    /// safe because predictions are per-row independent given summaries.
+    pub fn predict_batch(
+        &self,
+        backend: &dyn Backend,
+        m: usize,
+        xs_batch: &[f64],
+        rows: usize,
+        pad_to: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let d = self.xs.cols;
+        assert_eq!(xs_batch.len(), rows * d);
+        assert!(rows >= 1 && rows <= pad_to);
+        let mut data = Vec::with_capacity(pad_to * d);
+        data.extend_from_slice(xs_batch);
+        for _ in rows..pad_to {
+            data.extend_from_slice(&xs_batch[..d]);
+        }
+        let xu = Mat::from_vec(pad_to, d, data);
+        let (xm, ym, loc) = &self.blocks[m];
+        let mut p = backend.ppic_predict(&self.hyp, &xu, &self.xs, xm, ym,
+                                         loc, &self.global);
+        p.shift_mean(self.y_mean);
+        p.mean.truncate(rows);
+        p.var.truncate(rows);
+        (p.mean, p.var)
+    }
+
+    /// Serve a time-stamped request stream to completion.
+    ///
+    /// Arrival times are honored logically (batching decisions use them)
+    /// while execution runs as fast as the host allows; latency of a
+    /// request = (virtual arrival-aligned completion) − arrival, where
+    /// completion = max(arrival of newest batch member, flush time) +
+    /// measured batch compute. This is the standard trace-replay
+    /// methodology for single-host serving evaluation.
+    pub fn serve(
+        &self,
+        backend: &dyn Backend,
+        requests: &[PredictRequest],
+        batcher: &mut DynamicBatcher,
+    ) -> ServeReport {
+        let pad_to = batcher.max_batch();
+        let mut responses: Vec<PredictResponse> = Vec::with_capacity(requests.len());
+        let mut batches = 0usize;
+        let mut batch_rows = 0usize;
+        let wall = Stopwatch::new();
+
+        let execute = |batch: Batch, flush_time: f64,
+                           responses: &mut Vec<PredictResponse>,
+                           batches: &mut usize, batch_rows: &mut usize| {
+            let rows = batch.ids.len();
+            let ((mean, var), secs) = Stopwatch::time(|| {
+                self.predict_batch(backend, batch.machine, &batch.xs, rows,
+                                   pad_to)
+            });
+            *batches += 1;
+            *batch_rows += rows;
+            let done = flush_time + secs;
+            for (k, &id) in batch.ids.iter().enumerate() {
+                let arrival = requests[id as usize].arrival_s;
+                responses.push(PredictResponse {
+                    id,
+                    mean: mean[k],
+                    var: var[k],
+                    latency_s: done - arrival,
+                });
+            }
+        };
+
+        for (i, req) in requests.iter().enumerate() {
+            debug_assert_eq!(req.id as usize, i, "ids must be stream indices");
+            let now = req.arrival_s;
+            for expired in batcher.flush_expired(now) {
+                // an expired batch is flushed at the arrival that
+                // triggered the check — the soonest the loop notices
+                execute(expired, now, &mut responses, &mut batches,
+                        &mut batch_rows);
+            }
+            let machine = self.router.route(&req.x);
+            if let Some(full) = batcher.push(machine, req.id, &req.x, now) {
+                execute(full, now, &mut responses, &mut batches,
+                        &mut batch_rows);
+            }
+        }
+        let end = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        for rest in batcher.flush_all() {
+            execute(rest, end, &mut responses, &mut batches, &mut batch_rows);
+        }
+
+        responses.sort_by_key(|r| r.id);
+        let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+        let wall_s = wall.elapsed();
+        ServeReport {
+            latency: DurationStats::from_samples(&latencies)
+                .unwrap_or(DurationStats {
+                    n: 0, mean: 0.0, min: 0.0, max: 0.0,
+                    p50: 0.0, p95: 0.0, p99: 0.0,
+                }),
+            throughput: responses.len() as f64 / wall_s.max(1e-9),
+            batches,
+            mean_batch_size: batch_rows as f64 / (batches.max(1)) as f64,
+            wall_s,
+            responses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_partition;
+    use crate::runtime::NativeBackend;
+    use crate::util::Pcg64;
+
+    fn fitted(seed: u64, m: usize) -> (ServedModel, Mat, Vec<f64>) {
+        let mut rng = Pcg64::seed(seed);
+        let (n, d, s) = (m * 8, 2, 5);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.05);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = random_partition(n, m, &mut rng);
+        let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                     &NativeBackend);
+        (model, xd, y)
+    }
+
+    #[test]
+    fn batch_prediction_matches_protocol_block() {
+        let (model, _, _) = fitted(1, 2);
+        let mut rng = Pcg64::seed(9);
+        let q: Vec<f64> = rng.normals(3 * 2);
+        // padded to 6 rows; unpadded results must equal direct pPIC call
+        let (mean_pad, var_pad) =
+            model.predict_batch(&NativeBackend, 0, &q, 3, 6);
+        let xu = Mat::from_vec(3, 2, q.clone());
+        let (xm, ym, loc) = &model.blocks[0];
+        let mut direct = NativeBackend.ppic_predict(
+            &model.hyp, &xu, &model.xs, xm, ym, loc, &model.global);
+        direct.shift_mean(model.y_mean);
+        crate::testkit::assert_all_close(&mean_pad, &direct.mean, 1e-12, 1e-12);
+        crate::testkit::assert_all_close(&var_pad, &direct.var, 1e-12, 1e-12);
+    }
+
+    #[test]
+    fn serve_stream_end_to_end() {
+        let (model, _, _) = fitted(2, 3);
+        let mut rng = Pcg64::seed(11);
+        let n_req = 40;
+        let requests: Vec<PredictRequest> = (0..n_req)
+            .map(|i| PredictRequest {
+                id: i as u64,
+                x: rng.normals(2),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .collect();
+        let mut batcher = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+        let report = model.serve(&NativeBackend, &requests, &mut batcher);
+        assert_eq!(report.responses.len(), n_req);
+        // ids covered exactly once, in order after the sort
+        for (i, r) in report.responses.iter().enumerate() {
+            assert_eq!(r.id as usize, i);
+            assert!(r.latency_s >= 0.0, "negative latency {}", r.latency_s);
+            assert!(r.mean.is_finite() && r.var.is_finite());
+        }
+        assert!(report.batches >= n_req / 4);
+        assert!(report.mean_batch_size <= 4.0 + 1e-12);
+        assert!(report.throughput > 0.0);
+        assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn batch_larger_amortizes_calls() {
+        let (model, _, _) = fitted(3, 2);
+        let mut rng = Pcg64::seed(4);
+        let requests: Vec<PredictRequest> = (0..32)
+            .map(|i| PredictRequest {
+                id: i as u64,
+                x: rng.normals(2),
+                arrival_s: 0.0,
+            })
+            .collect();
+        let mut small = DynamicBatcher::new(model.machines(), 2, 1, 1.0);
+        let r_small = model.serve(&NativeBackend, &requests, &mut small);
+        let mut big = DynamicBatcher::new(model.machines(), 2, 16, 1.0);
+        let r_big = model.serve(&NativeBackend, &requests, &mut big);
+        assert!(r_big.batches < r_small.batches);
+    }
+
+    #[test]
+    fn routing_prefers_local_machine() {
+        // two machines with separated data; query near machine 1's blob
+        let mut rng = Pcg64::seed(5);
+        let (n, d, s, _m) = (16, 2, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.05);
+        let mut xd = Mat::zeros(n, d);
+        for i in 0..n {
+            xd[(i, 0)] = if i < n / 2 { -8.0 } else { 8.0 };
+            xd[(i, 1)] = rng.normal() * 0.1;
+        }
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = vec![(0..n / 2).collect::<Vec<_>>(),
+                          (n / 2..n).collect()];
+        let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                     &NativeBackend);
+        assert_eq!(model.router.route(&[-7.5, 0.0]), 0);
+        assert_eq!(model.router.route(&[8.5, 0.0]), 1);
+    }
+}

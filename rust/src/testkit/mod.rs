@@ -1,0 +1,61 @@
+//! Testing substrates: a property-based testing mini-framework and
+//! numeric assertion helpers (no proptest in the offline vendor set).
+
+pub mod prop;
+
+/// Assert two floats are close: |a-b| <= atol + rtol*|b|.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let tol = atol + rtol * b.abs();
+    assert!(
+        (a - b).abs() <= tol,
+        "assert_close failed: a={a:.12e} b={b:.12e} |diff|={:.3e} tol={tol:.3e}",
+        (a - b).abs()
+    );
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "assert_all_close failed at [{i}]: a={x:.12e} b={y:.12e} \
+             |diff|={:.3e} tol={tol:.3e}",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Max absolute elementwise deviation.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_passes() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, 0.0);
+        assert_all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-13], 1e-9, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn close_fails() {
+        assert_close(1.0, 1.1, 1e-9, 1e-9);
+    }
+
+    #[test]
+    fn max_diff() {
+        assert_eq!(max_abs_diff(&[0.0, 1.0], &[0.5, 1.0]), 0.5);
+    }
+}

@@ -1,0 +1,167 @@
+//! Property-based testing mini-framework.
+//!
+//! The offline vendor set has no proptest/quickcheck, so this module
+//! provides the 20% that covers our needs: seeded generators built on
+//! [`crate::util::Pcg64`], a `prop_check` runner that executes a property
+//! over many random cases and reports the failing seed, and common
+//! generator combinators for the numeric domains in this repo.
+//!
+//! Usage (`no_run`: doctest executables can't resolve the xla rpath):
+//! ```no_run
+//! use pgpr::testkit::prop::{prop_check, Gen};
+//! prop_check("addition commutes", 64, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     assert!((a + b - (b + a)).abs() < 1e-15);
+//! });
+//! ```
+
+use crate::util::Pcg64;
+
+/// Per-case generator handle passed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "usize_in({lo},{hi})");
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normals(n)
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+}
+
+/// Run `property` over `cases` random cases. On panic, re-raises with the
+/// case index and derived seed in the message so the failure replays with
+/// `replay_case`.
+pub fn prop_check(name: &str, cases: usize, mut property: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = derive_seed(name, case);
+        let mut g = Gen { rng: Pcg64::seed(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case of a property by index.
+pub fn replay_case(name: &str, case: usize, mut property: impl FnMut(&mut Gen)) {
+    let seed = derive_seed(name, case);
+    let mut g = Gen { rng: Pcg64::seed(seed), case };
+    property(&mut g);
+}
+
+fn derive_seed(name: &str, case: usize) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("trivial", 32, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            prop_check("always-fails", 4, |_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("always-fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut first = Vec::new();
+        prop_check("det", 8, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+        });
+        let mut second = Vec::new();
+        prop_check("det", 8, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn replay_matches_run() {
+        let mut from_run = None;
+        prop_check("replay", 3, |g| {
+            if g.case == 2 {
+                from_run = Some(g.f64_in(0.0, 1.0));
+            }
+        });
+        let mut from_replay = None;
+        replay_case("replay", 2, |g| {
+            from_replay = Some(g.f64_in(0.0, 1.0));
+        });
+        assert_eq!(from_run, from_replay);
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        prop_check("ranges", 64, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..9).contains(&u));
+            let v = g.uniform_vec(5, -1.0, 1.0);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! General-purpose substrates: PRNG, JSON, timing, thread pool, logging.
+
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod rng;
+pub mod time;
+
+pub use rng::Pcg64;
+pub use time::Stopwatch;

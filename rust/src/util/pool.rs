@@ -1,0 +1,207 @@
+//! A small scoped thread pool.
+//!
+//! No tokio/rayon in the offline vendor set, so the coordinator brings its
+//! own worker pool. Design: fixed worker threads, a shared FIFO injector
+//! guarded by `Mutex + Condvar`, and a `scope`-style API (`run_batch`)
+//! that blocks until every submitted job finishes, so jobs may borrow from
+//! the caller's stack via the usual `'static`-erasing scope trick.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    work_ready: Condvar,
+    all_done: Condvar,
+    outstanding: AtomicUsize,
+}
+
+struct QueueState {
+    jobs: Vec<Job>,
+    shutdown: bool,
+}
+
+/// Fixed-size thread pool with batch-join semantics.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (clamped to >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: Vec::new(), shutdown: false }),
+            work_ready: Condvar::new(),
+            all_done: Condvar::new(),
+            outstanding: AtomicUsize::new(0),
+        });
+        let workers = (0..n)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit one fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push(Box::new(job));
+        drop(q);
+        self.shared.work_ready.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn join(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while self.shared.outstanding.load(Ordering::SeqCst) != 0 {
+            q = self.shared.all_done.wait(q).unwrap();
+        }
+    }
+
+    /// Run a batch of closures (which may borrow locally) to completion.
+    ///
+    /// Safety of the lifetime erasure: `join` below blocks until all jobs
+    /// finished, so borrowed data outlives every job.
+    pub fn run_batch<'env, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        for job in jobs {
+            // Erase the lifetime: justified by the join() barrier below.
+            let erased: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+            let erased: Job = unsafe { std::mem::transmute(erased) };
+            self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push(erased);
+            drop(q);
+            self.shared.work_ready.notify_one();
+        }
+        self.join();
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in order.
+    pub fn par_map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots: Vec<(usize, &mut Option<T>)> =
+                out.iter_mut().enumerate().collect();
+            let fref = &f;
+            self.run_batch(
+                slots
+                    .into_iter()
+                    .map(|(i, slot)| {
+                        move || {
+                            *slot = Some(fref(i));
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        out.into_iter().map(|v| v.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_ready.wait(q).unwrap();
+            }
+        };
+        job();
+        if shared.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // last job: wake joiners (lock to avoid missed wakeups)
+            let _q = shared.queue.lock().unwrap();
+            shared.all_done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_batch_borrows_locals() {
+        let pool = ThreadPool::new(3);
+        let mut outputs = vec![0usize; 8];
+        {
+            let jobs: Vec<_> = outputs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| move || *slot = i * i)
+                .collect();
+            pool.run_batch(jobs);
+        }
+        assert_eq!(outputs, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let pool = ThreadPool::new(2);
+        let out = pool.par_map(16, |i| i * 2);
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_with_no_jobs_returns() {
+        let pool = ThreadPool::new(1);
+        pool.join(); // must not hang
+    }
+
+    #[test]
+    fn reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        for round in 0..5 {
+            let out = pool.par_map(4, |i| i + round);
+            assert_eq!(out, (0..4).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Timing utilities: a stopwatch and simple duration statistics.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch measuring wall-clock seconds.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since construction / last reset.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_duration(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+
+    /// Time a closure, returning (result, seconds).
+    pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+        let sw = Stopwatch::new();
+        let out = f();
+        (out, sw.elapsed())
+    }
+}
+
+/// Summary statistics over a set of duration samples (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DurationStats {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl DurationStats {
+    pub fn from_samples(samples: &[f64]) -> Option<DurationStats> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = (p * (s.len() - 1) as f64).round() as usize;
+            s[idx.min(s.len() - 1)]
+        };
+        Some(DurationStats {
+            n: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            min: s[0],
+            max: s[s.len() - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        })
+    }
+}
+
+/// Human-readable seconds (`1.23s`, `45.6ms`, `789us`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn time_closure() {
+        let (v, secs) = Stopwatch::time(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = DurationStats::from_samples(&[3.0, 1.0, 2.0]).unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert!(DurationStats::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = DurationStats::from_samples(&samples).unwrap();
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(2e-5).ends_with("us"));
+    }
+}

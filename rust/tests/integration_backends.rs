@@ -1,0 +1,111 @@
+//! Integration: the PJRT backend (AOT artifacts) must agree with the
+//! native backend through the *full protocols*, not just per-op — this
+//! is the three-layer composition guarantee.
+//!
+//! Requires `make artifacts` (the Makefile runs it before cargo test).
+
+use pgpr::data::partition::random_partition;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::parallel::{picf, ppic, ppitc, ClusterSpec};
+use pgpr::runtime::{ArtifactManifest, NativeBackend, PjrtBackend};
+use pgpr::testkit::assert_all_close;
+use pgpr::util::Pcg64;
+
+fn load_tiny() -> Option<PjrtBackend> {
+    let dir = pgpr::runtime::artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = ArtifactManifest::load(dir).expect("manifest");
+    Some(PjrtBackend::load(&manifest, "tiny").expect("pjrt tiny"))
+}
+
+struct Problem {
+    hyp: SeArd,
+    xd: Mat,
+    y: Vec<f64>,
+    xs: Mat,
+    xu: Mat,
+    d_blocks: Vec<Vec<usize>>,
+    u_blocks: Vec<Vec<usize>>,
+    m: usize,
+    rank: usize,
+}
+
+/// Build a problem whose shapes match the tiny profile exactly
+/// (B=32, S=16, U=24 per machine).
+fn tiny_problem(pjrt: &PjrtBackend, m: usize, seed: u64) -> Problem {
+    let p = &pjrt.profile;
+    let mut rng = Pcg64::seed(seed);
+    let n = p.block * m;
+    let u = p.pred_block * m;
+    let hyp = SeArd::isotropic(p.d, 1.0, 1.2, 0.05);
+    let xd = Mat::from_vec(n, p.d, rng.normals(n * p.d));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(p.support, p.d, rng.normals(p.support * p.d));
+    let xu = Mat::from_vec(u, p.d, rng.normals(u * p.d));
+    let d_blocks = random_partition(n, m, &mut rng);
+    let u_blocks = random_partition(u, m, &mut rng);
+    Problem { hyp, xd, y, xs, xu, d_blocks, u_blocks, m, rank: p.rank }
+}
+
+#[test]
+fn ppitc_protocol_native_equals_pjrt() {
+    let Some(pjrt) = load_tiny() else { return };
+    let pb = tiny_problem(&pjrt, 3, 1);
+    let spec = ClusterSpec::new(pb.m);
+    let a = ppitc::run(&pb.hyp, &pb.xd, &pb.y, &pb.xs, &pb.xu,
+                       &pb.d_blocks, &pb.u_blocks, &NativeBackend, &spec);
+    let b = ppitc::run(&pb.hyp, &pb.xd, &pb.y, &pb.xs, &pb.xu,
+                       &pb.d_blocks, &pb.u_blocks, &pjrt, &spec);
+    assert_all_close(&a.prediction.mean, &b.prediction.mean, 1e-9, 1e-9);
+    assert_all_close(&a.prediction.var, &b.prediction.var, 1e-9, 1e-9);
+}
+
+#[test]
+fn ppic_protocol_native_equals_pjrt() {
+    let Some(pjrt) = load_tiny() else { return };
+    let pb = tiny_problem(&pjrt, 2, 2);
+    let spec = ClusterSpec::new(pb.m);
+    let a = ppic::run_with_partition(&pb.hyp, &pb.xd, &pb.y, &pb.xs, &pb.xu,
+                                     &pb.d_blocks, &pb.u_blocks,
+                                     &NativeBackend, &spec);
+    let b = ppic::run_with_partition(&pb.hyp, &pb.xd, &pb.y, &pb.xs, &pb.xu,
+                                     &pb.d_blocks, &pb.u_blocks, &pjrt, &spec);
+    assert_all_close(&a.prediction.mean, &b.prediction.mean, 1e-9, 1e-9);
+    assert_all_close(&a.prediction.var, &b.prediction.var, 1e-9, 1e-9);
+}
+
+#[test]
+fn picf_protocol_native_equals_pjrt() {
+    let Some(pjrt) = load_tiny() else { return };
+    // pICF's icf_local graph expects xu of pred_block rows and F of
+    // rank x block: single machine keeps the shapes exact.
+    let pb = tiny_problem(&pjrt, 1, 3);
+    let spec = ClusterSpec::new(pb.m);
+    let a = picf::run(&pb.hyp, &pb.xd, &pb.y, &pb.xu, &pb.d_blocks, pb.rank,
+                      &NativeBackend, &spec);
+    let b = picf::run(&pb.hyp, &pb.xd, &pb.y, &pb.xu, &pb.d_blocks, pb.rank,
+                      &pjrt, &spec);
+    assert_all_close(&a.prediction.mean, &b.prediction.mean, 1e-8, 1e-8);
+    assert_all_close(&a.prediction.var, &b.prediction.var, 1e-8, 1e-8);
+}
+
+#[test]
+fn pjrt_rejects_wrong_shapes() {
+    let Some(pjrt) = load_tiny() else { return };
+    use pgpr::runtime::Backend;
+    let p = pjrt.profile.clone();
+    let mut rng = Pcg64::seed(4);
+    let hyp = SeArd::isotropic(p.d, 1.0, 1.0, 0.1);
+    // wrong block size must panic with a shape message, not corrupt
+    let xm = Mat::from_vec(p.block + 1, p.d, rng.normals((p.block + 1) * p.d));
+    let ym = rng.normals(p.block + 1);
+    let xs = Mat::from_vec(p.support, p.d, rng.normals(p.support * p.d));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pjrt.local_summary(&hyp, &xm, &ym, &xs)
+    }));
+    assert!(result.is_err());
+}

@@ -1,0 +1,77 @@
+//! Integration: full pipeline on both synthetic domains — workload
+//! generation → support selection → clustering partition → all methods →
+//! metrics — asserting the paper's qualitative orderings hold end to end.
+
+use pgpr::bench_support::experiments::{
+    run_methods, speedup_order, ExperimentConfig, Method,
+};
+use pgpr::bench_support::workloads::{prepare, Domain};
+use pgpr::runtime::NativeBackend;
+
+fn baseline_rmse(y: &[f64]) -> f64 {
+    // predicting the train mean — the floor any model must beat
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    (y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+        / y.len() as f64)
+        .sqrt()
+}
+
+#[test]
+fn aimpeak_pipeline_beats_mean_baseline() {
+    let w = prepare(Domain::Aimpeak, 600, 120, 5, false);
+    let cfg = ExperimentConfig { machines: 6, support_size: 48, rank: 48,
+                                 seed: 5 };
+    let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
+                              &NativeBackend);
+    let floor = baseline_rmse(&w.test.y);
+    for r in &results {
+        if r.method == Method::Icf || r.method == Method::PIcf {
+            continue; // rank 48 may be in the pathological regime
+        }
+        assert!(
+            r.rmse < floor,
+            "{:?} rmse {} not better than mean-baseline {floor}",
+            r.method, r.rmse
+        );
+    }
+}
+
+#[test]
+fn sarcos_pipeline_orderings() {
+    let w = prepare(Domain::Sarcos, 480, 96, 6, false);
+    let cfg = ExperimentConfig { machines: 4, support_size: 32, rank: 64,
+                                 seed: 6 };
+    let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
+                              &NativeBackend);
+    let get = |m: Method| results.iter().find(|r| r.method == m).unwrap();
+
+    // paper §6.2: pPIC ≥ pPITC in accuracy (local data helps)
+    assert!(get(Method::PPic).rmse <= get(Method::PPitc).rmse * 1.05);
+    // FGP is the accuracy anchor
+    assert!(get(Method::Fgp).rmse <= get(Method::PPic).rmse * 1.2 + 0.5);
+    // theorem equivalences at the pipeline level
+    assert!((get(Method::PPitc).rmse - get(Method::Pitc).rmse).abs() < 1e-8);
+    assert!((get(Method::PPic).rmse - get(Method::Pic).rmse).abs() < 1e-8);
+    assert!((get(Method::PIcf).rmse - get(Method::Icf).rmse).abs() < 1e-8);
+    // parallel methods are faster than FGP (the scalability claim)
+    assert!(get(Method::PPitc).time_s < get(Method::Fgp).time_s);
+    assert!(get(Method::PPic).time_s < get(Method::Fgp).time_s);
+}
+
+#[test]
+fn speedup_grows_with_data_size() {
+    // paper observation (c): pPITC/pPIC speedups grow with |D|
+    let cfg = ExperimentConfig { machines: 4, support_size: 24, rank: 24,
+                                 seed: 7 };
+    let methods = [Method::Pitc, Method::PPitc];
+    let w_small = prepare(Domain::Sarcos, 240, 48, 7, false);
+    let w_big = prepare(Domain::Sarcos, 960, 48, 7, false);
+    let r_small = run_methods(&w_small, &cfg, &methods, &NativeBackend);
+    let r_big = run_methods(&w_big, &cfg, &methods, &NativeBackend);
+    let s_small = r_small.last().unwrap().speedup.unwrap();
+    let s_big = r_big.last().unwrap().speedup.unwrap();
+    assert!(
+        s_big > s_small * 0.8,
+        "speedup should grow (or hold) with |D|: {s_small} -> {s_big}"
+    );
+}

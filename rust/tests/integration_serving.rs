@@ -1,0 +1,88 @@
+//! Integration: the serving stack (router + batcher + served model) over
+//! both backends — responses must match the direct protocol predictions
+//! and the two backends must agree request-by-request.
+
+use pgpr::data::partition::random_partition;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::runtime::{ArtifactManifest, Backend, NativeBackend, PjrtBackend};
+use pgpr::server::{DynamicBatcher, PredictRequest, ServedModel};
+use pgpr::util::Pcg64;
+
+fn load_tiny() -> Option<PjrtBackend> {
+    let dir = pgpr::runtime::artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = ArtifactManifest::load(dir).expect("manifest");
+    Some(PjrtBackend::load(&manifest, "tiny").expect("pjrt tiny"))
+}
+
+#[test]
+fn serving_pjrt_equals_native_per_request() {
+    let Some(pjrt) = load_tiny() else { return };
+    let p = pjrt.profile.clone();
+    let m = 2;
+    let n = p.block * m;
+    let mut rng = Pcg64::seed(31);
+    let hyp = SeArd::isotropic(p.d, 1.0, 1.0, 0.05);
+    let xd = Mat::from_vec(n, p.d, rng.normals(n * p.d));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(p.support, p.d, rng.normals(p.support * p.d));
+    let d_blocks = random_partition(n, m, &mut rng);
+
+    // fit through native (fitting path is identical math; mixing proves
+    // state compatibility across backends)
+    let model = ServedModel::fit(&hyp, &xd, &y, &xs, &d_blocks,
+                                 &NativeBackend);
+
+    let requests: Vec<PredictRequest> = (0..30)
+        .map(|i| PredictRequest {
+            id: i as u64,
+            x: rng.normals(p.d),
+            arrival_s: i as f64 * 1e-4,
+        })
+        .collect();
+
+    let run = |backend: &dyn Backend| {
+        let mut batcher =
+            DynamicBatcher::new(m, p.d, p.pred_block, 1e-3);
+        model.serve(backend, &requests, &mut batcher)
+    };
+    let rep_native = run(&NativeBackend);
+    let rep_pjrt = run(&pjrt);
+    assert_eq!(rep_native.responses.len(), rep_pjrt.responses.len());
+    for (a, b) in rep_native.responses.iter().zip(rep_pjrt.responses.iter()) {
+        assert_eq!(a.id, b.id);
+        assert!((a.mean - b.mean).abs() < 1e-9,
+                "req {}: {} vs {}", a.id, a.mean, b.mean);
+        assert!((a.var - b.var).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn served_predictions_match_protocol_math() {
+    let Some(pjrt) = load_tiny() else { return };
+    let p = pjrt.profile.clone();
+    let m = 2;
+    let n = p.block * m;
+    let mut rng = Pcg64::seed(32);
+    let hyp = SeArd::isotropic(p.d, 0.9, 1.1, 0.05);
+    let xd = Mat::from_vec(n, p.d, rng.normals(n * p.d));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(p.support, p.d, rng.normals(p.support * p.d));
+    let d_blocks = random_partition(n, m, &mut rng);
+    let model = ServedModel::fit(&hyp, &xd, &y, &xs, &d_blocks, &pjrt);
+
+    // one query through serve() vs the direct backend call
+    let q: Vec<f64> = rng.normals(p.d);
+    let machine = model.router.route(&q);
+    let (mean, var) = model.predict_batch(&pjrt, machine, &q, 1, p.pred_block);
+
+    let requests = vec![PredictRequest { id: 0, x: q, arrival_s: 0.0 }];
+    let mut batcher = DynamicBatcher::new(m, p.d, p.pred_block, 1e-6);
+    let report = model.serve(&pjrt, &requests, &mut batcher);
+    assert!((report.responses[0].mean - mean[0]).abs() < 1e-12);
+    assert!((report.responses[0].var - var[0]).abs() < 1e-12);
+}
