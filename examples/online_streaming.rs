@@ -4,6 +4,23 @@
 //! refit grows.
 //!
 //!     cargo run --release --example online_streaming
+//!
+//! The absorb/predict streaming loop below is the §5.2 protocol verbatim:
+//!
+//! 1. **absorb** — each machine computes the local summary of *only* its
+//!    newly arrived block (Definition 2); one reduce assimilates those
+//!    into the running global summary (Definition 3). Nothing about the
+//!    already-absorbed history is recomputed — that is why the
+//!    `absorb_s` column stays flat while `refit_s` grows with |D|.
+//! 2. **predict** — pPITC predictions come straight from the current
+//!    global summary; pPIC predictions additionally use each machine's
+//!    latest block as local data (`OnlineGp::predict_ppic`).
+//!
+//! See the `OnlineGp` rustdoc for a minimal copy-pastable version of the
+//! same loop. To run each machine's absorb work on real host threads,
+//! construct the model with `ClusterSpec::with_threads(m, n)` — results
+//! are identical (Theorem 1), only wall time changes. pICF has no such
+//! incremental form (paper §5.2, last sentence).
 
 use pgpr::bench_support::table::{fmt3, Table};
 use pgpr::data::aimpeak::{self, AimpeakConfig};

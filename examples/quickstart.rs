@@ -36,6 +36,8 @@ fn main() {
     let m = 8; // simulated machines
     let xs = support_matrix(&hyp, &xd, 24); // greedy entropy selection
     let part = cluster_partition(&xd, &xu, m, &mut rng);
+    // ClusterSpec::with_threads(m, n) would run the 8 machines' work on
+    // n real host threads — identical predictions, lower wall time.
     let spec = ClusterSpec::new(m);
     let backend = NativeBackend;
 

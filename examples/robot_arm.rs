@@ -29,6 +29,7 @@ fn main() {
         support_size: s,
         rank: 2 * s, // paper: R = 2|S| in the SARCOS domain
         seed: 42,
+        threads: 0,
     };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                               &NativeBackend);

@@ -6,6 +6,7 @@
 //!
 //! Scale selection: PGPR_BENCH_SCALE=small|paper (default small; see
 //! DESIGN.md §Substitutions for the scaling rationale).
+//! PGPR_BENCH_THREADS=N executes machine work on N real host threads.
 
 use pgpr::bench_support::figures::{fig1, Scale};
 use pgpr::bench_support::workloads::Domain;
@@ -15,8 +16,9 @@ fn main() {
         &std::env::var("PGPR_BENCH_SCALE").unwrap_or_else(|_| "small".into()),
     )
     .expect("PGPR_BENCH_SCALE must be small|paper");
+    let threads = pgpr::bench_support::threads_from_env();
     for domain in [Domain::Aimpeak, Domain::Sarcos] {
-        let t = fig1(domain, scale, 1);
+        let t = fig1(domain, scale, 1, threads);
         println!("{}", t.render());
     }
 }

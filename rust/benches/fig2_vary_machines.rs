@@ -11,8 +11,9 @@ fn main() {
         &std::env::var("PGPR_BENCH_SCALE").unwrap_or_else(|_| "small".into()),
     )
     .expect("PGPR_BENCH_SCALE must be small|paper");
+    let threads = pgpr::bench_support::threads_from_env();
     for domain in [Domain::Aimpeak, Domain::Sarcos] {
-        let t = fig2(domain, scale, 1);
+        let t = fig2(domain, scale, 1, threads);
         println!("{}", t.render());
     }
 }

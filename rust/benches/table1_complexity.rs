@@ -16,8 +16,9 @@ use pgpr::runtime::NativeBackend;
 use pgpr::util::Pcg64;
 
 fn main() {
+    let threads = pgpr::bench_support::threads_from_env();
     for domain in [Domain::Aimpeak, Domain::Sarcos] {
-        println!("{}", table1(domain, 1).render());
+        println!("{}", table1(domain, 1, threads).render());
     }
 
     // communication column: pPITC bytes are O(|S|^2) independent of |D|

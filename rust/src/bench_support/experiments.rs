@@ -66,6 +66,11 @@ pub struct ExperimentConfig {
     pub support_size: usize,
     pub rank: usize,
     pub seed: u64,
+    /// Host worker threads that actually execute the simulated machines'
+    /// work in the parallel protocols (0 or 1 = serial, the seed
+    /// behavior). Theorem-equivalence is executor-independent, so this
+    /// only changes `wall_s`, never the predictions.
+    pub threads: usize,
 }
 
 /// One method's measured row.
@@ -76,6 +81,10 @@ pub struct MethodResult {
     pub mnlp: f64,
     /// incurred time: simulated makespan (parallel) or wall (centralized)
     pub time_s: f64,
+    /// real host wall-clock seconds for the run (equals the measured
+    /// wall for centralized methods; for parallel methods it shrinks
+    /// toward the critical path as `ExperimentConfig::threads` grows)
+    pub wall_s: f64,
     /// parallel method's speedup over its centralized counterpart (only
     /// set when both were run)
     pub speedup: Option<f64>,
@@ -129,19 +138,19 @@ pub fn run_methods(
     let part = cluster_partition(&xd, &xu, m, &mut rng);
     let (d_blocks, u_blocks) = (part.d_blocks, part.u_blocks);
 
-    let spec = ClusterSpec::new(m);
+    let spec = ClusterSpec::with_threads(m, cfg.threads);
     let mut results: Vec<MethodResult> = Vec::new();
     let mut centralized_time: std::collections::HashMap<&'static str, f64> =
         std::collections::HashMap::new();
 
     for &method in methods {
-        let (pred, time_s): (Prediction, f64) = match method {
+        let (pred, time_s, wall_s): (Prediction, f64, f64) = match method {
             Method::Fgp => {
                 let (p, secs) = Stopwatch::time(|| {
                     let gp = FullGp::fit(&w.hyp, &xd, &y);
                     gp.predict(&xu)
                 });
-                (p, secs)
+                (p, secs, secs)
             }
             Method::Pitc => {
                 let (p, secs) = Stopwatch::time(|| {
@@ -149,7 +158,7 @@ pub fn run_methods(
                     gp.predict(&xu)
                 });
                 centralized_time.insert("pitc", secs);
-                (p, secs)
+                (p, secs, secs)
             }
             Method::Pic => {
                 let (p, secs) = Stopwatch::time(|| {
@@ -157,7 +166,7 @@ pub fn run_methods(
                     gp.predict(&xu, &u_blocks)
                 });
                 centralized_time.insert("pic", secs);
-                (p, secs)
+                (p, secs, secs)
             }
             Method::Icf => {
                 let (p, secs) = Stopwatch::time(|| {
@@ -165,26 +174,26 @@ pub fn run_methods(
                     gp.predict(&xu)
                 });
                 centralized_time.insert("icf", secs);
-                (p, secs)
+                (p, secs, secs)
             }
             Method::PPitc => {
                 let out = ppitc::run(&w.hyp, &xd, &y, &xs, &xu, &d_blocks,
                                      &u_blocks, backend, &spec);
                 let t = protocol_time(&out.metrics, "predict");
-                (out.prediction, t)
+                (out.prediction, t, out.metrics.wall_s)
             }
             Method::PPic => {
                 let out = ppic::run_with_partition(&w.hyp, &xd, &y, &xs, &xu,
                                                    &d_blocks, &u_blocks,
                                                    backend, &spec);
                 let t = protocol_time(&out.metrics, "predict");
-                (out.prediction, t)
+                (out.prediction, t, out.metrics.wall_s)
             }
             Method::PIcf => {
                 let out = picf::run(&w.hyp, &xd, &y, &xu, &d_blocks,
                                     cfg.rank, backend, &spec);
                 let t = protocol_time(&out.metrics, "finalize");
-                (out.prediction, t)
+                (out.prediction, t, out.metrics.wall_s)
             }
         };
         let speedup = match method {
@@ -198,6 +207,7 @@ pub fn run_methods(
             rmse: rmse(&yu, &pred.mean),
             mnlp: mnlp(&yu, &pred.mean, &pred.var),
             time_s,
+            wall_s,
             speedup,
             bad_var: frac_nonpositive_var(&pred.var),
         });
@@ -235,6 +245,7 @@ mod tests {
             support_size: 12,
             rank: 16,
             seed: 1,
+            threads: 0,
         };
         let order = speedup_order(&Method::ALL);
         let results = run_methods(&w, &cfg, &order, &NativeBackend);
@@ -265,6 +276,7 @@ mod tests {
             support_size: 10,
             rank: 12,
             seed: 2,
+            threads: 0,
         };
         let results = run_methods(
             &w, &cfg,
@@ -287,6 +299,30 @@ mod tests {
                             < 1e-6 * (1.0 + rb.mnlp.abs()),
                         "{:?} mnlp {} vs {:?} {}", a, ra.mnlp, b, rb.mnlp);
             }
+        }
+    }
+
+    /// Same config, serial vs thread-parallel executor: every accuracy
+    /// metric must be identical — threads only change wall_s.
+    #[test]
+    fn harness_results_executor_independent() {
+        let w = small_workload();
+        let mk = |threads: usize| ExperimentConfig {
+            machines: 4,
+            support_size: 12,
+            rank: 16,
+            seed: 3,
+            threads,
+        };
+        let methods = Method::PARALLEL;
+        let serial = run_methods(&w, &mk(0), &methods, &NativeBackend);
+        let par = run_methods(&w, &mk(4), &methods, &NativeBackend);
+        for (a, b) in serial.iter().zip(par.iter()) {
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.rmse, b.rmse, "{:?}", a.method);
+            assert_eq!(a.mnlp, b.mnlp, "{:?}", a.method);
+            assert_eq!(a.bad_var, b.bad_var);
+            assert!(b.wall_s > 0.0);
         }
     }
 

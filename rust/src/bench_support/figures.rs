@@ -31,7 +31,7 @@ impl Scale {
 
 /// Fig. 1 — varying data size |D|; M=20, P fixed.
 /// Columns: |D|, method, RMSE, MNLP, time(s), speedup.
-pub fn fig1(domain: Domain, scale: Scale, seed: u64) -> Table {
+pub fn fig1(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
     let (sizes, m, p): (Vec<usize>, usize, usize) = match scale {
         Scale::Small => (vec![500, 1000, 1500, 2000], 20, 128),
         Scale::Paper => (vec![8000, 16000, 24000, 32000], 20, 2048),
@@ -50,6 +50,7 @@ pub fn fig1(domain: Domain, scale: Scale, seed: u64) -> Table {
             support_size: p,
             rank,
             seed,
+            threads,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                                   &NativeBackend);
@@ -68,7 +69,7 @@ pub fn fig1(domain: Domain, scale: Scale, seed: u64) -> Table {
 }
 
 /// Fig. 2 — varying machine count M; |D|, P fixed.
-pub fn fig2(domain: Domain, scale: Scale, seed: u64) -> Table {
+pub fn fig2(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
     let (ms, n, p): (Vec<usize>, usize, usize) = match scale {
         Scale::Small => (vec![4, 8, 12, 16, 20], 2000, 128),
         Scale::Paper => (vec![4, 8, 12, 16, 20], 32000, 2048),
@@ -88,6 +89,7 @@ pub fn fig2(domain: Domain, scale: Scale, seed: u64) -> Table {
             support_size: p,
             rank,
             seed,
+            threads,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                                   &NativeBackend);
@@ -107,7 +109,7 @@ pub fn fig2(domain: Domain, scale: Scale, seed: u64) -> Table {
 
 /// Fig. 3 — varying parameter P = |S| = R (AIMPEAK) or |S| = R/2
 /// (SARCOS); |D|, M fixed. FGP appears once as the flat reference.
-pub fn fig3(domain: Domain, scale: Scale, seed: u64) -> Table {
+pub fn fig3(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
     let (ps, n, m): (Vec<usize>, usize, usize) = match scale {
         Scale::Small => (vec![16, 32, 64, 128], 2000, 20),
         Scale::Paper => (vec![256, 512, 1024, 2048], 32000, 20),
@@ -122,7 +124,7 @@ pub fn fig3(domain: Domain, scale: Scale, seed: u64) -> Table {
     let fgp = run_methods(
         &w,
         &ExperimentConfig { machines: m, support_size: ps[0], rank: ps[0],
-                            seed },
+                            seed, threads },
         &[Method::Fgp],
         &NativeBackend,
     );
@@ -140,6 +142,7 @@ pub fn fig3(domain: Domain, scale: Scale, seed: u64) -> Table {
             support_size: p,
             rank: rank_for(domain, p),
             seed,
+            threads,
         };
         let methods = [Method::Pitc, Method::Pic, Method::Icf,
                        Method::PPitc, Method::PPic, Method::PIcf];
@@ -161,7 +164,7 @@ pub fn fig3(domain: Domain, scale: Scale, seed: u64) -> Table {
 /// Table 1 — empirical time-scaling exponents vs the analytic terms:
 /// time each method at |D| = n and 2n and report log2(t₂/t₁), plus the
 /// communication-volume ratio between M and 2M for the parallel methods.
-pub fn table1(domain: Domain, seed: u64) -> Table {
+pub fn table1(domain: Domain, seed: u64, threads: usize) -> Table {
     let (n1, m, p) = (600usize, 4usize, 32usize);
     let n2 = 2 * n1;
     let rank = rank_for(domain, p);
@@ -187,6 +190,7 @@ pub fn table1(domain: Domain, seed: u64) -> Table {
         support_size: p,
         rank,
         seed,
+        threads,
     };
     let order = speedup_order(&Method::ALL);
     let r1 = run_methods(&w1, &cfg(n1), &order, &NativeBackend);
@@ -226,6 +230,7 @@ mod tests {
             support_size: 8,
             rank: 12,
             seed: 1,
+            threads: 0,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                                   &NativeBackend);

@@ -12,3 +12,21 @@ pub use experiments::{run_methods, ExperimentConfig, Method, MethodResult};
 pub use harness::{bench_fn, BenchResult};
 pub use table::Table;
 pub use workloads::{prepare, Domain, Workload};
+
+/// Host worker threads for bench mains, from `PGPR_BENCH_THREADS`
+/// (unset = 0 = serial). Panics on an unparsable value — mirroring
+/// `PGPR_BENCH_SCALE` — so a typo can't silently produce a serial run
+/// and wrong wall-clock conclusions.
+pub fn threads_from_env() -> usize {
+    match std::env::var_os("PGPR_BENCH_THREADS") {
+        None => 0,
+        // var_os so a non-Unicode value also panics instead of silently
+        // reading as unset
+        Some(v) => v
+            .to_str()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or_else(|| {
+                panic!("PGPR_BENCH_THREADS must be an integer, got {v:?}")
+            }),
+    }
+}

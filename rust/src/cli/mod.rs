@@ -25,12 +25,22 @@ COMMANDS:
   info                               environment + artifact status
   predict   --domain aimpeak|sarcos --n 1000 --m 8 --s 64 --rank 64
             [--methods ppic,fgp,...] [--test 200] [--seed 1] [--learn]
+            [--parallel-threads N]
   sweep     --figure fig1|fig2|fig3|table1 [--domain aimpeak|sarcos]
             [--scale small|paper] [--out results.json]
+            [--parallel-threads N]
   serve     --profile tiny|aimpeak|sarcos [--requests 200] [--batch-wait-ms 2]
-            [--backend pjrt|native] [--artifacts DIR]
+            [--backend pjrt|native] [--artifacts DIR] [--parallel-threads N]
   learn     --domain aimpeak|sarcos [--n 512] [--iters 40] [--seed 1]
   selftest  [--artifacts DIR]
+
+--parallel-threads N (N >= 2) executes the simulated machines' work
+concurrently on N host threads (cluster::ParallelExecutor). Predictions
+are identical to the serial run — Theorems 1-2 are executor-independent
+— and reported wall_s drops toward the critical path. The modeled
+makespan (time_s) is still measured per node, so core contention can
+inflate it; keep N <= physical cores when time_s feeds paper figures,
+or use the serial default for timing-faithful sweeps. 0/1 = serial.
 
 ENV: PGPR_ARTIFACTS (artifacts dir), PGPR_LOG (error|warn|info|debug)
 ";

@@ -1,0 +1,156 @@
+//! The cluster's execution engine: serial or truly thread-parallel.
+//!
+//! The simulated [`super::Cluster`] advances per-node *virtual* clocks by
+//! the measured wall time of each node's work — that is the paper's
+//! analytical model and it holds whether the host executes the nodes one
+//! after another or concurrently. A [`ParallelExecutor`] makes the
+//! execution itself concurrent: per-machine tasks (Step 2 local
+//! summaries, Step 4 block predictions, per-iteration pICF slab updates)
+//! are fanned out over the scoped [`crate::util::pool::ThreadPool`], so a
+//! multicore host finishes a protocol run in roughly the makespan rather
+//! than the serial sum of node compute.
+//!
+//! Correctness: every task is a pure function of its machine index and
+//! results are collected back in index order, so the thread-parallel run
+//! is numerically **identical** to the serial one (asserted to ≤1e-10 by
+//! `tests/integration_parallel_exec.rs`, and by construction bitwise —
+//! no reduction order changes). Virtual clocks still advance by each
+//! task's own measured time; the *real* elapsed time is reported
+//! separately as [`super::RunMetrics::wall_s`].
+//!
+//! Caveat on the modeled clocks: per-task measurement under concurrency
+//! includes whatever slowdown core contention causes, so with more
+//! threads than cores (or a memory-bandwidth-bound workload) the
+//! modeled makespan drifts upward relative to a serial run. Predictions
+//! are unaffected — only timing-faithful sweeps should prefer the
+//! serial executor or `threads <= physical cores`.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::util::pool::ThreadPool;
+use crate::util::Stopwatch;
+
+/// Runs per-machine closures either inline (serial) or on a shared
+/// thread pool. Cheap to clone — clones share the same pool.
+#[derive(Clone, Default)]
+pub struct ParallelExecutor {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl ParallelExecutor {
+    /// Execute node work inline, one node at a time (the seed behavior;
+    /// also what `Default` gives you).
+    pub fn serial() -> ParallelExecutor {
+        ParallelExecutor { pool: None }
+    }
+
+    /// Execute node work on `n` real worker threads. `n <= 1` degrades
+    /// to [`ParallelExecutor::serial`] — no pool, no thread overhead.
+    pub fn threads(n: usize) -> ParallelExecutor {
+        if n <= 1 {
+            ParallelExecutor::serial()
+        } else {
+            ParallelExecutor { pool: Some(Arc::new(ThreadPool::new(n))) }
+        }
+    }
+
+    /// Number of host worker threads (1 when serial).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    /// True when backed by a real thread pool.
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Run `f(0), …, f(n-1)`, returning each task's result together with
+    /// its own measured wall seconds, in index order. In parallel mode
+    /// the tasks run concurrently on the pool; each task still times
+    /// only itself, so per-node virtual clock charges are mode-agnostic.
+    ///
+    /// `n <= 1` always runs inline — a single task gains nothing from
+    /// the pool, and hot paths issue many single-task calls (e.g. one
+    /// full batch flushing in the serving loop).
+    pub fn run_timed<T: Send>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> T + Sync,
+    ) -> Vec<(T, f64)> {
+        match &self.pool {
+            Some(pool) if n > 1 => pool.par_map(n, |i| Stopwatch::time(|| f(i))),
+            _ => (0..n).map(|i| Stopwatch::time(|| f(i))).collect(),
+        }
+    }
+}
+
+impl fmt::Debug for ParallelExecutor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.pool {
+            None => write!(f, "ParallelExecutor::serial"),
+            Some(p) => write!(f, "ParallelExecutor::threads({})", p.workers()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let serial = ParallelExecutor::serial();
+        let par = ParallelExecutor::threads(4);
+        let work = |i: usize| (0..100).map(|k| (i * k) as f64).sum::<f64>();
+        let a: Vec<f64> =
+            serial.run_timed(16, work).into_iter().map(|(v, _)| v).collect();
+        let b: Vec<f64> =
+            par.run_timed(16, work).into_iter().map(|(v, _)| v).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_task_times_nonnegative() {
+        let par = ParallelExecutor::threads(2);
+        for (_, secs) in par.run_timed(8, |i| i * 2) {
+            assert!(secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn one_thread_degrades_to_serial() {
+        let e = ParallelExecutor::threads(1);
+        assert!(!e.is_parallel());
+        assert_eq!(e.workers(), 1);
+        assert_eq!(format!("{e:?}"), "ParallelExecutor::serial");
+    }
+
+    #[test]
+    fn clones_share_the_pool() {
+        let e = ParallelExecutor::threads(3);
+        let c = e.clone();
+        assert_eq!(c.workers(), 3);
+        // both clones usable concurrently-ish (sequential here): the
+        // Arc'd pool serves either without respawning threads
+        let _ = e.run_timed(4, |i| i);
+        let _ = c.run_timed(4, |i| i);
+    }
+
+    #[test]
+    fn results_in_index_order() {
+        let par = ParallelExecutor::threads(4);
+        let out: Vec<usize> = par
+            .run_timed(32, |i| {
+                // stagger completion to stress ordering
+                std::thread::sleep(std::time::Duration::from_micros(
+                    ((32 - i) % 5) as u64 * 100,
+                ));
+                i
+            })
+            .into_iter()
+            .map(|(v, _)| v)
+            .collect();
+        assert_eq!(out, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -23,6 +23,13 @@ pub struct RunMetrics {
     pub total_compute: f64,
     /// max over nodes of pure compute seconds (critical-path compute)
     pub max_compute: f64,
+    /// real host wall-clock seconds for the whole run (creation →
+    /// `finish`). Under the serial executor this tracks `total_compute`;
+    /// under a thread-parallel executor it approaches `max_compute` —
+    /// the gap is the realized speedup.
+    pub wall_s: f64,
+    /// host worker threads that executed node compute (1 = serial)
+    pub threads: usize,
 }
 
 impl RunMetrics {

@@ -1,11 +1,15 @@
 //! The simulated cluster with MPI-style collectives.
 //!
-//! Execution model: real work runs on the host (one node at a time) and
-//! its measured wall time advances that node's virtual clock;
+//! Execution model: real work runs on the host — serially, or truly in
+//! parallel on a [`ParallelExecutor`] thread pool — and each node's own
+//! measured wall time advances that node's virtual clock;
 //! communication advances clocks per [`NetworkModel`] with binomial-tree
 //! collectives. Node 0 is the master (footnote 1 of the paper: "one of
-//! the M machines can be assigned to be the master").
+//! the M machines can be assigned to be the master"). The run's real
+//! host wall-clock is recorded separately in [`RunMetrics::wall_s`], so
+//! reports carry both the modeled makespan and the realized time.
 
+use super::exec::ParallelExecutor;
 use super::metrics::{Phase, RunMetrics};
 use super::network::NetworkModel;
 use super::node::Node;
@@ -16,17 +20,30 @@ use crate::util::Stopwatch;
 pub struct Cluster {
     pub nodes: Vec<Node>,
     pub net: NetworkModel,
+    exec: ParallelExecutor,
+    wall: Stopwatch,
     metrics: RunMetrics,
 }
 
 pub const MASTER: usize = 0;
 
 impl Cluster {
+    /// Serial-execution cluster (the seed behavior).
     pub fn new(m: usize, net: NetworkModel) -> Cluster {
+        Cluster::with_exec(m, net, ParallelExecutor::serial())
+    }
+
+    /// Cluster whose per-node work runs on `exec` (thread-parallel when
+    /// the executor carries a pool).
+    pub fn with_exec(m: usize, net: NetworkModel, exec: ParallelExecutor)
+        -> Cluster
+    {
         assert!(m >= 1, "cluster needs at least one node");
         Cluster {
             nodes: (0..m).map(Node::new).collect(),
             net,
+            exec,
+            wall: Stopwatch::new(),
             metrics: RunMetrics::default(),
         }
     }
@@ -48,10 +65,36 @@ impl Cluster {
         out
     }
 
-    /// Run `work(m)` for every node m — conceptually in parallel; the
-    /// host executes them serially, and each node's clock advances by its
-    /// own measured time only.
-    pub fn compute_all<T>(&mut self, mut work: impl FnMut(usize) -> T) -> Vec<T> {
+    /// Run `work(m)` for every node m — concurrently on the executor's
+    /// thread pool when one is configured, serially otherwise. Either
+    /// way each node's clock advances by its own measured time only, and
+    /// results come back in node order, so the two modes are numerically
+    /// identical (the paper's Theorems 1–2 oracle; asserted in
+    /// `tests/integration_parallel_exec.rs`).
+    pub fn compute_all<T: Send>(
+        &mut self,
+        work: impl Fn(usize) -> T + Sync,
+    ) -> Vec<T> {
+        let timed = self.exec.run_timed(self.size(), work);
+        timed
+            .into_iter()
+            .enumerate()
+            .map(|(id, (out, secs))| {
+                self.nodes[id].advance_compute(secs);
+                out
+            })
+            .collect()
+    }
+
+    /// Like [`Cluster::compute_all`] but always executed inline,
+    /// whatever the configured executor — for per-iteration
+    /// microsecond-scale scans (e.g. the pICF pivot candidates, issued
+    /// `rank` times) where pool dispatch would dominate the work itself.
+    /// Clock semantics and results are identical to `compute_all`.
+    pub fn compute_all_inline<T>(
+        &mut self,
+        mut work: impl FnMut(usize) -> T,
+    ) -> Vec<T> {
         (0..self.size())
             .map(|id| {
                 let (out, secs) = Stopwatch::time(|| work(id));
@@ -176,6 +219,8 @@ impl Cluster {
             .iter()
             .map(|n| n.compute_total())
             .fold(0.0, f64::max);
+        self.metrics.wall_s = self.wall.elapsed();
+        self.metrics.threads = self.exec.workers();
         self.metrics
     }
 }
@@ -266,6 +311,35 @@ mod tests {
         assert_eq!(m.makespan, 3.0);
         assert_eq!(m.total_compute, 4.0);
         assert_eq!(m.max_compute, 3.0);
+    }
+
+    #[test]
+    fn parallel_compute_all_matches_serial_and_advances_clocks() {
+        let work = |id: usize| -> f64 {
+            // deterministic per-node numeric work
+            (0..2000).map(|k| ((id + 1) * (k + 1)) as f64).sum::<f64>().sqrt()
+        };
+        let mut serial = Cluster::new(4, NetworkModel::instant());
+        let a = serial.compute_all(work);
+        let mut par = Cluster::with_exec(4, NetworkModel::instant(),
+                                         ParallelExecutor::threads(4));
+        let b = par.compute_all(work);
+        assert_eq!(a, b, "thread-parallel results must be identical");
+        for n in &par.nodes {
+            assert!(n.clock() > 0.0, "node {} clock did not advance", n.id);
+        }
+        let m = par.finish();
+        assert_eq!(m.threads, 4);
+        assert!(m.wall_s > 0.0);
+    }
+
+    #[test]
+    fn finish_records_serial_executor() {
+        let mut c = Cluster::new(2, NetworkModel::instant());
+        c.charge_compute(0, 0.1);
+        let m = c.finish();
+        assert_eq!(m.threads, 1);
+        assert!(m.wall_s >= 0.0);
     }
 
     #[test]

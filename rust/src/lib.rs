@@ -11,8 +11,32 @@
 //!   server ([`server`]).
 //! * **L2/L1 (python, build-time only)** — the GP algebra and the Pallas
 //!   SE-Gram kernel, AOT-lowered to HLO text artifacts executed through
-//!   [`runtime`] (PJRT via the `xla` crate). Python never runs on the
-//!   request path.
+//!   [`runtime`] (PJRT via the `xla` crate, behind the `pjrt` cargo
+//!   feature). Python never runs on the request path.
+//!
+//! ## Why the protocols are exact (Theorems 1–3)
+//!
+//! pPITC, pPIC and the pICF-based GP are *reformulations*, not new
+//! approximations: each machine condenses its data block into a local
+//! summary (Definition 2), summaries add up into a global summary
+//! (Definition 3), and predictions from that summary equal what the
+//! centralized PITC / PIC / ICF-based GP would produce on the same
+//! partition (Theorems 1–3). The test suite treats those identities as
+//! a hard oracle, including across *execution modes*: running the
+//! simulated machines truly concurrently on a
+//! [`cluster::ParallelExecutor`] thread pool must (and does) reproduce
+//! the serial run to ≤1e-10.
+//!
+//! ## Execution model
+//!
+//! The [`cluster`] simulator charges each virtual node the measured
+//! wall time of its own work and models communication with
+//! `O(log M)`-round collectives, producing the paper's *incurred time*
+//! (makespan). Independently, the host can execute node work serially
+//! or on real threads (`--parallel-threads` in the CLI,
+//! [`parallel::ClusterSpec::with_threads`] in code); reports carry both
+//! the modeled makespan and the realized wall clock
+//! ([`cluster::RunMetrics::wall_s`]).
 //!
 //! Substrates built from scratch (offline environment; see DESIGN.md):
 //! dense linear algebra ([`linalg`]), covariance functions ([`kernel`]),

@@ -3,30 +3,81 @@
 //! pICF-based GP (Section 4) — plus online/incremental assimilation
 //! (§5.2).
 //!
+//! # Equivalence guarantees (Theorems 1–3)
+//!
+//! The distributed protocols are *exact reformulations* of their
+//! centralized counterparts, not new approximations:
+//!
+//! * **Theorem 1** — pPITC run on M machines produces the same
+//!   predictive mean and variance as centralized PITC
+//!   ([`crate::gp::pitc::PitcGp`]) on the same partition.
+//! * **Theorem 2** — pPIC likewise equals centralized PIC
+//!   ([`crate::gp::pic::PicGp`]), and with M = 1 collapses to the exact
+//!   full GP.
+//! * **Theorem 3 (§4)** — the pICF-based GP equals the centralized
+//!   ICF-based GP ([`crate::gp::icf_gp::IcfGp`]) at the same rank; the
+//!   row-based parallel ICF even reproduces the serial factor pivot for
+//!   pivot.
+//!
+//! These identities double as the correctness oracle for *how* the work
+//! is executed: whether the simulated machines run one after another or
+//! truly concurrently on a [`crate::cluster::ParallelExecutor`] thread
+//! pool (set [`ClusterSpec::with_threads`]), predictions must match to
+//! ≤1e-10 — property tests here and `tests/integration_parallel_exec.rs`
+//! assert exactly that.
+//!
 //! Every protocol follows the paper's step structure exactly; block-level
 //! math is dispatched through a [`crate::runtime::Backend`] so the same
 //! coordinator code runs on the native backend (sweeps) or the PJRT
-//! artifacts (serving hot path). Equivalence to the centralized
-//! counterparts (Theorems 1–3) is asserted by property tests.
+//! artifacts (serving hot path).
 
 pub mod online;
 pub mod picf;
 pub mod ppic;
 pub mod ppitc;
 
-use crate::cluster::{NetworkModel, RunMetrics};
+use crate::cluster::{Cluster, NetworkModel, ParallelExecutor, RunMetrics};
 use crate::gp::Prediction;
 
-/// Cluster configuration for a protocol run.
+/// Cluster configuration for a protocol run: how many simulated
+/// machines, the modeled interconnect, and how node work is *actually*
+/// executed on the host (serial, or thread-parallel via
+/// [`ParallelExecutor`]).
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub machines: usize,
     pub net: NetworkModel,
+    pub exec: ParallelExecutor,
 }
 
 impl ClusterSpec {
+    /// Gigabit network model, serial host execution (the seed default).
     pub fn new(machines: usize) -> ClusterSpec {
-        ClusterSpec { machines, net: NetworkModel::gigabit() }
+        ClusterSpec {
+            machines,
+            net: NetworkModel::gigabit(),
+            exec: ParallelExecutor::serial(),
+        }
+    }
+
+    /// Gigabit network model with node work executed on `threads` real
+    /// host threads (`<= 1` falls back to serial). Each call spawns a
+    /// fresh pool; clones of the returned spec share it, so every
+    /// protocol run made with one spec (e.g. all methods inside a single
+    /// `bench_support::experiments::run_methods` call) reuses the same
+    /// threads. Callers looping over many configs should build the spec
+    /// once per config, not per protocol run.
+    pub fn with_threads(machines: usize, threads: usize) -> ClusterSpec {
+        ClusterSpec {
+            machines,
+            net: NetworkModel::gigabit(),
+            exec: ParallelExecutor::threads(threads),
+        }
+    }
+
+    /// Fresh simulated cluster honoring this spec's executor.
+    pub fn cluster(&self) -> Cluster {
+        Cluster::with_exec(self.machines, self.net.clone(), self.exec.clone())
     }
 }
 
@@ -52,6 +103,16 @@ mod tests {
         let s = ClusterSpec::new(8);
         assert_eq!(s.machines, 8);
         assert_eq!(s.net, NetworkModel::gigabit());
+        assert!(!s.exec.is_parallel());
+    }
+
+    #[test]
+    fn cluster_spec_threads() {
+        let s = ClusterSpec::with_threads(4, 3);
+        assert!(s.exec.is_parallel());
+        assert_eq!(s.exec.workers(), 3);
+        let c = s.cluster();
+        assert_eq!(c.size(), 4);
     }
 
     #[test]

@@ -12,7 +12,6 @@
 
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
-use crate::cluster::Cluster;
 use crate::gp::summaries::{
     assimilate, GlobalSummary, LocalSummary, SupportContext,
 };
@@ -22,6 +21,45 @@ use crate::linalg::Mat;
 use crate::runtime::Backend;
 
 /// Streaming pPITC/pPIC state: summaries persist across batches.
+///
+/// The absorb/predict loop (§5.2): each machine summarizes only its
+/// *new* block, the master assimilates those summaries into the running
+/// global summary, and predictions are always available from the current
+/// state. With a thread-backed [`ClusterSpec`]
+/// ([`ClusterSpec::with_threads`]) the per-machine summaries of each
+/// batch are computed concurrently on the host.
+///
+/// ```
+/// use pgpr::kernel::SeArd;
+/// use pgpr::linalg::Mat;
+/// use pgpr::parallel::online::OnlineGp;
+/// use pgpr::parallel::ClusterSpec;
+/// use pgpr::runtime::NativeBackend;
+///
+/// // two machines, 1-D inputs, a 3-point support set
+/// let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
+/// let xs = Mat::from_vec(3, 1, vec![-1.0, 0.0, 1.0]);
+/// let mut gp = OnlineGp::new(&hyp, &xs, &NativeBackend,
+///                            ClusterSpec::new(2));
+///
+/// // a batch streams in: one (inputs, outputs) block per machine
+/// let batch = vec![
+///     (Mat::from_vec(2, 1, vec![-0.5, -0.2]), vec![0.30, 0.10]),
+///     (Mat::from_vec(2, 1, vec![0.2, 0.6]), vec![-0.10, -0.40]),
+/// ];
+/// gp.absorb(&batch);          // costs only the new blocks' summaries
+///
+/// // predict anywhere, any time; test rows are split across machines
+/// let xu = Mat::from_vec(2, 1, vec![0.0, 0.4]);
+/// let u_blocks = vec![vec![0], vec![1]];
+/// let out = gp.predict_ppitc(&xu, &u_blocks);
+/// assert_eq!(out.prediction.len(), 2);
+/// assert!(out.prediction.var.iter().all(|&v| v > 0.0));
+///
+/// // keep streaming: later batches reuse everything absorbed so far
+/// gp.absorb(&batch);
+/// assert_eq!(gp.batches, 2);
+/// ```
 pub struct OnlineGp<'a> {
     hyp: SeArd,
     xs: Mat,
@@ -73,7 +111,7 @@ impl<'a> OnlineGp<'a> {
             self.y_mean = Some(total / count.max(1) as f64);
         }
         let y_mean = self.y_mean.unwrap();
-        let mut cluster = Cluster::new(m, self.spec.net.clone());
+        let mut cluster = self.spec.cluster();
         let s = self.xs.rows;
 
         let locals: Vec<LocalSummary> = cluster.compute_all(|mid| {
@@ -117,7 +155,7 @@ impl<'a> OnlineGp<'a> {
     {
         let global = self.global.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
-        let mut cluster = Cluster::new(self.spec.machines, self.spec.net.clone());
+        let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let xu_m = xu.select_rows(&u_blocks[mid]);
             let mut p = self.backend.ppitc_predict(&self.hyp, &xu_m, &self.xs,
@@ -140,7 +178,7 @@ impl<'a> OnlineGp<'a> {
     {
         let global = self.global.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
-        let mut cluster = Cluster::new(self.spec.machines, self.spec.net.clone());
+        let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let (xm, ym, loc) =
                 self.latest[mid].as_ref().expect("machine has no data");

@@ -41,7 +41,11 @@ pub fn parallel_icf(
         // (a) local pivot candidates — measured per machine. Ties break
         // toward the smallest *global* index, matching linalg::icf so
         // the distributed factor is bit-identical to the serial one.
-        let candidates: Vec<(f64, usize)> = cluster.compute_all(|mid| {
+        // Inline even under a thread-backed executor: this scan is a
+        // microsecond-scale fold issued `rank` times, where pool
+        // dispatch would cost more than the work (the heavy step (d)
+        // slab update below does fan out).
+        let candidates: Vec<(f64, usize)> = cluster.compute_all_inline(|mid| {
             let blk = &d_blocks[mid];
             resid[mid]
                 .iter()
@@ -122,7 +126,7 @@ pub fn run(
     let m = spec.machines;
     assert_eq!(d_blocks.len(), m);
     let u = xu.rows;
-    let mut cluster = Cluster::new(m, spec.net.clone());
+    let mut cluster = spec.cluster();
     let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
 
     // STEP 2: row-based parallel ICF.

@@ -5,7 +5,6 @@
 
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
-use crate::cluster::Cluster;
 use crate::data::partition::{cluster_partition, random_partition};
 use crate::gp::summaries::{GlobalSummary, SupportContext};
 use crate::gp::Prediction;
@@ -45,7 +44,7 @@ pub fn run(
     let u = xu.rows;
     assert!(n % m == 0 && u % m == 0, "Definition 1 needs m | n and m | u");
     let s = xs.rows;
-    let mut cluster = Cluster::new(m, spec.net.clone());
+    let mut cluster = spec.cluster();
     let mut rng = Pcg64::new(seed, 0x9C);
 
     // STEP 1: partition. The clustering scheme runs across machines —
@@ -128,9 +127,8 @@ pub fn run_with_partition(
     backend: &dyn Backend,
     spec: &ClusterSpec,
 ) -> ProtocolOutput {
-    let m = spec.machines;
     let s = xs.rows;
-    let mut cluster = Cluster::new(m, spec.net.clone());
+    let mut cluster = spec.cluster();
     cluster.phase("partition");
     let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
     let locals = cluster.compute_all(|mid| {

@@ -9,7 +9,6 @@
 
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
-use crate::cluster::Cluster;
 use crate::gp::summaries::{GlobalSummary, SupportContext};
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
@@ -36,7 +35,7 @@ pub fn run(
     assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
     assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
     let s = xs.rows;
-    let mut cluster = Cluster::new(m, spec.net.clone());
+    let mut cluster = spec.cluster();
 
     // prior mean: empirical train mean (known to all machines — each can
     // compute its block sum; we charge the master the negligible combine)
@@ -154,6 +153,32 @@ mod tests {
         assert!(out.metrics.max_compute <= out.metrics.total_compute);
     }
 
+    /// Executing machines on a real thread pool must not change a single
+    /// bit of the output (the Theorem 1 oracle applied to the executor).
+    #[test]
+    fn thread_parallel_matches_serial() {
+        let mut rng = crate::util::Pcg64::seed(8);
+        let (n, u, s, m, d) = (40, 12, 5, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+        let d_blocks = random_partition(n, m, &mut rng);
+        let u_blocks = random_partition(u, m, &mut rng);
+        let serial = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                         &NativeBackend, &ClusterSpec::new(m));
+        let par = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
+                      &NativeBackend, &ClusterSpec::with_threads(m, 4));
+        assert_eq!(serial.prediction.mean, par.prediction.mean);
+        assert_eq!(serial.prediction.var, par.prediction.var);
+        assert_eq!(par.metrics.threads, 4);
+        assert!(par.metrics.wall_s > 0.0);
+        // same traffic model regardless of executor
+        assert_eq!(serial.metrics.bytes_sent, par.metrics.bytes_sent);
+        assert_eq!(serial.metrics.messages, par.metrics.messages);
+    }
+
     /// The simulated makespan must beat the serial sum of compute when
     /// M > 1 (that is the whole point of the protocol).
     #[test]
@@ -169,7 +194,11 @@ mod tests {
         let u_blocks = random_partition(u, m, &mut rng);
         let out = run(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks,
                       &NativeBackend,
-                      &ClusterSpec { machines: m, net: NetworkModel::instant() });
+                      &ClusterSpec {
+                          machines: m,
+                          net: NetworkModel::instant(),
+                          exec: crate::cluster::ParallelExecutor::serial(),
+                      });
         assert!(out.metrics.makespan < out.metrics.total_compute,
                 "makespan {} !< total {}", out.metrics.makespan,
                 out.metrics.total_compute);

@@ -2,6 +2,31 @@
 //! block-level graph operations, with a native-rust implementation and a
 //! PJRT implementation that loads the AOT HLO-text artifacts built by
 //! `python/compile/aot.py` (the three-layer hot path).
+//!
+//! # The Backend / AOT split
+//!
+//! Every protocol step that touches numbers goes through the six
+//! [`Backend`] methods (Definitions 2–8 of the paper: local summary, the
+//! two block predictions, and the three ICF ops). That boundary is what
+//! lets one coordinator codebase run two ways:
+//!
+//! * [`NativeBackend`] — pure rust via `gp::summaries`, any shapes; the
+//!   numerical reference and what sweeps/tests use.
+//! * [`PjrtBackend`] — executes HLO-text artifacts that
+//!   `python/compile/aot.py` lowered ahead of time from the same math
+//!   written in JAX (with the Pallas SE-Gram kernel inside); shapes are
+//!   pinned by the [`ArtifactManifest`]. This is the serving hot path:
+//!   python exists only at build time, the request path is rust + PJRT.
+//!
+//! Because `Backend` is `Send + Sync` and every call is stateless, the
+//! same backend instance is shared freely across the simulated
+//! machines, including under the thread-parallel
+//! [`crate::cluster::ParallelExecutor`].
+//!
+//! `PjrtBackend` needs the `xla` crate and is gated behind the `pjrt`
+//! cargo feature (not vendored offline — see Cargo.toml); without it a
+//! stub whose `load` errors cleanly is exported, and integration tests
+//! that need artifacts skip themselves.
 
 pub mod artifacts;
 pub mod backend;

@@ -9,6 +9,18 @@
 //! whose data is nearest, pPIC-style) → batches are padded to the AOT
 //! `pred_block` shape, executed on a [`crate::runtime::Backend`], and
 //! per-request latencies recorded.
+//!
+//! Per-machine batches are independent given the fitted summaries
+//! (that's Theorem 2 at serving time: each machine's block prediction is
+//! a pure function of the shared global summary and its own local
+//! block), so batches that become ready at the same stream event can
+//! execute concurrently — pass a thread-backed
+//! [`crate::cluster::ParallelExecutor`] to
+//! [`service::ServedModel::serve_with`] (CLI: `pgpr serve
+//! --parallel-threads N`). Predicted means and variances are identical
+//! to serial execution; reported latencies are not, since each batch's
+//! measured compute time — which sets its requests' completion — now
+//! reflects concurrent execution (including any core contention).
 
 pub mod batcher;
 pub mod router;

@@ -3,6 +3,7 @@
 
 use super::batcher::{Batch, DynamicBatcher};
 use super::router::Router;
+use crate::cluster::ParallelExecutor;
 use crate::gp::summaries::{GlobalSummary, LocalSummary, SupportContext};
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
@@ -138,6 +139,18 @@ impl ServedModel {
         (p.mean, p.var)
     }
 
+    /// Serve a time-stamped request stream to completion with serial
+    /// batch execution (see [`ServedModel::serve_with`]).
+    pub fn serve(
+        &self,
+        backend: &dyn Backend,
+        requests: &[PredictRequest],
+        batcher: &mut DynamicBatcher,
+    ) -> ServeReport {
+        self.serve_with(backend, requests, batcher,
+                        &ParallelExecutor::serial())
+    }
+
     /// Serve a time-stamped request stream to completion.
     ///
     /// Arrival times are honored logically (batching decisions use them)
@@ -146,11 +159,20 @@ impl ServedModel {
     /// completion = max(arrival of newest batch member, flush time) +
     /// measured batch compute. This is the standard trace-replay
     /// methodology for single-host serving evaluation.
-    pub fn serve(
+    ///
+    /// Batches that become ready at the same stream event (e.g. several
+    /// machines' batches expiring on one arrival) execute concurrently
+    /// on `exec` — per-machine batches are independent given the fitted
+    /// summaries, so predicted means and variances are identical to
+    /// serial execution. Reported latencies differ: each batch's own
+    /// measured compute time sets its completion, and under concurrency
+    /// that measurement includes core contention.
+    pub fn serve_with(
         &self,
         backend: &dyn Backend,
         requests: &[PredictRequest],
         batcher: &mut DynamicBatcher,
+        exec: &ParallelExecutor,
     ) -> ServeReport {
         let pad_to = batcher.max_batch();
         let mut responses: Vec<PredictResponse> = Vec::with_capacity(requests.len());
@@ -158,47 +180,53 @@ impl ServedModel {
         let mut batch_rows = 0usize;
         let wall = Stopwatch::new();
 
-        let execute = |batch: Batch, flush_time: f64,
+        // Execute every ready batch (concurrently when exec is
+        // thread-backed); each batch's own measured compute time sets its
+        // requests' completion, exactly as in the serial path.
+        let execute = |ready: &[Batch], flush_time: f64,
                            responses: &mut Vec<PredictResponse>,
                            batches: &mut usize, batch_rows: &mut usize| {
-            let rows = batch.ids.len();
-            let ((mean, var), secs) = Stopwatch::time(|| {
-                self.predict_batch(backend, batch.machine, &batch.xs, rows,
+            if ready.is_empty() {
+                return;
+            }
+            let outs = exec.run_timed(ready.len(), |k| {
+                let b = &ready[k];
+                self.predict_batch(backend, b.machine, &b.xs, b.ids.len(),
                                    pad_to)
             });
-            *batches += 1;
-            *batch_rows += rows;
-            let done = flush_time + secs;
-            for (k, &id) in batch.ids.iter().enumerate() {
-                let arrival = requests[id as usize].arrival_s;
-                responses.push(PredictResponse {
-                    id,
-                    mean: mean[k],
-                    var: var[k],
-                    latency_s: done - arrival,
-                });
+            for (batch, ((mean, var), secs)) in ready.iter().zip(outs) {
+                *batches += 1;
+                *batch_rows += batch.ids.len();
+                let done = flush_time + secs;
+                for (k, &id) in batch.ids.iter().enumerate() {
+                    let arrival = requests[id as usize].arrival_s;
+                    responses.push(PredictResponse {
+                        id,
+                        mean: mean[k],
+                        var: var[k],
+                        latency_s: done - arrival,
+                    });
+                }
             }
         };
 
         for (i, req) in requests.iter().enumerate() {
             debug_assert_eq!(req.id as usize, i, "ids must be stream indices");
             let now = req.arrival_s;
-            for expired in batcher.flush_expired(now) {
-                // an expired batch is flushed at the arrival that
-                // triggered the check — the soonest the loop notices
-                execute(expired, now, &mut responses, &mut batches,
-                        &mut batch_rows);
-            }
+            // expired batches are flushed at the arrival that triggered
+            // the check — the soonest the loop notices
+            let expired = batcher.flush_expired(now);
+            execute(&expired, now, &mut responses, &mut batches,
+                    &mut batch_rows);
             let machine = self.router.route(&req.x);
             if let Some(full) = batcher.push(machine, req.id, &req.x, now) {
-                execute(full, now, &mut responses, &mut batches,
+                execute(&[full], now, &mut responses, &mut batches,
                         &mut batch_rows);
             }
         }
         let end = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
-        for rest in batcher.flush_all() {
-            execute(rest, end, &mut responses, &mut batches, &mut batch_rows);
-        }
+        let rest = batcher.flush_all();
+        execute(&rest, end, &mut responses, &mut batches, &mut batch_rows);
 
         responses.sort_by_key(|r| r.id);
         let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
@@ -280,6 +308,31 @@ mod tests {
         assert!(report.mean_batch_size <= 4.0 + 1e-12);
         assert!(report.throughput > 0.0);
         assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn serve_with_thread_pool_matches_serial() {
+        let (model, _, _) = fitted(7, 4);
+        let mut rng = Pcg64::seed(23);
+        let requests: Vec<PredictRequest> = (0..48)
+            .map(|i| PredictRequest {
+                id: i as u64,
+                x: rng.normals(2),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .collect();
+        let mut b1 = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+        let serial = model.serve(&NativeBackend, &requests, &mut b1);
+        let mut b2 = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+        let par = model.serve_with(&NativeBackend, &requests, &mut b2,
+                                   &ParallelExecutor::threads(4));
+        assert_eq!(serial.responses.len(), par.responses.len());
+        assert_eq!(serial.batches, par.batches);
+        for (a, b) in serial.responses.iter().zip(par.responses.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.mean, b.mean, "req {}", a.id);
+            assert_eq!(a.var, b.var, "req {}", a.id);
+        }
     }
 
     #[test]

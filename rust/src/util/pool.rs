@@ -3,9 +3,12 @@
 //! No tokio/rayon in the offline vendor set, so the coordinator brings its
 //! own worker pool. Design: fixed worker threads, a shared FIFO injector
 //! guarded by `Mutex + Condvar`, and a `scope`-style API (`run_batch`)
-//! that blocks until every submitted job finishes, so jobs may borrow from
-//! the caller's stack via the usual `'static`-erasing scope trick.
+//! that blocks until every job of *its own batch* finishes — so jobs may
+//! borrow from the caller's stack via the usual `'static`-erasing scope
+//! trick, and concurrent batches on one shared pool don't wait on each
+//! other.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -20,8 +23,38 @@ struct Shared {
 }
 
 struct QueueState {
-    jobs: Vec<Job>,
+    jobs: VecDeque<Job>,
     shutdown: bool,
+}
+
+/// Completion tracking for one `run_batch` call.
+struct BatchState {
+    remaining: AtomicUsize,
+    lock: Mutex<()>,
+    done: Condvar,
+}
+
+/// Decrements its batch's `remaining` on drop — drop runs even when the
+/// wrapped job panics, so the batch waiter can never hang.
+struct BatchGuard(Arc<BatchState>);
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        if self.0.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // lock to avoid a missed wakeup against the waiter's check
+            let _g = self.0.lock.lock().unwrap();
+            self.0.done.notify_all();
+        }
+    }
+}
+
+thread_local! {
+    /// On a pool worker thread: the address of that pool's `Shared`
+    /// (0 elsewhere). Guards against *same-pool* reentrant `run_batch`,
+    /// which would deadlock; nesting across distinct pools (disjoint
+    /// workers) is deadlock-free and stays allowed.
+    static WORKER_OF_POOL: std::cell::Cell<usize> =
+        const { std::cell::Cell::new(0) };
 }
 
 /// Fixed-size thread pool with batch-join semantics.
@@ -35,7 +68,7 @@ impl ThreadPool {
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { jobs: Vec::new(), shutdown: false }),
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             work_ready: Condvar::new(),
             all_done: Condvar::new(),
             outstanding: AtomicUsize::new(0),
@@ -57,7 +90,7 @@ impl ThreadPool {
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
         let mut q = self.shared.queue.lock().unwrap();
-        q.jobs.push(Box::new(job));
+        q.jobs.push_back(Box::new(job));
         drop(q);
         self.shared.work_ready.notify_one();
     }
@@ -72,23 +105,53 @@ impl ThreadPool {
 
     /// Run a batch of closures (which may borrow locally) to completion.
     ///
-    /// Safety of the lifetime erasure: `join` below blocks until all jobs
-    /// finished, so borrowed data outlives every job.
+    /// Waits on a *batch-local* counter, not the pool-global one, so
+    /// concurrent `run_batch`/`par_map` callers sharing one pool do not
+    /// block on each other's jobs. Must not be called from inside a pool
+    /// worker (the caller would occupy the worker its own jobs need) —
+    /// asserted below; run nested work inline instead.
+    ///
+    /// Safety of the lifetime erasure: the batch-local wait blocks until
+    /// every job's body has finished (the completion guard drops even on
+    /// panic), so borrowed data outlives every job.
     pub fn run_batch<'env, F>(&self, jobs: Vec<F>)
     where
         F: FnOnce() + Send + 'env,
     {
+        assert!(
+            WORKER_OF_POOL.with(|w| w.get())
+                != Arc::as_ptr(&self.shared) as usize,
+            "ThreadPool::run_batch called from one of this same pool's \
+             worker threads — this deadlocks (the caller occupies the \
+             worker its own jobs need); run nested work inline instead"
+        );
+        let batch = Arc::new(BatchState {
+            remaining: AtomicUsize::new(jobs.len()),
+            lock: Mutex::new(()),
+            done: Condvar::new(),
+        });
         for job in jobs {
-            // Erase the lifetime: justified by the join() barrier below.
-            let erased: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
+            // The guard decrements `remaining` when dropped — i.e. even
+            // when `job()` panics (the worker's catch_unwind runs the
+            // unwind through this frame).
+            let guard = BatchGuard(Arc::clone(&batch));
+            let wrapped = move || {
+                let _guard = guard;
+                job();
+            };
+            // Erase the lifetime: justified by the batch wait below.
+            let erased: Box<dyn FnOnce() + Send + 'env> = Box::new(wrapped);
             let erased: Job = unsafe { std::mem::transmute(erased) };
             self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
             let mut q = self.shared.queue.lock().unwrap();
-            q.jobs.push(erased);
+            q.jobs.push_back(erased);
             drop(q);
             self.shared.work_ready.notify_one();
         }
-        self.join();
+        let mut g = batch.lock.lock().unwrap();
+        while batch.remaining.load(Ordering::SeqCst) != 0 {
+            g = batch.done.wait(g).unwrap();
+        }
     }
 
     /// Map `f` over `0..n` in parallel, collecting results in order.
@@ -109,7 +172,10 @@ impl ThreadPool {
                     .collect(),
             );
         }
-        out.into_iter().map(|v| v.unwrap()).collect()
+        out.into_iter()
+            .map(|v| v.expect("parallel task panicked (original message \
+                               printed by the panic hook above)"))
+            .collect()
     }
 }
 
@@ -127,11 +193,12 @@ impl Drop for ThreadPool {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    WORKER_OF_POOL.with(|w| w.set(Arc::as_ptr(&shared) as usize));
     loop {
         let job = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.jobs.pop() {
+                if let Some(job) = q.jobs.pop_front() {
                     break job;
                 }
                 if q.shutdown {
@@ -140,7 +207,12 @@ fn worker_loop(shared: Arc<Shared>) {
                 q = shared.work_ready.wait(q).unwrap();
             }
         };
-        job();
+        // Contain panics: a panicking job must still decrement
+        // `outstanding` (else `join` deadlocks) and must not kill this
+        // worker. The panic payload is dropped here — the default hook
+        // has already printed it — and propagation to the caller happens
+        // in `par_map`, whose result slot stays unfilled.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
         if shared.outstanding.fetch_sub(1, Ordering::SeqCst) == 1 {
             // last job: wake joiners (lock to avoid missed wakeups)
             let _q = shared.queue.lock().unwrap();
@@ -194,6 +266,82 @@ mod tests {
     fn join_with_no_jobs_returns() {
         let pool = ThreadPool::new(1);
         pool.join(); // must not hang
+    }
+
+    #[test]
+    fn panicking_job_neither_deadlocks_nor_kills_workers() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for i in 0..6 {
+            let d = Arc::clone(&done);
+            pool.submit(move || {
+                if i == 2 {
+                    panic!("boom");
+                }
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join(); // must return despite the panic
+        assert_eq!(done.load(Ordering::SeqCst), 5);
+        // the pool is still fully operational afterwards
+        let out = pool.par_map(8, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_propagates_task_panic_to_caller() {
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.par_map(4, |i| {
+                    if i == 3 {
+                        panic!("task failed");
+                    }
+                    i
+                })
+            }),
+        );
+        assert!(res.is_err(), "panic must surface on the calling thread");
+    }
+
+    #[test]
+    fn concurrent_batches_do_not_wait_on_each_other() {
+        // two threads drive disjoint batches through one pool; each
+        // run_batch waits on its own batch-local counter, so both finish
+        let pool = Arc::new(ThreadPool::new(4));
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                let p = Arc::clone(&pool);
+                thread::spawn(move || p.par_map(8, move |i| t * 100 + i))
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            assert_eq!(out, (0..8).map(|i| t * 100 + i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn cross_pool_nesting_is_allowed() {
+        // a worker of pool A driving a batch on pool B is deadlock-free
+        // (disjoint workers) and must not trip the same-pool guard
+        let a = ThreadPool::new(2);
+        let b = Arc::new(ThreadPool::new(2));
+        let out = a.par_map(3, move |i| b.par_map(2, move |j| i * 10 + j));
+        assert_eq!(out, vec![vec![0, 1], vec![10, 11], vec![20, 21]]);
+    }
+
+    #[test]
+    fn reentrant_run_batch_asserts_instead_of_deadlocking() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let p = Arc::clone(&pool);
+        // nested par_map on the same pool from inside a worker: the
+        // reentrancy assert panics (contained), surfacing at the caller
+        // instead of hanging forever
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || pool.par_map(1, move |_| p.par_map(2, |i| i)),
+        ));
+        assert!(res.is_err(), "reentrant use must fail loudly, not hang");
     }
 
     #[test]

@@ -20,7 +20,7 @@ fn baseline_rmse(y: &[f64]) -> f64 {
 fn aimpeak_pipeline_beats_mean_baseline() {
     let w = prepare(Domain::Aimpeak, 600, 120, 5, false);
     let cfg = ExperimentConfig { machines: 6, support_size: 48, rank: 48,
-                                 seed: 5 };
+                                 seed: 5, threads: 0 };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                               &NativeBackend);
     let floor = baseline_rmse(&w.test.y);
@@ -40,7 +40,7 @@ fn aimpeak_pipeline_beats_mean_baseline() {
 fn sarcos_pipeline_orderings() {
     let w = prepare(Domain::Sarcos, 480, 96, 6, false);
     let cfg = ExperimentConfig { machines: 4, support_size: 32, rank: 64,
-                                 seed: 6 };
+                                 seed: 6, threads: 0 };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
                               &NativeBackend);
     let get = |m: Method| results.iter().find(|r| r.method == m).unwrap();
@@ -61,7 +61,7 @@ fn sarcos_pipeline_orderings() {
 #[test]
 fn speedup_grows_with_data_size() {
     // paper observation (c): pPITC/pPIC speedups grow with |D|
-    let cfg = ExperimentConfig { machines: 4, support_size: 24, rank: 24,
+    let cfg = ExperimentConfig { machines: 4, support_size: 24, rank: 24, threads: 0,
                                  seed: 7 };
     let methods = [Method::Pitc, Method::PPitc];
     let w_small = prepare(Domain::Sarcos, 240, 48, 7, false);

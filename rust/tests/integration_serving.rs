@@ -16,7 +16,17 @@ fn load_tiny() -> Option<PjrtBackend> {
         return None;
     }
     let manifest = ArtifactManifest::load(dir).expect("manifest");
-    Some(PjrtBackend::load(&manifest, "tiny").expect("pjrt tiny"))
+    match PjrtBackend::load(&manifest, "tiny") {
+        Ok(b) => Some(b),
+        // without the `pjrt` feature the stub's load always errors: skip.
+        // WITH the feature a load failure is a real regression
+        // (corrupt/incompatible artifacts) and must fail loudly.
+        Err(e) if cfg!(not(feature = "pjrt")) => {
+            eprintln!("skipping: pjrt backend unavailable: {e}");
+            None
+        }
+        Err(e) => panic!("pjrt tiny failed to load: {e:#}"),
+    }
 }
 
 #[test]

@@ -1,0 +1,161 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment vendors no external registry, so this tiny
+//! path-dependency provides the slice of anyhow's API the crate actually
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, and the
+//! [`Context`] extension trait. Errors are stored as a flat chain of
+//! messages: `Display` prints the outermost message (matching anyhow),
+//! `{:#}` and `Debug` print the whole `outer: inner: ...` chain.
+//!
+//! Swap this for the real `anyhow` by pointing the dependency back at
+//! crates.io; no call site changes are needed.
+
+use std::fmt;
+
+/// `Result<T, Error>` with the error type defaulted, like anyhow's.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error: `chain[0]` is the outermost context message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context message (what `Context` methods call).
+    pub fn wrap(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The `outer: inner: ...` rendering of the whole chain.
+    pub fn full_chain(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full cause chain, as in anyhow
+            write!(f, "{}", self.full_chain())
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.full_chain())
+    }
+}
+
+// Like anyhow: any std error converts via `?`. `Error` itself does NOT
+// implement `std::error::Error`, which is what keeps this blanket impl
+// coherent alongside the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(e.to_string(), "bad thing 7");
+        assert_eq!(format!("{e:#}"), "bad thing 7");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("nope {}", "x");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope x");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert!(format!("{e:#}").starts_with("reading manifest: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u8>.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}
