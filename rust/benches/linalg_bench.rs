@@ -1,0 +1,21 @@
+//! Blocked-engine sweep → `BENCH_linalg.json` (kernels × sizes ×
+//! threads, GFLOP/s + wall seconds, vs the seed scalar baselines).
+//!
+//!     cargo bench --bench linalg_bench                 # full sweep + gates
+//!     PGPR_LINALG_SMOKE=1 cargo bench --bench linalg_bench   # CI smoke
+//!     cargo bench --bench linalg_bench -- out.json     # custom output
+//!
+//! `PGPR_LENIENT_PERF=1` downgrades the perf gates to advisory on
+//! oversubscribed hosts (same convention as the integration suite).
+
+use pgpr::bench_support::linalg_bench::{run, LinalgBenchConfig};
+
+fn main() {
+    // skip cargo-bench's --bench flag if present; first real arg = path
+    let out = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "BENCH_linalg.json".to_string());
+    let cfg = LinalgBenchConfig::from_env();
+    run(&cfg, &out);
+}

@@ -139,6 +139,10 @@ pub fn run_methods(
     let (d_blocks, u_blocks) = (part.d_blocks, part.u_blocks);
 
     let spec = ClusterSpec::with_threads(m, cfg.threads);
+    // Centralized baselines use the same host threads through the
+    // blocked engine (pooled LinalgCtx) — apples-to-apples with the
+    // thread-parallel protocol runs.
+    let lctx = spec.exec.linalg_ctx();
     let mut results: Vec<MethodResult> = Vec::new();
     let mut centralized_time: std::collections::HashMap<&'static str, f64> =
         std::collections::HashMap::new();
@@ -147,31 +151,34 @@ pub fn run_methods(
         let (pred, time_s, wall_s): (Prediction, f64, f64) = match method {
             Method::Fgp => {
                 let (p, secs) = Stopwatch::time(|| {
-                    let gp = FullGp::fit(&w.hyp, &xd, &y);
-                    gp.predict(&xu)
+                    let gp = FullGp::fit_ctx(&lctx, &w.hyp, &xd, &y);
+                    gp.predict_ctx(&lctx, &xu)
                 });
                 (p, secs, secs)
             }
             Method::Pitc => {
                 let (p, secs) = Stopwatch::time(|| {
-                    let gp = PitcGp::fit(&w.hyp, &xd, &y, &xs, &d_blocks);
-                    gp.predict(&xu)
+                    let gp = PitcGp::fit_ctx(&lctx, &w.hyp, &xd, &y, &xs,
+                                             &d_blocks);
+                    gp.predict_ctx(&lctx, &xu)
                 });
                 centralized_time.insert("pitc", secs);
                 (p, secs, secs)
             }
             Method::Pic => {
                 let (p, secs) = Stopwatch::time(|| {
-                    let gp = PicGp::fit(&w.hyp, &xd, &y, &xs, &d_blocks);
-                    gp.predict(&xu, &u_blocks)
+                    let gp = PicGp::fit_ctx(&lctx, &w.hyp, &xd, &y, &xs,
+                                            &d_blocks);
+                    gp.predict_ctx(&lctx, &xu, &u_blocks)
                 });
                 centralized_time.insert("pic", secs);
                 (p, secs, secs)
             }
             Method::Icf => {
                 let (p, secs) = Stopwatch::time(|| {
-                    let gp = IcfGp::fit(&w.hyp, &xd, &y, cfg.rank, &d_blocks);
-                    gp.predict(&xu)
+                    let gp = IcfGp::fit_ctx(&lctx, &w.hyp, &xd, &y, cfg.rank,
+                                            &d_blocks);
+                    gp.predict_ctx(&lctx, &xu)
                 });
                 centralized_time.insert("icf", secs);
                 (p, secs, secs)

@@ -5,6 +5,7 @@
 pub mod experiments;
 pub mod figures;
 pub mod harness;
+pub mod linalg_bench;
 pub mod table;
 pub mod workloads;
 

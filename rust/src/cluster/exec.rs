@@ -28,6 +28,7 @@
 use std::fmt;
 use std::sync::Arc;
 
+use crate::linalg::LinalgCtx;
 use crate::util::pool::ThreadPool;
 use crate::util::Stopwatch;
 
@@ -63,6 +64,20 @@ impl ParallelExecutor {
     /// True when backed by a real thread pool.
     pub fn is_parallel(&self) -> bool {
         self.pool.is_some()
+    }
+
+    /// A [`LinalgCtx`] sharing this executor's pool, for master-side
+    /// block math (global-summary Cholesky, support-set Gram, …) to
+    /// run thread-parallel on the same workers that execute node
+    /// tasks. Safe to pass *into* node closures too: on a worker
+    /// thread the ctx degrades to serial automatically (see
+    /// [`LinalgCtx::pool`]), so per-node math never deadlocks the pool
+    /// it runs on. Serial executors yield a serial ctx.
+    pub fn linalg_ctx(&self) -> LinalgCtx {
+        match &self.pool {
+            Some(p) => LinalgCtx::pooled(Arc::clone(p)),
+            None => LinalgCtx::serial(),
+        }
     }
 
     /// Run `f(0), …, f(n-1)`, returning each task's result together with
@@ -116,6 +131,15 @@ mod tests {
         for (_, secs) in par.run_timed(8, |i| i * 2) {
             assert!(secs >= 0.0);
         }
+    }
+
+    #[test]
+    fn linalg_ctx_mirrors_executor_mode() {
+        assert!(!ParallelExecutor::serial().linalg_ctx().is_pooled());
+        let par = ParallelExecutor::threads(3);
+        let ctx = par.linalg_ctx();
+        assert!(ctx.is_pooled());
+        assert_eq!(ctx.workers(), 3);
     }
 
     #[test]

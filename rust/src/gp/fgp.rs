@@ -3,7 +3,8 @@
 
 use super::Prediction;
 use crate::kernel::SeArd;
-use crate::linalg::{cho_solve_vec, cholesky, matvec, solve_lower_mat, Mat};
+use crate::linalg::{cho_solve_vec, cholesky_blocked, matvec,
+                    solve_lower_mat_ctx, LinalgCtx, Mat};
 
 /// An exact GP regressor fitted on `(X_D, y_D)`.
 #[derive(Debug, Clone)]
@@ -19,13 +20,22 @@ pub struct FullGp {
 }
 
 impl FullGp {
-    /// Fit: one O(n³) Cholesky of Σ_DD.
+    /// Fit: one O(n³) Cholesky of Σ_DD (serial ctx).
     pub fn fit(hyp: &SeArd, xd: &Mat, y: &[f64]) -> FullGp {
+        FullGp::fit_ctx(&LinalgCtx::serial(), hyp, xd, y)
+    }
+
+    /// [`FullGp::fit`] with explicit linalg execution context: the
+    /// Gram build and the n³ Cholesky run blocked and (optionally)
+    /// thread-parallel — the baseline's entire fit cost.
+    pub fn fit_ctx(lctx: &LinalgCtx, hyp: &SeArd, xd: &Mat, y: &[f64])
+        -> FullGp
+    {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
         let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
-        let sigma = hyp.cov_same(xd, true);
-        let l = cholesky(&sigma).expect("Σ_DD not SPD");
+        let sigma = hyp.cov_same_ctx(lctx, xd, true);
+        let l = cholesky_blocked(lctx, &sigma).expect("Σ_DD not SPD");
         let alpha = cho_solve_vec(&l, &centered);
         FullGp { hyp: hyp.clone(), xd: xd.clone(), l, alpha, y_mean }
     }
@@ -34,19 +44,25 @@ impl FullGp {
         self.xd.rows
     }
 
-    /// Predict eqs. (1)-(2) (diagonal covariance).
+    /// Predict eqs. (1)-(2) (diagonal covariance), serial ctx.
     pub fn predict(&self, xu: &Mat) -> Prediction {
-        let k_ud = self.hyp.cov_cross(xu, &self.xd); // (U, n)
+        self.predict_ctx(&LinalgCtx::serial(), xu)
+    }
+
+    /// [`FullGp::predict`] with explicit linalg execution context.
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        let k_ud = self.hyp.cov_cross_ctx(lctx, xu, &self.xd); // (U, n)
         let mut mean = matvec(&k_ud, &self.alpha);
         for m in mean.iter_mut() {
             *m += self.y_mean;
         }
         // diag(K_ud Σ⁻¹ K_du) via W = L⁻¹ K_du
-        let w = solve_lower_mat(&self.l, &k_ud.transpose()); // (n, U)
+        let w = solve_lower_mat_ctx(lctx, &self.l, &k_ud.transpose()); // (n, U)
         let prior = self.hyp.prior_var();
         let var = (0..xu.rows)
             .map(|i| {
-                let t: f64 = (0..self.xd.rows).map(|r| w[(r, i)] * w[(r, i)]).sum();
+                let t: f64 =
+                    (0..self.xd.rows).map(|r| w[(r, i)] * w[(r, i)]).sum();
                 prior - t
             })
             .collect();
@@ -57,6 +73,7 @@ impl FullGp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::cholesky;
     use crate::testkit::prop::prop_check;
     use crate::util::Pcg64;
 
@@ -123,6 +140,27 @@ mod tests {
                 assert!(v > 0.0 && v <= hyp.prior_var() + 1e-9);
             }
         });
+    }
+
+    /// Pooled fit/predict reproduce the serial path bitwise (the
+    /// engine's banding guarantee surfaced at the GP level).
+    #[test]
+    fn pooled_fit_predict_bitwise_matches_serial() {
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        let hyp = hyp1d();
+        let mut rng = Pcg64::seed(17);
+        let n = 120;
+        let xd = Mat::from_vec(n, 1, rng.normals(n));
+        let y = rng.normals(n);
+        let xu = Mat::from_vec(9, 1, rng.normals(9));
+        let serial = FullGp::fit(&hyp, &xd, &y);
+        let want = serial.predict(&xu);
+        let lctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+        let pooled = FullGp::fit_ctx(&lctx, &hyp, &xd, &y);
+        let got = pooled.predict_ctx(&lctx, &xu);
+        assert_eq!(want.mean, got.mean);
+        assert_eq!(want.var, got.var);
     }
 
     #[test]

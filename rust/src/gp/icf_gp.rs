@@ -6,13 +6,13 @@
 //! identity — the same algebra Definitions 6–9 distribute.
 
 use super::summaries::{
-    icf_finalize, icf_global, icf_local, icf_predict_component,
+    icf_finalize, icf_global, icf_local_ctx, icf_predict_component_ctx,
     IcfGlobalSummary, IcfLocalSummary,
 };
 use super::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::icf::KernelSource;
-use crate::linalg::{icf, Mat};
+use crate::linalg::{icf_ctx, LinalgCtx, Mat};
 
 /// Implicit noise-free Gram-matrix source for ICF (never materializes
 /// the n×n matrix; the paper's point is R ≪ n).
@@ -57,10 +57,24 @@ impl IcfGp {
         rank: usize,
         d_blocks: &[Vec<usize>],
     ) -> IcfGp {
+        IcfGp::fit_ctx(&LinalgCtx::serial(), hyp, xd, y, rank, d_blocks)
+    }
+
+    /// [`IcfGp::fit`] with explicit linalg execution context: the
+    /// pivoted ICF's per-step updates fan out over column bands
+    /// ([`crate::linalg::icf_ctx`]), bitwise-identical to serial.
+    pub fn fit_ctx(
+        lctx: &LinalgCtx,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        rank: usize,
+        d_blocks: &[Vec<usize>],
+    ) -> IcfGp {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
         let src = GramSource { hyp, x: xd };
-        let factor = icf(&src, rank, 0.0);
+        let factor = icf_ctx(lctx, &src, rank, 0.0);
         let r = factor.f.rows;
         let blocks = d_blocks
             .iter()
@@ -80,13 +94,19 @@ impl IcfGp {
         IcfGp { hyp: hyp.clone(), blocks, rank: r, y_mean }
     }
 
-    /// Steps 3–6 executed serially: local summaries → global summary →
-    /// predictive components → finalize.
+    /// Steps 3–6 executed on one machine: local summaries → global
+    /// summary → predictive components → finalize (serial ctx).
     pub fn predict(&self, xu: &Mat) -> Prediction {
+        self.predict_ctx(&LinalgCtx::serial(), xu)
+    }
+
+    /// [`IcfGp::predict`] with explicit linalg execution context (the
+    /// R×R global solve stays serial — it is negligible).
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
         let locals: Vec<IcfLocalSummary> = self
             .blocks
             .iter()
-            .map(|(xm, ym, f_m)| icf_local(&self.hyp, xm, ym, xu, f_m))
+            .map(|(xm, ym, f_m)| icf_local_ctx(lctx, &self.hyp, xm, ym, xu, f_m))
             .collect();
         let refs: Vec<&IcfLocalSummary> = locals.iter().collect();
         let global: IcfGlobalSummary = icf_global(&self.hyp, &refs);
@@ -95,7 +115,8 @@ impl IcfGp {
             .iter()
             .zip(locals.iter())
             .map(|((xm, ym, _), loc)| {
-                icf_predict_component(&self.hyp, xu, xm, ym, &loc.s_dot, &global)
+                icf_predict_component_ctx(lctx, &self.hyp, xu, xm, ym,
+                                          &loc.s_dot, &global)
             })
             .collect();
         let crefs: Vec<&Prediction> = comps.iter().collect();
@@ -142,6 +163,7 @@ pub fn icf_direct_oracle(
 mod tests {
     use super::*;
     use crate::data::partition::random_partition;
+    use crate::linalg::icf;
     use crate::testkit::prop::{prop_check, Gen};
     use crate::testkit::assert_all_close;
 

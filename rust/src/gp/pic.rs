@@ -7,12 +7,12 @@
 //! to pPIC by Theorem 2 (tested against the literal eqs. (15)-(16)).
 
 use super::summaries::{
-    chol_global, global_summary, local_summary, ppic_predict, GlobalSummary,
-    LocalSummary, SupportContext,
+    chol_global_ctx, global_summary, local_summary_ctx, ppic_predict_ctx,
+    GlobalSummary, LocalSummary, SupportContext,
 };
 use super::Prediction;
 use crate::kernel::SeArd;
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 
 /// Fitted centralized PIC model (keeps per-block local data).
 #[derive(Debug, Clone)]
@@ -34,21 +34,34 @@ impl PicGp {
         xs: &Mat,
         d_blocks: &[Vec<usize>],
     ) -> PicGp {
+        PicGp::fit_ctx(&LinalgCtx::serial(), hyp, xd, y, xs, d_blocks)
+    }
+
+    /// [`PicGp::fit`] with explicit linalg execution context (the
+    /// sweep harness passes the cluster executor's pooled ctx).
+    pub fn fit_ctx(
+        lctx: &LinalgCtx,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+    ) -> PicGp {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
-        let ctx = SupportContext::new(hyp, xs);
+        let ctx = SupportContext::new_ctx(lctx, hyp, xs);
         let blocks: Vec<_> = d_blocks
             .iter()
             .map(|blk| {
                 let xm = xd.select_rows(blk);
                 let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
-                let loc = local_summary(hyp, &xm, &ym, &ctx);
+                let loc = local_summary_ctx(lctx, hyp, &xm, &ym, &ctx);
                 (xm, ym, loc)
             })
             .collect();
         let refs: Vec<_> = blocks.iter().map(|(_, _, l)| l).collect();
         let global = global_summary(&ctx, &refs);
-        let l_g = chol_global(&global);
+        let l_g = chol_global_ctx(lctx, &global);
         PicGp { hyp: hyp.clone(), ctx, global, l_g, blocks, y_mean }
     }
 
@@ -59,9 +72,17 @@ impl PicGp {
     /// Predict test block `u_block` rows of `xu` with machine `m`'s view
     /// (Definition 5). `u_blocks[m]` must index into `xu`.
     pub fn predict_block(&self, xu_m: &Mat, m: usize) -> Prediction {
+        self.predict_block_ctx(&LinalgCtx::serial(), xu_m, m)
+    }
+
+    /// [`PicGp::predict_block`] with explicit linalg execution context.
+    pub fn predict_block_ctx(&self, lctx: &LinalgCtx, xu_m: &Mat, m: usize)
+        -> Prediction
+    {
         let (xm, ym, loc) = &self.blocks[m];
-        let mut p = ppic_predict(
-            &self.hyp, xu_m, xm, ym, loc, &self.ctx, &self.global, &self.l_g,
+        let mut p = ppic_predict_ctx(
+            lctx, &self.hyp, xu_m, xm, ym, loc, &self.ctx, &self.global,
+            &self.l_g,
         );
         p.shift_mean(self.y_mean);
         p
@@ -69,11 +90,19 @@ impl PicGp {
 
     /// Predict the full test set given its Definition-1 partition.
     pub fn predict(&self, xu: &Mat, u_blocks: &[Vec<usize>]) -> Prediction {
+        self.predict_ctx(&LinalgCtx::serial(), xu, u_blocks)
+    }
+
+    /// [`PicGp::predict`] with explicit linalg execution context.
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat,
+                       u_blocks: &[Vec<usize>]) -> Prediction {
         assert_eq!(u_blocks.len(), self.blocks.len());
         let preds: Vec<Prediction> = u_blocks
             .iter()
             .enumerate()
-            .map(|(m, blk)| self.predict_block(&xu.select_rows(blk), m))
+            .map(|(m, blk)| {
+                self.predict_block_ctx(lctx, &xu.select_rows(blk), m)
+            })
             .collect();
         Prediction::scatter(&preds, u_blocks, xu.rows)
     }

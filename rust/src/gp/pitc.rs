@@ -8,12 +8,12 @@
 //! literal eqs. (9)-(10) below).
 
 use super::summaries::{
-    chol_global, global_summary, local_summary, ppitc_predict, GlobalSummary,
-    SupportContext,
+    chol_global_ctx, global_summary, local_summary_ctx, ppitc_predict_ctx,
+    GlobalSummary, SupportContext,
 };
 use super::Prediction;
 use crate::kernel::SeArd;
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 
 /// Fitted centralized PITC model.
 #[derive(Debug, Clone)]
@@ -34,26 +34,45 @@ impl PitcGp {
         xs: &Mat,
         d_blocks: &[Vec<usize>],
     ) -> PitcGp {
+        PitcGp::fit_ctx(&LinalgCtx::serial(), hyp, xd, y, xs, d_blocks)
+    }
+
+    /// [`PitcGp::fit`] with explicit linalg execution context (the
+    /// sweep harness passes the cluster executor's pooled ctx).
+    pub fn fit_ctx(
+        lctx: &LinalgCtx,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+    ) -> PitcGp {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
-        let ctx = SupportContext::new(hyp, xs);
+        let ctx = SupportContext::new_ctx(lctx, hyp, xs);
         let locals: Vec<_> = d_blocks
             .iter()
             .map(|blk| {
                 let xm = xd.select_rows(blk);
                 let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
-                local_summary(hyp, &xm, &ym, &ctx)
+                local_summary_ctx(lctx, hyp, &xm, &ym, &ctx)
             })
             .collect();
         let refs: Vec<_> = locals.iter().collect();
         let global = global_summary(&ctx, &refs);
-        let l_g = chol_global(&global);
+        let l_g = chol_global_ctx(lctx, &global);
         PitcGp { hyp: hyp.clone(), ctx, global, l_g, y_mean }
     }
 
     /// Predict any test set (Definition 4 applied to the whole U).
     pub fn predict(&self, xu: &Mat) -> Prediction {
-        let mut p = ppitc_predict(&self.hyp, xu, &self.ctx, &self.global, &self.l_g);
+        self.predict_ctx(&LinalgCtx::serial(), xu)
+    }
+
+    /// [`PitcGp::predict`] with explicit linalg execution context.
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        let mut p = ppitc_predict_ctx(lctx, &self.hyp, xu, &self.ctx,
+                                      &self.global, &self.l_g);
         p.shift_mean(self.y_mean);
         p
     }

@@ -8,8 +8,8 @@
 use super::Prediction;
 use crate::kernel::{SeArd, JITTER_SCALE};
 use crate::linalg::{
-    cho_solve_mat, cho_solve_vec, cholesky, matmul, matmul_tn, matvec,
-    solve_lower_mat, Mat,
+    cho_solve_mat_ctx, cho_solve_vec, cholesky_blocked, gemm, gemm_tn,
+    matvec, solve_lower_mat_ctx, LinalgCtx, Mat,
 };
 
 /// Machine m's local summary (Definition 2) plus the cached Cholesky
@@ -58,9 +58,15 @@ pub struct SupportContext {
 
 impl SupportContext {
     pub fn new(hyp: &SeArd, xs: &Mat) -> SupportContext {
-        let sigma_ss = hyp.cov_same(xs, false);
-        let for_chol = hyp.cov_same(xs, true);
-        let l_ss = cholesky(&for_chol).expect("Σ_SS not SPD");
+        SupportContext::new_ctx(&LinalgCtx::serial(), hyp, xs)
+    }
+
+    /// [`SupportContext::new`] with explicit linalg execution context
+    /// (pooled Gram + blocked/pooled Cholesky).
+    pub fn new_ctx(lctx: &LinalgCtx, hyp: &SeArd, xs: &Mat) -> SupportContext {
+        let sigma_ss = hyp.cov_same_ctx(lctx, xs, false);
+        let for_chol = hyp.cov_same_ctx(lctx, xs, true);
+        let l_ss = cholesky_blocked(lctx, &for_chol).expect("Σ_SS not SPD");
         SupportContext { xs: xs.clone(), sigma_ss, l_ss }
     }
 
@@ -77,17 +83,31 @@ pub fn local_summary(
     ym: &[f64],
     ctx: &SupportContext,
 ) -> LocalSummary {
-    let k_ms = hyp.cov_cross(xm, &ctx.xs); // (B, S)
+    local_summary_ctx(&LinalgCtx::serial(), hyp, xm, ym, ctx)
+}
+
+/// [`local_summary`] with explicit linalg execution context: the Gram
+/// blocks, Cholesky factorizations and triangular solves run blocked
+/// and (when the ctx carries a pool *and* the caller is not already a
+/// pool worker) thread-parallel.
+pub fn local_summary_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    ctx: &SupportContext,
+) -> LocalSummary {
+    let k_ms = hyp.cov_cross_ctx(lctx, xm, &ctx.xs); // (B, S)
     // Q_mm = K_ms · Kss⁻¹ · K_sm  via W = L⁻¹ K_sm
-    let w = solve_lower_mat(&ctx.l_ss, &k_ms.transpose()); // (S, B)
-    let q_mm = matmul_tn(&w, &w); // (B, B)
-    let mut sigma_m = hyp.cov_same(xm, true);
+    let w = solve_lower_mat_ctx(lctx, &ctx.l_ss, &k_ms.transpose()); // (S, B)
+    let q_mm = gemm_tn(lctx, &w, &w); // (B, B)
+    let mut sigma_m = hyp.cov_same_ctx(lctx, xm, true);
     sigma_m.sub_assign(&q_mm);
-    let l_m = cholesky(&sigma_m).expect("Σ_mm|S not SPD");
+    let l_m = cholesky_blocked(lctx, &sigma_m).expect("Σ_mm|S not SPD");
     let v = cho_solve_vec(&l_m, ym);
     let y_dot = matvec(&k_ms.transpose(), &v);
-    let z = cho_solve_mat(&l_m, &k_ms); // (B, S)
-    let s_dot = matmul_tn(&k_ms, &z); // (S, S)
+    let z = cho_solve_mat_ctx(lctx, &l_m, &k_ms); // (B, S)
+    let s_dot = gemm_tn(lctx, &k_ms, &z); // (S, S)
     LocalSummary { y_dot, s_dot, l_m }
 }
 
@@ -118,9 +138,14 @@ pub fn assimilate(global: &mut GlobalSummary, l: &LocalSummary) {
 /// Cholesky of the global summary matrix with the absolute jitter used by
 /// the AOT graphs (`JITTER_SCALE`, unscaled — mirrors `model.py`).
 pub fn chol_global(global: &GlobalSummary) -> Mat {
+    chol_global_ctx(&LinalgCtx::serial(), global)
+}
+
+/// [`chol_global`] with explicit linalg execution context.
+pub fn chol_global_ctx(lctx: &LinalgCtx, global: &GlobalSummary) -> Mat {
     let mut sg = global.s.clone();
     sg.add_diag(JITTER_SCALE);
-    cholesky(&sg).expect("Σ̈_SS not SPD")
+    cholesky_blocked(lctx, &sg).expect("Σ̈_SS not SPD")
 }
 
 /// Definition 4: pPITC predictive distribution for a block U_m.
@@ -132,10 +157,22 @@ pub fn ppitc_predict(
     global: &GlobalSummary,
     l_g: &Mat,
 ) -> Prediction {
-    let k_us = hyp.cov_cross(xu, &ctx.xs); // (U, S)
+    ppitc_predict_ctx(&LinalgCtx::serial(), hyp, xu, ctx, global, l_g)
+}
+
+/// [`ppitc_predict`] with explicit linalg execution context.
+pub fn ppitc_predict_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xu: &Mat,
+    ctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+) -> Prediction {
+    let k_us = hyp.cov_cross_ctx(lctx, xu, &ctx.xs); // (U, S)
     let mean = matvec(&k_us, &cho_solve_vec(l_g, &global.y));
-    let w1 = solve_lower_mat(&ctx.l_ss, &k_us.transpose()); // (S, U)
-    let w2 = solve_lower_mat(l_g, &k_us.transpose());
+    let w1 = solve_lower_mat_ctx(lctx, &ctx.l_ss, &k_us.transpose()); // (S, U)
+    let w2 = solve_lower_mat_ctx(lctx, l_g, &k_us.transpose());
     let prior = hyp.prior_var();
     let var = (0..xu.rows)
         .map(|i| {
@@ -162,25 +199,42 @@ pub fn ppic_predict(
     global: &GlobalSummary,
     l_g: &Mat,
 ) -> Prediction {
+    ppic_predict_ctx(&LinalgCtx::serial(), hyp, xu, xm, ym, local, ctx,
+                     global, l_g)
+}
+
+/// [`ppic_predict`] with explicit linalg execution context.
+#[allow(clippy::too_many_arguments)]
+pub fn ppic_predict_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xu: &Mat,
+    xm: &Mat,
+    ym: &[f64],
+    local: &LocalSummary,
+    ctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+) -> Prediction {
     let s = ctx.size();
     let u = xu.rows;
-    let k_us = hyp.cov_cross(xu, &ctx.xs); // (U, S)
-    let k_um = hyp.cov_cross(xu, xm); // (U, B)
-    let k_ms = hyp.cov_cross(xm, &ctx.xs); // (B, S)
+    let k_us = hyp.cov_cross_ctx(lctx, xu, &ctx.xs); // (U, S)
+    let k_um = hyp.cov_cross_ctx(lctx, xu, xm); // (U, B)
+    let k_ms = hyp.cov_cross_ctx(lctx, xm, &ctx.xs); // (B, S)
 
     // local-data terms (Definition 2 with B = U_m)
     let v = cho_solve_vec(&local.l_m, ym); // (B,)
     let y_dot_u = matvec(&k_um, &v); // ẏ_{U_m}^m
-    let z = cho_solve_mat(&local.l_m, &k_ms); // (B, S)
-    let s_dot_us = matmul(&k_um, &z); // Σ̇_US^m (U, S)
-    let t = cho_solve_mat(&local.l_m, &k_um.transpose()); // (B, U)
+    let z = cho_solve_mat_ctx(lctx, &local.l_m, &k_ms); // (B, S)
+    let s_dot_us = gemm(lctx, &k_um, &z); // Σ̇_US^m (U, S)
+    let t = cho_solve_mat_ctx(lctx, &local.l_m, &k_um.transpose()); // (B, U)
     let s_dot_uu_diag: Vec<f64> = (0..u)
         .map(|i| (0..xm.rows).map(|b| k_um[(i, b)] * t[(b, i)]).sum())
         .collect();
 
     // Φ_{U_m S}^m — eq. (14)
-    let kss_inv_sdot = cho_solve_mat(&ctx.l_ss, &local.s_dot); // (S, S)
-    let mut phi_us = matmul(&k_us, &kss_inv_sdot); // (U, S)
+    let kss_inv_sdot = cho_solve_mat_ctx(lctx, &ctx.l_ss, &local.s_dot); // (S, S)
+    let mut phi_us = gemm(lctx, &k_us, &kss_inv_sdot); // (U, S)
     phi_us.add_assign(&k_us);
     phi_us.sub_assign(&s_dot_us);
 
@@ -194,9 +248,10 @@ pub fn ppic_predict(
     }
 
     // variance — eq. (13) corrected (see DESIGN.md "Paper erratum")
-    let p = cho_solve_mat(&ctx.l_ss, &k_us.transpose()); // Kss⁻¹K_su (S,U)
-    let sdot_su_solved = cho_solve_mat(&ctx.l_ss, &s_dot_us.transpose()); // (S,U)
-    let w_g = solve_lower_mat(l_g, &phi_us.transpose()); // (S, U)
+    let p = cho_solve_mat_ctx(lctx, &ctx.l_ss, &k_us.transpose()); // Kss⁻¹K_su (S,U)
+    let sdot_su_solved =
+        cho_solve_mat_ctx(lctx, &ctx.l_ss, &s_dot_us.transpose()); // (S,U)
+    let w_g = solve_lower_mat_ctx(lctx, l_g, &phi_us.transpose()); // (S, U)
     let prior = hyp.prior_var();
     let var = (0..u)
         .map(|i| {
@@ -247,10 +302,22 @@ pub fn icf_local(
     xu: &Mat,
     f_m: &Mat,
 ) -> IcfLocalSummary {
+    icf_local_ctx(&LinalgCtx::serial(), hyp, xm, ym, xu, f_m)
+}
+
+/// [`icf_local`] with explicit linalg execution context.
+pub fn icf_local_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    xu: &Mat,
+    f_m: &Mat,
+) -> IcfLocalSummary {
     let y_dot = matvec(f_m, ym);
-    let k_mu = hyp.cov_cross(xm, xu); // (B, U)
-    let s_dot = matmul(f_m, &k_mu); // (R, U)
-    let phi = crate::linalg::matmul_nt(f_m, f_m); // (R, R)
+    let k_mu = hyp.cov_cross_ctx(lctx, xm, xu); // (B, U)
+    let s_dot = gemm(lctx, f_m, &k_mu); // (R, U)
+    let phi = crate::linalg::gemm_nt(lctx, f_m, f_m); // (R, R)
     IcfLocalSummary { y_dot, s_dot, phi }
 }
 
@@ -272,9 +339,10 @@ pub fn icf_global(hyp: &SeArd, locals: &[&IcfLocalSummary]) -> IcfGlobalSummary 
             *p += inv_sn2 * q;
         }
     }
-    let l_phi = cholesky(&phi).expect("Φ not SPD");
+    let lctx = LinalgCtx::serial();
+    let l_phi = cholesky_blocked(&lctx, &phi).expect("Φ not SPD");
     let y = cho_solve_vec(&l_phi, &sum_y);
-    let s = cho_solve_mat(&l_phi, &sum_s);
+    let s = cho_solve_mat_ctx(&lctx, &l_phi, &sum_s);
     IcfGlobalSummary { y, s }
 }
 
@@ -289,8 +357,22 @@ pub fn icf_predict_component(
     s_dot_m: &Mat,
     global: &IcfGlobalSummary,
 ) -> Prediction {
+    icf_predict_component_ctx(&LinalgCtx::serial(), hyp, xu, xm, ym,
+                              s_dot_m, global)
+}
+
+/// [`icf_predict_component`] with explicit linalg execution context.
+pub fn icf_predict_component_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xu: &Mat,
+    xm: &Mat,
+    ym: &[f64],
+    s_dot_m: &Mat,
+    global: &IcfGlobalSummary,
+) -> Prediction {
     let inv_sn2 = 1.0 / hyp.sn2();
-    let k_um = hyp.cov_cross(xu, xm); // (U, B)
+    let k_um = hyp.cov_cross_ctx(lctx, xu, xm); // (U, B)
     let mut mean = matvec(&k_um, ym);
     for v in mean.iter_mut() {
         *v *= inv_sn2;
@@ -332,6 +414,7 @@ pub fn icf_finalize(hyp: &SeArd, u: usize, components: &[&Prediction]) -> Predic
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{cho_solve_mat, cholesky, matmul, matmul_tn};
     use crate::testkit::prop::{prop_check, Gen};
     use crate::testkit::assert_all_close;
 

@@ -8,7 +8,7 @@
 //! `JITTER_SCALE · sf2 · I` — identical constants on both language sides
 //! so native and PJRT paths agree to float precision.
 
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 
 /// Relative jitter applied before factorization (== python JITTER_SCALE).
 pub const JITTER_SCALE: f64 = 1e-8;
@@ -91,10 +91,25 @@ impl SeArd {
         self.gram(x1, x2)
     }
 
+    /// [`Self::cov_cross`] with explicit execution context.
+    pub fn cov_cross_ctx(&self, ctx: &LinalgCtx, x1: &Mat, x2: &Mat) -> Mat {
+        self.gram_ctx(ctx, x1, x2)
+    }
+
     /// Same-set covariance block Σ_{XX} = K + sn2·I (+ jitter if
     /// `for_chol`), matching `model.cov(..., same=True)`.
     pub fn cov_same(&self, x: &Mat, for_chol: bool) -> Mat {
-        let mut k = self.gram(x, x);
+        self.cov_same_ctx(&LinalgCtx::serial(), x, for_chol)
+    }
+
+    /// [`Self::cov_same`] with explicit execution context.
+    pub fn cov_same_ctx(
+        &self,
+        ctx: &LinalgCtx,
+        x: &Mat,
+        for_chol: bool,
+    ) -> Mat {
+        let mut k = self.gram_ctx(ctx, x, x);
         let bump = self.sn2() + if for_chol { self.jitter() } else { 0.0 };
         k.add_diag(bump);
         k
@@ -105,10 +120,20 @@ impl SeArd {
         vec![self.prior_var(); n]
     }
 
-    /// Dense noise-free Gram matrix between row sets. Scales inputs by
-    /// 1/ls once, then uses the expansion trick — mirrors the L1 Pallas
-    /// kernel tile body.
+    /// Dense noise-free Gram matrix between row sets (serial ctx). See
+    /// [`Self::gram_ctx`].
     pub fn gram(&self, x1: &Mat, x2: &Mat) -> Mat {
+        self.gram_ctx(&LinalgCtx::serial(), x1, x2)
+    }
+
+    /// Dense noise-free Gram matrix between row sets, vectorized via
+    /// the ‖x‖² + ‖x′‖² − 2·x·x′ expansion — mirrors the L1 Pallas
+    /// kernel tile body. Scales inputs by 1/ls once, computes the cross
+    /// term as one blocked GEMM on `ctx`, then applies the rank-1
+    /// norm corrections + exp over row bands on the ctx's pool (the
+    /// exp pass is the dominant cost for small d). Banding is
+    /// element-disjoint: pooled output is bitwise-identical to serial.
+    pub fn gram_ctx(&self, ctx: &LinalgCtx, x1: &Mat, x2: &Mat) -> Mat {
         assert_eq!(x1.cols, self.dim(), "x1 dim");
         assert_eq!(x2.cols, self.dim(), "x2 dim");
         let inv_ls: Vec<f64> = self.log_ls.iter().map(|l| (-l).exp()).collect();
@@ -130,16 +155,37 @@ impl SeArd {
         let sq2: Vec<f64> = (0..s2.rows)
             .map(|i| s2.row(i).iter().map(|v| v * v).sum())
             .collect();
-        let cross = crate::linalg::matmul_nt(&s1, &s2);
+        let cross = crate::linalg::gemm_nt(ctx, &s1, &s2);
         let sf2 = self.sf2();
-        let mut k = Mat::zeros(x1.rows, x2.rows);
-        for i in 0..x1.rows {
-            let crow = cross.row(i);
-            let krow = k.row_mut(i);
-            for j in 0..x2.rows {
-                let sq = (sq1[i] + sq2[j] - 2.0 * crow[j]).max(0.0);
-                krow[j] = sf2 * (-0.5 * sq).exp();
+        let n2 = x2.rows;
+        let mut k = Mat::zeros(x1.rows, n2);
+        if n2 == 0 || x1.rows == 0 {
+            return k;
+        }
+        {
+            let ranges = ctx.ranges(x1.rows, 8);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(ranges.len());
+            let mut rest: &mut [f64] = &mut k.data[..];
+            for &(lo, hi) in &ranges {
+                let (band, tail) =
+                    std::mem::take(&mut rest).split_at_mut((hi - lo) * n2);
+                rest = tail;
+                let sq1b = &sq1[lo..hi];
+                let sq2r = &sq2;
+                let cr = &cross;
+                jobs.push(Box::new(move || {
+                    for (r, krow) in band.chunks_mut(n2).enumerate() {
+                        let crow = cr.row(lo + r);
+                        let s1v = sq1b[r];
+                        for j in 0..n2 {
+                            let sq = (s1v + sq2r[j] - 2.0 * crow[j]).max(0.0);
+                            krow[j] = sf2 * (-0.5 * sq).exp();
+                        }
+                    }
+                }));
             }
+            ctx.run_jobs(jobs);
         }
         k
     }
@@ -219,6 +265,26 @@ mod tests {
                                  1e-12, 1e-12);
                 }
             }
+        });
+    }
+
+    /// Pooled Gram evaluation (banded exp pass + pooled GEMM) is
+    /// bitwise-identical to the serial path.
+    #[test]
+    fn gram_pooled_bitwise_matches_serial() {
+        use crate::linalg::LinalgCtx;
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        prop_check("gram-pooled-serial", 6, |g| {
+            let (n1, n2, d) =
+                (g.usize_in(1, 60), g.usize_in(1, 60), g.usize_in(1, 6));
+            let hyp = rand_hyp(g, d);
+            let x1 = rand_x(g, n1, d);
+            let x2 = rand_x(g, n2, d);
+            let serial = hyp.gram(&x1, &x2);
+            let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+            let pooled = hyp.gram_ctx(&ctx, &x1, &x2);
+            assert_eq!(serial, pooled);
         });
     }
 

@@ -1,0 +1,767 @@
+//! The cache-blocked, optionally thread-parallel dense engine that every
+//! GP hot path routes through (via the [`LinalgCtx`] knobs).
+//!
+//! # Scheme
+//!
+//! **GEMM** (`gemm`/`gemm_tn`/`gemm_nt`): C = A·B is tiled over
+//! (`KC`=192)-deep k-blocks × (`NC`=256)-wide column tiles of B. Each
+//! B tile is packed into a contiguous buffer (so the innermost loop
+//! streams it at unit stride regardless of the source leading
+//! dimension), then row bands of C fan out over the pool. The
+//! microloop processes **two C rows × four packed B rows** per pass —
+//! the shape that measured fastest on the dev host (≈2.1–2.6× the
+//! seed's streaming i-k-j kernel at 1024², see `BENCH_linalg.json`):
+//! two output rows reuse every B load and four k-steps amortize each
+//! C-row load/store, which is exactly what the seed kernel (reloading
+//! C and B from L3 on every pass) lacked. The transposed variants
+//! reuse the same fast path through one tiled transpose.
+//!
+//! **Cholesky** (`cholesky_blocked`): right-looking — scalar POTRF on
+//! the `ctx.block`-sized diagonal block, a row-parallel TRSM panel,
+//! then the trailing SYRK update `A₂₂ -= X·Xᵀ` executed as banded GEMM
+//! calls on the pool (each band updates the rectangle covering its
+//! part of the lower triangle; overshoot lands in the strictly-upper
+//! half, which is zeroed at the end and never read). The triangular
+//! solves (`solve_lower_mat_ctx`/`solve_upper_t_mat_ctx`) parallelize
+//! over *column* bands of the right-hand side — columns of a
+//! triangular solve are independent — with the same blocked kernel
+//! inside each band.
+//!
+//! # Equivalence contracts (tested)
+//!
+//! * Serial `gemm` reproduces the seed scalar `matmul` **bitwise**: the
+//!   k-blocking (`KC` a multiple of 4) preserves the scalar kernel's
+//!   4-wide grouping and per-element expression exactly.
+//! * Pooled runs reproduce serial runs **bitwise** for every kernel:
+//!   parallelism only partitions disjoint output bands (see
+//!   [`LinalgCtx`]); band boundaries never change any element's
+//!   instruction sequence.
+//! * Factorizations/solves agree with the scalar reference
+//!   implementations to ≤1e-10 on well-conditioned inputs (different
+//!   but equally stable summation orders).
+
+use super::cholesky::NotSpd;
+use super::ctx::LinalgCtx;
+use super::{axpy, dot, Mat};
+
+/// k-block depth. Must stay a multiple of 4: it aligns the packed
+/// panel with the scalar kernel's 4-wide k-grouping, which is what
+/// makes serial `gemm` bitwise-equal to the seed `matmul`.
+const KC: usize = 192;
+
+/// Column-tile width of the packed B panel (KC×NC ≈ 384 KiB of f64
+/// stays L2-resident on anything this runs on).
+const NC: usize = 256;
+
+/// Row-band height for the Cholesky trailing update. Kept fixed (and
+/// modest) rather than derived from the worker count so the
+/// rectangle-per-band overshoot above the diagonal stays small in both
+/// serial and pooled runs.
+const TRAIL_BAND: usize = 96;
+
+/// One C row: `c[j] ±= (a · B)[j]` over a `kc`-deep, `nc`-wide tile.
+/// `SUB` selects subtraction at compile time (a runtime ±1 multiplier
+/// measurably costs ~20% GEMM throughput). Mirrors the seed kernel's
+/// expression exactly (including the zero-skip on the k remainder).
+fn band_kernel_row<const SUB: bool>(
+    a0: &[f64],
+    c0: &mut [f64],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    let c0 = &mut c0[..nc];
+    let mut kk = 0;
+    while kk + 4 <= kc {
+        let (p0, p1, p2, p3) = (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
+        let b0 = &b_rows[kk][..nc];
+        let b1 = &b_rows[kk + 1][..nc];
+        let b2 = &b_rows[kk + 2][..nc];
+        let b3 = &b_rows[kk + 3][..nc];
+        for j in 0..nc {
+            let t = p0 * b0[j] + p1 * b1[j] + p2 * b2[j] + p3 * b3[j];
+            if SUB {
+                c0[j] -= t;
+            } else {
+                c0[j] += t;
+            }
+        }
+        kk += 4;
+    }
+    while kk < kc {
+        let p = a0[kk];
+        if p != 0.0 {
+            let brow = &b_rows[kk][..nc];
+            for j in 0..nc {
+                let t = p * brow[j];
+                if SUB {
+                    c0[j] -= t;
+                } else {
+                    c0[j] += t;
+                }
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// The microloop: `c_rows[r] ±= a_rows[r] · B` over a tile, two C rows
+/// at a time (each B load feeds both rows; four k-steps amortize each
+/// C access). `b_rows[kk]` is packed row kk of the tile.
+fn band_kernel<const SUB: bool>(
+    a_rows: &[&[f64]],
+    c_rows: &mut [&mut [f64]],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    debug_assert_eq!(a_rows.len(), c_rows.len());
+    debug_assert!(b_rows.len() >= kc);
+    let rows = c_rows.len();
+    let mut r = 0;
+    while r + 2 <= rows {
+        let (head, tail) = c_rows.split_at_mut(r + 1);
+        let c0 = &mut head[r][..nc];
+        let c1 = &mut tail[0][..nc];
+        let a0 = a_rows[r];
+        let a1 = a_rows[r + 1];
+        let mut kk = 0;
+        while kk + 4 <= kc {
+            let (p0, p1, p2, p3) =
+                (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
+            let (q0, q1, q2, q3) =
+                (a1[kk], a1[kk + 1], a1[kk + 2], a1[kk + 3]);
+            let b0 = &b_rows[kk][..nc];
+            let b1 = &b_rows[kk + 1][..nc];
+            let b2 = &b_rows[kk + 2][..nc];
+            let b3 = &b_rows[kk + 3][..nc];
+            for j in 0..nc {
+                let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+                let t0 = p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
+                let t1 = q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
+                if SUB {
+                    c0[j] -= t0;
+                    c1[j] -= t1;
+                } else {
+                    c0[j] += t0;
+                    c1[j] += t1;
+                }
+            }
+            kk += 4;
+        }
+        while kk < kc {
+            let (p, q) = (a0[kk], a1[kk]);
+            let brow = &b_rows[kk][..nc];
+            if p != 0.0 {
+                for j in 0..nc {
+                    let t = p * brow[j];
+                    if SUB {
+                        c0[j] -= t;
+                    } else {
+                        c0[j] += t;
+                    }
+                }
+            }
+            if q != 0.0 {
+                for j in 0..nc {
+                    let t = q * brow[j];
+                    if SUB {
+                        c1[j] -= t;
+                    } else {
+                        c1[j] += t;
+                    }
+                }
+            }
+            kk += 1;
+        }
+        r += 2;
+    }
+    if r < rows {
+        band_kernel_row::<SUB>(a_rows[r], &mut *c_rows[r], b_rows, kc, nc);
+    }
+}
+
+/// `C ±= A·B` — the blocked, row-band-parallel accumulation core
+/// behind [`gemm`] and the factorization updates (`SUB` subtracts).
+pub(crate) fn gemm_acc<const SUB: bool>(
+    ctx: &LinalgCtx,
+    a: &Mat,
+    b: &Mat,
+    c: &mut Mat,
+) {
+    assert_eq!(
+        a.cols, b.rows,
+        "gemm: {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm: C shape");
+    let (m, kdim, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || kdim == 0 || n == 0 {
+        return;
+    }
+    let ranges = ctx.ranges(m, 16);
+    let mut packed = vec![0.0f64; KC.min(kdim) * NC.min(n)];
+    let mut kb = 0;
+    while kb < kdim {
+        let kc = KC.min(kdim - kb);
+        let mut jb = 0;
+        while jb < n {
+            let nc = NC.min(n - jb);
+            for kk in 0..kc {
+                let base = (kb + kk) * n + jb;
+                packed[kk * nc..kk * nc + nc]
+                    .copy_from_slice(&b.data[base..base + nc]);
+            }
+            let b_rows: Vec<&[f64]> = packed[..kc * nc].chunks(nc).collect();
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(ranges.len());
+            let mut rest: &mut [f64] = &mut c.data[..];
+            for &(lo, hi) in &ranges {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
+                rest = tail;
+                let mut crows: Vec<&mut [f64]> = chunk
+                    .chunks_mut(n)
+                    .map(|row| &mut row[jb..jb + nc])
+                    .collect();
+                let arows: Vec<&[f64]> = (lo..hi)
+                    .map(|i| &a.data[i * kdim + kb..i * kdim + kb + kc])
+                    .collect();
+                let br = &b_rows;
+                jobs.push(Box::new(move || {
+                    band_kernel::<SUB>(&arows, &mut crows, br, kc, nc);
+                }));
+            }
+            ctx.run_jobs(jobs);
+            jb += nc;
+        }
+        kb += kc;
+    }
+}
+
+/// C = A · B, blocked and (optionally) pooled. Serial execution is
+/// bitwise-identical to the seed scalar kernel; pooled execution is
+/// bitwise-identical to serial.
+pub fn gemm(ctx: &LinalgCtx, a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    gemm_acc::<false>(ctx, a, b, &mut c);
+    c
+}
+
+/// C = Aᵀ · B (A stored untransposed) via one tiled transpose + the
+/// [`gemm`] fast path.
+pub fn gemm_tn(ctx: &LinalgCtx, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.rows, b.rows,
+        "gemm_tn: {}x{}ᵀ · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    gemm(ctx, &a.transpose(), b)
+}
+
+/// C = A · Bᵀ (B stored untransposed) via one tiled transpose + the
+/// [`gemm`] fast path.
+pub fn gemm_nt(ctx: &LinalgCtx, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "gemm_nt: {}x{} · {}x{}ᵀ",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    gemm(ctx, a, &b.transpose())
+}
+
+/// Blocked right-looking Cholesky: POTRF diagonal block + parallel
+/// TRSM panel + pooled SYRK/GEMM trailing update. Agrees with the
+/// scalar [`super::cholesky::cholesky_scalar`] to ≤1e-10 on
+/// well-conditioned SPD inputs; pooled ≡ serial bitwise.
+pub fn cholesky_blocked(ctx: &LinalgCtx, a: &Mat) -> Result<Mat, NotSpd> {
+    assert!(a.is_square(), "cholesky of non-square");
+    let n = a.rows;
+    let mut l = a.clone();
+    let nb_step = ctx.block.max(4);
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + nb_step).min(n);
+        // POTRF on the diagonal block (scalar Banachiewicz over the
+        // block; earlier blocks' contributions were already subtracted
+        // by the trailing updates below).
+        for i in k0..k1 {
+            for j in k0..=i {
+                let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                if i == j {
+                    let v = l[(i, i)] - s;
+                    if v <= 0.0 || !v.is_finite() {
+                        return Err(NotSpd { pivot: i, value: v });
+                    }
+                    l[(i, i)] = v.sqrt();
+                } else {
+                    let denom = l[(j, j)];
+                    l[(i, j)] = (l[(i, j)] - s) / denom;
+                }
+            }
+        }
+        if k1 == n {
+            break;
+        }
+        let p = n - k1;
+        let nb = k1 - k0;
+        // TRSM panel: solve X·L11ᵀ = A21 row-wise (rows independent →
+        // row bands on the pool).
+        {
+            let (head, tail) = l.data.split_at_mut(k1 * n);
+            let diag: &[f64] = head;
+            let mut prows: Vec<&mut [f64]> =
+                tail.chunks_mut(n).map(|row| &mut row[k0..k1]).collect();
+            let chunk = ctx.ranges(p, 8)[0].1;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for band in prows.chunks_mut(chunk) {
+                jobs.push(Box::new(move || {
+                    for xr in band.iter_mut() {
+                        let x = &mut **xr;
+                        for j in 0..nb {
+                            let lrow = &diag
+                                [(k0 + j) * n + k0..(k0 + j) * n + k0 + j];
+                            let s = dot(&x[..j], lrow);
+                            x[j] = (x[j] - s) / diag[(k0 + j) * n + k0 + j];
+                        }
+                    }
+                }));
+            }
+            ctx.run_jobs(jobs);
+        }
+        // Copy the solved panel out (X, p×nb) and transpose it once so
+        // the trailing update streams both operands at unit stride.
+        let mut xp = Mat::zeros(p, nb);
+        for r in 0..p {
+            xp.row_mut(r).copy_from_slice(&l.row(k1 + r)[k0..k1]);
+        }
+        let xt = xp.transpose(); // nb × p
+        // Trailing update: A22 -= X·Xᵀ, banded over rows. Each band
+        // updates the rectangle [band rows] × [k1 .. k1+band_hi] that
+        // covers its slice of the lower triangle; the strictly-upper
+        // overshoot is zeroed after the loop and never read.
+        {
+            let bt_rows: Vec<&[f64]> = xt.data.chunks(p).collect();
+            let mut rest: &mut [f64] = &mut l.data[k1 * n..];
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut lo = 0;
+            while lo < p {
+                let hi = (lo + TRAIL_BAND).min(p);
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
+                rest = tail;
+                let mut crows: Vec<&mut [f64]> = chunk
+                    .chunks_mut(n)
+                    .map(|row| &mut row[k1..k1 + hi])
+                    .collect();
+                let arows: Vec<&[f64]> = (lo..hi).map(|r| xp.row(r)).collect();
+                let br = &bt_rows;
+                jobs.push(Box::new(move || {
+                    band_kernel::<true>(&arows, &mut crows, br, nb, hi);
+                }));
+                lo = hi;
+            }
+            ctx.run_jobs(jobs);
+        }
+        k0 = k1;
+    }
+    // Zero the strictly-upper triangle (trailing-band overshoot).
+    for i in 0..n {
+        for j in (i + 1)..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·Y = B (matrix RHS), blocked, parallel over column bands of
+/// B (columns of a triangular solve are independent).
+pub fn solve_lower_mat_ctx(ctx: &LinalgCtx, l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.rows, n, "solve_lower_mat: rhs rows");
+    let mut y = b.clone();
+    let w = b.cols;
+    if n == 0 || w == 0 {
+        return y;
+    }
+    let nb_step = ctx.block.max(4);
+    let col_ranges = ctx.ranges(w, 8);
+    {
+        let band_rows = split_column_bands(&mut y.data, w, &col_ranges);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(band_rows.len());
+        for rows in band_rows {
+            jobs.push(Box::new(move || forward_solve_band(l, rows, nb_step)));
+        }
+        ctx.run_jobs(jobs);
+    }
+    y
+}
+
+/// Solve Lᵀ·X = Y (matrix RHS), blocked, parallel over column bands.
+pub fn solve_upper_t_mat_ctx(ctx: &LinalgCtx, l: &Mat, y: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(y.rows, n, "solve_upper_t_mat: rhs rows");
+    let mut x = y.clone();
+    let w = y.cols;
+    if n == 0 || w == 0 {
+        return x;
+    }
+    let nb_step = ctx.block.max(4);
+    let col_ranges = ctx.ranges(w, 8);
+    {
+        let band_rows = split_column_bands(&mut x.data, w, &col_ranges);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(band_rows.len());
+        for rows in band_rows {
+            jobs.push(Box::new(move || backward_solve_band(l, rows, nb_step)));
+        }
+        ctx.run_jobs(jobs);
+    }
+    x
+}
+
+/// Solve (L·Lᵀ)·X = B (matrix RHS) through the blocked solves.
+pub fn cho_solve_mat_ctx(ctx: &LinalgCtx, l: &Mat, b: &Mat) -> Mat {
+    solve_upper_t_mat_ctx(ctx, l, &solve_lower_mat_ctx(ctx, l, b))
+}
+
+/// Split a row-major buffer of `w`-wide rows into per-column-band row
+/// windows: result[band] holds every row's `[c0..c1)` slice.
+fn split_column_bands<'a>(
+    data: &'a mut [f64],
+    w: usize,
+    col_ranges: &[(usize, usize)],
+) -> Vec<Vec<&'a mut [f64]>> {
+    let nrows = data.len() / w;
+    let mut out: Vec<Vec<&'a mut [f64]>> = col_ranges
+        .iter()
+        .map(|_| Vec::with_capacity(nrows))
+        .collect();
+    for row in data.chunks_mut(w) {
+        let mut row: &mut [f64] = row;
+        for (bi, &(c0, c1)) in col_ranges.iter().enumerate() {
+            let (win, tail) =
+                std::mem::take(&mut row).split_at_mut(c1 - c0);
+            row = tail;
+            out[bi].push(win);
+        }
+    }
+    out
+}
+
+/// Blocked forward substitution on one column band (rows = the band's
+/// windows of Y, in matrix row order).
+fn forward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
+    let n = l.rows;
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + nb_step).min(n);
+        // Diagonal block: plain forward substitution.
+        for i in k0..k1 {
+            let (head, tail) = rows.split_at_mut(i);
+            let yi = &mut *tail[0];
+            for (j, yj) in head.iter().enumerate().take(i).skip(k0) {
+                let lij = l[(i, j)];
+                if lij != 0.0 {
+                    axpy(-lij, yj, yi);
+                }
+            }
+            let d = l[(i, i)];
+            for v in yi.iter_mut() {
+                *v /= d;
+            }
+        }
+        if k1 == n {
+            break;
+        }
+        // Trailing update: Y[k1.., :] -= L[k1.., k0..k1] · Y[k0..k1, :].
+        let (solved, below) = rows.split_at_mut(k1);
+        let brows: Vec<&[f64]> =
+            solved[k0..k1].iter().map(|r| &**r).collect();
+        let arows: Vec<&[f64]> =
+            (k1..n).map(|i| &l.data[i * n + k0..i * n + k1]).collect();
+        let nc = below.first().map(|r| r.len()).unwrap_or(0);
+        band_kernel::<true>(&arows, below, &brows, k1 - k0, nc);
+        k0 = k1;
+    }
+}
+
+/// Blocked backward substitution (Lᵀ·X = Y) on one column band.
+fn backward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
+    let n = l.rows;
+    debug_assert!(n > 0);
+    let mut k0 = (n - 1) / nb_step * nb_step; // last block start
+    loop {
+        let k1 = (k0 + nb_step).min(n);
+        let p = n - k1;
+        if p > 0 {
+            // X[k0..k1, :] -= L[k1.., k0..k1]ᵀ · X[k1.., :]. Pack the
+            // Lᵀ block once (nb × p) so the kernel streams it.
+            let nb = k1 - k0;
+            let mut lt = vec![0.0f64; nb * p];
+            for kk in 0..p {
+                let lrow = &l.data[(k1 + kk) * n + k0..(k1 + kk) * n + k1];
+                for (il, &v) in lrow.iter().enumerate() {
+                    lt[il * p + kk] = v;
+                }
+            }
+            let (active, below) = rows.split_at_mut(k1);
+            let brows: Vec<&[f64]> = below.iter().map(|r| &**r).collect();
+            let arows: Vec<&[f64]> = lt.chunks(p).collect();
+            let cband = &mut active[k0..k1];
+            let nc = cband.first().map(|r| r.len()).unwrap_or(0);
+            band_kernel::<true>(&arows, cband, &brows, p, nc);
+        }
+        // Diagonal block back-substitution.
+        for i in (k0..k1).rev() {
+            let (head, tail) = rows.split_at_mut(i + 1);
+            let xi = &mut *head[i];
+            for j in (i + 1)..k1 {
+                let lji = l[(j, i)];
+                if lji != 0.0 {
+                    axpy(-lji, &*tail[j - i - 1], xi);
+                }
+            }
+            let d = l[(i, i)];
+            for v in xi.iter_mut() {
+                *v /= d;
+            }
+        }
+        if k0 == 0 {
+            break;
+        }
+        k0 -= nb_step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul_nt_scalar, matmul_scalar,
+                                matmul_tn_scalar};
+    use crate::linalg::cholesky::{cholesky_scalar, solve_lower_mat_scalar,
+                                  solve_upper_t_mat_scalar};
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::util::pool::ThreadPool;
+    use std::sync::Arc;
+
+    fn rand_mat(g: &mut Gen, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, g.normal_vec(r * c))
+    }
+
+    fn seeded_mat(rng: &mut crate::util::Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, rng.normals(r * c))
+    }
+
+    fn rand_spd(g: &mut Gen, n: usize) -> Mat {
+        let a = rand_mat(g, n, n);
+        let mut spd = gemm_nt(&LinalgCtx::serial(), &a, &a);
+        spd.add_diag(n as f64 + 1.0);
+        spd
+    }
+
+    fn pooled_ctx(workers: usize) -> LinalgCtx {
+        LinalgCtx::pooled(Arc::new(ThreadPool::new(workers)))
+    }
+
+    /// Serial blocked GEMM is bitwise-equal to the seed scalar kernel —
+    /// the strongest form of the ≤1e-10 acceptance bar.
+    #[test]
+    fn gemm_bitwise_matches_scalar_matmul() {
+        prop_check("gemm-bitwise-scalar", 12, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 70), g.usize_in(1, 401), g.usize_in(1, 70));
+            let a = rand_mat(g, m, k);
+            let b = rand_mat(g, k, n);
+            let blocked = gemm(&LinalgCtx::serial(), &a, &b);
+            let scalar = matmul_scalar(&a, &b);
+            assert_eq!(blocked, scalar, "m={m} k={k} n={n}");
+        });
+    }
+
+    /// Pooled GEMM is bitwise-equal to serial at every thread count.
+    #[test]
+    fn gemm_pooled_bitwise_matches_serial() {
+        prop_check("gemm-pooled-serial", 6, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 90), g.usize_in(1, 220), g.usize_in(1, 90));
+            let a = rand_mat(g, m, k);
+            let b = rand_mat(g, k, n);
+            let serial = gemm(&LinalgCtx::serial(), &a, &b);
+            for workers in [2, 4] {
+                let pooled = gemm(&pooled_ctx(workers), &a, &b);
+                assert_eq!(serial, pooled, "workers={workers}");
+            }
+        });
+    }
+
+    /// Awkward shapes: sizes straddling the KC/NC tile edges and the
+    /// 1×n / n×1 degenerate cases.
+    #[test]
+    fn gemm_awkward_shapes() {
+        let ctx = LinalgCtx::serial();
+        let mut g = crate::util::Pcg64::seed(77);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 300, 1),
+            (1, 5, 257),
+            (257, 3, 1),
+            (2, 193, 255),
+            (3, 192, 256),
+            (5, 191, 257),
+        ] {
+            let a = seeded_mat(&mut g, m, k);
+            let b = seeded_mat(&mut g, k, n);
+            assert_eq!(gemm(&ctx, &a, &b), matmul_scalar(&a, &b),
+                       "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_nt_match_scalar_variants() {
+        prop_check("gemm-tn-nt", 10, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 40));
+            let ctx = LinalgCtx::serial();
+            let at = rand_mat(g, k, m); // used as Aᵀ
+            let b = rand_mat(g, k, n);
+            let tn = gemm_tn(&ctx, &at, &b);
+            assert!(tn.max_abs_diff(&matmul_tn_scalar(&at, &b)) < 1e-12);
+            let c = rand_mat(g, m, k);
+            let d = rand_mat(g, n, k);
+            let nt = gemm_nt(&ctx, &c, &d);
+            assert!(nt.max_abs_diff(&matmul_nt_scalar(&c, &d)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn cholesky_blocked_matches_scalar() {
+        prop_check("chol-blocked-scalar", 10, |g| {
+            let n = g.usize_in(1, 150);
+            let a = rand_spd(g, n);
+            let blocked = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
+            let scalar = cholesky_scalar(&a).unwrap();
+            assert!(blocked.max_abs_diff(&scalar) < 1e-10, "n={n}");
+            // strictly-upper stays exactly zero despite band overshoot
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(blocked[(i, j)], 0.0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn cholesky_blocked_pooled_bitwise_matches_serial() {
+        prop_check("chol-pooled-serial", 5, |g| {
+            let n = g.usize_in(2, 180);
+            let a = rand_spd(g, n);
+            let serial = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
+            let pooled = cholesky_blocked(&pooled_ctx(3), &a).unwrap();
+            assert_eq!(serial, pooled, "n={n}");
+        });
+    }
+
+    /// Sizes that are not multiples of the block, with a small block so
+    /// several panel steps run; plus the 1×1 edge.
+    #[test]
+    fn cholesky_blocked_awkward_sizes() {
+        let mut g = crate::util::Pcg64::seed(5);
+        for &n in &[1usize, 2, 3, 7, 63, 65, 97, 130] {
+            let base = seeded_mat(&mut g, n, n);
+            let mut a = gemm_nt(&LinalgCtx::serial(), &base, &base);
+            a.add_diag(n as f64 + 1.0);
+            let ctx = LinalgCtx::serial().with_block(24);
+            let blocked = cholesky_blocked(&ctx, &a).unwrap();
+            let scalar = cholesky_scalar(&a).unwrap();
+            assert!(blocked.max_abs_diff(&scalar) < 1e-10, "n={n}");
+        }
+    }
+
+    /// Jittered Hilbert-like (near-singular SPD) matrices: blocked and
+    /// scalar factors agree within the conditioning-limited tolerance,
+    /// and both recompose A.
+    #[test]
+    fn cholesky_blocked_near_singular_hilbert() {
+        prop_check("chol-hilbert", 8, |g| {
+            let n = g.usize_in(2, 48);
+            let jitter = 10f64.powi(-(g.usize_in(4, 8) as i32));
+            let mut a = Mat::from_fn(n, n, |i, j| 1.0 / ((i + j + 1) as f64));
+            a.add_diag(jitter);
+            let ctx = LinalgCtx::serial().with_block(16);
+            let blocked = cholesky_blocked(&ctx, &a).unwrap();
+            let scalar = cholesky_scalar(&a).unwrap();
+            // factors agree to conditioning-limited precision…
+            assert!(blocked.max_abs_diff(&scalar) < 1e-8,
+                    "n={n} jitter={jitter:.0e}");
+            // …and both recompose A tightly
+            let ctxs = LinalgCtx::serial();
+            assert!(gemm_nt(&ctxs, &blocked, &blocked).max_abs_diff(&a)
+                    < 1e-10);
+            assert!(gemm_nt(&ctxs, &scalar, &scalar).max_abs_diff(&a)
+                    < 1e-10);
+        });
+    }
+
+    #[test]
+    fn cholesky_blocked_rejects_non_spd() {
+        let mut a = Mat::identity(100);
+        a[(70, 70)] = -2.0;
+        let err = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap_err();
+        assert_eq!(err.pivot, 70);
+        assert!(err.value < 0.0);
+    }
+
+    #[test]
+    fn blocked_solves_match_scalar() {
+        prop_check("solves-blocked-scalar", 10, |g| {
+            let n = g.usize_in(1, 120);
+            let w = g.usize_in(1, 40);
+            let a = rand_spd(g, n);
+            let l = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
+            let b = rand_mat(g, n, w);
+            let ctx = LinalgCtx::serial().with_block(32);
+            let lo = solve_lower_mat_ctx(&ctx, &l, &b);
+            assert!(lo.max_abs_diff(&solve_lower_mat_scalar(&l, &b)) < 1e-10);
+            let up = solve_upper_t_mat_ctx(&ctx, &l, &b);
+            assert!(up.max_abs_diff(&solve_upper_t_mat_scalar(&l, &b))
+                    < 1e-10);
+            // full cho_solve residual
+            let x = cho_solve_mat_ctx(&ctx, &l, &b);
+            let r = gemm(&LinalgCtx::serial(), &a, &x);
+            assert!(r.max_abs_diff(&b) < 1e-8, "n={n} w={w}");
+        });
+    }
+
+    #[test]
+    fn blocked_solves_pooled_bitwise_match_serial() {
+        prop_check("solves-pooled-serial", 5, |g| {
+            let n = g.usize_in(2, 100);
+            let w = g.usize_in(2, 64);
+            let a = rand_spd(g, n);
+            let l = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
+            let b = rand_mat(g, n, w);
+            let serial = LinalgCtx::serial();
+            let pooled = pooled_ctx(3);
+            assert_eq!(solve_lower_mat_ctx(&serial, &l, &b),
+                       solve_lower_mat_ctx(&pooled, &l, &b));
+            assert_eq!(solve_upper_t_mat_ctx(&serial, &l, &b),
+                       solve_upper_t_mat_ctx(&pooled, &l, &b));
+        });
+    }
+
+    /// A ctx whose pool is "hidden" (call from a worker of the same
+    /// pool) must fall back to serial and still give exact results.
+    #[test]
+    fn nested_call_from_worker_degrades_to_serial() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let ctx = LinalgCtx::pooled(Arc::clone(&pool));
+        let mut g = crate::util::Pcg64::seed(42);
+        let a = seeded_mat(&mut g, 33, 47);
+        let b = seeded_mat(&mut g, 47, 29);
+        let want = gemm(&LinalgCtx::serial(), &a, &b);
+        let got = pool.par_map(1, move |_| gemm(&ctx, &a, &b));
+        assert_eq!(got[0], want);
+    }
+}

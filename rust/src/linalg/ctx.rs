@@ -1,0 +1,208 @@
+//! [`LinalgCtx`] — the execution context every blocked kernel takes:
+//! a factorization block size plus an optional [`ThreadPool`] handle.
+//!
+//! Callers choose serial or pooled execution *explicitly*: the ctx is
+//! plumbed down from wherever the pool lives (e.g.
+//! [`crate::cluster::ParallelExecutor::linalg_ctx`]) instead of any
+//! global state. Two guarantees shape the design:
+//!
+//! 1. **Pool-nested calls degrade to serial.** When the calling thread
+//!    is itself a worker of the ctx's pool (a simulated machine's math
+//!    running under the cluster executor), [`LinalgCtx::pool`] returns
+//!    `None` and kernels run inline — same-pool `run_batch` would
+//!    deadlock (and asserts; see [`ThreadPool::run_batch`]).
+//! 2. **Pooled ≡ serial, bitwise.** Parallelism only ever partitions
+//!    *output* rows/columns into disjoint bands; every element is
+//!    computed by the same instruction sequence whatever the band
+//!    boundaries or worker count, so a pooled run reproduces the serial
+//!    run exactly. The PR-1 executor-equivalence suite relies on this.
+
+use std::sync::Arc;
+
+use crate::util::pool::ThreadPool;
+
+/// Default factorization block (POTRF/TRSM panel width). 64 keeps the
+/// diagonal block + one packed panel column comfortably inside L1/L2
+/// while the trailing GEMM update dominates the flops.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Execution context for the blocked linalg engine: block size +
+/// optional thread pool. Cheap to clone (the pool is shared via `Arc`).
+#[derive(Clone)]
+pub struct LinalgCtx {
+    /// Factorization block size (Cholesky panel width). Must be > 0; a
+    /// multiple of 4 preserves the GEMM microkernel's full-speed path.
+    pub block: usize,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Default for LinalgCtx {
+    fn default() -> Self {
+        LinalgCtx::serial()
+    }
+}
+
+impl std::fmt::Debug for LinalgCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.pool {
+            None => write!(f, "LinalgCtx::serial(block={})", self.block),
+            Some(p) => write!(
+                f,
+                "LinalgCtx::pooled(block={}, workers={})",
+                self.block,
+                p.workers()
+            ),
+        }
+    }
+}
+
+impl LinalgCtx {
+    /// Serial execution, default block size.
+    pub fn serial() -> LinalgCtx {
+        LinalgCtx { block: DEFAULT_BLOCK, pool: None }
+    }
+
+    /// Pooled execution on an existing shared pool, default block size.
+    pub fn pooled(pool: Arc<ThreadPool>) -> LinalgCtx {
+        LinalgCtx { block: DEFAULT_BLOCK, pool: Some(pool) }
+    }
+
+    /// Builder-style block-size override.
+    pub fn with_block(mut self, block: usize) -> LinalgCtx {
+        assert!(block > 0, "LinalgCtx block must be > 0");
+        self.block = block;
+        self
+    }
+
+    /// The pool to fan work out on — `None` when serial *or* when the
+    /// calling thread is one of this pool's own workers (guarantee 1).
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        match &self.pool {
+            Some(p) if !p.is_worker() => Some(p),
+            _ => None,
+        }
+    }
+
+    /// True when a pool is attached (regardless of calling thread).
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Worker threads available to this ctx *from the calling thread*
+    /// (1 when serial or when called from a worker of the same pool).
+    pub fn workers(&self) -> usize {
+        self.pool().map(|p| p.workers()).unwrap_or(1)
+    }
+
+    /// Run a batch of jobs: on the pool when available from this
+    /// thread, inline (in order) otherwise. Jobs must write disjoint
+    /// data; banded callers in [`super::blocked`] uphold guarantee 2.
+    pub(crate) fn run_jobs<'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
+    ) {
+        match self.pool() {
+            Some(pool) if jobs.len() > 1 => pool.run_batch(jobs),
+            _ => {
+                for job in jobs {
+                    job();
+                }
+            }
+        }
+    }
+
+    /// Split `n` units into ~equal contiguous ranges sized for this
+    /// ctx's parallelism: one range when serial, about two per worker
+    /// when pooled (never smaller than `min` units, to keep per-job
+    /// work well above pool dispatch cost). Returns `(lo, hi)` pairs
+    /// covering `0..n` exactly, in order.
+    pub(crate) fn ranges(&self, n: usize, min: usize) -> Vec<(usize, usize)> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers();
+        let min = min.max(1);
+        let target = if workers <= 1 { 1 } else { 2 * workers };
+        let chunk = (n / target).max(min).max(1);
+        let mut out = Vec::new();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            out.push((lo, hi));
+            lo = hi;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_ctx_has_no_pool() {
+        let ctx = LinalgCtx::serial();
+        assert!(ctx.pool().is_none());
+        assert!(!ctx.is_pooled());
+        assert_eq!(ctx.workers(), 1);
+        assert_eq!(ctx.block, DEFAULT_BLOCK);
+        assert_eq!(format!("{ctx:?}"), "LinalgCtx::serial(block=64)");
+    }
+
+    #[test]
+    fn pooled_ctx_reports_pool() {
+        let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+        assert!(ctx.is_pooled());
+        assert_eq!(ctx.workers(), 3);
+        assert!(format!("{ctx:?}").contains("workers=3"));
+    }
+
+    #[test]
+    fn pool_is_hidden_from_its_own_workers() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let ctx = LinalgCtx::pooled(Arc::clone(&pool));
+        assert!(ctx.pool().is_some(), "visible from the caller thread");
+        let c = ctx.clone();
+        let seen = pool.par_map(2, move |_| c.pool().is_some());
+        assert_eq!(seen, vec![false, false], "hidden on worker threads");
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let ctx = LinalgCtx::serial();
+        assert_eq!(ctx.ranges(10, 1), vec![(0, 10)]);
+        assert!(ctx.ranges(0, 4).is_empty());
+        let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(2)));
+        let r = ctx.ranges(100, 8);
+        assert_eq!(r.first().unwrap().0, 0);
+        assert_eq!(r.last().unwrap().1, 100);
+        for w in r.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "contiguous");
+        }
+        assert!(r.iter().all(|&(lo, hi)| hi - lo >= 8 || hi == 100));
+    }
+
+    #[test]
+    fn run_jobs_inline_when_serial() {
+        let ctx = LinalgCtx::serial();
+        let mut hits = vec![false; 4];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = hits
+                .iter_mut()
+                .map(|h| {
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || *h = true);
+                    job
+                })
+                .collect();
+            ctx.run_jobs(jobs);
+        }
+        assert_eq!(hits, vec![true; 4]);
+    }
+
+    #[test]
+    fn with_block_overrides() {
+        let ctx = LinalgCtx::serial().with_block(32);
+        assert_eq!(ctx.block, 32);
+    }
+}

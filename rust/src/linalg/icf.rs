@@ -8,6 +8,7 @@
 //! "row-based" scheme of Chang et al. (2007) that pICF distributes
 //! column-block-wise across machines (see `parallel::picf`).
 
+use super::ctx::LinalgCtx;
 use super::Mat;
 
 /// Source of kernel matrix entries: `n`, diagonal, and full rows.
@@ -54,17 +55,33 @@ impl IcfFactor {
     }
 }
 
-/// Pivoted incomplete Cholesky of rank ≤ `rank`.
+/// Pivoted incomplete Cholesky of rank ≤ `rank` (serial ctx).
 ///
 /// Stops early when the residual trace falls below `tol` (pass 0.0 to
 /// force exactly `rank` steps on a full-rank matrix).
 pub fn icf(k: &dyn KernelSource, rank: usize, tol: f64) -> IcfFactor {
+    icf_ctx(&LinalgCtx::serial(), k, rank, tol)
+}
+
+/// [`icf`] with explicit execution context: the per-step O(step·n) row
+/// correction and residual-diagonal update fan out over *column* bands
+/// of F on the ctx's pool. Banding is element-disjoint, so the pooled
+/// factor is bitwise-identical to the serial one (which in turn stays
+/// bit-identical to `parallel::picf::parallel_icf`, pivot for pivot —
+/// the pivot scan itself is untouched).
+pub fn icf_ctx(
+    ctx: &LinalgCtx,
+    k: &dyn KernelSource,
+    rank: usize,
+    tol: f64,
+) -> IcfFactor {
     let n = k.n();
     let rank = rank.min(n);
     let mut d: Vec<f64> = (0..n).map(|i| k.diag(i)).collect();
     let mut f = Mat::zeros(rank, n);
     let mut pivots = Vec::with_capacity(rank);
     let mut krow = vec![0.0; n];
+    let col_ranges = ctx.ranges(n, 64);
 
     for step in 0..rank {
         // pivot: largest residual diagonal; ties broken toward the
@@ -91,27 +108,47 @@ pub fn icf(k: &dyn KernelSource, rank: usize, tol: f64) -> IcfFactor {
         k.row(j, &mut krow);
 
         // f[step, i] = (K[j, i] - Σ_{t<step} f[t, j] f[t, i]) / piv
-        // accumulate the correction without re-reading columns:
+        // accumulate the correction without re-reading columns, one
+        // column band per pool job (serial ctx: one inline band)
         let (done, frow_tail) = f.data.split_at_mut(step * n);
         let frow = &mut frow_tail[..n];
         frow.copy_from_slice(&krow);
-        for t in 0..step {
-            let ftj = done[t * n + j];
-            if ftj != 0.0 {
-                let ft = &done[t * n..(t + 1) * n];
-                for i in 0..n {
-                    frow[i] -= ftj * ft[i];
-                }
+        {
+            let done_ref: &[f64] = done;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(col_ranges.len());
+            let mut rest: &mut [f64] = frow;
+            let mut d_rest: &mut [f64] = &mut d[..];
+            for &(lo, hi) in &col_ranges {
+                let (fband, ftail) =
+                    std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rest = ftail;
+                let (dband, dtail) =
+                    std::mem::take(&mut d_rest).split_at_mut(hi - lo);
+                d_rest = dtail;
+                jobs.push(Box::new(move || {
+                    for t in 0..step {
+                        let ftj = done_ref[t * n + j];
+                        if ftj != 0.0 {
+                            let ft = &done_ref[t * n + lo..t * n + hi];
+                            for (v, &fv) in fband.iter_mut().zip(ft) {
+                                *v -= ftj * fv;
+                            }
+                        }
+                    }
+                    for v in fband.iter_mut() {
+                        *v /= piv;
+                    }
+                    if (lo..hi).contains(&j) {
+                        fband[j - lo] = piv; // exact; avoids drift
+                    }
+                    // residual diagonal update (band-local)
+                    for (dv, &fv) in dband.iter_mut().zip(fband.iter()) {
+                        *dv -= fv * fv;
+                    }
+                }));
             }
-        }
-        for v in frow.iter_mut() {
-            *v /= piv;
-        }
-        frow[j] = piv; // exact by construction; avoids drift
-
-        // residual diagonal update
-        for i in 0..n {
-            d[i] -= frow[i] * frow[i];
+            ctx.run_jobs(jobs);
         }
         d[j] = 0.0;
     }
@@ -220,6 +257,26 @@ mod tests {
         for r in 0..6 {
             assert_eq!(blk.row(r), &fac.f.row(r)[4..9]);
         }
+    }
+
+    /// Pooled ICF (column-banded updates) is bitwise-identical to the
+    /// serial factorization — pivots, factor, and residual.
+    #[test]
+    fn pooled_icf_bitwise_matches_serial() {
+        use crate::linalg::ctx::LinalgCtx;
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        prop_check("icf-pooled-serial", 6, |g| {
+            let n = g.usize_in(2, 80);
+            let k = rand_spd(g, n);
+            let r = g.usize_in(1, n + 1).min(n);
+            let serial = icf(&DenseSource(&k), r, 0.0);
+            let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+            let pooled = icf_ctx(&ctx, &DenseSource(&k), r, 0.0);
+            assert_eq!(serial.pivots, pooled.pivots);
+            assert_eq!(serial.f, pooled.f);
+            assert_eq!(serial.residual, pooled.residual);
+        });
     }
 
     #[test]

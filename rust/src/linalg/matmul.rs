@@ -1,18 +1,39 @@
-//! Matrix products, cache-aware for row-major storage.
-//!
-//! `matmul` uses the i-k-j loop order so the inner loop streams rows of B
-//! and C contiguously (auto-vectorizes well); the transposed variants
-//! avoid materializing transposes.
+//! Matrix products. The `matmul*` entry points route through the
+//! cache-blocked engine in [`super::blocked`] (serial ctx — pass a
+//! [`super::LinalgCtx`] to `gemm`/`gemm_tn`/`gemm_nt` for pooled
+//! execution); the `*_scalar` variants are the seed's streaming
+//! kernels, kept as the bitwise/numerical reference the property tests
+//! and `linalg_bench` compare against.
 
+use super::blocked;
+use super::ctx::LinalgCtx;
 use super::{axpy, dot, Mat};
 
-/// C = A · B.
-///
-/// i-k-j order with a 4-wide k-unrolled microkernel: four rows of B are
-/// combined into C's row per pass, quartering the C-row memory traffic
-/// (the §Perf log shows ~1.9× over the plain axpy loop at 512²).
+/// C = A · B via the blocked engine (serial). Bitwise-identical to
+/// [`matmul_scalar`]; ≈2× faster at 512²–1024² (see `BENCH_linalg.json`).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.rows, "matmul: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    blocked::gemm(&LinalgCtx::serial(), a, b)
+}
+
+/// C = Aᵀ · B (A stored untransposed) via the blocked engine.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    blocked::gemm_tn(&LinalgCtx::serial(), a, b)
+}
+
+/// C = A · Bᵀ (B stored untransposed) via the blocked engine.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    blocked::gemm_nt(&LinalgCtx::serial(), a, b)
+}
+
+/// Seed scalar kernel: i-k-j loop order with a 4-wide k-unrolled
+/// microkernel. Kept as the reference implementation (the blocked
+/// engine reproduces it bitwise) and as the `linalg_bench` baseline.
+pub fn matmul_scalar(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul: {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
     let mut c = Mat::zeros(a.rows, b.cols);
     let n = b.cols;
     let kk = a.cols;
@@ -42,8 +63,8 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = Aᵀ · B (A is stored untransposed).
-pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+/// Seed scalar C = Aᵀ · B (reference for [`matmul_tn`]).
+pub fn matmul_tn_scalar(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn: {}x{}ᵀ · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.cols, b.cols);
     for k in 0..a.rows {
@@ -58,8 +79,8 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = A · Bᵀ (B is stored untransposed).
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+/// Seed scalar C = A · Bᵀ (reference for [`matmul_nt`]).
+pub fn matmul_nt_scalar(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt: {}x{} · {}x{}ᵀ", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.rows);
     for i in 0..a.rows {
@@ -72,31 +93,123 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// y = A · x.
+/// y = A · x — four rows per pass (x is streamed once for all four
+/// accumulators, matching the `matmul` microkernel style), with the
+/// same 4-wide k-grouped accumulation per row as `matmul` on an n×1
+/// right-hand side, so serve-time single-query predictions see the
+/// same numbers whether they go through `matvec` or the GEMM path.
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols, x.len(), "matvec shape");
-    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+    let kk = a.cols;
+    let mut y = vec![0.0; a.rows];
+    let mut i = 0;
+    while i + 4 <= a.rows {
+        let (r0, r1, r2, r3) =
+            (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+        let mut k = 0;
+        while k + 4 <= kk {
+            let (x0, x1, x2, x3) = (x[k], x[k + 1], x[k + 2], x[k + 3]);
+            s0 += r0[k] * x0 + r0[k + 1] * x1 + r0[k + 2] * x2 + r0[k + 3] * x3;
+            s1 += r1[k] * x0 + r1[k + 1] * x1 + r1[k + 2] * x2 + r1[k + 3] * x3;
+            s2 += r2[k] * x0 + r2[k + 1] * x1 + r2[k + 2] * x2 + r2[k + 3] * x3;
+            s3 += r3[k] * x0 + r3[k + 1] * x1 + r3[k + 2] * x2 + r3[k + 3] * x3;
+            k += 4;
+        }
+        while k < kk {
+            let xk = x[k];
+            s0 += r0[k] * xk;
+            s1 += r1[k] * xk;
+            s2 += r2[k] * xk;
+            s3 += r3[k] * xk;
+            k += 1;
+        }
+        y[i] = s0;
+        y[i + 1] = s1;
+        y[i + 2] = s2;
+        y[i + 3] = s3;
+        i += 4;
+    }
+    while i < a.rows {
+        let row = a.row(i);
+        let mut s = 0.0;
+        let mut k = 0;
+        while k + 4 <= kk {
+            s += row[k] * x[k]
+                + row[k + 1] * x[k + 1]
+                + row[k + 2] * x[k + 2]
+                + row[k + 3] * x[k + 3];
+            k += 4;
+        }
+        while k < kk {
+            s += row[k] * x[k];
+            k += 1;
+        }
+        y[i] = s;
+        i += 1;
+    }
+    y
 }
 
-/// y = Aᵀ · x.
+/// y = Aᵀ · x — four k-rows combined per pass (quartering the y-row
+/// memory traffic, the same trick as the `matmul` microkernel).
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows, x.len(), "matvec_t shape");
-    let mut y = vec![0.0; a.cols];
-    for (k, &xk) in x.iter().enumerate() {
+    let n = a.cols;
+    let mut y = vec![0.0; n];
+    let mut k = 0;
+    while k + 4 <= a.rows {
+        let (x0, x1, x2, x3) = (x[k], x[k + 1], x[k + 2], x[k + 3]);
+        let r0 = a.row(k);
+        let r1 = a.row(k + 1);
+        let r2 = a.row(k + 2);
+        let r3 = a.row(k + 3);
+        for j in 0..n {
+            y[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+        }
+        k += 4;
+    }
+    while k < a.rows {
+        let xk = x[k];
         if xk != 0.0 {
             axpy(xk, a.row(k), &mut y);
         }
+        k += 1;
     }
     y
 }
 
 /// diag(A · B) without forming the product (A: m×k, B: k×m).
+///
+/// Streams both operands cache-friendly: k is tiled so the visited
+/// rows of B stay resident while every row of A walks its contiguous
+/// k-slice (the seed version strode down a full column of B per output
+/// element, missing cache on every step for large k).
 pub fn diag_of_product(a: &Mat, b: &Mat) -> Vec<f64> {
     assert_eq!(a.cols, b.rows);
     assert_eq!(a.rows, b.cols);
-    (0..a.rows)
-        .map(|i| (0..a.cols).map(|k| a[(i, k)] * b[(k, i)]).sum())
-        .collect()
+    let m = a.rows;
+    let kdim = a.cols;
+    let mut out = vec![0.0; m];
+    if m == 0 || kdim == 0 {
+        return out;
+    }
+    // Tile depth: keep the B tile (tk rows × b.cols) around 256 KiB.
+    let tk = (32768 / b.cols.max(1)).clamp(8, 512);
+    let mut k0 = 0;
+    while k0 < kdim {
+        let k1 = (k0 + tk).min(kdim);
+        for (i, o) in out.iter_mut().enumerate() {
+            let arow = &a.row(i)[k0..k1];
+            let mut s = 0.0;
+            for (t, &av) in arow.iter().enumerate() {
+                s += av * b.data[(k0 + t) * b.cols + i];
+            }
+            *o += s;
+        }
+        k0 = k1;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -123,6 +236,25 @@ mod tests {
             let b = rand_mat(g, k, n);
             let c = matmul(&a, &b);
             assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-12);
+        });
+    }
+
+    /// The public entry points are bitwise-faithful to the seed scalar
+    /// kernel (matmul) / agree to float precision (tn, nt).
+    #[test]
+    fn blocked_entry_points_match_scalar() {
+        prop_check("matmul-vs-scalar", 16, |g| {
+            let (m, k, n) =
+                (g.usize_in(1, 30), g.usize_in(1, 60), g.usize_in(1, 30));
+            let a = rand_mat(g, m, k);
+            let b = rand_mat(g, k, n);
+            assert_eq!(matmul(&a, &b), matmul_scalar(&a, &b));
+            let at = rand_mat(g, k, m);
+            assert!(matmul_tn(&at, &b)
+                .max_abs_diff(&matmul_tn_scalar(&at, &b)) < 1e-12);
+            let bt = rand_mat(g, n, k);
+            assert!(matmul_nt(&a, &bt)
+                .max_abs_diff(&matmul_nt_scalar(&a, &bt)) < 1e-12);
         });
     }
 
@@ -159,15 +291,44 @@ mod tests {
         });
     }
 
+    /// The unrolled matvec paths hit their row-remainder and
+    /// k-remainder branches at every size mod 4.
+    #[test]
+    fn matvec_unroll_remainders() {
+        prop_check("matvec-remainders", 12, |g| {
+            for m in 1..=9usize {
+                let n = g.usize_in(1, 11);
+                let a = rand_mat(g, m, n);
+                let x = g.normal_vec(n);
+                let want: Vec<f64> = (0..m)
+                    .map(|i| {
+                        (0..n).map(|k| a[(i, k)] * x[k]).sum::<f64>()
+                    })
+                    .collect();
+                assert_all_close(&matvec(&a, &x), &want, 1e-12, 1e-12);
+                let z = g.normal_vec(m);
+                let want_t: Vec<f64> = (0..n)
+                    .map(|j| {
+                        (0..m).map(|k| a[(k, j)] * z[k]).sum::<f64>()
+                    })
+                    .collect();
+                assert_all_close(&matvec_t(&a, &z), &want_t, 1e-12, 1e-12);
+            }
+        });
+    }
+
+    /// Rectangular-shape property test for the cache-friendly
+    /// diag_of_product, including k ≫ m and m ≫ k shapes that cross
+    /// the tile boundary.
     #[test]
     fn diag_of_product_matches() {
         prop_check("diagprod", 16, |g| {
-            let (m, k) = (g.usize_in(1, 10), g.usize_in(1, 10));
+            let (m, k) = (g.usize_in(1, 40), g.usize_in(1, 600));
             let a = rand_mat(g, m, k);
             let b = rand_mat(g, k, m);
             let got = diag_of_product(&a, &b);
             let want = matmul(&a, &b).diag();
-            assert_all_close(&got, &want, 1e-12, 1e-12);
+            assert_all_close(&got, &want, 1e-10, 1e-10);
         });
     }
 

@@ -128,7 +128,8 @@ impl<'a> OnlineGp<'a> {
                     }
                 }
                 None => {
-                    let ctx = SupportContext::new(&self.hyp, &self.xs);
+                    let ctx = SupportContext::new_ctx(
+                        &self.spec.exec.linalg_ctx(), &self.hyp, &self.xs);
                     let refs: Vec<_> = locals.iter().collect();
                     self.global =
                         Some(crate::gp::summaries::global_summary(&ctx, &refs));

@@ -45,6 +45,9 @@ pub fn run(
     assert!(n % m == 0 && u % m == 0, "Definition 1 needs m | n and m | u");
     let s = xs.rows;
     let mut cluster = spec.cluster();
+    // Master-side block math shares the executor's pool (degrades to
+    // serial inside node closures / under a serial executor).
+    let lctx = spec.exec.linalg_ctx();
     let mut rng = Pcg64::new(seed, 0x9C);
 
     // STEP 1: partition. The clustering scheme runs across machines —
@@ -83,7 +86,7 @@ pub fn run(
     // STEP 3: reduce + assimilate + broadcast.
     cluster.reduce_to_master(f64_bytes(s * s + s));
     let global: GlobalSummary = cluster.compute_on(MASTER, || {
-        let ctx = SupportContext::new(hyp, xs);
+        let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
         crate::gp::summaries::global_summary(&ctx, &refs)
     });
@@ -129,6 +132,7 @@ pub fn run_with_partition(
 ) -> ProtocolOutput {
     let s = xs.rows;
     let mut cluster = spec.cluster();
+    let lctx = spec.exec.linalg_ctx();
     cluster.phase("partition");
     let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
     let locals = cluster.compute_all(|mid| {
@@ -140,7 +144,7 @@ pub fn run_with_partition(
     cluster.phase("local_summary");
     cluster.reduce_to_master(f64_bytes(s * s + s));
     let global: GlobalSummary = cluster.compute_on(MASTER, || {
-        let ctx = SupportContext::new(hyp, xs);
+        let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
         crate::gp::summaries::global_summary(&ctx, &refs)
     });

@@ -36,6 +36,9 @@ pub fn run(
     assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
     let s = xs.rows;
     let mut cluster = spec.cluster();
+    // Master-side block math shares the executor's pool (degrades to
+    // serial inside node closures / under a serial executor).
+    let lctx = spec.exec.linalg_ctx();
 
     // prior mean: empirical train mean (known to all machines — each can
     // compute its block sum; we charge the master the negligible combine)
@@ -53,7 +56,7 @@ pub fn run(
     // STEP 3: reduce local summaries to master, assimilate, broadcast.
     cluster.reduce_to_master(f64_bytes(s * s + s));
     let global: GlobalSummary = cluster.compute_on(MASTER, || {
-        let ctx = SupportContext::new(hyp, xs);
+        let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
         crate::gp::summaries::global_summary(&ctx, &refs)
     });

@@ -86,6 +86,17 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// True when the calling thread is one of *this* pool's workers.
+    ///
+    /// Used by [`crate::linalg::LinalgCtx`] to degrade pool-nested
+    /// linalg calls to serial execution instead of tripping the
+    /// same-pool reentrancy assert in [`ThreadPool::run_batch`]: a
+    /// worker running one simulated machine's math must not wait on
+    /// jobs that need the very worker it occupies.
+    pub fn is_worker(&self) -> bool {
+        WORKER_OF_POOL.with(|w| w.get()) == Arc::as_ptr(&self.shared) as usize
+    }
+
     /// Submit one fire-and-forget job.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         self.shared.outstanding.fetch_add(1, Ordering::SeqCst);
@@ -342,6 +353,20 @@ mod tests {
             || pool.par_map(1, move |_| p.par_map(2, |i| i)),
         ));
         assert!(res.is_err(), "reentrant use must fail loudly, not hang");
+    }
+
+    #[test]
+    fn is_worker_distinguishes_threads() {
+        let pool = Arc::new(ThreadPool::new(2));
+        assert!(!pool.is_worker(), "caller thread is not a worker");
+        let p = Arc::clone(&pool);
+        let on_worker = pool.par_map(3, move |_| p.is_worker());
+        assert_eq!(on_worker, vec![true; 3]);
+        // workers of a *different* pool are not this pool's workers
+        let other = ThreadPool::new(1);
+        let p2 = Arc::clone(&pool);
+        let cross = other.par_map(1, move |_| p2.is_worker());
+        assert_eq!(cross, vec![false]);
     }
 
     #[test]
