@@ -1,0 +1,22 @@
+//! Distributed-training sweep → `BENCH_train.json` (one distributed
+//! NLML+gradient evaluation timed across host thread counts, plus the
+//! hyperparameter-recovery gate vs the exact-subset MLE baseline).
+//!
+//!     cargo bench --bench train_bench                 # full sweep + gates
+//!     PGPR_TRAIN_SMOKE=1 cargo bench --bench train_bench   # CI smoke
+//!     cargo bench --bench train_bench -- out.json     # custom output
+//!
+//! `PGPR_LENIENT_PERF=1` downgrades the gates to advisory on
+//! oversubscribed hosts (same convention as `linalg_bench`).
+
+use pgpr::bench_support::train_bench::{run, TrainBenchConfig};
+
+fn main() {
+    // skip cargo-bench's --bench flag if present; first real arg = path
+    let out = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "BENCH_train.json".to_string());
+    let cfg = TrainBenchConfig::from_env();
+    run(&cfg, &out);
+}

@@ -39,10 +39,7 @@ impl LinalgBenchConfig {
     /// Full sweep unless `PGPR_LINALG_SMOKE=1`; gates advisory when
     /// `PGPR_LENIENT_PERF=1` (both matching the repo's env conventions).
     pub fn from_env() -> LinalgBenchConfig {
-        let flag = |name: &str| match std::env::var_os(name) {
-            Some(v) => v != "0" && !v.is_empty(),
-            None => false,
-        };
+        let flag = crate::bench_support::env_flag;
         let smoke = flag("PGPR_LINALG_SMOKE");
         if smoke {
             LinalgBenchConfig {

@@ -7,12 +7,23 @@ pub mod figures;
 pub mod harness;
 pub mod linalg_bench;
 pub mod table;
+pub mod train_bench;
 pub mod workloads;
 
 pub use experiments::{run_methods, ExperimentConfig, Method, MethodResult};
 pub use harness::{bench_fn, BenchResult};
 pub use table::Table;
 pub use workloads::{prepare, Domain, Workload};
+
+/// Boolean `PGPR_*` env flag: set and neither empty nor `"0"`. The
+/// shared truthiness convention of the bench sweeps
+/// (`PGPR_LINALG_SMOKE`, `PGPR_TRAIN_SMOKE`, `PGPR_LENIENT_PERF`).
+pub fn env_flag(name: &str) -> bool {
+    match std::env::var_os(name) {
+        Some(v) => v != "0" && !v.is_empty(),
+        None => false,
+    }
+}
 
 /// Host worker threads for bench mains, from `PGPR_BENCH_THREADS`
 /// (unset = 0 = serial). Panics on an unparsable value — mirroring

@@ -1,0 +1,289 @@
+//! The `train_bench` sweep: distributed PITC training wall-clock vs
+//! host threads, plus the hyperparameter-recovery gate, written to
+//! `BENCH_train.json` (CI uploads the smoke run as an artifact next to
+//! `BENCH_linalg.json`).
+//!
+//! Modes (env), matching the `linalg_bench` conventions:
+//! * `PGPR_TRAIN_SMOKE=1` — tiny dataset / few threads / few iters for
+//!   CI; gates skipped.
+//! * `PGPR_LENIENT_PERF=1` — gates advisory on oversubscribed hosts.
+//!
+//! Gates (full mode): >1× wall-clock scaling of one distributed
+//! NLML+gradient evaluation from 1 thread to the max swept thread
+//! count, and held-out RMSE after distributed-PITC training within 5%
+//! of the exact-subset-MLE baseline (`rmse_ratio <= 1.05`) — the
+//! ISSUE-3 acceptance criterion.
+
+use crate::bench_support::harness::bench_fn;
+use crate::bench_support::workloads::{pitc_heldout_rmse, rff_recovery};
+use crate::gp::likelihood::{learn_hyperparameters, MleConfig};
+use crate::parallel::ClusterSpec;
+use crate::train::dist::{nlml_and_grad_dist, train_pitc};
+use crate::train::optim::AdamConfig;
+use crate::util::json::{obj, Json};
+
+/// Sweep configuration.
+pub struct TrainBenchConfig {
+    pub n: usize,
+    pub n_test: usize,
+    pub machines: usize,
+    pub support: usize,
+    pub dim: usize,
+    pub threads: Vec<usize>,
+    /// Adam iterations for the recovery run.
+    pub iters: usize,
+    /// Per-timing-case measurement budget in seconds.
+    pub budget_s: f64,
+    pub smoke: bool,
+    pub lenient: bool,
+    pub seed: u64,
+}
+
+impl TrainBenchConfig {
+    /// Full sweep unless `PGPR_TRAIN_SMOKE=1`; gates advisory when
+    /// `PGPR_LENIENT_PERF=1`.
+    pub fn from_env() -> TrainBenchConfig {
+        let flag = crate::bench_support::env_flag;
+        if flag("PGPR_TRAIN_SMOKE") {
+            TrainBenchConfig {
+                n: 256,
+                n_test: 64,
+                machines: 4,
+                support: 24,
+                dim: 2,
+                threads: vec![1, 2],
+                iters: 4,
+                budget_s: 0.3,
+                smoke: true,
+                lenient: true,
+                seed: 1,
+            }
+        } else {
+            TrainBenchConfig {
+                n: 8192,
+                n_test: 1024,
+                machines: 8,
+                support: 96,
+                dim: 4,
+                threads: vec![1, 2, 4, 8],
+                iters: 25,
+                budget_s: 30.0,
+                smoke: false,
+                lenient: flag("PGPR_LENIENT_PERF"),
+                seed: 1,
+            }
+        }
+    }
+}
+
+/// Run the sweep, write `out_path`, and return the JSON document.
+pub fn run(cfg: &TrainBenchConfig, out_path: &str) -> Json {
+    // the canonical recovery problem shared with `pgpr train` and the
+    // integration suite (one definition of truth/init/support/partition)
+    let r = rff_recovery(cfg.n, cfg.n_test, cfg.dim, cfg.support,
+                         cfg.machines, cfg.seed);
+    let (train_ds, test_ds, init, xs, d_blocks) =
+        (r.train, r.test, r.init, r.xs, r.d_blocks);
+    let yc: Vec<f64> = {
+        let mean =
+            train_ds.y.iter().sum::<f64>() / train_ds.len().max(1) as f64;
+        train_ds.y.iter().map(|v| v - mean).collect()
+    };
+
+    // --- timing: one distributed NLML+grad evaluation per thread count
+    let mut timing = Vec::new();
+    let mut bytes_per_eval = 0usize;
+    for &t in &cfg.threads {
+        let spec = ClusterSpec::with_threads(cfg.machines, t);
+        let label = format!("train_eval n={} M={} t={t}", cfg.n, cfg.machines);
+        let r = bench_fn(&label, 16, cfg.budget_s, &mut || {
+            let ev = nlml_and_grad_dist(&init, &train_ds.x, &yc, &xs,
+                                        &d_blocks, &spec);
+            bytes_per_eval = ev.metrics.bytes_sent;
+        });
+        println!("{}", r.report());
+        timing.push((t, r.median_s, r.min_s));
+    }
+
+    // --- recovery: full training at max threads vs exact-subset MLE
+    let tmax = *cfg.threads.iter().max().unwrap();
+    let spec = ClusterSpec::with_threads(cfg.machines, tmax);
+    let lctx = spec.exec.linalg_ctx();
+    let adam = AdamConfig { iters: cfg.iters, backtrack: true,
+                            ..Default::default() };
+    let trained = train_pitc(&init, &train_ds.x, &train_ds.y, &xs, &d_blocks,
+                             &spec, &adam);
+    let mle_cfg = MleConfig {
+        iters: cfg.iters,
+        subset: 256.min(train_ds.len()),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let mle = learn_hyperparameters(&init, &train_ds.x, &train_ds.y, &mle_cfg);
+    let heldout = |hyp: &crate::kernel::SeArd| -> f64 {
+        pitc_heldout_rmse(&lctx, hyp, &train_ds, &test_ds, &xs, &d_blocks)
+    };
+    let rmse_dist = heldout(&trained.hyp);
+    let rmse_subset = heldout(&mle.hyp);
+    let rmse_init = heldout(&init);
+    println!("held-out RMSE: init {rmse_init:.4}, distributed {rmse_dist:.4}, \
+              exact-subset {rmse_subset:.4}");
+
+    // --- document
+    let min_at = |t: usize| {
+        timing.iter().find(|&&(tt, _, _)| tt == t).map(|&(_, _, mn)| mn)
+    };
+    let scaling = match (min_at(1), min_at(tmax)) {
+        (Some(a), Some(b)) if b > 0.0 => Json::from(a / b),
+        _ => Json::Null,
+    };
+    let rmse_ratio = rmse_dist / rmse_subset.max(1e-12);
+    let doc = obj(vec![
+        ("schema", Json::from("pgpr-train-bench/1")),
+        (
+            "provenance",
+            obj(vec![
+                ("harness", Json::from("cargo-bench")),
+                (
+                    "note",
+                    Json::from("cargo bench --bench train_bench; min_s is \
+                                the fastest sample of one distributed \
+                                NLML+gradient evaluation"),
+                ),
+            ]),
+        ),
+        (
+            "config",
+            obj(vec![
+                ("n", Json::from(cfg.n)),
+                ("n_test", Json::from(cfg.n_test)),
+                ("machines", Json::from(cfg.machines)),
+                ("support", Json::from(cfg.support)),
+                ("dim", Json::from(cfg.dim)),
+                ("threads", Json::from(cfg.threads.clone())),
+                ("iters", Json::from(cfg.iters)),
+                ("smoke", Json::Bool(cfg.smoke)),
+            ]),
+        ),
+        (
+            "comm",
+            obj(vec![
+                ("bytes_per_eval", Json::from(bytes_per_eval)),
+                (
+                    "bytes_per_eval_per_machine",
+                    Json::from(
+                        bytes_per_eval / cfg.machines.saturating_sub(1).max(1),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "derived",
+            obj(vec![
+                ("train_eval_scaling_1t_to_max_threads", scaling.clone()),
+                ("rmse_init", Json::from(rmse_init)),
+                ("rmse_distributed", Json::from(rmse_dist)),
+                ("rmse_exact_subset", Json::from(rmse_subset)),
+                ("rmse_ratio_vs_subset", Json::from(rmse_ratio)),
+                ("nlml_first", Json::from(trained.nlml_trace[0])),
+                (
+                    "nlml_last",
+                    Json::from(*trained.nlml_trace.last().unwrap()),
+                ),
+                ("train_wall_s", Json::from(trained.wall_s)),
+                ("train_makespan_s", Json::from(trained.makespan_s)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(
+                timing
+                    .iter()
+                    .map(|&(t, median_s, min_s)| {
+                        obj(vec![
+                            ("kernel", Json::from("train_eval")),
+                            ("threads", Json::from(t)),
+                            ("wall_s", Json::from(median_s)),
+                            ("min_s", Json::from(min_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(out_path, doc.to_string_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("wrote {out_path}");
+    apply_gates(cfg, &doc);
+    doc
+}
+
+/// The acceptance gates: >1× thread scaling of a training evaluation
+/// and held-out RMSE within 5% of the exact-subset baseline. Advisory
+/// in smoke/lenient modes.
+fn apply_gates(cfg: &TrainBenchConfig, doc: &Json) {
+    if cfg.smoke {
+        println!("smoke mode: train perf gates skipped");
+        return;
+    }
+    let derived = doc.get("derived").expect("derived");
+    let scaling = derived
+        .get("train_eval_scaling_1t_to_max_threads")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let ratio = derived
+        .get("rmse_ratio_vs_subset")
+        .and_then(Json::as_f64)
+        .unwrap_or(f64::INFINITY);
+    let ok = scaling > 1.0 && ratio <= 1.05;
+    println!(
+        "train gates: eval scaling {scaling:.2}x (want > 1), rmse ratio \
+         {ratio:.3} (want <= 1.05)"
+    );
+    if !ok && !cfg.lenient {
+        panic!(
+            "train_bench gates failed (scaling {scaling:.2}x, rmse ratio \
+             {ratio:.3}); set PGPR_LENIENT_PERF=1 on oversubscribed hosts"
+        );
+    }
+    if !ok {
+        println!("PGPR_LENIENT_PERF: gates advisory, continuing");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Micro end-to-end run: valid JSON with the expected schema and
+    /// derived fields, parses back.
+    #[test]
+    fn smoke_sweep_writes_valid_json() {
+        let cfg = TrainBenchConfig {
+            n: 48,
+            n_test: 16,
+            machines: 3,
+            support: 8,
+            dim: 2,
+            threads: vec![1, 2],
+            iters: 2,
+            budget_s: 0.01,
+            smoke: true,
+            lenient: true,
+            seed: 3,
+        };
+        let path = std::env::temp_dir().join("pgpr_train_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let doc = run(&cfg, &path);
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(),
+                   "pgpr-train-bench/1");
+        let derived = doc.get("derived").unwrap();
+        assert!(derived.get("rmse_ratio_vs_subset").is_some());
+        assert!(derived.get("nlml_last").unwrap().as_f64().is_some());
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

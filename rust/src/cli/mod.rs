@@ -6,6 +6,7 @@
 //! * `sweep`     — regenerate a paper figure (fig1 | fig2 | fig3 | table1)
 //! * `serve`     — real-time serving demo (router + batcher + backend)
 //! * `learn`     — MLE hyperparameter learning on a workload subset
+//! * `train`     — distributed PITC marginal-likelihood training
 //! * `selftest`  — native vs PJRT backend agreement on the tiny profile
 //!
 //! Arg syntax: `--key value` or `--flag`; hand-rolled (no clap offline).
@@ -32,6 +33,9 @@ COMMANDS:
   serve     --profile tiny|aimpeak|sarcos [--requests 200] [--batch-wait-ms 2]
             [--backend pjrt|native] [--artifacts DIR] [--parallel-threads N]
   learn     --domain aimpeak|sarcos [--n 512] [--iters 40] [--seed 1]
+  train     --dataset rff|aimpeak|sarcos [--n 2048] [--m 8] [--s 96]
+            [--d 4] [--test 256] [--iters 30] [--lr 0.08] [--subset 256]
+            [--seed 1] [--no-backtrack] [--parallel-threads N]
   selftest  [--artifacts DIR]
 
 --parallel-threads N (N >= 2) executes the simulated machines' work
@@ -70,6 +74,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "sweep" => commands::sweep(&args),
         "serve" => commands::serve(&args),
         "learn" => commands::learn(&args),
+        "train" => commands::train(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -101,5 +106,19 @@ mod tests {
     #[test]
     fn info_runs() {
         assert!(run(&["info".into()]).is_ok());
+    }
+
+    /// End-to-end `pgpr train` on a tiny synthetic problem (the same
+    /// shape the CI train smoke job runs).
+    #[test]
+    fn train_smoke_runs() {
+        let argv: Vec<String> = [
+            "train", "--n", "64", "--test", "16", "--m", "4", "--s", "12",
+            "--d", "2", "--iters", "3", "--subset", "48",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(run(&argv).is_ok());
     }
 }

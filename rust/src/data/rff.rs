@@ -63,6 +63,33 @@ impl RffSampler {
     }
 }
 
+/// A synthetic regression problem drawn from a known GP: inputs uniform
+/// on [-3, 3]^d, latent field an RFF draw from GP(0, k_truth), outputs
+/// with N(0, sn2_truth) observation noise. The ground-truth workload
+/// for hyperparameter-recovery experiments (`pgpr train`,
+/// `bench_support::train_bench`): the training methods see only (x, y)
+/// and must rediscover `truth`'s length-scales and variances.
+pub fn synthetic_regression(
+    truth: &SeArd,
+    n: usize,
+    features: usize,
+    rng: &mut Pcg64,
+) -> crate::data::Dataset {
+    let d = truth.dim();
+    let f = RffSampler::draw(truth, features, rng);
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        for c in 0..d {
+            x[(i, c)] = rng.uniform_in(-3.0, 3.0);
+        }
+    }
+    let noise = truth.sn2().sqrt();
+    let y: Vec<f64> = (0..n)
+        .map(|i| f.eval(x.row(i)) + noise * rng.normal())
+        .collect();
+    crate::data::Dataset::new(x, y)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +138,20 @@ mod tests {
         for i in 0..4 {
             assert_eq!(all[i], s.eval(x.row(i)));
         }
+    }
+
+    #[test]
+    fn synthetic_regression_shapes_and_determinism() {
+        let truth = SeArd::isotropic(3, 1.0, 1.5, 0.04);
+        let a = synthetic_regression(&truth, 40, 64, &mut Pcg64::seed(6));
+        assert_eq!(a.len(), 40);
+        assert_eq!(a.dim(), 3);
+        assert!(a.x.data.iter().all(|v| (-3.0..3.0).contains(v)));
+        let b = synthetic_regression(&truth, 40, 64, &mut Pcg64::seed(6));
+        assert_eq!(a.y, b.y);
+        // output variance is in the ballpark of sf2 + sn2
+        let var = a.y_std() * a.y_std();
+        assert!(var > 0.2 && var < 6.0, "var={var}");
     }
 
     #[test]

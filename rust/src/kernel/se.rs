@@ -196,8 +196,25 @@ impl SeArd {
     /// `dK[d]` is ∂K/∂log_sf2 and `dK[d+1]` is ∂K/∂log_sn2 (same-set
     /// noise derivative = sn2·I when `same`). Used by the MLE optimizer.
     pub fn gram_with_grads(&self, x1: &Mat, x2: &Mat, same: bool) -> (Mat, Vec<Mat>) {
+        self.gram_with_grads_ctx(&LinalgCtx::serial(), x1, x2, same)
+    }
+
+    /// [`Self::gram_with_grads`] with explicit execution context: the
+    /// Gram evaluation routes through [`Self::gram_ctx`] (blocked GEMM +
+    /// banded exp on the ctx). The per-hyper elementwise passes stay
+    /// serial — this is the reference path for the trace-free gradient
+    /// evaluators ([`Self::grad_dots`],
+    /// `gp::likelihood::nlml_and_grad_ctx`), which never materialize
+    /// these dK matrices on hot paths.
+    pub fn gram_with_grads_ctx(
+        &self,
+        ctx: &LinalgCtx,
+        x1: &Mat,
+        x2: &Mat,
+        same: bool,
+    ) -> (Mat, Vec<Mat>) {
         let d = self.dim();
-        let k0 = self.gram(x1, x2); // noise-free
+        let k0 = self.gram_ctx(ctx, x1, x2); // noise-free
         let mut grads = Vec::with_capacity(d + 2);
         let inv_ls2: Vec<f64> =
             self.log_ls.iter().map(|l| (-2.0 * l).exp()).collect();
@@ -230,6 +247,74 @@ impl SeArd {
             k.add_diag(self.sn2());
         }
         (k, grads)
+    }
+
+    /// `Σ_ij coef_ij · ∂Block_ij/∂θ_p` for every log-hyperparameter,
+    /// where Block is the noise-free gram `k0` between `x1` and `x2`
+    /// plus, when `same`, the `(sn2 + jitter)·I` diagonal.
+    ///
+    /// The trace-free gradient core shared by the exact-GP NLML
+    /// (`gp::likelihood`) and distributed PITC training (`train::nlml`).
+    /// Uses the ‖x‖² expansion: with `G = coef ∘ K₀`,
+    /// `Σ_ij G_ij (x1_ic − x2_jc)² = q1ᵀ·rowsum(G) + q2ᵀ·colsum(G) −
+    /// 2·x1ᵀGx2` (q = elementwise squares), so per-hyper cost is one
+    /// matvec and no dK matrix is ever materialized. The sf2 slot is
+    /// `Σ G` (+ `jitter·tr coef` when `same` — jitter's sf2-dependence,
+    /// `jitter = JITTER_SCALE·sf2`, is included so analytic gradients
+    /// match finite differences of the jittered objective) and the sn2
+    /// slot `sn2·tr coef`.
+    pub fn grad_dots(
+        &self,
+        coef: &Mat,
+        k0: &Mat,
+        x1: &Mat,
+        x2: &Mat,
+        same: bool,
+    ) -> Vec<f64> {
+        let d = self.dim();
+        let (n1, n2) = (x1.rows, x2.rows);
+        assert_eq!((coef.rows, coef.cols), (n1, n2), "coef shape");
+        assert_eq!((k0.rows, k0.cols), (n1, n2), "k0 shape");
+        let mut g = coef.clone();
+        for (gv, kv) in g.data.iter_mut().zip(k0.data.iter()) {
+            *gv *= kv;
+        }
+        let mut rrow = vec![0.0; n1];
+        let mut rcol = vec![0.0; n2];
+        for i in 0..n1 {
+            let row = g.row(i);
+            let mut sum = 0.0;
+            for (j, &v) in row.iter().enumerate() {
+                sum += v;
+                rcol[j] += v;
+            }
+            rrow[i] = sum;
+        }
+        let mut out = vec![0.0; d + 2];
+        for (cdim, out_c) in out.iter_mut().enumerate().take(d) {
+            let inv_ls2 = (-2.0 * self.log_ls[cdim]).exp();
+            let x2c: Vec<f64> = (0..n2).map(|j| x2[(j, cdim)]).collect();
+            let gx = crate::linalg::matvec(&g, &x2c);
+            let mut s1 = 0.0;
+            let mut cross = 0.0;
+            for i in 0..n1 {
+                let xi = x1[(i, cdim)];
+                s1 += xi * xi * rrow[i];
+                cross += xi * gx[i];
+            }
+            let mut s2 = 0.0;
+            for (j, &xj) in x2c.iter().enumerate() {
+                s2 += xj * xj * rcol[j];
+            }
+            *out_c = inv_ls2 * (s1 + s2 - 2.0 * cross);
+        }
+        out[d] = rrow.iter().sum();
+        if same {
+            let tr: f64 = (0..n1.min(n2)).map(|i| coef[(i, i)]).sum();
+            out[d] += self.jitter() * tr;
+            out[d + 1] = self.sn2() * tr;
+        }
+        out
     }
 }
 
@@ -365,6 +450,63 @@ mod tests {
                     }
                 }
             }
+        });
+    }
+
+    /// `grad_dots` equals explicit elementwise dots against the
+    /// materialized gradient matrices (the thing it exists to avoid).
+    #[test]
+    fn grad_dots_matches_materialized_grads() {
+        prop_check("grad-dots-vs-materialized", 10, |g| {
+            let (n1, n2, d) =
+                (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 4));
+            let hyp = rand_hyp(g, d);
+            let x1 = rand_x(g, n1, d);
+            let x2 = rand_x(g, n2, d);
+            let coef = Mat::from_vec(n1, n2, g.normal_vec(n1 * n2));
+            let k0 = hyp.gram(&x1, &x2);
+            // same = false: the materialized grads carry no jitter term,
+            // so the comparison is exact slot-for-slot
+            let dots = hyp.grad_dots(&coef, &k0, &x1, &x2, false);
+            let (_, grads) = hyp.gram_with_grads(&x1, &x2, false);
+            for (p, dk) in grads.iter().enumerate() {
+                let want: f64 = coef
+                    .data
+                    .iter()
+                    .zip(dk.data.iter())
+                    .map(|(a, b)| a * b)
+                    .sum();
+                assert_close(dots[p], want, 1e-9, 1e-10);
+            }
+            // same = true adds exactly jitter·tr and sn2·tr
+            let dots_same = hyp.grad_dots(&coef, &k0, &x1, &x2, true);
+            let tr: f64 = (0..n1.min(n2)).map(|i| coef[(i, i)]).sum();
+            assert_close(dots_same[d], dots[d] + hyp.jitter() * tr,
+                         1e-12, 1e-12);
+            assert_close(dots_same[d + 1], hyp.sn2() * tr, 1e-12, 1e-12);
+        });
+    }
+
+    /// Ctx-routed gradient evaluation is bitwise-identical to serial
+    /// (the Gram underneath is pooled-banded; the grad passes are the
+    /// same instruction sequence either way).
+    #[test]
+    fn grads_pooled_bitwise_matches_serial() {
+        use crate::linalg::LinalgCtx;
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        prop_check("gram-grads-pooled-serial", 6, |g| {
+            let (n1, n2, d) =
+                (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 4));
+            let hyp = rand_hyp(g, d);
+            let x1 = rand_x(g, n1, d);
+            let x2 = rand_x(g, n2, d);
+            let same = n1 == n2 && g.bool();
+            let (k_s, g_s) = hyp.gram_with_grads(&x1, &x2, same);
+            let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+            let (k_p, g_p) = hyp.gram_with_grads_ctx(&ctx, &x1, &x2, same);
+            assert_eq!(k_s, k_p);
+            assert_eq!(g_s, g_p);
         });
     }
 

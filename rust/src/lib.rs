@@ -8,7 +8,8 @@
 //!   pPITC / pPIC / pICF-based-GP protocols ([`parallel`]) over a
 //!   discrete-event cluster ([`cluster`]), their centralized counterparts
 //!   and the exact FGP baseline ([`gp`]), plus a real-time prediction
-//!   server ([`server`]).
+//!   server ([`server`]) and distributed PITC marginal-likelihood
+//!   training ([`train`]) on the same cluster topology.
 //! * **L2/L1 (python, build-time only)** — the GP algebra and the Pallas
 //!   SE-Gram kernel, AOT-lowered to HLO text artifacts executed through
 //!   [`runtime`] (PJRT via the `xla` crate, behind the `pjrt` cargo
@@ -56,6 +57,7 @@ pub mod parallel;
 pub mod runtime;
 pub mod server;
 pub mod testkit;
+pub mod train;
 pub mod util;
 
 /// Crate version (kept in sync with Cargo.toml).

@@ -109,6 +109,37 @@ impl ServedModel {
         self.blocks.len()
     }
 
+    /// Rebuild every summary under new hyperparameters (e.g. from
+    /// `pgpr train` / [`crate::train::dist::train_pitc`]) while keeping
+    /// the data partition and routing topology: the refit hook that lets
+    /// a live serving deployment consume trained hypers without
+    /// re-sharding. O(M·(|D|/M)³ + |S|³) — the same cost as the original
+    /// fit's summary phase, nothing else is touched.
+    pub fn refit(&self, hyp: &SeArd, backend: &dyn Backend) -> ServedModel {
+        let blocks: Vec<(Mat, Vec<f64>, LocalSummary)> = self
+            .blocks
+            .iter()
+            .map(|(xm, ym, _)| {
+                let loc = backend.local_summary(hyp, xm, ym, &self.xs);
+                (xm.clone(), ym.clone(), loc)
+            })
+            .collect();
+        let ctx = SupportContext::new(hyp, &self.xs);
+        let refs: Vec<&LocalSummary> =
+            blocks.iter().map(|(_, _, l)| l).collect();
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
+        let router = Router::from_blocks(hyp, &xms);
+        ServedModel {
+            hyp: hyp.clone(),
+            xs: self.xs.clone(),
+            y_mean: self.y_mean,
+            global,
+            blocks,
+            router,
+        }
+    }
+
     /// Predict one padded batch on machine `m` (pPIC block prediction).
     /// `xs_batch` is row-major `rows × d`; `pad_to` pads by repeating the
     /// first row up to the AOT shape (extra outputs are discarded) —
@@ -333,6 +364,36 @@ mod tests {
             assert_eq!(a.mean, b.mean, "req {}", a.id);
             assert_eq!(a.var, b.var, "req {}", a.id);
         }
+    }
+
+    /// Refit under new hypers == a fresh fit with those hypers on the
+    /// same partition (and a same-hyp refit is an exact no-op).
+    #[test]
+    fn refit_matches_fresh_fit() {
+        let mut rng = Pcg64::seed(13);
+        let (n, d, s, m) = (24, 2, 5, 3);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.05);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = random_partition(n, m, &mut rng);
+        let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                     &NativeBackend);
+
+        let hyp2 = SeArd::isotropic(d, 1.3, 1.4, 0.02);
+        let refit = model.refit(&hyp2, &NativeBackend);
+        let fresh = ServedModel::fit(&hyp2, &xd, &y, &xs, &blocks,
+                                     &NativeBackend);
+        let q: Vec<f64> = rng.normals(4 * d);
+        let (m_r, v_r) = refit.predict_batch(&NativeBackend, 1, &q, 4, 4);
+        let (m_f, v_f) = fresh.predict_batch(&NativeBackend, 1, &q, 4, 4);
+        crate::testkit::assert_all_close(&m_r, &m_f, 1e-12, 1e-12);
+        crate::testkit::assert_all_close(&v_r, &v_f, 1e-12, 1e-12);
+
+        let same = model.refit(&hyp, &NativeBackend);
+        let (m_0, _) = model.predict_batch(&NativeBackend, 0, &q, 4, 4);
+        let (m_s, _) = same.predict_batch(&NativeBackend, 0, &q, 4, 4);
+        assert_eq!(m_0, m_s);
     }
 
     #[test]

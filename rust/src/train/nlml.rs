@@ -1,0 +1,595 @@
+//! Closed-form PITC negative log marginal likelihood and its analytic
+//! gradient, decomposed into per-machine statistics of support-set size.
+//!
+//! # The training objective
+//!
+//! Under the PITC model the training outputs are jointly Gaussian with
+//! covariance
+//!
+//! ```text
+//! C = Q + Λ,   Q = Σ_DS Σ_SS⁻¹ Σ_SD,   Λ = blockdiag(Σ_DmDm − Q_mm)
+//! ```
+//!
+//! (exactly the covariance whose predictive conditionals the pPITC
+//! protocol computes — see `gp/pitc.rs::pitc_direct_oracle`), and
+//!
+//! ```text
+//! NLML(θ) = ½ yᵀC⁻¹y + ½ log|C| + n/2·log 2π
+//! ```
+//!
+//! for centered `y`. Jitter conventions match the prediction path
+//! bit-for-bit: `Σ_SS = K_SS + sn2·I + jitter·I` and each machine's
+//! `Λ_m` is what `gp::summaries::local_summary` factorizes, so a hyper
+//! vector trained here is consumed unchanged by `PitcGp` / pPITC / pPIC
+//! and the serving pipeline.
+//!
+//! # Why it distributes (the training analogue of Theorem 1)
+//!
+//! By the Woodbury identity, with `A = Σ_SS + Σ_m K_Sm Λ_m⁻¹ K_mS`:
+//!
+//! ```text
+//! yᵀC⁻¹y = Σ_m y_mᵀΛ_m⁻¹y_m − bᵀA⁻¹b,      b = Σ_m K_Sm Λ_m⁻¹ y_m
+//! log|C| = log|A| − log|Σ_SS| + Σ_m log|Λ_m|
+//! ```
+//!
+//! so machine m contributes only `(B_m, b_m, q_m, ld_m)` — an |S|×|S|
+//! matrix, an |S|-vector and two scalars ([`LocalStats`], the training
+//! analogue of Definition 2's local summary, same O(|S|²) message). The
+//! gradient distributes the same way: after one O(|S|²) broadcast of
+//! master state ([`GradBroadcast`]), each machine reduces its entire
+//! d+2-dimensional gradient contribution to scalars ([`local_grad_ctx`]),
+//! with per-hyper work done by the expansion trick
+//! ([`SeArd::grad_dots`]) — no per-hyperparameter dK matrix is ever
+//! materialized. Distributed and centralized evaluations are the *same
+//! block math in the same order* — `train/dist.rs` asserts ≤1e-10
+//! agreement, mirroring Theorem 1.
+//!
+//! Formulas were cross-validated against a dense-C oracle and central
+//! finite differences (≤1e-9 relative) before transcription; the unit
+//! tests below re-establish both properties in-tree.
+
+use crate::kernel::SeArd;
+use crate::linalg::cholesky::logdet_from_chol;
+use crate::linalg::{
+    cho_solve_mat_ctx, cho_solve_vec, cholesky_blocked, dot, gemm, gemm_nt,
+    gemm_tn, matvec, matvec_t, solve_lower_mat_ctx, solve_upper_t_mat_ctx,
+    LinalgCtx, Mat,
+};
+
+/// Support-set state shared by every machine during training (the paper
+/// assumes S is known cluster-wide). Built once per NLML evaluation.
+#[derive(Debug, Clone)]
+pub struct TrainSupport {
+    pub xs: Mat,
+    /// Noise-free K_SS (reused by the gradient expansion trick).
+    pub k0_ss: Mat,
+    /// Σ_SS = K_SS + sn2·I + jitter·I — the same matrix
+    /// `gp::summaries::SupportContext` factorizes for prediction.
+    pub s_mat: Mat,
+    /// chol(Σ_SS)
+    pub l_s: Mat,
+    /// log|Σ_SS|
+    pub logdet_s: f64,
+}
+
+impl TrainSupport {
+    pub fn new(hyp: &SeArd, xs: &Mat) -> TrainSupport {
+        TrainSupport::new_ctx(&LinalgCtx::serial(), hyp, xs)
+    }
+
+    /// [`TrainSupport::new`] with explicit linalg execution context.
+    pub fn new_ctx(lctx: &LinalgCtx, hyp: &SeArd, xs: &Mat) -> TrainSupport {
+        let k0_ss = hyp.gram_ctx(lctx, xs, xs);
+        let mut s_mat = k0_ss.clone();
+        s_mat.add_diag(hyp.sn2() + hyp.jitter());
+        let l_s = cholesky_blocked(lctx, &s_mat).expect("train: Σ_SS not SPD");
+        let logdet_s = logdet_from_chol(&l_s);
+        TrainSupport { xs: xs.clone(), k0_ss, s_mat, l_s, logdet_s }
+    }
+
+    pub fn size(&self) -> usize {
+        self.xs.rows
+    }
+}
+
+/// Machine m's round-1 training statistics — everything the master needs
+/// for the NLML value. The O(|S|²) message of the training protocol.
+#[derive(Debug, Clone)]
+pub struct LocalStats {
+    /// `b_m = K_Sm Λ_m⁻¹ y_m` (|S|)
+    pub b: Vec<f64>,
+    /// `B_m = K_Sm Λ_m⁻¹ K_mS` (|S|×|S|)
+    pub t: Mat,
+    /// `y_mᵀ Λ_m⁻¹ y_m`
+    pub quad: f64,
+    /// `log|Λ_m|`
+    pub logdet: f64,
+}
+
+impl LocalStats {
+    /// f64 payload count of the machine→master message.
+    pub fn message_f64s(&self) -> usize {
+        self.b.len() + self.t.data.len() + 2
+    }
+}
+
+/// Machine m's retained local state between the stats and gradient
+/// rounds (never communicated — it stays on the machine, like the data
+/// block itself).
+#[derive(Debug, Clone)]
+pub struct LocalState {
+    pub xm: Mat,
+    /// Noise-free cross block K_mS (B×|S|).
+    pub k_ms: Mat,
+    /// Noise-free same-set block K_mm (B×B).
+    pub k0_mm: Mat,
+    /// Λ_m⁻¹ (B×B).
+    pub lam_inv: Mat,
+    /// W_m = Λ_m⁻¹ K_mS (B×|S|).
+    pub w: Mat,
+    /// L_S⁻¹ K_Sm (|S|×B) — the forward half of the Σ_SS⁻¹K_Sm solve,
+    /// retained from round 1 so round 2 only runs the backward half.
+    pub w0: Mat,
+    /// Λ_m⁻¹ y_m (B).
+    pub lam_inv_y: Vec<f64>,
+}
+
+/// Round 1 on machine m: factorize Λ_m and condense the block into
+/// [`LocalStats`]. `ym` must be centered by the caller.
+pub fn local_stats(
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    sup: &TrainSupport,
+) -> (LocalStats, LocalState) {
+    local_stats_ctx(&LinalgCtx::serial(), hyp, xm, ym, sup)
+}
+
+/// [`local_stats`] with explicit linalg execution context (pooled runs
+/// are bitwise-identical to serial — engine guarantee).
+pub fn local_stats_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    sup: &TrainSupport,
+) -> (LocalStats, LocalState) {
+    let b_rows = xm.rows;
+    assert_eq!(ym.len(), b_rows, "train: ym length");
+    let k_ms = hyp.cov_cross_ctx(lctx, xm, &sup.xs); // (B, S)
+    let k0_mm = hyp.gram_ctx(lctx, xm, xm); // (B, B)
+    // Λ_m = Σ_mm − K_mS Σ_SS⁻¹ K_Sm via the half-solve, exactly as
+    // local_summary builds its Σ_mm|S
+    let w0 = solve_lower_mat_ctx(lctx, &sup.l_s, &k_ms.transpose()); // (S, B)
+    let q_mm = gemm_tn(lctx, &w0, &w0); // (B, B)
+    let mut lam = k0_mm.clone();
+    lam.add_diag(hyp.sn2() + hyp.jitter());
+    lam.sub_assign(&q_mm);
+    let l_m = cholesky_blocked(lctx, &lam).expect("train: Λ_m not SPD");
+    let lam_inv = cho_solve_mat_ctx(lctx, &l_m, &Mat::identity(b_rows));
+    let w = cho_solve_mat_ctx(lctx, &l_m, &k_ms); // (B, S)
+    let lam_inv_y = cho_solve_vec(&l_m, ym);
+    let stats = LocalStats {
+        b: matvec_t(&k_ms, &lam_inv_y),
+        t: gemm_tn(lctx, &k_ms, &w),
+        quad: dot(ym, &lam_inv_y),
+        logdet: logdet_from_chol(&l_m),
+    };
+    let state = LocalState {
+        xm: xm.clone(),
+        k_ms,
+        k0_mm,
+        lam_inv,
+        w,
+        w0,
+        lam_inv_y,
+    };
+    (stats, state)
+}
+
+/// What the master broadcasts back for the gradient round — O(|S|²).
+#[derive(Debug, Clone)]
+pub struct GradBroadcast {
+    /// chol(A), A = Σ_SS + Σ_m B_m.
+    pub l_a: Mat,
+    /// v = A⁻¹ b.
+    pub v: Vec<f64>,
+    /// M = Σ_SS⁻¹ (Σ B_m) A⁻¹.
+    pub m_mat: Mat,
+    /// ĝ = Σ_SS⁻¹ K_SD α (computed master-side as Σ_SS⁻¹(b − Tv)).
+    pub g_hat: Vec<f64>,
+}
+
+impl GradBroadcast {
+    /// f64 payload count of the master→machines broadcast.
+    pub fn message_f64s(&self) -> usize {
+        self.l_a.data.len() + self.v.len() + self.m_mat.data.len()
+            + self.g_hat.len()
+    }
+}
+
+/// Master state after assimilating round-1 stats: the NLML value, the
+/// broadcast package for round 2, and the master-only gradient terms.
+#[derive(Debug, Clone)]
+pub struct MasterState {
+    pub value: f64,
+    pub bcast: GradBroadcast,
+    /// Gradient terms computable only at the master
+    /// (½·dot(N + ĝĝᵀ, ∂Σ_SS), N = Σ_SS⁻¹ T A⁻¹ T Σ_SS⁻¹).
+    pub grad_master: Vec<f64>,
+}
+
+/// Assimilate round-1 stats (in machine order — the fixed reduction
+/// order that makes distributed ≡ centralized exact). `n` is the total
+/// training size (for the ½·n·log 2π constant).
+pub fn master_assemble(
+    hyp: &SeArd,
+    sup: &TrainSupport,
+    stats: &[&LocalStats],
+    n: usize,
+) -> MasterState {
+    master_assemble_ctx(&LinalgCtx::serial(), hyp, sup, stats, n)
+}
+
+/// [`master_assemble`] with explicit linalg execution context.
+pub fn master_assemble_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    sup: &TrainSupport,
+    stats: &[&LocalStats],
+    n: usize,
+) -> MasterState {
+    assert!(!stats.is_empty(), "train: no machines");
+    let s = sup.size();
+    let mut t_sum = Mat::zeros(s, s);
+    let mut b_sum = vec![0.0; s];
+    let mut quad = 0.0;
+    let mut ld = 0.0;
+    for st in stats {
+        assert_eq!(st.b.len(), s, "train: stats size");
+        t_sum.add_assign(&st.t);
+        for (acc, v) in b_sum.iter_mut().zip(st.b.iter()) {
+            *acc += v;
+        }
+        quad += st.quad;
+        ld += st.logdet;
+    }
+    let mut a = sup.s_mat.clone();
+    a.add_assign(&t_sum);
+    let l_a = cholesky_blocked(lctx, &a).expect("train: A not SPD");
+    let v = cho_solve_vec(&l_a, &b_sum);
+    let logdet = logdet_from_chol(&l_a) - sup.logdet_s + ld;
+    let value = 0.5 * (quad - dot(&b_sum, &v))
+        + 0.5 * logdet
+        + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+
+    // ĝ = Σ_SS⁻¹ K_SD α collapses to Σ_SS⁻¹ (b − T v) at the master.
+    let tv = matvec(&t_sum, &v);
+    let g: Vec<f64> = b_sum.iter().zip(tv.iter()).map(|(a, b)| a - b).collect();
+    let g_hat = cho_solve_vec(&sup.l_s, &g);
+    let sinv_t = cho_solve_mat_ctx(lctx, &sup.l_s, &t_sum); // Σ_SS⁻¹ T
+    let t_sinv = sinv_t.transpose(); // T Σ_SS⁻¹ (T, Σ_SS symmetric)
+    // M = Σ_SS⁻¹ T A⁻¹ = (A⁻¹ T Σ_SS⁻¹)ᵀ
+    let m_mat = cho_solve_mat_ctx(lctx, &l_a, &t_sinv).transpose();
+    let n_mat = gemm(lctx, &m_mat, &t_sinv); // N = Σ⁻¹TA⁻¹TΣ⁻¹ (symmetric)
+
+    // master-only gradient: ½·dot(N + ĝĝᵀ, ∂Σ_SS/∂θ_p) per hyper
+    let mut coef = n_mat;
+    for i in 0..s {
+        for j in 0..s {
+            coef[(i, j)] += g_hat[i] * g_hat[j];
+        }
+    }
+    let mut grad_master =
+        hyp.grad_dots(&coef, &sup.k0_ss, &sup.xs, &sup.xs, true);
+    for gp in grad_master.iter_mut() {
+        *gp *= 0.5;
+    }
+    MasterState {
+        value,
+        bcast: GradBroadcast { l_a, v, m_mat, g_hat },
+        grad_master,
+    }
+}
+
+/// Round 2 on machine m: the machine's full gradient contribution, one
+/// scalar per log-hyperparameter. All inputs are either machine-local
+/// ([`LocalState`], the shared support) or the O(|S|²) broadcast.
+pub fn local_grad(
+    hyp: &SeArd,
+    state: &LocalState,
+    sup: &TrainSupport,
+    bc: &GradBroadcast,
+) -> Vec<f64> {
+    local_grad_ctx(&LinalgCtx::serial(), hyp, state, sup, bc)
+}
+
+/// [`local_grad`] with explicit linalg execution context.
+pub fn local_grad_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    state: &LocalState,
+    sup: &TrainSupport,
+    bc: &GradBroadcast,
+) -> Vec<f64> {
+    let b_rows = state.xm.rows;
+    let s = sup.size();
+    let p = hyp.dim() + 2;
+    // α_m = Λ_m⁻¹ y_m − W_m v  (the machine's slice of C⁻¹y)
+    let wv = matvec(&state.w, &bc.v);
+    let alpha: Vec<f64> = state
+        .lam_inv_y
+        .iter()
+        .zip(wv.iter())
+        .map(|(a, b)| a - b)
+        .collect();
+    // c_m = Σ_SS⁻¹ K_Sm α_m
+    let ksa = matvec_t(&state.k_ms, &alpha);
+    let c = cho_solve_vec(&sup.l_s, &ksa);
+    // R_m = W_m A⁻¹ W_mᵀ via the half-solve (symmetric PSD)
+    let x1 = solve_lower_mat_ctx(lctx, &bc.l_a, &state.w.transpose()); // (S,B)
+    let r_m = gemm_tn(lctx, &x1, &x1); // (B, B)
+    // Y_m = Σ_SS⁻¹ K_Sm — finish the solve whose forward half (w0) round
+    // 1 already did; bitwise-identical to a fresh cho_solve (which is
+    // exactly this two-solve composition).
+    let y_mat = solve_upper_t_mat_ctx(lctx, &sup.l_s, &state.w0);
+    let z1 = gemm_nt(lctx, &state.w, &bc.m_mat); // W Mᵀ (B, S)
+    let z2 = gemm_nt(lctx, &r_m, &y_mat); // R Yᵀ (B, S)
+    let tmp = gemm(lctx, &y_mat, &r_m); // (S, B)
+    let v_m = gemm_nt(lctx, &tmp, &y_mat); // Y R Yᵀ (S, S)
+
+    // Coefficient matrices: grad contribution =
+    //   ½·[dot(E, ∂Σ_mm) + dot(F, ∂K_mS) + dot(H, ∂Σ_SS)]
+    let mut e = state.lam_inv.clone(); // E = Λ⁻¹ − R − ααᵀ
+    e.sub_assign(&r_m);
+    for i in 0..b_rows {
+        for j in 0..b_rows {
+            e[(i, j)] -= alpha[i] * alpha[j];
+        }
+    }
+    let mut f = Mat::zeros(b_rows, s); // F = 2(−Z1 + Z2 − αĝᵀ + αcᵀ)
+    for i in 0..b_rows {
+        for j in 0..s {
+            f[(i, j)] = 2.0
+                * (z2[(i, j)] - z1[(i, j)]
+                    + alpha[i] * (c[j] - bc.g_hat[j]));
+        }
+    }
+    let mut h = v_m; // H = −V − ccᵀ
+    h.scale(-1.0);
+    for i in 0..s {
+        for j in 0..s {
+            h[(i, j)] -= c[i] * c[j];
+        }
+    }
+
+    let ge = hyp.grad_dots(&e, &state.k0_mm, &state.xm, &state.xm, true);
+    let gf = hyp.grad_dots(&f, &state.k_ms, &state.xm, &sup.xs, false);
+    let gh = hyp.grad_dots(&h, &sup.k0_ss, &sup.xs, &sup.xs, true);
+    (0..p).map(|k| 0.5 * (ge[k] + gf[k] + gh[k])).collect()
+}
+
+/// Centralized (single-machine) PITC NLML + gradient: the same block
+/// math as the distributed path, executed serially in machine order.
+/// `y` must be centered by the caller. This is the reference
+/// `train/dist.rs` is asserted equal to (≤1e-10) — the training
+/// analogue of Theorem 1.
+pub fn pitc_nlml_and_grad(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    d_blocks: &[Vec<usize>],
+) -> (f64, Vec<f64>) {
+    pitc_nlml_and_grad_ctx(&LinalgCtx::serial(), hyp, xd, y, xs, d_blocks)
+}
+
+/// [`pitc_nlml_and_grad`] with explicit linalg execution context.
+pub fn pitc_nlml_and_grad_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    d_blocks: &[Vec<usize>],
+) -> (f64, Vec<f64>) {
+    assert_eq!(xd.rows, y.len(), "train: x/y length");
+    assert!(!d_blocks.is_empty(), "train: no blocks");
+    let sup = TrainSupport::new_ctx(lctx, hyp, xs);
+    let mut stats = Vec::with_capacity(d_blocks.len());
+    let mut states = Vec::with_capacity(d_blocks.len());
+    for blk in d_blocks {
+        let xm = xd.select_rows(blk);
+        let ym: Vec<f64> = blk.iter().map(|&i| y[i]).collect();
+        let (st, state) = local_stats_ctx(lctx, hyp, &xm, &ym, &sup);
+        stats.push(st);
+        states.push(state);
+    }
+    let refs: Vec<&LocalStats> = stats.iter().collect();
+    let master = master_assemble_ctx(lctx, hyp, &sup, &refs, xd.rows);
+    let mut grad = master.grad_master.clone();
+    for state in &states {
+        let gm = local_grad_ctx(lctx, hyp, state, &sup, &master.bcast);
+        for (acc, v) in grad.iter_mut().zip(gm.iter()) {
+            *acc += v;
+        }
+    }
+    (master.value, grad)
+}
+
+/// Dense O(n³) oracle: builds the full PITC covariance C and evaluates
+/// the NLML directly. Test-only ground truth (value; gradients are
+/// checked against finite differences of this).
+pub fn pitc_nlml_dense_oracle(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    d_blocks: &[Vec<usize>],
+) -> f64 {
+    use crate::linalg::{cho_solve_mat, cholesky, matmul};
+    let n = xd.rows;
+    let sj = hyp.cov_same(xs, true);
+    let l_s = cholesky(&sj).expect("oracle: Σ_SS not SPD");
+    let k_ds = hyp.cov_cross(xd, xs);
+    let q = matmul(&k_ds, &cho_solve_mat(&l_s, &k_ds.transpose()));
+    let sigma = hyp.cov_same(xd, true);
+    let mut c = q;
+    for blk in d_blocks {
+        for &i in blk {
+            for &j in blk {
+                c[(i, j)] = sigma[(i, j)];
+            }
+        }
+    }
+    let l_c = cholesky(&c).expect("oracle: C not SPD");
+    let alpha = cho_solve_vec(&l_c, y);
+    0.5 * dot(y, &alpha)
+        + 0.5 * logdet_from_chol(&l_c)
+        + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_partition;
+    use crate::testkit::prop::{prop_check, Gen};
+    use crate::testkit::assert_close;
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.4, 0.4),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// Woodbury block value == dense-C oracle.
+    #[test]
+    fn value_matches_dense_oracle() {
+        prop_check("train-value-oracle", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let per = g.usize_in(3, 6);
+            let n = m * per;
+            let s = g.usize_in(3, 6);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let mut y = g.normal_vec(n);
+            let mean = y.iter().sum::<f64>() / n as f64;
+            for v in y.iter_mut() {
+                *v -= mean;
+            }
+            let blocks = random_partition(n, m, g.rng());
+            let (value, _) = pitc_nlml_and_grad(&hyp, &xd, &y, &xs, &blocks);
+            let want = pitc_nlml_dense_oracle(&hyp, &xd, &y, &xs, &blocks);
+            assert_close(value, want, 1e-9, 1e-9);
+        });
+    }
+
+    /// Analytic gradient == central finite differences of the value.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        prop_check("train-grad-fd", 4, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 3);
+            let per = g.usize_in(3, 5);
+            let n = m * per;
+            let s = g.usize_in(3, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let mut y = g.normal_vec(n);
+            let mean = y.iter().sum::<f64>() / n as f64;
+            for v in y.iter_mut() {
+                *v -= mean;
+            }
+            let blocks = random_partition(n, m, g.rng());
+            let (_, grad) = pitc_nlml_and_grad(&hyp, &xd, &y, &xs, &blocks);
+            let theta = hyp.to_vec();
+            let eps = 1e-6;
+            for p in 0..theta.len() {
+                let mut tp = theta.clone();
+                tp[p] += eps;
+                let mut tm = theta.clone();
+                tm[p] -= eps;
+                let (vp, _) = pitc_nlml_and_grad(&SeArd::from_vec(&tp), &xd,
+                                                 &y, &xs, &blocks);
+                let (vm, _) = pitc_nlml_and_grad(&SeArd::from_vec(&tm), &xd,
+                                                 &y, &xs, &blocks);
+                let fd = (vp - vm) / (2.0 * eps);
+                assert_close(grad[p], fd, 1e-4, 1e-6);
+            }
+        });
+    }
+
+    /// M = 1: C = Σ_DD, so the PITC NLML is the exact (jittered) GP NLML
+    /// — it must match `gp::likelihood::nlml_and_grad` on value, and on
+    /// gradient up to the (≈1e-8-relative) jitter-derivative term that
+    /// the exact path deliberately ignores.
+    #[test]
+    fn single_block_equals_exact_gp() {
+        let mut rng = crate::util::Pcg64::seed(21);
+        let (n, d, s) = (14, 2, 5);
+        let hyp = SeArd {
+            log_ls: vec![0.2, -0.1],
+            log_sf2: 0.3,
+            log_sn2: -1.8,
+        };
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let mut y = rng.normals(n);
+        let mean = y.iter().sum::<f64>() / n as f64;
+        for v in y.iter_mut() {
+            *v -= mean;
+        }
+        let blocks = vec![(0..n).collect::<Vec<usize>>()];
+        let (value, grad) = pitc_nlml_and_grad(&hyp, &xd, &y, &xs, &blocks);
+        let (want_v, want_g) =
+            crate::gp::likelihood::nlml_and_grad(&hyp, &xd, &y);
+        assert_close(value, want_v, 1e-9, 1e-9);
+        for (a, b) in grad.iter().zip(want_g.iter()) {
+            assert_close(*a, *b, 1e-5, 1e-5);
+        }
+    }
+
+    /// Pooled execution is exactly equal to serial (engine bitwise
+    /// guarantee propagated through the training math).
+    #[test]
+    fn pooled_equals_serial() {
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        let mut rng = crate::util::Pcg64::seed(33);
+        let (n, d, s, m) = (24, 2, 5, 4);
+        let hyp = SeArd::isotropic(d, 0.9, 1.1, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let y = rng.normals(n);
+        let blocks = random_partition(n, m, &mut rng);
+        let serial = pitc_nlml_and_grad(&hyp, &xd, &y, &xs, &blocks);
+        let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+        let pooled =
+            pitc_nlml_and_grad_ctx(&ctx, &hyp, &xd, &y, &xs, &blocks);
+        assert_eq!(serial.0.to_bits(), pooled.0.to_bits(), "value drifted");
+        assert_eq!(serial.1, pooled.1, "gradient drifted");
+    }
+
+    /// Message sizes are the paper-style O(|S|²) quantities.
+    #[test]
+    fn message_sizes() {
+        let mut rng = crate::util::Pcg64::seed(5);
+        let (n, d, s) = (8, 2, 4);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let y = rng.normals(n);
+        let sup = TrainSupport::new(&hyp, &xs);
+        let (st, state) = local_stats(&hyp, &xd, &y, &sup);
+        assert_eq!(st.message_f64s(), s * s + s + 2);
+        let master = master_assemble(&hyp, &sup, &[&st], n);
+        assert_eq!(master.bcast.message_f64s(), 2 * s * s + 2 * s);
+        let grad = local_grad(&hyp, &state, &sup, &master.bcast);
+        assert_eq!(grad.len(), d + 2);
+    }
+}
