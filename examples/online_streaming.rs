@@ -59,7 +59,7 @@ fn main() {
     let first = ds.select(&stream_idx[..m * per_block]);
     let xs = support_matrix(&hyp, &first.x, 48);
 
-    let mut online = OnlineGp::new(&hyp, &xs, &NativeBackend,
+    let mut online = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend),
                                    ClusterSpec::new(m));
     let u_blocks = random_partition(n_test, m, &mut rng);
 

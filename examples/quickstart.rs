@@ -1,20 +1,18 @@
 //! Quickstart: fit the paper's parallel GPs on a small 1-D problem and
-//! compare them with the exact FGP baseline.
+//! compare them with the exact FGP baseline — all through the unified
+//! `api` facade.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Walks the whole public API surface in ~40 lines of user code:
-//! data → partition → support set → protocol run → metrics.
+//! data → builder (partition + support owned by it) → predict → metrics.
 
+use pgpr::api::{Gp, Method, PredictSpec};
 use pgpr::bench_support::table::{fmt3, Table};
 use pgpr::data::partition::cluster_partition;
-use pgpr::gp::support::support_matrix;
-use pgpr::gp::FullGp;
 use pgpr::kernel::SeArd;
 use pgpr::linalg::Mat;
 use pgpr::metrics::{mnlp, rmse};
-use pgpr::parallel::{picf, ppic, ppitc, ClusterSpec};
-use pgpr::runtime::NativeBackend;
 use pgpr::util::Pcg64;
 
 fn main() {
@@ -34,42 +32,39 @@ fn main() {
     // --- model setup ---------------------------------------------------
     let hyp = SeArd::isotropic(1, 0.8, 1.0, 0.01);
     let m = 8; // simulated machines
-    let xs = support_matrix(&hyp, &xd, 24); // greedy entropy selection
+    // the paper's clustering scheme co-locates correlated train/test rows
     let part = cluster_partition(&xd, &xu, m, &mut rng);
-    // ClusterSpec::with_threads(m, n) would run the 8 machines' work on
-    // n real host threads — identical predictions, lower wall time.
-    let spec = ClusterSpec::new(m);
-    let backend = NativeBackend;
 
-    // --- run every method ----------------------------------------------
+    // One builder, every method. `.threads(t)` would run the 8 machines'
+    // work on t real host threads — identical predictions, lower wall.
+    let base = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(24) // greedy entropy selection, owned by the builder
+        .partition(part.d_blocks)
+        .rank(24);
+    let ps = PredictSpec::new(xu).with_blocks(part.u_blocks);
+
+    // --- run every method through the same door ------------------------
     let mut table = Table::new(
         "quickstart: 1-D regression, |D|=400, M=8, |S|=24, R=24",
         &["method", "RMSE", "MNLP", "sim time"],
     );
-
-    let fgp = FullGp::fit(&hyp, &xd, &y);
-    let p = fgp.predict(&xu);
-    table.row(vec!["FGP (exact)".into(), fmt3(rmse(&yu, &p.mean)),
-                   fmt3(mnlp(&yu, &p.mean, &p.var)), "-".into()]);
-
-    let out = ppitc::run(&hyp, &xd, &y, &xs, &xu, &part.d_blocks,
-                         &part.u_blocks, &backend, &spec);
-    table.row(vec!["pPITC".into(), fmt3(rmse(&yu, &out.prediction.mean)),
-                   fmt3(mnlp(&yu, &out.prediction.mean, &out.prediction.var)),
-                   fmt3(out.metrics.makespan)]);
-
-    let out = ppic::run_with_partition(&hyp, &xd, &y, &xs, &xu,
-                                       &part.d_blocks, &part.u_blocks,
-                                       &backend, &spec);
-    table.row(vec!["pPIC".into(), fmt3(rmse(&yu, &out.prediction.mean)),
-                   fmt3(mnlp(&yu, &out.prediction.mean, &out.prediction.var)),
-                   fmt3(out.metrics.makespan)]);
-
-    let out = picf::run(&hyp, &xd, &y, &xu, &part.d_blocks, 24, &backend,
-                        &spec);
-    table.row(vec!["pICF".into(), fmt3(rmse(&yu, &out.prediction.mean)),
-                   fmt3(mnlp(&yu, &out.prediction.mean, &out.prediction.var)),
-                   fmt3(out.metrics.makespan)]);
+    for method in [Method::Fgp, Method::PPitc, Method::PPic, Method::PIcf] {
+        let gp = base.clone().method(method).fit().expect("fit");
+        let out = gp.predict_full(&ps).expect("predict");
+        let p = out.prediction;
+        table.row(vec![
+            if method == Method::Fgp { "FGP (exact)".into() }
+            else { method.name().into() },
+            fmt3(rmse(&yu, &p.mean)),
+            fmt3(mnlp(&yu, &p.mean, &p.var)),
+            out.metrics
+                .map(|ms| fmt3(ms.makespan))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
 
     println!("{}", table.render());
     println!("(pPIC should sit closest to FGP — it adds each machine's \

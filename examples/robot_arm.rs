@@ -32,7 +32,7 @@ fn main() {
         threads: 0,
     };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                              &NativeBackend);
+                              std::sync::Arc::new(NativeBackend));
 
     let mut t = Table::new(
         &format!("robot arm: M={m}, |S|={s}, R={}", 2 * s),

@@ -14,17 +14,18 @@
 //! MNLP against the exact FGP baseline. Recorded in EXPERIMENTS.md
 //! §End-to-end.
 
+use std::sync::Arc;
+
+use pgpr::api::{Gp, Method, PredictSpec};
 use pgpr::bench_support::table::{fmt3, Table};
 use pgpr::data::aimpeak::{self, AimpeakConfig};
 use pgpr::data::partition::cluster_partition;
 use pgpr::gp::likelihood::{learn_hyperparameters, MleConfig};
 use pgpr::gp::support::support_matrix;
-use pgpr::gp::FullGp;
 use pgpr::kernel::SeArd;
 use pgpr::metrics::{mnlp, rmse};
-use pgpr::parallel::{ppic, ClusterSpec};
 use pgpr::runtime::{ArtifactManifest, Backend, NativeBackend, PjrtBackend};
-use pgpr::server::{DynamicBatcher, PredictRequest, ServedModel};
+use pgpr::server::{DynamicBatcher, PredictRequest};
 use pgpr::util::{Pcg64, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
@@ -78,20 +79,35 @@ fn main() -> anyhow::Result<()> {
 
     // ---- PJRT backend (the three-layer hot path)
     println!("== loading AOT artifacts (PJRT CPU) ==");
-    let pjrt = PjrtBackend::load(&manifest, "aimpeak")?;
+    let pjrt: Arc<PjrtBackend> =
+        Arc::new(PjrtBackend::load(&manifest, "aimpeak")?);
+
+    // ---- one facade recipe for everything downstream
+    let base = Gp::builder()
+        .hyp(hyp.clone())
+        .data(train.x.clone(), train.y.clone())
+        .machines(m)
+        .support(xs.clone())
+        .partition(part.d_blocks.clone())
+        .backend(pjrt.clone());
 
     // ---- pPIC protocol over the simulated cluster, PJRT on the blocks
     println!("== running pPIC over the simulated {m}-node cluster ==");
-    let out = ppic::run_with_partition(&hyp, &train.x, &train.y, &xs,
-                                       &test.x, &part.d_blocks,
-                                       &part.u_blocks, &pjrt,
-                                       &ClusterSpec::new(m));
+    let ppic_gp = base.clone().method(Method::PPic).fit()?;
+    let out = ppic_gp.predict_full(
+        &PredictSpec::new(test.x.clone()).with_blocks(part.u_blocks.clone()))?;
+    let metrics = out.metrics.expect("distributed run reports metrics");
     let ppic_rmse = rmse(&test.y, &out.prediction.mean);
     let ppic_mnlp = mnlp(&test.y, &out.prediction.mean, &out.prediction.var);
 
-    // ---- exact FGP baseline (the accuracy anchor)
+    // ---- exact FGP baseline (the accuracy anchor), native linalg
     let (fgp_pred, fgp_secs) = Stopwatch::time(|| {
-        FullGp::fit(&hyp, &train.x, &train.y).predict(&test.x)
+        base.clone()
+            .method(Method::Fgp)
+            .backend(Arc::new(NativeBackend))
+            .fit()
+            .and_then(|gp| gp.predict(&test.x))
+            .expect("FGP baseline")
     });
 
     let mut t = Table::new(
@@ -100,7 +116,7 @@ fn main() -> anyhow::Result<()> {
         &["method", "RMSE (km/h)", "MNLP", "time_s"],
     );
     t.row(vec!["pPIC (pjrt)".into(), fmt3(ppic_rmse), fmt3(ppic_mnlp),
-               fmt3(out.metrics.makespan)]);
+               fmt3(metrics.makespan)]);
     t.row(vec!["FGP (exact)".into(), fmt3(rmse(&test.y, &fgp_pred.mean)),
                fmt3(mnlp(&test.y, &fgp_pred.mean, &fgp_pred.var)),
                fmt3(fgp_secs)]);
@@ -108,8 +124,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- real-time serving: open-loop stream through router + batcher
     println!("== serving 600 speed queries (router + dynamic batcher) ==");
-    let model = ServedModel::fit(&hyp, &train.x, &train.y, &xs,
-                                 &part.d_blocks, &pjrt);
+    let model = base.serve()?;
     let n_req = n_test;
     let requests: Vec<PredictRequest> = (0..n_req)
         .map(|i| PredictRequest {
@@ -118,7 +133,7 @@ fn main() -> anyhow::Result<()> {
             arrival_s: i as f64 * 5e-4, // 2000 req/s offered
         })
         .collect();
-    for (name, backend) in [("pjrt", &pjrt as &dyn Backend),
+    for (name, backend) in [("pjrt", pjrt.as_ref() as &dyn Backend),
                             ("native", &NativeBackend as &dyn Backend)] {
         let mut batcher = DynamicBatcher::new(m, profile.d,
                                               profile.pred_block, 5e-3);

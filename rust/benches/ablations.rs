@@ -119,7 +119,7 @@ fn online() {
     let m = 4;
     let per = 64; // per machine per batch
     let xs = support_matrix(&w.hyp, &w.train.x, 48);
-    let mut og = OnlineGp::new(&w.hyp, &xs, &NativeBackend,
+    let mut og = OnlineGp::new(&w.hyp, &xs, std::sync::Arc::new(NativeBackend),
                                ClusterSpec::new(m));
     let mut rng = Pcg64::seed(9);
     let u_blocks = random_partition(w.test.len(), m, &mut rng);

@@ -1,0 +1,300 @@
+//! [`GpBuilder`] — the one construction path for every model, serving
+//! state, and training run behind the facade.
+
+use std::sync::Arc;
+
+use super::error::{ApiError, Result};
+use super::method::Method;
+use super::models::OnlineSession;
+use super::spec::{FitSpec, PartitionSpec, SupportSpec};
+use super::{Gp, Regressor as _};
+use crate::cluster::ParallelExecutor;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::parallel::ClusterSpec;
+use crate::runtime::{Backend, NativeBackend};
+use crate::server::ServedModel;
+use crate::train::{train_pitc, AdamConfig, TrainResult};
+
+/// Fluent recipe for a GP model: pick a [`Method`] at runtime, hand over
+/// data, and let the builder own partitioning, support selection and
+/// executor plumbing (everything the old per-model 6-positional-arg
+/// `fit` calls made each call site repeat).
+///
+/// ```
+/// use pgpr::api::{Gp, Method};
+/// use pgpr::kernel::SeArd;
+/// use pgpr::linalg::Mat;
+///
+/// let hyp = SeArd::isotropic(1, 0.8, 1.0, 0.05);
+/// let xd = Mat::from_vec(8, 1, (0..8).map(|i| i as f64 * 0.4).collect());
+/// let y: Vec<f64> = (0..8).map(|i| (i as f64 * 0.4).sin()).collect();
+///
+/// // pPIC on 2 simulated machines with an entropy-selected support set
+/// let gp = Gp::builder()
+///     .method(Method::PPic)
+///     .hyp(hyp)
+///     .data(xd, y)
+///     .machines(2)
+///     .support_size(4)
+///     .fit()
+///     .unwrap();
+/// assert_eq!(gp.method(), Method::PPic);
+/// assert_eq!(gp.machines(), 2);
+///
+/// let xu = Mat::from_vec(2, 1, vec![0.5, 1.5]);
+/// let pred = gp.predict(&xu).unwrap();
+/// assert_eq!(pred.len(), 2);
+/// assert!(pred.var.iter().all(|&v| v > 0.0));
+/// ```
+///
+/// Invalid specs come back as typed [`ApiError`]s instead of panics:
+///
+/// ```
+/// use pgpr::api::{ApiError, Gp, Method};
+/// use pgpr::kernel::SeArd;
+/// use pgpr::linalg::Mat;
+///
+/// let err = Gp::builder()
+///     .method(Method::Pitc)
+///     .hyp(SeArd::isotropic(1, 1.0, 1.0, 0.1))
+///     .data(Mat::zeros(0, 1), vec![])
+///     .fit()
+///     .err()
+///     .unwrap();
+/// assert_eq!(err, ApiError::EmptyData);
+/// ```
+///
+/// Builders are `Clone` (data buffers are copied, the backend and any
+/// shared executor by `Arc`), so one base recipe can fan out over
+/// methods: `base.clone().method(Method::PIcf).fit()`.
+#[derive(Clone)]
+pub struct GpBuilder {
+    method: Method,
+    hyp: Option<SeArd>,
+    xd: Option<Mat>,
+    y: Option<Vec<f64>>,
+    machines: Option<usize>,
+    support: SupportSpec,
+    partition: PartitionSpec,
+    rank: Option<usize>,
+    threads: usize,
+    seed: u64,
+    backend: Arc<dyn Backend>,
+    exec: Option<ParallelExecutor>,
+}
+
+impl Default for GpBuilder {
+    fn default() -> GpBuilder {
+        GpBuilder {
+            method: Method::Fgp,
+            hyp: None,
+            xd: None,
+            y: None,
+            machines: None,
+            support: SupportSpec::Unset,
+            partition: PartitionSpec::Random,
+            rank: None,
+            threads: 0,
+            seed: 1,
+            backend: Arc::new(NativeBackend),
+            exec: None,
+        }
+    }
+}
+
+impl GpBuilder {
+    /// Fresh builder with the defaults: exact FGP, one machine, serial
+    /// execution, native backend, seed 1.
+    #[must_use]
+    pub fn new() -> GpBuilder {
+        GpBuilder::default()
+    }
+
+    /// Which regression method to fit (default [`Method::Fgp`]).
+    #[must_use]
+    pub fn method(mut self, method: Method) -> GpBuilder {
+        self.method = method;
+        self
+    }
+
+    /// Kernel hyperparameters (required).
+    #[must_use]
+    pub fn hyp(mut self, hyp: SeArd) -> GpBuilder {
+        self.hyp = Some(hyp);
+        self
+    }
+
+    /// Training inputs and outputs (required).
+    #[must_use]
+    pub fn data(mut self, xd: Mat, y: Vec<f64>) -> GpBuilder {
+        self.xd = Some(xd);
+        self.y = Some(y);
+        self
+    }
+
+    /// Number of simulated machines M. Defaults to the block count of
+    /// an explicit [`GpBuilder::partition`] (so a partition alone fully
+    /// determines M), else 1.
+    #[must_use]
+    pub fn machines(mut self, machines: usize) -> GpBuilder {
+        self.machines = Some(machines);
+        self
+    }
+
+    /// Use these support inputs verbatim.
+    #[must_use]
+    pub fn support(mut self, xs: Mat) -> GpBuilder {
+        self.support = SupportSpec::Points(xs);
+        self
+    }
+
+    /// Select `size` support inputs by greedy differential-entropy
+    /// scoring over a seeded candidate pool (the Section-6 recipe).
+    #[must_use]
+    pub fn support_size(mut self, size: usize) -> GpBuilder {
+        self.support = SupportSpec::Entropy { size };
+        self
+    }
+
+    /// Use this Definition-1 partition verbatim (default: seeded random
+    /// even partition).
+    #[must_use]
+    pub fn partition(mut self, d_blocks: Vec<Vec<usize>>) -> GpBuilder {
+        self.partition = PartitionSpec::Blocks(d_blocks);
+        self
+    }
+
+    /// ICF rank R (required by the ICF family).
+    #[must_use]
+    pub fn rank(mut self, rank: usize) -> GpBuilder {
+        self.rank = Some(rank);
+        self
+    }
+
+    /// Host worker threads executing node work and master-side linalg
+    /// (0/1 = serial; predictions are executor-independent).
+    #[must_use]
+    pub fn threads(mut self, threads: usize) -> GpBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Seed for every stochastic choice (candidate pool, random
+    /// partition).
+    #[must_use]
+    pub fn seed(mut self, seed: u64) -> GpBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Block-math backend (default [`NativeBackend`]; pass the PJRT
+    /// backend to serve from AOT artifacts).
+    #[must_use]
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> GpBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Share a pre-built executor (thread pool) across several fits —
+    /// overrides [`GpBuilder::threads`]. The sweep harness uses this so
+    /// all methods of one experiment reuse one pool.
+    #[must_use]
+    pub fn executor(mut self, exec: ParallelExecutor) -> GpBuilder {
+        self.exec = Some(exec);
+        self
+    }
+
+    // ------------------------------------------------------- getters
+
+    /// The method this builder will fit.
+    #[must_use]
+    pub fn method_choice(&self) -> Method {
+        self.method
+    }
+
+    /// The machine count this builder will use (explicit, or inferred
+    /// from an explicit partition).
+    #[must_use]
+    pub fn machine_count(&self) -> usize {
+        match self.machines {
+            Some(m) => m,
+            None => match &self.partition {
+                PartitionSpec::Blocks(b) => b.len(),
+                PartitionSpec::Random => 1,
+            },
+        }
+    }
+
+    /// The host thread count this builder will use.
+    #[must_use]
+    pub fn thread_count(&self) -> usize {
+        self.threads
+    }
+
+    // ----------------------------------------------------- terminals
+
+    /// Assemble the raw [`FitSpec`] (unresolved; fit paths resolve it).
+    pub fn spec(&self) -> Result<FitSpec> {
+        let hyp = self.hyp.clone().ok_or(ApiError::MissingField("hyp"))?;
+        let (xd, y) = match (&self.xd, &self.y) {
+            (Some(xd), Some(y)) => (xd.clone(), y.clone()),
+            _ => return Err(ApiError::MissingField("data")),
+        };
+        Ok(FitSpec {
+            method: self.method,
+            hyp,
+            xd,
+            y,
+            machines: self.machine_count(),
+            support: self.support.clone(),
+            partition: self.partition.clone(),
+            rank: self.rank,
+            threads: self.threads,
+            seed: self.seed,
+            backend: Arc::clone(&self.backend),
+            exec: self.exec.clone(),
+        })
+    }
+
+    /// Validate the spec and fit the chosen method.
+    pub fn fit(&self) -> Result<Gp> {
+        Gp::fit(&self.spec()?)
+    }
+
+    /// Fit an unboxed streaming session ([`Method::Online`] implied) so
+    /// the caller keeps access to [`OnlineSession::absorb`].
+    pub fn online(&self) -> Result<OnlineSession> {
+        let mut spec = self.spec()?;
+        spec.method = Method::Online;
+        OnlineSession::fit(&spec)
+    }
+
+    /// Fit pPIC summaries packaged for request serving (router +
+    /// batcher-ready [`ServedModel`]). Rejects empty data — the
+    /// zero-mean-model footgun the untyped path allowed.
+    pub fn serve(&self) -> Result<ServedModel> {
+        let mut spec = self.spec()?;
+        spec.method = Method::PPic;
+        let spec = spec.resolved()?;
+        ServedModel::fit(&spec.hyp, &spec.xd, &spec.y, spec.support_points(),
+                         spec.blocks(), spec.backend.as_ref())
+    }
+
+    /// Distributed PITC marginal-likelihood training
+    /// ([`crate::train::dist::train_pitc`]) on this spec's data, support
+    /// set and partition. Feed the result back through
+    /// [`Gp::refit`] or a fresh build.
+    pub fn train(&self, cfg: &AdamConfig) -> Result<TrainResult> {
+        let mut spec = self.spec()?;
+        spec.method = Method::Pitc;
+        let spec = spec.resolved()?;
+        let cluster = ClusterSpec {
+            machines: spec.machines,
+            net: crate::cluster::NetworkModel::gigabit(),
+            exec: spec.executor(),
+        };
+        Ok(train_pitc(&spec.hyp, &spec.xd, &spec.y, spec.support_points(),
+                      spec.blocks(), &cluster, cfg))
+    }
+}

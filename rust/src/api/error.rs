@@ -1,0 +1,113 @@
+//! Typed error layer of the facade: shape mismatches, empty data or
+//! partitions, and non-SPD covariances surface as [`ApiError`] values
+//! instead of panics deep inside [`crate::linalg`].
+
+use crate::linalg::cholesky::NotSpd;
+use std::fmt;
+
+/// `Result` specialized to the facade's error type.
+pub type Result<T> = std::result::Result<T, ApiError>;
+
+/// Everything the facade can reject.
+///
+/// Validation happens eagerly: [`crate::api::GpBuilder::fit`] checks
+/// shapes, partitions and spec completeness *before* any O(n³) work, and
+/// the FGP/PITC/PIC fit paths report Cholesky breakdowns as
+/// [`ApiError::NotSpd`] rather than panicking. (ICF's pivoted
+/// factorization cannot fail SPD at fit; its R×R solves at predict
+/// time, and the distributed protocols' in-cluster factorizations,
+/// keep the pre-facade panic behavior.)
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// No training data (`y` empty) — previously a silently-served
+    /// zero-mean model.
+    EmptyData,
+    /// Two shapes that must agree do not.
+    ShapeMismatch {
+        /// What was being checked (e.g. `"y vs xd rows"`).
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// A machine's Definition-1 block is empty.
+    EmptyPartition {
+        /// Machine index with no data.
+        machine: usize,
+    },
+    /// A partition is malformed (out-of-range, duplicate, or missing
+    /// row indices).
+    InvalidPartition {
+        reason: String,
+    },
+    /// A covariance matrix was not symmetric positive definite.
+    NotSpd {
+        /// Which matrix failed (e.g. `"Σ_DD"`).
+        what: &'static str,
+        /// Failing pivot index and value from the Cholesky.
+        pivot: usize,
+        value: f64,
+    },
+    /// A required spec field was never set.
+    MissingField(&'static str),
+    /// The spec is self-inconsistent (bad sizes, conflicting options).
+    InvalidSpec(String),
+    /// The operation is not defined for this method.
+    Unsupported(&'static str),
+}
+
+impl ApiError {
+    /// Wrap a linalg [`NotSpd`] with the name of the failing matrix.
+    pub fn not_spd(what: &'static str, e: &NotSpd) -> ApiError {
+        ApiError::NotSpd { what, pivot: e.pivot, value: e.value }
+    }
+
+    /// Shorthand for [`ApiError::InvalidSpec`].
+    pub fn invalid(reason: impl Into<String>) -> ApiError {
+        ApiError::InvalidSpec(reason.into())
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::EmptyData => write!(f, "empty training data"),
+            ApiError::ShapeMismatch { what, expected, got } => {
+                write!(f, "shape mismatch ({what}): expected {expected}, \
+                           got {got}")
+            }
+            ApiError::EmptyPartition { machine } => {
+                write!(f, "machine {machine} has an empty data block")
+            }
+            ApiError::InvalidPartition { reason } => {
+                write!(f, "invalid partition: {reason}")
+            }
+            ApiError::NotSpd { what, pivot, value } => {
+                write!(f, "{what} not SPD: pivot {pivot} = {value:.3e}")
+            }
+            ApiError::MissingField(name) => {
+                write!(f, "spec field not set: {name}")
+            }
+            ApiError::InvalidSpec(reason) => write!(f, "invalid spec: {reason}"),
+            ApiError::Unsupported(op) => {
+                write!(f, "operation not supported by this method: {op}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = ApiError::ShapeMismatch { what: "y vs xd", expected: 4, got: 3 };
+        assert!(e.to_string().contains("expected 4"));
+        let e = ApiError::not_spd("Σ_DD", &NotSpd { pivot: 2, value: -1.0 });
+        assert!(e.to_string().contains("Σ_DD"));
+        assert!(ApiError::EmptyData.to_string().contains("empty"));
+        assert!(ApiError::MissingField("support").to_string().contains("support"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Runtime method selection: every GP regression method in the crate as
+//! one enum, so the server, CLI, benches and tests pick an algorithm
+//! with a value instead of a type.
+
+/// The regression methods behind the facade: the exact baseline, the
+/// three centralized low-rank approximations (Sections 2–4), their three
+/// distributed reformulations (Theorems 1–3), and the §5.2 online
+/// assimilation mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// pPITC — Section 3, Steps 1–4 over the cluster.
+    PPitc,
+    /// pPIC — Definition 5 over the cluster.
+    PPic,
+    /// pICF-based GP — Section 4, Steps 1–6 over the cluster.
+    PIcf,
+    /// Centralized PITC (eqs. 9–11).
+    Pitc,
+    /// Centralized PIC (eqs. 15–18).
+    Pic,
+    /// Centralized ICF-based GP (eqs. 28–29).
+    Icf,
+    /// Exact full GP (eqs. 1–2) — the accuracy anchor.
+    Fgp,
+    /// Online/incremental pPIC (§5.2): fit absorbs the data as the
+    /// first batch; more batches stream in through
+    /// [`crate::api::OnlineSession::absorb`].
+    Online,
+}
+
+impl Method {
+    /// Display name matching the paper's terminology.
+    #[must_use]
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::PPitc => "pPITC",
+            Method::PPic => "pPIC",
+            Method::PIcf => "pICF",
+            Method::Pitc => "PITC",
+            Method::Pic => "PIC",
+            Method::Icf => "ICF",
+            Method::Fgp => "FGP",
+            Method::Online => "online",
+        }
+    }
+
+    /// Parse a CLI-style method name (case-insensitive).
+    #[must_use]
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "ppitc" => Some(Method::PPitc),
+            "ppic" => Some(Method::PPic),
+            "picf" => Some(Method::PIcf),
+            "pitc" => Some(Method::Pitc),
+            "pic" => Some(Method::Pic),
+            "icf" => Some(Method::Icf),
+            "fgp" => Some(Method::Fgp),
+            "online" => Some(Method::Online),
+            _ => None,
+        }
+    }
+
+    /// The seven batch methods of Section 6 (the experiment default;
+    /// excludes [`Method::Online`], which is a streaming mode).
+    pub const ALL: [Method; 7] = [
+        Method::PPitc, Method::PPic, Method::PIcf,
+        Method::Pitc, Method::Pic, Method::Icf, Method::Fgp,
+    ];
+
+    /// The three distributed protocols.
+    pub const PARALLEL: [Method; 3] =
+        [Method::PPitc, Method::PPic, Method::PIcf];
+
+    /// True for the cluster-backed methods (including online).
+    #[must_use]
+    pub fn is_parallel(self) -> bool {
+        matches!(self,
+                 Method::PPitc | Method::PPic | Method::PIcf | Method::Online)
+    }
+
+    /// True when the method conditions on a support set S.
+    #[must_use]
+    pub fn needs_support(self) -> bool {
+        matches!(self,
+                 Method::Pitc | Method::Pic | Method::PPitc | Method::PPic
+                     | Method::Online)
+    }
+
+    /// True when the method needs an ICF rank R.
+    #[must_use]
+    pub fn needs_rank(self) -> bool {
+        matches!(self, Method::Icf | Method::PIcf)
+    }
+
+    /// True when the method needs a Definition-1 data partition.
+    #[must_use]
+    pub fn needs_partition(self) -> bool {
+        self != Method::Fgp
+    }
+
+    /// A parallel method's centralized counterpart (Theorems 1–3).
+    #[must_use]
+    pub fn centralized_counterpart(self) -> Option<Method> {
+        match self {
+            Method::PPitc => Some(Method::Pitc),
+            Method::PPic | Method::Online => Some(Method::Pic),
+            Method::PIcf => Some(Method::Icf),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m), "{:?}", m);
+        }
+        assert_eq!(Method::parse("online"), Some(Method::Online));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn flags_are_consistent() {
+        for m in Method::PARALLEL {
+            assert!(m.is_parallel());
+            assert!(m.centralized_counterpart().is_some());
+        }
+        assert!(!Method::Fgp.needs_partition());
+        assert!(Method::Icf.needs_rank() && Method::PIcf.needs_rank());
+        assert!(Method::Online.needs_support());
+        assert!(!Method::Fgp.needs_support() && !Method::Icf.needs_support());
+    }
+}

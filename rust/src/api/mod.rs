@@ -1,0 +1,441 @@
+//! # The `pgpr` facade — one door to every GP method
+//!
+//! The paper's Theorems 1–3 say pPITC, pPIC and the pICF-based GP are
+//! *equivalent* to their centralized counterparts; this module makes the
+//! code say it too. Every method — the exact FGP baseline, the three
+//! centralized approximations, the three distributed protocols, and the
+//! §5.2 online mode — is constructed by one [`GpBuilder`] and driven
+//! through one [`Regressor`] trait, with method choice a runtime
+//! [`Method`] value instead of a compile-time type.
+//!
+//! * [`GpBuilder`] owns partitioning, support-set selection, executor
+//!   (thread pool) plumbing and backend wiring.
+//! * [`FitSpec`] / [`PredictSpec`] absorb the per-method quirks that
+//!   used to diverge across call sites: PIC's test partition, ICF's
+//!   rank, the serving path's pad-to-AOT-shape batches.
+//! * [`ApiError`] turns shape mismatches, empty data/partitions and
+//!   non-SPD covariances into typed errors instead of panics deep in
+//!   [`crate::linalg`].
+//!
+//! The pre-facade inherent constructors (`FullGp::fit`,
+//! `PitcGp::fit_ctx`, the `parallel::*::run` free functions, …) remain
+//! public as the low-level layer — the equivalence-test oracles that
+//! pin the facade's numerics — but the server, CLI and sweep harness
+//! all go through here.
+//!
+//! ```
+//! use pgpr::api::{Gp, Method};
+//! use pgpr::kernel::SeArd;
+//! use pgpr::linalg::Mat;
+//!
+//! let hyp = SeArd::isotropic(1, 0.7, 1.0, 0.05);
+//! let xd = Mat::from_vec(12, 1, (0..12).map(|i| i as f64 * 0.3).collect());
+//! let y: Vec<f64> = (0..12).map(|i| (i as f64 * 0.3).cos()).collect();
+//! let xu = Mat::from_vec(3, 1, vec![0.4, 1.9, 3.1]);
+//!
+//! // same code path, any method
+//! for method in [Method::Fgp, Method::Pitc, Method::PPitc] {
+//!     let gp = Gp::builder()
+//!         .method(method)
+//!         .hyp(hyp.clone())
+//!         .data(xd.clone(), y.clone())
+//!         .machines(3)
+//!         .support_size(6)
+//!         .fit()
+//!         .unwrap();
+//!     let pred = gp.predict(&xu).unwrap();
+//!     assert_eq!(pred.len(), 3, "{}", method.name());
+//! }
+//! ```
+
+pub mod builder;
+pub mod error;
+pub mod method;
+pub mod models;
+pub mod spec;
+
+pub use builder::GpBuilder;
+pub use error::{ApiError, Result};
+pub use method::Method;
+pub use models::{FgpModel, IcfModel, OnlineSession, PIcfModel, PPicModel,
+                 PPitcModel, PicModel, PitcModel};
+pub use spec::{FitSpec, PartitionSpec, PredictOutput, PredictSpec,
+               SupportSpec};
+
+use crate::gp::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+
+/// The one interface every GP regression method implements.
+///
+/// Object-safe (minus the `Sized`-bound constructor), so a fitted model
+/// is usable as `Box<dyn Regressor>` — which is exactly what [`Gp`]
+/// holds. Theorems 1–3 guarantee that for a fixed spec, a parallel
+/// method and its centralized counterpart produce identical predictions
+/// through this interface (asserted in `tests/integration_api.rs`).
+pub trait Regressor: Send + Sync {
+    /// Fit this method from a (possibly unresolved) [`FitSpec`].
+    fn fit(spec: &FitSpec) -> Result<Self>
+    where
+        Self: Sized;
+
+    /// Method-specific prediction. Implementations may assume
+    /// [`PredictSpec::pad_to`] is `None` — padding is handled once in
+    /// the provided [`Regressor::predict_full`], which is what callers
+    /// should use.
+    fn predict_unpadded(&self, spec: &PredictSpec) -> Result<PredictOutput>;
+
+    /// Predict with full output (simulated-cluster metrics included for
+    /// the distributed methods). Handles [`PredictSpec::pad_to`] (AOT
+    /// batch shapes) uniformly for every method by repeating the first
+    /// row and truncating the outputs — per-row predictions are
+    /// independent given the fitted summaries, so padding never changes
+    /// the retained rows.
+    fn predict_full(&self, spec: &PredictSpec) -> Result<PredictOutput> {
+        match spec.pad_to {
+            None => self.predict_unpadded(spec),
+            Some(pad) => {
+                if spec.u_blocks.is_some() {
+                    return Err(ApiError::invalid(
+                        "pad_to and u_blocks are mutually exclusive"));
+                }
+                let rows = spec.xu.rows;
+                if rows == 0 {
+                    return Err(ApiError::EmptyData);
+                }
+                if rows > pad {
+                    return Err(ApiError::ShapeMismatch {
+                        what: "xu rows vs pad_to",
+                        expected: pad,
+                        got: rows,
+                    });
+                }
+                let mut data = Vec::with_capacity(pad * spec.xu.cols);
+                for r in 0..rows {
+                    data.extend_from_slice(spec.xu.row(r));
+                }
+                for _ in rows..pad {
+                    data.extend_from_slice(spec.xu.row(0));
+                }
+                let padded = Mat::from_vec(pad, spec.xu.cols, data);
+                let mut out =
+                    self.predict_unpadded(&PredictSpec::new(padded))?;
+                out.prediction.mean.truncate(rows);
+                out.prediction.var.truncate(rows);
+                Ok(out)
+            }
+        }
+    }
+
+    /// Predict means and variances only.
+    fn predict(&self, spec: &PredictSpec) -> Result<Prediction> {
+        Ok(self.predict_full(spec)?.prediction)
+    }
+
+    /// Re-fit under new hyperparameters while keeping the original
+    /// support set, partition and executor (the serving hot-swap path
+    /// for trained hypers).
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>>;
+
+    /// Number of (simulated) machines holding the data.
+    fn machines(&self) -> usize;
+
+    /// Which method this model is.
+    fn method(&self) -> Method;
+}
+
+/// A fitted model of *some* method — the facade's main handle.
+///
+/// Construct with [`Gp::builder`]; see [`GpBuilder`] for the full
+/// recipe surface and examples.
+pub struct Gp {
+    inner: Box<dyn Regressor>,
+}
+
+impl Gp {
+    /// Start a model recipe.
+    #[must_use]
+    pub fn builder() -> GpBuilder {
+        GpBuilder::new()
+    }
+
+    /// Fit the method named by `spec.method`.
+    pub fn fit(spec: &FitSpec) -> Result<Gp> {
+        let inner: Box<dyn Regressor> = match spec.method {
+            Method::Fgp => Box::new(FgpModel::fit(spec)?),
+            Method::Pitc => Box::new(PitcModel::fit(spec)?),
+            Method::Pic => Box::new(PicModel::fit(spec)?),
+            Method::Icf => Box::new(IcfModel::fit(spec)?),
+            Method::PPitc => Box::new(PPitcModel::fit(spec)?),
+            Method::PPic => Box::new(PPicModel::fit(spec)?),
+            Method::PIcf => Box::new(PIcfModel::fit(spec)?),
+            Method::Online => Box::new(OnlineSession::fit(spec)?),
+        };
+        Ok(Gp { inner })
+    }
+
+    /// Predict `xu` with default work distribution.
+    pub fn predict(&self, xu: &Mat) -> Result<Prediction> {
+        self.predict_spec(&PredictSpec::new(xu.clone()))
+    }
+
+    /// Predict with an explicit [`PredictSpec`].
+    pub fn predict_spec(&self, spec: &PredictSpec) -> Result<Prediction> {
+        Ok(self.predict_full(spec)?.prediction)
+    }
+
+    /// Predict with full output — see [`Regressor::predict_full`]
+    /// (padding to AOT shapes included).
+    pub fn predict_full(&self, spec: &PredictSpec) -> Result<PredictOutput> {
+        self.inner.predict_full(spec)
+    }
+
+    /// Re-fit under new hyperparameters (same support set, partition,
+    /// executor) — see [`Regressor::refit`].
+    pub fn refit(&self, hyp: &SeArd) -> Result<Gp> {
+        Ok(Gp { inner: self.inner.refit(hyp)? })
+    }
+
+    /// Number of (simulated) machines holding the data.
+    #[must_use]
+    pub fn machines(&self) -> usize {
+        self.inner.machines()
+    }
+
+    /// Which method this model is.
+    #[must_use]
+    pub fn method(&self) -> Method {
+        self.inner.method()
+    }
+
+    /// Borrow the model through the trait (e.g. to store heterogeneous
+    /// models together).
+    #[must_use]
+    pub fn as_regressor(&self) -> &dyn Regressor {
+        self.inner.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::random_partition;
+    use crate::gp::icf_gp::IcfGp;
+    use crate::gp::pic::PicGp;
+    use crate::gp::pitc::PitcGp;
+    use crate::gp::FullGp;
+    use crate::testkit::assert_all_close;
+    use crate::util::Pcg64;
+
+    fn problem(n: usize, u: usize, d: usize, seed: u64)
+        -> (SeArd, Mat, Vec<f64>, Mat, Mat)
+    {
+        let mut rng = Pcg64::seed(seed);
+        let hyp = SeArd::isotropic(d, 0.9, 1.0, 0.08);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(6, d, rng.normals(6 * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        (hyp, xd, y, xs, xu)
+    }
+
+    /// Facade predictions are the *same numbers* as the pre-facade
+    /// direct calls (the in-crate half of the equivalence oracle; the
+    /// cross-method protocol half lives in `tests/integration_api.rs`).
+    #[test]
+    fn facade_matches_direct_centralized_calls() {
+        let (hyp, xd, y, xs, xu) = problem(24, 9, 2, 5);
+        let mut rng = Pcg64::seed(11);
+        for m in [1, 4, 8] {
+            let d_blocks = random_partition(24, m, &mut rng);
+
+            let fit = |method: Method| {
+                Gp::builder()
+                    .method(method)
+                    .hyp(hyp.clone())
+                    .data(xd.clone(), y.clone())
+                    .machines(m)
+                    .support(xs.clone())
+                    .partition(d_blocks.clone())
+                    .rank(12)
+                    .fit()
+                    .unwrap()
+            };
+
+            let got = fit(Method::Fgp).predict(&xu).unwrap();
+            let want = FullGp::fit(&hyp, &xd, &y).predict(&xu);
+            assert_eq!(got.mean, want.mean, "FGP M={m}");
+            assert_eq!(got.var, want.var, "FGP M={m}");
+
+            let got = fit(Method::Pitc).predict(&xu).unwrap();
+            let want =
+                PitcGp::fit(&hyp, &xd, &y, &xs, &d_blocks).predict(&xu);
+            assert_eq!(got.mean, want.mean, "PITC M={m}");
+            assert_eq!(got.var, want.var, "PITC M={m}");
+
+            let got = fit(Method::Icf).predict(&xu).unwrap();
+            let want =
+                IcfGp::fit(&hyp, &xd, &y, 12, &d_blocks).predict(&xu);
+            assert_eq!(got.mean, want.mean, "ICF M={m}");
+            assert_eq!(got.var, want.var, "ICF M={m}");
+
+            // PIC conditions on the test partition: pin it explicitly
+            let ub = random_partition(8, m, &mut rng);
+            let xu8 = Mat::from_vec(8, 2, xu.data[..16].to_vec());
+            let got = fit(Method::Pic)
+                .predict_spec(&PredictSpec::new(xu8.clone())
+                    .with_blocks(ub.clone()))
+                .unwrap();
+            let want = PicGp::fit(&hyp, &xd, &y, &xs, &d_blocks)
+                .predict(&xu8, &ub);
+            assert_eq!(got.mean, want.mean, "PIC M={m}");
+            assert_eq!(got.var, want.var, "PIC M={m}");
+        }
+    }
+
+    /// Refit through the facade == fresh fit with the new hypers on the
+    /// same pinned spec (the serving hot-swap contract, per method).
+    #[test]
+    fn refit_equals_fresh_fit_on_same_spec() {
+        let (hyp, xd, y, xs, xu) = problem(20, 6, 2, 7);
+        let d_blocks = random_partition(20, 4, &mut Pcg64::seed(2));
+        let b = Gp::builder()
+            .method(Method::PPic)
+            .hyp(hyp.clone())
+            .data(xd.clone(), y.clone())
+            .machines(4)
+            .support(xs.clone())
+            .partition(d_blocks.clone());
+        let gp = b.fit().unwrap();
+        let hyp2 = SeArd::isotropic(2, 1.4, 1.2, 0.03);
+        let refit = gp.refit(&hyp2).unwrap();
+        assert_eq!(refit.method(), Method::PPic);
+        assert_eq!(refit.machines(), 4);
+        let p1 = refit.predict(&xu).unwrap();
+        let fresh = b.hyp(hyp2).fit().unwrap().predict(&xu).unwrap();
+        assert_eq!(p1.mean, fresh.mean);
+        assert_eq!(p1.var, fresh.var);
+        // and the hypers actually took effect
+        let p0 = gp.predict(&xu).unwrap();
+        assert!(p0.mean != p1.mean);
+    }
+
+    /// The typed error layer fires before any heavy math.
+    #[test]
+    fn validation_errors() {
+        let (hyp, xd, y, xs, _xu) = problem(12, 4, 2, 9);
+        let base = || {
+            Gp::builder()
+                .hyp(hyp.clone())
+                .data(xd.clone(), y.clone())
+        };
+
+        // missing pieces
+        assert_eq!(Gp::builder().hyp(hyp.clone()).fit().err().unwrap(),
+                   ApiError::MissingField("data"));
+        assert!(matches!(
+            base().method(Method::Pitc).machines(3).fit().err().unwrap(),
+            ApiError::MissingField(_)));
+        assert!(matches!(
+            base().method(Method::PIcf).machines(3).partition(
+                vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9, 10, 11]])
+                .fit().err().unwrap(),
+            ApiError::MissingField(_)));
+
+        // bad shapes / partitions
+        assert!(matches!(
+            base().method(Method::Pitc).machines(5).support(xs.clone())
+                .fit().err().unwrap(),
+            ApiError::InvalidSpec(_)));
+        assert!(matches!(
+            base().method(Method::Pitc).machines(2).support(xs.clone())
+                .partition(vec![vec![0, 1], vec![2, 3]]).fit().err().unwrap(),
+            ApiError::InvalidPartition { .. }));
+        let gp = base().method(Method::Pitc).machines(2)
+            .support(xs.clone()).fit().unwrap();
+        let bad = Mat::from_vec(2, 3, vec![0.0; 6]);
+        assert!(matches!(gp.predict(&bad).unwrap_err(),
+                         ApiError::ShapeMismatch { .. }));
+
+        // machines is inferred from an explicit partition
+        let gp = base().method(Method::Pitc).support(xs.clone())
+            .partition(vec![(0..6).collect(), (6..12).collect()])
+            .fit().unwrap();
+        assert_eq!(gp.machines(), 2);
+    }
+
+    /// pad_to repeats rows then truncates — identical retained rows.
+    #[test]
+    fn pad_to_is_transparent() {
+        let (hyp, xd, y, xs, xu) = problem(16, 3, 2, 13);
+        let gp = Gp::builder()
+            .method(Method::PPitc)
+            .hyp(hyp)
+            .data(xd, y)
+            .machines(2)
+            .support(xs)
+            .fit()
+            .unwrap();
+        let plain = gp.predict(&xu).unwrap();
+        let padded = gp
+            .predict_spec(&PredictSpec::new(xu.clone()).with_pad_to(8))
+            .unwrap();
+        assert_eq!(padded.len(), 3);
+        assert_eq!(plain.mean, padded.mean);
+        assert_eq!(plain.var, padded.var);
+        assert!(matches!(
+            gp.predict_spec(&PredictSpec::new(xu).with_pad_to(2))
+                .unwrap_err(),
+            ApiError::ShapeMismatch { .. }));
+    }
+
+    /// The online session equals batch pPIC on the same single-batch
+    /// partition (§5.2 with one absorb), and streams further batches.
+    #[test]
+    fn online_session_first_batch_equals_ppic() {
+        let n = 16;
+        let mut rng = Pcg64::seed(31);
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, 2, rng.normals(n * 2));
+        // zero-mean y so the online prior mean (first batch) matches the
+        // batch run's empirical mean exactly
+        let mut y = rng.normals(n);
+        let mu = y.iter().sum::<f64>() / n as f64;
+        for v in y.iter_mut() {
+            *v -= mu;
+        }
+        let xs = Mat::from_vec(4, 2, rng.normals(8));
+        let xu = Mat::from_vec(6, 2, rng.normals(12));
+        let d_blocks = random_partition(n, 2, &mut rng);
+        let u_blocks = random_partition(6, 2, &mut rng);
+
+        let b = Gp::builder()
+            .hyp(hyp.clone())
+            .data(xd.clone(), y.clone())
+            .machines(2)
+            .support(xs.clone())
+            .partition(d_blocks.clone());
+        let mut sess = b.online().unwrap();
+        assert_eq!(sess.batches(), 1);
+        let ps = PredictSpec::new(xu.clone()).with_blocks(u_blocks.clone());
+        let got = sess.predict(&ps).unwrap();
+
+        let want = b.method(Method::PPic).fit().unwrap()
+            .predict_spec(&ps).unwrap();
+        assert_all_close(&got.mean, &want.mean, 1e-10, 1e-10);
+        assert_all_close(&got.var, &want.var, 1e-10, 1e-10);
+
+        // stream one more batch
+        let batch: Vec<(Mat, Vec<f64>)> = (0..2)
+            .map(|_| (Mat::from_vec(3, 2, rng.normals(6)), rng.normals(3)))
+            .collect();
+        sess.absorb(&batch).unwrap();
+        assert_eq!(sess.batches(), 2);
+        let p2 = sess.predict(&PredictSpec::new(xu)).unwrap();
+        assert_eq!(p2.len(), 6);
+        assert!(p2.var.iter().all(|&v| v.is_finite()));
+        // refit is explicitly unsupported for streams
+        assert_eq!(sess.refit(&hyp).err(),
+                   Some(ApiError::Unsupported("refit of an online session")));
+    }
+}

@@ -1,0 +1,517 @@
+//! [`Regressor`] implementations: the four centralized models and the
+//! cluster-backed wrappers around pPITC / pPIC / pICF / [`OnlineGp`].
+//!
+//! Every model is fitted from a resolved [`FitSpec`] and keeps that
+//! spec, so [`Regressor::refit`] re-fits under new hyperparameters with
+//! the *exact* support set, partition and executor of the original fit
+//! (the [`crate::server::ServedModel::refit`] contract, generalized).
+
+use std::sync::Arc;
+
+use super::error::{ApiError, Result};
+use super::method::Method;
+use super::spec::{validate_test_partition, FitSpec, PredictOutput,
+                  PredictSpec};
+use super::Regressor;
+use crate::cluster::{NetworkModel, ParallelExecutor};
+use crate::gp::icf_gp::IcfGp;
+use crate::gp::pic::PicGp;
+use crate::gp::pitc::PitcGp;
+use crate::gp::FullGp;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::parallel::online::OnlineGp;
+use crate::parallel::{picf, ppic, ppitc, ClusterSpec};
+use crate::server::Router;
+
+/// Shape-check a test matrix against the training dimensionality.
+fn check_xu(d: usize, ps: &PredictSpec) -> Result<()> {
+    if ps.xu.cols != d {
+        return Err(ApiError::ShapeMismatch {
+            what: "xu cols vs input dim",
+            expected: d,
+            got: ps.xu.cols,
+        });
+    }
+    Ok(())
+}
+
+/// Contiguous even-ish split of `0..u` into `m` blocks (sizes differ by
+/// at most one) — the default work distribution for methods whose
+/// per-row predictions don't depend on the test partition.
+fn contiguous_blocks(u: usize, m: usize) -> Vec<Vec<usize>> {
+    let base = u / m;
+    let rem = u % m;
+    let mut out = Vec::with_capacity(m);
+    let mut next = 0;
+    for k in 0..m {
+        let len = base + usize::from(k < rem);
+        out.push((next..next + len).collect());
+        next += len;
+    }
+    out
+}
+
+/// Route each test row to the machine with the nearest local-data
+/// centroid (the serving scheme) — the default test partition for the
+/// PIC family, whose local term feeds on co-location.
+fn routed_blocks(router: &Router, xu: &Mat) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); router.machines()];
+    for (i, m) in router.route_all(xu).into_iter().enumerate() {
+        out[m].push(i);
+    }
+    out
+}
+
+/// Resolve the test partition: explicit blocks are validated; otherwise
+/// route by centroid (when a router is available) or split contiguously.
+fn resolve_u_blocks(
+    ps: &PredictSpec,
+    machines: usize,
+    router: Option<&Router>,
+) -> Result<Vec<Vec<usize>>> {
+    match &ps.u_blocks {
+        Some(blocks) => {
+            validate_test_partition(blocks, ps.xu.rows, machines)?;
+            Ok(blocks.clone())
+        }
+        None => Ok(match router {
+            Some(r) => routed_blocks(r, &ps.xu),
+            None => contiguous_blocks(ps.xu.rows, machines),
+        }),
+    }
+}
+
+/// Resolve + pool-share the spec: models keep the resolved spec with
+/// `exec` pinned so refits and repeated predicts reuse one thread pool.
+fn prepared(spec: &FitSpec) -> Result<(FitSpec, ParallelExecutor)> {
+    let mut spec = spec.resolved()?;
+    let exec = spec.executor();
+    spec.exec = Some(exec.clone());
+    Ok((spec, exec))
+}
+
+fn cluster_of(spec: &FitSpec, exec: &ParallelExecutor) -> ClusterSpec {
+    ClusterSpec {
+        machines: spec.machines,
+        net: NetworkModel::gigabit(),
+        exec: exec.clone(),
+    }
+}
+
+fn refit_of<T: Regressor + 'static>(spec: &FitSpec, hyp: &SeArd)
+    -> Result<Box<dyn Regressor>>
+{
+    let mut s = spec.clone();
+    s.hyp = hyp.clone();
+    Ok(Box::new(T::fit(&s)?))
+}
+
+// ------------------------------------------------------- centralized
+
+/// Exact full GP behind the facade.
+pub struct FgpModel {
+    spec: FitSpec,
+    gp: FullGp,
+    exec: ParallelExecutor,
+}
+
+impl Regressor for FgpModel {
+    fn fit(spec: &FitSpec) -> Result<FgpModel> {
+        let (spec, exec) = prepared(spec)?;
+        let gp = FullGp::try_fit_ctx(&exec.linalg_ctx(), &spec.hyp,
+                                     &spec.xd, &spec.y)
+            .map_err(|e| ApiError::not_spd("Σ_DD", &e))?;
+        Ok(FgpModel { spec, gp, exec })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let p = self.gp.predict_ctx(&self.exec.linalg_ctx(), &ps.xu);
+        Ok(PredictOutput { prediction: p, metrics: None })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<FgpModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        1
+    }
+
+    fn method(&self) -> Method {
+        Method::Fgp
+    }
+}
+
+/// Centralized PITC behind the facade.
+pub struct PitcModel {
+    spec: FitSpec,
+    gp: PitcGp,
+    exec: ParallelExecutor,
+}
+
+impl Regressor for PitcModel {
+    fn fit(spec: &FitSpec) -> Result<PitcModel> {
+        let (spec, exec) = prepared(spec)?;
+        let gp = PitcGp::try_fit_ctx(&exec.linalg_ctx(), &spec.hyp,
+                                     &spec.xd, &spec.y,
+                                     spec.support_points(), spec.blocks())
+            .map_err(|e| ApiError::not_spd("PITC covariance", &e))?;
+        Ok(PitcModel { spec, gp, exec })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let p = self.gp.predict_ctx(&self.exec.linalg_ctx(), &ps.xu);
+        Ok(PredictOutput { prediction: p, metrics: None })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<PitcModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::Pitc
+    }
+}
+
+/// Centralized PIC behind the facade: block predictions tied to the
+/// test partition (explicit via [`PredictSpec::with_blocks`], else
+/// routed by nearest local-data centroid).
+pub struct PicModel {
+    spec: FitSpec,
+    gp: PicGp,
+    router: Router,
+    exec: ParallelExecutor,
+}
+
+impl Regressor for PicModel {
+    fn fit(spec: &FitSpec) -> Result<PicModel> {
+        let (spec, exec) = prepared(spec)?;
+        let gp = PicGp::try_fit_ctx(&exec.linalg_ctx(), &spec.hyp,
+                                    &spec.xd, &spec.y,
+                                    spec.support_points(), spec.blocks())
+            .map_err(|e| ApiError::not_spd("PIC covariance", &e))?;
+        let xms: Vec<Mat> =
+            spec.blocks().iter().map(|b| spec.xd.select_rows(b)).collect();
+        let refs: Vec<&Mat> = xms.iter().collect();
+        let router = Router::from_blocks(&spec.hyp, &refs);
+        Ok(PicModel { spec, gp, router, exec })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let u_blocks =
+            resolve_u_blocks(ps, self.spec.machines, Some(&self.router))?;
+        let p = self.gp.predict_ctx(&self.exec.linalg_ctx(), &ps.xu,
+                                    &u_blocks);
+        Ok(PredictOutput { prediction: p, metrics: None })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<PicModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::Pic
+    }
+}
+
+/// Centralized ICF-based GP behind the facade.
+///
+/// ICF's pivoted factorization stops early instead of failing on a
+/// non-SPD Gram matrix, so (unlike FGP/PITC/PIC) fit has no `NotSpd`
+/// path; the R×R Φ solve at predict time keeps the legacy panic on
+/// degenerate hyperparameters.
+pub struct IcfModel {
+    spec: FitSpec,
+    gp: IcfGp,
+    exec: ParallelExecutor,
+}
+
+impl Regressor for IcfModel {
+    fn fit(spec: &FitSpec) -> Result<IcfModel> {
+        let (spec, exec) = prepared(spec)?;
+        let rank = spec.rank.expect("resolved spec has rank");
+        let gp = IcfGp::fit_ctx(&exec.linalg_ctx(), &spec.hyp, &spec.xd,
+                                &spec.y, rank, spec.blocks());
+        Ok(IcfModel { spec, gp, exec })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let p = self.gp.predict_ctx(&self.exec.linalg_ctx(), &ps.xu);
+        Ok(PredictOutput { prediction: p, metrics: None })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<IcfModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::Icf
+    }
+}
+
+// -------------------------------------------------------- distributed
+
+/// pPITC behind the facade. `fit` stages the distributed state (the
+/// protocol's Step 1 "data already distributed" assumption); every
+/// `predict` executes Steps 2–4 over the simulated cluster and returns
+/// the run's [`crate::cluster::RunMetrics`].
+pub struct PPitcModel {
+    spec: FitSpec,
+    cluster: ClusterSpec,
+}
+
+impl Regressor for PPitcModel {
+    fn fit(spec: &FitSpec) -> Result<PPitcModel> {
+        let (spec, exec) = prepared(spec)?;
+        let cluster = cluster_of(&spec, &exec);
+        Ok(PPitcModel { spec, cluster })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let u_blocks = resolve_u_blocks(ps, self.spec.machines, None)?;
+        let out = ppitc::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                             self.spec.support_points(), &ps.xu,
+                             self.spec.blocks(), &u_blocks,
+                             self.spec.backend.as_ref(), &self.cluster);
+        Ok(PredictOutput {
+            prediction: out.prediction,
+            metrics: Some(out.metrics),
+        })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<PPitcModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::PPitc
+    }
+}
+
+/// pPIC behind the facade (fixed Definition-1 partition; the protocol's
+/// clustering scheme stays available through [`crate::parallel::ppic`]).
+pub struct PPicModel {
+    spec: FitSpec,
+    cluster: ClusterSpec,
+    router: Router,
+}
+
+impl Regressor for PPicModel {
+    fn fit(spec: &FitSpec) -> Result<PPicModel> {
+        let (spec, exec) = prepared(spec)?;
+        let cluster = cluster_of(&spec, &exec);
+        let xms: Vec<Mat> =
+            spec.blocks().iter().map(|b| spec.xd.select_rows(b)).collect();
+        let refs: Vec<&Mat> = xms.iter().collect();
+        let router = Router::from_blocks(&spec.hyp, &refs);
+        Ok(PPicModel { spec, cluster, router })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let u_blocks =
+            resolve_u_blocks(ps, self.spec.machines, Some(&self.router))?;
+        let out = ppic::run_with_partition(
+            &self.spec.hyp, &self.spec.xd, &self.spec.y,
+            self.spec.support_points(), &ps.xu, self.spec.blocks(),
+            &u_blocks, self.spec.backend.as_ref(), &self.cluster);
+        Ok(PredictOutput {
+            prediction: out.prediction,
+            metrics: Some(out.metrics),
+        })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<PPicModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::PPic
+    }
+}
+
+/// pICF-based GP behind the facade. Step 5 has every machine scan all
+/// of U, so `u_blocks` carries no information here and is ignored.
+pub struct PIcfModel {
+    spec: FitSpec,
+    cluster: ClusterSpec,
+}
+
+impl Regressor for PIcfModel {
+    fn fit(spec: &FitSpec) -> Result<PIcfModel> {
+        let (spec, exec) = prepared(spec)?;
+        let cluster = cluster_of(&spec, &exec);
+        Ok(PIcfModel { spec, cluster })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let rank = self.spec.rank.expect("resolved spec has rank");
+        let out = picf::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                            &ps.xu, self.spec.blocks(), rank,
+                            self.spec.backend.as_ref(), &self.cluster);
+        Ok(PredictOutput {
+            prediction: out.prediction,
+            metrics: Some(out.metrics),
+        })
+    }
+
+    fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        refit_of::<PIcfModel>(&self.spec, hyp)
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::PIcf
+    }
+}
+
+// ------------------------------------------------------------- online
+
+/// Streaming §5.2 session behind the facade: `fit` absorbs the spec's
+/// data as the first batch, [`OnlineSession::absorb`] streams more in,
+/// and predictions are pPIC-flavored (each machine's local term is its
+/// latest block). Obtain one with [`crate::api::GpBuilder::online`], or
+/// drive it boxed through the [`Regressor`] trait like any other method.
+pub struct OnlineSession {
+    spec: FitSpec,
+    gp: OnlineGp,
+    latest_inputs: Vec<Mat>,
+    /// Cached nearest-centroid router over `latest_inputs`; rebuilt only
+    /// when an absorb changes the machines' latest blocks.
+    router: Router,
+}
+
+impl OnlineSession {
+    /// Absorb one batch (`blocks[m]` = machine m's new inputs/outputs).
+    /// Returns the simulated makespan of the absorb round.
+    pub fn absorb(&mut self, blocks: &[(Mat, Vec<f64>)]) -> Result<f64> {
+        if blocks.len() != self.spec.machines {
+            return Err(ApiError::ShapeMismatch {
+                what: "batch blocks vs machines",
+                expected: self.spec.machines,
+                got: blocks.len(),
+            });
+        }
+        for (m, (xm, ym)) in blocks.iter().enumerate() {
+            if xm.rows == 0 {
+                return Err(ApiError::EmptyPartition { machine: m });
+            }
+            if xm.rows != ym.len() {
+                return Err(ApiError::ShapeMismatch {
+                    what: "batch y length vs rows",
+                    expected: xm.rows,
+                    got: ym.len(),
+                });
+            }
+            if xm.cols != self.spec.xd.cols {
+                return Err(ApiError::ShapeMismatch {
+                    what: "batch cols vs input dim",
+                    expected: self.spec.xd.cols,
+                    got: xm.cols,
+                });
+            }
+        }
+        for (m, (xm, _)) in blocks.iter().enumerate() {
+            self.latest_inputs[m] = xm.clone();
+        }
+        self.router = router_over(&self.spec.hyp, &self.latest_inputs);
+        Ok(self.gp.absorb(blocks))
+    }
+
+    /// Batches absorbed so far.
+    #[must_use]
+    pub fn batches(&self) -> usize {
+        self.gp.batches
+    }
+
+    /// Cumulative simulated seconds spent absorbing.
+    #[must_use]
+    pub fn absorb_makespan(&self) -> f64 {
+        self.gp.absorb_makespan
+    }
+
+}
+
+/// Nearest-centroid router over a set of machine blocks.
+fn router_over(hyp: &SeArd, blocks: &[Mat]) -> Router {
+    let refs: Vec<&Mat> = blocks.iter().collect();
+    Router::from_blocks(hyp, &refs)
+}
+
+impl Regressor for OnlineSession {
+    fn fit(spec: &FitSpec) -> Result<OnlineSession> {
+        let (spec, exec) = prepared(spec)?;
+        let cluster = cluster_of(&spec, &exec);
+        let mut gp = OnlineGp::new(&spec.hyp, spec.support_points(),
+                                   Arc::clone(&spec.backend), cluster);
+        let blocks: Vec<(Mat, Vec<f64>)> = spec
+            .blocks()
+            .iter()
+            .map(|blk| {
+                let xm = spec.xd.select_rows(blk);
+                let ym: Vec<f64> = blk.iter().map(|&i| spec.y[i]).collect();
+                (xm, ym)
+            })
+            .collect();
+        gp.absorb(&blocks);
+        let latest_inputs: Vec<Mat> =
+            blocks.into_iter().map(|(xm, _)| xm).collect();
+        let router = router_over(&spec.hyp, &latest_inputs);
+        Ok(OnlineSession { spec, gp, latest_inputs, router })
+    }
+
+    fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
+        check_xu(self.spec.xd.cols, ps)?;
+        let u_blocks =
+            resolve_u_blocks(ps, self.spec.machines, Some(&self.router))?;
+        let out = self.gp.predict_ppic(&ps.xu, &u_blocks);
+        Ok(PredictOutput {
+            prediction: out.prediction,
+            metrics: Some(out.metrics),
+        })
+    }
+
+    /// An online session accumulates streamed state that a refit cannot
+    /// reconstruct — rebuild via the builder instead.
+    fn refit(&self, _hyp: &SeArd) -> Result<Box<dyn Regressor>> {
+        Err(ApiError::Unsupported("refit of an online session"))
+    }
+
+    fn machines(&self) -> usize {
+        self.spec.machines
+    }
+
+    fn method(&self) -> Method {
+        Method::Online
+    }
+}

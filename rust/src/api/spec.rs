@@ -1,0 +1,386 @@
+//! Declarative fit/predict specifications — the facade's wire format.
+//!
+//! A [`FitSpec`] is everything needed to construct any model behind the
+//! [`crate::api::Regressor`] trait; a [`PredictSpec`] carries a test
+//! matrix plus the per-method quirks (PIC's test partition, the AOT
+//! pad-to shape) that used to leak into every call site.
+
+use std::sync::Arc;
+
+use super::error::{ApiError, Result};
+use super::method::Method;
+use crate::cluster::{ParallelExecutor, RunMetrics};
+use crate::data::partition::random_partition;
+use crate::gp::support::support_from_pool;
+use crate::gp::Prediction;
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+use crate::util::Pcg64;
+
+/// How the support set S is chosen.
+#[derive(Clone, Debug)]
+pub enum SupportSpec {
+    /// Not set (valid only for methods with [`Method::needs_support`]
+    /// false).
+    Unset,
+    /// Use these rows verbatim.
+    Points(Mat),
+    /// Differential-entropy greedy selection of `size` rows from a
+    /// seeded random candidate pool of the training inputs (the
+    /// Section-6 recipe).
+    Entropy { size: usize },
+}
+
+/// How the Definition-1 data partition is chosen.
+#[derive(Clone, Debug)]
+pub enum PartitionSpec {
+    /// Even random partition (seeded; requires `machines | n`).
+    Random,
+    /// Use these blocks verbatim (validated: disjoint cover of `0..n`).
+    Blocks(Vec<Vec<usize>>),
+}
+
+/// A complete, validated model recipe. Build one with
+/// [`crate::api::GpBuilder`]; [`FitSpec::resolved`] turns selection
+/// policies ([`SupportSpec::Entropy`], [`PartitionSpec::Random`]) into
+/// concrete values so a refit reuses the exact same S and blocks.
+#[derive(Clone)]
+pub struct FitSpec {
+    pub method: Method,
+    pub hyp: SeArd,
+    pub xd: Mat,
+    pub y: Vec<f64>,
+    pub machines: usize,
+    pub support: SupportSpec,
+    pub partition: PartitionSpec,
+    /// ICF rank R (required by [`Method::needs_rank`] methods).
+    pub rank: Option<usize>,
+    /// Host worker threads (0/1 = serial).
+    pub threads: usize,
+    pub seed: u64,
+    pub backend: Arc<dyn Backend>,
+    /// Optional pre-built executor; overrides `threads` so many models
+    /// can share one thread pool (the sweep-harness pattern).
+    pub exec: Option<ParallelExecutor>,
+}
+
+impl std::fmt::Debug for FitSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FitSpec")
+            .field("method", &self.method)
+            .field("n", &self.xd.rows)
+            .field("d", &self.xd.cols)
+            .field("machines", &self.machines)
+            .field("rank", &self.rank)
+            .field("threads", &self.threads)
+            .field("seed", &self.seed)
+            .field("backend", &self.backend.name())
+            .finish()
+    }
+}
+
+impl FitSpec {
+    /// The executor this spec runs node work (and master-side linalg)
+    /// on: the shared override if set, else a fresh pool per
+    /// [`FitSpec::threads`].
+    #[must_use]
+    pub fn executor(&self) -> ParallelExecutor {
+        match &self.exec {
+            Some(e) => e.clone(),
+            None => ParallelExecutor::threads(self.threads),
+        }
+    }
+
+    /// Validate the spec and materialize every selection policy:
+    /// entropy support becomes [`SupportSpec::Points`], the random
+    /// partition becomes [`PartitionSpec::Blocks`]. Idempotent — and
+    /// the basis of [`crate::api::Regressor::refit`] reusing the exact
+    /// support set and blocks of the original fit.
+    pub fn resolved(&self) -> Result<FitSpec> {
+        let n = self.xd.rows;
+        if n == 0 || self.y.is_empty() {
+            return Err(ApiError::EmptyData);
+        }
+        if self.y.len() != n {
+            return Err(ApiError::ShapeMismatch {
+                what: "y length vs xd rows",
+                expected: n,
+                got: self.y.len(),
+            });
+        }
+        if self.machines == 0 {
+            return Err(ApiError::invalid("machines must be >= 1"));
+        }
+
+        let support = match &self.support {
+            SupportSpec::Unset => {
+                if self.method.needs_support() {
+                    return Err(ApiError::MissingField(
+                        "support (set .support(xs) or .support_size(k))"));
+                }
+                SupportSpec::Unset
+            }
+            SupportSpec::Points(xs) => {
+                if xs.rows == 0 {
+                    return Err(ApiError::invalid("support set is empty"));
+                }
+                if xs.cols != self.xd.cols {
+                    return Err(ApiError::ShapeMismatch {
+                        what: "support cols vs input dim",
+                        expected: self.xd.cols,
+                        got: xs.cols,
+                    });
+                }
+                SupportSpec::Points(xs.clone())
+            }
+            SupportSpec::Entropy { size } => {
+                if *size == 0 {
+                    return Err(ApiError::invalid("support size must be >= 1"));
+                }
+                if self.method.needs_support() {
+                    let mut rng = Pcg64::new(self.seed, 0xA1);
+                    SupportSpec::Points(support_from_pool(
+                        &self.hyp, &self.xd, *size, &mut rng))
+                } else {
+                    // don't pay for a selection this method never reads
+                    // (one base builder fanning out over methods)
+                    SupportSpec::Unset
+                }
+            }
+        };
+
+        let partition = if self.method.needs_partition() {
+            let blocks = match &self.partition {
+                PartitionSpec::Random => {
+                    if n % self.machines != 0 {
+                        return Err(ApiError::invalid(format!(
+                            "random partition needs machines | n \
+                             ({} ∤ {n}); trim the data or pass explicit \
+                             blocks", self.machines)));
+                    }
+                    let mut rng = Pcg64::new(self.seed, 0xA2);
+                    random_partition(n, self.machines, &mut rng)
+                }
+                PartitionSpec::Blocks(b) => {
+                    validate_partition(b, n, self.machines)?;
+                    b.clone()
+                }
+            };
+            PartitionSpec::Blocks(blocks)
+        } else {
+            self.partition.clone()
+        };
+
+        let rank = if self.method.needs_rank() {
+            match self.rank {
+                None => return Err(ApiError::MissingField("rank (set .rank(r))")),
+                Some(0) => {
+                    return Err(ApiError::invalid("rank must be >= 1"))
+                }
+                Some(r) => Some(r.min(n)),
+            }
+        } else {
+            self.rank
+        };
+
+        Ok(FitSpec {
+            support,
+            partition,
+            rank,
+            ..self.clone()
+        })
+    }
+
+    /// The resolved support matrix (panics if called before
+    /// [`FitSpec::resolved`] on a support-needing method — facade
+    /// internals only see resolved specs).
+    pub(crate) fn support_points(&self) -> &Mat {
+        match &self.support {
+            SupportSpec::Points(xs) => xs,
+            _ => panic!("spec not resolved: support"),
+        }
+    }
+
+    /// The resolved Definition-1 blocks (same caveat as
+    /// [`FitSpec::support_points`]).
+    pub(crate) fn blocks(&self) -> &[Vec<usize>] {
+        match &self.partition {
+            PartitionSpec::Blocks(b) => b,
+            _ => panic!("spec not resolved: partition"),
+        }
+    }
+}
+
+/// Check a Definition-1 partition: exactly `machines` non-empty,
+/// disjoint blocks covering `0..n`.
+pub(crate) fn validate_partition(
+    blocks: &[Vec<usize>],
+    n: usize,
+    machines: usize,
+) -> Result<()> {
+    if blocks.len() != machines {
+        return Err(ApiError::ShapeMismatch {
+            what: "partition blocks vs machines",
+            expected: machines,
+            got: blocks.len(),
+        });
+    }
+    let mut seen = vec![false; n];
+    for (m, blk) in blocks.iter().enumerate() {
+        if blk.is_empty() {
+            return Err(ApiError::EmptyPartition { machine: m });
+        }
+        for &i in blk {
+            if i >= n {
+                return Err(ApiError::InvalidPartition {
+                    reason: format!("machine {m} references row {i} >= {n}"),
+                });
+            }
+            if seen[i] {
+                return Err(ApiError::InvalidPartition {
+                    reason: format!("row {i} assigned twice"),
+                });
+            }
+            seen[i] = true;
+        }
+    }
+    if let Some(miss) = seen.iter().position(|&s| !s) {
+        return Err(ApiError::InvalidPartition {
+            reason: format!("row {miss} unassigned"),
+        });
+    }
+    Ok(())
+}
+
+/// Like [`validate_partition`] but for *test* partitions, where empty
+/// blocks are legal (a machine may simply have no queries).
+pub(crate) fn validate_test_partition(
+    blocks: &[Vec<usize>],
+    u: usize,
+    machines: usize,
+) -> Result<()> {
+    if blocks.len() != machines {
+        return Err(ApiError::ShapeMismatch {
+            what: "u_blocks vs machines",
+            expected: machines,
+            got: blocks.len(),
+        });
+    }
+    let mut seen = vec![false; u];
+    for (m, blk) in blocks.iter().enumerate() {
+        for &i in blk {
+            if i >= u {
+                return Err(ApiError::InvalidPartition {
+                    reason: format!("machine {m} references test row {i} >= {u}"),
+                });
+            }
+            if seen[i] {
+                return Err(ApiError::InvalidPartition {
+                    reason: format!("test row {i} assigned twice"),
+                });
+            }
+            seen[i] = true;
+        }
+    }
+    if let Some(miss) = seen.iter().position(|&s| !s) {
+        return Err(ApiError::InvalidPartition {
+            reason: format!("test row {miss} unassigned"),
+        });
+    }
+    Ok(())
+}
+
+/// One prediction request against a fitted model.
+///
+/// * `u_blocks` — Definition-1 test partition. Only the PIC family
+///   conditions on it numerically; methods whose per-row predictions
+///   are partition-independent use it (or a default split) purely for
+///   work distribution. When absent, PIC-family models route each test
+///   row to the machine with the nearest local-data centroid (the
+///   serving scheme of [`crate::server::Router`]).
+/// * `pad_to` — pad the batch to a fixed AOT row count by repeating the
+///   first row; extra outputs are discarded. Mutually exclusive with
+///   `u_blocks`.
+#[derive(Clone, Debug)]
+pub struct PredictSpec {
+    pub xu: Mat,
+    pub u_blocks: Option<Vec<Vec<usize>>>,
+    pub pad_to: Option<usize>,
+}
+
+impl PredictSpec {
+    /// Predict these rows with default work distribution.
+    #[must_use]
+    pub fn new(xu: Mat) -> PredictSpec {
+        PredictSpec { xu, u_blocks: None, pad_to: None }
+    }
+
+    /// Pin the Definition-1 test partition (required to reproduce a
+    /// specific PIC/pPIC run exactly).
+    #[must_use]
+    pub fn with_blocks(mut self, u_blocks: Vec<Vec<usize>>) -> PredictSpec {
+        self.u_blocks = Some(u_blocks);
+        self
+    }
+
+    /// Pad the batch to an AOT shape (see [`PredictSpec`] docs).
+    #[must_use]
+    pub fn with_pad_to(mut self, pad_to: usize) -> PredictSpec {
+        self.pad_to = Some(pad_to);
+        self
+    }
+}
+
+/// A prediction plus the simulated-cluster metrics, when the method ran
+/// a distributed protocol (`None` for centralized methods).
+#[derive(Clone, Debug)]
+pub struct PredictOutput {
+    pub prediction: Prediction,
+    pub metrics: Option<RunMetrics>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_validation() {
+        // valid
+        assert!(validate_partition(&[vec![0, 2], vec![1, 3]], 4, 2).is_ok());
+        // wrong machine count
+        assert!(matches!(
+            validate_partition(&[vec![0, 1, 2, 3]], 4, 2),
+            Err(ApiError::ShapeMismatch { .. })
+        ));
+        // empty block
+        assert!(matches!(
+            validate_partition(&[vec![0, 1, 2, 3], vec![]], 4, 2),
+            Err(ApiError::EmptyPartition { machine: 1 })
+        ));
+        // duplicate
+        assert!(matches!(
+            validate_partition(&[vec![0, 1], vec![1, 2]], 4, 2),
+            Err(ApiError::InvalidPartition { .. })
+        ));
+        // missing row
+        assert!(matches!(
+            validate_partition(&[vec![0, 1], vec![2]], 4, 2),
+            Err(ApiError::InvalidPartition { .. })
+        ));
+        // out of range
+        assert!(matches!(
+            validate_partition(&[vec![0, 1], vec![2, 9]], 4, 2),
+            Err(ApiError::InvalidPartition { .. })
+        ));
+    }
+
+    #[test]
+    fn test_partition_allows_empty_blocks() {
+        assert!(validate_test_partition(&[vec![0, 1, 2], vec![]], 3, 2).is_ok());
+        assert!(matches!(
+            validate_test_partition(&[vec![0, 1], vec![]], 3, 2),
+            Err(ApiError::InvalidPartition { .. })
+        ));
+    }
+}

@@ -2,62 +2,21 @@
 //! methods (3 parallel + 3 centralized + FGP) on a workload and report
 //! the paper's metrics (RMSE, MNLP, incurred time, speedup).
 
+use std::sync::Arc;
+
 use super::workloads::Workload;
+use crate::api::{Gp, OnlineSession, PredictSpec, Regressor as _};
+use crate::cluster::ParallelExecutor;
 use crate::data::partition::cluster_partition;
-use crate::gp::{fgp::FullGp, icf_gp::IcfGp, pic::PicGp, pitc::PitcGp,
-                support::support_matrix, Prediction};
+use crate::gp::{support::support_from_pool, Prediction};
 use crate::linalg::Mat;
 use crate::metrics::{frac_nonpositive_var, mnlp, rmse};
-use crate::parallel::{picf, ppic, ppitc, ClusterSpec};
 use crate::runtime::Backend;
 use crate::util::{Pcg64, Stopwatch};
 
-/// The methods of Section 6.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Method {
-    PPitc,
-    PPic,
-    PIcf,
-    Pitc,
-    Pic,
-    Icf,
-    Fgp,
-}
-
-impl Method {
-    pub fn name(self) -> &'static str {
-        match self {
-            Method::PPitc => "pPITC",
-            Method::PPic => "pPIC",
-            Method::PIcf => "pICF",
-            Method::Pitc => "PITC",
-            Method::Pic => "PIC",
-            Method::Icf => "ICF",
-            Method::Fgp => "FGP",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Method> {
-        match s.to_ascii_lowercase().as_str() {
-            "ppitc" => Some(Method::PPitc),
-            "ppic" => Some(Method::PPic),
-            "picf" => Some(Method::PIcf),
-            "pitc" => Some(Method::Pitc),
-            "pic" => Some(Method::Pic),
-            "icf" => Some(Method::Icf),
-            "fgp" => Some(Method::Fgp),
-            _ => None,
-        }
-    }
-
-    pub const ALL: [Method; 7] = [
-        Method::PPitc, Method::PPic, Method::PIcf,
-        Method::Pitc, Method::Pic, Method::Icf, Method::Fgp,
-    ];
-
-    pub const PARALLEL: [Method; 3] =
-        [Method::PPitc, Method::PPic, Method::PIcf];
-}
+// Method choice is a runtime value owned by the facade; re-exported here
+// so pre-facade call sites (`experiments::Method`) keep compiling.
+pub use crate::api::Method;
 
 /// One experiment point (fixed |D|, M, |S|, R).
 #[derive(Debug, Clone)]
@@ -116,93 +75,99 @@ fn protocol_time(metrics: &crate::cluster::RunMetrics, last_phase: &str) -> f64 
 
 /// Run the requested methods on one workload/config. Support set and
 /// partitions are shared across methods (paper setup: common S, data
-/// "distributed based on the clustering scheme").
+/// "distributed based on the clustering scheme"), and every method is
+/// constructed and driven through the [`crate::api`] facade — the same
+/// `Regressor` code path the server and CLI use.
 pub fn run_methods(
     w: &Workload,
     cfg: &ExperimentConfig,
     methods: &[Method],
-    backend: &dyn Backend,
+    backend: Arc<dyn Backend>,
 ) -> Vec<MethodResult> {
     let m = cfg.machines;
     let (xd, y, xu, yu) = evenize(w, m);
     let mut rng = Pcg64::new(cfg.seed, 0xE1);
 
-    // support set: differential-entropy greedy selection over a candidate
-    // subset of the training inputs (bounded for tractability)
-    let n_cand = xd.rows.min(cfg.support_size * 8).max(cfg.support_size);
-    let cand_idx = rng.sample_indices(xd.rows, n_cand);
-    let cand = xd.select_rows(&cand_idx);
-    let xs = support_matrix(&w.hyp, &cand, cfg.support_size);
+    // support set: the Section-6 pooled entropy recipe (shared with the
+    // facade's `.support_size()` resolution)
+    let xs = support_from_pool(&w.hyp, &xd, cfg.support_size, &mut rng);
 
     // the paper's clustering scheme fixes the partition for all methods
     let part = cluster_partition(&xd, &xu, m, &mut rng);
     let (d_blocks, u_blocks) = (part.d_blocks, part.u_blocks);
 
-    let spec = ClusterSpec::with_threads(m, cfg.threads);
-    // Centralized baselines use the same host threads through the
-    // blocked engine (pooled LinalgCtx) — apples-to-apples with the
-    // thread-parallel protocol runs.
-    let lctx = spec.exec.linalg_ctx();
+    // One executor (thread pool) shared by every method of this call —
+    // centralized baselines run their blocked linalg on the same threads
+    // that execute the parallel protocols' node work.
+    let exec = ParallelExecutor::threads(cfg.threads);
+    let builder = || {
+        Gp::builder()
+            .hyp(w.hyp.clone())
+            .data(xd.clone(), y.clone())
+            .machines(m)
+            .support(xs.clone())
+            .partition(d_blocks.clone())
+            .rank(cfg.rank)
+            .seed(cfg.seed)
+            .backend(Arc::clone(&backend))
+            .executor(exec.clone())
+    };
+    let ps = PredictSpec::new(xu.clone()).with_blocks(u_blocks.clone());
+
     let mut results: Vec<MethodResult> = Vec::new();
     let mut centralized_time: std::collections::HashMap<&'static str, f64> =
         std::collections::HashMap::new();
 
     for &method in methods {
+        // spec assembly (data clones + validation) happens outside the
+        // timed window — the clock measures fit + predict, as before
+        let spec = builder().method(method).spec().expect("facade spec");
         let (pred, time_s, wall_s): (Prediction, f64, f64) = match method {
-            Method::Fgp => {
-                let (p, secs) = Stopwatch::time(|| {
-                    let gp = FullGp::fit_ctx(&lctx, &w.hyp, &xd, &y);
-                    gp.predict_ctx(&lctx, &xu)
-                });
-                (p, secs, secs)
+            Method::Online => {
+                // absorb-everything-once + pPIC predict (§5.2 one-batch
+                // degenerate case); incurred time = absorb + predict
+                let wall = Stopwatch::new();
+                let sess = OnlineSession::fit(&spec).expect("online fit");
+                let out = sess.predict_full(&ps).expect("online predict");
+                let secs = wall.elapsed();
+                let metrics = out.metrics.expect("online runs report metrics");
+                let t = sess.absorb_makespan() + protocol_time(&metrics, "predict");
+                (out.prediction, t, secs)
             }
-            Method::Pitc => {
-                let (p, secs) = Stopwatch::time(|| {
-                    let gp = PitcGp::fit_ctx(&lctx, &w.hyp, &xd, &y, &xs,
-                                             &d_blocks);
-                    gp.predict_ctx(&lctx, &xu)
-                });
-                centralized_time.insert("pitc", secs);
-                (p, secs, secs)
-            }
-            Method::Pic => {
-                let (p, secs) = Stopwatch::time(|| {
-                    let gp = PicGp::fit_ctx(&lctx, &w.hyp, &xd, &y, &xs,
-                                            &d_blocks);
-                    gp.predict_ctx(&lctx, &xu, &u_blocks)
-                });
-                centralized_time.insert("pic", secs);
-                (p, secs, secs)
-            }
-            Method::Icf => {
-                let (p, secs) = Stopwatch::time(|| {
-                    let gp = IcfGp::fit_ctx(&lctx, &w.hyp, &xd, &y, cfg.rank,
-                                            &d_blocks);
-                    gp.predict_ctx(&lctx, &xu)
-                });
-                centralized_time.insert("icf", secs);
-                (p, secs, secs)
-            }
-            Method::PPitc => {
-                let out = ppitc::run(&w.hyp, &xd, &y, &xs, &xu, &d_blocks,
-                                     &u_blocks, backend, &spec);
-                let t = protocol_time(&out.metrics, "predict");
-                (out.prediction, t, out.metrics.wall_s)
-            }
-            Method::PPic => {
-                let out = ppic::run_with_partition(&w.hyp, &xd, &y, &xs, &xu,
-                                                   &d_blocks, &u_blocks,
-                                                   backend, &spec);
-                let t = protocol_time(&out.metrics, "predict");
-                (out.prediction, t, out.metrics.wall_s)
-            }
-            Method::PIcf => {
-                let out = picf::run(&w.hyp, &xd, &y, &xu, &d_blocks,
-                                    cfg.rank, backend, &spec);
-                let t = protocol_time(&out.metrics, "finalize");
-                (out.prediction, t, out.metrics.wall_s)
+            _ => {
+                let wall = Stopwatch::new();
+                let gp = Gp::fit(&spec).expect("facade fit");
+                let out = gp.predict_full(&ps).expect("facade predict");
+                let secs = wall.elapsed();
+                match out.metrics {
+                    // distributed: the paper's incurred time is the
+                    // simulated makespan up to the last protocol phase
+                    Some(metrics) => {
+                        let last = if method == Method::PIcf {
+                            "finalize"
+                        } else {
+                            "predict"
+                        };
+                        (out.prediction, protocol_time(&metrics, last),
+                         metrics.wall_s)
+                    }
+                    // centralized: incurred time = measured wall
+                    None => (out.prediction, secs, secs),
+                }
             }
         };
+        match method {
+            Method::Pitc => {
+                centralized_time.insert("pitc", time_s);
+            }
+            Method::Pic => {
+                centralized_time.insert("pic", time_s);
+            }
+            Method::Icf => {
+                centralized_time.insert("icf", time_s);
+            }
+            _ => {}
+        }
         let speedup = match method {
             Method::PPitc => centralized_time.get("pitc").map(|c| c / time_s),
             Method::PPic => centralized_time.get("pic").map(|c| c / time_s),
@@ -255,7 +220,7 @@ mod tests {
             threads: 0,
         };
         let order = speedup_order(&Method::ALL);
-        let results = run_methods(&w, &cfg, &order, &NativeBackend);
+        let results = run_methods(&w, &cfg, &order, Arc::new(NativeBackend));
         assert_eq!(results.len(), 7);
         for r in &results {
             assert!(r.rmse.is_finite() && r.rmse > 0.0, "{:?}", r.method);
@@ -289,7 +254,7 @@ mod tests {
             &w, &cfg,
             &[Method::Pitc, Method::Pic, Method::Icf,
               Method::PPitc, Method::PPic, Method::PIcf],
-            &NativeBackend,
+            Arc::new(NativeBackend),
         );
         let get = |m: Method| results.iter().find(|r| r.method == m).unwrap();
         for (a, b) in [(Method::PPitc, Method::Pitc),
@@ -322,8 +287,8 @@ mod tests {
             threads,
         };
         let methods = Method::PARALLEL;
-        let serial = run_methods(&w, &mk(0), &methods, &NativeBackend);
-        let par = run_methods(&w, &mk(4), &methods, &NativeBackend);
+        let serial = run_methods(&w, &mk(0), &methods, Arc::new(NativeBackend));
+        let par = run_methods(&w, &mk(4), &methods, Arc::new(NativeBackend));
         for (a, b) in serial.iter().zip(par.iter()) {
             assert_eq!(a.method, b.method);
             assert_eq!(a.rmse, b.rmse, "{:?}", a.method);
@@ -331,6 +296,29 @@ mod tests {
             assert_eq!(a.bad_var, b.bad_var);
             assert!(b.wall_s > 0.0);
         }
+    }
+
+    /// The §5.2 online mode runs in the harness and, with everything in
+    /// one batch, reproduces pPIC on the same partition.
+    #[test]
+    fn online_runs_in_harness() {
+        let w = small_workload();
+        let cfg = ExperimentConfig {
+            machines: 4,
+            support_size: 10,
+            rank: 12,
+            seed: 5,
+            threads: 0,
+        };
+        let results = run_methods(&w, &cfg, &[Method::PPic, Method::Online],
+                                  Arc::new(NativeBackend));
+        assert_eq!(results.len(), 2);
+        let (ppic, online) = (&results[0], &results[1]);
+        assert!((ppic.rmse - online.rmse).abs() < 1e-8,
+                "online one-batch should equal pPIC: {} vs {}",
+                online.rmse, ppic.rmse);
+        assert!(online.time_s > 0.0);
+        assert!(online.speedup.is_none());
     }
 
     #[test]

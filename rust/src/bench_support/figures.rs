@@ -11,6 +11,7 @@ use super::experiments::{run_methods, speedup_order, ExperimentConfig, Method};
 use super::table::{fmt3, Table};
 use super::workloads::{prepare, Domain};
 use crate::runtime::NativeBackend;
+use std::sync::Arc;
 
 /// Sweep scale.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,7 +54,7 @@ pub fn fig1(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
             threads,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                                  &NativeBackend);
+                                  Arc::new(NativeBackend));
         for r in &results {
             t.row(vec![
                 n.to_string(),
@@ -92,7 +93,7 @@ pub fn fig2(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
             threads,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                                  &NativeBackend);
+                                  Arc::new(NativeBackend));
         for r in &results {
             t.row(vec![
                 m.to_string(),
@@ -126,7 +127,7 @@ pub fn fig3(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
         &ExperimentConfig { machines: m, support_size: ps[0], rank: ps[0],
                             seed, threads },
         &[Method::Fgp],
-        &NativeBackend,
+        Arc::new(NativeBackend),
     );
     t.row(vec![
         "-".into(),
@@ -146,7 +147,7 @@ pub fn fig3(domain: Domain, scale: Scale, seed: u64, threads: usize) -> Table {
         };
         let methods = [Method::Pitc, Method::Pic, Method::Icf,
                        Method::PPitc, Method::PPic, Method::PIcf];
-        let results = run_methods(&w, &cfg, &methods, &NativeBackend);
+        let results = run_methods(&w, &cfg, &methods, Arc::new(NativeBackend));
         for r in &results {
             t.row(vec![
                 p.to_string(),
@@ -180,6 +181,7 @@ pub fn table1(domain: Domain, seed: u64, threads: usize) -> Table {
             Method::Icf => "R^2 |D| + R|U||D|",
             Method::PPitc | Method::PPic => "(|D|/M)^3",
             Method::PIcf => "R^2 |D|/M + R|U||D|/M",
+            Method::Online => "(|D'|/M)^3 per batch (§5.2)",
         }
     };
     let u1 = n1 / 10;
@@ -193,8 +195,8 @@ pub fn table1(domain: Domain, seed: u64, threads: usize) -> Table {
         threads,
     };
     let order = speedup_order(&Method::ALL);
-    let r1 = run_methods(&w1, &cfg(n1), &order, &NativeBackend);
-    let r2 = run_methods(&w2, &cfg(n2), &order, &NativeBackend);
+    let r1 = run_methods(&w1, &cfg(n1), &order, Arc::new(NativeBackend));
+    let r2 = run_methods(&w2, &cfg(n2), &order, Arc::new(NativeBackend));
     for method in Method::ALL {
         let a = r1.iter().find(|r| r.method == method).unwrap();
         let b = r2.iter().find(|r| r.method == method).unwrap();
@@ -233,7 +235,7 @@ mod tests {
             threads: 0,
         };
         let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                                  &NativeBackend);
+                                  Arc::new(NativeBackend));
         assert_eq!(results.len(), 7);
     }
 

@@ -1,10 +1,13 @@
 //! CLI subcommand implementations.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use super::args::Args;
+use crate::api::{Gp, Method};
 use crate::bench_support::experiments::{
-    run_methods, speedup_order, ExperimentConfig, Method,
+    run_methods, speedup_order, ExperimentConfig,
 };
 use crate::bench_support::figures::{self, Scale};
 use crate::bench_support::table::{fmt3, Table};
@@ -14,7 +17,7 @@ use crate::gp::likelihood::{learn_hyperparameters, MleConfig};
 use crate::gp::support::support_matrix;
 use crate::runtime::{artifacts, ArtifactManifest, Backend, NativeBackend,
                      PjrtBackend};
-use crate::server::{DynamicBatcher, PredictRequest, ServedModel};
+use crate::server::{DynamicBatcher, PredictRequest};
 use crate::util::Pcg64;
 
 fn parse_domain(args: &Args) -> Result<Domain> {
@@ -70,7 +73,7 @@ pub fn predict(args: &Args) -> Result<()> {
         machines: m, support_size: s, rank, seed, threads,
     };
     let results = run_methods(&w, &cfg, &speedup_order(&methods),
-                              &NativeBackend);
+                              Arc::new(NativeBackend));
 
     // time_s is the paper's modeled incurred time (simulated makespan
     // for the parallel methods); wall_s is the real host wall-clock,
@@ -158,20 +161,24 @@ pub fn serve(args: &Args) -> Result<()> {
                                                 rng.normals(m * spec.d));
     let part = cluster_partition(&xd, &xu_probe, m, &mut rng);
 
-    let pjrt;
-    let backend: &dyn Backend = match backend_name {
-        "native" => &NativeBackend,
-        "pjrt" => {
-            pjrt = PjrtBackend::load(&manifest, profile)?;
-            &pjrt
-        }
+    let backend: Arc<dyn Backend> = match backend_name {
+        "native" => Arc::new(NativeBackend),
+        "pjrt" => Arc::new(PjrtBackend::load(&manifest, profile)?),
         other => bail!("unknown backend '{other}'"),
     };
 
     crate::info!("fitting served model: profile={profile} n={n} m={m} \
                   backend={backend_name}");
-    let model = ServedModel::fit(&hyp, &xd, &y,
-        &support_matrix(&hyp, &xd, spec.support), &part.d_blocks, backend);
+    let xs = support_matrix(&hyp, &xd, spec.support);
+    let model = Gp::builder()
+        .hyp(hyp.clone())
+        .data(xd, y)
+        .machines(m)
+        .support(xs)
+        .partition(part.d_blocks)
+        .backend(Arc::clone(&backend))
+        .seed(seed)
+        .serve()?;
 
     let requests: Vec<PredictRequest> = (0..n_requests)
         .map(|i| PredictRequest {
@@ -183,7 +190,8 @@ pub fn serve(args: &Args) -> Result<()> {
     let mut batcher = DynamicBatcher::new(m, spec.d, spec.pred_block,
                                           wait_ms * 1e-3);
     let exec = crate::cluster::ParallelExecutor::threads(threads);
-    let report = model.serve_with(backend, &requests, &mut batcher, &exec);
+    let report = model.serve_with(backend.as_ref(), &requests, &mut batcher,
+                                  &exec);
     println!("serve[{}|{} threads]: {}", backend.name(), exec.workers(),
              report.summary());
     Ok(())
@@ -220,8 +228,7 @@ pub fn learn(args: &Args) -> Result<()> {
 /// whose held-out RMSE is compared against the exact-subset MLE
 /// baseline (`pgpr learn`'s path) and the untrained init.
 pub fn train(args: &Args) -> Result<()> {
-    use crate::parallel::ClusterSpec;
-    use crate::train::{dist::train_pitc, optim::AdamConfig};
+    use crate::train::optim::AdamConfig;
 
     let dataset = args.str_or("dataset", "rff");
     let m = args.usize_or("m", 8)?;
@@ -268,14 +275,21 @@ pub fn train(args: &Args) -> Result<()> {
     let n = train_ds.len();
     let s = xs.rows;
 
-    let spec = ClusterSpec::with_threads(m, threads);
-    let lctx = spec.exec.linalg_ctx();
+    let exec = crate::cluster::ParallelExecutor::threads(threads);
+    let lctx = exec.linalg_ctx();
     let cfg = AdamConfig { iters, lr, backtrack, ..Default::default() };
 
     crate::info!("train: dataset={dataset} n={n} M={m} |S|={s} iters={iters} \
-                  threads={}", spec.exec.workers());
-    let result = train_pitc(&init, &train_ds.x, &train_ds.y, &xs, &d_blocks,
-                            &spec, &cfg);
+                  threads={}", exec.workers());
+    let result = Gp::builder()
+        .hyp(init.clone())
+        .data(train_ds.x.clone(), train_ds.y.clone())
+        .machines(m)
+        .support(xs.clone())
+        .partition(d_blocks.clone())
+        .executor(exec)
+        .seed(seed)
+        .train(&cfg)?;
     if backtrack {
         // The smoke gate CI relies on. Monotonicity alone is vacuous
         // (minimize guarantees it by construction), so also require

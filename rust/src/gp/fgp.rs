@@ -31,13 +31,22 @@ impl FullGp {
     pub fn fit_ctx(lctx: &LinalgCtx, hyp: &SeArd, xd: &Mat, y: &[f64])
         -> FullGp
     {
+        FullGp::try_fit_ctx(lctx, hyp, xd, y)
+            .unwrap_or_else(|e| panic!("Σ_DD not SPD: {e}"))
+    }
+
+    /// Fallible [`FullGp::fit_ctx`] — the facade ([`crate::api`])
+    /// reports a non-SPD Σ_DD as a typed error instead of panicking.
+    pub fn try_fit_ctx(lctx: &LinalgCtx, hyp: &SeArd, xd: &Mat, y: &[f64])
+        -> Result<FullGp, crate::linalg::cholesky::NotSpd>
+    {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
         let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
         let sigma = hyp.cov_same_ctx(lctx, xd, true);
-        let l = cholesky_blocked(lctx, &sigma).expect("Σ_DD not SPD");
+        let l = cholesky_blocked(lctx, &sigma)?;
         let alpha = cho_solve_vec(&l, &centered);
-        FullGp { hyp: hyp.clone(), xd: xd.clone(), l, alpha, y_mean }
+        Ok(FullGp { hyp: hyp.clone(), xd: xd.clone(), l, alpha, y_mean })
     }
 
     pub fn n_train(&self) -> usize {

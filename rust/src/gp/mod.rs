@@ -29,10 +29,12 @@ impl Prediction {
         Prediction { mean: Vec::new(), var: Vec::new() }
     }
 
+    #[must_use]
     pub fn len(&self) -> usize {
         self.mean.len()
     }
 
+    #[must_use]
     pub fn is_empty(&self) -> bool {
         self.mean.is_empty()
     }
@@ -49,16 +51,34 @@ impl Prediction {
 
     /// Scatter block predictions back to original positions: `idx[k]`
     /// lists the global row of each entry in `blocks[k]`.
+    ///
+    /// # Contract
+    ///
+    /// The index lists must cover `0..n` **exactly once** in total
+    /// (Definition 1 test partitions do). Rows never referenced would
+    /// silently stay at `0.0` — so coverage is checked with debug
+    /// assertions; the typed-validation path for untrusted partitions
+    /// is `api::PredictSpec::with_blocks`.
     pub fn scatter(blocks: &[Prediction], idx: &[Vec<usize>], n: usize) -> Prediction {
         let mut mean = vec![0.0; n];
         let mut var = vec![0.0; n];
+        #[cfg(debug_assertions)]
+        let mut seen = vec![false; n];
         for (b, block_idx) in blocks.iter().zip(idx.iter()) {
             assert_eq!(b.len(), block_idx.len());
             for (k, &g) in block_idx.iter().enumerate() {
+                #[cfg(debug_assertions)]
+                {
+                    debug_assert!(!seen[g], "scatter: row {g} assigned twice");
+                    seen[g] = true;
+                }
                 mean[g] = b.mean[k];
                 var[g] = b.var[k];
             }
         }
+        #[cfg(debug_assertions)]
+        debug_assert!(seen.iter().all(|&s| s),
+                      "scatter: idx must cover 0..{n} exactly once");
         Prediction { mean, var }
     }
 
@@ -84,6 +104,24 @@ mod tests {
         let s = Prediction::scatter(&[a, b], &[vec![2, 0], vec![1]], 3);
         assert_eq!(s.mean, vec![2.0, 3.0, 1.0]);
         assert_eq!(s.var, vec![0.2, 0.3, 0.1]);
+    }
+
+    /// The scatter contract: every row of `0..n` must be assigned.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "scatter")]
+    fn scatter_rejects_partial_coverage() {
+        let a = Prediction { mean: vec![1.0], var: vec![0.1] };
+        let _ = Prediction::scatter(&[a], &[vec![2]], 3); // rows 0,1 missing
+    }
+
+    /// Duplicate assignments are also a contract violation.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "assigned twice")]
+    fn scatter_rejects_duplicates() {
+        let a = Prediction { mean: vec![1.0, 2.0], var: vec![0.1, 0.2] };
+        let _ = Prediction::scatter(&[a], &[vec![0, 0]], 2);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! to pPIC by Theorem 2 (tested against the literal eqs. (15)-(16)).
 
 use super::summaries::{
-    chol_global_ctx, global_summary, local_summary_ctx, ppic_predict_ctx,
-    GlobalSummary, LocalSummary, SupportContext,
+    global_summary, ppic_predict_ctx, try_chol_global_ctx,
+    try_local_summary_ctx, GlobalSummary, LocalSummary, SupportContext,
 };
 use super::Prediction;
 use crate::kernel::SeArd;
@@ -47,22 +47,34 @@ impl PicGp {
         xs: &Mat,
         d_blocks: &[Vec<usize>],
     ) -> PicGp {
+        PicGp::try_fit_ctx(lctx, hyp, xd, y, xs, d_blocks)
+            .unwrap_or_else(|e| panic!("PIC fit: covariance not SPD: {e}"))
+    }
+
+    /// Fallible [`PicGp::fit_ctx`] — the facade ([`crate::api`])
+    /// reports non-SPD covariances as typed errors instead of panicking.
+    pub fn try_fit_ctx(
+        lctx: &LinalgCtx,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+    ) -> Result<PicGp, crate::linalg::cholesky::NotSpd> {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
-        let ctx = SupportContext::new_ctx(lctx, hyp, xs);
-        let blocks: Vec<_> = d_blocks
-            .iter()
-            .map(|blk| {
-                let xm = xd.select_rows(blk);
-                let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
-                let loc = local_summary_ctx(lctx, hyp, &xm, &ym, &ctx);
-                (xm, ym, loc)
-            })
-            .collect();
+        let ctx = SupportContext::try_new_ctx(lctx, hyp, xs)?;
+        let mut blocks = Vec::with_capacity(d_blocks.len());
+        for blk in d_blocks {
+            let xm = xd.select_rows(blk);
+            let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
+            let loc = try_local_summary_ctx(lctx, hyp, &xm, &ym, &ctx)?;
+            blocks.push((xm, ym, loc));
+        }
         let refs: Vec<_> = blocks.iter().map(|(_, _, l)| l).collect();
         let global = global_summary(&ctx, &refs);
-        let l_g = chol_global_ctx(lctx, &global);
-        PicGp { hyp: hyp.clone(), ctx, global, l_g, blocks, y_mean }
+        let l_g = try_chol_global_ctx(lctx, &global)?;
+        Ok(PicGp { hyp: hyp.clone(), ctx, global, l_g, blocks, y_mean })
     }
 
     pub fn n_machines(&self) -> usize {

@@ -8,8 +8,8 @@
 //! literal eqs. (9)-(10) below).
 
 use super::summaries::{
-    chol_global_ctx, global_summary, local_summary_ctx, ppitc_predict_ctx,
-    GlobalSummary, SupportContext,
+    global_summary, ppitc_predict_ctx, try_chol_global_ctx,
+    try_local_summary_ctx, GlobalSummary, SupportContext,
 };
 use super::Prediction;
 use crate::kernel::SeArd;
@@ -47,21 +47,33 @@ impl PitcGp {
         xs: &Mat,
         d_blocks: &[Vec<usize>],
     ) -> PitcGp {
+        PitcGp::try_fit_ctx(lctx, hyp, xd, y, xs, d_blocks)
+            .unwrap_or_else(|e| panic!("PITC fit: covariance not SPD: {e}"))
+    }
+
+    /// Fallible [`PitcGp::fit_ctx`] — the facade ([`crate::api`])
+    /// reports non-SPD covariances as typed errors instead of panicking.
+    pub fn try_fit_ctx(
+        lctx: &LinalgCtx,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        xs: &Mat,
+        d_blocks: &[Vec<usize>],
+    ) -> Result<PitcGp, crate::linalg::cholesky::NotSpd> {
         assert_eq!(xd.rows, y.len());
         let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
-        let ctx = SupportContext::new_ctx(lctx, hyp, xs);
-        let locals: Vec<_> = d_blocks
-            .iter()
-            .map(|blk| {
-                let xm = xd.select_rows(blk);
-                let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
-                local_summary_ctx(lctx, hyp, &xm, &ym, &ctx)
-            })
-            .collect();
+        let ctx = SupportContext::try_new_ctx(lctx, hyp, xs)?;
+        let mut locals = Vec::with_capacity(d_blocks.len());
+        for blk in d_blocks {
+            let xm = xd.select_rows(blk);
+            let ym: Vec<f64> = blk.iter().map(|&i| y[i] - y_mean).collect();
+            locals.push(try_local_summary_ctx(lctx, hyp, &xm, &ym, &ctx)?);
+        }
         let refs: Vec<_> = locals.iter().collect();
         let global = global_summary(&ctx, &refs);
-        let l_g = chol_global_ctx(lctx, &global);
-        PitcGp { hyp: hyp.clone(), ctx, global, l_g, y_mean }
+        let l_g = try_chol_global_ctx(lctx, &global)?;
+        Ok(PitcGp { hyp: hyp.clone(), ctx, global, l_g, y_mean })
     }
 
     /// Predict any test set (Definition 4 applied to the whole U).

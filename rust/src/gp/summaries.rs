@@ -64,10 +64,20 @@ impl SupportContext {
     /// [`SupportContext::new`] with explicit linalg execution context
     /// (pooled Gram + blocked/pooled Cholesky).
     pub fn new_ctx(lctx: &LinalgCtx, hyp: &SeArd, xs: &Mat) -> SupportContext {
+        SupportContext::try_new_ctx(lctx, hyp, xs)
+            .unwrap_or_else(|e| panic!("Σ_SS not SPD: {e}"))
+    }
+
+    /// Fallible [`SupportContext::new_ctx`] — the facade
+    /// ([`crate::api`]) reports a non-SPD Σ_SS as a typed error instead
+    /// of panicking.
+    pub fn try_new_ctx(lctx: &LinalgCtx, hyp: &SeArd, xs: &Mat)
+        -> Result<SupportContext, crate::linalg::cholesky::NotSpd>
+    {
         let sigma_ss = hyp.cov_same_ctx(lctx, xs, false);
         let for_chol = hyp.cov_same_ctx(lctx, xs, true);
-        let l_ss = cholesky_blocked(lctx, &for_chol).expect("Σ_SS not SPD");
-        SupportContext { xs: xs.clone(), sigma_ss, l_ss }
+        let l_ss = cholesky_blocked(lctx, &for_chol)?;
+        Ok(SupportContext { xs: xs.clone(), sigma_ss, l_ss })
     }
 
     pub fn size(&self) -> usize {
@@ -97,18 +107,31 @@ pub fn local_summary_ctx(
     ym: &[f64],
     ctx: &SupportContext,
 ) -> LocalSummary {
+    try_local_summary_ctx(lctx, hyp, xm, ym, ctx)
+        .unwrap_or_else(|e| panic!("Σ_mm|S not SPD: {e}"))
+}
+
+/// Fallible [`local_summary_ctx`] — lets the facade surface a non-SPD
+/// conditional covariance Σ_mm|S as a typed error.
+pub fn try_local_summary_ctx(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xm: &Mat,
+    ym: &[f64],
+    ctx: &SupportContext,
+) -> Result<LocalSummary, crate::linalg::cholesky::NotSpd> {
     let k_ms = hyp.cov_cross_ctx(lctx, xm, &ctx.xs); // (B, S)
     // Q_mm = K_ms · Kss⁻¹ · K_sm  via W = L⁻¹ K_sm
     let w = solve_lower_mat_ctx(lctx, &ctx.l_ss, &k_ms.transpose()); // (S, B)
     let q_mm = gemm_tn(lctx, &w, &w); // (B, B)
     let mut sigma_m = hyp.cov_same_ctx(lctx, xm, true);
     sigma_m.sub_assign(&q_mm);
-    let l_m = cholesky_blocked(lctx, &sigma_m).expect("Σ_mm|S not SPD");
+    let l_m = cholesky_blocked(lctx, &sigma_m)?;
     let v = cho_solve_vec(&l_m, ym);
     let y_dot = matvec(&k_ms.transpose(), &v);
     let z = cho_solve_mat_ctx(lctx, &l_m, &k_ms); // (B, S)
     let s_dot = gemm_tn(lctx, &k_ms, &z); // (S, S)
-    LocalSummary { y_dot, s_dot, l_m }
+    Ok(LocalSummary { y_dot, s_dot, l_m })
 }
 
 /// Definition 3: assimilate local summaries into the global summary.
@@ -143,9 +166,18 @@ pub fn chol_global(global: &GlobalSummary) -> Mat {
 
 /// [`chol_global`] with explicit linalg execution context.
 pub fn chol_global_ctx(lctx: &LinalgCtx, global: &GlobalSummary) -> Mat {
+    try_chol_global_ctx(lctx, global)
+        .unwrap_or_else(|e| panic!("Σ̈_SS not SPD: {e}"))
+}
+
+/// Fallible [`chol_global_ctx`] — lets the facade surface a non-SPD
+/// global summary matrix as a typed error.
+pub fn try_chol_global_ctx(lctx: &LinalgCtx, global: &GlobalSummary)
+    -> Result<Mat, crate::linalg::cholesky::NotSpd>
+{
     let mut sg = global.s.clone();
     sg.add_diag(JITTER_SCALE);
-    cholesky_blocked(lctx, &sg).expect("Σ̈_SS not SPD")
+    cholesky_blocked(lctx, &sg)
 }
 
 /// Definition 4: pPITC predictive distribution for a block U_m.

@@ -45,6 +45,19 @@ pub fn support_matrix(hyp: &SeArd, candidates: &Mat, size: usize) -> Mat {
     candidates.select_rows(&idx)
 }
 
+/// The Section-6 support recipe, in one place (shared by the `api`
+/// facade's `support_size` resolution and the sweep harness): draw a
+/// bounded random candidate pool of `min(8·size, n)` training rows,
+/// then greedily entropy-select `size` of them. `size` is clamped to
+/// the training size.
+pub fn support_from_pool(hyp: &SeArd, xd: &Mat, size: usize,
+                         rng: &mut Pcg64) -> Mat {
+    let size = size.min(xd.rows);
+    let n_cand = xd.rows.min(size * 8).max(size);
+    let cand_idx = rng.sample_indices(xd.rows, n_cand);
+    support_matrix(hyp, &xd.select_rows(&cand_idx), size)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,7 +9,9 @@
 //!   discrete-event cluster ([`cluster`]), their centralized counterparts
 //!   and the exact FGP baseline ([`gp`]), plus a real-time prediction
 //!   server ([`server`]) and distributed PITC marginal-likelihood
-//!   training ([`train`]) on the same cluster topology.
+//!   training ([`train`]) on the same cluster topology — all constructed
+//!   and driven through the unified [`api`] facade (`Gp::builder()`,
+//!   one `Regressor` trait, method choice as a runtime value).
 //! * **L2/L1 (python, build-time only)** — the GP algebra and the Pallas
 //!   SE-Gram kernel, AOT-lowered to HLO text artifacts executed through
 //!   [`runtime`] (PJRT via the `xla` crate, behind the `pjrt` cargo
@@ -45,6 +47,7 @@
 //! PRNG ([`util`]), a property-testing mini-framework ([`testkit`]), a
 //! micro-benchmark harness ([`bench_support`]) and a CLI ([`cli`]).
 
+pub mod api;
 pub mod bench_support;
 pub mod cli;
 pub mod cluster;

@@ -10,6 +10,8 @@
 //! (conditional-independence across blocks given S makes this exactly a
 //! PIC model whose partition is all absorbed blocks — asserted in tests).
 
+use std::sync::Arc;
+
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
 use crate::gp::summaries::{
@@ -30,6 +32,7 @@ use crate::runtime::Backend;
 /// batch are computed concurrently on the host.
 ///
 /// ```
+/// use std::sync::Arc;
 /// use pgpr::kernel::SeArd;
 /// use pgpr::linalg::Mat;
 /// use pgpr::parallel::online::OnlineGp;
@@ -39,7 +42,7 @@ use crate::runtime::Backend;
 /// // two machines, 1-D inputs, a 3-point support set
 /// let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
 /// let xs = Mat::from_vec(3, 1, vec![-1.0, 0.0, 1.0]);
-/// let mut gp = OnlineGp::new(&hyp, &xs, &NativeBackend,
+/// let mut gp = OnlineGp::new(&hyp, &xs, Arc::new(NativeBackend),
 ///                            ClusterSpec::new(2));
 ///
 /// // a batch streams in: one (inputs, outputs) block per machine
@@ -60,10 +63,10 @@ use crate::runtime::Backend;
 /// gp.absorb(&batch);
 /// assert_eq!(gp.batches, 2);
 /// ```
-pub struct OnlineGp<'a> {
+pub struct OnlineGp {
     hyp: SeArd,
     xs: Mat,
-    backend: &'a dyn Backend,
+    backend: Arc<dyn Backend>,
     spec: ClusterSpec,
     /// the fixed prior mean (set from the first batch)
     y_mean: Option<f64>,
@@ -76,9 +79,9 @@ pub struct OnlineGp<'a> {
     pub absorb_makespan: f64,
 }
 
-impl<'a> OnlineGp<'a> {
-    pub fn new(hyp: &SeArd, xs: &Mat, backend: &'a dyn Backend,
-               spec: ClusterSpec) -> OnlineGp<'a> {
+impl OnlineGp {
+    pub fn new(hyp: &SeArd, xs: &Mat, backend: Arc<dyn Backend>,
+               spec: ClusterSpec) -> OnlineGp {
         let m = spec.machines;
         OnlineGp {
             hyp: hyp.clone(),
@@ -242,7 +245,8 @@ mod tests {
         let (m, per, d) = (3, 4, 2);
         let (hyp, xs, batches, xu) = setup(per, m, 2, d, 42);
         let spec = ClusterSpec::new(m);
-        let mut online = OnlineGp::new(&hyp, &xs, &NativeBackend, spec.clone());
+        let mut online = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend),
+                                       spec.clone());
         for b in &batches {
             online.absorb(b);
         }
@@ -285,7 +289,7 @@ mod tests {
     fn absorb_cost_does_not_grow_with_history() {
         let (m, per, d) = (2, 16, 2);
         let (hyp, xs, batches, _) = setup(per, m, 4, d, 7);
-        let mut online = OnlineGp::new(&hyp, &xs, &NativeBackend,
+        let mut online = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend),
                                        ClusterSpec::new(m));
         let mut costs = Vec::new();
         for b in &batches {
@@ -305,7 +309,7 @@ mod tests {
     fn online_ppic_sane() {
         let (m, per, d) = (2, 5, 2);
         let (hyp, xs, batches, xu) = setup(per, m, 2, d, 9);
-        let mut online = OnlineGp::new(&hyp, &xs, &NativeBackend,
+        let mut online = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend),
                                        ClusterSpec::new(m));
         for b in &batches {
             online.absorb(b);
@@ -325,7 +329,7 @@ mod tests {
     fn predict_before_absorb_panics() {
         let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
         let xs = Mat::from_vec(2, 1, vec![0.0, 1.0]);
-        let online = OnlineGp::new(&hyp, &xs, &NativeBackend,
+        let online = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend),
                                    ClusterSpec::new(1));
         let xu = Mat::from_vec(1, 1, vec![0.5]);
         online.predict_ppitc(&xu, &[vec![0]]);

@@ -114,6 +114,54 @@ mod tests {
         assert_eq!(b.pending(), 0);
     }
 
+    /// The age bound is inclusive: a batch whose oldest request has
+    /// waited *exactly* `max_wait_s` flushes (`>=` in `flush_expired`),
+    /// and one epsilon earlier does not.
+    #[test]
+    fn flush_boundary_at_exactly_max_wait() {
+        let mut b = DynamicBatcher::new(1, 1, 10, 0.5);
+        b.push(0, 1, &[0.0], 1.0);
+        assert!(b.flush_expired(1.5 - 1e-9).is_empty(), "just under");
+        let out = b.flush_expired(1.5);
+        assert_eq!(out.len(), 1, "exactly at the bound flushes");
+        assert_eq!(out[0].ids, vec![1]);
+        // flushing consumed the batch: the same instant again is empty
+        assert!(b.flush_expired(1.5).is_empty());
+    }
+
+    /// Filling to max_batch returns the batch on the exact push that
+    /// completes it (never one early or late), and the slot restarts
+    /// clean with a fresh oldest_arrival.
+    #[test]
+    fn push_fills_to_exactly_max_batch() {
+        let mut b = DynamicBatcher::new(1, 1, 3, 100.0);
+        assert!(b.push(0, 0, &[0.0], 0.0).is_none());
+        assert!(b.push(0, 1, &[0.1], 0.5).is_none());
+        assert_eq!(b.pending(), 2);
+        let full = b.push(0, 2, &[0.2], 1.0).expect("third push completes");
+        assert_eq!(full.ids, vec![0, 1, 2]);
+        assert_eq!(full.oldest_arrival, 0.0);
+        assert_eq!(b.pending(), 0);
+        // next batch starts fresh: its age is measured from its own
+        // first push, not the previous batch's
+        assert!(b.push(0, 3, &[0.3], 9.0).is_none());
+        let out = b.flush_all();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].oldest_arrival, 9.0);
+        assert_eq!(out[0].ids, vec![3]);
+    }
+
+    /// max_batch == 1 degenerates to flush-on-every-push.
+    #[test]
+    fn unit_batch_flushes_every_push() {
+        let mut b = DynamicBatcher::new(2, 1, 1, 100.0);
+        for i in 0..4u64 {
+            let out = b.push((i % 2) as usize, i, &[0.0], i as f64);
+            assert_eq!(out.unwrap().ids, vec![i]);
+        }
+        assert_eq!(b.pending(), 0);
+    }
+
     #[test]
     fn per_machine_isolation() {
         let mut b = DynamicBatcher::new(3, 1, 2, 1.0);

@@ -111,6 +111,23 @@ mod tests {
         assert_eq!(r.route(&[90.0, 0.3]), 1);
     }
 
+    /// Tie-breaking: a query equidistant from several centroids routes
+    /// to the lowest machine index (strict `<` keeps the first winner) —
+    /// the stability the batcher relies on for replayable streams.
+    #[test]
+    fn route_ties_prefer_lowest_index() {
+        let hyp = SeArd::isotropic(1, 1.0, 1.0, 0.1);
+        let a = Mat::from_vec(1, 1, vec![-1.0]);
+        let b = Mat::from_vec(1, 1, vec![1.0]);
+        let c = Mat::from_vec(1, 1, vec![-1.0]); // duplicate of a
+        let r = Router::from_blocks(&hyp, &[&a, &b, &c]);
+        // 0.0 is exactly between machines 0 and 1; -1.0 ties 0 and 2
+        assert_eq!(r.route(&[0.0]), 0);
+        assert_eq!(r.route(&[-1.0]), 0);
+        // determinism: repeated calls agree
+        assert_eq!(r.route(&[0.0]), r.route(&[0.0]));
+    }
+
     #[test]
     #[should_panic]
     fn empty_block_rejected() {

@@ -3,6 +3,7 @@
 
 use super::batcher::{Batch, DynamicBatcher};
 use super::router::Router;
+use crate::api::ApiError;
 use crate::cluster::ParallelExecutor;
 use crate::gp::summaries::{GlobalSummary, LocalSummary, SupportContext};
 use crate::kernel::SeArd;
@@ -71,7 +72,16 @@ pub struct ServedModel {
 
 impl ServedModel {
     /// Fit from partitioned data through `backend` (Steps 1–3 of pPIC;
-    /// predictions are then served per request).
+    /// predictions are then served per request). Prefer building through
+    /// [`crate::api::GpBuilder::serve`], which also resolves support
+    /// selection and partitioning.
+    ///
+    /// Rejects empty data ([`ApiError::EmptyData`] — previously an empty
+    /// `y` silently produced a zero-mean model) and malformed partitions
+    /// ([`ApiError::EmptyPartition`] would break routing;
+    /// out-of-range/duplicate/missing rows are
+    /// [`ApiError::InvalidPartition`] instead of a deep `select_rows`
+    /// panic).
     pub fn fit(
         hyp: &SeArd,
         xd: &Mat,
@@ -79,8 +89,20 @@ impl ServedModel {
         xs: &Mat,
         d_blocks: &[Vec<usize>],
         backend: &dyn Backend,
-    ) -> ServedModel {
-        let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    ) -> Result<ServedModel, ApiError> {
+        if y.is_empty() || xd.rows == 0 {
+            return Err(ApiError::EmptyData);
+        }
+        if xd.rows != y.len() {
+            return Err(ApiError::ShapeMismatch {
+                what: "y length vs xd rows",
+                expected: xd.rows,
+                got: y.len(),
+            });
+        }
+        crate::api::spec::validate_partition(d_blocks, xd.rows,
+                                             d_blocks.len())?;
+        let y_mean = y.iter().sum::<f64>() / y.len() as f64;
         let blocks: Vec<(Mat, Vec<f64>, LocalSummary)> = d_blocks
             .iter()
             .map(|blk| {
@@ -95,14 +117,14 @@ impl ServedModel {
         let global = crate::gp::summaries::global_summary(&ctx, &refs);
         let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
         let router = Router::from_blocks(hyp, &xms);
-        ServedModel {
+        Ok(ServedModel {
             hyp: hyp.clone(),
             xs: xs.clone(),
             y_mean,
             global,
             blocks,
             router,
-        }
+        })
     }
 
     pub fn machines(&self) -> usize {
@@ -293,8 +315,37 @@ mod tests {
         let xs = Mat::from_vec(s, d, rng.normals(s * d));
         let blocks = random_partition(n, m, &mut rng);
         let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
-                                     &NativeBackend);
+                                     &NativeBackend).unwrap();
         (model, xd, y)
+    }
+
+    /// Empty data / empty blocks are typed errors, not silent zero-mean
+    /// models (the `y.len().max(1)` footgun).
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        let hyp = SeArd::isotropic(2, 1.0, 1.0, 0.05);
+        let xs = Mat::from_vec(2, 2, vec![0.0, 0.0, 1.0, 1.0]);
+        let empty = ServedModel::fit(&hyp, &Mat::zeros(0, 2), &[], &xs,
+                                     &[vec![]], &NativeBackend);
+        assert_eq!(empty.err(), Some(ApiError::EmptyData));
+
+        let mut rng = Pcg64::seed(3);
+        let xd = Mat::from_vec(4, 2, rng.normals(8));
+        let y = rng.normals(4);
+        let bad_len = ServedModel::fit(&hyp, &xd, &y[..3], &xs,
+                                       &[vec![0, 1, 2, 3]], &NativeBackend);
+        assert!(matches!(bad_len.err(),
+                         Some(ApiError::ShapeMismatch { .. })));
+        let empty_block = ServedModel::fit(&hyp, &xd, &y, &xs,
+                                           &[vec![0, 1, 2, 3], vec![]],
+                                           &NativeBackend);
+        assert_eq!(empty_block.err(),
+                   Some(ApiError::EmptyPartition { machine: 1 }));
+        let oob = ServedModel::fit(&hyp, &xd, &y, &xs,
+                                   &[vec![0, 1], vec![2, 9]],
+                                   &NativeBackend);
+        assert!(matches!(oob.err(),
+                         Some(ApiError::InvalidPartition { .. })));
     }
 
     #[test]
@@ -378,12 +429,12 @@ mod tests {
         let xs = Mat::from_vec(s, d, rng.normals(s * d));
         let blocks = random_partition(n, m, &mut rng);
         let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
-                                     &NativeBackend);
+                                     &NativeBackend).unwrap();
 
         let hyp2 = SeArd::isotropic(d, 1.3, 1.4, 0.02);
         let refit = model.refit(&hyp2, &NativeBackend);
         let fresh = ServedModel::fit(&hyp2, &xd, &y, &xs, &blocks,
-                                     &NativeBackend);
+                                     &NativeBackend).unwrap();
         let q: Vec<f64> = rng.normals(4 * d);
         let (m_r, v_r) = refit.predict_batch(&NativeBackend, 1, &q, 4, 4);
         let (m_f, v_f) = fresh.predict_batch(&NativeBackend, 1, &q, 4, 4);
@@ -430,7 +481,7 @@ mod tests {
         let blocks = vec![(0..n / 2).collect::<Vec<_>>(),
                           (n / 2..n).collect()];
         let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
-                                     &NativeBackend);
+                                     &NativeBackend).unwrap();
         assert_eq!(model.router.route(&[-7.5, 0.0]), 0);
         assert_eq!(model.router.route(&[8.5, 0.0]), 1);
     }

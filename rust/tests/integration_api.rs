@@ -1,0 +1,202 @@
+//! Facade equivalence suite — the api-redesign acceptance oracle.
+//!
+//! Drives all seven batch methods {FGP, PITC, PIC, ICF, pPITC, pPIC,
+//! pICF} through the *same* `Regressor`-trait code path (a boxed
+//! `api::Gp` built by `GpBuilder`) and asserts the facade's predictions
+//! match the pre-existing direct calls — inherent model constructors and
+//! protocol free functions — to ≤ 1e-12, for M ∈ {1, 4, 8}.
+//!
+//! This is what makes the facade safe to build on: it adds a door, not
+//! a new numerical path.
+
+use pgpr::api::{Gp, Method, PredictSpec};
+use pgpr::data::partition::random_partition;
+use pgpr::gp::icf_gp::IcfGp;
+use pgpr::gp::pic::PicGp;
+use pgpr::gp::pitc::PitcGp;
+use pgpr::gp::{FullGp, Prediction};
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::parallel::{picf, ppic, ppitc, ClusterSpec};
+use pgpr::runtime::NativeBackend;
+use pgpr::testkit::assert_all_close;
+use pgpr::util::Pcg64;
+
+const TOL: f64 = 1e-12;
+const N: usize = 40; // divisible by 1, 4, 8
+const U: usize = 16; // divisible by 1, 4, 8
+const D: usize = 2;
+const RANK: usize = 10;
+
+struct Problem {
+    hyp: SeArd,
+    xd: Mat,
+    y: Vec<f64>,
+    xs: Mat,
+    xu: Mat,
+}
+
+fn problem(seed: u64) -> Problem {
+    let mut rng = Pcg64::seed(seed);
+    Problem {
+        hyp: SeArd::isotropic(D, 0.9, 1.1, 0.08),
+        xd: Mat::from_vec(N, D, rng.normals(N * D)),
+        y: rng.normals(N),
+        xs: Mat::from_vec(6, D, rng.normals(6 * D)),
+        xu: Mat::from_vec(U, D, rng.normals(U * D)),
+    }
+}
+
+/// Fit `method` through the facade — one code path for all seven.
+fn facade(p: &Problem, method: Method, m: usize,
+          d_blocks: &[Vec<usize>]) -> Gp {
+    Gp::builder()
+        .method(method)
+        .hyp(p.hyp.clone())
+        .data(p.xd.clone(), p.y.clone())
+        .machines(m)
+        .support(p.xs.clone())
+        .partition(d_blocks.to_vec())
+        .rank(RANK)
+        .fit()
+        .unwrap_or_else(|e| panic!("{} fit failed: {e}", method.name()))
+}
+
+fn check(tag: &str, got: &Prediction, want: &Prediction) {
+    assert_all_close(&got.mean, &want.mean, TOL, TOL);
+    assert_all_close(&got.var, &want.var, TOL, TOL);
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+}
+
+/// THE acceptance test: facade == direct calls, ≤1e-12, M ∈ {1,4,8},
+/// every method through the identical `Regressor` path.
+#[test]
+fn facade_matches_direct_calls_for_all_methods() {
+    let p = problem(2013);
+    let mut rng = Pcg64::seed(7);
+    for m in [1usize, 4, 8] {
+        let d_blocks = random_partition(N, m, &mut rng);
+        let u_blocks = random_partition(U, m, &mut rng);
+        let ps = PredictSpec::new(p.xu.clone()).with_blocks(u_blocks.clone());
+        let spec = ClusterSpec::new(m);
+
+        // the same PredictSpec drives every facade model
+        let preds: Vec<(Method, Prediction)> = Method::ALL
+            .iter()
+            .map(|&method| {
+                let gp = facade(&p, method, m, &d_blocks);
+                assert_eq!(gp.method(), method, "introspection");
+                (method, gp.predict_spec(&ps).unwrap())
+            })
+            .collect();
+        let get = |method: Method| -> &Prediction {
+            &preds.iter().find(|(mm, _)| *mm == method).unwrap().1
+        };
+
+        // --- centralized: inherent constructors are the oracle
+        let want = FullGp::fit(&p.hyp, &p.xd, &p.y).predict(&p.xu);
+        check("FGP", get(Method::Fgp), &want);
+
+        let want = PitcGp::fit(&p.hyp, &p.xd, &p.y, &p.xs, &d_blocks)
+            .predict(&p.xu);
+        check("PITC", get(Method::Pitc), &want);
+
+        let want = PicGp::fit(&p.hyp, &p.xd, &p.y, &p.xs, &d_blocks)
+            .predict(&p.xu, &u_blocks);
+        check("PIC", get(Method::Pic), &want);
+
+        let want = IcfGp::fit(&p.hyp, &p.xd, &p.y, RANK, &d_blocks)
+            .predict(&p.xu);
+        check("ICF", get(Method::Icf), &want);
+
+        // --- distributed: protocol free functions are the oracle
+        let want = ppitc::run(&p.hyp, &p.xd, &p.y, &p.xs, &p.xu, &d_blocks,
+                              &u_blocks, &NativeBackend, &spec);
+        check("pPITC", get(Method::PPitc), &want.prediction);
+
+        let want = ppic::run_with_partition(&p.hyp, &p.xd, &p.y, &p.xs,
+                                            &p.xu, &d_blocks, &u_blocks,
+                                            &NativeBackend, &spec);
+        check("pPIC", get(Method::PPic), &want.prediction);
+
+        let want = picf::run(&p.hyp, &p.xd, &p.y, &p.xu, &d_blocks, RANK,
+                             &NativeBackend, &spec);
+        check("pICF", get(Method::PIcf), &want.prediction);
+
+        // --- Theorems 1–3 inside the facade: the parallel methods equal
+        // their centralized counterparts through the same trait path
+        for parallel in Method::PARALLEL {
+            let central = parallel.centralized_counterpart().unwrap();
+            let (a, b) = (get(parallel), get(central));
+            assert_all_close(&a.mean, &b.mean, 1e-9, 1e-9);
+            assert_all_close(&a.var, &b.var, 1e-9, 1e-9);
+        }
+    }
+}
+
+/// Thread-parallel execution through the facade changes nothing —
+/// the PR-1/PR-2 executor oracle holds behind the new door too.
+#[test]
+fn facade_predictions_executor_independent() {
+    let p = problem(77);
+    let mut rng = Pcg64::seed(3);
+    let m = 4;
+    let d_blocks = random_partition(N, m, &mut rng);
+    let u_blocks = random_partition(U, m, &mut rng);
+    let ps = PredictSpec::new(p.xu.clone()).with_blocks(u_blocks);
+    for method in Method::ALL {
+        let serial = facade(&p, method, m, &d_blocks)
+            .predict_spec(&ps)
+            .unwrap();
+        let threaded = Gp::builder()
+            .method(method)
+            .hyp(p.hyp.clone())
+            .data(p.xd.clone(), p.y.clone())
+            .machines(m)
+            .support(p.xs.clone())
+            .partition(d_blocks.clone())
+            .rank(RANK)
+            .threads(3)
+            .fit()
+            .unwrap()
+            .predict_spec(&ps)
+            .unwrap();
+        assert_eq!(serial.mean, threaded.mean, "{}", method.name());
+        assert_eq!(serial.var, threaded.var, "{}", method.name());
+    }
+}
+
+/// Refit through the trait object == fresh facade fit (per method).
+#[test]
+fn boxed_refit_matches_fresh_fit() {
+    let p = problem(41);
+    let mut rng = Pcg64::seed(9);
+    let m = 4;
+    let d_blocks = random_partition(N, m, &mut rng);
+    let u_blocks = random_partition(U, m, &mut rng);
+    let ps = PredictSpec::new(p.xu.clone()).with_blocks(u_blocks);
+    let hyp2 = SeArd::isotropic(D, 1.3, 0.9, 0.04);
+    for method in Method::ALL {
+        let gp = facade(&p, method, m, &d_blocks);
+        let refit = gp.refit(&hyp2)
+            .unwrap_or_else(|e| panic!("{} refit: {e}", method.name()));
+        assert_eq!(refit.method(), method);
+        let got = refit.predict_spec(&ps).unwrap();
+        let p2 = Problem { hyp: hyp2.clone(), ..clone_problem(&p) };
+        let want = facade(&p2, method, m, &d_blocks)
+            .predict_spec(&ps)
+            .unwrap();
+        assert_eq!(got.mean, want.mean, "{}", method.name());
+        assert_eq!(got.var, want.var, "{}", method.name());
+    }
+}
+
+fn clone_problem(p: &Problem) -> Problem {
+    Problem {
+        hyp: p.hyp.clone(),
+        xd: p.xd.clone(),
+        y: p.y.clone(),
+        xs: p.xs.clone(),
+        xu: p.xu.clone(),
+    }
+}

@@ -152,7 +152,7 @@ fn online_thread_parallel_equals_serial() {
     let u_blocks = random_partition(8, m, &mut rng);
 
     let run = |spec: ClusterSpec| {
-        let mut gp = OnlineGp::new(&hyp, &xs, &NativeBackend, spec);
+        let mut gp = OnlineGp::new(&hyp, &xs, std::sync::Arc::new(NativeBackend), spec);
         for b in &batches {
             gp.absorb(b);
         }

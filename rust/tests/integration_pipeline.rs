@@ -7,6 +7,7 @@ use pgpr::bench_support::experiments::{
 };
 use pgpr::bench_support::workloads::{prepare, Domain};
 use pgpr::runtime::NativeBackend;
+use std::sync::Arc;
 
 fn baseline_rmse(y: &[f64]) -> f64 {
     // predicting the train mean — the floor any model must beat
@@ -22,7 +23,7 @@ fn aimpeak_pipeline_beats_mean_baseline() {
     let cfg = ExperimentConfig { machines: 6, support_size: 48, rank: 48,
                                  seed: 5, threads: 0 };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                              &NativeBackend);
+                              Arc::new(NativeBackend));
     let floor = baseline_rmse(&w.test.y);
     for r in &results {
         if r.method == Method::Icf || r.method == Method::PIcf {
@@ -42,7 +43,7 @@ fn sarcos_pipeline_orderings() {
     let cfg = ExperimentConfig { machines: 4, support_size: 32, rank: 64,
                                  seed: 6, threads: 0 };
     let results = run_methods(&w, &cfg, &speedup_order(&Method::ALL),
-                              &NativeBackend);
+                              Arc::new(NativeBackend));
     let get = |m: Method| results.iter().find(|r| r.method == m).unwrap();
 
     // paper §6.2: pPIC ≥ pPITC in accuracy (local data helps)
@@ -66,8 +67,8 @@ fn speedup_grows_with_data_size() {
     let methods = [Method::Pitc, Method::PPitc];
     let w_small = prepare(Domain::Sarcos, 240, 48, 7, false);
     let w_big = prepare(Domain::Sarcos, 960, 48, 7, false);
-    let r_small = run_methods(&w_small, &cfg, &methods, &NativeBackend);
-    let r_big = run_methods(&w_big, &cfg, &methods, &NativeBackend);
+    let r_small = run_methods(&w_small, &cfg, &methods, Arc::new(NativeBackend));
+    let r_big = run_methods(&w_big, &cfg, &methods, Arc::new(NativeBackend));
     let s_small = r_small.last().unwrap().speedup.unwrap();
     let s_big = r_big.last().unwrap().speedup.unwrap();
     assert!(

@@ -45,7 +45,8 @@ fn serving_pjrt_equals_native_per_request() {
     // fit through native (fitting path is identical math; mixing proves
     // state compatibility across backends)
     let model = ServedModel::fit(&hyp, &xd, &y, &xs, &d_blocks,
-                                 &NativeBackend);
+                                 &NativeBackend)
+        .expect("serving fit");
 
     let requests: Vec<PredictRequest> = (0..30)
         .map(|i| PredictRequest {
@@ -83,7 +84,8 @@ fn served_predictions_match_protocol_math() {
     let y = rng.normals(n);
     let xs = Mat::from_vec(p.support, p.d, rng.normals(p.support * p.d));
     let d_blocks = random_partition(n, m, &mut rng);
-    let model = ServedModel::fit(&hyp, &xd, &y, &xs, &d_blocks, &pjrt);
+    let model = ServedModel::fit(&hyp, &xd, &y, &xs, &d_blocks, &pjrt)
+        .expect("serving fit");
 
     // one query through serve() vs the direct backend call
     let q: Vec<f64> = rng.normals(p.d);
