@@ -1,0 +1,22 @@
+//! Serving-layer sweep → `BENCH_serve.json` (per-batch predict
+//! latency p50/p99 + qps, old solve-based path vs fit-staged operator
+//! fast path, batch sizes × threads × |S|).
+//!
+//!     cargo bench --bench serve_bench                  # full sweep + gate
+//!     PGPR_SERVE_SMOKE=1 cargo bench --bench serve_bench     # CI smoke
+//!     cargo bench --bench serve_bench -- out.json      # custom output
+//!
+//! `PGPR_LENIENT_PERF=1` downgrades the ≥3× perf gate to advisory on
+//! oversubscribed hosts (same convention as the other sweeps).
+
+use pgpr::bench_support::serve_bench::{run, ServeBenchConfig};
+
+fn main() {
+    // skip cargo-bench's --bench flag if present; first real arg = path
+    let out = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let cfg = ServeBenchConfig::from_env();
+    run(&cfg, &out);
+}

@@ -132,6 +132,21 @@ pub trait Regressor: Send + Sync {
         Ok(self.predict_full(spec)?.prediction)
     }
 
+    /// Serve-path prediction through fit-staged predictive operators:
+    /// the query-independent pieces of the method's predictive
+    /// equations (weight vector, variance operator — see
+    /// [`crate::gp::predictor`]) are precomputed once (lazily, on the
+    /// first call) and every batch is then one feature GEMM + one GEMV
+    /// + one fused quadratic-form pass. No cluster simulation, no
+    /// metrics, native math only. Agrees with the seed solve-based
+    /// [`Regressor::predict`] path to ≤1e-12 (pinned per method in
+    /// `tests/integration_serve_fast.rs`); methods without an override
+    /// fall back to it exactly. PIC-family models route test rows by
+    /// nearest local-data centroid, like the default `predict` path.
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        self.predict(&PredictSpec::new(xu.clone()))
+    }
+
     /// Re-fit under new hyperparameters while keeping the original
     /// support set, partition and executor (the serving hot-swap path
     /// for trained hypers).
@@ -188,6 +203,12 @@ impl Gp {
     /// (padding to AOT shapes included).
     pub fn predict_full(&self, spec: &PredictSpec) -> Result<PredictOutput> {
         self.inner.predict_full(spec)
+    }
+
+    /// Serve-path prediction through the staged predictive operators —
+    /// see [`Regressor::predict_fast`].
+    pub fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        self.inner.predict_fast(xu)
     }
 
     /// Re-fit under new hyperparameters (same support set, partition,

@@ -6,34 +6,40 @@
 //! the *exact* support set, partition and executor of the original fit
 //! (the [`crate::server::ServedModel::refit`] contract, generalized).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::error::{ApiError, Result};
 use super::method::Method;
 use super::spec::{validate_test_partition, FitSpec, PredictOutput,
                   PredictSpec};
 use super::Regressor;
-use crate::cluster::{NetworkModel, ParallelExecutor};
+use crate::cluster::{Cluster, NetworkModel, ParallelExecutor};
 use crate::gp::icf_gp::IcfGp;
 use crate::gp::pic::PicGp;
 use crate::gp::pitc::PitcGp;
-use crate::gp::FullGp;
+use crate::gp::predictor::{icf_operator, PredictOperator};
+use crate::gp::{FullGp, Prediction};
 use crate::kernel::SeArd;
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 use crate::parallel::online::OnlineGp;
 use crate::parallel::{picf, ppic, ppitc, ClusterSpec};
 use crate::server::Router;
 
 /// Shape-check a test matrix against the training dimensionality.
-fn check_xu(d: usize, ps: &PredictSpec) -> Result<()> {
-    if ps.xu.cols != d {
+fn check_xu_mat(d: usize, xu: &Mat) -> Result<()> {
+    if xu.cols != d {
         return Err(ApiError::ShapeMismatch {
             what: "xu cols vs input dim",
             expected: d,
-            got: ps.xu.cols,
+            got: xu.cols,
         });
     }
     Ok(())
+}
+
+/// Shape-check a predict spec against the training dimensionality.
+fn check_xu(d: usize, ps: &PredictSpec) -> Result<()> {
+    check_xu_mat(d, &ps.xu)
 }
 
 /// Contiguous even-ish split of `0..u` into `m` blocks (sizes differ by
@@ -61,6 +67,25 @@ fn routed_blocks(router: &Router, xu: &Mat) -> Vec<Vec<usize>> {
         out[m].push(i);
     }
     out
+}
+
+/// The fast-predict recipe for operator sets without a centralized
+/// model to delegate to ([`OnlineSession`]'s streamed state): route
+/// rows to machines, run each machine's staged operator on its slice,
+/// scatter back to input order.
+fn routed_fast_predict(
+    ops: &[PredictOperator],
+    router: &Router,
+    lctx: &LinalgCtx,
+    xu: &Mat,
+) -> Prediction {
+    let u_blocks = routed_blocks(router, xu);
+    let preds: Vec<Prediction> = u_blocks
+        .iter()
+        .enumerate()
+        .map(|(m, blk)| ops[m].predict_ctx(lctx, &xu.select_rows(blk)))
+        .collect();
+    Prediction::scatter(&preds, &u_blocks, xu.rows)
 }
 
 /// Resolve the test partition: explicit blocks are validated; otherwise
@@ -131,6 +156,11 @@ impl Regressor for FgpModel {
         Ok(PredictOutput { prediction: p, metrics: None })
     }
 
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        Ok(self.gp.predict_fast_ctx(&self.exec.linalg_ctx(), xu))
+    }
+
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<FgpModel>(&self.spec, hyp)
     }
@@ -165,6 +195,11 @@ impl Regressor for PitcModel {
         check_xu(self.spec.xd.cols, ps)?;
         let p = self.gp.predict_ctx(&self.exec.linalg_ctx(), &ps.xu);
         Ok(PredictOutput { prediction: p, metrics: None })
+    }
+
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        Ok(self.gp.predict_fast_ctx(&self.exec.linalg_ctx(), xu))
     }
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
@@ -213,6 +248,13 @@ impl Regressor for PicModel {
         Ok(PredictOutput { prediction: p, metrics: None })
     }
 
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        let u_blocks = routed_blocks(&self.router, xu);
+        Ok(self.gp.predict_fast_ctx(&self.exec.linalg_ctx(), xu,
+                                    &u_blocks))
+    }
+
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<PicModel>(&self.spec, hyp)
     }
@@ -253,6 +295,11 @@ impl Regressor for IcfModel {
         Ok(PredictOutput { prediction: p, metrics: None })
     }
 
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        Ok(self.gp.predict_fast_ctx(&self.exec.linalg_ctx(), xu))
+    }
+
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<IcfModel>(&self.spec, hyp)
     }
@@ -271,17 +318,36 @@ impl Regressor for IcfModel {
 /// pPITC behind the facade. `fit` stages the distributed state (the
 /// protocol's Step 1 "data already distributed" assumption); every
 /// `predict` executes Steps 2–4 over the simulated cluster and returns
-/// the run's [`crate::cluster::RunMetrics`].
+/// the run's [`crate::cluster::RunMetrics`]. [`Regressor::predict_fast`]
+/// instead serves from the staged centralized model (built on first
+/// use — the same Steps 1–3 math by Theorem 1, rebuilt by `refit`),
+/// skipping the cluster simulation entirely.
 pub struct PPitcModel {
     spec: FitSpec,
     cluster: ClusterSpec,
+    staged: OnceLock<PitcGp>,
+}
+
+impl PPitcModel {
+    /// The staged serve-path model (first use builds it; a refit
+    /// constructs a fresh facade model, restaging under the new
+    /// hypers). Theorem 1 makes [`PitcGp`] the exact centralized form
+    /// of the protocol, so delegating keeps the staging recipe in one
+    /// place (`gp/pitc.rs`).
+    fn staged_gp(&self) -> &PitcGp {
+        self.staged.get_or_init(|| {
+            PitcGp::fit_ctx(&self.cluster.exec.linalg_ctx(),
+                            &self.spec.hyp, &self.spec.xd, &self.spec.y,
+                            self.spec.support_points(), self.spec.blocks())
+        })
+    }
 }
 
 impl Regressor for PPitcModel {
     fn fit(spec: &FitSpec) -> Result<PPitcModel> {
         let (spec, exec) = prepared(spec)?;
         let cluster = cluster_of(&spec, &exec);
-        Ok(PPitcModel { spec, cluster })
+        Ok(PPitcModel { spec, cluster, staged: OnceLock::new() })
     }
 
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
@@ -295,6 +361,12 @@ impl Regressor for PPitcModel {
             prediction: out.prediction,
             metrics: Some(out.metrics),
         })
+    }
+
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        Ok(self.staged_gp()
+            .predict_fast_ctx(&self.cluster.exec.linalg_ctx(), xu))
     }
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
@@ -312,10 +384,26 @@ impl Regressor for PPitcModel {
 
 /// pPIC behind the facade (fixed Definition-1 partition; the protocol's
 /// clustering scheme stays available through [`crate::parallel::ppic`]).
+/// [`Regressor::predict_fast`] serves from the staged centralized
+/// model's per-machine Definition-5 operators (built on first use —
+/// Theorem 2 makes [`PicGp`] the protocol's exact centralized form —
+/// rebuilt by `refit`), routing test rows by nearest local-data
+/// centroid like the default predict path.
 pub struct PPicModel {
     spec: FitSpec,
     cluster: ClusterSpec,
     router: Router,
+    staged: OnceLock<PicGp>,
+}
+
+impl PPicModel {
+    fn staged_gp(&self) -> &PicGp {
+        self.staged.get_or_init(|| {
+            PicGp::fit_ctx(&self.cluster.exec.linalg_ctx(),
+                           &self.spec.hyp, &self.spec.xd, &self.spec.y,
+                           self.spec.support_points(), self.spec.blocks())
+        })
+    }
 }
 
 impl Regressor for PPicModel {
@@ -326,7 +414,7 @@ impl Regressor for PPicModel {
             spec.blocks().iter().map(|b| spec.xd.select_rows(b)).collect();
         let refs: Vec<&Mat> = xms.iter().collect();
         let router = Router::from_blocks(&spec.hyp, &refs);
-        Ok(PPicModel { spec, cluster, router })
+        Ok(PPicModel { spec, cluster, router, staged: OnceLock::new() })
     }
 
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
@@ -341,6 +429,13 @@ impl Regressor for PPicModel {
             prediction: out.prediction,
             metrics: Some(out.metrics),
         })
+    }
+
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        let u_blocks = routed_blocks(&self.router, xu);
+        Ok(self.staged_gp().predict_fast_ctx(
+            &self.cluster.exec.linalg_ctx(), xu, &u_blocks))
     }
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
@@ -358,16 +453,54 @@ impl Regressor for PPicModel {
 
 /// pICF-based GP behind the facade. Step 5 has every machine scan all
 /// of U, so `u_blocks` carries no information here and is ignored.
+/// [`Regressor::predict_fast`] serves from a staged low-rank operator
+/// built from the *same* row-based parallel ICF factor the protocol
+/// computes (so the two paths share the factor exactly), collapsing
+/// Definitions 7–9 into one GEMV + a rank-R correction.
 pub struct PIcfModel {
     spec: FitSpec,
     cluster: ClusterSpec,
+    staged: OnceLock<PredictOperator>,
+}
+
+impl PIcfModel {
+    fn staged_op(&self) -> &PredictOperator {
+        self.staged.get_or_init(|| {
+            let lctx = self.cluster.exec.linalg_ctx();
+            let rank = self.spec.rank.expect("resolved spec has rank");
+            let blocks = self.spec.blocks();
+            // Step 2 on an inert cluster: identical slabs to the
+            // protocol run, no metrics side effects.
+            let mut cluster =
+                Cluster::new(self.spec.machines, NetworkModel::instant());
+            let slabs = picf::parallel_icf(&self.spec.hyp, &self.spec.xd,
+                                           blocks, rank, &mut cluster);
+            let y = &self.spec.y;
+            let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+            let data: Vec<(Mat, Vec<f64>)> = blocks
+                .iter()
+                .map(|blk| {
+                    let xm = self.spec.xd.select_rows(blk);
+                    let ym: Vec<f64> =
+                        blk.iter().map(|&i| y[i] - y_mean).collect();
+                    (xm, ym)
+                })
+                .collect();
+            let refs: Vec<(&Mat, &[f64], &Mat)> = data
+                .iter()
+                .zip(slabs.iter())
+                .map(|((xm, ym), f_m)| (xm, ym.as_slice(), f_m))
+                .collect();
+            icf_operator(&lctx, &self.spec.hyp, &refs, y_mean)
+        })
+    }
 }
 
 impl Regressor for PIcfModel {
     fn fit(spec: &FitSpec) -> Result<PIcfModel> {
         let (spec, exec) = prepared(spec)?;
         let cluster = cluster_of(&spec, &exec);
-        Ok(PIcfModel { spec, cluster })
+        Ok(PIcfModel { spec, cluster, staged: OnceLock::new() })
     }
 
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
@@ -380,6 +513,12 @@ impl Regressor for PIcfModel {
             prediction: out.prediction,
             metrics: Some(out.metrics),
         })
+    }
+
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        Ok(self.staged_op()
+            .predict_ctx(&self.cluster.exec.linalg_ctx(), xu))
     }
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
@@ -409,7 +548,16 @@ pub struct OnlineSession {
     /// Cached nearest-centroid router over `latest_inputs`; rebuilt only
     /// when an absorb changes the machines' latest blocks.
     router: Router,
+    /// Staged per-machine serve-path operators over the *current*
+    /// summaries; invalidated by every absorb, rebuilt on the next
+    /// [`Regressor::predict_fast`].
+    staged: StagedOnlineOps,
 }
+
+/// The online session's restageable operator cache: absorb drops it,
+/// the next fast predict rebuilds it (shared so the lock is not held
+/// across the prediction itself).
+type StagedOnlineOps = Mutex<Option<Arc<Vec<PredictOperator>>>>;
 
 impl OnlineSession {
     /// Absorb one batch (`blocks[m]` = machine m's new inputs/outputs).
@@ -445,6 +593,8 @@ impl OnlineSession {
             self.latest_inputs[m] = xm.clone();
         }
         self.router = router_over(&self.spec.hyp, &self.latest_inputs);
+        // the summaries are about to change: drop the staged operators
+        *self.staged.lock().unwrap() = None;
         Ok(self.gp.absorb(blocks))
     }
 
@@ -487,7 +637,13 @@ impl Regressor for OnlineSession {
         let latest_inputs: Vec<Mat> =
             blocks.into_iter().map(|(xm, _)| xm).collect();
         let router = router_over(&spec.hyp, &latest_inputs);
-        Ok(OnlineSession { spec, gp, latest_inputs, router })
+        Ok(OnlineSession {
+            spec,
+            gp,
+            latest_inputs,
+            router,
+            staged: Mutex::new(None),
+        })
     }
 
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
@@ -499,6 +655,19 @@ impl Regressor for OnlineSession {
             prediction: out.prediction,
             metrics: Some(out.metrics),
         })
+    }
+
+    fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        check_xu_mat(self.spec.xd.cols, xu)?;
+        let lctx = self.spec.executor().linalg_ctx();
+        let ops = {
+            let mut guard = self.staged.lock().unwrap();
+            if guard.is_none() {
+                *guard = Some(Arc::new(self.gp.machine_operators(&lctx)));
+            }
+            Arc::clone(guard.as_ref().unwrap())
+        };
+        Ok(routed_fast_predict(&ops, &self.router, &lctx, xu))
     }
 
     /// An online session accumulates streamed state that a refit cannot

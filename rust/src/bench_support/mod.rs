@@ -6,6 +6,7 @@ pub mod experiments;
 pub mod figures;
 pub mod harness;
 pub mod linalg_bench;
+pub mod serve_bench;
 pub mod table;
 pub mod train_bench;
 pub mod workloads;

@@ -1,0 +1,353 @@
+//! The `serve_bench` sweep: per-batch predict latency of the serving
+//! layer, old (seed solve-based, backend-driven) path vs the fast
+//! (fit-staged predictive operator) path, across batch sizes × thread
+//! counts × support-set sizes, written to `BENCH_serve.json` — the
+//! serving layer's perf trajectory, matching the `BENCH_linalg.json` /
+//! `BENCH_train.json` conventions.
+//!
+//! Modes (env):
+//! * `PGPR_SERVE_SMOKE=1` — tiny model and a tiny time budget for CI
+//!   smoke runs; perf gates are skipped.
+//! * `PGPR_LENIENT_PERF=1` — keep the perf gate advisory (print but
+//!   don't fail) on oversubscribed/shared hosts.
+//!
+//! Gate (full mode): fast-path per-batch latency ≥ 3× faster than the
+//! old path at the largest |S|, largest batch, 1 thread (`min_s`
+//! ratio — shared hosts can slow samples, never speed them up).
+
+use std::sync::Arc;
+
+use crate::data::partition::random_partition;
+use crate::kernel::SeArd;
+use crate::linalg::{LinalgCtx, Mat};
+use crate::runtime::NativeBackend;
+use crate::server::{ServeScratch, ServedModel};
+use crate::util::json::{obj, Json};
+use crate::util::pool::ThreadPool;
+use crate::util::time::DurationStats;
+use crate::util::{Pcg64, Stopwatch};
+
+/// Sweep configuration.
+pub struct ServeBenchConfig {
+    /// Support-set sizes |S| to fit models at.
+    pub support_sizes: Vec<usize>,
+    /// Per-request batch sizes (the AOT pred_block analogue).
+    pub batch_sizes: Vec<usize>,
+    /// Thread counts for the fast path's linalg ctx (the old path is
+    /// internally serial and is measured once per case at t=1).
+    pub threads: Vec<usize>,
+    /// Simulated machines M and per-machine training block |D|/M.
+    pub machines: usize,
+    pub block: usize,
+    pub d: usize,
+    /// Per-case measurement budget in seconds.
+    pub budget_s: f64,
+    pub smoke: bool,
+    pub lenient: bool,
+}
+
+impl ServeBenchConfig {
+    /// Full sweep unless `PGPR_SERVE_SMOKE=1`; gate advisory when
+    /// `PGPR_LENIENT_PERF=1` (the repo's shared env conventions).
+    pub fn from_env() -> ServeBenchConfig {
+        let flag = crate::bench_support::env_flag;
+        let smoke = flag("PGPR_SERVE_SMOKE");
+        if smoke {
+            ServeBenchConfig {
+                support_sizes: vec![16, 32],
+                batch_sizes: vec![1, 8],
+                threads: vec![1, 2],
+                machines: 4,
+                block: 32,
+                d: 4,
+                budget_s: 0.05,
+                smoke: true,
+                lenient: true,
+            }
+        } else {
+            ServeBenchConfig {
+                support_sizes: vec![256, 512],
+                batch_sizes: vec![1, 64, 256],
+                threads: vec![1, 2, 4],
+                machines: 8,
+                block: 256,
+                d: 8,
+                budget_s: 0.6,
+                smoke: false,
+                lenient: flag("PGPR_LENIENT_PERF"),
+            }
+        }
+    }
+}
+
+/// One measured case: per-batch latency distribution + derived qps.
+struct Case {
+    path: &'static str,
+    s: usize,
+    batch: usize,
+    threads: usize,
+    p50_s: f64,
+    p99_s: f64,
+    min_s: f64,
+    /// rows served per second at the median latency
+    qps: f64,
+}
+
+impl Case {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("path", Json::from(self.path)),
+            ("s", Json::from(self.s)),
+            ("batch", Json::from(self.batch)),
+            ("threads", Json::from(self.threads)),
+            ("p50_s", Json::from(self.p50_s)),
+            ("p99_s", Json::from(self.p99_s)),
+            ("min_s", Json::from(self.min_s)),
+            ("qps", Json::from(self.qps)),
+        ])
+    }
+}
+
+/// Sample a closure's per-call latency: 1 warmup, then up to 256 calls
+/// or `budget_s` of measurement, minimum 3 samples.
+fn sample_latency(budget_s: f64, mut f: impl FnMut()) -> Vec<f64> {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let total = Stopwatch::new();
+    while samples.len() < 256
+        && (samples.len() < 3 || total.elapsed() < budget_s)
+    {
+        let sw = Stopwatch::new();
+        f();
+        samples.push(sw.elapsed());
+    }
+    samples
+}
+
+fn case_from(path: &'static str, s: usize, batch: usize, threads: usize,
+             samples: &[f64]) -> Case {
+    let stats = DurationStats::from_samples(samples).expect("samples");
+    let min_s = stats.min;
+    println!(
+        "{path:<7} s={s:<4} b={batch:<4} t={threads}  p50 {:>10.3e}s  \
+         p99 {:>10.3e}s  min {:>10.3e}s  {:.0} qps",
+        stats.p50, stats.p99, min_s, batch as f64 / stats.p50
+    );
+    Case {
+        path,
+        s,
+        batch,
+        threads,
+        p50_s: stats.p50,
+        p99_s: stats.p99,
+        min_s,
+        qps: batch as f64 / stats.p50,
+    }
+}
+
+/// Run the sweep, write `out_path`, and return the JSON document.
+/// Applies the ≥3× fast-vs-old gate (unless smoke/lenient).
+pub fn run(cfg: &ServeBenchConfig, out_path: &str) -> Json {
+    let mut rng = Pcg64::seed(0x5E54E);
+    let mut cases: Vec<Case> = Vec::new();
+    let d = cfg.d;
+    let n = cfg.machines * cfg.block;
+
+    for &s in &cfg.support_sizes {
+        // one served model per |S|: M machines, |D|/M-point blocks
+        let hyp = SeArd::isotropic(d, 2.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = random_partition(n, cfg.machines, &mut rng);
+        let fit_sw = Stopwatch::new();
+        let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                     &NativeBackend)
+            .expect("serve bench fit");
+        println!("fitted |S|={s} n={n} M={} in {:.2}s", cfg.machines,
+                 fit_sw.elapsed());
+
+        for &b in &cfg.batch_sizes {
+            let q: Vec<f64> = rng.normals(b * d);
+            // old path: per-batch Definition-5 through the backend
+            // (re-factorizes the support/global Cholesky per call) —
+            // internally serial, measured once at t=1.
+            let samples = sample_latency(cfg.budget_s, || {
+                let _ =
+                    model.predict_batch(&NativeBackend, 0, &q, b, b);
+            });
+            cases.push(case_from("oracle", s, b, 1, &samples));
+
+            // fast path across thread counts
+            for &t in &cfg.threads {
+                let lctx = if t <= 1 {
+                    LinalgCtx::serial()
+                } else {
+                    LinalgCtx::pooled(Arc::new(ThreadPool::new(t)))
+                };
+                let mut scratch = ServeScratch::new();
+                let samples = sample_latency(cfg.budget_s, || {
+                    let _ = model.predict_batch_fast(0, &q, b, b, &lctx,
+                                                     &mut scratch);
+                });
+                cases.push(case_from("fast", s, b, t, &samples));
+            }
+        }
+    }
+
+    let doc = build_doc(cfg, &cases);
+    std::fs::write(out_path, doc.to_string_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
+    println!("wrote {out_path}");
+    apply_gates(cfg, &doc);
+    doc
+}
+
+fn min_of(cases: &[Case], path: &str, s: usize, batch: usize,
+          threads: usize) -> Option<f64> {
+    cases
+        .iter()
+        .find(|c| {
+            c.path == path && c.s == s && c.batch == batch
+                && c.threads == threads
+        })
+        .map(|c| c.min_s)
+}
+
+fn build_doc(cfg: &ServeBenchConfig, cases: &[Case]) -> Json {
+    let smax = *cfg.support_sizes.iter().max().unwrap();
+    let bmax = *cfg.batch_sizes.iter().max().unwrap();
+    let tmax = *cfg.threads.iter().max().unwrap();
+    let ratio = |num: Option<f64>, den: Option<f64>| match (num, den) {
+        (Some(a), Some(b)) if b > 0.0 => Json::from(a / b),
+        _ => Json::Null,
+    };
+    let host_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(0);
+    obj(vec![
+        ("schema", Json::from("pgpr-serve-bench/1")),
+        (
+            "provenance",
+            obj(vec![
+                ("harness", Json::from("cargo-bench")),
+                (
+                    "note",
+                    Json::from(
+                        "cargo bench --bench serve_bench; latencies are \
+                         per predict_batch call on one machine's block",
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "config",
+            obj(vec![
+                ("support_sizes", Json::from(cfg.support_sizes.clone())),
+                ("batch_sizes", Json::from(cfg.batch_sizes.clone())),
+                ("threads", Json::from(cfg.threads.clone())),
+                ("machines", Json::from(cfg.machines)),
+                ("block", Json::from(cfg.block)),
+                ("d", Json::from(cfg.d)),
+                ("budget_s", Json::from(cfg.budget_s)),
+                ("smoke", Json::Bool(cfg.smoke)),
+            ]),
+        ),
+        (
+            "host",
+            obj(vec![
+                ("available_parallelism", Json::from(host_threads)),
+                ("cpu", Json::from("unknown")),
+            ]),
+        ),
+        (
+            "derived",
+            obj(vec![
+                ("gate_s", Json::from(smax)),
+                ("gate_batch", Json::from(bmax)),
+                (
+                    // the acceptance gate: old/fast at |S|max, bmax, 1t
+                    "fast_speedup_vs_oracle_1t",
+                    ratio(min_of(cases, "oracle", smax, bmax, 1),
+                          min_of(cases, "fast", smax, bmax, 1)),
+                ),
+                (
+                    "fast_speedup_vs_oracle_b1_1t",
+                    ratio(min_of(cases, "oracle", smax, 1, 1),
+                          min_of(cases, "fast", smax, 1, 1)),
+                ),
+                (
+                    "fast_scaling_1t_to_max_threads",
+                    ratio(min_of(cases, "fast", smax, bmax, 1),
+                          min_of(cases, "fast", smax, bmax, tmax)),
+                ),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(cases.iter().map(Case::json).collect()),
+        ),
+    ])
+}
+
+/// Enforce the serve acceptance gate on a full run: fast path ≥3× the
+/// old path at the largest |S|, largest batch, 1 thread. Advisory in
+/// smoke/lenient modes.
+fn apply_gates(cfg: &ServeBenchConfig, doc: &Json) {
+    if cfg.smoke {
+        println!("smoke mode: perf gates skipped");
+        return;
+    }
+    let speedup = doc
+        .get("derived")
+        .and_then(|d| d.get("fast_speedup_vs_oracle_1t"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let ok = speedup >= 3.0;
+    println!("perf gate: fast-path per-batch speedup {speedup:.2}x \
+              (want >= 3)");
+    if !ok && !cfg.lenient {
+        panic!(
+            "serve_bench perf gate failed (speedup {speedup:.2}x < 3); \
+             set PGPR_LENIENT_PERF=1 on oversubscribed hosts"
+        );
+    }
+    if !ok {
+        println!("PGPR_LENIENT_PERF: gate advisory, continuing");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A micro smoke run end-to-end: valid JSON with the expected
+    /// schema and derived fields, parses back, covers both paths.
+    #[test]
+    fn smoke_sweep_writes_valid_json() {
+        let cfg = ServeBenchConfig {
+            support_sizes: vec![6, 8],
+            batch_sizes: vec![1, 4],
+            threads: vec![1, 2],
+            machines: 2,
+            block: 8,
+            d: 2,
+            budget_s: 0.002,
+            smoke: true,
+            lenient: true,
+        };
+        let path = std::env::temp_dir().join("pgpr_serve_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let doc = run(&cfg, &path);
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&raw).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(),
+                   "pgpr-serve-bench/1");
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        // per (s, batch): 1 oracle + |threads| fast cases
+        assert_eq!(results.len(), 2 * 2 * (1 + 2));
+        assert!(doc.get("derived").unwrap()
+            .get("fast_speedup_vs_oracle_1t").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+}

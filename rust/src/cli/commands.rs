@@ -190,10 +190,17 @@ pub fn serve(args: &Args) -> Result<()> {
     let mut batcher = DynamicBatcher::new(m, spec.d, spec.pred_block,
                                           wait_ms * 1e-3);
     let exec = crate::cluster::ParallelExecutor::threads(threads);
-    let report = model.serve_with(backend.as_ref(), &requests, &mut batcher,
-                                  &exec);
-    println!("serve[{}|{} threads]: {}", backend.name(), exec.workers(),
-             report.summary());
+    // Native serving goes through the fit-staged predictive operators
+    // (serve_fast); a PJRT deployment executes the AOT graphs per
+    // batch through the backend-driven loop.
+    let (path, report) = if backend_name == "native" {
+        ("fast", model.serve_fast(&requests, &mut batcher, &exec))
+    } else {
+        ("aot", model.serve_with(backend.as_ref(), &requests, &mut batcher,
+                                 &exec))
+    };
+    println!("serve[{}|{}|{} threads]: {}", backend.name(), path,
+             exec.workers(), report.summary());
     Ok(())
 }
 

@@ -1,6 +1,9 @@
 //! FGP — the exact full Gaussian process (Section 2), the paper's
 //! baseline: cubic-time fit, all-data predictions via eqs. (1)-(2).
 
+use std::sync::OnceLock;
+
+use super::predictor::{fgp_operator, PredictOperator};
 use super::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::{cho_solve_vec, cholesky_blocked, matvec,
@@ -17,6 +20,11 @@ pub struct FullGp {
     alpha: Vec<f64>,
     /// prior mean (empirical train mean)
     pub y_mean: f64,
+    /// Serve-path operator (`A = Σ_DD⁻¹`), built lazily on first
+    /// [`FullGp::predictor`] call: the O(n³) explicit inverse is only
+    /// worth paying when many batches will amortize it, so one-shot
+    /// sweep predictions never do.
+    op: OnceLock<PredictOperator>,
 }
 
 impl FullGp {
@@ -46,11 +54,34 @@ impl FullGp {
         let sigma = hyp.cov_same_ctx(lctx, xd, true);
         let l = cholesky_blocked(lctx, &sigma)?;
         let alpha = cho_solve_vec(&l, &centered);
-        Ok(FullGp { hyp: hyp.clone(), xd: xd.clone(), l, alpha, y_mean })
+        Ok(FullGp {
+            hyp: hyp.clone(),
+            xd: xd.clone(),
+            l,
+            alpha,
+            y_mean,
+            op: OnceLock::new(),
+        })
     }
 
     pub fn n_train(&self) -> usize {
         self.xd.rows
+    }
+
+    /// The staged predictive operator (built on first call, cached):
+    /// mean = K_UD·α as one GEMV, variance through the fused
+    /// `diag(G·Σ_DD⁻¹·Gᵀ)` kernel instead of a per-batch triangular
+    /// solve. Equal to [`FullGp::predict`] ≤1e-12 (tested).
+    pub fn predictor(&self, lctx: &LinalgCtx) -> &PredictOperator {
+        self.op.get_or_init(|| {
+            fgp_operator(lctx, &self.hyp, &self.xd, &self.l, &self.alpha,
+                         self.y_mean)
+        })
+    }
+
+    /// Serve-path prediction through [`FullGp::predictor`].
+    pub fn predict_fast_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        self.predictor(lctx).predict_ctx(lctx, xu)
     }
 
     /// Predict eqs. (1)-(2) (diagonal covariance), serial ctx.
@@ -170,6 +201,31 @@ mod tests {
         let got = pooled.predict_ctx(&lctx, &xu);
         assert_eq!(want.mean, got.mean);
         assert_eq!(want.var, got.var);
+    }
+
+    /// The staged operator path reproduces the seed solve-based
+    /// predict to ≤1e-12 (the serve-path equivalence contract).
+    #[test]
+    fn fast_path_matches_solve_path() {
+        prop_check("fgp-fast-vs-solve", 8, |g| {
+            let n = g.usize_in(2, 40);
+            let d = g.usize_in(1, 3);
+            let hyp = SeArd {
+                log_ls: g.uniform_vec(d, -0.5, 0.5),
+                log_sf2: g.f64_in(-0.5, 0.5),
+                log_sn2: g.f64_in(-3.0, -1.0),
+            };
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let gp = FullGp::fit(&hyp, &xd, &y);
+            let xu = Mat::from_vec(6, d, g.uniform_vec(6 * d, -3.0, 3.0));
+            let want = gp.predict(&xu);
+            let got = gp.predict_fast_ctx(&LinalgCtx::serial(), &xu);
+            crate::testkit::assert_all_close(&got.mean, &want.mean,
+                                             1e-12, 1e-12);
+            crate::testkit::assert_all_close(&got.var, &want.var,
+                                             1e-12, 1e-12);
+        });
     }
 
     #[test]

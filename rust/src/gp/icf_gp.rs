@@ -5,6 +5,9 @@
 //! the noise-free Gram matrix, then predicts through the Woodbury
 //! identity — the same algebra Definitions 6–9 distribute.
 
+use std::sync::OnceLock;
+
+use super::predictor::{icf_operator, PredictOperator};
 use super::summaries::{
     icf_finalize, icf_global, icf_local_ctx, icf_predict_component_ctx,
     IcfGlobalSummary, IcfLocalSummary,
@@ -45,6 +48,9 @@ pub struct IcfGp {
     /// achieved rank (≤ requested; ICF may converge early)
     pub rank: usize,
     pub y_mean: f64,
+    /// Serve-path operator (low-rank `V = sn⁻²·L_Φ̃⁻¹F` form), built
+    /// lazily on first [`IcfGp::predictor`] call.
+    op: OnceLock<PredictOperator>,
 }
 
 impl IcfGp {
@@ -91,7 +97,27 @@ impl IcfGp {
                 (xm, ym, f_m)
             })
             .collect();
-        IcfGp { hyp: hyp.clone(), blocks, rank: r, y_mean }
+        IcfGp { hyp: hyp.clone(), blocks, rank: r, y_mean,
+                op: OnceLock::new() }
+    }
+
+    /// The staged predictive operator (built on first call, cached):
+    /// Definitions 7–9 collapsed to one GEMV + a rank-R correction.
+    /// Equal to [`IcfGp::predict`] ≤1e-12 (tested).
+    pub fn predictor(&self, lctx: &LinalgCtx) -> &PredictOperator {
+        self.op.get_or_init(|| {
+            let refs: Vec<(&Mat, &[f64], &Mat)> = self
+                .blocks
+                .iter()
+                .map(|(xm, ym, f_m)| (xm, ym.as_slice(), f_m))
+                .collect();
+            icf_operator(lctx, &self.hyp, &refs, self.y_mean)
+        })
+    }
+
+    /// Serve-path prediction through [`IcfGp::predictor`].
+    pub fn predict_fast_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        self.predictor(lctx).predict_ctx(lctx, xu)
     }
 
     /// Steps 3–6 executed on one machine: local summaries → global
@@ -200,6 +226,29 @@ mod tests {
             let want = icf_direct_oracle(&hyp, &xd, &y, &xu, &factor.f);
             assert_all_close(&got.mean, &want.mean, 1e-6, 1e-6);
             assert_all_close(&got.var, &want.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// The staged operator reproduces the seed component pipeline to
+    /// ≤1e-12 (including achieved-rank < requested cases).
+    #[test]
+    fn fast_path_matches_component_pipeline() {
+        prop_check("icf-fast-vs-solve", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let u = g.usize_in(1, 5);
+            let rank = g.usize_in(1, n + 1).min(n);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+            let model = IcfGp::fit(&hyp, &xd, &y, rank, &d_blocks);
+            let want = model.predict(&xu);
+            let got = model.predict_fast_ctx(&LinalgCtx::serial(), &xu);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
         });
     }
 

@@ -12,10 +12,12 @@ pub mod icf_gp;
 pub mod likelihood;
 pub mod pic;
 pub mod pitc;
+pub mod predictor;
 pub mod summaries;
 pub mod support;
 
 pub use fgp::FullGp;
+pub use predictor::{OpScratch, PredictOperator};
 
 /// A predictive Gaussian marginal per test point: mean + variance.
 #[derive(Debug, Clone, PartialEq)]

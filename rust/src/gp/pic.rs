@@ -6,6 +6,9 @@
 //! U_m is predicted with machine m's local data. Numerically identical
 //! to pPIC by Theorem 2 (tested against the literal eqs. (15)-(16)).
 
+use std::sync::OnceLock;
+
+use super::predictor::{ppic_operators, PredictOperator};
 use super::summaries::{
     global_summary, ppic_predict_ctx, try_chol_global_ctx,
     try_local_summary_ctx, GlobalSummary, LocalSummary, SupportContext,
@@ -24,6 +27,10 @@ pub struct PicGp {
     /// per machine: (X_m, centered y_m, local summary)
     blocks: Vec<(Mat, Vec<f64>, LocalSummary)>,
     pub y_mean: f64,
+    /// Per-machine serve-path operators (Definition 5 over stacked
+    /// `[k(u,S); k(u,X_m)]` features), built lazily on first
+    /// [`PicGp::predictors`] call.
+    ops: OnceLock<Vec<PredictOperator>>,
 }
 
 impl PicGp {
@@ -74,11 +81,50 @@ impl PicGp {
         let refs: Vec<_> = blocks.iter().map(|(_, _, l)| l).collect();
         let global = global_summary(&ctx, &refs);
         let l_g = try_chol_global_ctx(lctx, &global)?;
-        Ok(PicGp { hyp: hyp.clone(), ctx, global, l_g, blocks, y_mean })
+        Ok(PicGp {
+            hyp: hyp.clone(),
+            ctx,
+            global,
+            l_g,
+            blocks,
+            y_mean,
+            ops: OnceLock::new(),
+        })
     }
 
     pub fn n_machines(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// The staged per-machine predictive operators (built on first
+    /// call, cached). `predictors()[m]` equals
+    /// [`PicGp::predict_block`] on machine m ≤1e-12 (tested).
+    pub fn predictors(&self, lctx: &LinalgCtx) -> &[PredictOperator] {
+        self.ops.get_or_init(|| {
+            ppic_operators(lctx, &self.hyp, &self.ctx, &self.global,
+                           &self.l_g, &self.blocks, self.y_mean)
+        })
+    }
+
+    /// Serve-path block prediction through [`PicGp::predictors`].
+    pub fn predict_fast_block_ctx(&self, lctx: &LinalgCtx, xu_m: &Mat,
+                                  m: usize) -> Prediction {
+        self.predictors(lctx)[m].predict_ctx(lctx, xu_m)
+    }
+
+    /// Serve-path prediction of a partitioned test set through the
+    /// staged operators (same contract as [`PicGp::predict`]).
+    pub fn predict_fast_ctx(&self, lctx: &LinalgCtx, xu: &Mat,
+                            u_blocks: &[Vec<usize>]) -> Prediction {
+        assert_eq!(u_blocks.len(), self.blocks.len());
+        let preds: Vec<Prediction> = u_blocks
+            .iter()
+            .enumerate()
+            .map(|(m, blk)| {
+                self.predict_fast_block_ctx(lctx, &xu.select_rows(blk), m)
+            })
+            .collect();
+        Prediction::scatter(&preds, u_blocks, xu.rows)
     }
 
     /// Predict test block `u_block` rows of `xu` with machine `m`'s view
@@ -220,6 +266,32 @@ mod tests {
                 pic_direct_oracle(&hyp, &xd, &y, &xs, &xu, &d_blocks, &u_blocks);
             assert_all_close(&got.mean, &want.mean, 1e-6, 1e-6);
             assert_all_close(&got.var, &want.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// The staged per-machine operators reproduce the seed
+    /// solve-based Definition-5 predict to ≤1e-12.
+    #[test]
+    fn fast_path_matches_solve_path() {
+        prop_check("pic-fast-vs-solve", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let u = m * g.usize_in(1, 3);
+            let s = g.usize_in(2, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let d_blocks = random_partition(n, m, g.rng());
+            let u_blocks = random_partition(u, m, g.rng());
+            let model = PicGp::fit(&hyp, &xd, &y, &xs, &d_blocks);
+            let want = model.predict(&xu, &u_blocks);
+            let got = model.predict_fast_ctx(
+                &crate::linalg::LinalgCtx::serial(), &xu, &u_blocks);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
         });
     }
 

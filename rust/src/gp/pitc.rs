@@ -7,6 +7,9 @@
 //! numerically *identical* to pPITC by Theorem 1 (tested against the
 //! literal eqs. (9)-(10) below).
 
+use std::sync::OnceLock;
+
+use super::predictor::{pitc_operator, PredictOperator};
 use super::summaries::{
     global_summary, ppitc_predict_ctx, try_chol_global_ctx,
     try_local_summary_ctx, GlobalSummary, SupportContext,
@@ -23,6 +26,9 @@ pub struct PitcGp {
     global: GlobalSummary,
     l_g: Mat,
     pub y_mean: f64,
+    /// Serve-path operator (`w = Σ̈⁻¹ÿ`, `A = Σ_SS⁻¹ − Σ̈_SS⁻¹`),
+    /// built lazily on first [`PitcGp::predictor`] call.
+    op: OnceLock<PredictOperator>,
 }
 
 impl PitcGp {
@@ -73,7 +79,14 @@ impl PitcGp {
         let refs: Vec<_> = locals.iter().collect();
         let global = global_summary(&ctx, &refs);
         let l_g = try_chol_global_ctx(lctx, &global)?;
-        Ok(PitcGp { hyp: hyp.clone(), ctx, global, l_g, y_mean })
+        Ok(PitcGp {
+            hyp: hyp.clone(),
+            ctx,
+            global,
+            l_g,
+            y_mean,
+            op: OnceLock::new(),
+        })
     }
 
     /// Predict any test set (Definition 4 applied to the whole U).
@@ -87,6 +100,21 @@ impl PitcGp {
                                       &self.global, &self.l_g);
         p.shift_mean(self.y_mean);
         p
+    }
+
+    /// The staged predictive operator (built on first call, cached):
+    /// Definition 4 as one GEMV + one fused quadratic-form pass.
+    /// Equal to [`PitcGp::predict`] ≤1e-12 (tested).
+    pub fn predictor(&self, lctx: &LinalgCtx) -> &PredictOperator {
+        self.op.get_or_init(|| {
+            pitc_operator(lctx, &self.hyp, &self.ctx, &self.global,
+                          &self.l_g, self.y_mean)
+        })
+    }
+
+    /// Serve-path prediction through [`PitcGp::predictor`].
+    pub fn predict_fast_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        self.predictor(lctx).predict_ctx(lctx, xu)
     }
 }
 
@@ -179,6 +207,29 @@ mod tests {
             let want = pitc_direct_oracle(&hyp, &xd, &y, &xs, &xu, &blocks);
             assert_all_close(&got.mean, &want.mean, 1e-6, 1e-6);
             assert_all_close(&got.var, &want.var, 1e-6, 1e-6);
+        });
+    }
+
+    /// The staged operator path reproduces the seed solve-based
+    /// Definition-4 predict to ≤1e-12.
+    #[test]
+    fn fast_path_matches_solve_path() {
+        prop_check("pitc-fast-vs-solve", 8, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let s = g.usize_in(2, 5);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xu = Mat::from_vec(5, d, g.uniform_vec(5 * d, -2.0, 2.0));
+            let y = g.normal_vec(n);
+            let blocks = random_partition(n, m, g.rng());
+            let model = PitcGp::fit(&hyp, &xd, &y, &xs, &blocks);
+            let want = model.predict(&xu);
+            let got = model.predict_fast_ctx(&crate::linalg::LinalgCtx::serial(), &xu);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
         });
     }
 

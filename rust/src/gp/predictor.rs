@@ -1,0 +1,545 @@
+//! The predictive-operator layer: fit-time precomputation of the
+//! query-independent pieces of every method's predictive equations.
+//!
+//! The seed predict paths re-derive per batch what never changes across
+//! batches — triangular solves against the support/global Cholesky
+//! factors, and (through [`crate::runtime::Backend`]) even the O(|S|³)
+//! factorizations themselves. A [`PredictOperator`] collapses all of it
+//! into three staged objects:
+//!
+//! * a [`FeatureMap`] (scaled source rows + norms, so the
+//!   cross-covariance per batch is one GEMM + banded exp),
+//! * a weight vector `w` with `mean = G·w + ȳ` — one GEMV,
+//! * a symmetric variance operator `A` with `σ²ᵢ = c₀ − gᵢᵀ·A·gᵢ`
+//!   evaluated by the fused [`diag_quad_into`] kernel (or, for the
+//!   ICF family, the low-rank form `σ²ᵢ = c₀ − sn⁻²·‖gᵢ‖² +
+//!   ‖V·gᵢ‖²` that preserves the R ≪ |D| cost structure).
+//!
+//! Per method (all numpy-cross-validated against the seed paths to
+//! ≤1e-14 before transcription, and property-tested ≤1e-12 in-tree):
+//!
+//! * **FGP** — `w = Σ_DD⁻¹(y−ȳ)` (the classic α), `A = Σ_DD⁻¹`.
+//! * **PITC/pPITC** — `w = Σ̈_SS⁻¹ÿ_S`, `A = Σ_SS⁻¹ − Σ̈_SS⁻¹`
+//!   (Definition 4's two solve pipelines as one operator).
+//! * **PIC/pPIC/online** — per machine, over the stacked features
+//!   `g = [k(u,S); k(u,X_m)]`: `w = [P·ĝ − Σ_SS⁻¹ẏ_S^m ;
+//!   Σ_mm|S⁻¹y_m − Z·ĝ]` and `A = [[P·Σ_SS⁻¹, −Σ_SS⁻¹Zᵀ],
+//!   [−Z·Σ_SS⁻¹, Σ_mm|S⁻¹]] − C·Σ̈_SS⁻¹·Cᵀ` with
+//!   `P = I + Σ_SS⁻¹Σ̇_SS^m`, `Z = Σ_mm|S⁻¹Σ_mS`, `C = [P; −Z]`,
+//!   `ĝ = Σ̈_SS⁻¹ÿ_S` (Definition 5 with the DESIGN.md variance
+//!   erratum folded in).
+//! * **ICF/pICF** — `w` concatenates `sn⁻²·y_m − sn⁻⁴·F_mᵀÿ` per
+//!   machine and the low-rank term uses `V = sn⁻²·L_Φ̃⁻¹F`
+//!   (Definitions 8–9 collapsed; `Φ̃ = I + sn⁻²·F·Fᵀ`).
+//!
+//! The seed solve-based paths stay untouched as the equivalence
+//! oracles; every operator is pinned to them in tests.
+
+use super::summaries::{GlobalSummary, LocalSummary, SupportContext};
+use super::Prediction;
+use crate::kernel::{FeatureMap, FeatureScratch, SeArd};
+use crate::linalg::{
+    cho_solve_mat_ctx, cho_solve_vec, cholesky_blocked, diag_quad_into,
+    gemm, gemm_into, gemm_nt, gemm_tn, matvec, matvec_t,
+    solve_lower_mat_ctx, LinalgCtx, Mat,
+};
+
+/// The variance form a [`PredictOperator`] evaluates per query row.
+#[derive(Debug, Clone)]
+enum QuadTerm {
+    /// `σ²ᵢ = c₀ − gᵢᵀ·A·gᵢ` with A symmetric p×p (fused kernel).
+    Dense(Mat),
+    /// `σ²ᵢ = c₀ − diag_coef·‖gᵢ‖² + ‖hᵢ‖²` with `H = G·vt`
+    /// (vt: p×R, the transposed low-rank factor V stored for a direct
+    /// GEMM). Keeps ICF's R ≪ |D| cost structure.
+    LowRank { diag_coef: f64, vt: Mat },
+}
+
+/// Reusable buffers for [`PredictOperator::predict_into`]: the feature
+/// matrix, the low-rank intermediate, and the [`FeatureScratch`].
+/// Steady-state batches of stable shape allocate nothing.
+#[derive(Debug, Clone)]
+pub struct OpScratch {
+    feat: FeatureScratch,
+    g: Mat,
+    h: Mat,
+}
+
+impl OpScratch {
+    #[must_use]
+    pub fn new() -> OpScratch {
+        OpScratch {
+            feat: FeatureScratch::new(),
+            g: Mat::zeros(0, 0),
+            h: Mat::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for OpScratch {
+    fn default() -> OpScratch {
+        OpScratch::new()
+    }
+}
+
+/// A staged predictive distribution: everything query-independent,
+/// precomputed once. `predict` is one feature GEMM, one GEMV and one
+/// fused quadratic-form pass — no factorizations, no solves.
+#[derive(Debug, Clone)]
+pub struct PredictOperator {
+    feat: FeatureMap,
+    /// mean weights (p)
+    w: Vec<f64>,
+    /// prior mean added to every predictive mean
+    y_mean: f64,
+    /// variance offset (the prior variance sf² + sn²)
+    c0: f64,
+    quad: QuadTerm,
+}
+
+impl PredictOperator {
+    /// Feature dimension p (|S|, |S|+|B_m| or |D| depending on method).
+    #[must_use]
+    pub fn p(&self) -> usize {
+        self.feat.p()
+    }
+
+    /// Input dimensionality d.
+    #[must_use]
+    pub fn dim(&self) -> usize {
+        self.feat.dim()
+    }
+
+    /// Serve-path prediction into caller-owned outputs: `q` is the
+    /// row-major query batch (rows × d); `mean`/`var` are resized to
+    /// `rows`. Nothing else is allocated once `scratch` is warm.
+    /// Pooled execution (a ctx carrying a pool) is bitwise-identical
+    /// to serial, and each row's outputs are independent of the other
+    /// rows in the batch — padding is transparent.
+    pub fn predict_into(
+        &self,
+        lctx: &LinalgCtx,
+        q: &[f64],
+        rows: usize,
+        scratch: &mut OpScratch,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+    ) {
+        self.feat.fill(lctx, q, rows, &mut scratch.g, &mut scratch.feat);
+        mean.resize(rows, 0.0);
+        var.resize(rows, 0.0);
+        for (i, m) in mean.iter_mut().enumerate() {
+            *m = crate::linalg::dot(scratch.g.row(i), &self.w) + self.y_mean;
+        }
+        match &self.quad {
+            QuadTerm::Dense(a) => {
+                diag_quad_into(lctx, &scratch.g, a, var);
+                for v in var.iter_mut() {
+                    *v = self.c0 - *v;
+                }
+            }
+            QuadTerm::LowRank { diag_coef, vt } => {
+                scratch.h.resize_to(rows, vt.cols);
+                gemm_into(lctx, &scratch.g, vt, &mut scratch.h);
+                for (i, v) in var.iter_mut().enumerate() {
+                    let gi = scratch.g.row(i);
+                    let hi = scratch.h.row(i);
+                    let gg = crate::linalg::dot(gi, gi);
+                    let hh = crate::linalg::dot(hi, hi);
+                    *v = self.c0 - diag_coef * gg + hh;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::predict_into`].
+    #[must_use]
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        let mut scratch = OpScratch::new();
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        self.predict_into(lctx, &xu.data, xu.rows, &mut scratch,
+                          &mut mean, &mut var);
+        Prediction { mean, var }
+    }
+}
+
+/// Explicit SPD inverse from a Cholesky factor (two banded triangular
+/// solves against I), symmetrized to kill the solves' rounding skew.
+fn chol_inverse(lctx: &LinalgCtx, l: &Mat) -> Mat {
+    let mut inv = cho_solve_mat_ctx(lctx, l, &Mat::identity(l.rows));
+    inv.symmetrize();
+    inv
+}
+
+/// FGP operator: `w = α`, `A = Σ_DD⁻¹`. `l` is chol(Σ_DD + jitter).
+pub fn fgp_operator(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    xd: &Mat,
+    l: &Mat,
+    alpha: &[f64],
+    y_mean: f64,
+) -> PredictOperator {
+    PredictOperator {
+        feat: hyp.feature_map(&[xd]),
+        w: alpha.to_vec(),
+        y_mean,
+        c0: hyp.prior_var(),
+        quad: QuadTerm::Dense(chol_inverse(lctx, l)),
+    }
+}
+
+/// PITC/pPITC operator (Definition 4): `w = Σ̈_SS⁻¹ÿ_S`,
+/// `A = Σ_SS⁻¹ − Σ̈_SS⁻¹`.
+pub fn pitc_operator(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    sctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+    y_mean: f64,
+) -> PredictOperator {
+    let w = cho_solve_vec(l_g, &global.y);
+    let mut a = chol_inverse(lctx, &sctx.l_ss);
+    a.sub_assign(&chol_inverse(lctx, l_g));
+    a.symmetrize();
+    PredictOperator {
+        feat: hyp.feature_map(&[&sctx.xs]),
+        w,
+        y_mean,
+        c0: hyp.prior_var(),
+        quad: QuadTerm::Dense(a),
+    }
+}
+
+/// PIC/pPIC machine-m operator (Definition 5 + the DESIGN.md variance
+/// erratum) over the stacked features `[k(u,S); k(u,X_m)]`. `ym` is
+/// machine m's *centered* outputs.
+#[allow(clippy::too_many_arguments)]
+pub fn ppic_operator(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    sctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+    xm: &Mat,
+    ym: &[f64],
+    local: &LocalSummary,
+    y_mean: f64,
+) -> PredictOperator {
+    let s = sctx.size();
+    let b = xm.rows;
+    let p = s + b;
+    let k_ms = hyp.cov_cross_ctx(lctx, xm, &sctx.xs); // (B, S)
+    let z = cho_solve_mat_ctx(lctx, &local.l_m, &k_ms); // Σ_mm|S⁻¹Σ_mS (B,S)
+    let m_inv = chol_inverse(lctx, &local.l_m); // (B, B)
+    let kss_inv = chol_inverse(lctx, &sctx.l_ss); // (S, S)
+    let mut p_mat = cho_solve_mat_ctx(lctx, &sctx.l_ss, &local.s_dot);
+    p_mat.add_diag(1.0); // P = I + Σ_SS⁻¹Σ̇_SS (S, S)
+
+    let gy = cho_solve_vec(l_g, &global.y); // ĝ = Σ̈⁻¹ÿ
+    let ky = cho_solve_vec(&sctx.l_ss, &local.y_dot);
+    let v = cho_solve_vec(&local.l_m, ym);
+    let mut w = matvec(&p_mat, &gy);
+    for (wi, k) in w.iter_mut().zip(ky.iter()) {
+        *wi -= k;
+    }
+    let zgy = matvec(&z, &gy);
+    w.extend(v.iter().zip(zgy.iter()).map(|(a, b)| a - b));
+
+    // A = [[P·Σss⁻¹, −Σss⁻¹Zᵀ], [−ZΣss⁻¹, Σ_mm|S⁻¹]] − C·Σ̈⁻¹·Cᵀ
+    let a_ss = gemm(lctx, &p_mat, &kss_inv); // (S, S)
+    let zk = gemm(lctx, &z, &kss_inv); // ZΣss⁻¹ (B, S)
+    let mut a = Mat::zeros(p, p);
+    for i in 0..s {
+        a.row_mut(i)[..s].copy_from_slice(a_ss.row(i));
+    }
+    for i in 0..b {
+        let zrow = zk.row(i);
+        for j in 0..s {
+            let val = -zrow[j];
+            a[(s + i, j)] = val;
+            a[(j, s + i)] = val;
+        }
+        for j in 0..b {
+            a[(s + i, s + j)] = m_inv[(i, j)];
+        }
+    }
+    // C = [P; −Z] (p × S); subtract C·Σ̈⁻¹·Cᵀ = WᵀW with W = L_g⁻¹Cᵀ.
+    let mut ct = Mat::zeros(s, p); // Cᵀ
+    for i in 0..s {
+        let row = ct.row_mut(i);
+        for j in 0..s {
+            row[j] = p_mat[(j, i)];
+        }
+        for j in 0..b {
+            row[s + j] = -z[(j, i)];
+        }
+    }
+    let w_mat = solve_lower_mat_ctx(lctx, l_g, &ct); // (S, p)
+    a.sub_assign(&gemm_tn(lctx, &w_mat, &w_mat));
+    a.symmetrize();
+
+    PredictOperator {
+        feat: hyp.feature_map(&[&sctx.xs, xm]),
+        w,
+        y_mean,
+        c0: hyp.prior_var(),
+        quad: QuadTerm::Dense(a),
+    }
+}
+
+/// One [`ppic_operator`] per machine block — the shared staging tail
+/// of every PIC-family serve path ([`crate::gp::pic::PicGp`], the pPIC
+/// facade model, [`crate::server::ServedModel`]), so the recipe lives
+/// in exactly one place.
+#[allow(clippy::too_many_arguments)]
+pub fn ppic_operators(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    sctx: &SupportContext,
+    global: &GlobalSummary,
+    l_g: &Mat,
+    blocks: &[(Mat, Vec<f64>, LocalSummary)],
+    y_mean: f64,
+) -> Vec<PredictOperator> {
+    blocks
+        .iter()
+        .map(|(xm, ym, loc)| {
+            ppic_operator(lctx, hyp, sctx, global, l_g, xm, ym, loc, y_mean)
+        })
+        .collect()
+}
+
+/// ICF/pICF operator (Definitions 7–9 collapsed): one weight vector
+/// over all |D| features plus the rank-R low-rank variance factor.
+/// `blocks[m] = (X_m, centered y_m, F_m slab)`; features follow block
+/// order.
+pub fn icf_operator(
+    lctx: &LinalgCtx,
+    hyp: &SeArd,
+    blocks: &[(&Mat, &[f64], &Mat)],
+    y_mean: f64,
+) -> PredictOperator {
+    assert!(!blocks.is_empty());
+    let r = blocks[0].2.rows;
+    let n: usize = blocks.iter().map(|(x, _, _)| x.rows).sum();
+    let inv_sn2 = 1.0 / hyp.sn2();
+
+    let mut sum_y = vec![0.0; r];
+    let mut phi = Mat::identity(r);
+    for (xm, ym, f_m) in blocks {
+        // every slab must share the achieved rank: a mismatched F_m
+        // would silently truncate the Φ̃ accumulation below (zip)
+        assert_eq!(f_m.rows, r, "icf_operator: slab rank mismatch");
+        assert_eq!(f_m.cols, xm.rows, "icf_operator: slab width");
+        let fy = matvec(f_m, ym);
+        for (s, v) in sum_y.iter_mut().zip(fy.iter()) {
+            *s += v;
+        }
+        let ff = gemm_nt(lctx, f_m, f_m);
+        for (p, &q) in phi.data.iter_mut().zip(ff.data.iter()) {
+            *p += inv_sn2 * q;
+        }
+    }
+    let l_phi = cholesky_blocked(lctx, &phi).expect("Φ̃ not SPD");
+    let ydd = cho_solve_vec(&l_phi, &sum_y); // ÿ = Φ̃⁻¹Σẏ
+
+    let mut w = Vec::with_capacity(n);
+    let mut f_full = Mat::zeros(r, n);
+    let mut col = 0;
+    for (_, ym, f_m) in blocks {
+        let ft_y = matvec_t(f_m, &ydd); // F_mᵀÿ (B_m)
+        w.extend(
+            ym.iter()
+                .zip(ft_y.iter())
+                .map(|(y, t)| inv_sn2 * y - inv_sn2 * inv_sn2 * t),
+        );
+        for t in 0..r {
+            f_full.row_mut(t)[col..col + f_m.cols]
+                .copy_from_slice(f_m.row(t));
+        }
+        col += f_m.cols;
+    }
+    let mut v = solve_lower_mat_ctx(lctx, &l_phi, &f_full); // (R, n)
+    v.scale(inv_sn2);
+
+    let xs: Vec<&Mat> = blocks.iter().map(|(x, _, _)| *x).collect();
+    PredictOperator {
+        feat: hyp.feature_map(&xs),
+        w,
+        y_mean,
+        c0: hyp.prior_var(),
+        quad: QuadTerm::LowRank { diag_coef: inv_sn2, vt: v.transpose() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::summaries::{
+        chol_global, global_summary, local_summary, ppic_predict,
+        ppitc_predict,
+    };
+    use crate::testkit::assert_all_close;
+    use crate::testkit::prop::{prop_check, Gen};
+
+    fn rand_hyp(g: &mut Gen, d: usize) -> SeArd {
+        SeArd {
+            log_ls: g.uniform_vec(d, -0.3, 0.5),
+            log_sf2: g.f64_in(-0.5, 0.5),
+            log_sn2: g.f64_in(-3.0, -1.5),
+        }
+    }
+
+    /// pPITC operator ≡ the seed solve-based ppitc_predict ≤1e-12.
+    #[test]
+    fn pitc_operator_matches_ppitc_predict() {
+        prop_check("op-pitc", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let (s, b, u) =
+                (g.usize_in(2, 6), g.usize_in(3, 9), g.usize_in(1, 7));
+            let hyp = rand_hyp(g, d);
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xm = Mat::from_vec(b, d, g.uniform_vec(b * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let ym = g.normal_vec(b);
+            let sctx = SupportContext::new(&hyp, &xs);
+            let loc = local_summary(&hyp, &xm, &ym, &sctx);
+            let glob = global_summary(&sctx, &[&loc]);
+            let l_g = chol_global(&glob);
+            let lctx = LinalgCtx::serial();
+
+            let op = pitc_operator(&lctx, &hyp, &sctx, &glob, &l_g, 0.0);
+            let got = op.predict_ctx(&lctx, &xu);
+            let want = ppitc_predict(&hyp, &xu, &sctx, &glob, &l_g);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        });
+    }
+
+    /// pPIC operator ≡ the seed solve-based ppic_predict ≤1e-12.
+    #[test]
+    fn ppic_operator_matches_ppic_predict() {
+        prop_check("op-ppic", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let (s, b, u) =
+                (g.usize_in(2, 6), g.usize_in(3, 9), g.usize_in(1, 7));
+            let hyp = rand_hyp(g, d);
+            let xs = Mat::from_vec(s, d, g.uniform_vec(s * d, -2.0, 2.0));
+            let xm = Mat::from_vec(b, d, g.uniform_vec(b * d, -2.0, 2.0));
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let ym = g.normal_vec(b);
+            let sctx = SupportContext::new(&hyp, &xs);
+            let loc = local_summary(&hyp, &xm, &ym, &sctx);
+            let glob = global_summary(&sctx, &[&loc]);
+            let l_g = chol_global(&glob);
+            let lctx = LinalgCtx::serial();
+
+            let op = ppic_operator(&lctx, &hyp, &sctx, &glob, &l_g, &xm,
+                                   &ym, &loc, 0.0);
+            assert_eq!(op.p(), s + b);
+            let got = op.predict_ctx(&lctx, &xu);
+            let want = ppic_predict(&hyp, &xu, &xm, &ym, &loc, &sctx,
+                                    &glob, &l_g);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        });
+    }
+
+    /// ICF operator ≡ the Definition 8/9 component pipeline ≤1e-12.
+    #[test]
+    fn icf_operator_matches_component_pipeline() {
+        use crate::gp::summaries::{icf_finalize, icf_global, icf_local,
+                                   IcfLocalSummary};
+        prop_check("op-icf", 10, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 3);
+            let per = g.usize_in(2, 5);
+            let u = g.usize_in(1, 6);
+            let r = g.usize_in(1, 4);
+            let hyp = rand_hyp(g, d);
+            let xu = Mat::from_vec(u, d, g.uniform_vec(u * d, -2.0, 2.0));
+            let mut blocks = Vec::new();
+            for _ in 0..m {
+                let xm =
+                    Mat::from_vec(per, d, g.uniform_vec(per * d, -2.0, 2.0));
+                let ym = g.normal_vec(per);
+                let f_m = Mat::from_vec(r, per, g.normal_vec(r * per));
+                blocks.push((xm, ym, f_m));
+            }
+            // oracle: Definition 6–9 pipeline
+            let locals: Vec<IcfLocalSummary> = blocks
+                .iter()
+                .map(|(xm, ym, f_m)| icf_local(&hyp, xm, ym, &xu, f_m))
+                .collect();
+            let refs: Vec<_> = locals.iter().collect();
+            let glob = icf_global(&hyp, &refs);
+            let comps: Vec<Prediction> = blocks
+                .iter()
+                .zip(locals.iter())
+                .map(|((xm, ym, _), loc)| {
+                    crate::gp::summaries::icf_predict_component(
+                        &hyp, &xu, xm, ym, &loc.s_dot, &glob)
+                })
+                .collect();
+            let crefs: Vec<&Prediction> = comps.iter().collect();
+            let want = icf_finalize(&hyp, u, &crefs);
+
+            let lctx = LinalgCtx::serial();
+            let brefs: Vec<(&Mat, &[f64], &Mat)> = blocks
+                .iter()
+                .map(|(x, y, f)| (x, y.as_slice(), f))
+                .collect();
+            let op = icf_operator(&lctx, &hyp, &brefs, 0.0);
+            let got = op.predict_ctx(&lctx, &xu);
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        });
+    }
+
+    /// Operator predictions are bitwise pooled ≡ serial (build and
+    /// predict), and predict_into reuses scratch without drift.
+    #[test]
+    fn operator_pooled_bitwise_and_scratch_reuse() {
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        let mut rng = crate::util::Pcg64::seed(41);
+        let d = 2;
+        let (s, b) = (5, 12);
+        let hyp = SeArd::isotropic(d, 0.8, 1.1, 0.07);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xm = Mat::from_vec(b, d, rng.normals(b * d));
+        let ym = rng.normals(b);
+        let sctx = SupportContext::new(&hyp, &xs);
+        let loc = local_summary(&hyp, &xm, &ym, &sctx);
+        let glob = global_summary(&sctx, &[&loc]);
+        let l_g = chol_global(&glob);
+
+        let serial = LinalgCtx::serial();
+        let pooled = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+        let op_s = ppic_operator(&serial, &hyp, &sctx, &glob, &l_g, &xm,
+                                 &ym, &loc, 0.5);
+        let op_p = ppic_operator(&pooled, &hyp, &sctx, &glob, &l_g, &xm,
+                                 &ym, &loc, 0.5);
+        let xu = Mat::from_vec(9, d, rng.normals(9 * d));
+        let want = op_s.predict_ctx(&serial, &xu);
+        let got = op_p.predict_ctx(&pooled, &xu);
+        assert_eq!(want.mean, got.mean);
+        assert_eq!(want.var, got.var);
+
+        // scratch reuse across shapes: identical to fresh buffers
+        let mut scratch = OpScratch::new();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        for rows in [4usize, 1, 9, 4] {
+            let q = rng.normals(rows * d);
+            op_s.predict_into(&serial, &q, rows, &mut scratch, &mut mean,
+                              &mut var);
+            let fresh =
+                op_s.predict_ctx(&serial, &Mat::from_vec(rows, d, q));
+            assert_eq!(mean, fresh.mean, "rows={rows}");
+            assert_eq!(var, fresh.var, "rows={rows}");
+        }
+    }
+}

@@ -8,10 +8,135 @@
 //! `JITTER_SCALE · sf2 · I` — identical constants on both language sides
 //! so native and PJRT paths agree to float precision.
 
-use crate::linalg::{LinalgCtx, Mat};
+use crate::linalg::{gemm_into, LinalgCtx, Mat};
 
 /// Relative jitter applied before factorization (== python JITTER_SCALE).
 pub const JITTER_SCALE: f64 = 1e-8;
+
+/// Precompiled cross-covariance map against a *fixed* set of source
+/// rows — the query-independent half of `k(X_q, sources)` hoisted out
+/// of the per-batch path.
+///
+/// [`SeArd::gram_ctx`] pays the 1/ls row scaling and ‖x‖² norms of
+/// *both* sides on every call; a `FeatureMap` bakes the source side
+/// once (scaled rows stored transposed so the per-batch cross term is
+/// a single [`gemm_into`] with no transpose copy, plus the cached
+/// norms), leaving only the query-side scaling, one GEMM and the
+/// banded exp per batch. [`FeatureMap::fill`] output is
+/// **bitwise-identical** to concatenating [`SeArd::cov_cross_ctx`]
+/// against each source (tested): same scaling products, same 4-wide
+/// k-grouped cross term, same `‖q‖² + ‖s‖² − 2·q·s` expression.
+#[derive(Debug, Clone)]
+pub struct FeatureMap {
+    inv_ls: Vec<f64>,
+    sf2: f64,
+    /// Scaled source rows, transposed: (d × p).
+    xt: Mat,
+    /// Squared norms of the scaled source rows (p).
+    sq: Vec<f64>,
+}
+
+/// Reusable per-call buffers for [`FeatureMap::fill`]. Steady-state
+/// calls with stable batch shapes allocate nothing.
+#[derive(Debug, Clone)]
+pub struct FeatureScratch {
+    qs: Mat,
+    qsq: Vec<f64>,
+}
+
+impl FeatureScratch {
+    #[must_use]
+    pub fn new() -> FeatureScratch {
+        FeatureScratch { qs: Mat::zeros(0, 0), qsq: Vec::new() }
+    }
+}
+
+impl Default for FeatureScratch {
+    fn default() -> FeatureScratch {
+        FeatureScratch::new()
+    }
+}
+
+impl FeatureMap {
+    /// Total feature dimension p = Σ source rows.
+    #[must_use]
+    pub fn p(&self) -> usize {
+        self.xt.cols
+    }
+
+    /// Input dimensionality d.
+    #[must_use]
+    pub fn dim(&self) -> usize {
+        self.inv_ls.len()
+    }
+
+    /// Fill `out` (resized to rows × p) with `k(q, sources)` for the
+    /// row-major queries `q` (rows × d). Banded over query rows on the
+    /// ctx's pool; pooled output is bitwise-identical to serial.
+    pub fn fill(
+        &self,
+        ctx: &LinalgCtx,
+        q: &[f64],
+        rows: usize,
+        out: &mut Mat,
+        scratch: &mut FeatureScratch,
+    ) {
+        let d = self.dim();
+        assert_eq!(q.len(), rows * d, "feature fill: query shape");
+        let p = self.p();
+        scratch.qs.resize_to(rows, d);
+        for r in 0..rows {
+            let src = &q[r * d..(r + 1) * d];
+            let dst = scratch.qs.row_mut(r);
+            for (c, v) in dst.iter_mut().enumerate() {
+                *v = src[c] * self.inv_ls[c];
+            }
+        }
+        scratch.qsq.resize(rows, 0.0);
+        for r in 0..rows {
+            scratch.qsq[r] =
+                scratch.qs.row(r).iter().map(|v| v * v).sum();
+        }
+        // cross term q̃ · x̃ᵀ straight into the output buffer, then the
+        // rank-1 corrections + exp rewrite it in place row-band-parallel.
+        out.resize_to(rows, p);
+        gemm_into(ctx, &scratch.qs, &self.xt, out);
+        if rows == 0 || p == 0 {
+            return;
+        }
+        let sf2 = self.sf2;
+        let ranges = ctx.ranges(rows, 8);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f64] = &mut out.data[..];
+        let qsq = &scratch.qsq;
+        let sq2 = &self.sq;
+        for &(lo, hi) in &ranges {
+            let (band, tail) =
+                std::mem::take(&mut rest).split_at_mut((hi - lo) * p);
+            rest = tail;
+            jobs.push(Box::new(move || {
+                for (r, krow) in band.chunks_mut(p).enumerate() {
+                    let s1v = qsq[lo + r];
+                    for (j, kv) in krow.iter_mut().enumerate() {
+                        let sq = (s1v + sq2[j] - 2.0 * *kv).max(0.0);
+                        *kv = sf2 * (-0.5 * sq).exp();
+                    }
+                }
+            }));
+        }
+        ctx.run_jobs(jobs);
+    }
+
+    /// Allocating convenience wrapper around [`FeatureMap::fill`].
+    #[must_use]
+    pub fn features(&self, ctx: &LinalgCtx, xu: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        let mut scratch = FeatureScratch::default();
+        self.fill(ctx, &xu.data, xu.rows, &mut out, &mut scratch);
+        out
+    }
+}
 
 /// Hyperparameters of the ARD squared-exponential kernel, stored in log
 /// space (the MLE optimizer works on this vector unconstrained).
@@ -118,6 +243,36 @@ impl SeArd {
     /// Diagonal of Σ_XX: sf2 + sn2 per row.
     pub fn cov_same_diag(&self, n: usize) -> Vec<f64> {
         vec![self.prior_var(); n]
+    }
+
+    /// Compile a [`FeatureMap`] over the concatenated rows of
+    /// `sources` (e.g. `[S]` for PITC's `k(u, S)`, `[S, X_m]` for
+    /// pPIC's stacked `[k(u,S) k(u,X_m)]` features): scales and
+    /// transposes the source rows once and caches their norms, so
+    /// every subsequent batch pays only the query-side work.
+    #[must_use]
+    pub fn feature_map(&self, sources: &[&Mat]) -> FeatureMap {
+        let d = self.dim();
+        let inv_ls: Vec<f64> =
+            self.log_ls.iter().map(|l| (-l).exp()).collect();
+        let p: usize = sources.iter().map(|x| x.rows).sum();
+        let mut scaled = Mat::zeros(p, d);
+        let mut row = 0;
+        for x in sources {
+            assert_eq!(x.cols, d, "feature_map source dim");
+            for r in 0..x.rows {
+                let src = x.row(r);
+                let dst = scaled.row_mut(row);
+                for (c, v) in dst.iter_mut().enumerate() {
+                    *v = src[c] * inv_ls[c];
+                }
+                row += 1;
+            }
+        }
+        let sq: Vec<f64> = (0..p)
+            .map(|i| scaled.row(i).iter().map(|v| v * v).sum())
+            .collect();
+        FeatureMap { inv_ls, sf2: self.sf2(), xt: scaled.transpose(), sq }
     }
 
     /// Dense noise-free Gram matrix between row sets (serial ctx). See
@@ -508,6 +663,62 @@ mod tests {
             assert_eq!(k_s, k_p);
             assert_eq!(g_s, g_p);
         });
+    }
+
+    /// FeatureMap::fill over concatenated sources is bitwise-identical
+    /// to the per-source cov_cross_ctx blocks laid side by side — the
+    /// serve path's feature build changes no numbers.
+    #[test]
+    fn feature_map_bitwise_matches_cov_cross() {
+        prop_check("feature-map-bitwise", 10, |g| {
+            let d = g.usize_in(1, 5);
+            let (s, b, u) =
+                (g.usize_in(1, 20), g.usize_in(1, 20), g.usize_in(1, 15));
+            let hyp = rand_hyp(g, d);
+            let xs = rand_x(g, s, d);
+            let xm = rand_x(g, b, d);
+            let xu = rand_x(g, u, d);
+            let fm = hyp.feature_map(&[&xs, &xm]);
+            assert_eq!(fm.p(), s + b);
+            let ctx = LinalgCtx::serial();
+            let got = fm.features(&ctx, &xu);
+            let want_s = hyp.cov_cross_ctx(&ctx, &xu, &xs);
+            let want_m = hyp.cov_cross_ctx(&ctx, &xu, &xm);
+            for i in 0..u {
+                assert_eq!(&got.row(i)[..s], want_s.row(i), "row {i} S");
+                assert_eq!(&got.row(i)[s..], want_m.row(i), "row {i} M");
+            }
+        });
+    }
+
+    /// Reusing one FeatureScratch across differently-shaped batches
+    /// gives the same numbers as fresh buffers (the serve-loop reuse
+    /// contract), and a padded batch's retained rows equal the
+    /// unpadded batch's rows bitwise.
+    #[test]
+    fn feature_scratch_reuse_and_padding_transparent() {
+        let mut rng = crate::util::Pcg64::seed(9);
+        let d = 3;
+        let hyp = SeArd::isotropic(d, 0.9, 1.2, 0.05);
+        let xs = Mat::from_vec(6, d, rng.normals(6 * d));
+        let fm = hyp.feature_map(&[&xs]);
+        let ctx = LinalgCtx::serial();
+        let mut scratch = FeatureScratch::new();
+        let mut out = Mat::zeros(0, 0);
+        for rows in [4usize, 1, 7, 4] {
+            let q = rng.normals(rows * d);
+            fm.fill(&ctx, &q, rows, &mut out, &mut scratch);
+            let fresh = fm.features(&ctx, &Mat::from_vec(rows, d, q.clone()));
+            assert_eq!(out, fresh, "rows={rows}");
+            // pad by repeating the first row: retained rows unchanged
+            let mut padded_q = q.clone();
+            padded_q.extend_from_slice(&q[..d]);
+            let mut padded = Mat::zeros(0, 0);
+            fm.fill(&ctx, &padded_q, rows + 1, &mut padded, &mut scratch);
+            for r in 0..rows {
+                assert_eq!(padded.row(r), out.row(r));
+            }
+        }
     }
 
     #[test]

@@ -426,6 +426,93 @@ pub fn cho_solve_mat_ctx(ctx: &LinalgCtx, l: &Mat, b: &Mat) -> Mat {
     solve_upper_t_mat_ctx(ctx, l, &solve_lower_mat_ctx(ctx, l, b))
 }
 
+/// `C = A · B` written into a caller-owned output (shape-checked,
+/// zeroed first) — the allocation-free sibling of [`gemm`] for hot
+/// loops that reuse one scratch matrix across calls (the serve path's
+/// per-batch feature build). Identical numbers to [`gemm`].
+pub fn gemm_into(ctx: &LinalgCtx, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm_into: C shape");
+    c.data.fill(0.0);
+    gemm_acc::<false>(ctx, a, b, c);
+}
+
+/// k-tile depth for [`diag_quad_ctx`]: rows of A visited per pass,
+/// sized so a tile's upper-triangular slice (≤ `QUAD_KT`·p doubles)
+/// stays L2-resident while every output row streams over it.
+const QUAD_KT: usize = 64;
+
+/// Fused `diag(G · A · Gᵀ)` for **symmetric** A — the serve-path
+/// variance kernel: `out[i] = gᵢᵀ A gᵢ` for each row gᵢ of G (b×p),
+/// without materializing the b×p intermediate `G·A`.
+///
+/// # Scheme
+///
+/// Symmetry halves the flops: `gᵀAg = Σₖ g_k·(A_kk·g_k +
+/// 2·Σ_{l>k} A_kl·g_l)`, so only A's upper triangle is read. The k
+/// loop over A's rows is tiled (`QUAD_KT` = 64 rows per pass) so the
+/// tile's triangle stays cache-resident while every row of G in the
+/// band streams over it — A is read once per *band*, not once per
+/// output row (the naive row-at-a-time loop re-streams all p² of A
+/// from DRAM for every query once p² exceeds the L2). Output rows
+/// fan out over the ctx's pool in disjoint bands, so pooled execution
+/// is bitwise-identical to serial (the [`LinalgCtx`] guarantee); each
+/// row's accumulation order is fixed by (k-tile, k, l) alone.
+///
+/// Cost: p²·b flops (vs 2·p²·b for the two triangular solves it
+/// replaces — and at streaming-dot rate rather than substitution
+/// rate). Requires A symmetric (only the upper triangle is read);
+/// `b = 1` degenerates to a single quadratic form.
+pub fn diag_quad_ctx(ctx: &LinalgCtx, g: &Mat, a: &Mat) -> Vec<f64> {
+    let mut out = vec![0.0; g.rows];
+    diag_quad_into(ctx, g, a, &mut out);
+    out
+}
+
+/// [`diag_quad_ctx`] writing into a caller-owned output slice (the
+/// allocation-free serve-path entry; `out.len()` must equal `g.rows`).
+pub fn diag_quad_into(ctx: &LinalgCtx, g: &Mat, a: &Mat, out: &mut [f64]) {
+    let p = g.cols;
+    assert!(a.is_square(), "diag_quad: A must be square");
+    assert_eq!(a.rows, p, "diag_quad: A is {}x{}, G cols {p}", a.rows, a.cols);
+    assert_eq!(out.len(), g.rows, "diag_quad: out length");
+    let b = g.rows;
+    if b == 0 {
+        return;
+    }
+    out.fill(0.0);
+    if p == 0 {
+        return;
+    }
+    let ranges = ctx.ranges(b, 8);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f64] = out;
+    for &(lo, hi) in &ranges {
+        let (band, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+        rest = tail;
+        jobs.push(Box::new(move || {
+            let mut k0 = 0;
+            while k0 < p {
+                let k1 = (k0 + QUAD_KT).min(p);
+                for (r, acc) in band.iter_mut().enumerate() {
+                    let gi = g.row(lo + r);
+                    let mut s = 0.0;
+                    for k in k0..k1 {
+                        let gk = gi[k];
+                        // upper-triangular row slice A[k, k..p]
+                        let arow = &a.data[k * p + k..(k + 1) * p];
+                        let t = dot(&arow[1..], &gi[k + 1..]);
+                        s += gk * (arow[0] * gk + 2.0 * t);
+                    }
+                    *acc += s;
+                }
+                k0 = k1;
+            }
+        }));
+    }
+    ctx.run_jobs(jobs);
+}
+
 /// Split a row-major buffer of `w`-wide rows into per-column-band row
 /// windows: result[band] holds every row's `[c0..c1)` slice.
 fn split_column_bands<'a>(
@@ -749,6 +836,105 @@ mod tests {
             assert_eq!(solve_upper_t_mat_ctx(&serial, &l, &b),
                        solve_upper_t_mat_ctx(&pooled, &l, &b));
         });
+    }
+
+    /// Naive triple-loop reference: out[i] = Σ_{k,l} g_ik A_kl g_il.
+    fn diag_quad_naive(g: &Mat, a: &Mat) -> Vec<f64> {
+        (0..g.rows)
+            .map(|i| {
+                let gi = g.row(i);
+                let mut s = 0.0;
+                for k in 0..a.rows {
+                    for l in 0..a.cols {
+                        s += gi[k] * a[(k, l)] * gi[l];
+                    }
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn rand_sym(g: &mut Gen, p: usize) -> Mat {
+        let mut a = rand_mat(g, p, p);
+        a.symmetrize();
+        a
+    }
+
+    /// Property test pinning the fused kernel to the naive triple loop,
+    /// over shapes straddling the QUAD_KT tile edge.
+    #[test]
+    fn diag_quad_matches_naive_triple_loop() {
+        prop_check("diag-quad-naive", 12, |g| {
+            let b = g.usize_in(1, 40);
+            let p = g.usize_in(1, 150);
+            let gm = rand_mat(g, b, p);
+            let a = rand_sym(g, p);
+            let got = diag_quad_ctx(&LinalgCtx::serial(), &gm, &a);
+            let want = diag_quad_naive(&gm, &a);
+            for (x, y) in got.iter().zip(want.iter()) {
+                let tol = 1e-11 * y.abs().max(1.0);
+                assert!((x - y).abs() < tol, "b={b} p={p}: {x} vs {y}");
+            }
+        });
+    }
+
+    /// Awkward shapes: the b=1 degenerate, p exactly at / straddling
+    /// the QUAD_KT=64 tile boundary, and p=1.
+    #[test]
+    fn diag_quad_awkward_shapes() {
+        let mut g = crate::util::Pcg64::seed(23);
+        for &(b, p) in &[
+            (1usize, 1usize),
+            (1, 63),
+            (1, 64),
+            (1, 65),
+            (1, 500),
+            (7, 128),
+            (3, 129),
+            (40, 1),
+            (2, 191),
+        ] {
+            let gm = seeded_mat(&mut g, b, p);
+            let mut a = seeded_mat(&mut g, p, p);
+            a.symmetrize();
+            let got = diag_quad_ctx(&LinalgCtx::serial(), &gm, &a);
+            let want = diag_quad_naive(&gm, &a);
+            for (x, y) in got.iter().zip(want.iter()) {
+                assert!((x - y).abs() < 1e-10 * y.abs().max(1.0),
+                        "b={b} p={p}");
+            }
+        }
+    }
+
+    /// Pooled fused diag is bitwise-identical to serial (row bands are
+    /// element-disjoint; per-row accumulation order is band-invariant).
+    #[test]
+    fn diag_quad_pooled_bitwise_matches_serial() {
+        prop_check("diag-quad-pooled", 6, |g| {
+            let b = g.usize_in(1, 60);
+            let p = g.usize_in(1, 120);
+            let gm = rand_mat(g, b, p);
+            let a = rand_sym(g, p);
+            let serial = diag_quad_ctx(&LinalgCtx::serial(), &gm, &a);
+            for workers in [2, 4] {
+                let pooled = diag_quad_ctx(&pooled_ctx(workers), &gm, &a);
+                assert_eq!(serial, pooled, "workers={workers}");
+            }
+        });
+    }
+
+    /// gemm_into reuses a caller buffer and reproduces gemm exactly,
+    /// including when the buffer held stale garbage.
+    #[test]
+    fn gemm_into_matches_gemm_and_clears_stale() {
+        let mut g = crate::util::Pcg64::seed(77);
+        let ctx = LinalgCtx::serial();
+        let a = seeded_mat(&mut g, 13, 29);
+        let b = seeded_mat(&mut g, 29, 17);
+        let want = gemm(&ctx, &a, &b);
+        let mut c = seeded_mat(&mut g, 13, 17); // stale contents
+        gemm_into(&ctx, &a, &b, &mut c);
+        assert_eq!(c, want);
     }
 
     /// A ctx whose pool is "hidden" (call from a worker of the same

@@ -42,8 +42,9 @@ pub mod icf;
 pub mod matmul;
 pub mod mds;
 
-pub use blocked::{cho_solve_mat_ctx, cholesky_blocked, gemm, gemm_nt,
-                  gemm_tn, solve_lower_mat_ctx, solve_upper_t_mat_ctx};
+pub use blocked::{cho_solve_mat_ctx, cholesky_blocked, diag_quad_ctx,
+                  diag_quad_into, gemm, gemm_into, gemm_nt, gemm_tn,
+                  solve_lower_mat_ctx, solve_upper_t_mat_ctx};
 pub use cholesky::{cho_solve_mat, cho_solve_vec, cholesky, cholesky_scalar,
                    solve_lower_mat, solve_lower_vec, solve_upper_t_mat,
                    solve_upper_t_vec};
@@ -110,6 +111,18 @@ impl Mat {
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         let c = self.cols;
         &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape in place without giving back capacity (the scratch-reuse
+    /// primitive of the serve path: steady-state batches never
+    /// reallocate). Grown cells are zero-filled; contents are otherwise
+    /// unspecified — callers overwrite them.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        if self.rows != rows || self.cols != cols {
+            self.data.resize(rows * cols, 0.0);
+            self.rows = rows;
+            self.cols = cols;
+        }
     }
 
     /// Extract a subset of rows (by index) into a new matrix.

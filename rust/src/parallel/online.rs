@@ -14,12 +14,14 @@ use std::sync::Arc;
 
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
+use crate::gp::predictor::{ppic_operator, PredictOperator};
 use crate::gp::summaries::{
-    assimilate, GlobalSummary, LocalSummary, SupportContext,
+    assimilate, chol_global_ctx, GlobalSummary, LocalSummary,
+    SupportContext,
 };
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 use crate::runtime::Backend;
 
 /// Streaming pPITC/pPIC state: summaries persist across batches.
@@ -71,6 +73,13 @@ pub struct OnlineGp {
     /// the fixed prior mean (set from the first batch)
     y_mean: Option<f64>,
     global: Option<GlobalSummary>,
+    /// Support context, built once at the first absorb and reused by
+    /// every later absorb and predict (the staged-factor hoist: the
+    /// unstaged path re-factorized Σ_SS per machine per predict).
+    sctx: Option<SupportContext>,
+    /// chol(Σ̈_SS) of the *current* global summary, refreshed per
+    /// absorb so predictions never re-factorize it.
+    l_g: Option<Mat>,
     /// machine m's latest block (inputs, centered outputs, summary)
     latest: Vec<Option<(Mat, Vec<f64>, LocalSummary)>>,
     /// number of absorbed batches
@@ -90,6 +99,8 @@ impl OnlineGp {
             spec,
             y_mean: None,
             global: None,
+            sctx: None,
+            l_g: None,
             latest: (0..m).map(|_| None).collect(),
             batches: 0,
             absorb_makespan: 0.0,
@@ -124,6 +135,11 @@ impl OnlineGp {
         });
         cluster.reduce_to_master(f64_bytes(s * s + s));
         cluster.compute_on(MASTER, || {
+            let lctx = self.spec.exec.linalg_ctx();
+            if self.sctx.is_none() {
+                self.sctx =
+                    Some(SupportContext::new_ctx(&lctx, &self.hyp, &self.xs));
+            }
             match &mut self.global {
                 Some(g) => {
                     for l in &locals {
@@ -131,13 +147,15 @@ impl OnlineGp {
                     }
                 }
                 None => {
-                    let ctx = SupportContext::new_ctx(
-                        &self.spec.exec.linalg_ctx(), &self.hyp, &self.xs);
                     let refs: Vec<_> = locals.iter().collect();
-                    self.global =
-                        Some(crate::gp::summaries::global_summary(&ctx, &refs));
+                    self.global = Some(crate::gp::summaries::global_summary(
+                        self.sctx.as_ref().unwrap(), &refs));
                 }
             }
+            // refresh chol(Σ̈_SS) once per absorb so every later
+            // predict (and operator staging) reuses it
+            self.l_g = Some(chol_global_ctx(&lctx,
+                                            self.global.as_ref().unwrap()));
         });
         cluster.bcast_from_master(f64_bytes(s * s + s));
 
@@ -153,17 +171,42 @@ impl OnlineGp {
         metrics.makespan
     }
 
+    /// Stage the per-machine serve-path operators from the *current*
+    /// summaries (pPIC flavor: machine m's local term is its latest
+    /// block). Each operator equals [`OnlineGp::predict_ppic`] on that
+    /// machine's rows ≤1e-12; callers must restage after an absorb
+    /// (the facade's `OnlineSession` invalidates automatically).
+    pub fn machine_operators(&self, lctx: &LinalgCtx)
+        -> Vec<PredictOperator>
+    {
+        let global = self.global.as_ref().expect("absorb before predict");
+        let sctx = self.sctx.as_ref().expect("absorb before predict");
+        let l_g = self.l_g.as_ref().expect("absorb before predict");
+        let y_mean = self.y_mean.unwrap();
+        self.latest
+            .iter()
+            .map(|slot| {
+                let (xm, ym, loc) =
+                    slot.as_ref().expect("machine has no data");
+                ppic_operator(lctx, &self.hyp, sctx, global, l_g, xm, ym,
+                              loc, y_mean)
+            })
+            .collect()
+    }
+
     /// pPITC prediction from the current summaries.
     pub fn predict_ppitc(&self, xu: &Mat, u_blocks: &[Vec<usize>])
         -> ProtocolOutput
     {
         let global = self.global.as_ref().expect("absorb before predict");
+        let sctx = self.sctx.as_ref().expect("absorb before predict");
+        let l_g = self.l_g.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
         let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let xu_m = xu.select_rows(&u_blocks[mid]);
-            let mut p = self.backend.ppitc_predict(&self.hyp, &xu_m, &self.xs,
-                                                   global);
+            let mut p = self.backend.ppitc_predict_staged(&self.hyp, &xu_m,
+                                                          sctx, global, l_g);
             p.shift_mean(y_mean);
             p
         });
@@ -181,14 +224,17 @@ impl OnlineGp {
         -> ProtocolOutput
     {
         let global = self.global.as_ref().expect("absorb before predict");
+        let sctx = self.sctx.as_ref().expect("absorb before predict");
+        let l_g = self.l_g.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
         let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let (xm, ym, loc) =
                 self.latest[mid].as_ref().expect("machine has no data");
             let xu_m = xu.select_rows(&u_blocks[mid]);
-            let mut p = self.backend.ppic_predict(&self.hyp, &xu_m, &self.xs,
-                                                  xm, ym, loc, global);
+            let mut p = self.backend.ppic_predict_staged(&self.hyp, &xu_m,
+                                                         sctx, xm, ym, loc,
+                                                         global, l_g);
             p.shift_mean(y_mean);
             p
         });

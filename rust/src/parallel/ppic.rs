@@ -6,7 +6,7 @@
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
 use crate::data::partition::{cluster_partition, random_partition};
-use crate::gp::summaries::{GlobalSummary, SupportContext};
+use crate::gp::summaries::SupportContext;
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
@@ -83,12 +83,18 @@ pub fn run(
     });
     cluster.phase("local_summary");
 
-    // STEP 3: reduce + assimilate + broadcast.
+    // STEP 3: reduce + assimilate + broadcast. The support context and
+    // chol(Σ̈_SS) are staged once — every machine already holds Σ_SS
+    // and the broadcast global summary, so the hoist adds no traffic
+    // (asserted in the metrics tests); it only stops Step 4 from
+    // re-factorizing two |S|×|S| matrices per machine.
     cluster.reduce_to_master(f64_bytes(s * s + s));
-    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+    let (sctx, global, l_g) = cluster.compute_on(MASTER, || {
         let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
-        crate::gp::summaries::global_summary(&ctx, &refs)
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let l_g = crate::gp::summaries::chol_global_ctx(&lctx, &global);
+        (ctx, global, l_g)
     });
     cluster.bcast_from_master(f64_bytes(s * s + s));
     cluster.phase("global_summary");
@@ -99,8 +105,9 @@ pub fn run(
         let xm = xd.select_rows(&d_blocks[mid]);
         let ym: Vec<f64> =
             d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
-        let mut p = backend.ppic_predict(hyp, &xu_m, xs, &xm, &ym,
-                                         &locals[mid], &global);
+        let mut p = backend.ppic_predict_staged(hyp, &xu_m, &sctx, &xm,
+                                                &ym, &locals[mid], &global,
+                                                &l_g);
         p.shift_mean(y_mean);
         p
     });
@@ -143,10 +150,12 @@ pub fn run_with_partition(
     });
     cluster.phase("local_summary");
     cluster.reduce_to_master(f64_bytes(s * s + s));
-    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+    let (sctx, global, l_g) = cluster.compute_on(MASTER, || {
         let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
-        crate::gp::summaries::global_summary(&ctx, &refs)
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let l_g = crate::gp::summaries::chol_global_ctx(&lctx, &global);
+        (ctx, global, l_g)
     });
     cluster.bcast_from_master(f64_bytes(s * s + s));
     cluster.phase("global_summary");
@@ -155,8 +164,9 @@ pub fn run_with_partition(
         let xm = xd.select_rows(&d_blocks[mid]);
         let ym: Vec<f64> =
             d_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
-        let mut p = backend.ppic_predict(hyp, &xu_m, xs, &xm, &ym,
-                                         &locals[mid], &global);
+        let mut p = backend.ppic_predict_staged(hyp, &xu_m, &sctx, &xm,
+                                                &ym, &locals[mid], &global,
+                                                &l_g);
         p.shift_mean(y_mean);
         p
     });
@@ -243,6 +253,33 @@ mod tests {
         // both produce finite predictions over all of U
         assert_eq!(clus_run.prediction.len(), u);
         assert!(clus_run.prediction.mean.iter().all(|v| v.is_finite()));
+    }
+
+    /// The staged support-context hoist must not change the per-block
+    /// traffic accounting: bytes/messages still follow the Table-1
+    /// formula (reduce + bcast of s²+s doubles across m−1 senders,
+    /// plus the collect gather of 2·u/m values).
+    #[test]
+    fn hoist_keeps_traffic_accounting() {
+        let mut rng = crate::util::Pcg64::seed(17);
+        let (n, u, s, m, d) = (16, 8, 3, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+        let d_blocks = random_partition(n, m, &mut rng);
+        let u_blocks = random_partition(u, m, &mut rng);
+        let out = run_with_partition(&hyp, &xd, &y, &xs, &xu, &d_blocks,
+                                     &u_blocks, &NativeBackend,
+                                     &ClusterSpec::new(m));
+        let summary_bytes = 8 * (s * s + s) * (m - 1) * 2;
+        let collect_bytes = 8 * 2 * (u / m) * (m - 1);
+        assert_eq!(out.metrics.bytes_sent, summary_bytes + collect_bytes);
+        let names: Vec<&str> =
+            out.metrics.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["partition", "local_summary",
+                               "global_summary", "predict", "collect"]);
     }
 
     /// Exact structural identity: PIC with M = 1 *is* FGP, whatever the

@@ -9,7 +9,7 @@
 
 use super::{f64_bytes, ClusterSpec, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
-use crate::gp::summaries::{GlobalSummary, SupportContext};
+use crate::gp::summaries::SupportContext;
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
@@ -54,11 +54,17 @@ pub fn run(
     cluster.phase("local_summary");
 
     // STEP 3: reduce local summaries to master, assimilate, broadcast.
+    // The support context and chol(Σ̈_SS) are staged here once: every
+    // machine already holds Σ_SS and the broadcast global summary, so
+    // the hoist adds no traffic — it only stops Step 4 from
+    // re-factorizing two |S|×|S| matrices per machine.
     cluster.reduce_to_master(f64_bytes(s * s + s));
-    let global: GlobalSummary = cluster.compute_on(MASTER, || {
+    let (sctx, global, l_g) = cluster.compute_on(MASTER, || {
         let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
         let refs: Vec<_> = locals.iter().collect();
-        crate::gp::summaries::global_summary(&ctx, &refs)
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let l_g = crate::gp::summaries::chol_global_ctx(&lctx, &global);
+        (ctx, global, l_g)
     });
     cluster.bcast_from_master(f64_bytes(s * s + s));
     cluster.phase("global_summary");
@@ -66,7 +72,8 @@ pub fn run(
     // STEP 4: distributed predictions.
     let preds: Vec<Prediction> = cluster.compute_all(|mid| {
         let xu_m = xu.select_rows(&u_blocks[mid]);
-        let mut p = backend.ppitc_predict(hyp, &xu_m, xs, &global);
+        let mut p = backend.ppitc_predict_staged(hyp, &xu_m, &sctx,
+                                                 &global, &l_g);
         p.shift_mean(y_mean);
         p
     });

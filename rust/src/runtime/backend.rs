@@ -35,6 +35,35 @@ pub trait Backend: Send + Sync {
                     ym: &[f64], local: &LocalSummary, glob: &GlobalSummary)
                     -> Prediction;
 
+    /// [`Backend::ppitc_predict`] with the support context and global
+    /// Cholesky already staged: every machine already holds Σ_SS (it
+    /// computed its local summary from it) and the broadcast global
+    /// summary, so nothing about the hoist changes the protocol's
+    /// traffic — it only stops re-factorizing two |S|×|S| matrices per
+    /// block prediction. The **default delegates to the unstaged
+    /// virtual call** (dropping the staged factors), so backends that
+    /// only override [`Backend::ppitc_predict`] — the PJRT AOT-graph
+    /// path — keep executing their own implementation; backends that
+    /// can exploit the staged factors (native) override this too.
+    fn ppitc_predict_staged(&self, hyp: &SeArd, xu: &Mat,
+                            ctx: &SupportContext, glob: &GlobalSummary,
+                            l_g: &Mat) -> Prediction {
+        let _ = l_g;
+        self.ppitc_predict(hyp, xu, &ctx.xs, glob)
+    }
+
+    /// [`Backend::ppic_predict`] with the support context and global
+    /// Cholesky already staged (same override contract as
+    /// [`Backend::ppitc_predict_staged`]).
+    #[allow(clippy::too_many_arguments)]
+    fn ppic_predict_staged(&self, hyp: &SeArd, xu: &Mat,
+                           ctx: &SupportContext, xm: &Mat, ym: &[f64],
+                           local: &LocalSummary, glob: &GlobalSummary,
+                           l_g: &Mat) -> Prediction {
+        let _ = l_g;
+        self.ppic_predict(hyp, xu, &ctx.xs, xm, ym, local, glob)
+    }
+
     /// Definition 6: ICF local summary from the machine's factor slab.
     fn icf_local(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xu: &Mat,
                  f_m: &Mat) -> IcfLocalSummary;
@@ -78,6 +107,19 @@ impl Backend for NativeBackend {
         let ctx = SupportContext::new(hyp, xs);
         let l_g = summaries::chol_global(glob);
         summaries::ppic_predict(hyp, xu, xm, ym, local, &ctx, glob, &l_g)
+    }
+
+    fn ppitc_predict_staged(&self, hyp: &SeArd, xu: &Mat,
+                            ctx: &SupportContext, glob: &GlobalSummary,
+                            l_g: &Mat) -> Prediction {
+        summaries::ppitc_predict(hyp, xu, ctx, glob, l_g)
+    }
+
+    fn ppic_predict_staged(&self, hyp: &SeArd, xu: &Mat,
+                           ctx: &SupportContext, xm: &Mat, ym: &[f64],
+                           local: &LocalSummary, glob: &GlobalSummary,
+                           l_g: &Mat) -> Prediction {
+        summaries::ppic_predict(hyp, xu, xm, ym, local, ctx, glob, l_g)
     }
 
     fn icf_local(&self, hyp: &SeArd, xm: &Mat, ym: &[f64], xu: &Mat,
@@ -147,6 +189,38 @@ mod tests {
         let p4 = summaries::ppic_predict(&hyp, &xu, &xm, &ym, &loc2, &ctx,
                                          &glob, &l_g);
         assert_all_close(&p3.mean, &p4.mean, 1e-14, 1e-14);
+    }
+
+    /// The staged predict entry points are bitwise-identical to the
+    /// unstaged ones: staging only reuses the support/global Cholesky
+    /// factors the unstaged path would have rebuilt from the same
+    /// inputs.
+    #[test]
+    fn staged_predicts_bitwise_match_unstaged() {
+        let mut rng = Pcg64::seed(29);
+        let d = 2;
+        let (b, s, u) = (7, 4, 6);
+        let hyp = SeArd::isotropic(d, 0.9, 1.2, 0.06);
+        let xm = Mat::from_vec(b, d, rng.normals(b * d));
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let ym = rng.normals(b);
+        let be = NativeBackend;
+        let loc = be.local_summary(&hyp, &xm, &ym, &xs);
+        let ctx = SupportContext::new(&hyp, &xs);
+        let glob = global_summary(&ctx, &[&loc]);
+        let l_g = summaries::chol_global(&glob);
+
+        let p1 = be.ppitc_predict(&hyp, &xu, &xs, &glob);
+        let p2 = be.ppitc_predict_staged(&hyp, &xu, &ctx, &glob, &l_g);
+        assert_eq!(p1.mean, p2.mean);
+        assert_eq!(p1.var, p2.var);
+
+        let q1 = be.ppic_predict(&hyp, &xu, &xs, &xm, &ym, &loc, &glob);
+        let q2 = be.ppic_predict_staged(&hyp, &xu, &ctx, &xm, &ym, &loc,
+                                        &glob, &l_g);
+        assert_eq!(q1.mean, q2.mean);
+        assert_eq!(q1.var, q2.var);
     }
 
     #[test]

@@ -16,12 +16,20 @@ pub struct Batch {
 }
 
 /// Size-or-age batcher with one open batch per machine.
+///
+/// Executed batches can be handed back via [`DynamicBatcher::recycle`]:
+/// their `ids`/`xs` buffers go on a free list that [`DynamicBatcher::push`]
+/// drains before allocating, so a steady-state serve loop reuses the
+/// same handful of buffers forever instead of reallocating two `Vec`s
+/// per flush (the serve hot-loop churn fix).
 #[derive(Debug)]
 pub struct DynamicBatcher {
     max_batch: usize,
     max_wait_s: f64,
     d: usize,
     open: Vec<Option<Batch>>,
+    /// Cleared (ids, xs) buffer pairs from recycled batches.
+    free: Vec<(Vec<u64>, Vec<f64>)>,
 }
 
 impl DynamicBatcher {
@@ -34,6 +42,7 @@ impl DynamicBatcher {
             max_wait_s,
             d,
             open: (0..machines).map(|_| None).collect(),
+            free: Vec::new(),
         }
     }
 
@@ -48,12 +57,16 @@ impl DynamicBatcher {
     {
         assert_eq!(x.len(), self.d, "query dim");
         let slot = &mut self.open[machine];
-        let batch = slot.get_or_insert_with(|| Batch {
-            machine,
-            ids: Vec::with_capacity(self.max_batch),
-            xs: Vec::with_capacity(self.max_batch * self.d),
-            oldest_arrival: now,
-        });
+        let batch = match slot {
+            Some(b) => b,
+            None => {
+                let (ids, xs) = self.free.pop().unwrap_or_else(|| {
+                    (Vec::with_capacity(self.max_batch),
+                     Vec::with_capacity(self.max_batch * self.d))
+                });
+                slot.insert(Batch { machine, ids, xs, oldest_arrival: now })
+            }
+        };
         batch.ids.push(id);
         batch.xs.extend_from_slice(x);
         if batch.ids.len() >= self.max_batch {
@@ -61,6 +74,19 @@ impl DynamicBatcher {
         } else {
             None
         }
+    }
+
+    /// Return an executed batch's buffers to the free list (cleared,
+    /// capacity kept). The list is capped at one spare per machine —
+    /// the most a flush wave can consume before the next recycle.
+    pub fn recycle(&mut self, batch: Batch) {
+        if self.free.len() >= self.open.len() {
+            return;
+        }
+        let Batch { mut ids, mut xs, .. } = batch;
+        ids.clear();
+        xs.clear();
+        self.free.push((ids, xs));
     }
 
     /// Flush batches whose oldest request has waited past the bound.
@@ -174,6 +200,41 @@ mod tests {
         let rest = b.flush_all();
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].machine, 2);
+    }
+
+    /// Recycled buffers are reused by later pushes with identical
+    /// observable behavior: same ids, same xs, fresh oldest_arrival,
+    /// and the reused Vecs keep their capacity (no regrowth for
+    /// batches up to max_batch).
+    #[test]
+    fn recycle_reuses_buffers_without_behavior_change() {
+        let mut b = DynamicBatcher::new(2, 1, 2, 1.0);
+        b.push(0, 1, &[0.1], 0.0);
+        let full = b.push(0, 2, &[0.2], 0.1).unwrap();
+        let cap_ids = full.ids.capacity();
+        let cap_xs = full.xs.capacity();
+        b.recycle(full);
+        // the next batch on ANY machine draws from the free list
+        b.push(1, 3, &[0.3], 5.0);
+        let out = b.flush_all();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].ids, vec![3]);
+        assert_eq!(out[0].xs, vec![0.3]);
+        assert_eq!(out[0].oldest_arrival, 5.0);
+        assert!(out[0].ids.capacity() >= cap_ids.min(2));
+        assert!(out[0].xs.capacity() >= cap_xs.min(2));
+    }
+
+    /// The free list is bounded by the machine count: recycling more
+    /// batches than machines drops the excess.
+    #[test]
+    fn recycle_free_list_bounded() {
+        let mut b = DynamicBatcher::new(2, 1, 1, 1.0);
+        for i in 0..5u64 {
+            let full = b.push((i % 2) as usize, i, &[0.0], 0.0).unwrap();
+            b.recycle(full);
+        }
+        assert!(b.free.len() <= 2);
     }
 
     #[test]

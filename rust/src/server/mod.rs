@@ -21,6 +21,16 @@
 //! to serial execution; reported latencies are not, since each batch's
 //! measured compute time — which sets its requests' completion — now
 //! reflects concurrent execution (including any core contention).
+//!
+//! Native deployments serve through
+//! [`service::ServedModel::serve_fast`]: fit-staged predictive
+//! operators ([`crate::gp::predictor`]) replace the per-batch
+//! triangular solves and support/global re-factorizations with one
+//! feature GEMM + one GEMV + one fused quadratic-form pass, with
+//! per-machine scratch reuse and batcher buffer recycling so the
+//! steady-state loop allocates nothing per request beyond the
+//! responses (see `BENCH_serve.json` for the measured old-vs-fast
+//! per-batch latency sweep).
 
 pub mod batcher;
 pub mod router;
@@ -28,4 +38,5 @@ pub mod service;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use router::Router;
-pub use service::{PredictRequest, PredictResponse, ServeReport, ServedModel};
+pub use service::{PredictRequest, PredictResponse, ServeReport,
+                  ServeScratch, ServedModel};

@@ -1,13 +1,17 @@
 //! The serving loop: a fitted parallel-GP state + router + batcher +
 //! backend, reporting per-request latency and throughput.
 
+use std::sync::Mutex;
+
 use super::batcher::{Batch, DynamicBatcher};
 use super::router::Router;
 use crate::api::ApiError;
 use crate::cluster::ParallelExecutor;
-use crate::gp::summaries::{GlobalSummary, LocalSummary, SupportContext};
+use crate::gp::predictor::{ppic_operators, OpScratch, PredictOperator};
+use crate::gp::summaries::{chol_global, GlobalSummary, LocalSummary,
+                           SupportContext};
 use crate::kernel::SeArd;
-use crate::linalg::Mat;
+use crate::linalg::{LinalgCtx, Mat};
 use crate::runtime::Backend;
 use crate::util::time::{fmt_secs, DurationStats};
 use crate::util::Stopwatch;
@@ -58,8 +62,29 @@ impl ServeReport {
     }
 }
 
+/// Per-machine reusable buffers for [`ServedModel::predict_batch_fast`]:
+/// the padded input, the operator scratch, and the output vectors. A
+/// steady-state serve loop allocates nothing per request beyond the
+/// [`PredictResponse`] entries themselves.
+#[derive(Debug, Clone, Default)]
+pub struct ServeScratch {
+    op: OpScratch,
+    padded: Vec<f64>,
+    mean: Vec<f64>,
+    var: Vec<f64>,
+}
+
+impl ServeScratch {
+    #[must_use]
+    pub fn new() -> ServeScratch {
+        ServeScratch::default()
+    }
+}
+
 /// A fitted pPIC model packaged for serving: support context, global
-/// summary, and each machine's local block + cached summary.
+/// summary, each machine's local block + cached summary, and the
+/// fit-staged per-machine predictive operators behind
+/// [`ServedModel::predict_batch_fast`] / [`ServedModel::serve_fast`].
 pub struct ServedModel {
     pub hyp: SeArd,
     pub xs: Mat,
@@ -68,6 +93,23 @@ pub struct ServedModel {
     /// per machine: (X_m, centered y_m, local summary)
     pub blocks: Vec<(Mat, Vec<f64>, LocalSummary)>,
     pub router: Router,
+    /// Fit-staged Definition-5 operators, one per machine (weight
+    /// vector + fused variance operator over `[k(u,S); k(u,X_m)]`
+    /// features). Rebuilt by [`ServedModel::refit`].
+    pub ops: Vec<PredictOperator>,
+}
+
+/// Stage the per-machine serve operators (fit/refit shared tail).
+fn stage_ops(
+    hyp: &SeArd,
+    ctx: &SupportContext,
+    global: &GlobalSummary,
+    blocks: &[(Mat, Vec<f64>, LocalSummary)],
+    y_mean: f64,
+) -> Vec<PredictOperator> {
+    let l_g = chol_global(global);
+    ppic_operators(&LinalgCtx::serial(), hyp, ctx, global, &l_g, blocks,
+                   y_mean)
 }
 
 impl ServedModel {
@@ -117,6 +159,7 @@ impl ServedModel {
         let global = crate::gp::summaries::global_summary(&ctx, &refs);
         let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
         let router = Router::from_blocks(hyp, &xms);
+        let ops = stage_ops(hyp, &ctx, &global, &blocks, y_mean);
         Ok(ServedModel {
             hyp: hyp.clone(),
             xs: xs.clone(),
@@ -124,6 +167,7 @@ impl ServedModel {
             global,
             blocks,
             router,
+            ops,
         })
     }
 
@@ -152,6 +196,7 @@ impl ServedModel {
         let global = crate::gp::summaries::global_summary(&ctx, &refs);
         let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
         let router = Router::from_blocks(hyp, &xms);
+        let ops = stage_ops(hyp, &ctx, &global, &blocks, self.y_mean);
         ServedModel {
             hyp: hyp.clone(),
             xs: self.xs.clone(),
@@ -159,6 +204,7 @@ impl ServedModel {
             global,
             blocks,
             router,
+            ops,
         }
     }
 
@@ -190,6 +236,97 @@ impl ServedModel {
         p.mean.truncate(rows);
         p.var.truncate(rows);
         (p.mean, p.var)
+    }
+
+    /// Fast-path batch prediction on machine `m` through the
+    /// fit-staged operator: one feature GEMM + one GEMV + one fused
+    /// quadratic-form pass, no factorizations, no solves, and no
+    /// allocation once `scratch` is warm. Same padding contract as
+    /// [`ServedModel::predict_batch`] (repeat the first row to
+    /// `pad_to`; per-row outputs are batch-independent, so the
+    /// retained rows are **bitwise-identical** to an unpadded call —
+    /// tested). Returns slices into `scratch` valid until its next
+    /// use. Agrees with the seed solve-based
+    /// [`ServedModel::predict_batch`] ≤1e-12 (tested).
+    pub fn predict_batch_fast<'s>(
+        &self,
+        m: usize,
+        xs_batch: &[f64],
+        rows: usize,
+        pad_to: usize,
+        lctx: &LinalgCtx,
+        scratch: &'s mut ServeScratch,
+    ) -> (&'s [f64], &'s [f64]) {
+        let d = self.xs.cols;
+        assert_eq!(xs_batch.len(), rows * d);
+        assert!(rows >= 1 && rows <= pad_to);
+        scratch.padded.clear();
+        scratch.padded.extend_from_slice(xs_batch);
+        for _ in rows..pad_to {
+            scratch.padded.extend_from_slice(&xs_batch[..d]);
+        }
+        self.ops[m].predict_into(lctx, &scratch.padded, pad_to,
+                                 &mut scratch.op, &mut scratch.mean,
+                                 &mut scratch.var);
+        (&scratch.mean[..rows], &scratch.var[..rows])
+    }
+
+    /// Serve a time-stamped request stream through the fit-staged
+    /// operators (the fast path of [`ServedModel::serve_with`]; native
+    /// math only — a PJRT deployment keeps using the backend-driven
+    /// `serve_with`). Identical trace-replay methodology and identical
+    /// batching decisions; per-machine scratch buffers and batcher
+    /// buffer recycling make the steady-state loop allocation-free
+    /// beyond the response vector. Predicted means/variances agree
+    /// with [`ServedModel::serve_with`] ≤1e-12 (tested).
+    pub fn serve_fast(
+        &self,
+        requests: &[PredictRequest],
+        batcher: &mut DynamicBatcher,
+        exec: &ParallelExecutor,
+    ) -> ServeReport {
+        let pad_to = batcher.max_batch();
+        let lctx = exec.linalg_ctx();
+        // One scratch per machine: batches ready at the same stream
+        // event target distinct machines, so the per-batch lock below
+        // is uncontended; under a thread-backed exec the nested linalg
+        // ctx degrades to serial automatically.
+        let scratches: Vec<Mutex<ServeScratch>> =
+            (0..self.machines()).map(|_| Mutex::new(ServeScratch::new()))
+                .collect();
+        let execute = |ready: &[Batch], flush_time: f64,
+                       responses: &mut Vec<PredictResponse>| {
+            // results are read back out of the per-machine scratches
+            // below, which is only sound while one event never carries
+            // two batches for the same machine (the batcher's
+            // one-open-batch-per-machine invariant)
+            debug_assert!(
+                (1..ready.len()).all(|k| {
+                    ready[..k].iter().all(|b| b.machine != ready[k].machine)
+                }),
+                "serve_fast: duplicate machine in one flush wave"
+            );
+            let outs = exec.run_timed(ready.len(), |k| {
+                let b = &ready[k];
+                let mut s = scratches[b.machine].lock().unwrap();
+                self.predict_batch_fast(b.machine, &b.xs, b.ids.len(),
+                                        pad_to, &lctx, &mut s);
+            });
+            for (batch, ((), secs)) in ready.iter().zip(outs) {
+                let done = flush_time + secs;
+                let s = scratches[batch.machine].lock().unwrap();
+                for (k, &id) in batch.ids.iter().enumerate() {
+                    let arrival = requests[id as usize].arrival_s;
+                    responses.push(PredictResponse {
+                        id,
+                        mean: s.mean[k],
+                        var: s.var[k],
+                        latency_s: done - arrival,
+                    });
+                }
+            }
+        };
+        run_serve_loop(&self.router, requests, batcher, execute)
     }
 
     /// Serve a time-stamped request stream to completion with serial
@@ -228,28 +365,17 @@ impl ServedModel {
         exec: &ParallelExecutor,
     ) -> ServeReport {
         let pad_to = batcher.max_batch();
-        let mut responses: Vec<PredictResponse> = Vec::with_capacity(requests.len());
-        let mut batches = 0usize;
-        let mut batch_rows = 0usize;
-        let wall = Stopwatch::new();
-
         // Execute every ready batch (concurrently when exec is
         // thread-backed); each batch's own measured compute time sets its
         // requests' completion, exactly as in the serial path.
         let execute = |ready: &[Batch], flush_time: f64,
-                           responses: &mut Vec<PredictResponse>,
-                           batches: &mut usize, batch_rows: &mut usize| {
-            if ready.is_empty() {
-                return;
-            }
+                       responses: &mut Vec<PredictResponse>| {
             let outs = exec.run_timed(ready.len(), |k| {
                 let b = &ready[k];
                 self.predict_batch(backend, b.machine, &b.xs, b.ids.len(),
                                    pad_to)
             });
             for (batch, ((mean, var), secs)) in ready.iter().zip(outs) {
-                *batches += 1;
-                *batch_rows += batch.ids.len();
                 let done = flush_time + secs;
                 for (k, &id) in batch.ids.iter().enumerate() {
                     let arrival = requests[id as usize].arrival_s;
@@ -262,40 +388,73 @@ impl ServedModel {
                 }
             }
         };
+        run_serve_loop(&self.router, requests, batcher, execute)
+    }
+}
 
-        for (i, req) in requests.iter().enumerate() {
-            debug_assert_eq!(req.id as usize, i, "ids must be stream indices");
-            let now = req.arrival_s;
-            // expired batches are flushed at the arrival that triggered
-            // the check — the soonest the loop notices
-            let expired = batcher.flush_expired(now);
-            execute(&expired, now, &mut responses, &mut batches,
-                    &mut batch_rows);
-            let machine = self.router.route(&req.x);
-            if let Some(full) = batcher.push(machine, req.id, &req.x, now) {
-                execute(&[full], now, &mut responses, &mut batches,
-                        &mut batch_rows);
-            }
-        }
-        let end = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
-        let rest = batcher.flush_all();
-        execute(&rest, end, &mut responses, &mut batches, &mut batch_rows);
+/// The trace-replay event loop shared by [`ServedModel::serve_with`]
+/// and [`ServedModel::serve_fast`]: one owner for the batching
+/// decisions (expiry flush at the arrival that notices it, size flush
+/// on the completing push, end-of-stream drain), the batch-buffer
+/// recycling, the latency bookkeeping and the report assembly — so the
+/// two execution paths cannot drift. `execute` runs one stream event's
+/// ready batches (never empty) and appends their responses.
+fn run_serve_loop(
+    router: &Router,
+    requests: &[PredictRequest],
+    batcher: &mut DynamicBatcher,
+    execute: impl Fn(&[Batch], f64, &mut Vec<PredictResponse>),
+) -> ServeReport {
+    let mut responses: Vec<PredictResponse> =
+        Vec::with_capacity(requests.len());
+    let mut batches = 0usize;
+    let mut batch_rows = 0usize;
+    let wall = Stopwatch::new();
 
-        responses.sort_by_key(|r| r.id);
-        let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
-        let wall_s = wall.elapsed();
-        ServeReport {
-            latency: DurationStats::from_samples(&latencies)
-                .unwrap_or(DurationStats {
-                    n: 0, mean: 0.0, min: 0.0, max: 0.0,
-                    p50: 0.0, p95: 0.0, p99: 0.0,
-                }),
-            throughput: responses.len() as f64 / wall_s.max(1e-9),
-            batches,
-            mean_batch_size: batch_rows as f64 / (batches.max(1)) as f64,
-            wall_s,
-            responses,
+    let mut handle = |ready: Vec<Batch>, flush_time: f64,
+                      batcher: &mut DynamicBatcher,
+                      responses: &mut Vec<PredictResponse>| {
+        if ready.is_empty() {
+            return;
         }
+        batches += ready.len();
+        batch_rows += ready.iter().map(|b| b.ids.len()).sum::<usize>();
+        execute(&ready, flush_time, responses);
+        for b in ready {
+            batcher.recycle(b);
+        }
+    };
+
+    for (i, req) in requests.iter().enumerate() {
+        debug_assert_eq!(req.id as usize, i, "ids must be stream indices");
+        let now = req.arrival_s;
+        // expired batches are flushed at the arrival that triggered
+        // the check — the soonest the loop notices
+        let expired = batcher.flush_expired(now);
+        handle(expired, now, batcher, &mut responses);
+        let machine = router.route(&req.x);
+        if let Some(full) = batcher.push(machine, req.id, &req.x, now) {
+            handle(vec![full], now, batcher, &mut responses);
+        }
+    }
+    let end = requests.last().map(|r| r.arrival_s).unwrap_or(0.0);
+    let rest = batcher.flush_all();
+    handle(rest, end, batcher, &mut responses);
+
+    responses.sort_by_key(|r| r.id);
+    let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+    let wall_s = wall.elapsed();
+    ServeReport {
+        latency: DurationStats::from_samples(&latencies)
+            .unwrap_or(DurationStats {
+                n: 0, mean: 0.0, min: 0.0, max: 0.0,
+                p50: 0.0, p95: 0.0, p99: 0.0,
+            }),
+        throughput: responses.len() as f64 / wall_s.max(1e-9),
+        batches,
+        mean_batch_size: batch_rows as f64 / (batches.max(1)) as f64,
+        wall_s,
+        responses,
     }
 }
 
@@ -363,6 +522,98 @@ mod tests {
         direct.shift_mean(model.y_mean);
         crate::testkit::assert_all_close(&mean_pad, &direct.mean, 1e-12, 1e-12);
         crate::testkit::assert_all_close(&var_pad, &direct.var, 1e-12, 1e-12);
+    }
+
+    /// Fast-path batch prediction ≡ the seed solve-based oracle
+    /// ≤1e-12, and the padded fast batch is **bitwise** identical to
+    /// the unpadded fast batch on the retained rows.
+    #[test]
+    fn fast_batch_matches_oracle_and_padding_is_bitwise() {
+        let (model, _, _) = fitted(4, 3);
+        let mut rng = Pcg64::seed(19);
+        let lctx = LinalgCtx::serial();
+        let mut scratch = ServeScratch::new();
+        for m in 0..3 {
+            for rows in [1usize, 3, 5] {
+                let q: Vec<f64> = rng.normals(rows * 2);
+                let (mean_o, var_o) =
+                    model.predict_batch(&NativeBackend, m, &q, rows, 8);
+                let (mean_f, var_f) = model.predict_batch_fast(
+                    m, &q, rows, 8, &lctx, &mut scratch);
+                crate::testkit::assert_all_close(mean_f, &mean_o,
+                                                 1e-12, 1e-12);
+                crate::testkit::assert_all_close(var_f, &var_o,
+                                                 1e-12, 1e-12);
+                // padding transparency, bitwise: pad_to == rows vs 8
+                let mut s2 = ServeScratch::new();
+                let (mean_u, var_u) = model.predict_batch_fast(
+                    m, &q, rows, rows, &lctx, &mut s2);
+                let mut s3 = ServeScratch::new();
+                let (mean_p, var_p) = model.predict_batch_fast(
+                    m, &q, rows, 8, &lctx, &mut s3);
+                assert_eq!(mean_u, mean_p, "m={m} rows={rows}");
+                assert_eq!(var_u, var_p, "m={m} rows={rows}");
+            }
+        }
+    }
+
+    /// serve_fast reproduces the backend-driven serve loop's
+    /// predictions request-by-request (≤1e-12) with identical batching
+    /// decisions, serial and thread-backed.
+    #[test]
+    fn serve_fast_matches_backend_serve() {
+        let (model, _, _) = fitted(5, 3);
+        let mut rng = Pcg64::seed(21);
+        let requests: Vec<PredictRequest> = (0..40)
+            .map(|i| PredictRequest {
+                id: i as u64,
+                x: rng.normals(2),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .collect();
+        let mut b1 = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+        let slow = model.serve(&NativeBackend, &requests, &mut b1);
+        for exec in [ParallelExecutor::serial(),
+                     ParallelExecutor::threads(3)] {
+            let mut b2 = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+            let fast = model.serve_fast(&requests, &mut b2, &exec);
+            assert_eq!(slow.responses.len(), fast.responses.len());
+            assert_eq!(slow.batches, fast.batches);
+            for (a, b) in slow.responses.iter().zip(fast.responses.iter()) {
+                assert_eq!(a.id, b.id);
+                crate::testkit::assert_close(b.mean, a.mean, 1e-12, 1e-12);
+                crate::testkit::assert_close(b.var, a.var, 1e-12, 1e-12);
+            }
+        }
+    }
+
+    /// refit rebuilds the staged operators: the refit model's fast
+    /// path equals a fresh fit's fast path under the new hypers.
+    #[test]
+    fn refit_rebuilds_staged_operators() {
+        let mut rng = Pcg64::seed(33);
+        let (n, d, s, m) = (24, 2, 5, 3);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.05);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = random_partition(n, m, &mut rng);
+        let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                     &NativeBackend).unwrap();
+        let hyp2 = SeArd::isotropic(d, 1.3, 1.4, 0.02);
+        let refit = model.refit(&hyp2, &NativeBackend);
+        let fresh = ServedModel::fit(&hyp2, &xd, &y, &xs, &blocks,
+                                     &NativeBackend).unwrap();
+        let q: Vec<f64> = rng.normals(4 * d);
+        let lctx = LinalgCtx::serial();
+        let mut s1 = ServeScratch::new();
+        let mut s2 = ServeScratch::new();
+        let (m_r, v_r) =
+            refit.predict_batch_fast(1, &q, 4, 4, &lctx, &mut s1);
+        let (m_f, v_f) =
+            fresh.predict_batch_fast(1, &q, 4, 4, &lctx, &mut s2);
+        assert_eq!(m_r, m_f);
+        assert_eq!(v_r, v_f);
     }
 
     #[test]

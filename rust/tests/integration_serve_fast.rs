@@ -1,0 +1,139 @@
+//! Integration: the serve-path fast predictions (fit-staged predictive
+//! operators, `Regressor::predict_fast`) reproduce the seed solve-based
+//! predict paths to ≤1e-12 for ALL 8 `api::Method` variants, driven
+//! boxed through the `Regressor` trait (`Gp`), at M ∈ {1, 4, 8}.
+
+use pgpr::api::{Gp, GpBuilder, Method};
+use pgpr::data::partition::random_partition;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::testkit::assert_all_close;
+use pgpr::util::Pcg64;
+
+const ALL_METHODS: [Method; 8] = [
+    Method::Fgp,
+    Method::Pitc,
+    Method::Pic,
+    Method::Icf,
+    Method::PPitc,
+    Method::PPic,
+    Method::PIcf,
+    Method::Online,
+];
+
+fn builder(n: usize, d: usize, m: usize, seed: u64) -> (GpBuilder, Mat) {
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(d, 0.9, 1.0, 0.08);
+    let xd = Mat::from_vec(n, d, rng.normals(n * d));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(6, d, rng.normals(6 * d));
+    let xu = Mat::from_vec(10, d, rng.normals(10 * d));
+    let d_blocks = random_partition(n, m, &mut rng);
+    let b = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support(xs)
+        .partition(d_blocks)
+        .rank(12)
+        .seed(seed);
+    (b, xu)
+}
+
+/// The headline serve-path contract: fast ≡ seed solve path ≤1e-12,
+/// every method, boxed through `Regressor`, at M ∈ {1, 4, 8}.
+#[test]
+fn fast_path_equals_seed_path_all_methods() {
+    let (n, d) = (24, 2);
+    for m in [1usize, 4, 8] {
+        for method in ALL_METHODS {
+            let (b, xu) = builder(n, d, m, 7 + m as u64);
+            let gp = b.method(method).fit().unwrap_or_else(|e| {
+                panic!("{} fit M={m}: {e}", method.name())
+            });
+            let want = gp.predict(&xu).expect("seed predict");
+            let got = gp.predict_fast(&xu).expect("fast predict");
+            assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+            assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        }
+    }
+}
+
+/// Repeated fast predictions reuse the staged operators without drift:
+/// two calls on the same model are bitwise identical, and a different
+/// batch still matches the seed path.
+#[test]
+fn staged_operators_are_stable_across_calls() {
+    let (b, xu) = builder(24, 2, 4, 31);
+    let gp = b.method(Method::PPic).fit().unwrap();
+    let p1 = gp.predict_fast(&xu).unwrap();
+    let p2 = gp.predict_fast(&xu).unwrap();
+    assert_eq!(p1.mean, p2.mean);
+    assert_eq!(p1.var, p2.var);
+    let mut rng = Pcg64::seed(99);
+    let xu2 = Mat::from_vec(5, 2, rng.normals(10));
+    let want = gp.predict(&xu2).unwrap();
+    let got = gp.predict_fast(&xu2).unwrap();
+    assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+    assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+}
+
+/// `refit` rebuilds the staged operators under the new hypers: the
+/// refit model's fast path equals its own seed path (and differs from
+/// the original model's predictions).
+#[test]
+fn refit_restages_operators() {
+    for method in [Method::PPitc, Method::PPic, Method::Pitc] {
+        let (b, xu) = builder(24, 2, 4, 13);
+        let gp = b.method(method).fit().unwrap();
+        let before = gp.predict_fast(&xu).unwrap();
+        let hyp2 = SeArd::isotropic(2, 1.4, 1.3, 0.04);
+        let refit = gp.refit(&hyp2).unwrap();
+        let want = refit.predict(&xu).unwrap();
+        let got = refit.predict_fast(&xu).unwrap();
+        assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+        assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        assert!(got.mean != before.mean, "{}: hypers took effect",
+                method.name());
+    }
+}
+
+/// An online session invalidates its staged operators on absorb: the
+/// fast path tracks the stream, matching the seed path after every
+/// batch.
+#[test]
+fn online_absorb_invalidates_staged_operators() {
+    let mut rng = Pcg64::seed(57);
+    let (n, d, m) = (16, 2, 2);
+    let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+    let xd = Mat::from_vec(n, d, rng.normals(n * d));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(4, d, rng.normals(4 * d));
+    let xu = Mat::from_vec(6, d, rng.normals(6 * d));
+    let d_blocks = random_partition(n, m, &mut rng);
+    let mut sess = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support(xs)
+        .partition(d_blocks)
+        .online()
+        .unwrap();
+
+    use pgpr::api::{PredictSpec, Regressor};
+    let check = |sess: &pgpr::api::OnlineSession, xu: &Mat| {
+        let want = sess.predict(&PredictSpec::new(xu.clone())).unwrap();
+        let got = sess.predict_fast(xu).unwrap();
+        assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
+        assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
+        got
+    };
+    let before = check(&sess, &xu);
+    let batch: Vec<(Mat, Vec<f64>)> = (0..m)
+        .map(|_| (Mat::from_vec(3, d, rng.normals(3 * d)), rng.normals(3)))
+        .collect();
+    sess.absorb(&batch).unwrap();
+    let after = check(&sess, &xu);
+    assert!(after.mean != before.mean,
+            "absorb must change the staged predictions");
+}
