@@ -8,13 +8,13 @@ use super::method::Method;
 use super::models::OnlineSession;
 use super::spec::{FitSpec, PartitionSpec, SupportSpec};
 use super::{Gp, Regressor as _};
-use crate::cluster::ParallelExecutor;
+use crate::cluster::{FaultPlan, ParallelExecutor};
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
 use crate::parallel::ClusterSpec;
 use crate::runtime::{Backend, NativeBackend};
 use crate::server::ServedModel;
-use crate::train::{train_pitc, AdamConfig, TrainResult};
+use crate::train::{train_pitc, try_train_pitc, AdamConfig, TrainResult};
 
 /// Fluent recipe for a GP model: pick a [`Method`] at runtime, hand over
 /// data, and let the builder own partitioning, support selection and
@@ -82,6 +82,7 @@ pub struct GpBuilder {
     seed: u64,
     backend: Arc<dyn Backend>,
     exec: Option<ParallelExecutor>,
+    faults: Option<FaultPlan>,
 }
 
 impl Default for GpBuilder {
@@ -99,6 +100,7 @@ impl Default for GpBuilder {
             seed: 1,
             backend: Arc::new(NativeBackend),
             exec: None,
+            faults: None,
         }
     }
 }
@@ -205,6 +207,17 @@ impl GpBuilder {
         self
     }
 
+    /// Inject a deterministic fault plan into every cluster run made
+    /// from this builder (predict protocols and training). Cluster
+    /// methods then retry dropped messages, rebalance dead machines'
+    /// blocks onto survivors, and report a typed
+    /// [`ApiError::MachinesLost`] only when nobody survives.
+    #[must_use]
+    pub fn fault_plan(mut self, plan: FaultPlan) -> GpBuilder {
+        self.faults = Some(plan);
+        self
+    }
+
     // ------------------------------------------------------- getters
 
     /// The method this builder will fit.
@@ -254,6 +267,7 @@ impl GpBuilder {
             seed: self.seed,
             backend: Arc::clone(&self.backend),
             exec: self.exec.clone(),
+            faults: self.faults.clone(),
         })
     }
 
@@ -293,7 +307,14 @@ impl GpBuilder {
             machines: spec.machines,
             net: crate::cluster::NetworkModel::gigabit(),
             exec: spec.executor(),
+            faults: spec.faults.clone(),
         };
+        if cluster.faults.is_some() {
+            return try_train_pitc(&spec.hyp, &spec.xd, &spec.y,
+                                  spec.support_points(), spec.blocks(),
+                                  &cluster, cfg)
+                .map_err(ApiError::from);
+        }
         Ok(train_pitc(&spec.hyp, &spec.xd, &spec.y, spec.support_points(),
                       spec.blocks(), &cluster, cfg))
     }

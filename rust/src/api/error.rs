@@ -47,6 +47,14 @@ pub enum ApiError {
         pivot: usize,
         value: f64,
     },
+    /// A fault-injected run lost every machine mid-protocol (see
+    /// [`crate::cluster::MachinesLost`]).
+    MachinesLost {
+        /// Protocol phase during which the last machine died.
+        phase: String,
+        /// Cluster size (all of them are gone).
+        machines: usize,
+    },
     /// A required spec field was never set.
     MissingField(&'static str),
     /// The spec is self-inconsistent (bad sizes, conflicting options).
@@ -84,6 +92,10 @@ impl fmt::Display for ApiError {
             ApiError::NotSpd { what, pivot, value } => {
                 write!(f, "{what} not SPD: pivot {pivot} = {value:.3e}")
             }
+            ApiError::MachinesLost { phase, machines } => {
+                write!(f, "all {machines} machines lost during phase \
+                           '{phase}'")
+            }
             ApiError::MissingField(name) => {
                 write!(f, "spec field not set: {name}")
             }
@@ -97,6 +109,12 @@ impl fmt::Display for ApiError {
 
 impl std::error::Error for ApiError {}
 
+impl From<crate::cluster::MachinesLost> for ApiError {
+    fn from(e: crate::cluster::MachinesLost) -> ApiError {
+        ApiError::MachinesLost { phase: e.phase, machines: e.machines }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +127,17 @@ mod tests {
         assert!(e.to_string().contains("Σ_DD"));
         assert!(ApiError::EmptyData.to_string().contains("empty"));
         assert!(ApiError::MissingField("support").to_string().contains("support"));
+    }
+
+    #[test]
+    fn machines_lost_converts_from_cluster_error() {
+        let e: ApiError =
+            crate::cluster::MachinesLost::at("predict", 4).into();
+        assert_eq!(e, ApiError::MachinesLost {
+            phase: "predict".into(),
+            machines: 4,
+        });
+        assert!(e.to_string().contains("predict"));
+        assert!(e.to_string().contains('4'));
     }
 }

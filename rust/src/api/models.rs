@@ -121,6 +121,7 @@ fn cluster_of(spec: &FitSpec, exec: &ParallelExecutor) -> ClusterSpec {
         machines: spec.machines,
         net: NetworkModel::gigabit(),
         exec: exec.clone(),
+        faults: spec.faults.clone(),
     }
 }
 
@@ -353,10 +354,19 @@ impl Regressor for PPitcModel {
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
         check_xu(self.spec.xd.cols, ps)?;
         let u_blocks = resolve_u_blocks(ps, self.spec.machines, None)?;
-        let out = ppitc::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
-                             self.spec.support_points(), &ps.xu,
-                             self.spec.blocks(), &u_blocks,
-                             self.spec.backend.as_ref(), &self.cluster);
+        let out = if self.cluster.faults.is_some() {
+            ppitc::try_run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                           self.spec.support_points(), &ps.xu,
+                           self.spec.blocks(), &u_blocks,
+                           self.spec.backend.as_ref(), &self.cluster)
+                .map_err(ApiError::from)?
+                .output
+        } else {
+            ppitc::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                       self.spec.support_points(), &ps.xu,
+                       self.spec.blocks(), &u_blocks,
+                       self.spec.backend.as_ref(), &self.cluster)
+        };
         Ok(PredictOutput {
             prediction: out.prediction,
             metrics: Some(out.metrics),
@@ -421,10 +431,19 @@ impl Regressor for PPicModel {
         check_xu(self.spec.xd.cols, ps)?;
         let u_blocks =
             resolve_u_blocks(ps, self.spec.machines, Some(&self.router))?;
-        let out = ppic::run_with_partition(
-            &self.spec.hyp, &self.spec.xd, &self.spec.y,
-            self.spec.support_points(), &ps.xu, self.spec.blocks(),
-            &u_blocks, self.spec.backend.as_ref(), &self.cluster);
+        let out = if self.cluster.faults.is_some() {
+            ppic::try_run_with_partition(
+                &self.spec.hyp, &self.spec.xd, &self.spec.y,
+                self.spec.support_points(), &ps.xu, self.spec.blocks(),
+                &u_blocks, self.spec.backend.as_ref(), &self.cluster)
+                .map_err(ApiError::from)?
+                .output
+        } else {
+            ppic::run_with_partition(
+                &self.spec.hyp, &self.spec.xd, &self.spec.y,
+                self.spec.support_points(), &ps.xu, self.spec.blocks(),
+                &u_blocks, self.spec.backend.as_ref(), &self.cluster)
+        };
         Ok(PredictOutput {
             prediction: out.prediction,
             metrics: Some(out.metrics),
@@ -506,9 +525,17 @@ impl Regressor for PIcfModel {
     fn predict_unpadded(&self, ps: &PredictSpec) -> Result<PredictOutput> {
         check_xu(self.spec.xd.cols, ps)?;
         let rank = self.spec.rank.expect("resolved spec has rank");
-        let out = picf::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
-                            &ps.xu, self.spec.blocks(), rank,
-                            self.spec.backend.as_ref(), &self.cluster);
+        let out = if self.cluster.faults.is_some() {
+            picf::try_run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                          &ps.xu, self.spec.blocks(), rank,
+                          self.spec.backend.as_ref(), &self.cluster)
+                .map_err(ApiError::from)?
+                .output
+        } else {
+            picf::run(&self.spec.hyp, &self.spec.xd, &self.spec.y,
+                      &ps.xu, self.spec.blocks(), rank,
+                      self.spec.backend.as_ref(), &self.cluster)
+        };
         Ok(PredictOutput {
             prediction: out.prediction,
             metrics: Some(out.metrics),

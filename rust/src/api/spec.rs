@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use super::error::{ApiError, Result};
 use super::method::Method;
-use crate::cluster::{ParallelExecutor, RunMetrics};
+use crate::cluster::{FaultPlan, ParallelExecutor, RunMetrics};
 use crate::data::partition::random_partition;
 use crate::gp::support::support_from_pool;
 use crate::gp::Prediction;
@@ -63,6 +63,10 @@ pub struct FitSpec {
     /// Optional pre-built executor; overrides `threads` so many models
     /// can share one thread pool (the sweep-harness pattern).
     pub exec: Option<ParallelExecutor>,
+    /// Optional fault-injection plan: cluster methods then run their
+    /// fault-aware protocol variants (retry, rebalance, typed
+    /// [`ApiError::MachinesLost`]) instead of the direct path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl std::fmt::Debug for FitSpec {
@@ -76,6 +80,7 @@ impl std::fmt::Debug for FitSpec {
             .field("threads", &self.threads)
             .field("seed", &self.seed)
             .field("backend", &self.backend.name())
+            .field("faults", &self.faults)
             .finish()
     }
 }

@@ -98,6 +98,23 @@ impl ParallelExecutor {
             _ => (0..n).map(|i| Stopwatch::time(|| f(i))).collect(),
         }
     }
+
+    /// Like [`ParallelExecutor::run_timed`] but over an explicit id
+    /// set: run `f(ids[0]), …, f(ids[last])`, returning results with
+    /// per-task measured seconds in `ids` order. The fault-aware
+    /// cluster path uses this to fan out only the *alive* machines.
+    pub fn run_timed_subset<T: Send>(
+        &self,
+        ids: &[usize],
+        f: impl Fn(usize) -> T + Sync,
+    ) -> Vec<(T, f64)> {
+        match &self.pool {
+            Some(pool) if ids.len() > 1 => {
+                pool.par_map(ids.len(), |k| Stopwatch::time(|| f(ids[k])))
+            }
+            _ => ids.iter().map(|&i| Stopwatch::time(|| f(i))).collect(),
+        }
+    }
 }
 
 impl fmt::Debug for ParallelExecutor {
@@ -159,6 +176,31 @@ mod tests {
         // Arc'd pool serves either without respawning threads
         let _ = e.run_timed(4, |i| i);
         let _ = c.run_timed(4, |i| i);
+    }
+
+    #[test]
+    fn subset_matches_full_on_identity_ids() {
+        let serial = ParallelExecutor::serial();
+        let par = ParallelExecutor::threads(3);
+        let ids: Vec<usize> = (0..9).collect();
+        let work = |i: usize| i * i + 1;
+        let full: Vec<usize> =
+            serial.run_timed(9, work).into_iter().map(|(v, _)| v).collect();
+        for e in [&serial, &par] {
+            let sub: Vec<usize> = e
+                .run_timed_subset(&ids, work)
+                .into_iter()
+                .map(|(v, _)| v)
+                .collect();
+            assert_eq!(sub, full);
+        }
+        // sparse subset preserves ids order
+        let sparse: Vec<usize> = par
+            .run_timed_subset(&[7, 2, 4], work)
+            .into_iter()
+            .map(|(v, _)| v)
+            .collect();
+        assert_eq!(sparse, vec![50, 5, 17]);
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Fault model for the simulated cluster: a seeded, deterministic
+//! [`FaultPlan`] describing stragglers, message drops (with
+//! timeout/bounded-retry/backoff) and scheduled machine deaths, plus
+//! the [`FaultCounters`] that [`crate::cluster::RunMetrics`] accumulates
+//! and the typed [`MachinesLost`] error runs return when every machine
+//! is gone.
+//!
+//! The paper's cluster model is failure-free; this module is the
+//! deliberately-small deviation that lets the protocols keep their
+//! Theorem 1–3 equivalence discipline *under* injected faults: with a
+//! zero plan the fault-aware path is bitwise-identical to the direct
+//! path, and any non-zero plan is a pure function of `(seed, event
+//! order)` — never of measured wall times — so chaos runs replay
+//! exactly.
+
+use std::fmt;
+
+/// Deterministic fault-injection schedule for one cluster run.
+///
+/// All probabilities are rolled from a PRNG seeded by `seed` in a fixed
+/// event order (participants ascending per exchange), so two runs with
+/// the same plan produce bitwise-identical predictions, counters and
+/// traffic. Virtual-time knobs (`timeout_s`, `straggler_delay_s`,
+/// `backoff`) only move node clocks; they never reorder reductions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// PRNG seed for all probabilistic decisions.
+    pub seed: u64,
+    /// Per-participant, per-attempt probability a message is dropped.
+    pub drop_prob: f64,
+    /// Retries after the first attempt before a node is declared dead.
+    pub max_retries: usize,
+    /// Virtual seconds the sender waits before detecting a drop.
+    pub timeout_s: f64,
+    /// Multiplier applied to the timeout on each successive retry.
+    pub backoff: f64,
+    /// Per-participant probability an exchange straggles.
+    pub straggler_prob: f64,
+    /// Virtual seconds a straggling participant is delayed.
+    pub straggler_delay_s: f64,
+    /// Scheduled deaths: (machine id, phase name) — the machine is
+    /// discovered dead when the protocol enters that phase.
+    pub deaths: Vec<(usize, String)>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop_prob: 0.0,
+            max_retries: 3,
+            timeout_s: 1e-3,
+            backoff: 2.0,
+            straggler_prob: 0.0,
+            straggler_delay_s: 0.0,
+            deaths: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The zero plan: no drops, no stragglers, no deaths. Runs through
+    /// the fault transport with this plan are bitwise-identical to the
+    /// direct path (the equivalence oracle the chaos suite pins).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Zero plan with a chosen PRNG seed (a convenience root for the
+    /// builder methods below).
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Enable message drops at probability `prob` per participant per
+    /// attempt, with `max_retries` retries before declaring death.
+    pub fn with_drops(mut self, prob: f64, max_retries: usize) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&prob), "drop_prob {prob}");
+        self.drop_prob = prob;
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Set the drop-detection timeout and per-retry backoff multiplier.
+    pub fn with_timeout(mut self, timeout_s: f64, backoff: f64) -> FaultPlan {
+        assert!(timeout_s >= 0.0 && backoff >= 1.0);
+        self.timeout_s = timeout_s;
+        self.backoff = backoff;
+        self
+    }
+
+    /// Enable stragglers: each participant in each exchange is delayed
+    /// by `delay_s` virtual seconds with probability `prob`.
+    pub fn with_stragglers(mut self, prob: f64, delay_s: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&prob), "straggler_prob {prob}");
+        assert!(delay_s >= 0.0);
+        self.straggler_prob = prob;
+        self.straggler_delay_s = delay_s;
+        self
+    }
+
+    /// Schedule machine `machine` to die when the run reaches `phase`.
+    pub fn kill(mut self, machine: usize, phase: &str) -> FaultPlan {
+        self.deaths.push((machine, phase.to_string()));
+        self
+    }
+
+    /// Whether this plan can perturb a run at all.
+    pub fn has_faults(&self) -> bool {
+        self.drop_prob > 0.0
+            || (self.straggler_prob > 0.0 && self.straggler_delay_s > 0.0)
+            || !self.deaths.is_empty()
+    }
+}
+
+/// Fault-event accounting, accumulated per run and per phase.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Successful resends after a dropped message.
+    pub retries: usize,
+    /// Drop-detection timeouts charged (one per failed attempt).
+    pub timeouts: usize,
+    /// Machines declared dead (scheduled or retry-exhausted).
+    pub deaths: usize,
+    /// Point-to-point block transfers performed to rebalance dead
+    /// machines' data onto survivors.
+    pub rebalances: usize,
+    /// Straggler events injected.
+    pub straggle_events: usize,
+    /// Total virtual seconds of straggler delay injected.
+    pub straggle_s: f64,
+}
+
+impl FaultCounters {
+    /// True when no fault event of any kind has been recorded.
+    pub fn is_zero(&self) -> bool {
+        *self == FaultCounters::default()
+    }
+
+    /// Counter delta since an earlier snapshot (for per-phase rows).
+    pub fn since(&self, earlier: &FaultCounters) -> FaultCounters {
+        FaultCounters {
+            retries: self.retries - earlier.retries,
+            timeouts: self.timeouts - earlier.timeouts,
+            deaths: self.deaths - earlier.deaths,
+            rebalances: self.rebalances - earlier.rebalances,
+            straggle_events: self.straggle_events - earlier.straggle_events,
+            straggle_s: self.straggle_s - earlier.straggle_s,
+        }
+    }
+}
+
+/// Typed terminal error: every machine died before the run could
+/// produce predictions. Anything short of this completes with
+/// degraded-but-well-defined output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachinesLost {
+    /// Protocol phase during which the last machine was lost.
+    pub phase: String,
+    /// Machines lost over the whole run.
+    pub machines: usize,
+}
+
+impl MachinesLost {
+    pub fn at(phase: &str, machines: usize) -> MachinesLost {
+        MachinesLost { phase: phase.to_string(), machines }
+    }
+}
+
+impl fmt::Display for MachinesLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "all machines lost during phase '{}' ({} machine(s) died)",
+            self.phase, self.machines
+        )
+    }
+}
+
+impl std::error::Error for MachinesLost {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_plan_has_no_faults() {
+        assert!(!FaultPlan::none().has_faults());
+        assert!(!FaultPlan::seeded(42).has_faults());
+        // straggler probability without delay is inert
+        assert!(!FaultPlan::none().with_stragglers(0.5, 0.0).has_faults());
+    }
+
+    #[test]
+    fn builders_flag_faults() {
+        assert!(FaultPlan::seeded(1).with_drops(0.1, 2).has_faults());
+        assert!(FaultPlan::seeded(1).with_stragglers(0.3, 1e-4).has_faults());
+        assert!(FaultPlan::none().kill(2, "predict").has_faults());
+        let p = FaultPlan::seeded(7)
+            .with_drops(0.25, 4)
+            .with_timeout(1e-4, 1.5)
+            .with_stragglers(0.5, 2e-3)
+            .kill(0, "global_summary");
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.max_retries, 4);
+        assert_eq!(p.deaths, vec![(0, "global_summary".to_string())]);
+    }
+
+    #[test]
+    fn counters_delta_and_zero() {
+        let mut c = FaultCounters::default();
+        assert!(c.is_zero());
+        c.retries = 3;
+        c.timeouts = 5;
+        c.straggle_s = 0.25;
+        let earlier = FaultCounters { retries: 1, timeouts: 2,
+                                      ..Default::default() };
+        let d = c.since(&earlier);
+        assert_eq!(d.retries, 2);
+        assert_eq!(d.timeouts, 3);
+        assert_eq!(d.straggle_s, 0.25);
+        assert!(!d.is_zero());
+    }
+
+    #[test]
+    fn machines_lost_display() {
+        let e = MachinesLost::at("reduce", 4);
+        let msg = e.to_string();
+        assert!(msg.contains("reduce"), "{msg}");
+        assert!(msg.contains('4'), "{msg}");
+    }
+}

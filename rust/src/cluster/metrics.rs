@@ -1,11 +1,15 @@
 //! Per-run accounting: phases, traffic, and the incurred-time breakdown.
 
+use super::fault::FaultCounters;
+
 /// One labelled phase of a protocol run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Phase {
     pub name: String,
     /// makespan when the phase completed (seconds)
     pub end_makespan: f64,
+    /// fault events that occurred during this phase
+    pub faults: FaultCounters,
 }
 
 /// Metrics of one simulated protocol run.
@@ -30,6 +34,8 @@ pub struct RunMetrics {
     pub wall_s: f64,
     /// host worker threads that executed node compute (1 = serial)
     pub threads: usize,
+    /// whole-run fault accounting (all-zero on the direct transport)
+    pub faults: FaultCounters,
 }
 
 impl RunMetrics {
@@ -64,8 +70,10 @@ mod tests {
     fn phase_durations() {
         let m = RunMetrics {
             phases: vec![
-                Phase { name: "a".into(), end_makespan: 1.0 },
-                Phase { name: "b".into(), end_makespan: 3.5 },
+                Phase { name: "a".into(), end_makespan: 1.0,
+                        faults: FaultCounters::default() },
+                Phase { name: "b".into(), end_makespan: 3.5,
+                        faults: FaultCounters::default() },
             ],
             makespan: 3.5,
             ..Default::default()

@@ -19,13 +19,17 @@
 //! virtual-clock model (and hence every modeled metric) is unchanged.
 
 pub mod exec;
+pub mod fault;
 pub mod metrics;
 pub mod mpi;
 pub mod network;
 pub mod node;
+pub mod transport;
 
 pub use exec::ParallelExecutor;
+pub use fault::{FaultCounters, FaultPlan, MachinesLost};
 pub use metrics::RunMetrics;
 pub use mpi::Cluster;
 pub use network::NetworkModel;
 pub use node::Node;
+pub use transport::{DirectTransport, FaultTransport, Transport};

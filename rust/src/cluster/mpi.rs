@@ -10,9 +10,11 @@
 //! reports carry both the modeled makespan and the realized time.
 
 use super::exec::ParallelExecutor;
+use super::fault::FaultCounters;
 use super::metrics::{Phase, RunMetrics};
 use super::network::NetworkModel;
 use super::node::Node;
+use super::transport::{DirectTransport, ExchangeOutcome, Transport};
 use crate::util::Stopwatch;
 
 /// A simulated M-node cluster.
@@ -23,6 +25,11 @@ pub struct Cluster {
     exec: ParallelExecutor,
     wall: Stopwatch,
     metrics: RunMetrics,
+    /// Mediates every exchange; [`DirectTransport`] is the failure-free
+    /// default and collectives degenerate to their historical behavior.
+    transport: Box<dyn Transport>,
+    /// Fault-counter snapshot at the last phase boundary.
+    phase_mark: FaultCounters,
 }
 
 pub const MASTER: usize = 0;
@@ -38,6 +45,17 @@ impl Cluster {
     pub fn with_exec(m: usize, net: NetworkModel, exec: ParallelExecutor)
         -> Cluster
     {
+        Cluster::with_transport(m, net, exec, Box::new(DirectTransport))
+    }
+
+    /// Cluster whose exchanges are mediated by an explicit transport
+    /// (the fault-injection entry point).
+    pub fn with_transport(
+        m: usize,
+        net: NetworkModel,
+        exec: ParallelExecutor,
+        transport: Box<dyn Transport>,
+    ) -> Cluster {
         assert!(m >= 1, "cluster needs at least one node");
         Cluster {
             nodes: (0..m).map(Node::new).collect(),
@@ -45,6 +63,8 @@ impl Cluster {
             exec,
             wall: Stopwatch::new(),
             metrics: RunMetrics::default(),
+            transport,
+            phase_mark: FaultCounters::default(),
         }
     }
 
@@ -55,6 +75,92 @@ impl Cluster {
     /// Current makespan (max node clock).
     pub fn makespan(&self) -> f64 {
         self.nodes.iter().map(|n| n.clock()).fold(0.0, f64::max)
+    }
+
+    /// Ids of the machines still alive, ascending.
+    pub fn alive_ids(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.alive())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive()).count()
+    }
+
+    pub fn is_alive(&self, id: usize) -> bool {
+        self.nodes[id].alive()
+    }
+
+    /// Current master: the lowest-index alive machine (re-election on
+    /// master death, footnote 1 of the paper generalized). Falls back
+    /// to node 0 when everyone is dead.
+    pub fn master(&self) -> usize {
+        self.nodes
+            .iter()
+            .find(|n| n.alive())
+            .map(|n| n.id)
+            .unwrap_or(MASTER)
+    }
+
+    /// Max clock over alive machines (what collectives synchronize on;
+    /// equals [`Cluster::makespan`] while everyone is alive).
+    fn alive_max_clock(&self) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.alive())
+            .map(|n| n.clock())
+            .fold(0.0, f64::max)
+    }
+
+    /// Declare machine `id` dead (frozen clock, out of all future
+    /// collectives) and count the death.
+    pub fn mark_dead(&mut self, id: usize) {
+        if self.nodes[id].alive() {
+            self.nodes[id].kill();
+            self.metrics.faults.deaths += 1;
+        }
+    }
+
+    /// Drain the transport's scheduled deaths for `phase`, apply them,
+    /// and return the newly-dead ids (ascending).
+    pub fn take_deaths(&mut self, phase: &str) -> Vec<usize> {
+        let scheduled = self.transport.take_deaths(phase);
+        let mut out = Vec::new();
+        for id in scheduled {
+            if id < self.nodes.len() && self.nodes[id].alive() {
+                self.mark_dead(id);
+                out.push(id);
+            }
+        }
+        out
+    }
+
+    /// Apply one [`ExchangeOutcome`]: straggler delays move the
+    /// affected clocks, retry/timeout counters accumulate, and
+    /// retry-exhausted participants are marked dead. Returns the extra
+    /// collective delay and the newly-dead ids.
+    fn apply_exchange(&mut self, out: ExchangeOutcome) -> (f64, Vec<usize>) {
+        for &(id, delay) in &out.straggles {
+            if self.nodes[id].alive() {
+                let t = self.nodes[id].clock() + delay;
+                self.nodes[id].wait_until(t);
+                self.metrics.faults.straggle_events += 1;
+                self.metrics.faults.straggle_s += delay;
+            }
+        }
+        self.metrics.faults.retries += out.retries;
+        self.metrics.faults.timeouts += out.timeouts;
+        let mut failed = Vec::new();
+        for id in out.failed {
+            if self.nodes[id].alive() {
+                self.mark_dead(id);
+                failed.push(id);
+            }
+        }
+        (out.extra_delay_s, failed)
     }
 
     /// Run `work` as node `id`'s local compute; measured wall time
@@ -110,102 +216,209 @@ impl Cluster {
         self.nodes[id].advance_compute(secs);
     }
 
-    /// Synchronize all clocks at the current makespan (barrier).
+    /// Fault-aware [`Cluster::compute_all`]: run `work(m)` for every
+    /// *alive* node m, returning `Some(result)` at alive indices and
+    /// `None` at dead ones. With every machine alive this is
+    /// bitwise-identical to `compute_all` (same executor fan-out, same
+    /// index order, same per-node clock charges).
+    pub fn compute_alive<T: Send>(
+        &mut self,
+        work: impl Fn(usize) -> T + Sync,
+    ) -> Vec<Option<T>> {
+        let ids = self.alive_ids();
+        let timed = self.exec.run_timed_subset(&ids, work);
+        let mut out: Vec<Option<T>> =
+            (0..self.size()).map(|_| None).collect();
+        for (&id, (v, secs)) in ids.iter().zip(timed) {
+            self.nodes[id].advance_compute(secs);
+            out[id] = Some(v);
+        }
+        out
+    }
+
+    /// Inline (never pooled) variant of [`Cluster::compute_alive`], the
+    /// fault-aware [`Cluster::compute_all_inline`].
+    pub fn compute_alive_inline<T>(
+        &mut self,
+        mut work: impl FnMut(usize) -> T,
+    ) -> Vec<Option<T>> {
+        let ids = self.alive_ids();
+        let mut out: Vec<Option<T>> =
+            (0..self.size()).map(|_| None).collect();
+        for id in ids {
+            let (v, secs) = Stopwatch::time(|| work(id));
+            self.nodes[id].advance_compute(secs);
+            out[id] = Some(v);
+        }
+        out
+    }
+
+    /// Run `work(k)` for every block k of an owner map, charging block
+    /// k's measured time to machine `owners[k]` — how rebalanced runs
+    /// keep per-block work attributable after adoption. With
+    /// `owners[k] == k` this is bitwise-identical to `compute_all`.
+    pub fn compute_owned<T: Send>(
+        &mut self,
+        owners: &[usize],
+        work: impl Fn(usize) -> T + Sync,
+    ) -> Vec<T> {
+        let timed = self.exec.run_timed(owners.len(), work);
+        timed
+            .into_iter()
+            .enumerate()
+            .map(|(k, (v, secs))| {
+                self.nodes[owners[k]].advance_compute(secs);
+                v
+            })
+            .collect()
+    }
+
+    /// One point-to-point block transfer performed to move a dead
+    /// machine's data onto survivor `to`: advances `to`'s clock by the
+    /// transfer time and counts real traffic plus a rebalance event.
+    pub fn rebalance_fetch(&mut self, to: usize, bytes: usize) {
+        let t = self.nodes[to].clock() + self.net.transfer_time(bytes);
+        self.nodes[to].wait_until(t);
+        self.metrics.bytes_sent += bytes;
+        self.metrics.messages += 1;
+        self.metrics.faults.rebalances += 1;
+    }
+
+    /// Synchronize alive clocks at the current (alive) makespan.
     pub fn barrier(&mut self) {
-        let t = self.makespan();
-        for n in self.nodes.iter_mut() {
+        let t = self.alive_max_clock();
+        for n in self.nodes.iter_mut().filter(|n| n.alive()) {
             n.wait_until(t);
         }
     }
 
-    /// Reduce `bytes`-sized values from all nodes to the master along a
-    /// binomial tree: ceil(log2 M) rounds. Master ends at
-    /// max(all clocks) + rounds·transfer(bytes).
-    pub fn reduce_to_master(&mut self, bytes: usize) {
-        let m = self.size();
-        if m <= 1 {
-            return;
+    /// Reduce `bytes`-sized values from all alive nodes to the master
+    /// along a binomial tree: ceil(log2 Mₐ) rounds. Master ends at
+    /// max(alive clocks) + rounds·transfer(bytes) + any fault delay.
+    /// Returns ids that died during the exchange (retry exhaustion);
+    /// empty on the direct transport.
+    pub fn reduce_to_master(&mut self, bytes: usize) -> Vec<usize> {
+        let ids = self.alive_ids();
+        let ma = ids.len();
+        if ma <= 1 {
+            return Vec::new();
         }
-        let t_done = self.makespan() + self.net.collective_time(m, bytes);
-        self.nodes[MASTER].wait_until(t_done);
-        self.metrics.bytes_sent += bytes * (m - 1);
-        self.metrics.messages += m - 1;
+        let root = self.master();
+        let out = self.transport.exchange(&ids, Some(root), bytes);
+        let (extra, failed) = self.apply_exchange(out);
+        let t_done = self.alive_max_clock()
+            + self.net.collective_time(ma, bytes)
+            + extra;
+        self.nodes[root].wait_until(t_done);
+        self.metrics.bytes_sent += bytes * (ma - 1);
+        self.metrics.messages += ma - 1;
+        failed
     }
 
-    /// Broadcast `bytes` from the master to all nodes (binomial tree).
-    /// Every node ends at master_clock + rounds·transfer(bytes).
-    pub fn bcast_from_master(&mut self, bytes: usize) {
-        let m = self.size();
-        if m <= 1 {
-            return;
+    /// Broadcast `bytes` from the master to all alive nodes (binomial
+    /// tree). Every receiver ends at master_clock + rounds·transfer +
+    /// any fault delay. Returns newly-dead ids.
+    pub fn bcast_from_master(&mut self, bytes: usize) -> Vec<usize> {
+        let ids = self.alive_ids();
+        let ma = ids.len();
+        if ma <= 1 {
+            return Vec::new();
         }
-        let t_done =
-            self.nodes[MASTER].clock() + self.net.collective_time(m, bytes);
-        for n in self.nodes.iter_mut() {
+        let root = self.master();
+        let out = self.transport.exchange(&ids, Some(root), bytes);
+        let (extra, failed) = self.apply_exchange(out);
+        let t_done = self.nodes[root].clock()
+            + self.net.collective_time(ma, bytes)
+            + extra;
+        for n in self.nodes.iter_mut().filter(|n| n.alive()) {
             n.wait_until(t_done);
         }
-        self.metrics.bytes_sent += bytes * (m - 1);
-        self.metrics.messages += m - 1;
+        self.metrics.bytes_sent += bytes * (ma - 1);
+        self.metrics.messages += ma - 1;
+        failed
     }
 
-    /// Gather `bytes` from every node to the master: latency amortized
-    /// over a tree (log M rounds) but the master still receives all the
-    /// payload: rounds·latency + (M−1)·bytes/bandwidth.
-    pub fn gather_to_master(&mut self, bytes: usize) {
-        let m = self.size();
-        if m <= 1 {
-            return;
+    /// Gather `bytes` from every alive node to the master: latency
+    /// amortized over a tree (log Mₐ rounds) but the master still
+    /// receives all the payload: rounds·latency + (Mₐ−1)·bytes/bw.
+    /// Returns newly-dead ids.
+    pub fn gather_to_master(&mut self, bytes: usize) -> Vec<usize> {
+        let ids = self.alive_ids();
+        let ma = ids.len();
+        if ma <= 1 {
+            return Vec::new();
         }
-        let rounds = NetworkModel::tree_rounds(m) as f64;
+        let root = self.master();
+        let out = self.transport.exchange(&ids, Some(root), bytes);
+        let (extra, failed) = self.apply_exchange(out);
+        let rounds = NetworkModel::tree_rounds(ma) as f64;
         let t = rounds * self.net.latency_s
-            + ((m - 1) * bytes) as f64 * 8.0
+            + ((ma - 1) * bytes) as f64 * 8.0
                 / self.net.bandwidth_bps.max(f64::MIN_POSITIVE);
-        let t_done = self.makespan() + t;
-        self.nodes[MASTER].wait_until(t_done);
-        self.metrics.bytes_sent += bytes * (m - 1);
-        self.metrics.messages += m - 1;
+        let t_done = self.alive_max_clock() + t + extra;
+        self.nodes[root].wait_until(t_done);
+        self.metrics.bytes_sent += bytes * (ma - 1);
+        self.metrics.messages += ma - 1;
+        failed
     }
 
-    /// Allreduce of `bytes` across all nodes (butterfly/recursive
-    /// doubling): log M rounds, everyone ends synchronized at
-    /// max(clocks) + rounds·transfer (the MPI_Allreduce/MAXLOC shape the
-    /// row-based parallel ICF uses each iteration).
-    pub fn allreduce(&mut self, bytes: usize) {
-        let m = self.size();
-        if m <= 1 {
-            return;
+    /// Allreduce of `bytes` across all alive nodes (butterfly/recursive
+    /// doubling): log Mₐ rounds, everyone ends synchronized at
+    /// max(alive clocks) + rounds·transfer (the MPI_Allreduce/MAXLOC
+    /// shape the row-based parallel ICF uses each iteration). Returns
+    /// newly-dead ids.
+    pub fn allreduce(&mut self, bytes: usize) -> Vec<usize> {
+        let ids = self.alive_ids();
+        let ma = ids.len();
+        if ma <= 1 {
+            return Vec::new();
         }
-        let t_done = self.makespan() + self.net.collective_time(m, bytes);
-        for n in self.nodes.iter_mut() {
+        let out = self.transport.exchange(&ids, None, bytes);
+        let (extra, failed) = self.apply_exchange(out);
+        let t_done = self.alive_max_clock()
+            + self.net.collective_time(ma, bytes)
+            + extra;
+        for n in self.nodes.iter_mut().filter(|n| n.alive()) {
             n.wait_until(t_done);
         }
         // butterfly: every node sends one message per round
-        let rounds = NetworkModel::tree_rounds(m);
-        self.metrics.bytes_sent += bytes * m * rounds / 2;
-        self.metrics.messages += m * rounds / 2;
+        let rounds = NetworkModel::tree_rounds(ma);
+        self.metrics.bytes_sent += bytes * ma * rounds / 2;
+        self.metrics.messages += ma * rounds / 2;
+        failed
     }
 
     /// All-to-all personalized exchange of `bytes` per pair (the pPIC
-    /// clustering shuffle): each node sends M−1 messages.
-    pub fn alltoall(&mut self, bytes_per_pair: usize) {
-        let m = self.size();
-        if m <= 1 {
-            return;
+    /// clustering shuffle): each alive node sends Mₐ−1 messages.
+    /// Returns newly-dead ids.
+    pub fn alltoall(&mut self, bytes_per_pair: usize) -> Vec<usize> {
+        let ids = self.alive_ids();
+        let ma = ids.len();
+        if ma <= 1 {
+            return Vec::new();
         }
-        let per_node = (m - 1) as f64 * self.net.transfer_time(bytes_per_pair);
-        let t_done = self.makespan() + per_node;
-        for n in self.nodes.iter_mut() {
+        let out = self.transport.exchange(&ids, None, bytes_per_pair);
+        let (extra, failed) = self.apply_exchange(out);
+        let per_node =
+            (ma - 1) as f64 * self.net.transfer_time(bytes_per_pair);
+        let t_done = self.alive_max_clock() + per_node + extra;
+        for n in self.nodes.iter_mut().filter(|n| n.alive()) {
             n.wait_until(t_done);
         }
-        self.metrics.bytes_sent += bytes_per_pair * m * (m - 1);
-        self.metrics.messages += m * (m - 1);
+        self.metrics.bytes_sent += bytes_per_pair * ma * (ma - 1);
+        self.metrics.messages += ma * (ma - 1);
+        failed
     }
 
-    /// Mark the end of a named protocol phase.
+    /// Mark the end of a named protocol phase. Fault counters are
+    /// snapshotted so the [`Phase`] row carries the per-phase delta.
     pub fn phase(&mut self, name: &str) {
+        let delta = self.metrics.faults.since(&self.phase_mark);
+        self.phase_mark = self.metrics.faults.clone();
         self.metrics.phases.push(Phase {
             name: name.to_string(),
             end_makespan: self.makespan(),
+            faults: delta,
         });
     }
 
@@ -350,5 +563,154 @@ mod tests {
         for n in &c.nodes {
             assert_eq!(n.clock(), 2.0);
         }
+    }
+
+    use super::super::fault::FaultPlan;
+    use super::super::transport::FaultTransport;
+
+    fn fault_cluster(m: usize, plan: FaultPlan) -> Cluster {
+        Cluster::with_transport(
+            m,
+            fast_net(),
+            ParallelExecutor::serial(),
+            Box::new(FaultTransport::new(plan)),
+        )
+    }
+
+    /// The zero-fault transport reproduces the direct path bitwise:
+    /// same clocks, same traffic, no fault counters.
+    #[test]
+    fn zero_fault_transport_matches_direct_bitwise() {
+        let run = |mut c: Cluster| {
+            c.charge_compute(2, 0.25);
+            let f1 = c.reduce_to_master(100);
+            let f2 = c.bcast_from_master(200);
+            let f3 = c.gather_to_master(50);
+            let f4 = c.allreduce(16);
+            let f5 = c.alltoall(8);
+            assert!(f1.is_empty() && f2.is_empty() && f3.is_empty()
+                        && f4.is_empty() && f5.is_empty());
+            c.phase("p");
+            let clocks: Vec<u64> =
+                c.nodes.iter().map(|n| n.clock().to_bits()).collect();
+            (clocks, c.finish())
+        };
+        let (dc, dm) = run(Cluster::new(4, fast_net()));
+        let (fc, fm) = run(fault_cluster(4, FaultPlan::seeded(11)));
+        assert_eq!(dc, fc, "clocks diverged");
+        assert_eq!(dm.bytes_sent, fm.bytes_sent);
+        assert_eq!(dm.messages, fm.messages);
+        assert_eq!(dm.makespan.to_bits(), fm.makespan.to_bits());
+        assert!(fm.faults.is_zero());
+        assert_eq!(fm.phases[0].faults, FaultCounters::default());
+    }
+
+    /// Stragglers delay clocks and are counted, but never change the
+    /// traffic accounting.
+    #[test]
+    fn stragglers_delay_and_count() {
+        let plan = FaultPlan::seeded(5).with_stragglers(1.0, 1e-2);
+        let mut c = fault_cluster(3, plan);
+        let failed = c.reduce_to_master(10);
+        assert!(failed.is_empty());
+        let m_base = {
+            let mut b = Cluster::new(3, fast_net());
+            b.reduce_to_master(10);
+            b.finish()
+        };
+        let m = c.finish();
+        assert_eq!(m.faults.straggle_events, 3);
+        assert!((m.faults.straggle_s - 3e-2).abs() < 1e-15);
+        assert_eq!(m.bytes_sent, m_base.bytes_sent);
+        assert_eq!(m.messages, m_base.messages);
+        assert!(m.makespan > m_base.makespan);
+    }
+
+    /// Certain drops exhaust retries: the non-root participants die,
+    /// deaths are counted, and they leave subsequent collectives.
+    #[test]
+    fn retry_exhaustion_kills_and_shrinks_collectives() {
+        let plan = FaultPlan::seeded(2)
+            .with_drops(1.0, 1)
+            .with_timeout(1e-4, 2.0);
+        let mut c = fault_cluster(3, plan);
+        let failed = c.reduce_to_master(10);
+        assert_eq!(failed, vec![1, 2]);
+        assert_eq!(c.alive_ids(), vec![0]);
+        assert!(!c.is_alive(1));
+        // a 1-alive cluster is communication-free again
+        assert!(c.bcast_from_master(10).is_empty());
+        let m = c.finish();
+        assert_eq!(m.faults.deaths, 2);
+        assert!(m.faults.timeouts > 0);
+    }
+
+    /// Scheduled deaths drain at phase entry; the master re-elects to
+    /// the lowest alive index.
+    #[test]
+    fn scheduled_death_and_reelection() {
+        let plan = FaultPlan::none().kill(0, "summary");
+        let mut c = fault_cluster(4, plan);
+        assert_eq!(c.master(), 0);
+        assert_eq!(c.take_deaths("summary"), vec![0]);
+        assert!(c.take_deaths("summary").is_empty());
+        assert_eq!(c.master(), 1);
+        assert_eq!(c.alive_ids(), vec![1, 2, 3]);
+        let m = c.finish();
+        assert_eq!(m.faults.deaths, 1);
+    }
+
+    /// compute_alive returns None at dead indices and Some elsewhere,
+    /// matching compute_all at the alive ones.
+    #[test]
+    fn compute_alive_skips_dead() {
+        let mut c = fault_cluster(3, FaultPlan::none().kill(1, "x"));
+        c.take_deaths("x");
+        let out = c.compute_alive(|id| id * 10);
+        assert_eq!(out, vec![Some(0), None, Some(20)]);
+        assert_eq!(c.nodes[1].clock(), 0.0);
+        let inline = c.compute_alive_inline(|id| id + 1);
+        assert_eq!(inline, vec![Some(1), None, Some(3)]);
+    }
+
+    /// compute_owned charges each block's time to its owner.
+    #[test]
+    fn compute_owned_charges_owner() {
+        let mut c = Cluster::new(3, NetworkModel::instant());
+        let owners = vec![0, 2, 2];
+        let out = c.compute_owned(&owners, |k| {
+            sleep(Duration::from_millis(1));
+            k
+        });
+        assert_eq!(out, vec![0, 1, 2]);
+        assert_eq!(c.nodes[1].clock(), 0.0);
+        assert!(c.nodes[2].compute_total() >= c.nodes[0].compute_total());
+    }
+
+    /// rebalance_fetch moves real bytes and counts a rebalance.
+    #[test]
+    fn rebalance_fetch_accounting() {
+        let mut c = Cluster::new(2, fast_net());
+        c.rebalance_fetch(1, 500);
+        let m = c.finish();
+        assert_eq!(m.bytes_sent, 500);
+        assert_eq!(m.messages, 1);
+        assert_eq!(m.faults.rebalances, 1);
+    }
+
+    /// Per-phase fault rows carry deltas, not cumulative counts.
+    #[test]
+    fn phase_fault_deltas() {
+        let plan = FaultPlan::seeded(9).with_stragglers(1.0, 1e-3);
+        let mut c = fault_cluster(2, plan);
+        c.reduce_to_master(10);
+        c.phase("a");
+        c.reduce_to_master(10);
+        c.reduce_to_master(10);
+        c.phase("b");
+        let m = c.finish();
+        assert_eq!(m.phases[0].faults.straggle_events, 2);
+        assert_eq!(m.phases[1].faults.straggle_events, 4);
+        assert_eq!(m.faults.straggle_events, 6);
     }
 }

@@ -78,4 +78,74 @@ mod tests {
         assert_eq!(net.transfer_time(1 << 30), 0.0);
         assert_eq!(net.collective_time(20, 1 << 20), 0.0);
     }
+
+    use crate::testkit::prop::prop_check;
+
+    /// Edge cases: m=0 and m=1 are round-free; powers of two hit
+    /// exactly log2, and ±1 around them moves the count by exactly one
+    /// (the ceil(log2 m) shape every makespan number sits on).
+    #[test]
+    fn tree_rounds_edges_and_power_boundaries() {
+        assert_eq!(NetworkModel::tree_rounds(0), 0);
+        assert_eq!(NetworkModel::tree_rounds(1), 0);
+        assert_eq!(NetworkModel::tree_rounds(2), 1);
+        for k in 2..16usize {
+            let p = 1usize << k;
+            assert_eq!(NetworkModel::tree_rounds(p), k, "m=2^{k}");
+            assert_eq!(NetworkModel::tree_rounds(p + 1), k + 1,
+                       "m=2^{k}+1");
+            assert_eq!(NetworkModel::tree_rounds(p - 1), k, "m=2^{k}-1");
+        }
+    }
+
+    /// tree_rounds is monotone non-decreasing in m.
+    #[test]
+    fn prop_tree_rounds_monotone() {
+        prop_check("tree-rounds-monotone", 128, |g| {
+            let m = g.usize_in(0, 1 << 20);
+            assert!(NetworkModel::tree_rounds(m)
+                        <= NetworkModel::tree_rounds(m + 1));
+        });
+    }
+
+    /// collective_time is monotone in both machine count and payload
+    /// for any positive-latency, finite-bandwidth network.
+    #[test]
+    fn prop_collective_time_monotone() {
+        prop_check("collective-monotone", 128, |g| {
+            let net = NetworkModel {
+                latency_s: g.f64_in(1e-7, 1e-2),
+                bandwidth_bps: g.f64_in(1e6, 1e11),
+            };
+            let m = g.usize_in(1, 64);
+            let bytes = g.usize_in(0, 1 << 24);
+            let t = net.collective_time(m, bytes);
+            assert!(t >= 0.0);
+            assert!(t <= net.collective_time(m + 1, bytes) + 1e-18,
+                    "m-monotonicity: m={m} bytes={bytes}");
+            assert!(t <= net.collective_time(m, bytes + 1) + 1e-18,
+                    "byte-monotonicity: m={m} bytes={bytes}");
+            // exactly rounds × one transfer
+            let want = NetworkModel::tree_rounds(m) as f64
+                * net.transfer_time(bytes);
+            assert_eq!(t.to_bits(), want.to_bits());
+        });
+    }
+
+    /// The instant network is free for any payload/participant count,
+    /// and transfer_time reduces to pure latency at zero bytes.
+    #[test]
+    fn prop_transfer_time_instant_and_latency() {
+        prop_check("transfer-instant", 64, |g| {
+            let bytes = g.usize_in(0, 1 << 30);
+            let m = g.usize_in(0, 1024);
+            let inst = NetworkModel::instant();
+            assert_eq!(inst.transfer_time(bytes), 0.0);
+            assert_eq!(inst.collective_time(m, bytes), 0.0);
+            let lat = g.f64_in(1e-9, 1e-1);
+            let net = NetworkModel { latency_s: lat, bandwidth_bps: 1e9 };
+            assert_eq!(net.transfer_time(0), lat);
+            assert!(net.transfer_time(bytes) >= lat);
+        });
+    }
 }

@@ -8,11 +8,23 @@ pub struct Node {
     clock: f64,
     /// cumulative compute seconds (excludes waiting on communication)
     compute_total: f64,
+    /// false once the fault transport declares this machine dead
+    alive: bool,
 }
 
 impl Node {
     pub fn new(id: usize) -> Node {
-        Node { id, clock: 0.0, compute_total: 0.0 }
+        Node { id, clock: 0.0, compute_total: 0.0, alive: true }
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive
+    }
+
+    /// Mark the machine dead; its clock freezes and it leaves every
+    /// subsequent collective.
+    pub fn kill(&mut self) {
+        self.alive = false;
     }
 
     pub fn clock(&self) -> f64 {
@@ -52,6 +64,14 @@ mod tests {
         n.wait_until(2.0);
         assert_eq!(n.clock(), 2.0);
         assert_eq!(n.compute_total(), 1.5);
+    }
+
+    #[test]
+    fn kill_flips_alive() {
+        let mut n = Node::new(3);
+        assert!(n.alive());
+        n.kill();
+        assert!(!n.alive());
     }
 
     #[test]

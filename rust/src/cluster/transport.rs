@@ -1,0 +1,240 @@
+//! Transport abstraction between the protocol layer and the simulated
+//! network: every collective and point-to-point exchange in
+//! [`crate::cluster::Cluster`] consults a [`Transport`] before the
+//! [`crate::cluster::NetworkModel`] timing is applied.
+//!
+//! Two implementations:
+//!
+//! * [`DirectTransport`] — the failure-free in-process path. Returns
+//!   the zero [`ExchangeOutcome`] for every exchange; `Cluster`
+//!   degenerates to exactly its historical behavior (the fast default
+//!   and the bitwise equivalence oracle for the chaos suite).
+//! * [`FaultTransport`] — rolls a seeded PRNG per exchange according to
+//!   a [`FaultPlan`]: straggler delays, per-participant drop/retry
+//!   loops with exponential-backoff timeouts, and retry-exhaustion
+//!   deaths, plus scheduled phase-entry deaths drained via
+//!   [`Transport::take_deaths`].
+//!
+//! Determinism contract: outcomes are a pure function of the plan and
+//! the deterministic event order (participants visited ascending; RNG
+//! consumed only when the corresponding probability is > 0). Outcomes
+//! never depend on measured wall times, so a plan replays bitwise.
+
+use super::fault::FaultPlan;
+use crate::util::Pcg64;
+
+/// What the transport decided for one exchange.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExchangeOutcome {
+    /// Extra virtual seconds the exchange takes (timeout waits).
+    pub extra_delay_s: f64,
+    /// Dropped messages that were successfully resent.
+    pub retries: usize,
+    /// Drop-detection timeouts charged.
+    pub timeouts: usize,
+    /// Per-participant straggler delays: (machine id, seconds).
+    pub straggles: Vec<(usize, f64)>,
+    /// Participants whose retries were exhausted — now dead.
+    pub failed: Vec<usize>,
+}
+
+/// Mediates every exchange the cluster performs.
+///
+/// `root` is `Some(r)` for rooted collectives (reduce/bcast/gather):
+/// the root cannot drop out of its own collective (it is the detector,
+/// not a remote sender), so drop rolls skip it — it can still straggle,
+/// and it can still die via a scheduled [`FaultPlan::kill`].
+pub trait Transport: Send + std::fmt::Debug {
+    /// Roll faults for one exchange among `participants`.
+    fn exchange(
+        &mut self,
+        participants: &[usize],
+        root: Option<usize>,
+        bytes: usize,
+    ) -> ExchangeOutcome;
+
+    /// Drain scheduled deaths for the phase the protocol just entered.
+    fn take_deaths(&mut self, phase: &str) -> Vec<usize>;
+}
+
+/// The failure-free path: zero outcome, no deaths, no PRNG.
+#[derive(Debug, Clone, Default)]
+pub struct DirectTransport;
+
+impl Transport for DirectTransport {
+    fn exchange(
+        &mut self,
+        _participants: &[usize],
+        _root: Option<usize>,
+        _bytes: usize,
+    ) -> ExchangeOutcome {
+        ExchangeOutcome::default()
+    }
+
+    fn take_deaths(&mut self, _phase: &str) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+/// Fault-injecting transport driven by a [`FaultPlan`].
+#[derive(Debug, Clone)]
+pub struct FaultTransport {
+    plan: FaultPlan,
+    rng: Pcg64,
+    /// Scheduled deaths not yet drained.
+    pending: Vec<(usize, String)>,
+}
+
+impl FaultTransport {
+    pub fn new(plan: FaultPlan) -> FaultTransport {
+        let rng = Pcg64::new(plan.seed, 0xFA);
+        let pending = plan.deaths.clone();
+        FaultTransport { plan, rng, pending }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Transport for FaultTransport {
+    fn exchange(
+        &mut self,
+        participants: &[usize],
+        root: Option<usize>,
+        _bytes: usize,
+    ) -> ExchangeOutcome {
+        let mut out = ExchangeOutcome::default();
+        let straggling = self.plan.straggler_prob > 0.0
+            && self.plan.straggler_delay_s > 0.0;
+        for &id in participants {
+            if straggling
+                && self.rng.uniform() < self.plan.straggler_prob
+            {
+                out.straggles.push((id, self.plan.straggler_delay_s));
+            }
+            // The root of a rooted collective cannot drop its own
+            // messages (it is the timeout detector); everyone else
+            // runs the drop/retry loop.
+            if self.plan.drop_prob > 0.0 && root != Some(id) {
+                let mut attempt = 0usize;
+                loop {
+                    if self.rng.uniform() >= self.plan.drop_prob {
+                        out.retries += attempt;
+                        break;
+                    }
+                    // This attempt was dropped: the detector waits one
+                    // (backed-off) timeout before resending.
+                    out.timeouts += 1;
+                    out.extra_delay_s += self.plan.timeout_s
+                        * self.plan.backoff.powi(attempt as i32);
+                    if attempt >= self.plan.max_retries {
+                        out.failed.push(id);
+                        break;
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn take_deaths(&mut self, phase: &str) -> Vec<usize> {
+        let mut dead = Vec::new();
+        self.pending.retain(|(id, ph)| {
+            if ph == phase {
+                dead.push(*id);
+                false
+            } else {
+                true
+            }
+        });
+        dead.sort_unstable();
+        dead.dedup();
+        dead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_transport_is_inert() {
+        let mut t = DirectTransport;
+        let out = t.exchange(&[0, 1, 2], Some(0), 1024);
+        assert_eq!(out, ExchangeOutcome::default());
+        assert!(t.take_deaths("predict").is_empty());
+    }
+
+    #[test]
+    fn zero_plan_fault_transport_is_inert() {
+        let mut t = FaultTransport::new(FaultPlan::seeded(99));
+        for _ in 0..16 {
+            let out = t.exchange(&[0, 1, 2, 3], None, 64);
+            assert_eq!(out, ExchangeOutcome::default());
+        }
+        assert!(t.take_deaths("local_summary").is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_outcomes() {
+        let plan = FaultPlan::seeded(7)
+            .with_drops(0.4, 3)
+            .with_stragglers(0.5, 1e-3);
+        let mut a = FaultTransport::new(plan.clone());
+        let mut b = FaultTransport::new(plan);
+        for _ in 0..32 {
+            assert_eq!(a.exchange(&[0, 1, 2, 3], Some(0), 8),
+                       b.exchange(&[0, 1, 2, 3], Some(0), 8));
+        }
+    }
+
+    #[test]
+    fn certain_drop_exhausts_retries_except_root() {
+        let plan = FaultPlan::seeded(1)
+            .with_drops(1.0, 2)
+            .with_timeout(1e-3, 2.0);
+        let mut t = FaultTransport::new(plan);
+        let out = t.exchange(&[0, 1, 2], Some(0), 8);
+        // root 0 never rolls drops; 1 and 2 exhaust their retries
+        assert_eq!(out.failed, vec![1, 2]);
+        // 3 attempts each (initial + 2 retries), all dropped
+        assert_eq!(out.timeouts, 6);
+        // no successful resends
+        assert_eq!(out.retries, 0);
+        // backoff: per node 1e-3 * (1 + 2 + 4)
+        let per_node = 1e-3 * (1.0 + 2.0 + 4.0);
+        assert!((out.extra_delay_s - 2.0 * per_node).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rootless_exchange_rolls_everyone() {
+        let plan = FaultPlan::seeded(1).with_drops(1.0, 0);
+        let mut t = FaultTransport::new(plan);
+        let out = t.exchange(&[0, 1], None, 8);
+        assert_eq!(out.failed, vec![0, 1]);
+    }
+
+    #[test]
+    fn scheduled_deaths_drain_once_by_phase() {
+        let plan = FaultPlan::none()
+            .kill(2, "predict")
+            .kill(1, "local_summary")
+            .kill(2, "predict"); // duplicate collapses
+        let mut t = FaultTransport::new(plan);
+        assert!(t.take_deaths("global_summary").is_empty());
+        assert_eq!(t.take_deaths("local_summary"), vec![1]);
+        assert_eq!(t.take_deaths("predict"), vec![2]);
+        assert!(t.take_deaths("predict").is_empty());
+    }
+
+    #[test]
+    fn straggles_are_deterministic_and_counted() {
+        let plan = FaultPlan::seeded(3).with_stragglers(1.0, 5e-4);
+        let mut t = FaultTransport::new(plan);
+        let out = t.exchange(&[4, 7], None, 8);
+        assert_eq!(out.straggles, vec![(4, 5e-4), (7, 5e-4)]);
+        assert!(out.failed.is_empty());
+    }
+}

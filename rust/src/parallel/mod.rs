@@ -36,18 +36,24 @@ pub mod picf;
 pub mod ppic;
 pub mod ppitc;
 
-use crate::cluster::{Cluster, NetworkModel, ParallelExecutor, RunMetrics};
+use crate::cluster::{
+    Cluster, FaultPlan, FaultTransport, MachinesLost, NetworkModel,
+    ParallelExecutor, RunMetrics,
+};
 use crate::gp::Prediction;
 
 /// Cluster configuration for a protocol run: how many simulated
-/// machines, the modeled interconnect, and how node work is *actually*
+/// machines, the modeled interconnect, how node work is *actually*
 /// executed on the host (serial, or thread-parallel via
-/// [`ParallelExecutor`]).
+/// [`ParallelExecutor`]), and an optional fault-injection plan.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub machines: usize,
     pub net: NetworkModel,
     pub exec: ParallelExecutor,
+    /// When set, runs go through the fault-aware `try_run` protocol
+    /// variants over a [`FaultTransport`]; `None` is the direct path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl ClusterSpec {
@@ -57,6 +63,7 @@ impl ClusterSpec {
             machines,
             net: NetworkModel::gigabit(),
             exec: ParallelExecutor::serial(),
+            faults: None,
         }
     }
 
@@ -72,12 +79,32 @@ impl ClusterSpec {
             machines,
             net: NetworkModel::gigabit(),
             exec: ParallelExecutor::threads(threads),
+            faults: None,
         }
     }
 
-    /// Fresh simulated cluster honoring this spec's executor.
+    /// Attach a fault-injection plan to this spec.
+    pub fn with_faults(mut self, plan: FaultPlan) -> ClusterSpec {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Fresh simulated cluster honoring this spec's executor and, when
+    /// a plan is attached, its fault transport.
     pub fn cluster(&self) -> Cluster {
-        Cluster::with_exec(self.machines, self.net.clone(), self.exec.clone())
+        match &self.faults {
+            Some(plan) => Cluster::with_transport(
+                self.machines,
+                self.net.clone(),
+                self.exec.clone(),
+                Box::new(FaultTransport::new(plan.clone())),
+            ),
+            None => Cluster::with_exec(
+                self.machines,
+                self.net.clone(),
+                self.exec.clone(),
+            ),
+        }
     }
 }
 
@@ -89,9 +116,96 @@ pub struct ProtocolOutput {
     pub metrics: RunMetrics,
 }
 
+/// Result of a fault-aware protocol run that completed (possibly
+/// degraded): the usual output plus the post-rebalance block state,
+/// which the chaos suite audits for exact-once data coverage.
+#[derive(Debug, Clone)]
+pub struct FaultRun {
+    pub output: ProtocolOutput,
+    /// Final data-block ownership after any rebalancing (dead machines
+    /// own the empty block).
+    pub d_blocks: Vec<Vec<usize>>,
+    /// Final query-block routing after any re-routing.
+    pub u_blocks: Vec<Vec<usize>>,
+    /// Machines alive at the end of the run, ascending.
+    pub survivors: Vec<usize>,
+}
+
 /// Bytes of a f64 payload of `n` elements.
 pub(crate) fn f64_bytes(n: usize) -> usize {
     n * std::mem::size_of::<f64>()
+}
+
+/// Spread `rows` round-robin across `survivors`' blocks. Returns
+/// (adopter id, rows added) for each adopter that received rows.
+pub(crate) fn rebalance_rows(
+    blocks: &mut [Vec<usize>],
+    rows: &[usize],
+    survivors: &[usize],
+) -> Vec<(usize, usize)> {
+    assert!(!survivors.is_empty(), "rebalance with no survivors");
+    let mut added = vec![0usize; blocks.len()];
+    for (i, &r) in rows.iter().enumerate() {
+        let a = survivors[i % survivors.len()];
+        blocks[a].push(r);
+        added[a] += 1;
+    }
+    survivors
+        .iter()
+        .filter(|&&a| added[a] > 0)
+        .map(|&a| (a, added[a]))
+        .collect()
+}
+
+/// Move each dead machine's data rows onto survivors (round-robin),
+/// charging each adopter one block fetch of `d_row_bytes` per row.
+/// Returns the sorted adopter ids; `Err` when no machine survives.
+pub(crate) fn rebalance_dead(
+    cluster: &mut Cluster,
+    dead: &[usize],
+    d_blocks: &mut [Vec<usize>],
+    d_row_bytes: usize,
+    phase: &str,
+) -> Result<Vec<usize>, MachinesLost> {
+    if dead.is_empty() {
+        return Ok(Vec::new());
+    }
+    let survivors = cluster.alive_ids();
+    if survivors.is_empty() {
+        return Err(MachinesLost::at(phase, cluster.size()));
+    }
+    let mut adopters = Vec::new();
+    for &dm in dead {
+        let rows = std::mem::take(&mut d_blocks[dm]);
+        for (a, count) in rebalance_rows(d_blocks, &rows, &survivors) {
+            cluster.rebalance_fetch(a, d_row_bytes * count);
+            adopters.push(a);
+        }
+    }
+    adopters.sort_unstable();
+    adopters.dedup();
+    Ok(adopters)
+}
+
+/// Re-route each dead machine's query rows round-robin across
+/// survivors (the reporting-side counterpart of [`rebalance_dead`];
+/// no-op when nobody survives — the caller errors out separately).
+pub(crate) fn reroute_queries_round_robin(
+    cluster: &mut Cluster,
+    dead: &[usize],
+    u_blocks: &mut [Vec<usize>],
+    u_row_bytes: usize,
+) {
+    let survivors = cluster.alive_ids();
+    if survivors.is_empty() {
+        return;
+    }
+    for &dm in dead {
+        let rows = std::mem::take(&mut u_blocks[dm]);
+        for (a, count) in rebalance_rows(u_blocks, &rows, &survivors) {
+            cluster.rebalance_fetch(a, u_row_bytes * count);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -118,5 +232,36 @@ mod tests {
     #[test]
     fn f64_bytes_counts() {
         assert_eq!(f64_bytes(3), 24);
+    }
+
+    #[test]
+    fn with_faults_builds_fault_cluster() {
+        let s = ClusterSpec::new(3)
+            .with_faults(FaultPlan::seeded(4).kill(1, "predict"));
+        assert!(s.faults.is_some());
+        let mut c = s.cluster();
+        assert_eq!(c.take_deaths("predict"), vec![1]);
+        assert_eq!(c.alive_ids(), vec![0, 2]);
+    }
+
+    #[test]
+    fn rebalance_rows_round_robin_conserves() {
+        let mut blocks = vec![vec![0, 1], vec![], vec![2]];
+        let adopted = rebalance_rows(&mut blocks, &[3, 4, 5], &[0, 2]);
+        assert_eq!(blocks[0], vec![0, 1, 3, 5]);
+        assert_eq!(blocks[2], vec![2, 4]);
+        assert_eq!(adopted, vec![(0, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn rebalance_dead_errors_without_survivors() {
+        let s = ClusterSpec::new(2)
+            .with_faults(FaultPlan::none().kill(0, "p").kill(1, "p"));
+        let mut c = s.cluster();
+        let dead = c.take_deaths("p");
+        let mut blocks = vec![vec![0], vec![1]];
+        let r = rebalance_dead(&mut c, &dead, &mut blocks, 8, "p");
+        assert!(r.is_err());
+        assert_eq!(r.unwrap_err().phase, "p");
     }
 }

@@ -5,14 +5,129 @@
 //! pivot's factor-column prefix, and each machine updates its slab —
 //! O(R²·log M) communication, matching Table 1.
 
-use super::{f64_bytes, ClusterSpec, ProtocolOutput};
+use super::{f64_bytes, ClusterSpec, FaultRun, ProtocolOutput};
 use crate::cluster::mpi::MASTER;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, MachinesLost};
 use crate::gp::summaries::{IcfGlobalSummary, IcfLocalSummary};
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
 use crate::runtime::Backend;
+
+/// One completed iteration of the row-based parallel ICF: everything a
+/// survivor needs to rebuild any machine's factor column
+/// bitwise-exactly (the pivot's global row, its pinned diagonal value,
+/// and the broadcast factor prefix).
+#[derive(Debug, Clone)]
+pub struct PivotRecord {
+    pub global: usize,
+    pub piv: f64,
+    pub prefix: Vec<f64>,
+}
+
+/// Rebuild factor column `gi` (plus its residual) by replaying the
+/// pivot records — the exact recurrence the owning machine ran, so the
+/// rebuilt column is bitwise-identical to the lost one.
+fn rebuilt_column(
+    hyp: &SeArd,
+    xd: &Mat,
+    records: &[PivotRecord],
+    gi: usize,
+) -> (Vec<f64>, f64) {
+    let x_c = xd.row(gi);
+    let mut col = vec![0.0; records.len()];
+    let mut resid = hyp.sf2();
+    for (k, rec) in records.iter().enumerate() {
+        let x_piv = xd.row(rec.global);
+        let mut v = hyp.k(x_piv, x_c);
+        for (t, &pf) in rec.prefix.iter().enumerate() {
+            v -= pf * col[t];
+        }
+        let mut val = v / rec.piv;
+        if rec.global == gi {
+            val = rec.piv; // the pin (mirrors linalg::icf)
+        }
+        col[k] = val;
+        resid -= val * val;
+        if rec.global == gi {
+            resid = 0.0;
+        }
+    }
+    (col, resid)
+}
+
+/// Move each dead machine's factor columns onto survivors: rows go
+/// round-robin, each adopter pays one block fetch and rebuilds the
+/// adopted columns (and residuals, when mid-factorization) from the
+/// pivot records. Returns the sorted adopter ids.
+#[allow(clippy::too_many_arguments)]
+fn adopt_columns(
+    cluster: &mut Cluster,
+    dead: &[usize],
+    db: &mut [Vec<usize>],
+    slabs: &mut [Mat],
+    mut resid: Option<&mut [Vec<f64>]>,
+    records: &[PivotRecord],
+    hyp: &SeArd,
+    xd: &Mat,
+    rank: usize,
+    phase: &str,
+) -> Result<Vec<usize>, MachinesLost> {
+    if dead.is_empty() {
+        return Ok(Vec::new());
+    }
+    let survivors = cluster.alive_ids();
+    if survivors.is_empty() {
+        return Err(MachinesLost::at(phase, cluster.size()));
+    }
+    let d_row_bytes = f64_bytes(xd.cols + 1);
+    let mut adopters = Vec::new();
+    for &dm in dead {
+        let rows = std::mem::take(&mut db[dm]);
+        slabs[dm] = Mat::zeros(rank, 0);
+        if let Some(r) = resid.as_deref_mut() {
+            r[dm].clear();
+        }
+        let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); survivors.len()];
+        for (i, &gi) in rows.iter().enumerate() {
+            assigned[i % survivors.len()].push(gi);
+        }
+        for (j, new_rows) in assigned.into_iter().enumerate() {
+            if new_rows.is_empty() {
+                continue;
+            }
+            let a = survivors[j];
+            cluster.rebalance_fetch(a, d_row_bytes * new_rows.len());
+            let rebuilt: Vec<(Vec<f64>, f64)> = cluster.compute_on(a, || {
+                new_rows
+                    .iter()
+                    .map(|&gi| rebuilt_column(hyp, xd, records, gi))
+                    .collect()
+            });
+            let old = slabs[a].cols;
+            let mut grown = Mat::zeros(rank, old + rebuilt.len());
+            for t in 0..rank {
+                for c in 0..old {
+                    grown[(t, c)] = slabs[a][(t, c)];
+                }
+                for (c, (col, _)) in rebuilt.iter().enumerate() {
+                    if t < col.len() {
+                        grown[(t, old + c)] = col[t];
+                    }
+                }
+            }
+            slabs[a] = grown;
+            if let Some(r) = resid.as_deref_mut() {
+                r[a].extend(rebuilt.iter().map(|(_, res)| *res));
+            }
+            db[a].extend(new_rows);
+            adopters.push(a);
+        }
+    }
+    adopters.sort_unstable();
+    adopters.dedup();
+    Ok(adopters)
+}
 
 /// Distributed row-based parallel ICF (Step 2).
 ///
@@ -183,6 +298,402 @@ pub fn run(
     ProtocolOutput { prediction, metrics: cluster.finish() }
 }
 
+/// Local pivot-candidate scan over the machines still alive (step (a)
+/// of the fault-aware factorization). `-inf` marks an empty block.
+fn scan_candidates(
+    cluster: &mut Cluster,
+    db: &[Vec<usize>],
+    resid: &[Vec<f64>],
+) -> Vec<Option<(f64, usize)>> {
+    cluster.compute_alive_inline(|mid| {
+        let blk = &db[mid];
+        resid[mid]
+            .iter()
+            .enumerate()
+            .fold((f64::NEG_INFINITY, 0usize), |acc, (i, &v)| {
+                let better =
+                    v > acc.0 || (v == acc.0 && blk[i] < blk[acc.1]);
+                if better { (v, i) } else { acc }
+            })
+    })
+}
+
+/// Fault-aware row-based parallel ICF: the statement-for-statement
+/// mirror of [`parallel_icf`] with bounded-retry collectives. A machine
+/// that exhausts its retries (or is scheduled to die at phase
+/// `"parallel_icf"`) drops out mid-factorization; its columns are
+/// rebuilt bitwise on survivors from the pivot records *as of before
+/// the in-flight iteration*, so the surviving factor is exactly the one
+/// the fault-free run produces. Returns the slabs plus the records
+/// (later phases use them to adopt columns of machines dying then).
+pub fn parallel_icf_ft(
+    hyp: &SeArd,
+    xd: &Mat,
+    db: &mut [Vec<usize>],
+    rank: usize,
+    cluster: &mut Cluster,
+) -> Result<(Vec<Mat>, Vec<PivotRecord>), MachinesLost> {
+    let d = xd.cols;
+    let rank = rank.min(xd.rows);
+
+    let mut resid: Vec<Vec<f64>> =
+        db.iter().map(|b| vec![hyp.sf2(); b.len()]).collect();
+    let mut slabs: Vec<Mat> =
+        db.iter().map(|b| Mat::zeros(rank, b.len())).collect();
+    let mut records: Vec<PivotRecord> = Vec::new();
+
+    // deaths scheduled at factorization entry: no factor state exists
+    // yet, so adoption just moves the data rows
+    let dead = cluster.take_deaths("parallel_icf");
+    adopt_columns(cluster, &dead, db, &mut slabs, Some(&mut resid),
+                  &records, hyp, xd, rank, "parallel_icf")?;
+
+    for k in 0..rank {
+        // (a) candidates on the machines still alive
+        let mut candidates = scan_candidates(cluster, db, &resid);
+
+        // (b) allreduce MAXLOC with bounded retries; a machine that
+        // exhausts them dies, its columns move, and the scan re-runs
+        loop {
+            let failed = cluster.allreduce(16);
+            if failed.is_empty() {
+                break;
+            }
+            adopt_columns(cluster, &failed, db, &mut slabs,
+                          Some(&mut resid), &records, hyp, xd, rank,
+                          "parallel_icf")?;
+            candidates = scan_candidates(cluster, db, &resid);
+        }
+        // MAXLOC over the alive candidates; skipping the -inf sentinel
+        // also guards the empty-block indexing panic the plain fold
+        // would hit when machine 0 owns no columns
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (mid, cand) in candidates.iter().enumerate() {
+            let (v, i) = match cand {
+                Some(c) => (c.0, c.1),
+                None => continue,
+            };
+            if v == f64::NEG_INFINITY {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bv, bm, bi)) => {
+                    v > bv || (v == bv && db[mid][i] < db[bm][bi])
+                }
+            };
+            if better {
+                best = Some((v, mid, i));
+            }
+        }
+        let (piv_val, mut owner, mut local_i) = match best {
+            Some(b) => b,
+            None => break, // no columns left anywhere
+        };
+        if piv_val <= 0.0 {
+            break; // numerically exhausted — slabs keep zero rows
+        }
+        let pivot_global = db[owner][local_i];
+        let piv = piv_val.sqrt();
+
+        // (c) broadcast of x_pivot + factor prefix, bounded retries. A
+        // receiver dying here hands its columns on *before* update k is
+        // applied — and the pivot owner itself may be among the dead,
+        // so re-locate the pivot column afterwards.
+        let prefix: Vec<f64> =
+            (0..k).map(|t| slabs[owner][(t, local_i)]).collect();
+        let failed = cluster.bcast_from_master(f64_bytes(d + k));
+        if !failed.is_empty() {
+            adopt_columns(cluster, &failed, db, &mut slabs,
+                          Some(&mut resid), &records, hyp, xd, rank,
+                          "parallel_icf")?;
+            let mut found = None;
+            'relocate: for (mid, blk) in db.iter().enumerate() {
+                if !cluster.is_alive(mid) {
+                    continue;
+                }
+                for (ci, &g) in blk.iter().enumerate() {
+                    if g == pivot_global {
+                        found = Some((mid, ci));
+                        break 'relocate;
+                    }
+                }
+            }
+            let (o, li) =
+                found.expect("pivot column must survive adoption");
+            owner = o;
+            local_i = li;
+        }
+
+        // (d) alive machines update their slab row k
+        let x_piv: Vec<f64> = xd.row(pivot_global).to_vec();
+        let mut updates: Vec<Option<Vec<f64>>> =
+            cluster.compute_alive(|mid| {
+                let blk = &db[mid];
+                let slab = &slabs[mid];
+                let mut row = vec![0.0; blk.len()];
+                for (c, &gi) in blk.iter().enumerate() {
+                    let mut v = hyp.k(&x_piv, xd.row(gi));
+                    for (t, &pf) in prefix.iter().enumerate() {
+                        v -= pf * slab[(t, c)];
+                    }
+                    row[c] = v / piv;
+                }
+                row
+            });
+        if let Some(row) = updates[owner].as_mut() {
+            row[local_i] = piv;
+        }
+        for (mid, row) in updates.into_iter().enumerate() {
+            if let Some(row) = row {
+                for (c, v) in row.into_iter().enumerate() {
+                    slabs[mid][(k, c)] = v;
+                    resid[mid][c] -=
+                        slabs[mid][(k, c)] * slabs[mid][(k, c)];
+                }
+            }
+        }
+        resid[owner][local_i] = 0.0;
+        // pushed *after* update k: a mid-iteration adoption rebuilds
+        // state as of before this row, and the adopter then applies
+        // update k through the normal step (d) path
+        records.push(PivotRecord { global: pivot_global, piv, prefix });
+    }
+    Ok((slabs, records))
+}
+
+/// Fault-aware pICF protocol (Steps 2–6): mirrors [`run`] with
+/// scheduled-death and retry-exhaustion handling at every phase. Lost
+/// factor columns are rebuilt bitwise from the pivot records; before
+/// the global summary is sealed adopters recompute their merged local
+/// summaries, and after the seal they recompute their merged component
+/// predictions against the *sealed* global — survivor blocks always
+/// cover all data exactly once, and the finalized prediction differs
+/// from fault-free only by float re-association of the component sums.
+#[allow(clippy::too_many_arguments)]
+pub fn try_run(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    rank: usize,
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> Result<FaultRun, MachinesLost> {
+    let m = spec.machines;
+    assert_eq!(d_blocks.len(), m);
+    let u = xu.rows;
+    let mut cluster = spec.cluster();
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let mut db: Vec<Vec<usize>> = d_blocks.to_vec();
+
+    /// Adopters rebuild their merged local summary (pre- or post-seal:
+    /// the local depends only on the machine's own columns).
+    #[allow(clippy::too_many_arguments)]
+    fn relocal(
+        cluster: &mut Cluster,
+        adopters: &[usize],
+        db: &[Vec<usize>],
+        slabs: &[Mat],
+        locals: &mut [Option<IcfLocalSummary>],
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        y_mean: f64,
+        xu: &Mat,
+        backend: &dyn Backend,
+    ) {
+        for &a in adopters {
+            locals[a] = Some(cluster.compute_on(a, || {
+                let xm = xd.select_rows(&db[a]);
+                let ym: Vec<f64> =
+                    db[a].iter().map(|&i| y[i] - y_mean).collect();
+                backend.icf_local(hyp, &xm, &ym, xu, &slabs[a])
+            }));
+        }
+    }
+
+    /// Adopters rebuild their merged predictive component against the
+    /// sealed global summary.
+    #[allow(clippy::too_many_arguments)]
+    fn recomp(
+        cluster: &mut Cluster,
+        adopters: &[usize],
+        db: &[Vec<usize>],
+        locals: &[Option<IcfLocalSummary>],
+        comps: &mut [Option<Prediction>],
+        global: &IcfGlobalSummary,
+        hyp: &SeArd,
+        xd: &Mat,
+        y: &[f64],
+        y_mean: f64,
+        xu: &Mat,
+        backend: &dyn Backend,
+    ) {
+        for &a in adopters {
+            comps[a] = Some(cluster.compute_on(a, || {
+                let xm = xd.select_rows(&db[a]);
+                let ym: Vec<f64> =
+                    db[a].iter().map(|&i| y[i] - y_mean).collect();
+                let l =
+                    locals[a].as_ref().expect("adopter has a summary");
+                backend.icf_predict(hyp, xu, &xm, &ym, &l.s_dot, global)
+            }));
+        }
+    }
+
+    // STEP 2: row-based parallel ICF (fault-aware).
+    let (mut slabs, records) =
+        parallel_icf_ft(hyp, xd, &mut db, rank, &mut cluster)?;
+    let r = slabs[0].rows;
+    cluster.phase("parallel_icf");
+
+    // STEP 3: local summaries; deaths before or during the gather hand
+    // columns to adopters, who recompute (the global is not yet sealed).
+    let dead = cluster.take_deaths("icf_local");
+    adopt_columns(&mut cluster, &dead, &mut db, &mut slabs, None,
+                  &records, hyp, xd, r, "icf_local")?;
+    let mut locals: Vec<Option<IcfLocalSummary>> =
+        cluster.compute_alive(|mid| {
+            let xm = xd.select_rows(&db[mid]);
+            let ym: Vec<f64> =
+                db[mid].iter().map(|&i| y[i] - y_mean).collect();
+            backend.icf_local(hyp, &xm, &ym, xu, &slabs[mid])
+        });
+    loop {
+        let failed =
+            cluster.gather_to_master(f64_bytes(r * r + r * u + r));
+        if failed.is_empty() {
+            break;
+        }
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &failed, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "icf_local")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+    }
+    cluster.phase("icf_local");
+
+    // STEP 4: master builds + broadcasts the global summary. Deaths at
+    // phase entry precede the seal, so adopters recompute their locals
+    // and the sum below still covers every column exactly once.
+    let dead = cluster.take_deaths("icf_global");
+    if !dead.is_empty() {
+        for &dm in &dead {
+            locals[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &dead, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "icf_global")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+    }
+    let root = cluster.master();
+    let global: IcfGlobalSummary = cluster.compute_on(root, || {
+        let mut sum_y = vec![0.0; r];
+        let mut sum_s = Mat::zeros(r, u);
+        let mut sum_phi = Mat::zeros(r, r);
+        for l in locals.iter().filter_map(|o| o.as_ref()) {
+            for i in 0..r {
+                sum_y[i] += l.y_dot[i];
+            }
+            sum_s.add_assign(&l.s_dot);
+            sum_phi.add_assign(&l.phi);
+        }
+        backend.icf_global(hyp, &sum_y, &sum_s, &sum_phi)
+    });
+    // the global is sealed from here on; broadcast-failure deaths only
+    // move columns and recompute locals against them
+    let failed = cluster.bcast_from_master(f64_bytes(r * u + r));
+    if !failed.is_empty() {
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &failed, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "icf_global")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+    }
+    cluster.phase("icf_global");
+
+    // STEP 5: predictive components on alive machines.
+    let dead = cluster.take_deaths("icf_components");
+    if !dead.is_empty() {
+        for &dm in &dead {
+            locals[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &dead, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "icf_components")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+    }
+    let mut comps: Vec<Option<Prediction>> =
+        cluster.compute_alive(|mid| {
+            let xm = xd.select_rows(&db[mid]);
+            let ym: Vec<f64> =
+                db[mid].iter().map(|&i| y[i] - y_mean).collect();
+            let l = locals[mid].as_ref().expect("alive has a summary");
+            backend.icf_predict(hyp, xu, &xm, &ym, &l.s_dot, &global)
+        });
+    loop {
+        let failed = cluster.gather_to_master(f64_bytes(2 * u));
+        if failed.is_empty() {
+            break;
+        }
+        for &dm in &failed {
+            locals[dm] = None;
+            comps[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &failed, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "icf_components")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+        recomp(&mut cluster, &adopters, &db, &locals, &mut comps,
+               &global, hyp, xd, y, y_mean, xu, backend);
+    }
+    cluster.phase("icf_components");
+
+    // STEP 6: deaths at finalize entry lose a component contribution —
+    // the adopter re-derives it before the master sums.
+    let dead = cluster.take_deaths("finalize");
+    if !dead.is_empty() {
+        for &dm in &dead {
+            locals[dm] = None;
+            comps[dm] = None;
+        }
+        let adopters =
+            adopt_columns(&mut cluster, &dead, &mut db, &mut slabs,
+                          None, &records, hyp, xd, r, "finalize")?;
+        relocal(&mut cluster, &adopters, &db, &slabs, &mut locals, hyp,
+                xd, y, y_mean, xu, backend);
+        recomp(&mut cluster, &adopters, &db, &locals, &mut comps,
+               &global, hyp, xd, y, y_mean, xu, backend);
+    }
+    let root = cluster.master();
+    let mut prediction = cluster.compute_on(root, || {
+        let refs: Vec<&Prediction> =
+            comps.iter().filter_map(|o| o.as_ref()).collect();
+        crate::gp::summaries::icf_finalize(hyp, u, &refs)
+    });
+    prediction.shift_mean(y_mean);
+    cluster.phase("finalize");
+
+    let survivors = cluster.alive_ids();
+    Ok(FaultRun {
+        output: ProtocolOutput { prediction, metrics: cluster.finish() },
+        d_blocks: db,
+        u_blocks: vec![Vec::new(); m],
+        survivors,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +799,88 @@ mod tests {
                      &ClusterSpec::new(m));
         assert!(hi.metrics.bytes_sent > lo.metrics.bytes_sent);
         assert!(hi.metrics.messages > lo.metrics.messages);
+    }
+
+    /// Zero-fault fault-aware factorization is bitwise the plain one,
+    /// and every factor column can be rebuilt bitwise from the pivot
+    /// records alone (the property column adoption relies on).
+    #[test]
+    fn ft_factor_bitwise_and_rebuildable() {
+        prop_check("picf-ft-bitwise", 6, |g| {
+            let d = g.usize_in(1, 3);
+            let m = g.usize_in(1, 4);
+            let n = m * g.usize_in(2, 5);
+            let rank = g.usize_in(1, n + 1).min(n);
+            let hyp = rand_hyp(g, d);
+            let xd = Mat::from_vec(n, d, g.uniform_vec(n * d, -2.0, 2.0));
+            let d_blocks = random_partition(n, m, g.rng());
+
+            let net = crate::cluster::NetworkModel::instant;
+            let mut plain_c = Cluster::new(m, net());
+            let plain = parallel_icf(&hyp, &xd, &d_blocks, rank,
+                                     &mut plain_c);
+            let spec = ClusterSpec {
+                machines: m,
+                net: net(),
+                exec: crate::cluster::ParallelExecutor::serial(),
+                faults: Some(crate::cluster::FaultPlan::none()),
+            };
+            let mut db = d_blocks.to_vec();
+            let (slabs, records) =
+                parallel_icf_ft(&hyp, &xd, &mut db, rank,
+                                &mut spec.cluster())
+                    .expect("no faults");
+            assert_eq!(db, d_blocks);
+            for mid in 0..m {
+                assert_eq!(plain[mid].data.len(), slabs[mid].data.len());
+                for (a, b) in
+                    plain[mid].data.iter().zip(slabs[mid].data.iter())
+                {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (c, &gi) in d_blocks[mid].iter().enumerate() {
+                    let (col, _) =
+                        rebuilt_column(&hyp, &xd, &records, gi);
+                    for (t, &v) in col.iter().enumerate() {
+                        assert_eq!(v.to_bits(),
+                                   slabs[mid][(t, c)].to_bits(),
+                                   "column {gi} row {t}");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Killing a machine at each pICF phase still completes with exact
+    /// survivor coverage of all data rows.
+    #[test]
+    fn death_at_each_phase_completes() {
+        let mut rng = crate::util::Pcg64::seed(11);
+        let (n, u, m, d) = (20, 5, 4, 2);
+        let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+        let y = rng.normals(n);
+        let d_blocks = random_partition(n, m, &mut rng);
+        for phase in ["parallel_icf", "icf_local", "icf_global",
+                      "icf_components", "finalize"] {
+            let spec = ClusterSpec::new(m).with_faults(
+                crate::cluster::FaultPlan::none().kill(1, phase));
+            let fr = try_run(&hyp, &xd, &y, &xu, &d_blocks, 6,
+                             &NativeBackend, &spec)
+                .unwrap_or_else(|e| panic!("{phase}: {e}"));
+            assert!(fr.d_blocks[1].is_empty(), "{phase}");
+            assert_eq!(fr.survivors, vec![0, 2, 3], "{phase}");
+            let mut covered: Vec<usize> =
+                fr.d_blocks.iter().flatten().copied().collect();
+            covered.sort_unstable();
+            assert_eq!(covered, (0..n).collect::<Vec<_>>(), "{phase}");
+            assert_eq!(fr.output.prediction.len(), u);
+            assert!(fr.output.prediction.mean.iter()
+                        .all(|v| v.is_finite()), "{phase}");
+            assert!(fr.output.metrics.faults.deaths == 1, "{phase}");
+            assert!(fr.output.metrics.faults.rebalances >= 1, "{phase}");
+        }
     }
 
     /// Phases present in protocol order.

@@ -3,14 +3,19 @@
 //! optionally preceded by the parallelized clustering scheme (Remark 2)
 //! whose extra O(|D|) time and O((|D|/M)·log M) traffic Table 1 charges.
 
-use super::{f64_bytes, ClusterSpec, ProtocolOutput};
+use super::{
+    f64_bytes, rebalance_dead, reroute_queries_round_robin, ClusterSpec,
+    FaultRun, ProtocolOutput,
+};
 use crate::cluster::mpi::MASTER;
+use crate::cluster::{Cluster, MachinesLost};
 use crate::data::partition::{cluster_partition, random_partition};
-use crate::gp::summaries::SupportContext;
+use crate::gp::summaries::{LocalSummary, SupportContext};
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
 use crate::runtime::Backend;
+use crate::server::router::Router;
 use crate::util::{Pcg64, Stopwatch};
 
 /// Partitioning mode for Step 1.
@@ -178,6 +183,201 @@ pub fn run_with_partition(
         prediction: Prediction::scatter(&preds, u_blocks, xu.rows),
         metrics: cluster.finish(),
     }
+}
+
+/// Fault-aware pPIC over fixed partitions: the same protocol as
+/// [`run_with_partition`], mediated by `spec`'s fault transport.
+///
+/// Rebalance semantics: while the global summary is still open, a dead
+/// machine's data rows move round-robin onto survivors and the
+/// adopters recompute their local summaries, so the sealed summary
+/// still covers every row. *After* the seal the per-machine local
+/// blocks backing Definition 5's own-block term are frozen (merging
+/// rows then would desynchronize them from the already-computed local
+/// summaries); late deaths only move ownership, and their query rows
+/// re-route through the [`Router`] to the survivor whose frozen block
+/// is most correlated — those queries lose the dead machine's local
+/// correction but keep the full global-summary term. With a zero plan
+/// the result is bitwise-identical to [`run_with_partition`].
+#[allow(clippy::too_many_arguments)]
+pub fn try_run_with_partition(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    u_blocks: &[Vec<usize>],
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> Result<FaultRun, MachinesLost> {
+    let m = spec.machines;
+    assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
+    assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
+    let s = xs.rows;
+    let mut cluster = spec.cluster();
+    let lctx = spec.exec.linalg_ctx();
+    let d_row_bytes = f64_bytes(xd.cols + 1);
+    let u_row_bytes = f64_bytes(xu.cols);
+    let mut db: Vec<Vec<usize>> = d_blocks.to_vec();
+    let mut ub: Vec<Vec<usize>> = u_blocks.to_vec();
+
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let local_of = |rows: &[usize]| {
+        let xm = xd.select_rows(rows);
+        let ym: Vec<f64> = rows.iter().map(|&i| y[i] - y_mean).collect();
+        backend.local_summary(hyp, &xm, &ym, xs)
+    };
+    // Post-seal query re-route: nearest frozen survivor block in the
+    // kernel metric (the serving-time routing rule).
+    let reroute_via_router = |cluster: &mut Cluster,
+                              dead: &[usize],
+                              ub: &mut Vec<Vec<usize>>,
+                              model_blocks: &[Vec<usize>]| {
+        let survivors = cluster.alive_ids();
+        if survivors.is_empty() {
+            return;
+        }
+        let blks: Vec<Mat> = survivors
+            .iter()
+            .map(|&a| xd.select_rows(&model_blocks[a]))
+            .collect();
+        let refs: Vec<&Mat> = blks.iter().collect();
+        let router = Router::from_blocks(hyp, &refs);
+        for &dm in dead {
+            let rows = std::mem::take(&mut ub[dm]);
+            if rows.is_empty() {
+                continue;
+            }
+            let mut added = vec![0usize; survivors.len()];
+            for &r in &rows {
+                let k = router.route(xu.row(r));
+                ub[survivors[k]].push(r);
+                added[k] += 1;
+            }
+            for (k, &c) in added.iter().enumerate() {
+                if c > 0 {
+                    cluster.rebalance_fetch(survivors[k], u_row_bytes * c);
+                }
+            }
+        }
+    };
+
+    // Deaths at partition time: rebalance before anyone computes.
+    let dead = cluster.take_deaths("partition");
+    rebalance_dead(&mut cluster, &dead, &mut db, d_row_bytes, "partition")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+    cluster.phase("partition");
+
+    let dead = cluster.take_deaths("local_summary");
+    rebalance_dead(&mut cluster, &dead, &mut db, d_row_bytes,
+                   "local_summary")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+
+    // STEP 2: local summaries on the alive machines.
+    let mut locals: Vec<Option<LocalSummary>> =
+        cluster.compute_alive(|mid| local_of(&db[mid]));
+    cluster.phase("local_summary");
+
+    // Deaths on entering Step 3: adopters recompute enlarged summaries.
+    let dead = cluster.take_deaths("global_summary");
+    for &dm in &dead {
+        locals[dm] = None;
+    }
+    let adopters = rebalance_dead(&mut cluster, &dead, &mut db,
+                                  d_row_bytes, "global_summary")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+    for &a in &adopters {
+        locals[a] = Some(cluster.compute_on(a, || local_of(&db[a])));
+    }
+
+    // STEP 3: reduce with bounded retry (each round kills ≥1 machine).
+    loop {
+        let failed = cluster.reduce_to_master(f64_bytes(s * s + s));
+        if failed.is_empty() {
+            break;
+        }
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        let adopters = rebalance_dead(&mut cluster, &failed, &mut db,
+                                      d_row_bytes, "global_summary")?;
+        reroute_queries_round_robin(&mut cluster, &failed, &mut ub,
+                                    u_row_bytes);
+        for &a in &adopters {
+            locals[a] = Some(cluster.compute_on(a, || local_of(&db[a])));
+        }
+    }
+    let root = cluster.master();
+    let (sctx, global, l_g) = cluster.compute_on(root, || {
+        let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
+        let refs: Vec<&LocalSummary> =
+            locals.iter().filter_map(|o| o.as_ref()).collect();
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let l_g = crate::gp::summaries::chol_global_ctx(&lctx, &global);
+        (ctx, global, l_g)
+    });
+    // The summary is sealed: freeze the per-machine blocks that back
+    // Definition 5's own-block term.
+    let model_blocks = db.clone();
+    let failed = cluster.bcast_from_master(f64_bytes(s * s + s));
+    if !failed.is_empty() {
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        rebalance_dead(&mut cluster, &failed, &mut db, d_row_bytes,
+                       "global_summary")?;
+        reroute_via_router(&mut cluster, &failed, &mut ub, &model_blocks);
+    }
+    cluster.phase("global_summary");
+
+    // Deaths on entering Step 4: ownership + router re-route only.
+    let dead = cluster.take_deaths("predict");
+    rebalance_dead(&mut cluster, &dead, &mut db, d_row_bytes, "predict")?;
+    reroute_via_router(&mut cluster, &dead, &mut ub, &model_blocks);
+
+    // STEP 4: distributed predictions with the frozen local blocks.
+    let preds = cluster.compute_alive(|mid| {
+        let xu_m = xu.select_rows(&ub[mid]);
+        let xm = xd.select_rows(&model_blocks[mid]);
+        let ym: Vec<f64> =
+            model_blocks[mid].iter().map(|&i| y[i] - y_mean).collect();
+        let mut p = backend.ppic_predict_staged(
+            hyp, &xu_m, &sctx, &xm, &ym,
+            locals[mid].as_ref().expect("alive machine has a summary"),
+            &global, &l_g,
+        );
+        p.shift_mean(y_mean);
+        p
+    });
+    cluster.phase("predict");
+
+    // collect (reporting only): retries re-gather; data still hands on.
+    let max_u = ub.iter().map(Vec::len).max().unwrap_or(0);
+    loop {
+        let failed = cluster.gather_to_master(f64_bytes(2 * max_u));
+        if failed.is_empty() {
+            break;
+        }
+        rebalance_dead(&mut cluster, &failed, &mut db, d_row_bytes,
+                       "collect")?;
+    }
+    cluster.phase("collect");
+
+    let survivors = cluster.alive_ids();
+    let preds: Vec<Prediction> = preds
+        .into_iter()
+        .map(|p| p.unwrap_or_else(Prediction::empty))
+        .collect();
+    Ok(FaultRun {
+        output: ProtocolOutput {
+            prediction: Prediction::scatter(&preds, &ub, xu.rows),
+            metrics: cluster.finish(),
+        },
+        d_blocks: db,
+        u_blocks: ub,
+        survivors,
+    })
 }
 
 #[cfg(test)]

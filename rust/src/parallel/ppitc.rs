@@ -7,9 +7,13 @@
 //! gathers predictions to the master for reporting — it is *outside* the
 //! paper's protocol, so it is recorded as a separate phase.
 
-use super::{f64_bytes, ClusterSpec, ProtocolOutput};
+use super::{
+    f64_bytes, rebalance_dead, reroute_queries_round_robin, ClusterSpec,
+    FaultRun, ProtocolOutput,
+};
 use crate::cluster::mpi::MASTER;
-use crate::gp::summaries::SupportContext;
+use crate::cluster::MachinesLost;
+use crate::gp::summaries::{LocalSummary, SupportContext};
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
@@ -88,6 +92,162 @@ pub fn run(
         prediction: Prediction::scatter(&preds, u_blocks, xu.rows),
         metrics: cluster.finish(),
     }
+}
+
+/// Fault-aware pPITC: the same Step 1–4 protocol as [`run`], mediated
+/// by `spec`'s fault transport. On machine death the master rebalances
+/// the dead machine's data rows round-robin onto survivors, adopters
+/// recompute their (enlarged) local summaries before the global
+/// summary is sealed, and query rows re-route round-robin; after the
+/// seal, deaths only move ownership — pPITC predictions depend solely
+/// on the sealed global summary, so they stay well-defined. With a
+/// zero plan the result is bitwise-identical to [`run`]. Errs only
+/// when every machine is lost.
+#[allow(clippy::too_many_arguments)]
+pub fn try_run(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    xu: &Mat,
+    d_blocks: &[Vec<usize>],
+    u_blocks: &[Vec<usize>],
+    backend: &dyn Backend,
+    spec: &ClusterSpec,
+) -> Result<FaultRun, MachinesLost> {
+    let m = spec.machines;
+    assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
+    assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
+    let s = xs.rows;
+    let mut cluster = spec.cluster();
+    let lctx = spec.exec.linalg_ctx();
+    // rebalance payload: one data row is d coords + 1 target
+    let d_row_bytes = f64_bytes(xd.cols + 1);
+    let u_row_bytes = f64_bytes(xu.cols);
+    let mut db: Vec<Vec<usize>> = d_blocks.to_vec();
+    let mut ub: Vec<Vec<usize>> = u_blocks.to_vec();
+
+    let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
+    let local_of = |rows: &[usize]| {
+        let xm = xd.select_rows(rows);
+        let ym: Vec<f64> = rows.iter().map(|&i| y[i] - y_mean).collect();
+        backend.local_summary(hyp, &xm, &ym, xs)
+    };
+
+    // Deaths discovered on entering Step 2: rebalance before anyone
+    // computes, so adopters summarize their enlarged blocks directly.
+    let dead = cluster.take_deaths("local_summary");
+    rebalance_dead(&mut cluster, &dead, &mut db, d_row_bytes,
+                   "local_summary")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+
+    // STEP 2: local summaries on the alive machines.
+    let mut locals: Vec<Option<LocalSummary>> =
+        cluster.compute_alive(|mid| local_of(&db[mid]));
+    cluster.phase("local_summary");
+
+    // Deaths discovered on entering Step 3: adopters recompute their
+    // local summaries so the global summary still covers every row.
+    let dead = cluster.take_deaths("global_summary");
+    for &dm in &dead {
+        locals[dm] = None;
+    }
+    let adopters = rebalance_dead(&mut cluster, &dead, &mut db,
+                                  d_row_bytes, "global_summary")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+    for &a in &adopters {
+        locals[a] = Some(cluster.compute_on(a, || local_of(&db[a])));
+    }
+
+    // STEP 3: reduce with bounded retry. A retry-exhausted sender is
+    // declared dead; its block rebalances, adopters recompute, and the
+    // reduce re-issues over the survivors. Every round kills at least
+    // one machine, so the loop is bounded by M.
+    loop {
+        let failed = cluster.reduce_to_master(f64_bytes(s * s + s));
+        if failed.is_empty() {
+            break;
+        }
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        let adopters = rebalance_dead(&mut cluster, &failed, &mut db,
+                                      d_row_bytes, "global_summary")?;
+        reroute_queries_round_robin(&mut cluster, &failed, &mut ub,
+                                    u_row_bytes);
+        for &a in &adopters {
+            locals[a] = Some(cluster.compute_on(a, || local_of(&db[a])));
+        }
+    }
+    let root = cluster.master();
+    let (sctx, global, l_g) = cluster.compute_on(root, || {
+        let ctx = SupportContext::new_ctx(&lctx, hyp, xs);
+        let refs: Vec<&LocalSummary> =
+            locals.iter().filter_map(|o| o.as_ref()).collect();
+        let global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let l_g = crate::gp::summaries::chol_global_ctx(&lctx, &global);
+        (ctx, global, l_g)
+    });
+    // The global summary is sealed: a receiver dying during the bcast
+    // only hands its blocks on (no recompute — predictions no longer
+    // depend on the partition).
+    let failed = cluster.bcast_from_master(f64_bytes(s * s + s));
+    if !failed.is_empty() {
+        for &dm in &failed {
+            locals[dm] = None;
+        }
+        rebalance_dead(&mut cluster, &failed, &mut db, d_row_bytes,
+                       "global_summary")?;
+        reroute_queries_round_robin(&mut cluster, &failed, &mut ub,
+                                    u_row_bytes);
+    }
+    cluster.phase("global_summary");
+
+    // Deaths on entering Step 4: ownership + query re-route only.
+    let dead = cluster.take_deaths("predict");
+    rebalance_dead(&mut cluster, &dead, &mut db, d_row_bytes, "predict")?;
+    reroute_queries_round_robin(&mut cluster, &dead, &mut ub, u_row_bytes);
+
+    // STEP 4: distributed predictions on the alive machines.
+    let preds = cluster.compute_alive(|mid| {
+        let xu_m = xu.select_rows(&ub[mid]);
+        let mut p = backend.ppitc_predict_staged(hyp, &xu_m, &sctx,
+                                                 &global, &l_g);
+        p.shift_mean(y_mean);
+        p
+    });
+    cluster.phase("predict");
+
+    // collect (reporting only): a machine dying mid-gather had already
+    // computed its predictions; the retry round that detected the loss
+    // re-gathers them from the master's partial buffer, so no output is
+    // lost — the dead machine's data rows still hand over to survivors
+    // for the coverage audit.
+    let max_u = ub.iter().map(Vec::len).max().unwrap_or(0);
+    loop {
+        let failed = cluster.gather_to_master(f64_bytes(2 * max_u));
+        if failed.is_empty() {
+            break;
+        }
+        rebalance_dead(&mut cluster, &failed, &mut db, d_row_bytes,
+                       "collect")?;
+    }
+    cluster.phase("collect");
+
+    let survivors = cluster.alive_ids();
+    let preds: Vec<Prediction> = preds
+        .into_iter()
+        .map(|p| p.unwrap_or_else(Prediction::empty))
+        .collect();
+    Ok(FaultRun {
+        output: ProtocolOutput {
+            prediction: Prediction::scatter(&preds, &ub, xu.rows),
+            metrics: cluster.finish(),
+        },
+        d_blocks: db,
+        u_blocks: ub,
+        survivors,
+    })
 }
 
 #[cfg(test)]
@@ -208,6 +368,7 @@ mod tests {
                           machines: m,
                           net: NetworkModel::instant(),
                           exec: crate::cluster::ParallelExecutor::serial(),
+                          faults: None,
                       });
         assert!(out.metrics.makespan < out.metrics.total_compute,
                 "makespan {} !< total {}", out.metrics.makespan,

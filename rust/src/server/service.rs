@@ -6,7 +6,7 @@ use std::sync::Mutex;
 use super::batcher::{Batch, DynamicBatcher};
 use super::router::Router;
 use crate::api::ApiError;
-use crate::cluster::ParallelExecutor;
+use crate::cluster::{MachinesLost, ParallelExecutor};
 use crate::gp::predictor::{ppic_operators, OpScratch, PredictOperator};
 use crate::gp::summaries::{chol_global, GlobalSummary, LocalSummary,
                            SupportContext};
@@ -206,6 +206,63 @@ impl ServedModel {
             router,
             ops,
         }
+    }
+
+    /// Drop machine `m` from the serving deployment and rebalance its
+    /// data rows round-robin across the survivors — the serve-side
+    /// analogue of the cluster protocols' death rebalance. Every
+    /// summary, the router and the staged operators are rebuilt over
+    /// the new partition, so post-loss predictions are **bitwise**
+    /// identical to a fresh fit on the merged partition (tested).
+    ///
+    /// Errors: out-of-range `m` is [`ApiError::InvalidSpec`]; losing
+    /// the last machine is [`ApiError::MachinesLost`] (there is nobody
+    /// left to absorb the block).
+    pub fn lose_machine(
+        &mut self,
+        m: usize,
+        backend: &dyn Backend,
+    ) -> Result<(), ApiError> {
+        if m >= self.blocks.len() {
+            return Err(ApiError::invalid(format!(
+                "lose_machine: machine {m} out of range (cluster has {})",
+                self.blocks.len()
+            )));
+        }
+        if self.blocks.len() == 1 {
+            return Err(MachinesLost::at("serve", 1).into());
+        }
+        let (xm_dead, ym_dead, _) = self.blocks.remove(m);
+        let survivors = self.blocks.len();
+        let d = xm_dead.cols;
+        let mut extra_x: Vec<Vec<f64>> = vec![Vec::new(); survivors];
+        let mut extra_y: Vec<Vec<f64>> = vec![Vec::new(); survivors];
+        for i in 0..xm_dead.rows {
+            let a = i % survivors;
+            extra_x[a].extend_from_slice(xm_dead.row(i));
+            extra_y[a].push(ym_dead[i]);
+        }
+        for (a, (xm, ym, _)) in self.blocks.iter_mut().enumerate() {
+            if extra_y[a].is_empty() {
+                continue;
+            }
+            let mut data = std::mem::take(&mut xm.data);
+            data.extend_from_slice(&extra_x[a]);
+            *xm = Mat::from_vec(xm.rows + extra_y[a].len(), d, data);
+            ym.extend_from_slice(&extra_y[a]);
+        }
+        let ctx = SupportContext::new(&self.hyp, &self.xs);
+        for (xm, ym, loc) in self.blocks.iter_mut() {
+            *loc = backend.local_summary(&self.hyp, xm, ym, &self.xs);
+        }
+        let refs: Vec<&LocalSummary> =
+            self.blocks.iter().map(|(_, _, l)| l).collect();
+        self.global = crate::gp::summaries::global_summary(&ctx, &refs);
+        let xms: Vec<&Mat> = self.blocks.iter().map(|(x, _, _)| x).collect();
+        self.router = Router::from_blocks(&self.hyp, &xms);
+        self.ops = stage_ops(&self.hyp, &ctx, &self.global, &self.blocks,
+                             self.y_mean);
+        Ok(())
     }
 
     /// Predict one padded batch on machine `m` (pPIC block prediction).
@@ -696,6 +753,72 @@ mod tests {
         let (m_0, _) = model.predict_batch(&NativeBackend, 0, &q, 4, 4);
         let (m_s, _) = same.predict_batch(&NativeBackend, 0, &q, 4, 4);
         assert_eq!(m_0, m_s);
+    }
+
+    /// Losing a machine conserves every data row, shrinks the cluster
+    /// by one, and leaves predictions **bitwise** identical to a fresh
+    /// fit on the merged (round-robin rebalanced) partition.
+    #[test]
+    fn lose_machine_rebalances_and_matches_fresh_fit() {
+        let mut rng = Pcg64::seed(41);
+        let (n, d, s, m) = (24, 2, 5, 3);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.05);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let blocks = random_partition(n, m, &mut rng);
+        let mut model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
+                                         &NativeBackend).unwrap();
+        let before: usize =
+            model.blocks.iter().map(|(x, _, _)| x.rows).sum();
+        model.lose_machine(1, &NativeBackend).unwrap();
+        assert_eq!(model.machines(), m - 1);
+        let after: usize =
+            model.blocks.iter().map(|(x, _, _)| x.rows).sum();
+        assert_eq!(after, before, "rows must be conserved");
+
+        // the merged partition lose_machine produces: block 1's rows
+        // round-robined onto survivors [0, 2] in order
+        let mut merged = vec![blocks[0].clone(), blocks[2].clone()];
+        for (i, &g) in blocks[1].iter().enumerate() {
+            merged[i % 2].push(g);
+        }
+        let fresh = ServedModel::fit(&hyp, &xd, &y, &xs, &merged,
+                                     &NativeBackend).unwrap();
+        let q: Vec<f64> = rng.normals(4 * d);
+        let lctx = LinalgCtx::serial();
+        for mm in 0..m - 1 {
+            let (m_l, v_l) =
+                model.predict_batch(&NativeBackend, mm, &q, 4, 4);
+            let (m_f, v_f) =
+                fresh.predict_batch(&NativeBackend, mm, &q, 4, 4);
+            assert_eq!(m_l, m_f, "mean drifted on machine {mm}");
+            assert_eq!(v_l, v_f, "var drifted on machine {mm}");
+            // staged fast path rebuilt too
+            let mut s1 = ServeScratch::new();
+            let mut s2 = ServeScratch::new();
+            let (fm_l, fv_l) =
+                model.predict_batch_fast(mm, &q, 4, 4, &lctx, &mut s1);
+            let (fm_f, fv_f) =
+                fresh.predict_batch_fast(mm, &q, 4, 4, &lctx, &mut s2);
+            assert_eq!(fm_l, fm_f, "fast mean drifted on machine {mm}");
+            assert_eq!(fv_l, fv_f, "fast var drifted on machine {mm}");
+        }
+        // routing covers only surviving machines
+        assert!(model.router.route(&q[..d]) < m - 1);
+    }
+
+    /// Out-of-range machine ids are typed errors; losing the last
+    /// machine is `MachinesLost`, not a panic.
+    #[test]
+    fn lose_machine_rejects_bad_requests() {
+        let (mut model, _, _) = fitted(6, 2);
+        assert!(matches!(model.lose_machine(5, &NativeBackend),
+                         Err(ApiError::InvalidSpec(_))));
+        model.lose_machine(0, &NativeBackend).unwrap();
+        assert_eq!(model.machines(), 1);
+        let err = model.lose_machine(0, &NativeBackend).unwrap_err();
+        assert!(matches!(err, ApiError::MachinesLost { machines: 1, .. }));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! });
 //! ```
 
+use crate::cluster::FaultPlan;
 use crate::util::Pcg64;
 
 /// Per-case generator handle passed to properties.
@@ -59,6 +60,68 @@ impl Gen {
     /// Pick one element of a slice.
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.rng.below(items.len())]
+    }
+
+    /// Random deterministic [`FaultPlan`] over `machines` machines and
+    /// the given protocol `phases`: optional drops (bounded retries),
+    /// optional stragglers, always a finite timeout/backoff, and each
+    /// machine independently scheduled to die at a random phase with
+    /// probability 1/5. The chaos property suite feeds these to every
+    /// protocol and asserts completion-or-typed-error.
+    pub fn fault_plan(&mut self, machines: usize, phases: &[&str])
+                      -> FaultPlan {
+        let mut plan = FaultPlan::seeded(self.rng.next_u64());
+        if self.bool() {
+            plan = plan.with_drops(self.f64_in(0.0, 0.35),
+                                   self.usize_in(1, 6));
+        }
+        if self.bool() {
+            plan = plan.with_stragglers(self.f64_in(0.0, 0.6),
+                                        self.f64_in(1e-5, 5e-3));
+        }
+        plan = plan.with_timeout(self.f64_in(1e-5, 1e-3),
+                                 self.f64_in(1.0, 3.0));
+        for m in 0..machines {
+            if self.usize_in(0, 5) == 0 {
+                let phase = *self.choose(phases);
+                plan = plan.kill(m, phase);
+            }
+        }
+        plan
+    }
+}
+
+/// Run `f` on a worker thread and panic if it does not finish within
+/// `timeout` — turns a deadlocked or livelocked property into a test
+/// failure instead of a hung suite. Panics from `f` are re-raised on
+/// the caller's thread; on timeout the worker thread is leaked (fine
+/// for a failing test process).
+pub fn with_watchdog<T, F>(timeout: std::time::Duration, f: F) -> T
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    use std::sync::mpsc;
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let out = f();
+        // receiver hung up only on timeout; nothing to do then
+        let _ = tx.send(());
+        out
+    });
+    match rx.recv_timeout(timeout) {
+        // Ok: worker signalled completion. Disconnected: worker
+        // panicked before signalling (sender dropped) — join returns
+        // the payload to re-raise either way.
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            match handle.join() {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: work did not finish within {timeout:?}")
+        }
     }
 }
 
@@ -151,6 +214,59 @@ mod tests {
             from_replay = Some(g.f64_in(0.0, 1.0));
         });
         assert_eq!(from_run, from_replay);
+    }
+
+    /// The fault-plan generator is deterministic per seed and every
+    /// sampled knob stays inside its documented range.
+    #[test]
+    fn fault_plan_generator_is_deterministic_and_bounded() {
+        let phases = ["alpha", "beta", "gamma"];
+        let mut a = Gen { rng: Pcg64::seed(7), case: 0 };
+        let mut b = Gen { rng: Pcg64::seed(7), case: 0 };
+        for _ in 0..32 {
+            let pa = a.fault_plan(4, &phases);
+            let pb = b.fault_plan(4, &phases);
+            assert_eq!(pa, pb, "same seed must give the same plan");
+            assert!((0.0..=0.35).contains(&pa.drop_prob));
+            assert!(pa.max_retries >= 1 && pa.max_retries < 6);
+            assert!((0.0..=0.6).contains(&pa.straggler_prob));
+            assert!(pa.straggler_delay_s < 5e-3);
+            assert!((1e-5..1e-3).contains(&pa.timeout_s));
+            assert!((1.0..3.0).contains(&pa.backoff));
+            for (m, ph) in &pa.deaths {
+                assert!(*m < 4, "death machine {m} out of range");
+                assert!(phases.contains(&ph.as_str()), "phase {ph}");
+            }
+        }
+    }
+
+    #[test]
+    fn watchdog_passes_through_results_and_panics() {
+        let v = with_watchdog(std::time::Duration::from_secs(5), || 42);
+        assert_eq!(v, 42);
+        let r = std::panic::catch_unwind(|| {
+            with_watchdog(std::time::Duration::from_secs(5), || {
+                panic!("inner boom")
+            })
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap();
+        assert!(msg.contains("inner boom"), "{msg}");
+    }
+
+    #[test]
+    fn watchdog_times_out_hung_work() {
+        let r = std::panic::catch_unwind(|| {
+            with_watchdog(std::time::Duration::from_millis(50), || {
+                std::thread::sleep(std::time::Duration::from_secs(600));
+            })
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("watchdog"), "{msg}");
     }
 
     #[test]

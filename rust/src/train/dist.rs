@@ -31,7 +31,7 @@ use super::nlml::{
 };
 use super::optim::{minimize, AdamConfig, OptimResult};
 use crate::cluster::mpi::MASTER;
-use crate::cluster::RunMetrics;
+use crate::cluster::{Cluster, MachinesLost, RunMetrics};
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
 use crate::parallel::{f64_bytes, ClusterSpec};
@@ -106,6 +106,162 @@ pub fn nlml_and_grad_dist(
     DistEval { value: master.value, grad, metrics: cluster.finish() }
 }
 
+/// Hand every block whose owner died to a survivor (round-robin),
+/// charging the adopter one block fetch. Returns the moved block ids.
+fn reassign_blocks(
+    cluster: &mut Cluster,
+    dead: &[usize],
+    owners: &mut [usize],
+    block_bytes: &[usize],
+    phase: &str,
+) -> Result<Vec<usize>, MachinesLost> {
+    if dead.is_empty() {
+        return Ok(Vec::new());
+    }
+    let survivors = cluster.alive_ids();
+    if survivors.is_empty() {
+        return Err(MachinesLost::at(phase, cluster.size()));
+    }
+    let mut moved = Vec::new();
+    let mut next = 0usize;
+    for (k, owner) in owners.iter_mut().enumerate() {
+        if cluster.is_alive(*owner) {
+            continue;
+        }
+        *owner = survivors[next % survivors.len()];
+        next += 1;
+        cluster.rebalance_fetch(*owner, block_bytes[k]);
+        moved.push(k);
+    }
+    Ok(moved)
+}
+
+/// Fault-aware twin of [`nlml_and_grad_dist`]: the same block math in
+/// the same reduction order, but every collective runs with bounded
+/// retries and a machine that dies hands its *whole blocks* to
+/// survivors. Per-block stats depend only on the block's data, so the
+/// adopter recomputes them bitwise-identically, and because the
+/// master's sums always run in block order the evaluation equals the
+/// fault-free one **bitwise** whenever at least one machine survives.
+pub fn nlml_and_grad_dist_ft(
+    hyp: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    d_blocks: &[Vec<usize>],
+    spec: &ClusterSpec,
+) -> Result<DistEval, MachinesLost> {
+    let m = spec.machines;
+    assert_eq!(d_blocks.len(), m, "train: d_blocks vs machines");
+    assert_eq!(xd.rows, y.len(), "train: x/y length");
+    let s = xs.rows;
+    let p = hyp.dim() + 2;
+    let lctx = spec.exec.linalg_ctx();
+    let mut cluster = spec.cluster();
+
+    // block k's compute is charged to owners[k]; adoption rewires this
+    // map without touching block contents
+    let mut owners: Vec<usize> = (0..m).collect();
+    let block_bytes: Vec<usize> = d_blocks
+        .iter()
+        .map(|b| f64_bytes(b.len() * (xd.cols + 1)))
+        .collect();
+
+    // Round 0: shared support state; receivers dying during the
+    // broadcast only lose ownership (survivors already have the data).
+    let dead = cluster.take_deaths("support");
+    reassign_blocks(&mut cluster, &dead, &mut owners, &block_bytes,
+                    "support")?;
+    let root = cluster.master();
+    let sup =
+        cluster.compute_on(root, || TrainSupport::new_ctx(&lctx, hyp, xs));
+    let failed = cluster.bcast_from_master(f64_bytes(2 * s * s));
+    reassign_blocks(&mut cluster, &failed, &mut owners, &block_bytes,
+                    "support")?;
+    cluster.phase("support");
+
+    // Round 1: per-block stats on their current owners.
+    let dead = cluster.take_deaths("local_stats");
+    reassign_blocks(&mut cluster, &dead, &mut owners, &block_bytes,
+                    "local_stats")?;
+    let mut round1 = cluster.compute_owned(&owners, |k| {
+        let xm = xd.select_rows(&d_blocks[k]);
+        let ym: Vec<f64> = d_blocks[k].iter().map(|&i| y[i]).collect();
+        local_stats_ctx(&lctx, hyp, &xm, &ym, &sup)
+    });
+    cluster.phase("local_stats");
+
+    // Reduce with retry: a dead sender's blocks move and the adopter
+    // recomputes their O(|S|²) stats before the reduce re-runs.
+    let dead = cluster.take_deaths("assemble");
+    let mut pending = reassign_blocks(&mut cluster, &dead, &mut owners,
+                                      &block_bytes, "assemble")?;
+    loop {
+        for &k in &pending {
+            round1[k] = cluster.compute_on(owners[k], || {
+                let xm = xd.select_rows(&d_blocks[k]);
+                let ym: Vec<f64> =
+                    d_blocks[k].iter().map(|&i| y[i]).collect();
+                local_stats_ctx(&lctx, hyp, &xm, &ym, &sup)
+            });
+        }
+        let failed = cluster.reduce_to_master(f64_bytes(s * s + s + 2));
+        if failed.is_empty() {
+            break;
+        }
+        pending = reassign_blocks(&mut cluster, &failed, &mut owners,
+                                  &block_bytes, "assemble")?;
+    }
+    let root = cluster.master();
+    let master = cluster.compute_on(root, || {
+        let refs: Vec<&LocalStats> =
+            round1.iter().map(|(st, _)| st).collect();
+        master_assemble_ctx(&lctx, hyp, &sup, &refs, xd.rows)
+    });
+    let failed =
+        cluster.bcast_from_master(f64_bytes(2 * s * s + 2 * s));
+    reassign_blocks(&mut cluster, &failed, &mut owners, &block_bytes,
+                    "assemble")?;
+    cluster.phase("assemble");
+
+    // Round 2: per-block gradient scalars.
+    let dead = cluster.take_deaths("local_grads");
+    reassign_blocks(&mut cluster, &dead, &mut owners, &block_bytes,
+                    "local_grads")?;
+    let mut grads = cluster.compute_owned(&owners, |k| {
+        local_grad_ctx(&lctx, hyp, &round1[k].1, &sup, &master.bcast)
+    });
+    cluster.phase("local_grads");
+
+    // Final reduce, same retry shape as the stats reduce.
+    let dead = cluster.take_deaths("grad_reduce");
+    let mut pending = reassign_blocks(&mut cluster, &dead, &mut owners,
+                                      &block_bytes, "grad_reduce")?;
+    loop {
+        for &k in &pending {
+            grads[k] = cluster.compute_on(owners[k], || {
+                local_grad_ctx(&lctx, hyp, &round1[k].1, &sup,
+                               &master.bcast)
+            });
+        }
+        let failed = cluster.reduce_to_master(f64_bytes(p));
+        if failed.is_empty() {
+            break;
+        }
+        pending = reassign_blocks(&mut cluster, &failed, &mut owners,
+                                  &block_bytes, "grad_reduce")?;
+    }
+    let mut grad = master.grad_master.clone();
+    for gm in &grads {
+        for (acc, v) in grad.iter_mut().zip(gm.iter()) {
+            *acc += v;
+        }
+    }
+    cluster.phase("grad_reduce");
+
+    Ok(DistEval { value: master.value, grad, metrics: cluster.finish() })
+}
+
 /// Result of a distributed training run.
 #[derive(Debug, Clone)]
 pub struct TrainResult {
@@ -170,9 +326,68 @@ pub fn train_pitc(
     }
 }
 
+/// Fault-aware twin of [`train_pitc`]: every NLML evaluation goes
+/// through [`nlml_and_grad_dist_ft`] (each evaluation replays the
+/// spec's fault plan on a fresh simulated cluster). Returns a typed
+/// error if an evaluation ever loses all machines.
+pub fn try_train_pitc(
+    init: &SeArd,
+    xd: &Mat,
+    y: &[f64],
+    xs: &Mat,
+    d_blocks: &[Vec<usize>],
+    spec: &ClusterSpec,
+    cfg: &AdamConfig,
+) -> Result<TrainResult, MachinesLost> {
+    let wall = Stopwatch::new();
+    let n = y.len();
+    let y_mean = y.iter().sum::<f64>() / n.max(1) as f64;
+    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    let p = init.dim() + 2;
+
+    let mut bytes_per_eval = 0usize;
+    let mut messages_per_eval = 0usize;
+    let mut makespan_s = 0.0;
+    let mut lost: Option<MachinesLost> = None;
+    let result: OptimResult = minimize(cfg, &init.to_vec(), |theta| {
+        if lost.is_some() {
+            // cluster already gone: freeze the optimizer state
+            return (f64::INFINITY, vec![0.0; p]);
+        }
+        let hyp = SeArd::from_vec(theta);
+        match nlml_and_grad_dist_ft(&hyp, xd, &yc, xs, d_blocks, spec) {
+            Ok(ev) => {
+                bytes_per_eval = ev.metrics.bytes_sent;
+                messages_per_eval = ev.metrics.messages;
+                makespan_s += ev.metrics.makespan;
+                (ev.value, ev.grad)
+            }
+            Err(e) => {
+                lost = Some(e);
+                (f64::INFINITY, vec![0.0; p])
+            }
+        }
+    });
+    if let Some(e) = lost {
+        return Err(e);
+    }
+    Ok(TrainResult {
+        hyp: SeArd::from_vec(&result.theta),
+        y_mean,
+        nlml_trace: result.trace,
+        evals: result.evals,
+        rejected: result.rejected,
+        bytes_per_eval,
+        messages_per_eval,
+        makespan_s,
+        wall_s: wall.elapsed(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::FaultPlan;
     use crate::data::partition::random_partition;
     use crate::testkit::assert_all_close;
     use crate::train::nlml::pitc_nlml_and_grad;
@@ -240,6 +455,111 @@ mod tests {
             2 * s * s + (s * s + s + 2) + (2 * s * s + 2 * s) + np;
         assert_eq!(ev.metrics.bytes_sent, 8 * per_machine * (m - 1));
         assert!(ev.metrics.makespan > 0.0);
+    }
+
+    /// Stragglers and successfully-retried drops never change the
+    /// numbers: the fault-aware evaluation is bitwise the plain one,
+    /// traffic is unchanged, only time + fault counters move.
+    #[test]
+    fn stragglers_and_retries_bitwise_identical() {
+        let m = 4;
+        let p = problem(m, 5, 51);
+        let base = nlml_and_grad_dist(&p.hyp, &p.xd, &p.y, &p.xs,
+                                      &p.blocks, &ClusterSpec::new(m));
+
+        let spec = ClusterSpec::new(m).with_faults(
+            FaultPlan::seeded(9).with_stragglers(0.5, 1e-3));
+        let ev = nlml_and_grad_dist_ft(&p.hyp, &p.xd, &p.y, &p.xs,
+                                       &p.blocks, &spec)
+            .expect("stragglers never kill");
+        assert_eq!(ev.value.to_bits(), base.value.to_bits());
+        for (a, b) in ev.grad.iter().zip(base.grad.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ev.metrics.bytes_sent, base.metrics.bytes_sent);
+        assert_eq!(ev.metrics.messages, base.metrics.messages);
+        assert!(ev.metrics.faults.straggle_events > 0);
+        assert_eq!(ev.metrics.faults.deaths, 0);
+        assert!(ev.metrics.makespan > base.metrics.makespan);
+
+        let spec = ClusterSpec::new(m).with_faults(
+            FaultPlan::seeded(3)
+                .with_drops(0.4, 20)
+                .with_timeout(1e-4, 2.0));
+        let ev = nlml_and_grad_dist_ft(&p.hyp, &p.xd, &p.y, &p.xs,
+                                       &p.blocks, &spec)
+            .expect("bounded retries should succeed");
+        assert_eq!(ev.value.to_bits(), base.value.to_bits());
+        for (a, b) in ev.grad.iter().zip(base.grad.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ev.metrics.bytes_sent, base.metrics.bytes_sent);
+        assert_eq!(ev.metrics.messages, base.metrics.messages);
+        assert!(ev.metrics.faults.retries > 0);
+        assert!(ev.metrics.faults.timeouts > 0);
+        assert_eq!(ev.metrics.faults.deaths, 0);
+    }
+
+    /// Killing a machine at any training phase rebalances its blocks
+    /// onto survivors and still evaluates bitwise-identically (the
+    /// whole-block adoption property); losing every machine is a typed
+    /// error, never a panic.
+    #[test]
+    fn death_rebalances_and_stays_bitwise() {
+        let m = 4;
+        let p = problem(m, 5, 52);
+        let base = nlml_and_grad_dist(&p.hyp, &p.xd, &p.y, &p.xs,
+                                      &p.blocks, &ClusterSpec::new(m));
+        for phase in ["support", "local_stats", "assemble",
+                      "local_grads", "grad_reduce"] {
+            let spec = ClusterSpec::new(m)
+                .with_faults(FaultPlan::none().kill(2, phase));
+            let ev = nlml_and_grad_dist_ft(&p.hyp, &p.xd, &p.y, &p.xs,
+                                           &p.blocks, &spec)
+                .unwrap_or_else(|e| panic!("{phase}: {e}"));
+            assert_eq!(ev.value.to_bits(), base.value.to_bits(),
+                       "{phase}");
+            for (a, b) in ev.grad.iter().zip(base.grad.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{phase}");
+            }
+            assert_eq!(ev.metrics.faults.deaths, 1, "{phase}");
+            assert!(ev.metrics.faults.rebalances >= 1, "{phase}");
+        }
+        let mut plan = FaultPlan::none();
+        for mm in 0..m {
+            plan = plan.kill(mm, "local_stats");
+        }
+        let err = nlml_and_grad_dist_ft(
+            &p.hyp, &p.xd, &p.y, &p.xs, &p.blocks,
+            &ClusterSpec::new(m).with_faults(plan))
+            .unwrap_err();
+        assert_eq!(err.machines, m);
+        assert_eq!(err.phase, "local_stats");
+    }
+
+    /// Fault-aware training under a straggler plan follows the exact
+    /// same optimization trajectory as the plain trainer.
+    #[test]
+    fn ft_training_matches_plain_trajectory() {
+        let m = 3;
+        let p = problem(m, 4, 53);
+        let init = SeArd::isotropic(2, 1.5, 0.8, 0.3);
+        let cfg = AdamConfig { iters: 6, ..Default::default() };
+        let plain = train_pitc(&init, &p.xd, &p.y, &p.xs, &p.blocks,
+                               &ClusterSpec::new(m), &cfg);
+        let spec = ClusterSpec::new(m).with_faults(
+            FaultPlan::seeded(5).with_stragglers(0.4, 5e-4));
+        let ft = try_train_pitc(&init, &p.xd, &p.y, &p.xs, &p.blocks,
+                                &spec, &cfg)
+            .expect("stragglers never kill");
+        assert_eq!(ft.nlml_trace.len(), plain.nlml_trace.len());
+        for (a, b) in ft.nlml_trace.iter().zip(plain.nlml_trace.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ft.hyp.to_vec().iter().zip(plain.hyp.to_vec()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ft.bytes_per_eval, plain.bytes_per_eval);
     }
 
     /// Training decreases the NLML; with backtracking the trace is

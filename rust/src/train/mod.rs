@@ -34,6 +34,9 @@ pub mod dist;
 pub mod nlml;
 pub mod optim;
 
-pub use dist::{nlml_and_grad_dist, train_pitc, DistEval, TrainResult};
+pub use dist::{
+    nlml_and_grad_dist, nlml_and_grad_dist_ft, train_pitc,
+    try_train_pitc, DistEval, TrainResult,
+};
 pub use nlml::{pitc_nlml_and_grad, LocalStats, TrainSupport};
 pub use optim::{minimize, AdamConfig, OptimResult};

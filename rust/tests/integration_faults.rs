@@ -1,0 +1,364 @@
+//! Chaos suite pinning the fault-injecting cluster transport.
+//!
+//! Four contracts, asserted over pPITC / pPIC / pICF (and the online
+//! path for the first):
+//!
+//! 1. **Zero-fault equivalence oracle** — running through the fault
+//!    transport with [`FaultPlan::none`] is *bitwise* identical to the
+//!    direct path (predictions AND traffic), for M ∈ {1, 4, 8}.
+//! 2. **Deterministic replay** — the same non-trivial plan produces
+//!    bitwise-identical predictions, fault counters, traffic and final
+//!    block ownership on every run.
+//! 3. **Machine death at every phase** — the run completes, the dead
+//!    machine ends up owning nothing, the survivors' blocks cover all
+//!    data rows exactly once, and held-out RMSE stays within the
+//!    documented degradation factor (≤ 3× the fault-free RMSE + 1e-6).
+//!    Only when *every* machine dies does the run return the typed
+//!    [`MachinesLost`] error.
+//! 4. **Random plans never hang** — property-generated fault plans
+//!    (drops, stragglers, random deaths) always either complete or
+//!    return the typed error, under a watchdog that turns a deadlock
+//!    into a test failure.
+
+use std::time::Duration;
+
+use pgpr::cluster::{FaultPlan, MachinesLost};
+use pgpr::data::partition::random_partition;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::parallel::online::OnlineGp;
+use pgpr::parallel::{picf, ppic, ppitc, ClusterSpec, FaultRun,
+                     ProtocolOutput};
+use pgpr::runtime::NativeBackend;
+use pgpr::testkit::prop::{prop_check, with_watchdog};
+use pgpr::util::Pcg64;
+
+/// Documented degradation bound for runs that lose machines: held-out
+/// RMSE at most this factor times the fault-free RMSE (README
+/// "Fault tolerance").
+const RMSE_FACTOR: f64 = 3.0;
+
+#[derive(Clone)]
+struct Problem {
+    hyp: SeArd,
+    xd: Mat,
+    y: Vec<f64>,
+    xs: Mat,
+    xu: Mat,
+    /// noiseless target values at `xu` (held-out truth for RMSE)
+    truth: Vec<f64>,
+    d_blocks: Vec<Vec<usize>>,
+    u_blocks: Vec<Vec<usize>>,
+}
+
+fn target(x: &[f64]) -> f64 {
+    (1.3 * x[0]).sin() + (0.7 * x[1]).cos()
+}
+
+/// A problem with `per` training rows per machine drawn around a smooth
+/// target, so held-out RMSE is meaningful.
+fn problem(m: usize, per: usize, seed: u64) -> Problem {
+    let d = 2;
+    let n = m * per;
+    let u = m * 3;
+    let s = 6;
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(d, 0.9, 1.1, 0.1);
+    let xd = Mat::from_vec(n, d, rng.normals(n * d));
+    let xs = Mat::from_vec(s, d, rng.normals(s * d));
+    let xu = Mat::from_vec(u, d, rng.normals(u * d));
+    let y: Vec<f64> =
+        (0..n).map(|i| target(xd.row(i)) + 0.05 * rng.normal()).collect();
+    let truth: Vec<f64> = (0..u).map(|i| target(xu.row(i))).collect();
+    let d_blocks = random_partition(n, m, &mut rng);
+    let u_blocks = random_partition(u, m, &mut rng);
+    Problem { hyp, xd, y, xs, xu, truth, d_blocks, u_blocks }
+}
+
+fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let sse: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t).powi(2)).sum();
+    (sse / pred.len() as f64).sqrt()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Proto {
+    PPitc,
+    PPic,
+    PIcf,
+}
+
+const PROTOS: [Proto; 3] = [Proto::PPitc, Proto::PPic, Proto::PIcf];
+
+impl Proto {
+    fn name(self) -> &'static str {
+        match self {
+            Proto::PPitc => "ppitc",
+            Proto::PPic => "ppic",
+            Proto::PIcf => "picf",
+        }
+    }
+
+    /// Phases at which this protocol polls for scheduled deaths.
+    fn kill_phases(self) -> &'static [&'static str] {
+        match self {
+            Proto::PPitc => &["local_summary", "global_summary", "predict"],
+            Proto::PPic => {
+                &["partition", "local_summary", "global_summary", "predict"]
+            }
+            Proto::PIcf => &["parallel_icf", "icf_local", "icf_global",
+                             "icf_components", "finalize"],
+        }
+    }
+
+    fn rank(self, p: &Problem) -> usize {
+        (p.xd.rows / 2).max(1)
+    }
+
+    fn run_plain(self, p: &Problem, spec: &ClusterSpec) -> ProtocolOutput {
+        match self {
+            Proto::PPitc => ppitc::run(&p.hyp, &p.xd, &p.y, &p.xs, &p.xu,
+                                       &p.d_blocks, &p.u_blocks,
+                                       &NativeBackend, spec),
+            Proto::PPic => ppic::run_with_partition(
+                &p.hyp, &p.xd, &p.y, &p.xs, &p.xu, &p.d_blocks, &p.u_blocks,
+                &NativeBackend, spec),
+            Proto::PIcf => picf::run(&p.hyp, &p.xd, &p.y, &p.xu, &p.d_blocks,
+                                     self.rank(p), &NativeBackend, spec),
+        }
+    }
+
+    fn run_ft(self, p: &Problem, spec: &ClusterSpec)
+              -> Result<FaultRun, MachinesLost> {
+        match self {
+            Proto::PPitc => ppitc::try_run(&p.hyp, &p.xd, &p.y, &p.xs, &p.xu,
+                                           &p.d_blocks, &p.u_blocks,
+                                           &NativeBackend, spec),
+            Proto::PPic => ppic::try_run_with_partition(
+                &p.hyp, &p.xd, &p.y, &p.xs, &p.xu, &p.d_blocks, &p.u_blocks,
+                &NativeBackend, spec),
+            Proto::PIcf => picf::try_run(&p.hyp, &p.xd, &p.y, &p.xu,
+                                         &p.d_blocks, self.rank(p),
+                                         &NativeBackend, spec),
+        }
+    }
+}
+
+/// Every data row owned by exactly one (surviving) machine.
+fn assert_exact_coverage(tag: &str, d_blocks: &[Vec<usize>], n: usize) {
+    let mut all: Vec<usize> =
+        d_blocks.iter().flat_map(|b| b.iter().copied()).collect();
+    all.sort_unstable();
+    assert_eq!(all, (0..n).collect::<Vec<_>>(),
+               "{tag}: blocks must cover every row exactly once");
+}
+
+/// Contract 1: with a zero plan, the fault-aware path reproduces the
+/// direct path bit for bit — predictions, bytes and message counts —
+/// at M ∈ {1, 4, 8}, and reports all-zero fault counters.
+#[test]
+fn zero_fault_transport_is_bitwise_identical() {
+    for m in [1usize, 4, 8] {
+        let p = problem(m, 5, 1000 + m as u64);
+        for proto in PROTOS {
+            let tag = format!("{} m={m}", proto.name());
+            let plain = proto.run_plain(&p, &ClusterSpec::new(m));
+            let ft = proto
+                .run_ft(&p, &ClusterSpec::new(m).with_faults(FaultPlan::none()))
+                .unwrap_or_else(|e| panic!("{tag}: zero plan errored: {e}"));
+            assert_eq!(bits(&plain.prediction.mean),
+                       bits(&ft.output.prediction.mean), "{tag}: mean");
+            assert_eq!(bits(&plain.prediction.var),
+                       bits(&ft.output.prediction.var), "{tag}: var");
+            assert_eq!(plain.metrics.bytes_sent, ft.output.metrics.bytes_sent,
+                       "{tag}: bytes");
+            assert_eq!(plain.metrics.messages, ft.output.metrics.messages,
+                       "{tag}: messages");
+            assert!(ft.output.metrics.faults.is_zero(),
+                    "{tag}: zero plan must count no faults");
+            assert_eq!(ft.survivors, (0..m).collect::<Vec<_>>(), "{tag}");
+            assert_eq!(ft.d_blocks, p.d_blocks, "{tag}: ownership moved");
+        }
+    }
+}
+
+/// Contract 1 for the online path: absorb/predict through a zero-plan
+/// fault transport matches the direct transport bitwise.
+#[test]
+fn zero_fault_online_is_bitwise_identical() {
+    let m = 4;
+    let per = 6;
+    let d = 2;
+    let mut rng = Pcg64::seed(4242);
+    let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.1);
+    let xs = Mat::from_vec(4, d, rng.normals(4 * d));
+    let batches: Vec<Vec<(Mat, Vec<f64>)>> = (0..3)
+        .map(|_| {
+            (0..m)
+                .map(|_| {
+                    (Mat::from_vec(per, d, rng.normals(per * d)),
+                     rng.normals(per))
+                })
+                .collect()
+        })
+        .collect();
+    let xu = Mat::from_vec(8, d, rng.normals(8 * d));
+    let u_blocks = random_partition(8, m, &mut rng);
+
+    let run = |spec: ClusterSpec| {
+        let mut gp = OnlineGp::new(&hyp, &xs,
+                                   std::sync::Arc::new(NativeBackend), spec);
+        for b in &batches {
+            gp.absorb(b);
+        }
+        gp.predict_ppitc(&xu, &u_blocks)
+    };
+    let direct = run(ClusterSpec::new(m));
+    let fault = run(ClusterSpec::new(m).with_faults(FaultPlan::none()));
+    assert_eq!(bits(&direct.prediction.mean), bits(&fault.prediction.mean));
+    assert_eq!(bits(&direct.prediction.var), bits(&fault.prediction.var));
+    assert_eq!(direct.metrics.bytes_sent, fault.metrics.bytes_sent);
+    assert_eq!(direct.metrics.messages, fault.metrics.messages);
+    assert!(fault.metrics.faults.is_zero());
+}
+
+/// Contract 2: a non-trivial chaos plan (drops + stragglers + one
+/// scheduled death) replays bitwise — predictions, fault counters,
+/// traffic, survivors and final ownership all identical across runs.
+#[test]
+fn chaos_runs_replay_bitwise() {
+    let m = 4;
+    let p = problem(m, 5, 77);
+    for proto in PROTOS {
+        let tag = proto.name();
+        let kill_phase = proto.kill_phases()[1];
+        // max_retries 6 keeps retry-exhaustion deaths out of this plan
+        // (per-exchange death prob 0.15⁷ ≈ 2e-6) so the only death is
+        // the scheduled one.
+        let plan = FaultPlan::seeded(0xC4A05)
+            .with_drops(0.15, 6)
+            .with_stragglers(0.3, 1e-4)
+            .with_timeout(1e-4, 2.0)
+            .kill(2, kill_phase);
+        let spec = ClusterSpec::new(m).with_faults(plan);
+        let a = proto.run_ft(&p, &spec)
+            .unwrap_or_else(|e| panic!("{tag}: run A errored: {e}"));
+        let b = proto.run_ft(&p, &spec)
+            .unwrap_or_else(|e| panic!("{tag}: run B errored: {e}"));
+        assert_eq!(bits(&a.output.prediction.mean),
+                   bits(&b.output.prediction.mean), "{tag}: mean");
+        assert_eq!(bits(&a.output.prediction.var),
+                   bits(&b.output.prediction.var), "{tag}: var");
+        assert_eq!(a.output.metrics.faults, b.output.metrics.faults,
+                   "{tag}: counters");
+        assert_eq!(a.output.metrics.bytes_sent, b.output.metrics.bytes_sent,
+                   "{tag}: bytes");
+        assert_eq!(a.output.metrics.messages, b.output.metrics.messages,
+                   "{tag}: messages");
+        assert_eq!(a.survivors, b.survivors, "{tag}: survivors");
+        assert_eq!(a.d_blocks, b.d_blocks, "{tag}: ownership");
+        assert!(a.output.metrics.faults.deaths >= 1, "{tag}: death missing");
+        assert!(!a.survivors.contains(&2), "{tag}: machine 2 must be dead");
+    }
+}
+
+/// Contract 3: killing a machine (worker or master) at each
+/// death-polling phase still completes the run; the dead machine owns
+/// nothing afterwards, survivors cover all data exactly once, and
+/// held-out RMSE stays within the documented factor of fault-free.
+#[test]
+fn machine_death_at_each_phase_completes_with_coverage() {
+    let m = 4;
+    let p = problem(m, 5, 99);
+    for proto in PROTOS {
+        let base =
+            proto.run_ft(&p, &ClusterSpec::new(m)
+                .with_faults(FaultPlan::none()))
+                .unwrap();
+        let base_rmse = rmse(&base.output.prediction.mean, &p.truth);
+        for &phase in proto.kill_phases() {
+            for victim in [0usize, 1] {
+                let tag = format!("{} kill {victim} at {phase}",
+                                  proto.name());
+                let plan = FaultPlan::seeded(5).kill(victim, phase);
+                let fr = proto
+                    .run_ft(&p, &ClusterSpec::new(m).with_faults(plan))
+                    .unwrap_or_else(|e| panic!("{tag}: errored: {e}"));
+                assert_eq!(fr.output.metrics.faults.deaths, 1, "{tag}");
+                assert!(fr.output.metrics.faults.rebalances >= 1, "{tag}");
+                assert_eq!(fr.survivors.len(), m - 1, "{tag}");
+                assert!(!fr.survivors.contains(&victim), "{tag}");
+                assert!(fr.d_blocks[victim].is_empty(),
+                        "{tag}: dead machine still owns rows");
+                assert_exact_coverage(&tag, &fr.d_blocks, p.xd.rows);
+                let pred = &fr.output.prediction;
+                assert_eq!(pred.len(), p.xu.rows, "{tag}");
+                assert!(pred.mean.iter().all(|v| v.is_finite())
+                            && pred.var.iter().all(|v| v.is_finite()),
+                        "{tag}: non-finite prediction");
+                let r = rmse(&pred.mean, &p.truth);
+                assert!(r <= RMSE_FACTOR * base_rmse + 1e-6,
+                        "{tag}: rmse {r} vs fault-free {base_rmse}");
+            }
+        }
+    }
+}
+
+/// Contract 3, negative side: losing *every* machine is the typed
+/// [`MachinesLost`] error naming the phase — never a panic.
+#[test]
+fn losing_every_machine_is_a_typed_error() {
+    let m = 4;
+    let p = problem(m, 5, 11);
+    for proto in PROTOS {
+        let phase = proto.kill_phases()[0];
+        let mut plan = FaultPlan::none();
+        for mid in 0..m {
+            plan = plan.kill(mid, phase);
+        }
+        let err = proto
+            .run_ft(&p, &ClusterSpec::new(m).with_faults(plan))
+            .expect_err("all machines dead must error");
+        assert_eq!(err.machines, m, "{}", proto.name());
+        assert_eq!(err.phase, phase, "{}", proto.name());
+    }
+}
+
+/// Contract 4: property-generated fault plans — arbitrary drops,
+/// stragglers and deaths — always complete with sane invariants or
+/// return the typed error. A watchdog converts any deadlock or
+/// livelock into a test failure.
+#[test]
+fn random_fault_plans_complete_or_error() {
+    let m = 4;
+    let p = problem(m, 5, 333);
+    prop_check("chaos-plans", 10, |g| {
+        for proto in PROTOS {
+            let plan = g.fault_plan(m, proto.kill_phases());
+            let pc = p.clone();
+            let case = g.case;
+            let result = with_watchdog(Duration::from_secs(60), move || {
+                proto.run_ft(&pc, &ClusterSpec::new(m).with_faults(plan))
+            });
+            match result {
+                Ok(fr) => {
+                    let tag = format!("{} case {case}", proto.name());
+                    assert!(!fr.survivors.is_empty(), "{tag}");
+                    assert_exact_coverage(&tag, &fr.d_blocks, p.xd.rows);
+                    let pred = &fr.output.prediction;
+                    assert_eq!(pred.len(), p.xu.rows, "{tag}");
+                    assert!(pred.mean.iter().all(|v| v.is_finite()),
+                            "{tag}: non-finite mean");
+                }
+                Err(e) => {
+                    assert_eq!(e.machines, m);
+                    assert!(!e.phase.is_empty());
+                }
+            }
+        }
+    });
+}
