@@ -83,6 +83,7 @@ pub struct GpBuilder {
     backend: Arc<dyn Backend>,
     exec: Option<ParallelExecutor>,
     faults: Option<FaultPlan>,
+    mixed_precision: bool,
 }
 
 impl Default for GpBuilder {
@@ -101,6 +102,7 @@ impl Default for GpBuilder {
             backend: Arc::new(NativeBackend),
             exec: None,
             faults: None,
+            mixed_precision: false,
         }
     }
 }
@@ -218,6 +220,20 @@ impl GpBuilder {
         self
     }
 
+    /// Opt the serve terminal into the mixed-precision fast path:
+    /// [`GpBuilder::serve`] then also stages f32-storage /
+    /// f64-accumulate operators and serves through them, trading a
+    /// bounded relative error
+    /// ([`crate::gp::predictor::F32_SERVE_REL_BUDGET`], asserted
+    /// in-tree and re-measured by BENCH_serve) for roughly halved
+    /// streaming traffic on the memory-bound predict path. Off by
+    /// default; ignored by the non-serving terminals.
+    #[must_use]
+    pub fn mixed_precision(mut self, on: bool) -> GpBuilder {
+        self.mixed_precision = on;
+        self
+    }
+
     // ------------------------------------------------------- getters
 
     /// The method this builder will fit.
@@ -268,6 +284,7 @@ impl GpBuilder {
             backend: Arc::clone(&self.backend),
             exec: self.exec.clone(),
             faults: self.faults.clone(),
+            mixed_precision: self.mixed_precision,
         })
     }
 
@@ -291,8 +308,14 @@ impl GpBuilder {
         let mut spec = self.spec()?;
         spec.method = Method::PPic;
         let spec = spec.resolved()?;
-        ServedModel::fit(&spec.hyp, &spec.xd, &spec.y, spec.support_points(),
-                         spec.blocks(), spec.backend.as_ref())
+        let model = ServedModel::fit(&spec.hyp, &spec.xd, &spec.y,
+                                     spec.support_points(), spec.blocks(),
+                                     spec.backend.as_ref())?;
+        Ok(if spec.mixed_precision {
+            model.with_mixed_precision()
+        } else {
+            model
+        })
     }
 
     /// Distributed PITC marginal-likelihood training

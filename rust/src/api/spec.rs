@@ -67,6 +67,13 @@ pub struct FitSpec {
     /// fault-aware protocol variants (retry, rebalance, typed
     /// [`ApiError::MachinesLost`]) instead of the direct path.
     pub faults: Option<FaultPlan>,
+    /// Opt into the mixed-precision (f32-storage / f64-accumulate)
+    /// serve path: [`crate::api::GpBuilder::serve`] then stages
+    /// demoted operators alongside the f64 ones and serves through
+    /// them, within
+    /// [`crate::gp::predictor::F32_SERVE_REL_BUDGET`] of the f64
+    /// path. Ignored by the non-serving fit terminals.
+    pub mixed_precision: bool,
 }
 
 impl std::fmt::Debug for FitSpec {
@@ -81,6 +88,7 @@ impl std::fmt::Debug for FitSpec {
             .field("seed", &self.seed)
             .field("backend", &self.backend.name())
             .field("faults", &self.faults)
+            .field("mixed_precision", &self.mixed_precision)
             .finish()
     }
 }

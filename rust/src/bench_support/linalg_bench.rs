@@ -11,14 +11,31 @@
 //!   convention in `tests/integration_parallel_exec.rs`.
 //!
 //! Gates (full mode, largest size): blocked GEMM ≥2× the seed scalar
-//! kernel single-thread, and >1× scaling from 1 to ≥4 threads.
+//! kernel single-thread, >1× scaling from 1 to ≥4 threads, ≥1.5×
+//! scaling from 1 to 2 threads, and — when AVX-512 is the active tier
+//! — the vectorized GEMM ≥1.5× the portable microkernel single-thread
+//! (the portable rung itself auto-vectorizes under `target-cpu=native`,
+//! so the honest explicit-SIMD margin over it is smaller than the
+//! ~3.8× margin over the seed scalar kernel; the C-mirror sweep
+//! measured 1.73×).
+//! In every mode (smoke included) handing a pool to any kernel must
+//! not cost more than 10% over serial at any measured size (the
+//! small-problem serial-fallback cutoffs make this hold); all checks
+//! go advisory under `PGPR_LENIENT_PERF=1`.
+//!
+//! The SIMD dispatch ladder is measured rung by rung at the largest
+//! size: one forced-tier single-thread case per supported tier
+//! (`gemm_portable`, `gemm_avx2`, … — see
+//! [`crate::linalg::force_tier`]), with the active tier and the
+//! vectorized-vs-portable speedups surfaced under `derived`.
 
 use std::sync::Arc;
 
 use crate::bench_support::harness::bench_fn;
 use crate::kernel::SeArd;
-use crate::linalg::{cholesky_blocked, cholesky_scalar, gemm,
-                    solve_lower_mat_ctx, LinalgCtx, Mat};
+use crate::linalg::{active_tier, cholesky_blocked, cholesky_scalar,
+                    force_tier, gemm, solve_lower_mat_ctx, LinalgCtx, Mat,
+                    SimdTier};
 use crate::linalg::cholesky::solve_lower_mat_scalar;
 use crate::linalg::matmul_scalar;
 use crate::util::json::{obj, Json};
@@ -173,13 +190,32 @@ pub fn run(cfg: &LinalgBenchConfig, out_path: &str) -> Json {
                 let _ = hyp.gram_ctx(&ctx, &x1, &x2);
             }));
         }
+
+        // The dispatch ladder, rung by rung: forced-tier single-thread
+        // GEMM and Cholesky at the largest size only (the tier ratio is
+        // size-stable; smaller sizes would just dilute the budget).
+        if n == *cfg.sizes.iter().max().unwrap() {
+            let serial = LinalgCtx::serial();
+            for tier in SimdTier::available() {
+                let _forced = force_tier(tier);
+                cases.push(measure(&format!("gemm_{}", tier.name()), n, 1,
+                                   Some(gemm_flops), cfg.budget_s, || {
+                    let _ = gemm(&serial, &a, &b);
+                }));
+                cases.push(measure(&format!("cholesky_{}", tier.name()),
+                                   n, 1, Some(chol_flops), cfg.budget_s,
+                                   || {
+                    let _ = cholesky_blocked(&serial, &spd).unwrap();
+                }));
+            }
+        }
     }
 
     let doc = build_doc(cfg, &cases);
     std::fs::write(out_path, doc.to_string_pretty() + "\n")
         .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
     println!("wrote {out_path}");
-    apply_gates(cfg, &doc);
+    apply_gates(cfg, &doc, &cases);
     doc
 }
 
@@ -208,6 +244,8 @@ fn build_doc(cfg: &LinalgBenchConfig, cases: &[Case]) -> Json {
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(0);
+    let gemm_active = format!("gemm_{}", active_tier().name());
+    let chol_active = format!("cholesky_{}", active_tier().name());
     // Same document shape as the checked-in BENCH_linalg.json (whose
     // provenance records the C-mirror measurement instead).
     obj(vec![
@@ -277,6 +315,25 @@ fn build_doc(cfg: &LinalgBenchConfig, cases: &[Case]) -> Json {
                     "solve_lower_speedup_vs_scalar_1t",
                     ratio(("solve_lower_scalar", 1), ("solve_lower", 1)),
                 ),
+                ("simd_tier", Json::from(active_tier().name())),
+                (
+                    "simd_tiers_measured",
+                    Json::Arr(
+                        SimdTier::available()
+                            .into_iter()
+                            .map(|t| Json::from(t.name()))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "gemm_vectorized_speedup_vs_portable",
+                    ratio(("gemm_portable", 1), (gemm_active.as_str(), 1)),
+                ),
+                (
+                    "cholesky_vectorized_speedup_vs_portable",
+                    ratio(("cholesky_portable", 1),
+                          (chol_active.as_str(), 1)),
+                ),
             ]),
         ),
         (
@@ -286,32 +343,74 @@ fn build_doc(cfg: &LinalgBenchConfig, cases: &[Case]) -> Json {
     ])
 }
 
-/// Enforce the §Perf acceptance gates on a full run: ≥2× single-thread
-/// GEMM speedup over the seed kernel at the largest size, and >1×
-/// multi-thread scaling. Advisory in smoke/lenient modes.
-fn apply_gates(cfg: &LinalgBenchConfig, doc: &Json) {
+/// Enforce the §Perf acceptance gates. Full mode, largest size: ≥2×
+/// single-thread GEMM speedup over the seed kernel, >1× scaling to the
+/// max thread count, ≥1.5× scaling from 1 to 2 threads, and — when
+/// AVX-512 is the active tier — the vectorized GEMM ≥1.5× the portable
+/// microkernel (compilers auto-vectorize the portable rung at
+/// `target-cpu=native`, so 1.5× is the defensible explicit-SIMD margin;
+/// the measured value is 1.73×). Every mode (smoke included): pooled execution must not
+/// lose more than 10% to serial on any (kernel, size) pair — the
+/// small-problem serial-fallback cutoffs exist precisely to make this
+/// hold. All checks go advisory under `PGPR_LENIENT_PERF=1` (smoke
+/// runs are always lenient).
+fn apply_gates(cfg: &LinalgBenchConfig, doc: &Json, cases: &[Case]) {
+    // Pooled-regression check, all modes: min_s is the noise-robust
+    // statistic, so a >10% pooled loss is a real dispatch-overhead
+    // regression, not jitter.
+    let mut pooled_ok = true;
+    for c in cases.iter().filter(|c| c.threads > 1) {
+        if let Some(serial) = min_of(cases, &c.kernel, c.n, 1) {
+            if c.min_s > 1.10 * serial {
+                pooled_ok = false;
+                println!(
+                    "pooled regression: {} n={} t={} is {:.1}% slower \
+                     than serial",
+                    c.kernel, c.n, c.threads,
+                    (c.min_s / serial - 1.0) * 100.0
+                );
+            }
+        }
+    }
+    if !pooled_ok {
+        if cfg.lenient || cfg.smoke {
+            println!("PGPR_LENIENT_PERF: pooled check advisory, continuing");
+        } else {
+            panic!(
+                "linalg_bench: pooled execution lost >10% to serial; \
+                 set PGPR_LENIENT_PERF=1 on oversubscribed hosts"
+            );
+        }
+    }
     if cfg.smoke {
         println!("smoke mode: perf gates skipped");
         return;
     }
     let derived = doc.get("derived").expect("derived");
-    let speedup = derived
-        .get("gemm_speedup_vs_scalar_1t")
-        .and_then(Json::as_f64)
-        .unwrap_or(0.0);
-    let scaling = derived
-        .get("gemm_scaling_1t_to_max_threads")
-        .and_then(Json::as_f64)
-        .unwrap_or(0.0);
-    let ok = speedup >= 2.0 && scaling > 1.0;
+    let num = |key: &str| {
+        derived.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let speedup = num("gemm_speedup_vs_scalar_1t");
+    let scaling = num("gemm_scaling_1t_to_max_threads");
+    let scaling2 = num("gemm_scaling_1t_to_2t");
+    let vec_speedup = num("gemm_vectorized_speedup_vs_portable");
+    let want_vec = active_tier() == SimdTier::Avx512;
+    let ok = speedup >= 2.0
+        && scaling > 1.0
+        && scaling2 >= 1.5
+        && (!want_vec || vec_speedup >= 1.5);
     println!(
         "perf gates: gemm 1t speedup {speedup:.2}x (want >= 2), \
-         scaling {scaling:.2}x (want > 1)"
+         scaling {scaling:.2}x (want > 1), 2t scaling {scaling2:.2}x \
+         (want >= 1.5), vectorized vs portable {vec_speedup:.2}x \
+         (want >= 1.5 on avx512; active tier {})",
+        active_tier().name()
     );
     if !ok && !cfg.lenient {
         panic!(
             "linalg_bench perf gates failed (speedup {speedup:.2}x, \
-             scaling {scaling:.2}x); set PGPR_LENIENT_PERF=1 on \
+             scaling {scaling:.2}x, 2t {scaling2:.2}x, vectorized \
+             {vec_speedup:.2}x); set PGPR_LENIENT_PERF=1 on \
              oversubscribed hosts"
         );
     }
@@ -343,10 +442,16 @@ mod tests {
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(),
                    "pgpr-linalg-bench/1");
         let results = doc.get("results").unwrap().as_arr().unwrap();
-        // 3 scalar baselines + 4 blocked kernels × 2 thread counts, × 2 sizes
-        assert_eq!(results.len(), (3 + 4 * 2) * 2);
-        assert!(doc.get("derived").unwrap()
-            .get("gemm_speedup_vs_scalar_1t").is_some());
+        // 3 scalar baselines + 4 blocked kernels × 2 thread counts, × 2
+        // sizes, + 2 forced-tier kernels per supported tier at nmax
+        assert_eq!(results.len(),
+                   (3 + 4 * 2) * 2 + 2 * SimdTier::available().len());
+        let derived = doc.get("derived").unwrap();
+        assert!(derived.get("gemm_speedup_vs_scalar_1t").is_some());
+        assert_eq!(derived.get("simd_tier").unwrap().as_str().unwrap(),
+                   active_tier().name());
+        assert!(derived.get("gemm_vectorized_speedup_vs_portable")
+            .is_some());
         let _ = std::fs::remove_file(&path);
     }
 }

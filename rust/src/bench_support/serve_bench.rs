@@ -14,6 +14,13 @@
 //! Gate (full mode): fast-path per-batch latency ≥ 3× faster than the
 //! old path at the largest |S|, largest batch, 1 thread (`min_s`
 //! ratio — shared hosts can slow samples, never speed them up).
+//!
+//! The mixed-precision serve mode (`path: "f32"` cases) is measured
+//! alongside the f64 fast path, and its observed worst-case relative
+//! error against the f64 path is re-measured per run, reported under
+//! `derived`, and **hard-asserted** (every mode, perf-lenient or not —
+//! accuracy is not a perf gate) against
+//! [`crate::gp::predictor::F32_SERVE_REL_BUDGET`].
 
 use std::sync::Arc;
 
@@ -152,6 +159,8 @@ pub fn run(cfg: &ServeBenchConfig, out_path: &str) -> Json {
     let mut cases: Vec<Case> = Vec::new();
     let d = cfg.d;
     let n = cfg.machines * cfg.block;
+    // observed worst-case f32-vs-f64 relative error across the sweep
+    let (mut f32_err_mean, mut f32_err_var) = (0.0f64, 0.0f64);
 
     for &s in &cfg.support_sizes {
         // one served model per |S|: M machines, |D|/M-point blocks
@@ -161,11 +170,16 @@ pub fn run(cfg: &ServeBenchConfig, out_path: &str) -> Json {
         let xs = Mat::from_vec(s, d, rng.normals(s * d));
         let blocks = random_partition(n, cfg.machines, &mut rng);
         let fit_sw = Stopwatch::new();
+        // one fit serves all three paths: predict_batch (oracle),
+        // predict_batch_fast (f64 operators) and predict_batch_fast_f32
+        // (the staged mixed-precision operators)
         let model = ServedModel::fit(&hyp, &xd, &y, &xs, &blocks,
                                      &NativeBackend)
-            .expect("serve bench fit");
+            .expect("serve bench fit")
+            .with_mixed_precision();
         println!("fitted |S|={s} n={n} M={} in {:.2}s", cfg.machines,
                  fit_sw.elapsed());
+        let c0 = hyp.prior_var();
 
         for &b in &cfg.batch_sizes {
             let q: Vec<f64> = rng.normals(b * d);
@@ -178,7 +192,7 @@ pub fn run(cfg: &ServeBenchConfig, out_path: &str) -> Json {
             });
             cases.push(case_from("oracle", s, b, 1, &samples));
 
-            // fast path across thread counts
+            // fast paths (f64 and f32 storage) across thread counts
             for &t in &cfg.threads {
                 let lctx = if t <= 1 {
                     LinalgCtx::serial()
@@ -191,11 +205,48 @@ pub fn run(cfg: &ServeBenchConfig, out_path: &str) -> Json {
                                                      &mut scratch);
                 });
                 cases.push(case_from("fast", s, b, t, &samples));
+                let samples = sample_latency(cfg.budget_s, || {
+                    let _ = model.predict_batch_fast_f32(
+                        0, &q, b, b, &lctx, &mut scratch);
+                });
+                cases.push(case_from("f32", s, b, t, &samples));
+            }
+
+            // mixed-precision accuracy, re-measured on this run's data
+            let lctx = LinalgCtx::serial();
+            let mut s64 = ServeScratch::new();
+            let (mean_o, var_o) = {
+                let (m, v) =
+                    model.predict_batch_fast(0, &q, b, b, &lctx, &mut s64);
+                (m.to_vec(), v.to_vec())
+            };
+            let mut s32 = ServeScratch::new();
+            let (mean_f, var_f) = model.predict_batch_fast_f32(
+                0, &q, b, b, &lctx, &mut s32);
+            for i in 0..b {
+                let em = (mean_f[i] - mean_o[i]).abs()
+                    / mean_o[i].abs().max(1.0);
+                let ev =
+                    (var_f[i] - var_o[i]).abs() / var_o[i].abs().max(c0);
+                f32_err_mean = f32_err_mean.max(em);
+                f32_err_var = f32_err_var.max(ev);
             }
         }
     }
 
-    let doc = build_doc(cfg, &cases);
+    // Accuracy is not a perf gate: the budget holds in every mode.
+    let budget = crate::gp::predictor::F32_SERVE_REL_BUDGET;
+    println!(
+        "f32 serve accuracy: max rel err mean {f32_err_mean:.3e}, \
+         var {f32_err_var:.3e} (budget {budget:.1e})"
+    );
+    assert!(
+        f32_err_mean <= budget && f32_err_var <= budget,
+        "mixed-precision serve exceeded its error budget: \
+         mean {f32_err_mean:.3e}, var {f32_err_var:.3e} > {budget:.1e}"
+    );
+
+    let doc = build_doc(cfg, &cases, f32_err_mean, f32_err_var);
     std::fs::write(out_path, doc.to_string_pretty() + "\n")
         .unwrap_or_else(|e| panic!("write {out_path}: {e}"));
     println!("wrote {out_path}");
@@ -214,7 +265,8 @@ fn min_of(cases: &[Case], path: &str, s: usize, batch: usize,
         .map(|c| c.min_s)
 }
 
-fn build_doc(cfg: &ServeBenchConfig, cases: &[Case]) -> Json {
+fn build_doc(cfg: &ServeBenchConfig, cases: &[Case], f32_err_mean: f64,
+             f32_err_var: f64) -> Json {
     let smax = *cfg.support_sizes.iter().max().unwrap();
     let bmax = *cfg.batch_sizes.iter().max().unwrap();
     let tmax = *cfg.threads.iter().max().unwrap();
@@ -281,6 +333,18 @@ fn build_doc(cfg: &ServeBenchConfig, cases: &[Case]) -> Json {
                     ratio(min_of(cases, "fast", smax, bmax, 1),
                           min_of(cases, "fast", smax, bmax, tmax)),
                 ),
+                (
+                    // mixed-precision latency win at the gate point
+                    "f32_speedup_vs_fast_1t",
+                    ratio(min_of(cases, "fast", smax, bmax, 1),
+                          min_of(cases, "f32", smax, bmax, 1)),
+                ),
+                (
+                    "f32_rel_budget",
+                    Json::from(crate::gp::predictor::F32_SERVE_REL_BUDGET),
+                ),
+                ("f32_max_rel_err_mean", Json::from(f32_err_mean)),
+                ("f32_max_rel_err_var", Json::from(f32_err_var)),
             ]),
         ),
         (
@@ -344,10 +408,14 @@ mod tests {
         assert_eq!(parsed.get("schema").unwrap().as_str().unwrap(),
                    "pgpr-serve-bench/1");
         let results = doc.get("results").unwrap().as_arr().unwrap();
-        // per (s, batch): 1 oracle + |threads| fast cases
-        assert_eq!(results.len(), 2 * 2 * (1 + 2));
-        assert!(doc.get("derived").unwrap()
-            .get("fast_speedup_vs_oracle_1t").is_some());
+        // per (s, batch): 1 oracle + |threads| × (fast + f32) cases
+        assert_eq!(results.len(), 2 * 2 * (1 + 2 + 2));
+        let derived = doc.get("derived").unwrap();
+        assert!(derived.get("fast_speedup_vs_oracle_1t").is_some());
+        assert!(derived.get("f32_speedup_vs_fast_1t").is_some());
+        let err = derived.get("f32_max_rel_err_var").unwrap()
+            .as_f64().unwrap();
+        assert!(err <= crate::gp::predictor::F32_SERVE_REL_BUDGET);
         let _ = std::fs::remove_file(&path);
     }
 }

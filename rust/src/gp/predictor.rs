@@ -34,10 +34,18 @@
 //!
 //! The seed solve-based paths stay untouched as the equivalence
 //! oracles; every operator is pinned to them in tests.
+//!
+//! An opt-in mixed-precision serve form ([`PredictOperatorF32`],
+//! reached via [`PredictOperator::demote`]) stores every staged array
+//! in f32 while accumulating in f64, within [`F32_SERVE_REL_BUDGET`]
+//! of the f64 operator (asserted below, re-measured by BENCH_serve).
 
 use super::summaries::{GlobalSummary, LocalSummary, SupportContext};
 use super::Prediction;
-use crate::kernel::{FeatureMap, FeatureScratch, SeArd};
+use crate::kernel::{FeatureMap, FeatureMapF32, FeatureScratch, SeArd};
+use crate::linalg::simd::mixed::{
+    axpy_wide, diag_quad_f32_into, dot_wide, MatF32,
+};
 use crate::linalg::{
     cho_solve_mat_ctx, cho_solve_vec, cholesky_blocked, diag_quad_into,
     gemm, gemm_into, gemm_nt, gemm_tn, matvec, matvec_t,
@@ -156,6 +164,154 @@ impl PredictOperator {
     #[must_use]
     pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
         let mut scratch = OpScratch::new();
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        self.predict_into(lctx, &xu.data, xu.rows, &mut scratch,
+                          &mut mean, &mut var);
+        Prediction { mean, var }
+    }
+
+    /// Demote to the opt-in mixed-precision serve form (f32 storage,
+    /// f64 accumulation — see [`PredictOperatorF32`]). The one lossy
+    /// step of that pipeline: every staged array is rounded to f32
+    /// here, once, at stage time.
+    #[must_use]
+    pub fn demote(&self) -> PredictOperatorF32 {
+        PredictOperatorF32 {
+            feat: self.feat.demote(),
+            w: self.w.iter().map(|&v| v as f32).collect(),
+            y_mean: self.y_mean,
+            c0: self.c0,
+            quad: match &self.quad {
+                QuadTerm::Dense(a) => QuadTermF32::Dense(MatF32::from_mat(a)),
+                QuadTerm::LowRank { diag_coef, vt } => QuadTermF32::LowRank {
+                    diag_coef: *diag_coef,
+                    vt: MatF32::from_mat(vt),
+                },
+            },
+        }
+    }
+}
+
+/// Relative-error budget of the mixed-precision serve path against the
+/// f64 operator it was demoted from: for every query row,
+/// `|meanₓ − mean| ≤ budget · max(|mean|, 1)` and
+/// `|varₓ − var| ≤ budget · max(|var|, c₀)` (the `c₀` floor keeps the
+/// bound meaningful where the variance nearly cancels). The storage
+/// rounding is ≤2⁻²⁴ ≈ 6·10⁻⁸ relative per entry; the √p-style
+/// amplification through the dots leaves ~10⁻⁶ observed on serve-sized
+/// problems, so 10⁻⁴ is a ~100× safety margin. Asserted in the tests
+/// below and re-measured per run by the BENCH_serve harness.
+pub const F32_SERVE_REL_BUDGET: f64 = 1e-4;
+
+/// The variance form a [`PredictOperatorF32`] evaluates — f32-stored
+/// sibling of [`QuadTerm`].
+#[derive(Debug, Clone)]
+enum QuadTermF32 {
+    /// `σ²ᵢ = c₀ − gᵢᵀ·A·gᵢ` via [`diag_quad_f32_into`].
+    Dense(MatF32),
+    /// `σ²ᵢ = c₀ − diag_coef·‖gᵢ‖² + ‖vtᵀgᵢ‖²` with the low-rank
+    /// factor swept by widening axpys (vt: p×R, f32).
+    LowRank { diag_coef: f64, vt: MatF32 },
+}
+
+/// Reusable buffers for [`PredictOperatorF32::predict_into`].
+#[derive(Debug, Clone, Default)]
+pub struct OpScratchF32 {
+    feat: FeatureScratch,
+    g: MatF32,
+    /// f64 row buffer for the low-rank sweep (length R).
+    h: Vec<f64>,
+}
+
+impl OpScratchF32 {
+    #[must_use]
+    pub fn new() -> OpScratchF32 {
+        OpScratchF32::default()
+    }
+}
+
+/// Mixed-precision staged predictive distribution: **f32 storage, f64
+/// accumulate**. Demoted from a [`PredictOperator`] at stage time
+/// ([`PredictOperator::demote`]); serves the same three-step batch
+/// (feature build, mean GEMV, fused variance pass) with every staged
+/// array — sources, weights, quadratic operator — stored in f32 so the
+/// memory-bound predict path streams half the bytes. All reductions
+/// accumulate in f64 (each f32 load widens exactly), so the only error
+/// vs the f64 operator is the one-time storage rounding, budgeted at
+/// [`F32_SERVE_REL_BUDGET`]. Pooled execution is bitwise-identical to
+/// serial, and per-row outputs are batch-independent (padding is
+/// transparent), for the same banding reasons as the f64 path.
+#[derive(Debug, Clone)]
+pub struct PredictOperatorF32 {
+    feat: FeatureMapF32,
+    w: Vec<f32>,
+    y_mean: f64,
+    c0: f64,
+    quad: QuadTermF32,
+}
+
+impl PredictOperatorF32 {
+    /// Feature dimension p.
+    #[must_use]
+    pub fn p(&self) -> usize {
+        self.feat.p()
+    }
+
+    /// Input dimensionality d.
+    #[must_use]
+    pub fn dim(&self) -> usize {
+        self.feat.dim()
+    }
+
+    /// Mixed-precision serve-path prediction — same contract as
+    /// [`PredictOperator::predict_into`] (caller-owned outputs resized
+    /// to `rows`; nothing allocated once `scratch` is warm) with the
+    /// [`F32_SERVE_REL_BUDGET`] accuracy bound against the f64
+    /// operator this one was demoted from.
+    pub fn predict_into(
+        &self,
+        lctx: &LinalgCtx,
+        q: &[f64],
+        rows: usize,
+        scratch: &mut OpScratchF32,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+    ) {
+        self.feat.fill(lctx, q, rows, &mut scratch.g, &mut scratch.feat);
+        mean.resize(rows, 0.0);
+        var.resize(rows, 0.0);
+        for (i, m) in mean.iter_mut().enumerate() {
+            *m = dot_wide(scratch.g.row(i), &self.w) + self.y_mean;
+        }
+        match &self.quad {
+            QuadTermF32::Dense(a) => {
+                diag_quad_f32_into(lctx, &scratch.g, a, var);
+                for v in var.iter_mut() {
+                    *v = self.c0 - *v;
+                }
+            }
+            QuadTermF32::LowRank { diag_coef, vt } => {
+                let r = vt.cols;
+                scratch.h.resize(r, 0.0);
+                for (i, v) in var.iter_mut().enumerate() {
+                    let gi = scratch.g.row(i);
+                    scratch.h.fill(0.0);
+                    for (k, &gk) in gi.iter().enumerate() {
+                        axpy_wide(gk as f64, vt.row(k), &mut scratch.h);
+                    }
+                    let gg = dot_wide(gi, gi);
+                    let hh = crate::linalg::dot(&scratch.h, &scratch.h);
+                    *v = self.c0 - diag_coef * gg + hh;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::predict_into`].
+    #[must_use]
+    pub fn predict_ctx(&self, lctx: &LinalgCtx, xu: &Mat) -> Prediction {
+        let mut scratch = OpScratchF32::new();
         let mut mean = Vec::new();
         let mut var = Vec::new();
         self.predict_into(lctx, &xu.data, xu.rows, &mut scratch,
@@ -497,6 +653,93 @@ mod tests {
             assert_all_close(&got.mean, &want.mean, 1e-12, 1e-12);
             assert_all_close(&got.var, &want.var, 1e-12, 1e-12);
         });
+    }
+
+    /// The demoted f32 operator stays within [`F32_SERVE_REL_BUDGET`]
+    /// of the f64 operator it came from, for both variance forms:
+    /// Dense (pPIC) and LowRank (ICF).
+    #[test]
+    fn f32_operator_within_budget_of_f64() {
+        let mut rng = crate::util::Pcg64::seed(71);
+        let d = 2;
+        let (s, b, u) = (5, 10, 13);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.1);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xm = Mat::from_vec(b, d, rng.normals(b * d));
+        let ym = rng.normals(b);
+        let sctx = SupportContext::new(&hyp, &xs);
+        let loc = local_summary(&hyp, &xm, &ym, &sctx);
+        let glob = global_summary(&sctx, &[&loc]);
+        let l_g = chol_global(&glob);
+        let lctx = LinalgCtx::serial();
+        let xu = Mat::from_vec(u, d, rng.normals(u * d));
+
+        let check = |op: &PredictOperator| {
+            let c0 = hyp.prior_var();
+            let want = op.predict_ctx(&lctx, &xu);
+            let got = op.demote().predict_ctx(&lctx, &xu);
+            for i in 0..u {
+                let m_tol = F32_SERVE_REL_BUDGET * want.mean[i].abs().max(1.0);
+                assert!(
+                    (got.mean[i] - want.mean[i]).abs() <= m_tol,
+                    "mean row {i}: {} vs {}", got.mean[i], want.mean[i]
+                );
+                let v_tol = F32_SERVE_REL_BUDGET * want.var[i].abs().max(c0);
+                assert!(
+                    (got.var[i] - want.var[i]).abs() <= v_tol,
+                    "var row {i}: {} vs {}", got.var[i], want.var[i]
+                );
+            }
+        };
+        // Dense quad form
+        check(&ppic_operator(&lctx, &hyp, &sctx, &glob, &l_g, &xm, &ym,
+                             &loc, 0.4));
+        // LowRank quad form
+        let r = 3;
+        let f_m = Mat::from_vec(r, b, rng.normals(r * b));
+        check(&icf_operator(&lctx, &hyp,
+                            &[(&xm, ym.as_slice(), &f_m)], 0.4));
+    }
+
+    /// f32 operator predictions are bitwise pooled ≡ serial, and its
+    /// scratch reuse matches fresh buffers exactly.
+    #[test]
+    fn f32_operator_pooled_bitwise_and_scratch_reuse() {
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        let mut rng = crate::util::Pcg64::seed(72);
+        let d = 2;
+        let (s, b) = (5, 12);
+        let hyp = SeArd::isotropic(d, 0.8, 1.1, 0.07);
+        let xs = Mat::from_vec(s, d, rng.normals(s * d));
+        let xm = Mat::from_vec(b, d, rng.normals(b * d));
+        let ym = rng.normals(b);
+        let sctx = SupportContext::new(&hyp, &xs);
+        let loc = local_summary(&hyp, &xm, &ym, &sctx);
+        let glob = global_summary(&sctx, &[&loc]);
+        let l_g = chol_global(&glob);
+        let serial = LinalgCtx::serial();
+        let op = ppic_operator(&serial, &hyp, &sctx, &glob, &l_g, &xm,
+                               &ym, &loc, 0.5)
+            .demote();
+        let xu = Mat::from_vec(9, d, rng.normals(9 * d));
+        let want = op.predict_ctx(&serial, &xu);
+        let pooled = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+        let got = op.predict_ctx(&pooled, &xu);
+        assert_eq!(want.mean, got.mean);
+        assert_eq!(want.var, got.var);
+
+        let mut scratch = OpScratchF32::new();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        for rows in [4usize, 1, 9, 4] {
+            let q = rng.normals(rows * d);
+            op.predict_into(&serial, &q, rows, &mut scratch, &mut mean,
+                            &mut var);
+            let fresh =
+                op.predict_ctx(&serial, &Mat::from_vec(rows, d, q));
+            assert_eq!(mean, fresh.mean, "rows={rows}");
+            assert_eq!(var, fresh.var, "rows={rows}");
+        }
     }
 
     /// Operator predictions are bitwise pooled ≡ serial (build and

@@ -2,4 +2,4 @@
 
 pub mod se;
 
-pub use se::{FeatureMap, FeatureScratch, SeArd, JITTER_SCALE};
+pub use se::{FeatureMap, FeatureMapF32, FeatureScratch, SeArd, JITTER_SCALE};

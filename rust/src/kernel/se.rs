@@ -8,7 +8,9 @@
 //! `JITTER_SCALE · sf2 · I` — identical constants on both language sides
 //! so native and PJRT paths agree to float precision.
 
-use crate::linalg::{gemm_into, LinalgCtx, Mat};
+use crate::linalg::simd::exp::{se_apply, se_point};
+use crate::linalg::simd::mixed::{axpy_wide, MatF32};
+use crate::linalg::{gemm_into, simd, LinalgCtx, Mat};
 
 /// Relative jitter applied before factorization (== python JITTER_SCALE).
 pub const JITTER_SCALE: f64 = 1e-8;
@@ -105,6 +107,9 @@ impl FeatureMap {
             return;
         }
         let sf2 = self.sf2;
+        // One tier read on the calling thread, captured into the band
+        // jobs (forced tiers survive the fan-out).
+        let tier = simd::active_tier();
         let ranges = ctx.ranges(rows, 8);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
             Vec::with_capacity(ranges.len());
@@ -117,11 +122,7 @@ impl FeatureMap {
             rest = tail;
             jobs.push(Box::new(move || {
                 for (r, krow) in band.chunks_mut(p).enumerate() {
-                    let s1v = qsq[lo + r];
-                    for (j, kv) in krow.iter_mut().enumerate() {
-                        let sq = (s1v + sq2[j] - 2.0 * *kv).max(0.0);
-                        *kv = sf2 * (-0.5 * sq).exp();
-                    }
+                    se_apply(tier, sf2, qsq[lo + r], sq2, krow);
                 }
             }));
         }
@@ -135,6 +136,126 @@ impl FeatureMap {
         let mut scratch = FeatureScratch::default();
         self.fill(ctx, &xu.data, xu.rows, &mut out, &mut scratch);
         out
+    }
+
+    /// Demote to the mixed-precision serve form (f32-stored sources;
+    /// see [`FeatureMapF32`]).
+    #[must_use]
+    pub fn demote(&self) -> FeatureMapF32 {
+        let xt = MatF32::from_mat(&self.xt);
+        // Norms recomputed from the *demoted* rows so the
+        // ‖q‖²+‖s‖²−2·q·s expansion stays internally consistent (the
+        // clamp at 0 then still fires exactly at q = s).
+        let (d, p) = (xt.rows, xt.cols);
+        let sq: Vec<f64> = (0..p)
+            .map(|j| {
+                (0..d)
+                    .map(|c| {
+                        let v = xt.data[c * p + j] as f64;
+                        v * v
+                    })
+                    .sum()
+            })
+            .collect();
+        FeatureMapF32 { inv_ls: self.inv_ls.clone(), sf2: self.sf2, xt, sq }
+    }
+}
+
+/// Mixed-precision sibling of [`FeatureMap`]: the scaled source matrix
+/// is stored in **f32** (halving the DRAM traffic that dominates the
+/// serve-path feature build) while every reduction accumulates in
+/// **f64** — the cross term is a widening GEMV sweep and the banded SE
+/// transform runs on f64 rows before demoting the finished features to
+/// f32 for the downstream f32-storage operators. The only error vs
+/// [`FeatureMap`] is the one-time f32 rounding of the stored sources
+/// and of the final feature values (≤2⁻²⁴ relative each); the serve
+/// budget is asserted in `gp::predictor`.
+#[derive(Debug, Clone)]
+pub struct FeatureMapF32 {
+    inv_ls: Vec<f64>,
+    sf2: f64,
+    /// Demoted scaled source rows, transposed: (d × p).
+    xt: MatF32,
+    /// Squared norms of the demoted scaled source rows (p).
+    sq: Vec<f64>,
+}
+
+impl FeatureMapF32 {
+    /// Total feature dimension p.
+    #[must_use]
+    pub fn p(&self) -> usize {
+        self.xt.cols
+    }
+
+    /// Input dimensionality d.
+    #[must_use]
+    pub fn dim(&self) -> usize {
+        self.inv_ls.len()
+    }
+
+    /// Fill `out` (resized to rows × p) with `k(q, sources)` in f32
+    /// storage. Banded over query rows; pooled ≡ serial bitwise (each
+    /// row's value depends only on its own inputs). Each band job
+    /// carries one p-length f64 scratch row (the f32 mode trades this
+    /// small per-call allocation for halved streaming traffic).
+    pub fn fill(
+        &self,
+        ctx: &LinalgCtx,
+        q: &[f64],
+        rows: usize,
+        out: &mut MatF32,
+        scratch: &mut FeatureScratch,
+    ) {
+        let d = self.dim();
+        assert_eq!(q.len(), rows * d, "feature fill f32: query shape");
+        let p = self.p();
+        scratch.qs.resize_to(rows, d);
+        for r in 0..rows {
+            let src = &q[r * d..(r + 1) * d];
+            let dst = scratch.qs.row_mut(r);
+            for (c, v) in dst.iter_mut().enumerate() {
+                *v = src[c] * self.inv_ls[c];
+            }
+        }
+        scratch.qsq.resize(rows, 0.0);
+        for r in 0..rows {
+            scratch.qsq[r] =
+                scratch.qs.row(r).iter().map(|v| v * v).sum();
+        }
+        out.resize_to(rows, p);
+        if rows == 0 || p == 0 {
+            return;
+        }
+        let sf2 = self.sf2;
+        let tier = simd::active_tier();
+        let ranges = ctx.ranges(rows, 8);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f32] = &mut out.data[..];
+        let qs = &scratch.qs;
+        let qsq = &scratch.qsq;
+        let (xt, sq2) = (&self.xt, &self.sq);
+        for &(lo, hi) in &ranges {
+            let (band, tail) =
+                std::mem::take(&mut rest).split_at_mut((hi - lo) * p);
+            rest = tail;
+            jobs.push(Box::new(move || {
+                let mut krow = vec![0.0f64; p];
+                for (r, orow) in band.chunks_mut(p).enumerate() {
+                    // widening cross term q̃ · x̃ᵀ (f32 sources, f64 acc)
+                    krow.fill(0.0);
+                    let qrow = qs.row(lo + r);
+                    for (c, &qc) in qrow.iter().enumerate() {
+                        axpy_wide(qc, xt.row(c), &mut krow);
+                    }
+                    se_apply(tier, sf2, qsq[lo + r], sq2, &mut krow);
+                    for (o, &v) in orow.iter_mut().zip(krow.iter()) {
+                        *o = v as f32;
+                    }
+                }
+            }));
+        }
+        ctx.run_jobs(jobs);
     }
 }
 
@@ -199,7 +320,9 @@ impl SeArd {
         }
     }
 
-    /// Noise-free kernel value k(x, x').
+    /// Noise-free kernel value k(x, x'). Uses the scalar libm oracle
+    /// ([`se_point`]) in every SIMD tier — the pointwise path is never
+    /// hot, and keeping it on libm preserves `k(a,a) ≈ sf2` exactly.
     pub fn k(&self, x1: &[f64], x2: &[f64]) -> f64 {
         debug_assert_eq!(x1.len(), self.dim());
         debug_assert_eq!(x2.len(), self.dim());
@@ -208,7 +331,7 @@ impl SeArd {
             let diff = (x1[i] - x2[i]) * (-self.log_ls[i]).exp();
             s += diff * diff;
         }
-        self.sf2() * (-0.5 * s).exp()
+        se_point(self.sf2(), s)
     }
 
     /// Cross-covariance block Σ_{X1 X2} (no noise, no jitter).
@@ -310,13 +433,17 @@ impl SeArd {
         let sq2: Vec<f64> = (0..s2.rows)
             .map(|i| s2.row(i).iter().map(|v| v * v).sum())
             .collect();
-        let cross = crate::linalg::gemm_nt(ctx, &s1, &s2);
+        // The cross-term matrix becomes the output in place: each band
+        // row holds q̃·s̃ᵀ on entry and the kernel value on exit (the
+        // shared [`se_apply`] transform — same expression the seed
+        // loop used, vectorized on AVX tiers).
+        let mut k = crate::linalg::gemm_nt(ctx, &s1, &s2);
         let sf2 = self.sf2();
         let n2 = x2.rows;
-        let mut k = Mat::zeros(x1.rows, n2);
         if n2 == 0 || x1.rows == 0 {
             return k;
         }
+        let tier = simd::active_tier();
         {
             let ranges = ctx.ranges(x1.rows, 8);
             let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
@@ -328,15 +455,9 @@ impl SeArd {
                 rest = tail;
                 let sq1b = &sq1[lo..hi];
                 let sq2r = &sq2;
-                let cr = &cross;
                 jobs.push(Box::new(move || {
                     for (r, krow) in band.chunks_mut(n2).enumerate() {
-                        let crow = cr.row(lo + r);
-                        let s1v = sq1b[r];
-                        for j in 0..n2 {
-                            let sq = (s1v + sq2r[j] - 2.0 * crow[j]).max(0.0);
-                            krow[j] = sf2 * (-0.5 * sq).exp();
-                        }
+                        se_apply(tier, sf2, sq1b[r], sq2r, krow);
                     }
                 }));
             }
@@ -719,6 +840,80 @@ mod tests {
                 assert_eq!(padded.row(r), out.row(r));
             }
         }
+    }
+
+    /// Every exp call site (gram_ctx, FeatureMap::fill, SeArd::k) is
+    /// pinned to the scalar libm oracle under every supported SIMD
+    /// tier: Portable bitwise (it *is* the seed expression), AVX tiers
+    /// within the polynomial-exp tolerance.
+    #[test]
+    fn exp_call_sites_match_scalar_oracle_across_tiers() {
+        use crate::linalg::SimdTier;
+        for tier in SimdTier::available() {
+            let _t = crate::linalg::force_tier(tier);
+            prop_check(&format!("se-oracle-{}", tier.name()), 6, |g| {
+                let d = g.usize_in(1, 5);
+                let (n1, n2) = (g.usize_in(1, 30), g.usize_in(1, 30));
+                let hyp = rand_hyp(g, d);
+                let x1 = rand_x(g, n1, d);
+                let x2 = rand_x(g, n2, d);
+                let ctx = LinalgCtx::serial();
+                let k = hyp.gram_ctx(&ctx, &x1, &x2);
+                let fm = hyp.feature_map(&[&x2]);
+                let f = fm.features(&ctx, &x1);
+                for i in 0..n1 {
+                    for j in 0..n2 {
+                        let oracle = hyp.k(x1.row(i), x2.row(j));
+                        // gram and features share se_apply → identical
+                        assert_eq!(k[(i, j)], f[(i, j)], "gram vs fill");
+                        // and both track the pointwise libm oracle
+                        // (expansion vs diff form reassociation + the
+                        // polynomial exp's ulp bound)
+                        assert_close(k[(i, j)], oracle, 1e-10, 1e-12);
+                    }
+                }
+            });
+        }
+    }
+
+    /// The f32-storage feature map tracks the f64 map within the serve
+    /// error budget, and its pooled fill is bitwise-identical to
+    /// serial.
+    #[test]
+    fn feature_map_f32_tracks_f64_within_budget() {
+        use crate::util::pool::ThreadPool;
+        use std::sync::Arc;
+        prop_check("feature-map-f32", 8, |g| {
+            let d = g.usize_in(1, 5);
+            let (s, u) = (g.usize_in(1, 40), g.usize_in(1, 30));
+            let hyp = rand_hyp(g, d);
+            let xs = rand_x(g, s, d);
+            let xu = rand_x(g, u, d);
+            let fm = hyp.feature_map(&[&xs]);
+            let fm32 = fm.demote();
+            assert_eq!(fm32.p(), s);
+            assert_eq!(fm32.dim(), d);
+            let ctx = LinalgCtx::serial();
+            let want = fm.features(&ctx, &xu);
+            let mut got = MatF32::zeros(0, 0);
+            let mut scratch = FeatureScratch::new();
+            fm32.fill(&ctx, &xu.data, u, &mut got, &mut scratch);
+            let sf2 = hyp.sf2();
+            for i in 0..u {
+                for j in 0..s {
+                    let w = want[(i, j)];
+                    let v = got.row(i)[j] as f64;
+                    assert!(
+                        (v - w).abs() <= 1e-4 * sf2.max(w.abs()),
+                        "({i},{j}): {v} vs {w}"
+                    );
+                }
+            }
+            let pooled = LinalgCtx::pooled(Arc::new(ThreadPool::new(3)));
+            let mut got_p = MatF32::zeros(0, 0);
+            fm32.fill(&pooled, &xu.data, u, &mut got_p, &mut scratch);
+            assert_eq!(got.data, got_p.data, "pooled f32 fill bitwise");
+        });
     }
 
     #[test]

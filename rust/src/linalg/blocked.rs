@@ -4,17 +4,20 @@
 //! # Scheme
 //!
 //! **GEMM** (`gemm`/`gemm_tn`/`gemm_nt`): C = A·B is tiled over
-//! (`KC`=192)-deep k-blocks × (`NC`=256)-wide column tiles of B. Each
-//! B tile is packed into a contiguous buffer (so the innermost loop
-//! streams it at unit stride regardless of the source leading
-//! dimension), then row bands of C fan out over the pool. The
-//! microloop processes **two C rows × four packed B rows** per pass —
-//! the shape that measured fastest on the dev host (≈2.1–2.6× the
-//! seed's streaming i-k-j kernel at 1024², see `BENCH_linalg.json`):
-//! two output rows reuse every B load and four k-steps amortize each
-//! C-row load/store, which is exactly what the seed kernel (reloading
-//! C and B from L3 on every pass) lacked. The transposed variants
-//! reuse the same fast path through one tiled transpose.
+//! (`KC`=192)-deep k-blocks × (`NC`=256)-wide column tiles of B. Row
+//! bands of C fan out over the pool once per k-block; **each band job
+//! packs its own B tile** into a thread-local buffer (so the innermost
+//! loop streams it at unit stride and no job ever waits on a shared
+//! packer — one barrier per k-block instead of one per tile). The
+//! microkernel is picked once per call from the runtime-dispatched
+//! tier ladder in [`super::simd`] (AVX-512 8×8 → AVX2+FMA 4×8 →
+//! portable seed kernel; override with `PGPR_SIMD`) and the tier is
+//! captured into every pool job so forced tiers survive the fan-out.
+//! The transposed variants reuse the same fast path through one tiled
+//! transpose. Problems below a per-kernel flop cutoff skip the pool
+//! entirely (dispatch overhead swamps the kernel there — measured, see
+//! `BENCH_linalg.json`); the cutoff changes scheduling only, never
+//! numbers.
 //!
 //! **Cholesky** (`cholesky_blocked`): right-looking — scalar POTRF on
 //! the `ctx.block`-sized diagonal block, a row-parallel TRSM panel,
@@ -29,20 +32,27 @@
 //!
 //! # Equivalence contracts (tested)
 //!
-//! * Serial `gemm` reproduces the seed scalar `matmul` **bitwise**: the
-//!   k-blocking (`KC` a multiple of 4) preserves the scalar kernel's
-//!   4-wide grouping and per-element expression exactly.
-//! * Pooled runs reproduce serial runs **bitwise** for every kernel:
-//!   parallelism only partitions disjoint output bands (see
-//!   [`LinalgCtx`]); band boundaries never change any element's
-//!   instruction sequence.
-//! * Factorizations/solves agree with the scalar reference
-//!   implementations to ≤1e-10 on well-conditioned inputs (different
-//!   but equally stable summation orders).
+//! * Under the `Portable` tier, serial `gemm` reproduces the seed
+//!   scalar `matmul` **bitwise**: the k-blocking (`KC` a multiple of
+//!   4) preserves the scalar kernel's 4-wide grouping and per-element
+//!   expression exactly, and the portable microkernel is the seed
+//!   kernel verbatim.
+//! * Pooled runs reproduce serial runs **bitwise** for every kernel
+//!   *within any tier*: parallelism only partitions disjoint output
+//!   bands (see [`LinalgCtx`]), and every tier produces each element
+//!   from one accumulator folded over k in a fixed order, so band
+//!   boundaries never change an element's value.
+//! * AVX tiers agree with `Portable` to reassociation-level tolerance;
+//!   factorizations/solves agree with the scalar references to ≤1e-10
+//!   on well-conditioned inputs (different but equally stable
+//!   summation orders). The tier-matrix test below sweeps every
+//!   supported tier through all four kernels.
 
 use super::cholesky::NotSpd;
 use super::ctx::LinalgCtx;
+use super::simd::{self, SimdTier};
 use super::{axpy, dot, Mat};
+use std::cell::Cell;
 
 /// k-block depth. Must stay a multiple of 4: it aligns the packed
 /// panel with the scalar kernel's 4-wide k-grouping, which is what
@@ -53,136 +63,77 @@ const KC: usize = 192;
 /// stays L2-resident on anything this runs on).
 const NC: usize = 256;
 
-/// Row-band height for the Cholesky trailing update. Kept fixed (and
-/// modest) rather than derived from the worker count so the
-/// rectangle-per-band overshoot above the diagonal stays small in both
-/// serial and pooled runs.
+/// Row-band height for the Cholesky trailing update when serial. Kept
+/// modest so the rectangle-per-band overshoot above the diagonal stays
+/// small.
 const TRAIL_BAND: usize = 96;
 
-/// One C row: `c[j] ±= (a · B)[j]` over a `kc`-deep, `nc`-wide tile.
-/// `SUB` selects subtraction at compile time (a runtime ±1 multiplier
-/// measurably costs ~20% GEMM throughput). Mirrors the seed kernel's
-/// expression exactly (including the zero-skip on the k remainder).
-fn band_kernel_row<const SUB: bool>(
-    a0: &[f64],
-    c0: &mut [f64],
-    b_rows: &[&[f64]],
-    kc: usize,
-    nc: usize,
-) {
-    let c0 = &mut c0[..nc];
-    let mut kk = 0;
-    while kk + 4 <= kc {
-        let (p0, p1, p2, p3) = (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
-        let b0 = &b_rows[kk][..nc];
-        let b1 = &b_rows[kk + 1][..nc];
-        let b2 = &b_rows[kk + 2][..nc];
-        let b3 = &b_rows[kk + 3][..nc];
-        for j in 0..nc {
-            let t = p0 * b0[j] + p1 * b1[j] + p2 * b2[j] + p3 * b3[j];
-            if SUB {
-                c0[j] -= t;
-            } else {
-                c0[j] += t;
-            }
-        }
-        kk += 4;
-    }
-    while kk < kc {
-        let p = a0[kk];
-        if p != 0.0 {
-            let brow = &b_rows[kk][..nc];
-            for j in 0..nc {
-                let t = p * brow[j];
-                if SUB {
-                    c0[j] -= t;
-                } else {
-                    c0[j] += t;
-                }
-            }
-        }
-        kk += 1;
+/// Trailing-update band height when pooled: finer bands give the pool
+/// enough independent units to balance the triangular (shrinking)
+/// update across workers. Band size never changes element values (one
+/// accumulator per element, k order fixed), so this is a pure
+/// scheduling knob.
+const TRAIL_BAND_POOLED: usize = 48;
+
+/// Flop cutoffs below which a pooled ctx degrades to serial: pool
+/// dispatch + barrier overhead swamps the kernel on small problems
+/// (the C-mirror sweep behind `BENCH_linalg.json` shows pooled
+/// Cholesky losing to serial through n=512, and GEMM only breaking
+/// even near 160³). Values are flops of the respective kernel:
+/// 2·m·n·k (GEMM), n³/3 (Cholesky), n²·w (solves), p²·b (diag_quad).
+const GEMM_PAR_MIN_FLOPS: f64 = 8e6;
+const CHOL_PAR_MIN_FLOPS: f64 = 1.5e8;
+const SOLVE_PAR_MIN_FLOPS: f64 = 1e6;
+const QUAD_PAR_MIN_FLOPS: f64 = 2e6;
+
+thread_local! {
+    // Test hook: pooled-≡-serial bitwise tests must exercise the real
+    // fan-out at test-sized problems, which the cutoffs would silently
+    // de-parallelize.
+    static NO_CUTOFF: Cell<bool> = const { Cell::new(false) };
+}
+
+/// RAII guard disabling the small-problem serial cutoffs on this
+/// thread (test hook; see `NO_CUTOFF`).
+pub(crate) struct CutoffGuard {
+    prev: bool,
+}
+
+impl Drop for CutoffGuard {
+    fn drop(&mut self) {
+        NO_CUTOFF.with(|c| c.set(self.prev));
     }
 }
 
-/// The microloop: `c_rows[r] ±= a_rows[r] · B` over a tile, two C rows
-/// at a time (each B load feeds both rows; four k-steps amortize each
-/// C access). `b_rows[kk]` is packed row kk of the tile.
-fn band_kernel<const SUB: bool>(
-    a_rows: &[&[f64]],
-    c_rows: &mut [&mut [f64]],
-    b_rows: &[&[f64]],
-    kc: usize,
-    nc: usize,
-) {
-    debug_assert_eq!(a_rows.len(), c_rows.len());
-    debug_assert!(b_rows.len() >= kc);
-    let rows = c_rows.len();
-    let mut r = 0;
-    while r + 2 <= rows {
-        let (head, tail) = c_rows.split_at_mut(r + 1);
-        let c0 = &mut head[r][..nc];
-        let c1 = &mut tail[0][..nc];
-        let a0 = a_rows[r];
-        let a1 = a_rows[r + 1];
-        let mut kk = 0;
-        while kk + 4 <= kc {
-            let (p0, p1, p2, p3) =
-                (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
-            let (q0, q1, q2, q3) =
-                (a1[kk], a1[kk + 1], a1[kk + 2], a1[kk + 3]);
-            let b0 = &b_rows[kk][..nc];
-            let b1 = &b_rows[kk + 1][..nc];
-            let b2 = &b_rows[kk + 2][..nc];
-            let b3 = &b_rows[kk + 3][..nc];
-            for j in 0..nc {
-                let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
-                let t0 = p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
-                let t1 = q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
-                if SUB {
-                    c0[j] -= t0;
-                    c1[j] -= t1;
-                } else {
-                    c0[j] += t0;
-                    c1[j] += t1;
-                }
-            }
-            kk += 4;
-        }
-        while kk < kc {
-            let (p, q) = (a0[kk], a1[kk]);
-            let brow = &b_rows[kk][..nc];
-            if p != 0.0 {
-                for j in 0..nc {
-                    let t = p * brow[j];
-                    if SUB {
-                        c0[j] -= t;
-                    } else {
-                        c0[j] += t;
-                    }
-                }
-            }
-            if q != 0.0 {
-                for j in 0..nc {
-                    let t = q * brow[j];
-                    if SUB {
-                        c1[j] -= t;
-                    } else {
-                        c1[j] += t;
-                    }
-                }
-            }
-            kk += 1;
-        }
-        r += 2;
-    }
-    if r < rows {
-        band_kernel_row::<SUB>(a_rows[r], &mut *c_rows[r], b_rows, kc, nc);
+pub(crate) fn disable_small_cutoff() -> CutoffGuard {
+    CutoffGuard { prev: NO_CUTOFF.with(|c| c.replace(true)) }
+}
+
+/// The ctx a kernel should actually run on: the caller's, or its
+/// serial view when the problem is below the pool-worthwhile cutoff.
+/// Purely a scheduling decision — banding invariance makes the result
+/// bitwise-identical either way.
+fn effective(ctx: &LinalgCtx, flops: f64, min_flops: f64) -> LinalgCtx {
+    if ctx.is_pooled()
+        && flops < min_flops
+        && !NO_CUTOFF.with(|c| c.get())
+    {
+        ctx.serial_view()
+    } else {
+        ctx.clone()
     }
 }
 
 /// `C ±= A·B` — the blocked, row-band-parallel accumulation core
 /// behind [`gemm`] and the factorization updates (`SUB` subtracts).
+///
+/// Fan-out happens once per `KC` k-block; each row-band job packs its
+/// own copy of the current B tile into a job-local buffer and sweeps
+/// all `NC` column tiles. The duplicated packing costs <1% of the
+/// band's flops and removes both the serialized shared pack and the
+/// per-tile barrier of the previous structure (the 1→2 thread scaling
+/// limiter on the dev host). The SIMD tier is resolved here, on the
+/// calling thread, and captured into the jobs.
 pub(crate) fn gemm_acc<const SUB: bool>(
     ctx: &LinalgCtx,
     a: &Mat,
@@ -199,42 +150,47 @@ pub(crate) fn gemm_acc<const SUB: bool>(
     if m == 0 || kdim == 0 || n == 0 {
         return;
     }
+    let flops = 2.0 * m as f64 * n as f64 * kdim as f64;
+    let ctx = effective(ctx, flops, GEMM_PAR_MIN_FLOPS);
+    let tier = simd::active_tier();
     let ranges = ctx.ranges(m, 16);
-    let mut packed = vec![0.0f64; KC.min(kdim) * NC.min(n)];
     let mut kb = 0;
     while kb < kdim {
         let kc = KC.min(kdim - kb);
-        let mut jb = 0;
-        while jb < n {
-            let nc = NC.min(n - jb);
-            for kk in 0..kc {
-                let base = (kb + kk) * n + jb;
-                packed[kk * nc..kk * nc + nc]
-                    .copy_from_slice(&b.data[base..base + nc]);
-            }
-            let b_rows: Vec<&[f64]> = packed[..kc * nc].chunks(nc).collect();
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(ranges.len());
-            let mut rest: &mut [f64] = &mut c.data[..];
-            for &(lo, hi) in &ranges {
-                let (chunk, tail) =
-                    std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
-                rest = tail;
-                let mut crows: Vec<&mut [f64]> = chunk
-                    .chunks_mut(n)
-                    .map(|row| &mut row[jb..jb + nc])
-                    .collect();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(ranges.len());
+        let mut rest: &mut [f64] = &mut c.data[..];
+        for &(lo, hi) in &ranges {
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
+            rest = tail;
+            jobs.push(Box::new(move || {
+                let mut packed = vec![0.0f64; kc * NC.min(n)];
                 let arows: Vec<&[f64]> = (lo..hi)
                     .map(|i| &a.data[i * kdim + kb..i * kdim + kb + kc])
                     .collect();
-                let br = &b_rows;
-                jobs.push(Box::new(move || {
-                    band_kernel::<SUB>(&arows, &mut crows, br, kc, nc);
-                }));
-            }
-            ctx.run_jobs(jobs);
-            jb += nc;
+                let mut jb = 0;
+                while jb < n {
+                    let nc = NC.min(n - jb);
+                    for kk in 0..kc {
+                        let base = (kb + kk) * n + jb;
+                        packed[kk * nc..kk * nc + nc]
+                            .copy_from_slice(&b.data[base..base + nc]);
+                    }
+                    let b_rows: Vec<&[f64]> =
+                        packed[..kc * nc].chunks(nc).collect();
+                    let mut crows: Vec<&mut [f64]> = chunk
+                        .chunks_mut(n)
+                        .map(|row| &mut row[jb..jb + nc])
+                        .collect();
+                    simd::band_kernel::<SUB>(
+                        tier, &arows, &mut crows, &b_rows, kc, nc,
+                    );
+                    jb += nc;
+                }
+            }));
         }
+        ctx.run_jobs(jobs);
         kb += kc;
     }
 }
@@ -277,6 +233,14 @@ pub fn gemm_nt(ctx: &LinalgCtx, a: &Mat, b: &Mat) -> Mat {
 pub fn cholesky_blocked(ctx: &LinalgCtx, a: &Mat) -> Result<Mat, NotSpd> {
     assert!(a.is_square(), "cholesky of non-square");
     let n = a.rows;
+    let flops = (n as f64).powi(3) / 3.0;
+    let ctx = &effective(ctx, flops, CHOL_PAR_MIN_FLOPS);
+    let tier = simd::active_tier();
+    let trail_band = if ctx.workers() > 1 {
+        TRAIL_BAND_POOLED
+    } else {
+        TRAIL_BAND
+    };
     let mut l = a.clone();
     let nb_step = ctx.block.max(4);
     let mut k0 = 0;
@@ -346,7 +310,7 @@ pub fn cholesky_blocked(ctx: &LinalgCtx, a: &Mat) -> Result<Mat, NotSpd> {
             let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
             let mut lo = 0;
             while lo < p {
-                let hi = (lo + TRAIL_BAND).min(p);
+                let hi = (lo + trail_band).min(p);
                 let (chunk, tail) =
                     std::mem::take(&mut rest).split_at_mut((hi - lo) * n);
                 rest = tail;
@@ -357,7 +321,9 @@ pub fn cholesky_blocked(ctx: &LinalgCtx, a: &Mat) -> Result<Mat, NotSpd> {
                 let arows: Vec<&[f64]> = (lo..hi).map(|r| xp.row(r)).collect();
                 let br = &bt_rows;
                 jobs.push(Box::new(move || {
-                    band_kernel::<true>(&arows, &mut crows, br, nb, hi);
+                    simd::band_kernel::<true>(
+                        tier, &arows, &mut crows, br, nb, hi,
+                    );
                 }));
                 lo = hi;
             }
@@ -384,6 +350,9 @@ pub fn solve_lower_mat_ctx(ctx: &LinalgCtx, l: &Mat, b: &Mat) -> Mat {
     if n == 0 || w == 0 {
         return y;
     }
+    let flops = (n * n * w) as f64;
+    let ctx = &effective(ctx, flops, SOLVE_PAR_MIN_FLOPS);
+    let tier = simd::active_tier();
     let nb_step = ctx.block.max(4);
     let col_ranges = ctx.ranges(w, 8);
     {
@@ -391,7 +360,9 @@ pub fn solve_lower_mat_ctx(ctx: &LinalgCtx, l: &Mat, b: &Mat) -> Mat {
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
             Vec::with_capacity(band_rows.len());
         for rows in band_rows {
-            jobs.push(Box::new(move || forward_solve_band(l, rows, nb_step)));
+            jobs.push(Box::new(move || {
+                forward_solve_band(tier, l, rows, nb_step)
+            }));
         }
         ctx.run_jobs(jobs);
     }
@@ -407,6 +378,9 @@ pub fn solve_upper_t_mat_ctx(ctx: &LinalgCtx, l: &Mat, y: &Mat) -> Mat {
     if n == 0 || w == 0 {
         return x;
     }
+    let flops = (n * n * w) as f64;
+    let ctx = &effective(ctx, flops, SOLVE_PAR_MIN_FLOPS);
+    let tier = simd::active_tier();
     let nb_step = ctx.block.max(4);
     let col_ranges = ctx.ranges(w, 8);
     {
@@ -414,7 +388,9 @@ pub fn solve_upper_t_mat_ctx(ctx: &LinalgCtx, l: &Mat, y: &Mat) -> Mat {
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
             Vec::with_capacity(band_rows.len());
         for rows in band_rows {
-            jobs.push(Box::new(move || backward_solve_band(l, rows, nb_step)));
+            jobs.push(Box::new(move || {
+                backward_solve_band(tier, l, rows, nb_step)
+            }));
         }
         ctx.run_jobs(jobs);
     }
@@ -483,6 +459,8 @@ pub fn diag_quad_into(ctx: &LinalgCtx, g: &Mat, a: &Mat, out: &mut [f64]) {
     if p == 0 {
         return;
     }
+    let flops = (p * p * b) as f64;
+    let ctx = &effective(ctx, flops, QUAD_PAR_MIN_FLOPS);
     let ranges = ctx.ranges(b, 8);
     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
         Vec::with_capacity(ranges.len());
@@ -539,7 +517,12 @@ fn split_column_bands<'a>(
 
 /// Blocked forward substitution on one column band (rows = the band's
 /// windows of Y, in matrix row order).
-fn forward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
+fn forward_solve_band(
+    tier: SimdTier,
+    l: &Mat,
+    mut rows: Vec<&mut [f64]>,
+    nb_step: usize,
+) {
     let n = l.rows;
     let mut k0 = 0;
     while k0 < n {
@@ -569,13 +552,18 @@ fn forward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
         let arows: Vec<&[f64]> =
             (k1..n).map(|i| &l.data[i * n + k0..i * n + k1]).collect();
         let nc = below.first().map(|r| r.len()).unwrap_or(0);
-        band_kernel::<true>(&arows, below, &brows, k1 - k0, nc);
+        simd::band_kernel::<true>(tier, &arows, below, &brows, k1 - k0, nc);
         k0 = k1;
     }
 }
 
 /// Blocked backward substitution (Lᵀ·X = Y) on one column band.
-fn backward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
+fn backward_solve_band(
+    tier: SimdTier,
+    l: &Mat,
+    mut rows: Vec<&mut [f64]>,
+    nb_step: usize,
+) {
     let n = l.rows;
     debug_assert!(n > 0);
     let mut k0 = (n - 1) / nb_step * nb_step; // last block start
@@ -598,7 +586,7 @@ fn backward_solve_band(l: &Mat, mut rows: Vec<&mut [f64]>, nb_step: usize) {
             let arows: Vec<&[f64]> = lt.chunks(p).collect();
             let cband = &mut active[k0..k1];
             let nc = cband.first().map(|r| r.len()).unwrap_or(0);
-            band_kernel::<true>(&arows, cband, &brows, p, nc);
+            simd::band_kernel::<true>(tier, &arows, cband, &brows, p, nc);
         }
         // Diagonal block back-substitution.
         for i in (k0..k1).rev() {
@@ -652,10 +640,12 @@ mod tests {
         LinalgCtx::pooled(Arc::new(ThreadPool::new(workers)))
     }
 
-    /// Serial blocked GEMM is bitwise-equal to the seed scalar kernel —
-    /// the strongest form of the ≤1e-10 acceptance bar.
+    /// Under the Portable tier, serial blocked GEMM is bitwise-equal to
+    /// the seed scalar kernel — the strongest form of the ≤1e-10
+    /// acceptance bar (the `PGPR_SIMD=portable` contract).
     #[test]
     fn gemm_bitwise_matches_scalar_matmul() {
+        let _t = simd::force_tier(SimdTier::Portable);
         prop_check("gemm-bitwise-scalar", 12, |g| {
             let (m, k, n) =
                 (g.usize_in(1, 70), g.usize_in(1, 401), g.usize_in(1, 70));
@@ -667,24 +657,37 @@ mod tests {
         });
     }
 
-    /// Pooled GEMM is bitwise-equal to serial at every thread count.
+    /// Pooled GEMM is bitwise-equal to serial at every thread count,
+    /// under every supported SIMD tier (the cutoff guard keeps
+    /// test-sized problems on the real fan-out path).
     #[test]
     fn gemm_pooled_bitwise_matches_serial() {
-        prop_check("gemm-pooled-serial", 6, |g| {
-            let (m, k, n) =
-                (g.usize_in(1, 90), g.usize_in(1, 220), g.usize_in(1, 90));
-            let a = rand_mat(g, m, k);
-            let b = rand_mat(g, k, n);
-            let serial = gemm(&LinalgCtx::serial(), &a, &b);
-            for workers in [2, 4] {
-                let pooled = gemm(&pooled_ctx(workers), &a, &b);
-                assert_eq!(serial, pooled, "workers={workers}");
-            }
-        });
+        let _c = disable_small_cutoff();
+        for tier in SimdTier::available() {
+            let _t = simd::force_tier(tier);
+            prop_check(&format!("gemm-pooled-{}", tier.name()), 4, |g| {
+                let (m, k, n) =
+                    (g.usize_in(1, 90), g.usize_in(1, 220), g.usize_in(1, 90));
+                let a = rand_mat(g, m, k);
+                let b = rand_mat(g, k, n);
+                let serial = gemm(&LinalgCtx::serial(), &a, &b);
+                for workers in [2, 4] {
+                    let pooled = gemm(&pooled_ctx(workers), &a, &b);
+                    assert_eq!(
+                        serial, pooled,
+                        "tier={} workers={workers}",
+                        tier.name()
+                    );
+                }
+            });
+        }
     }
 
     /// Awkward shapes: sizes straddling the KC/NC tile edges and the
-    /// 1×n / n×1 degenerate cases.
+    /// 1×n / n×1 degenerate cases. Portable is bitwise vs the scalar
+    /// kernel; AVX tiers stay within reassociation tolerance on the
+    /// same shapes (their 8-wide column tails and row remainders all
+    /// get exercised here).
     #[test]
     fn gemm_awkward_shapes() {
         let ctx = LinalgCtx::serial();
@@ -700,8 +703,20 @@ mod tests {
         ] {
             let a = seeded_mat(&mut g, m, k);
             let b = seeded_mat(&mut g, k, n);
-            assert_eq!(gemm(&ctx, &a, &b), matmul_scalar(&a, &b),
-                       "m={m} k={k} n={n}");
+            let scalar = matmul_scalar(&a, &b);
+            for tier in SimdTier::available() {
+                let _t = simd::force_tier(tier);
+                let got = gemm(&ctx, &a, &b);
+                if tier == SimdTier::Portable {
+                    assert_eq!(got, scalar, "m={m} k={k} n={n}");
+                } else {
+                    assert!(
+                        got.max_abs_diff(&scalar) < 1e-11 * (k as f64),
+                        "tier={} m={m} k={k} n={n}",
+                        tier.name()
+                    );
+                }
+            }
         }
     }
 
@@ -739,15 +754,23 @@ mod tests {
         });
     }
 
+    /// Pooled Cholesky ≡ serial bitwise under every supported tier —
+    /// despite the pooled path also using the finer TRAIL_BAND_POOLED
+    /// banding (band size never changes element values).
     #[test]
     fn cholesky_blocked_pooled_bitwise_matches_serial() {
-        prop_check("chol-pooled-serial", 5, |g| {
-            let n = g.usize_in(2, 180);
-            let a = rand_spd(g, n);
-            let serial = cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
-            let pooled = cholesky_blocked(&pooled_ctx(3), &a).unwrap();
-            assert_eq!(serial, pooled, "n={n}");
-        });
+        let _c = disable_small_cutoff();
+        for tier in SimdTier::available() {
+            let _t = simd::force_tier(tier);
+            prop_check(&format!("chol-pooled-{}", tier.name()), 3, |g| {
+                let n = g.usize_in(2, 180);
+                let a = rand_spd(g, n);
+                let serial =
+                    cholesky_blocked(&LinalgCtx::serial(), &a).unwrap();
+                let pooled = cholesky_blocked(&pooled_ctx(3), &a).unwrap();
+                assert_eq!(serial, pooled, "tier={} n={n}", tier.name());
+            });
+        }
     }
 
     /// Sizes that are not multiples of the block, with a small block so
@@ -823,6 +846,7 @@ mod tests {
 
     #[test]
     fn blocked_solves_pooled_bitwise_match_serial() {
+        let _c = disable_small_cutoff();
         prop_check("solves-pooled-serial", 5, |g| {
             let n = g.usize_in(2, 100);
             let w = g.usize_in(2, 64);
@@ -910,6 +934,7 @@ mod tests {
     /// element-disjoint; per-row accumulation order is band-invariant).
     #[test]
     fn diag_quad_pooled_bitwise_matches_serial() {
+        let _c = disable_small_cutoff();
         prop_check("diag-quad-pooled", 6, |g| {
             let b = g.usize_in(1, 60);
             let p = g.usize_in(1, 120);
@@ -935,6 +960,72 @@ mod tests {
         let mut c = seeded_mat(&mut g, 13, 17); // stale contents
         gemm_into(&ctx, &a, &b, &mut c);
         assert_eq!(c, want);
+    }
+
+    /// The tier matrix (satellite of the SIMD PR): every supported
+    /// tier through GEMM, Cholesky, both triangular solves and the
+    /// fused diag-quad. Portable must be bitwise-equal to the scalar
+    /// seed references where those are bitwise contracts, and every
+    /// AVX tier must stay within reassociation tolerance of the
+    /// Portable tier on identical inputs.
+    #[test]
+    fn tier_matrix_all_kernels_equivalent() {
+        let mut g = crate::util::Pcg64::seed(321);
+        // shapes straddle the 8-wide column blocks, the 4/8 row blocks
+        // and the KC edge
+        let a = seeded_mat(&mut g, 37, 201);
+        let b = seeded_mat(&mut g, 201, 43);
+        let base = seeded_mat(&mut g, 131, 131);
+        let mut spd = gemm_nt(&LinalgCtx::serial(), &base, &base);
+        spd.add_diag(132.0);
+        let rhs = seeded_mat(&mut g, 131, 19);
+        let (g_ref, l_ref, y_ref, x_ref) = {
+            let _t = simd::force_tier(SimdTier::Portable);
+            let ctx = LinalgCtx::serial();
+            let l = cholesky_blocked(&ctx, &spd).unwrap();
+            let y = solve_lower_mat_ctx(&ctx, &l, &rhs);
+            let x = solve_upper_t_mat_ctx(&ctx, &l, &rhs);
+            (gemm(&ctx, &a, &b), l, y, x)
+        };
+        for tier in SimdTier::available() {
+            let _t = simd::force_tier(tier);
+            let ctx = LinalgCtx::serial();
+            let gm = gemm(&ctx, &a, &b);
+            let l = cholesky_blocked(&ctx, &spd).unwrap();
+            let y = solve_lower_mat_ctx(&ctx, &l_ref, &rhs);
+            let x = solve_upper_t_mat_ctx(&ctx, &l_ref, &rhs);
+            if tier == SimdTier::Portable {
+                assert_eq!(gm, g_ref);
+                assert_eq!(l, l_ref);
+                assert_eq!(y, y_ref);
+                assert_eq!(x, x_ref);
+            } else {
+                let name = tier.name();
+                assert!(gm.max_abs_diff(&g_ref) < 1e-9, "{name} gemm");
+                assert!(l.max_abs_diff(&l_ref) < 1e-9, "{name} chol");
+                assert!(y.max_abs_diff(&y_ref) < 1e-9, "{name} fwd");
+                assert!(x.max_abs_diff(&x_ref) < 1e-9, "{name} bwd");
+            }
+        }
+    }
+
+    /// The small-problem cutoff is scheduling-only: a pooled ctx below
+    /// the GEMM flop threshold must give bitwise-identical results to
+    /// both the serial path and a cutoff-disabled pooled run.
+    #[test]
+    fn small_problem_cutoff_is_bitwise_invisible() {
+        let mut g = crate::util::Pcg64::seed(9);
+        let a = seeded_mat(&mut g, 40, 50); // 2·40·50·30 = 2.4e5 flops
+        let b = seeded_mat(&mut g, 50, 30);
+        let serial = gemm(&LinalgCtx::serial(), &a, &b);
+        let pooled = pooled_ctx(2);
+        let with_cutoff = gemm(&pooled, &a, &b);
+        let without = {
+            let _c = disable_small_cutoff();
+            gemm(&pooled, &a, &b)
+        };
+        assert_eq!(serial, with_cutoff);
+        assert_eq!(serial, without);
     }
 
     /// A ctx whose pool is "hidden" (call from a worker of the same

@@ -74,6 +74,14 @@ impl LinalgCtx {
         self
     }
 
+    /// A serial ctx with the same block size — the small-problem
+    /// fallback behind the flop cutoffs in [`super::blocked`] (pool
+    /// dispatch overhead swamps the kernel below a per-kernel size;
+    /// results are bitwise-unchanged, only the fan-out is skipped).
+    pub(crate) fn serial_view(&self) -> LinalgCtx {
+        LinalgCtx { block: self.block, pool: None }
+    }
+
     /// The pool to fan work out on — `None` when serial *or* when the
     /// calling thread is one of this pool's own workers (guarantee 1).
     pub fn pool(&self) -> Option<&ThreadPool> {

@@ -8,31 +8,43 @@
 //! multi-dimensional scaling ([`mds`], used to embed the AIMPEAK road
 //! network per the paper's footnote 2).
 //!
-//! # §Perf — the blocked, thread-parallel engine
+//! # §Perf — the blocked, SIMD-dispatched, thread-parallel engine
 //!
 //! Every hot kernel routes through [`blocked`]: packed-tile GEMM
-//! (KC=192-deep k-blocks × NC=256-wide packed B tiles, a 2-row ×
-//! 4-k-step microloop), right-looking blocked Cholesky (scalar POTRF
-//! diagonal block + row-parallel TRSM panel + pooled GEMM trailing
-//! update) and column-band-parallel triangular solves. Execution is
-//! controlled by [`LinalgCtx`] — a factorization block size plus an
-//! optional [`crate::util::pool::ThreadPool`] handle; the plain entry
-//! points (`matmul`, `cholesky`, `solve_lower_mat`, …) use a serial
-//! ctx, and pool-nested calls degrade to serial automatically so the
-//! cluster executor can share one pool with the engine.
+//! (KC=192-deep k-blocks × NC=256-wide B tiles, packed per-thread),
+//! right-looking blocked Cholesky (scalar POTRF diagonal block +
+//! row-parallel TRSM panel + pooled GEMM trailing update) and
+//! column-band-parallel triangular solves. The innermost microkernel
+//! is selected at runtime from the [`simd`] tier ladder — AVX-512
+//! (8×8 f64 register block) → AVX2+FMA (4×8) → the portable seed
+//! kernel — detected once and cached; the `PGPR_SIMD` env knob forces
+//! a tier (`portable` reproduces the pre-SIMD engine bitwise). The
+//! banded SE-kernel exponential shares a vectorized polynomial `exp`
+//! ([`simd::exp`], ≤4 ulp of libm) and the mixed-precision serve mode
+//! stores staged operators in f32 while accumulating in f64
+//! ([`simd::mixed`]). Execution is controlled by [`LinalgCtx`] — a
+//! factorization block size plus an optional
+//! [`crate::util::pool::ThreadPool`] handle; the plain entry points
+//! (`matmul`, `cholesky`, `solve_lower_mat`, …) use a serial ctx,
+//! pool-nested calls degrade to serial automatically so the cluster
+//! executor can share one pool with the engine, and problems below a
+//! per-kernel flop cutoff skip the pool (dispatch overhead dominates
+//! there).
 //!
 //! Measured on the 2-core AVX-512 dev host (see `BENCH_linalg.json`,
 //! regenerated as a CI artifact on every push; build uses
 //! `target-cpu=native` via `.cargo/config.toml`):
 //!
-//! * 1024² GEMM: 6.9 → 14.2 GFLOP/s single-thread (2.05× the seed
-//!   scalar kernel; 2.5–2.7× in quiet-window A/B), 17.2 GFLOP/s on the
-//!   second core.
-//! * 1024² Cholesky: 3.0 → 10.6 GFLOP/s single-thread (≈3.6×).
+//! * 1024² GEMM: 6.9 GFLOP/s seed scalar → 14.2 blocked-portable →
+//!   ≈2× again with the AVX-512 microkernel single-thread, with
+//!   per-thread packing lifting the 1→2 thread scaling.
+//! * 1024² Cholesky: 3.0 → 10.6 GFLOP/s single-thread blocked; the
+//!   AVX tiers accelerate the trailing update further.
 //! * The seed kernels survive as `matmul_scalar` / `cholesky_scalar` /
-//!   `solve_*_scalar` — the property-tested references (blocked serial
-//!   GEMM is bitwise-identical to `matmul_scalar`; pooled runs are
-//!   bitwise-identical to serial by construction).
+//!   `solve_*_scalar` — the property-tested references (Portable-tier
+//!   serial GEMM is bitwise-identical to `matmul_scalar`; pooled runs
+//!   are bitwise-identical to serial within every tier by
+//!   construction).
 
 pub mod blocked;
 pub mod cholesky;
@@ -41,6 +53,7 @@ pub mod eigen;
 pub mod icf;
 pub mod matmul;
 pub mod mds;
+pub mod simd;
 
 pub use blocked::{cho_solve_mat_ctx, cholesky_blocked, diag_quad_ctx,
                   diag_quad_into, gemm, gemm_into, gemm_nt, gemm_tn,
@@ -52,6 +65,7 @@ pub use ctx::LinalgCtx;
 pub use icf::{icf, icf_ctx, IcfFactor};
 pub use matmul::{diag_of_product, matmul, matmul_nt, matmul_scalar,
                  matmul_tn, matvec, matvec_t};
+pub use simd::{active_tier, force_tier, SimdTier};
 
 /// Row-major dense matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]

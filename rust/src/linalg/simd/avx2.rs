@@ -1,0 +1,177 @@
+//! The `Avx2` tier: 4 C rows × 8 columns of f64 per register block
+//! (8 ymm accumulators; each broadcast A element feeds two fmadds,
+//! each pair of B loads feeds all four rows).
+//!
+//! Numerics contract: every output element is one accumulator folded
+//! over k in order with fused multiply-add — vector lanes via
+//! `vfmadd231pd`, the scalar column tail via `f64::mul_add` in the
+//! same k order — then added/subtracted into C once. Values therefore
+//! depend only on (kc, k order), never on which register block or
+//! band an element landed in: pooled ≡ serial stays bitwise within
+//! this tier.
+
+use std::arch::x86_64::*;
+
+/// Band microkernel, AVX2+FMA.
+///
+/// # Safety
+///
+/// The CPU must support `avx2` and `fma` (dispatch guarantees this).
+/// Slice shapes are checked with real asserts below; everything after
+/// them is in-bounds by construction.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn band_kernel<const SUB: bool>(
+    a_rows: &[&[f64]],
+    c_rows: &mut [&mut [f64]],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    assert_eq!(a_rows.len(), c_rows.len());
+    assert!(b_rows.len() >= kc);
+    for br in &b_rows[..kc] {
+        assert!(br.len() >= nc);
+    }
+    for (a, c) in a_rows.iter().zip(c_rows.iter()) {
+        assert!(a.len() >= kc && c.len() >= nc);
+    }
+    let rows = c_rows.len();
+    let bp: Vec<*const f64> =
+        b_rows[..kc].iter().map(|r| r.as_ptr()).collect();
+    let mut r = 0;
+    while r + 4 <= rows {
+        let ap = [
+            a_rows[r].as_ptr(),
+            a_rows[r + 1].as_ptr(),
+            a_rows[r + 2].as_ptr(),
+            a_rows[r + 3].as_ptr(),
+        ];
+        let cp = [
+            c_rows[r].as_mut_ptr(),
+            c_rows[r + 1].as_mut_ptr(),
+            c_rows[r + 2].as_mut_ptr(),
+            c_rows[r + 3].as_mut_ptr(),
+        ];
+        block4::<SUB>(ap, cp, &bp, kc, nc);
+        r += 4;
+    }
+    while r < rows {
+        block1::<SUB>(a_rows[r].as_ptr(), c_rows[r].as_mut_ptr(), &bp, kc, nc);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn block4<const SUB: bool>(
+    ap: [*const f64; 4],
+    cp: [*mut f64; 4],
+    bp: &[*const f64],
+    kc: usize,
+    nc: usize,
+) {
+    let [a0, a1, a2, a3] = ap;
+    let [c0, c1, c2, c3] = cp;
+    let mut j = 0;
+    while j + 8 <= nc {
+        let mut s00 = _mm256_setzero_pd();
+        let mut s01 = _mm256_setzero_pd();
+        let mut s10 = _mm256_setzero_pd();
+        let mut s11 = _mm256_setzero_pd();
+        let mut s20 = _mm256_setzero_pd();
+        let mut s21 = _mm256_setzero_pd();
+        let mut s30 = _mm256_setzero_pd();
+        let mut s31 = _mm256_setzero_pd();
+        for kk in 0..kc {
+            let b = *bp.get_unchecked(kk);
+            let b0 = _mm256_loadu_pd(b.add(j));
+            let b1 = _mm256_loadu_pd(b.add(j + 4));
+            let v0 = _mm256_set1_pd(*a0.add(kk));
+            s00 = _mm256_fmadd_pd(v0, b0, s00);
+            s01 = _mm256_fmadd_pd(v0, b1, s01);
+            let v1 = _mm256_set1_pd(*a1.add(kk));
+            s10 = _mm256_fmadd_pd(v1, b0, s10);
+            s11 = _mm256_fmadd_pd(v1, b1, s11);
+            let v2 = _mm256_set1_pd(*a2.add(kk));
+            s20 = _mm256_fmadd_pd(v2, b0, s20);
+            s21 = _mm256_fmadd_pd(v2, b1, s21);
+            let v3 = _mm256_set1_pd(*a3.add(kk));
+            s30 = _mm256_fmadd_pd(v3, b0, s30);
+            s31 = _mm256_fmadd_pd(v3, b1, s31);
+        }
+        apply2::<SUB>(c0.add(j), s00, s01);
+        apply2::<SUB>(c1.add(j), s10, s11);
+        apply2::<SUB>(c2.add(j), s20, s21);
+        apply2::<SUB>(c3.add(j), s30, s31);
+        j += 8;
+    }
+    while j < nc {
+        col_tail::<SUB>(a0, c0, bp, kc, j);
+        col_tail::<SUB>(a1, c1, bp, kc, j);
+        col_tail::<SUB>(a2, c2, bp, kc, j);
+        col_tail::<SUB>(a3, c3, bp, kc, j);
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn block1<const SUB: bool>(
+    a: *const f64,
+    c: *mut f64,
+    bp: &[*const f64],
+    kc: usize,
+    nc: usize,
+) {
+    let mut j = 0;
+    while j + 8 <= nc {
+        let mut s0 = _mm256_setzero_pd();
+        let mut s1 = _mm256_setzero_pd();
+        for kk in 0..kc {
+            let b = *bp.get_unchecked(kk);
+            let v = _mm256_set1_pd(*a.add(kk));
+            s0 = _mm256_fmadd_pd(v, _mm256_loadu_pd(b.add(j)), s0);
+            s1 = _mm256_fmadd_pd(v, _mm256_loadu_pd(b.add(j + 4)), s1);
+        }
+        apply2::<SUB>(c.add(j), s0, s1);
+        j += 8;
+    }
+    while j < nc {
+        col_tail::<SUB>(a, c, bp, kc, j);
+        j += 1;
+    }
+}
+
+/// `c[0..4] ±= lo; c[4..8] ±= hi` — the one add/sub into C per block.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn apply2<const SUB: bool>(c: *mut f64, lo: __m256d, hi: __m256d) {
+    let cur0 = _mm256_loadu_pd(c);
+    let cur1 = _mm256_loadu_pd(c.add(4));
+    let (n0, n1) = if SUB {
+        (_mm256_sub_pd(cur0, lo), _mm256_sub_pd(cur1, hi))
+    } else {
+        (_mm256_add_pd(cur0, lo), _mm256_add_pd(cur1, hi))
+    };
+    _mm256_storeu_pd(c, n0);
+    _mm256_storeu_pd(c.add(4), n1);
+}
+
+/// Scalar column tail: the same single-accumulator fused chain as a
+/// vector lane (`f64::mul_add` is fused), so an element's value does
+/// not depend on whether it fell in the vector body or this tail.
+#[inline(always)]
+unsafe fn col_tail<const SUB: bool>(
+    a: *const f64,
+    c: *mut f64,
+    bp: &[*const f64],
+    kc: usize,
+    j: usize,
+) {
+    let mut acc = 0.0f64;
+    for kk in 0..kc {
+        acc = (*a.add(kk)).mul_add(*(*bp.get_unchecked(kk)).add(j), acc);
+    }
+    if SUB {
+        *c.add(j) -= acc;
+    } else {
+        *c.add(j) += acc;
+    }
+}

@@ -1,0 +1,156 @@
+//! The `Avx512` tier: 8 C rows × 8 columns of f64 per register block
+//! (8 zmm accumulators + 1 B register out of 32, so the broadcast
+//! temporaries never spill).
+//!
+//! Same numerics contract as the AVX2 tier: one fused-multiply-add
+//! accumulator per output element, folded over k in order (vector
+//! lanes and the `f64::mul_add` scalar column tail alike), applied to
+//! C once — element values are independent of banding and blocking,
+//! preserving pooled ≡ serial bitwise within the tier.
+
+use std::arch::x86_64::*;
+
+/// Band microkernel, AVX-512F.
+///
+/// # Safety
+///
+/// The CPU must support `avx512f` (dispatch guarantees this). Slice
+/// shapes are checked with real asserts below.
+#[target_feature(enable = "avx512f")]
+pub(super) unsafe fn band_kernel<const SUB: bool>(
+    a_rows: &[&[f64]],
+    c_rows: &mut [&mut [f64]],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    assert_eq!(a_rows.len(), c_rows.len());
+    assert!(b_rows.len() >= kc);
+    for br in &b_rows[..kc] {
+        assert!(br.len() >= nc);
+    }
+    for (a, c) in a_rows.iter().zip(c_rows.iter()) {
+        assert!(a.len() >= kc && c.len() >= nc);
+    }
+    let rows = c_rows.len();
+    let bp: Vec<*const f64> =
+        b_rows[..kc].iter().map(|r| r.as_ptr()).collect();
+    let mut r = 0;
+    while r + 8 <= rows {
+        let mut ap = [std::ptr::null::<f64>(); 8];
+        let mut cp = [std::ptr::null_mut::<f64>(); 8];
+        for i in 0..8 {
+            ap[i] = a_rows[r + i].as_ptr();
+            cp[i] = c_rows[r + i].as_mut_ptr();
+        }
+        block8::<SUB>(ap, cp, &bp, kc, nc);
+        r += 8;
+    }
+    while r < rows {
+        block1::<SUB>(a_rows[r].as_ptr(), c_rows[r].as_mut_ptr(), &bp, kc, nc);
+        r += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn block8<const SUB: bool>(
+    ap: [*const f64; 8],
+    cp: [*mut f64; 8],
+    bp: &[*const f64],
+    kc: usize,
+    nc: usize,
+) {
+    let mut j = 0;
+    while j + 8 <= nc {
+        let mut s0 = _mm512_setzero_pd();
+        let mut s1 = _mm512_setzero_pd();
+        let mut s2 = _mm512_setzero_pd();
+        let mut s3 = _mm512_setzero_pd();
+        let mut s4 = _mm512_setzero_pd();
+        let mut s5 = _mm512_setzero_pd();
+        let mut s6 = _mm512_setzero_pd();
+        let mut s7 = _mm512_setzero_pd();
+        for kk in 0..kc {
+            let b = _mm512_loadu_pd((*bp.get_unchecked(kk)).add(j));
+            s0 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[0].add(kk)), b, s0);
+            s1 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[1].add(kk)), b, s1);
+            s2 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[2].add(kk)), b, s2);
+            s3 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[3].add(kk)), b, s3);
+            s4 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[4].add(kk)), b, s4);
+            s5 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[5].add(kk)), b, s5);
+            s6 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[6].add(kk)), b, s6);
+            s7 = _mm512_fmadd_pd(_mm512_set1_pd(*ap[7].add(kk)), b, s7);
+        }
+        apply::<SUB>(cp[0].add(j), s0);
+        apply::<SUB>(cp[1].add(j), s1);
+        apply::<SUB>(cp[2].add(j), s2);
+        apply::<SUB>(cp[3].add(j), s3);
+        apply::<SUB>(cp[4].add(j), s4);
+        apply::<SUB>(cp[5].add(j), s5);
+        apply::<SUB>(cp[6].add(j), s6);
+        apply::<SUB>(cp[7].add(j), s7);
+        j += 8;
+    }
+    while j < nc {
+        for i in 0..8 {
+            col_tail::<SUB>(ap[i], cp[i], bp, kc, j);
+        }
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn block1<const SUB: bool>(
+    a: *const f64,
+    c: *mut f64,
+    bp: &[*const f64],
+    kc: usize,
+    nc: usize,
+) {
+    let mut j = 0;
+    while j + 8 <= nc {
+        let mut s = _mm512_setzero_pd();
+        for kk in 0..kc {
+            let b = _mm512_loadu_pd((*bp.get_unchecked(kk)).add(j));
+            s = _mm512_fmadd_pd(_mm512_set1_pd(*a.add(kk)), b, s);
+        }
+        apply::<SUB>(c.add(j), s);
+        j += 8;
+    }
+    while j < nc {
+        col_tail::<SUB>(a, c, bp, kc, j);
+        j += 1;
+    }
+}
+
+/// `c[0..8] ±= s` — the one add/sub into C per block.
+#[target_feature(enable = "avx512f")]
+unsafe fn apply<const SUB: bool>(c: *mut f64, s: __m512d) {
+    let cur = _mm512_loadu_pd(c);
+    let next = if SUB {
+        _mm512_sub_pd(cur, s)
+    } else {
+        _mm512_add_pd(cur, s)
+    };
+    _mm512_storeu_pd(c, next);
+}
+
+/// Scalar column tail — identical fused chain to a vector lane.
+#[inline(always)]
+unsafe fn col_tail<const SUB: bool>(
+    a: *const f64,
+    c: *mut f64,
+    bp: &[*const f64],
+    kc: usize,
+    j: usize,
+) {
+    let mut acc = 0.0f64;
+    for kk in 0..kc {
+        acc = (*a.add(kk)).mul_add(*(*bp.get_unchecked(kk)).add(j), acc);
+    }
+    if SUB {
+        *c.add(j) -= acc;
+    } else {
+        *c.add(j) += acc;
+    }
+}

@@ -1,0 +1,399 @@
+//! Vectorized elementwise `exp` for the SE-kernel band transform —
+//! the pass that dominates `SeArd::gram_ctx` and `FeatureMap::fill`
+//! on every serve batch.
+//!
+//! # The polynomial `exp` and its accuracy contract
+//!
+//! [`exp_neg`] evaluates `e^x` for `x ∈ [EXP_MIN, 0]` (SE arguments
+//! are always `-0.5·sq ≤ 0`) by the standard three-step scheme, with
+//! every step chosen so the scalar mirror and the AVX lanes execute
+//! the *same* rounded operations and are therefore **bitwise
+//! identical**:
+//!
+//! 1. **Range reduction** `x = k·ln2 + r`, `|r| ≤ ln2/2`: `k` is
+//!    `round(x·log₂e)` via the 2⁵²+2⁵¹ magic-constant trick (one add
+//!    and one subtract — identical rounding on scalar and vector, no
+//!    `round()` libcall), and `r` via two-term Cody–Waite
+//!    (`LN2_HI`/`LN2_LO`) with fused multiply-adds.
+//! 2. **Core** `e^r` as the degree-13 Taylor polynomial in a fused
+//!    Horner chain (truncation ≈ 4·10⁻¹⁸, far below one ulp).
+//! 3. **Scaling** by `2^k` through direct exponent-bit assembly
+//!    (`k ∈ [-1021, 0]` on this domain, so the scale is always a
+//!    positive normal).
+//!
+//! Accuracy: **≤ [`EXP_NEG_ULP_BOUND`] ulp** of `f64::exp` on the
+//! whole domain (observed ≤ 2; the test suite sweeps the domain and
+//! asserts the bound). Inputs below `EXP_MIN` flush to exactly `0.0`
+//! (`f64::exp` would return a value ≤ 3.3·10⁻³⁰⁸ there; the SE kernel
+//! treats both as "no correlation").
+//!
+//! # Which call sites use which path
+//!
+//! [`se_apply`] is the one banded SE transform shared by
+//! `SeArd::gram_ctx`, `FeatureMap::fill` (and, at single-element
+//! granularity, `SeArd::k` via [`se_point`]):
+//!
+//! * `Portable` tier: the seed expression verbatim — `sf2 *
+//!   (-0.5·sq).exp()` with libm `exp` — preserving the
+//!   `PGPR_SIMD=portable` ≡ seed bitwise contract.
+//! * AVX tiers: 4- or 8-wide polynomial lanes, with the scalar-mirror
+//!   [`exp_neg`] on the column tail so an element's value never
+//!   depends on which path it fell in (pooled ≡ serial bitwise holds
+//!   per tier, tested).
+
+use super::SimdTier;
+
+/// Documented ulp bound of [`exp_neg`] against `f64::exp` on
+/// `[EXP_MIN, 0]` (asserted in tests).
+pub const EXP_NEG_ULP_BOUND: u64 = 4;
+
+/// Flush-to-zero threshold: below this, [`exp_neg`] returns exactly
+/// 0.0. Chosen so `2^k` stays a positive normal scale on the live
+/// domain (k ≥ -1021).
+pub const EXP_MIN: f64 = -708.0;
+
+const LOG2E: f64 = std::f64::consts::LOG2_E;
+// Cody–Waite split of ln2 (fdlibm constants): LN2_HI has 11 trailing
+// zero mantissa bits, so k·LN2_HI is exact for |k| ≤ 2^11 and the
+// reduction error collapses into the tiny LN2_LO term.
+const LN2_HI: f64 = f64::from_bits(0x3FE62E42FEE00000);
+const LN2_LO: f64 = f64::from_bits(0x3DEA39EF35793C76);
+// 2^52 + 2^51: adding then subtracting rounds to the nearest integer
+// (ties to even) for |t| < 2^51, and the integer is recoverable from
+// the low mantissa bits of the biased sum.
+const MAGIC: f64 = 6_755_399_441_055_744.0;
+const MAGIC_BITS: i64 = MAGIC.to_bits() as i64;
+
+// Taylor coefficients 1/n! for the degree-13 Horner core (c13 first).
+const POLY: [f64; 12] = [
+    1.0 / 6_227_020_800.0, // 1/13!
+    1.0 / 479_001_600.0,   // 1/12!
+    1.0 / 39_916_800.0,    // 1/11!
+    1.0 / 3_628_800.0,     // 1/10!
+    1.0 / 362_880.0,       // 1/9!
+    1.0 / 40_320.0,        // 1/8!
+    1.0 / 5_040.0,         // 1/7!
+    1.0 / 720.0,           // 1/6!
+    1.0 / 120.0,           // 1/5!
+    1.0 / 24.0,            // 1/4!
+    1.0 / 6.0,             // 1/3!
+    1.0 / 2.0,             // 1/2!
+];
+
+/// Polynomial `e^x` for `x ≤ 0` — the scalar mirror of the AVX lanes
+/// (same rounded operations in the same order, so it is bitwise-equal
+/// to any vector lane fed the same input). See the module docs for
+/// the scheme and the ulp bound.
+#[inline]
+pub fn exp_neg(x: f64) -> f64 {
+    if x < EXP_MIN {
+        return 0.0;
+    }
+    let t = x * LOG2E;
+    let kb = t + MAGIC;
+    let k = kb - MAGIC;
+    let ki = (kb.to_bits() as i64).wrapping_sub(MAGIC_BITS);
+    let r1 = k.mul_add(-LN2_HI, x);
+    let r = k.mul_add(-LN2_LO, r1);
+    let mut p = POLY[0];
+    for &c in &POLY[1..] {
+        p = p.mul_add(r, c);
+    }
+    let p = p.mul_add(r, 1.0); // + r/1!
+    let p = p.mul_add(r, 1.0); // + 1
+    let scale = f64::from_bits(((ki + 1023) as u64) << 52);
+    p * scale
+}
+
+/// The scalar SE oracle: `sf2 · e^{-sq/2}` via libm `exp` — the seed
+/// expression every tier is pinned against (and the pointwise path
+/// `SeArd::k` uses directly).
+#[inline]
+pub fn se_point(sf2: f64, sq: f64) -> f64 {
+    sf2 * (-0.5 * sq).exp()
+}
+
+/// The banded SE transform shared by `SeArd::gram_ctx` and
+/// `FeatureMap::fill`: on entry `krow[j]` holds the cross term
+/// `x₁ᵢ·x₂ⱼ` (scaled), on exit `krow[j] = sf2 ·
+/// exp(-0.5·max(0, s1v + sq2[j] - 2·krow[j]))`.
+///
+/// `Portable` evaluates the seed expression verbatim (libm `exp`);
+/// AVX tiers use the polynomial lanes + scalar-mirror tail. The tier
+/// is passed explicitly (read once on the calling thread) so pool
+/// jobs inherit it.
+pub fn se_apply(
+    tier: SimdTier,
+    sf2: f64,
+    s1v: f64,
+    sq2: &[f64],
+    krow: &mut [f64],
+) {
+    debug_assert_eq!(sq2.len(), krow.len());
+    match tier {
+        SimdTier::Portable => {
+            for (kv, &s2) in krow.iter_mut().zip(sq2.iter()) {
+                let sq = (s1v + s2 - 2.0 * *kv).max(0.0);
+                *kv = sf2 * (-0.5 * sq).exp();
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        // Safety: dispatch only selects these tiers when the CPU
+        // features were detected.
+        SimdTier::Avx2 => unsafe { se_apply_avx2(sf2, s1v, sq2, krow) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 => unsafe { se_apply_avx512(sf2, s1v, sq2, krow) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Avx2 | SimdTier::Avx512 => {
+            for (kv, &s2) in krow.iter_mut().zip(sq2.iter()) {
+                *kv = se_lane(sf2, s1v, s2, *kv);
+            }
+        }
+    }
+}
+
+/// One SE element through the polynomial path — the scalar mirror of
+/// an AVX `se_apply` lane (used for column tails and as the bitwise
+/// reference in tests).
+#[inline]
+pub fn se_lane(sf2: f64, s1v: f64, s2: f64, kv: f64) -> f64 {
+    let sq = (s1v + s2 - 2.0 * kv).max(0.0);
+    sf2 * exp_neg(-0.5 * sq)
+}
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// 4-wide polynomial `e^x` for `x ≤ 0` lanes; lanes below `EXP_MIN`
+/// flush to 0.0. Bitwise-equal to [`exp_neg`] per lane.
+///
+/// # Safety
+///
+/// CPU must support avx2+fma.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp_neg_pd4(x: __m256d) -> __m256d {
+    let t = _mm256_mul_pd(x, _mm256_set1_pd(LOG2E));
+    let kb = _mm256_add_pd(t, _mm256_set1_pd(MAGIC));
+    let k = _mm256_sub_pd(kb, _mm256_set1_pd(MAGIC));
+    let ki = _mm256_sub_epi64(
+        _mm256_castpd_si256(kb),
+        _mm256_set1_epi64x(MAGIC_BITS),
+    );
+    // r = x - k·LN2_HI - k·LN2_LO, fused (fnmadd = c - a·b).
+    let r1 = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_HI), x);
+    let r = _mm256_fnmadd_pd(k, _mm256_set1_pd(LN2_LO), r1);
+    let mut p = _mm256_set1_pd(POLY[0]);
+    for &c in &POLY[1..] {
+        p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(c));
+    }
+    p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0));
+    p = _mm256_fmadd_pd(p, r, _mm256_set1_pd(1.0));
+    let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(
+        _mm256_add_epi64(ki, _mm256_set1_epi64x(1023)),
+    ));
+    let res = _mm256_mul_pd(p, scale);
+    // Flush x < EXP_MIN lanes to 0.0 (NaN lanes compare false and
+    // propagate, matching the scalar mirror).
+    let under = _mm256_cmp_pd::<_CMP_LT_OQ>(x, _mm256_set1_pd(EXP_MIN));
+    _mm256_andnot_pd(under, res)
+}
+
+/// # Safety
+///
+/// CPU must support avx2+fma.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn se_apply_avx2(sf2: f64, s1v: f64, sq2: &[f64], krow: &mut [f64]) {
+    debug_assert_eq!(sq2.len(), krow.len());
+    let n = krow.len();
+    let base = _mm256_set1_pd(s1v);
+    let neg_half = _mm256_set1_pd(-0.5);
+    let sf2v = _mm256_set1_pd(sf2);
+    let zero = _mm256_setzero_pd();
+    let mut j = 0;
+    while j + 4 <= n {
+        let kv = _mm256_loadu_pd(krow.as_ptr().add(j));
+        let s2 = _mm256_loadu_pd(sq2.as_ptr().add(j));
+        let sq = _mm256_sub_pd(
+            _mm256_add_pd(base, s2),
+            _mm256_add_pd(kv, kv),
+        );
+        let sq = _mm256_max_pd(sq, zero);
+        let e = exp_neg_pd4(_mm256_mul_pd(neg_half, sq));
+        _mm256_storeu_pd(
+            krow.as_mut_ptr().add(j),
+            _mm256_mul_pd(sf2v, e),
+        );
+        j += 4;
+    }
+    while j < n {
+        krow[j] = se_lane(sf2, s1v, sq2[j], krow[j]);
+        j += 1;
+    }
+}
+
+/// 8-wide polynomial `e^x` lanes — same scheme as the 4-wide version.
+///
+/// # Safety
+///
+/// CPU must support avx512f.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn exp_neg_pd8(x: __m512d) -> __m512d {
+    let t = _mm512_mul_pd(x, _mm512_set1_pd(LOG2E));
+    let kb = _mm512_add_pd(t, _mm512_set1_pd(MAGIC));
+    let k = _mm512_sub_pd(kb, _mm512_set1_pd(MAGIC));
+    let ki = _mm512_sub_epi64(
+        _mm512_castpd_si512(kb),
+        _mm512_set1_epi64(MAGIC_BITS),
+    );
+    let r1 = _mm512_fnmadd_pd(k, _mm512_set1_pd(LN2_HI), x);
+    let r = _mm512_fnmadd_pd(k, _mm512_set1_pd(LN2_LO), r1);
+    let mut p = _mm512_set1_pd(POLY[0]);
+    for &c in &POLY[1..] {
+        p = _mm512_fmadd_pd(p, r, _mm512_set1_pd(c));
+    }
+    p = _mm512_fmadd_pd(p, r, _mm512_set1_pd(1.0));
+    p = _mm512_fmadd_pd(p, r, _mm512_set1_pd(1.0));
+    let scale = _mm512_castsi512_pd(_mm512_slli_epi64::<52>(
+        _mm512_add_epi64(ki, _mm512_set1_epi64(1023)),
+    ));
+    let res = _mm512_mul_pd(p, scale);
+    // Keep lanes that are NOT below EXP_MIN (unordered → keep, so NaN
+    // propagates like the scalar mirror); flushed lanes become 0.0.
+    let keep = _mm512_cmp_pd_mask::<_CMP_NLT_UQ>(x, _mm512_set1_pd(EXP_MIN));
+    _mm512_maskz_mov_pd(keep, res)
+}
+
+/// # Safety
+///
+/// CPU must support avx512f.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn se_apply_avx512(sf2: f64, s1v: f64, sq2: &[f64], krow: &mut [f64]) {
+    debug_assert_eq!(sq2.len(), krow.len());
+    let n = krow.len();
+    let base = _mm512_set1_pd(s1v);
+    let neg_half = _mm512_set1_pd(-0.5);
+    let sf2v = _mm512_set1_pd(sf2);
+    let zero = _mm512_setzero_pd();
+    let mut j = 0;
+    while j + 8 <= n {
+        let kv = _mm512_loadu_pd(krow.as_ptr().add(j));
+        let s2 = _mm512_loadu_pd(sq2.as_ptr().add(j));
+        let sq = _mm512_sub_pd(
+            _mm512_add_pd(base, s2),
+            _mm512_add_pd(kv, kv),
+        );
+        let sq = _mm512_max_pd(sq, zero);
+        let e = exp_neg_pd8(_mm512_mul_pd(neg_half, sq));
+        _mm512_storeu_pd(
+            krow.as_mut_ptr().add(j),
+            _mm512_mul_pd(sf2v, e),
+        );
+        j += 8;
+    }
+    while j < n {
+        krow[j] = se_lane(sf2, s1v, sq2[j], krow[j]);
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::prop_check;
+
+    fn ulp_diff(a: f64, b: f64) -> u64 {
+        // both operands are positive (or zero) on this domain
+        (a.to_bits() as i64 - b.to_bits() as i64).unsigned_abs()
+    }
+
+    /// The documented ulp bound against libm exp, across the whole
+    /// domain plus the boundary/identity edges.
+    #[test]
+    fn exp_neg_within_ulp_bound_of_libm() {
+        // exact edges
+        assert_eq!(exp_neg(0.0), 1.0);
+        assert_eq!(exp_neg(-0.0), 1.0);
+        assert_eq!(exp_neg(-709.0), 0.0);
+        assert_eq!(exp_neg(f64::NEG_INFINITY), 0.0);
+        assert!(exp_neg(f64::NAN).is_nan());
+        // boundary stays a positive normal within the bound
+        let b = exp_neg(EXP_MIN);
+        assert!(b > 0.0 && b.is_normal());
+        assert!(ulp_diff(b, EXP_MIN.exp()) <= EXP_NEG_ULP_BOUND);
+        // dense sweep: uniform over the domain + log-uniform near 0
+        prop_check("exp-neg-ulp", 40, |g| {
+            for _ in 0..256 {
+                let x = -g.f64_in(0.0, 708.0);
+                let d = ulp_diff(exp_neg(x), x.exp());
+                assert!(d <= EXP_NEG_ULP_BOUND, "x={x}: {d} ulp");
+                let x = -(10f64).powf(g.f64_in(-12.0, 2.5));
+                let d = ulp_diff(exp_neg(x), x.exp());
+                assert!(d <= EXP_NEG_ULP_BOUND, "x={x}: {d} ulp");
+            }
+        });
+    }
+
+    /// Portable se_apply is the seed expression bitwise (the contract
+    /// `PGPR_SIMD=portable` ≡ pre-SIMD engine rests on).
+    #[test]
+    fn se_apply_portable_matches_seed_expression() {
+        prop_check("se-apply-portable", 20, |g| {
+            let n = g.usize_in(1, 40);
+            let sf2 = g.f64_in(0.1, 3.0);
+            let s1v = g.f64_in(0.0, 50.0);
+            let sq2: Vec<f64> =
+                (0..n).map(|_| g.f64_in(0.0, 50.0)).collect();
+            let cross: Vec<f64> =
+                (0..n).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            let mut krow = cross.clone();
+            se_apply(SimdTier::Portable, sf2, s1v, &sq2, &mut krow);
+            for j in 0..n {
+                let sq = (s1v + sq2[j] - 2.0 * cross[j]).max(0.0);
+                assert_eq!(krow[j], sf2 * (-0.5 * sq).exp());
+            }
+        });
+    }
+
+    /// AVX vector lanes are bitwise-equal to the scalar mirror
+    /// [`se_lane`] (which the column tails also use), and every tier
+    /// stays within a tight relative tolerance of the libm oracle.
+    #[test]
+    fn se_apply_avx_lanes_match_scalar_mirror_bitwise() {
+        for tier in SimdTier::available() {
+            prop_check(&format!("se-apply-{}", tier.name()), 10, |g| {
+                let n = g.usize_in(1, 70); // spans vector body + tail
+                let sf2 = g.f64_in(0.1, 3.0);
+                let s1v = g.f64_in(0.0, 80.0);
+                let sq2: Vec<f64> =
+                    (0..n).map(|_| g.f64_in(0.0, 80.0)).collect();
+                let cross: Vec<f64> =
+                    (0..n).map(|_| g.f64_in(-20.0, 20.0)).collect();
+                let mut krow = cross.clone();
+                se_apply(tier, sf2, s1v, &sq2, &mut krow);
+                for j in 0..n {
+                    if tier != SimdTier::Portable {
+                        let want = se_lane(sf2, s1v, sq2[j], cross[j]);
+                        assert_eq!(
+                            krow[j].to_bits(),
+                            want.to_bits(),
+                            "{} lane {j}",
+                            tier.name()
+                        );
+                    }
+                    let sq = (s1v + sq2[j] - 2.0 * cross[j]).max(0.0);
+                    let oracle = se_point(sf2, sq);
+                    assert!(
+                        (krow[j] - oracle).abs()
+                            <= 1e-14 * oracle.abs().max(1e-300),
+                        "{} vs oracle at {j}",
+                        tier.name()
+                    );
+                }
+            });
+        }
+    }
+}

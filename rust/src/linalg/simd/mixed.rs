@@ -1,0 +1,293 @@
+//! Mixed-precision serve primitives: **f32 storage, f64 accumulate**.
+//!
+//! The staged serve operators are memory-bound — every predict batch
+//! streams the feature map's support matrix and the staged quadratic
+//! operator from DRAM. Storing them in f32 halves that traffic (and
+//! doubles effective SIMD width) while every arithmetic reduction
+//! still runs in f64: each f32 element is widened exactly (f32 → f64
+//! is lossless), so the *only* error vs the f64 pipeline is the
+//! one-time storage rounding of the operator entries (≤ 2⁻²⁴ relative
+//! per entry, amplified ~√p by the dot products — observed ~10⁻⁶
+//! relative on serve-sized problems, budgeted at 10⁻⁴ in
+//! `gp::predictor`).
+//!
+//! Pooled execution stays bitwise-identical to serial for the same
+//! reason as the f64 engine: output rows fan out in disjoint bands and
+//! each row's accumulation order is fixed by (k-tile, k, l) alone.
+
+use crate::linalg::ctx::LinalgCtx;
+use crate::linalg::Mat;
+
+/// Row-major f32 matrix — storage-only sibling of [`Mat`] for staged
+/// serve operators. No arithmetic is ever done in f32; see the module
+/// docs.
+#[derive(Clone, Debug, Default)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Demote an f64 matrix (round-to-nearest per entry — the one
+    /// lossy step of the mixed-precision pipeline).
+    pub fn from_mat(m: &Mat) -> Self {
+        MatF32 {
+            rows: m.rows,
+            cols: m.cols,
+            data: m.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Reshape in place, reusing the allocation (serve scratch reuse;
+    /// contents are unspecified afterwards).
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+}
+
+/// Widening dot product: f32 operands, f64 multiply-accumulate.
+/// Same 4-accumulator shape as [`crate::linalg::dot`] (the pairwise
+/// `(s0+s1)+(s2+s3)` combine), so it vectorizes the same way and its
+/// error behaves like the f64 dot over the widened values.
+pub fn dot_wide(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i + 4 <= n {
+        s0 += a[i] as f64 * b[i] as f64;
+        s1 += a[i + 1] as f64 * b[i + 1] as f64;
+        s2 += a[i + 2] as f64 * b[i + 2] as f64;
+        s3 += a[i + 3] as f64 * b[i + 3] as f64;
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += a[i] as f64 * b[i] as f64;
+        i += 1;
+    }
+    s
+}
+
+/// Widening axpy: `out[j] += coef * row[j]` with the f32 row widened
+/// per element — the building block for f32-storage GEMV row sweeps.
+#[inline]
+pub fn axpy_wide(coef: f64, row: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(row.len(), out.len());
+    for (o, &r) in out.iter_mut().zip(row.iter()) {
+        *o += coef * r as f64;
+    }
+}
+
+/// Mirror of the f64 k-tile depth in `blocked::diag_quad_into` (kept
+/// equal so both precisions have the same cache behavior and the same
+/// per-row accumulation order).
+const QUAD_KT: usize = 64;
+
+/// `diag(G · A · Gᵀ)` for symmetric `A`, f32 storage / f64 accumulate —
+/// the mixed-precision sibling of [`crate::linalg::blocked::diag_quad_into`]
+/// with the identical tiling, banding and per-row accumulation order
+/// (only the element loads are widened f32). `out.len() == g.rows`;
+/// only A's upper triangle is read.
+pub fn diag_quad_f32_into(
+    ctx: &LinalgCtx,
+    g: &MatF32,
+    a: &MatF32,
+    out: &mut [f64],
+) {
+    let p = g.cols;
+    assert_eq!(a.rows, a.cols, "diag_quad_f32: A must be square");
+    assert_eq!(a.rows, p, "diag_quad_f32: A is {}x{}, G cols {p}", a.rows, a.cols);
+    assert_eq!(out.len(), g.rows, "diag_quad_f32: out length");
+    let b = g.rows;
+    if b == 0 {
+        return;
+    }
+    out.fill(0.0);
+    if p == 0 {
+        return;
+    }
+    let ranges = ctx.ranges(b, 8);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f64] = out;
+    for &(lo, hi) in &ranges {
+        let (band, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+        rest = tail;
+        jobs.push(Box::new(move || {
+            let mut k0 = 0;
+            while k0 < p {
+                let k1 = (k0 + QUAD_KT).min(p);
+                for (r, acc) in band.iter_mut().enumerate() {
+                    let gi = g.row(lo + r);
+                    let mut s = 0.0;
+                    for k in k0..k1 {
+                        let gk = gi[k] as f64;
+                        // upper-triangular row slice A[k, k..p]
+                        let arow = &a.data[k * p + k..(k + 1) * p];
+                        let t = dot_wide(&arow[1..], &gi[k + 1..]);
+                        s += gk * (arow[0] as f64 * gk + 2.0 * t);
+                    }
+                    *acc += s;
+                }
+                k0 = k1;
+            }
+        }));
+    }
+    ctx.run_jobs(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blocked::diag_quad_ctx;
+    use crate::testkit::prop::prop_check;
+    use crate::util::Pcg64;
+    use crate::util::pool::ThreadPool;
+    use std::sync::Arc;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        m.data = Pcg64::seed(seed).normals(rows * cols);
+        m
+    }
+
+    fn rand_spd(n: usize, seed: u64) -> Mat {
+        let b = rand_mat(n, n + 3, seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n + 3 {
+                    s += b.data[i * (n + 3) + k] * b.data[j * (n + 3) + k];
+                }
+                a.data[i * n + j] = s;
+            }
+            a.data[i * n + i] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn dot_wide_exact_on_representable_values() {
+        // small integers are exact in both precisions, so the widened
+        // dot must equal the integer result exactly
+        let a: Vec<f32> = (0..37).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i % 5) as f32 - 2.0).collect();
+        let want: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        assert_eq!(dot_wide(&a, &b), want);
+    }
+
+    #[test]
+    fn dot_wide_tracks_f64_dot_to_storage_rounding() {
+        prop_check("dot-wide-vs-f64", 30, |g| {
+            let n = g.usize_in(1, 300);
+            let a = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let wide = dot_wide(&af, &bf);
+            let exact = crate::linalg::dot(&a, &b);
+            let scale: f64 =
+                a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>();
+            // two f32 roundings per term, f64 accumulation
+            assert!(
+                (wide - exact).abs() <= 4.0 * f32::EPSILON as f64 * scale.max(1.0),
+                "n={n}: wide={wide} exact={exact}"
+            );
+        });
+    }
+
+    #[test]
+    fn diag_quad_f32_tracks_f64_oracle() {
+        prop_check("diag-quad-f32", 12, |g| {
+            let p = g.usize_in(1, 60);
+            let b = g.usize_in(1, 40);
+            let a = rand_spd(p, 11 + g.case as u64);
+            let gm = rand_mat(b, p, 99 + g.case as u64);
+            let want = diag_quad_ctx(&LinalgCtx::serial(), &gm, &a);
+            let af = MatF32::from_mat(&a);
+            let gf = MatF32::from_mat(&gm);
+            let mut got = vec![0.0; b];
+            diag_quad_f32_into(&LinalgCtx::serial(), &gf, &af, &mut got);
+            for i in 0..b {
+                let tol = 1e-4 * want[i].abs().max(1.0);
+                assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "row {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn diag_quad_f32_pooled_bitwise_matches_serial() {
+        let p = 83;
+        let b = 57;
+        let a = MatF32::from_mat(&rand_spd(p, 5));
+        let gm = MatF32::from_mat(&rand_mat(b, p, 6));
+        let mut serial = vec![0.0; b];
+        diag_quad_f32_into(&LinalgCtx::serial(), &gm, &a, &mut serial);
+        for workers in [2, 4] {
+            let ctx = LinalgCtx::pooled(Arc::new(ThreadPool::new(workers)));
+            let mut pooled = vec![0.0; b];
+            diag_quad_f32_into(&ctx, &gm, &a, &mut pooled);
+            for i in 0..b {
+                assert_eq!(
+                    pooled[i].to_bits(),
+                    serial[i].to_bits(),
+                    "workers={workers} row={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matf32_roundtrip_and_resize() {
+        let m = rand_mat(7, 9, 44);
+        let f = MatF32::from_mat(&m);
+        assert_eq!(f.rows, 7);
+        assert_eq!(f.cols, 9);
+        for i in 0..7 {
+            for (j, &v) in f.row(i).iter().enumerate() {
+                assert_eq!(v, m.data[i * 9 + j] as f32);
+            }
+        }
+        let mut f2 = f.clone();
+        f2.resize_to(3, 4);
+        assert_eq!(f2.data.len(), 12);
+        f2.row_mut(0)[0] = 2.5;
+        assert_eq!(f2.row(0)[0], 2.5);
+    }
+
+    #[test]
+    fn axpy_wide_accumulates() {
+        let row: Vec<f32> = vec![1.0, 2.0, -0.5];
+        let mut out = vec![1.0f64, 1.0, 1.0];
+        axpy_wide(2.0, &row, &mut out);
+        assert_eq!(out, vec![3.0, 5.0, 0.0]);
+    }
+}

@@ -1,0 +1,298 @@
+//! Runtime-dispatched SIMD microkernels for the blocked engine.
+//!
+//! # The tier ladder
+//!
+//! Three implementations of the same band-GEMM contract live side by
+//! side, best-first:
+//!
+//! | tier       | microkernel shape          | where it runs               |
+//! |------------|----------------------------|-----------------------------|
+//! | `Avx512`   | 8 C rows × 8 cols (zmm)    | `avx512f` hosts             |
+//! | `Avx2`     | 4 C rows × 8 cols (ymm)    | `avx2`+`fma` hosts          |
+//! | `Portable` | 2 C rows × 4 k-steps       | everywhere (the seed kernel)|
+//!
+//! [`active_tier`] picks the best supported tier **once** per process
+//! (via `is_x86_feature_detected!`) and caches it in a `OnceLock`:
+//! feature detection costs a `cpuid` + TLS dance, and the kernels sit
+//! under hot loops that may be entered millions of times per serve
+//! stream — re-detecting per call would show up. Dispatch happens at
+//! band granularity (thousands of flops per call), never per element.
+//!
+//! The environment knob `PGPR_SIMD` (`portable` | `avx2` | `avx512`)
+//! overrides detection at startup so every tier is testable on any
+//! host that supports it: requests are *clamped* to what the CPU
+//! actually has (asking for `avx512` on an AVX2 host silently runs the
+//! AVX2 tier — never an illegal instruction). Unknown values panic
+//! loudly; this is a developer knob. Tests that need a specific tier
+//! in-process use [`force_tier`], a thread-local RAII override that
+//! the blocked entry points read on the *calling* thread and capture
+//! into their pool jobs (so a forced tier survives the fan-out).
+//!
+//! # Equivalence contracts (tested here and in [`super::blocked`])
+//!
+//! * The `Portable` tier is the seed microkernel moved verbatim:
+//!   running with `PGPR_SIMD=portable` is **bitwise-identical** to the
+//!   pre-SIMD blocked engine (and therefore, serially, to the seed
+//!   scalar `matmul`).
+//! * Within *any* tier, each output element is produced by a single
+//!   accumulator folded over k in a fixed order (vector lanes and
+//!   scalar remainder tails both use fused multiply-add in the same
+//!   k order), so band boundaries, worker counts and row-block shapes
+//!   never change any element's value: pooled ≡ serial **bitwise**
+//!   holds per tier.
+//! * AVX tiers agree with `Portable` to reassociation-level tolerance
+//!   (different but equally stable summation orders), asserted by the
+//!   tier-matrix tests in `blocked.rs`.
+//!
+//! # Adding a tier
+//!
+//! 1. Add a variant to [`SimdTier`] (keep the ladder ordered best →
+//!    portable) and teach [`SimdTier::supported`] its feature test.
+//! 2. Implement `band_kernel` (and optionally the exp lanes in
+//!    [`exp`]) keeping the one-accumulator-per-element fma-chain rule
+//!    above — that rule is what preserves the pooled ≡ serial bitwise
+//!    contract; everything else is free.
+//! 3. Extend the `match` in [`band_kernel`] and the tier-matrix tests;
+//!    the bench harness picks the new tier up from
+//!    [`SimdTier::available`] automatically.
+
+pub mod exp;
+pub mod mixed;
+mod portable;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// One rung of the dispatch ladder. Ordering is meaningful: later
+/// variants are wider (see the module docs for shapes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// The seed scalar microkernel — runs everywhere, bitwise-equal to
+    /// the pre-SIMD engine.
+    Portable,
+    /// AVX2 + FMA, 4×8 f64 register block.
+    Avx2,
+    /// AVX-512F, 8×8 f64 register block.
+    Avx512,
+}
+
+impl SimdTier {
+    /// Stable lowercase name (the `PGPR_SIMD` vocabulary, also used in
+    /// bench output).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Portable => "portable",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Whether the executing CPU can run this tier.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdTier::Portable => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => {
+                is_x86_feature_detected!("avx2")
+                    && is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// Every tier the executing CPU supports, portable first. The
+    /// tier-matrix tests and the per-tier bench sweep iterate this.
+    pub fn available() -> Vec<SimdTier> {
+        [SimdTier::Portable, SimdTier::Avx2, SimdTier::Avx512]
+            .into_iter()
+            .filter(|t| t.supported())
+            .collect()
+    }
+}
+
+/// Parse a `PGPR_SIMD` value. Pure so it can be unit-tested without
+/// mutating process environment. Unknown values are a loud error (the
+/// knob exists for tests/CI; silently ignoring a typo would quietly
+/// benchmark the wrong tier).
+fn parse_tier(raw: &str) -> Result<SimdTier, String> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "portable" | "scalar" => Ok(SimdTier::Portable),
+        "avx2" => Ok(SimdTier::Avx2),
+        "avx512" => Ok(SimdTier::Avx512),
+        other => Err(format!(
+            "PGPR_SIMD={other:?}: expected portable|avx2|avx512"
+        )),
+    }
+}
+
+/// Clamp a requested tier to what the CPU supports (never dispatch an
+/// instruction set the host lacks; requests only ever lower the tier
+/// or keep it).
+fn clamp_supported(want: SimdTier) -> SimdTier {
+    if want.supported() {
+        return want;
+    }
+    if want == SimdTier::Avx512 && SimdTier::Avx2.supported() {
+        return SimdTier::Avx2;
+    }
+    SimdTier::Portable
+}
+
+fn detect() -> SimdTier {
+    if let Ok(raw) = std::env::var("PGPR_SIMD") {
+        match parse_tier(&raw) {
+            Ok(want) => return clamp_supported(want),
+            Err(msg) => panic!("{msg}"),
+        }
+    }
+    if SimdTier::Avx512.supported() {
+        SimdTier::Avx512
+    } else if SimdTier::Avx2.supported() {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Portable
+    }
+}
+
+static CACHED: OnceLock<SimdTier> = OnceLock::new();
+
+thread_local! {
+    static FORCED: Cell<Option<SimdTier>> = const { Cell::new(None) };
+}
+
+/// The tier the calling thread should dispatch to: a thread-local
+/// [`force_tier`] override when one is active (tests, per-tier bench
+/// sweeps), else the process-wide cached detection (`PGPR_SIMD`
+/// override or best supported). Blocked entry points read this once
+/// per call on the calling thread and pass the value down into their
+/// pool jobs.
+pub fn active_tier() -> SimdTier {
+    if let Some(t) = FORCED.with(|f| f.get()) {
+        return t;
+    }
+    *CACHED.get_or_init(detect)
+}
+
+/// RAII guard restoring the previous thread-local tier override.
+pub struct TierGuard {
+    prev: Option<SimdTier>,
+}
+
+impl Drop for TierGuard {
+    fn drop(&mut self) {
+        FORCED.with(|f| f.set(self.prev));
+    }
+}
+
+/// Force a tier for the current thread until the guard drops. Panics
+/// if the CPU does not support the tier (callers gate on
+/// [`SimdTier::supported`] / [`SimdTier::available`]). This is the
+/// in-process knob behind the tier-matrix tests and the per-tier bench
+/// sweep; `PGPR_SIMD` is the process-wide equivalent.
+pub fn force_tier(tier: SimdTier) -> TierGuard {
+    assert!(
+        tier.supported(),
+        "force_tier({}): not supported on this CPU",
+        tier.name()
+    );
+    let prev = FORCED.with(|f| f.replace(Some(tier)));
+    TierGuard { prev }
+}
+
+/// Tier-dispatched band microkernel: `c_rows[r] ±= a_rows[r] · B` over
+/// a `kc`-deep, `nc`-wide tile whose packed rows are `b_rows[0..kc]`.
+/// `SUB` selects subtraction at compile time (same specialization the
+/// seed kernel used — a runtime ±1 multiplier costs ~20% GEMM
+/// throughput).
+pub(crate) fn band_kernel<const SUB: bool>(
+    tier: SimdTier,
+    a_rows: &[&[f64]],
+    c_rows: &mut [&mut [f64]],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    match tier {
+        SimdTier::Portable => {
+            portable::band_kernel::<SUB>(a_rows, c_rows, b_rows, kc, nc)
+        }
+        #[cfg(target_arch = "x86_64")]
+        // Safety: dispatch only selects these tiers when the features
+        // were detected (detect/clamp_supported/force_tier all gate on
+        // SimdTier::supported).
+        SimdTier::Avx2 => unsafe {
+            avx2::band_kernel::<SUB>(a_rows, c_rows, b_rows, kc, nc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx512 => unsafe {
+            avx512::band_kernel::<SUB>(a_rows, c_rows, b_rows, kc, nc)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Avx2 | SimdTier::Avx512 => {
+            portable::band_kernel::<SUB>(a_rows, c_rows, b_rows, kc, nc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tier_vocabulary() {
+        assert_eq!(parse_tier("portable"), Ok(SimdTier::Portable));
+        assert_eq!(parse_tier("scalar"), Ok(SimdTier::Portable));
+        assert_eq!(parse_tier(" AVX2 "), Ok(SimdTier::Avx2));
+        assert_eq!(parse_tier("Avx512"), Ok(SimdTier::Avx512));
+        assert!(parse_tier("avx1024").is_err());
+        assert!(parse_tier("").is_err());
+    }
+
+    #[test]
+    fn clamp_never_raises() {
+        // Portable is always supported, so clamping it is the identity;
+        // any clamped result must itself be supported.
+        assert_eq!(clamp_supported(SimdTier::Portable), SimdTier::Portable);
+        for want in [SimdTier::Avx2, SimdTier::Avx512] {
+            assert!(clamp_supported(want).supported());
+        }
+    }
+
+    #[test]
+    fn available_starts_portable_and_is_supported() {
+        let tiers = SimdTier::available();
+        assert_eq!(tiers[0], SimdTier::Portable);
+        assert!(tiers.iter().all(|t| t.supported()));
+    }
+
+    #[test]
+    fn force_tier_overrides_and_restores() {
+        let before = active_tier();
+        {
+            let _g = force_tier(SimdTier::Portable);
+            assert_eq!(active_tier(), SimdTier::Portable);
+            // nesting restores the inner previous value
+            {
+                let _g2 = force_tier(SimdTier::Portable);
+                assert_eq!(active_tier(), SimdTier::Portable);
+            }
+            assert_eq!(active_tier(), SimdTier::Portable);
+        }
+        assert_eq!(active_tier(), before);
+    }
+
+    #[test]
+    fn names_roundtrip_through_parse() {
+        for t in [SimdTier::Portable, SimdTier::Avx2, SimdTier::Avx512] {
+            assert_eq!(parse_tier(t.name()), Ok(t));
+        }
+    }
+}

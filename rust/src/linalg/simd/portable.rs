@@ -1,0 +1,127 @@
+//! The `Portable` tier: the seed scalar microkernel, moved here
+//! verbatim from `blocked.rs`. Every expression (the 4-wide k
+//! grouping, the zero-skip on the k remainder, the two-rows-at-a-time
+//! pairing) is preserved exactly — this is what makes
+//! `PGPR_SIMD=portable` bitwise-identical to the pre-SIMD blocked
+//! engine, and (serially) to the seed scalar `matmul`.
+
+/// One C row: `c[j] ±= (a · B)[j]` over a `kc`-deep, `nc`-wide tile.
+/// Mirrors the seed kernel's expression exactly (including the
+/// zero-skip on the k remainder).
+fn band_kernel_row<const SUB: bool>(
+    a0: &[f64],
+    c0: &mut [f64],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    let c0 = &mut c0[..nc];
+    let mut kk = 0;
+    while kk + 4 <= kc {
+        let (p0, p1, p2, p3) = (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
+        let b0 = &b_rows[kk][..nc];
+        let b1 = &b_rows[kk + 1][..nc];
+        let b2 = &b_rows[kk + 2][..nc];
+        let b3 = &b_rows[kk + 3][..nc];
+        for j in 0..nc {
+            let t = p0 * b0[j] + p1 * b1[j] + p2 * b2[j] + p3 * b3[j];
+            if SUB {
+                c0[j] -= t;
+            } else {
+                c0[j] += t;
+            }
+        }
+        kk += 4;
+    }
+    while kk < kc {
+        let p = a0[kk];
+        if p != 0.0 {
+            let brow = &b_rows[kk][..nc];
+            for j in 0..nc {
+                let t = p * brow[j];
+                if SUB {
+                    c0[j] -= t;
+                } else {
+                    c0[j] += t;
+                }
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// The seed microloop: `c_rows[r] ±= a_rows[r] · B` over a tile, two C
+/// rows at a time (each B load feeds both rows; four k-steps amortize
+/// each C access). `b_rows[kk]` is packed row kk of the tile.
+pub(super) fn band_kernel<const SUB: bool>(
+    a_rows: &[&[f64]],
+    c_rows: &mut [&mut [f64]],
+    b_rows: &[&[f64]],
+    kc: usize,
+    nc: usize,
+) {
+    debug_assert_eq!(a_rows.len(), c_rows.len());
+    debug_assert!(b_rows.len() >= kc);
+    let rows = c_rows.len();
+    let mut r = 0;
+    while r + 2 <= rows {
+        let (head, tail) = c_rows.split_at_mut(r + 1);
+        let c0 = &mut head[r][..nc];
+        let c1 = &mut tail[0][..nc];
+        let a0 = a_rows[r];
+        let a1 = a_rows[r + 1];
+        let mut kk = 0;
+        while kk + 4 <= kc {
+            let (p0, p1, p2, p3) =
+                (a0[kk], a0[kk + 1], a0[kk + 2], a0[kk + 3]);
+            let (q0, q1, q2, q3) =
+                (a1[kk], a1[kk + 1], a1[kk + 2], a1[kk + 3]);
+            let b0 = &b_rows[kk][..nc];
+            let b1 = &b_rows[kk + 1][..nc];
+            let b2 = &b_rows[kk + 2][..nc];
+            let b3 = &b_rows[kk + 3][..nc];
+            for j in 0..nc {
+                let (v0, v1, v2, v3) = (b0[j], b1[j], b2[j], b3[j]);
+                let t0 = p0 * v0 + p1 * v1 + p2 * v2 + p3 * v3;
+                let t1 = q0 * v0 + q1 * v1 + q2 * v2 + q3 * v3;
+                if SUB {
+                    c0[j] -= t0;
+                    c1[j] -= t1;
+                } else {
+                    c0[j] += t0;
+                    c1[j] += t1;
+                }
+            }
+            kk += 4;
+        }
+        while kk < kc {
+            let (p, q) = (a0[kk], a1[kk]);
+            let brow = &b_rows[kk][..nc];
+            if p != 0.0 {
+                for j in 0..nc {
+                    let t = p * brow[j];
+                    if SUB {
+                        c0[j] -= t;
+                    } else {
+                        c0[j] += t;
+                    }
+                }
+            }
+            if q != 0.0 {
+                for j in 0..nc {
+                    let t = q * brow[j];
+                    if SUB {
+                        c1[j] -= t;
+                    } else {
+                        c1[j] += t;
+                    }
+                }
+            }
+            kk += 1;
+        }
+        r += 2;
+    }
+    if r < rows {
+        band_kernel_row::<SUB>(a_rows[r], &mut *c_rows[r], b_rows, kc, nc);
+    }
+}

@@ -7,7 +7,8 @@ use super::batcher::{Batch, DynamicBatcher};
 use super::router::Router;
 use crate::api::ApiError;
 use crate::cluster::{MachinesLost, ParallelExecutor};
-use crate::gp::predictor::{ppic_operators, OpScratch, PredictOperator};
+use crate::gp::predictor::{ppic_operators, OpScratch, OpScratchF32,
+                           PredictOperator, PredictOperatorF32};
 use crate::gp::summaries::{chol_global, GlobalSummary, LocalSummary,
                            SupportContext};
 use crate::kernel::SeArd;
@@ -69,6 +70,7 @@ impl ServeReport {
 #[derive(Debug, Clone, Default)]
 pub struct ServeScratch {
     op: OpScratch,
+    op_f32: OpScratchF32,
     padded: Vec<f64>,
     mean: Vec<f64>,
     var: Vec<f64>,
@@ -97,6 +99,14 @@ pub struct ServedModel {
     /// vector + fused variance operator over `[k(u,S); k(u,X_m)]`
     /// features). Rebuilt by [`ServedModel::refit`].
     pub ops: Vec<PredictOperator>,
+    /// Mixed-precision (f32-storage / f64-accumulate) siblings of
+    /// `ops`, staged only when opted in via
+    /// [`ServedModel::with_mixed_precision`] (or
+    /// [`crate::api::GpBuilder::mixed_precision`]). When present,
+    /// [`ServedModel::serve_fast`] routes every batch through them;
+    /// restaged by refit and machine loss so the mode survives
+    /// redeployment events.
+    pub ops_f32: Option<Vec<PredictOperatorF32>>,
 }
 
 /// Stage the per-machine serve operators (fit/refit shared tail).
@@ -168,11 +178,33 @@ impl ServedModel {
             blocks,
             router,
             ops,
+            ops_f32: None,
         })
     }
 
     pub fn machines(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Opt into the mixed-precision serve mode: demote the staged f64
+    /// operators to their f32-storage / f64-accumulate siblings
+    /// ([`PredictOperator::demote`]) and route
+    /// [`ServedModel::serve_fast`] through them. The f64 operators
+    /// stay staged (they remain the accuracy oracle and the
+    /// [`ServedModel::predict_batch_fast`] path); predictions through
+    /// the f32 path agree with them within
+    /// [`crate::gp::predictor::F32_SERVE_REL_BUDGET`] (tested).
+    #[must_use]
+    pub fn with_mixed_precision(mut self) -> ServedModel {
+        self.ops_f32 =
+            Some(self.ops.iter().map(PredictOperator::demote).collect());
+        self
+    }
+
+    /// True when the mixed-precision serve path is staged.
+    #[must_use]
+    pub fn mixed_precision(&self) -> bool {
+        self.ops_f32.is_some()
     }
 
     /// Rebuild every summary under new hyperparameters (e.g. from
@@ -197,6 +229,10 @@ impl ServedModel {
         let xms: Vec<&Mat> = blocks.iter().map(|(x, _, _)| x).collect();
         let router = Router::from_blocks(hyp, &xms);
         let ops = stage_ops(hyp, &ctx, &global, &blocks, self.y_mean);
+        let ops_f32 = self
+            .ops_f32
+            .as_ref()
+            .map(|_| ops.iter().map(PredictOperator::demote).collect());
         ServedModel {
             hyp: hyp.clone(),
             xs: self.xs.clone(),
@@ -205,6 +241,7 @@ impl ServedModel {
             blocks,
             router,
             ops,
+            ops_f32,
         }
     }
 
@@ -262,6 +299,10 @@ impl ServedModel {
         self.router = Router::from_blocks(&self.hyp, &xms);
         self.ops = stage_ops(&self.hyp, &ctx, &self.global, &self.blocks,
                              self.y_mean);
+        if self.ops_f32.is_some() {
+            self.ops_f32 = Some(
+                self.ops.iter().map(PredictOperator::demote).collect());
+        }
         Ok(())
     }
 
@@ -328,6 +369,42 @@ impl ServedModel {
         (&scratch.mean[..rows], &scratch.var[..rows])
     }
 
+    /// Mixed-precision sibling of [`ServedModel::predict_batch_fast`]:
+    /// same contract (padding transparency, scratch reuse, slices into
+    /// `scratch`), served through the staged f32-storage operators.
+    /// Agrees with the f64 fast path within
+    /// [`crate::gp::predictor::F32_SERVE_REL_BUDGET`] (tested).
+    ///
+    /// Panics if the mixed-precision mode was never staged — call
+    /// [`ServedModel::with_mixed_precision`] (or build with
+    /// [`crate::api::GpBuilder::mixed_precision`]) first.
+    pub fn predict_batch_fast_f32<'s>(
+        &self,
+        m: usize,
+        xs_batch: &[f64],
+        rows: usize,
+        pad_to: usize,
+        lctx: &LinalgCtx,
+        scratch: &'s mut ServeScratch,
+    ) -> (&'s [f64], &'s [f64]) {
+        let ops = self.ops_f32.as_ref().expect(
+            "mixed-precision serve path not staged: call \
+             with_mixed_precision() first",
+        );
+        let d = self.xs.cols;
+        assert_eq!(xs_batch.len(), rows * d);
+        assert!(rows >= 1 && rows <= pad_to);
+        scratch.padded.clear();
+        scratch.padded.extend_from_slice(xs_batch);
+        for _ in rows..pad_to {
+            scratch.padded.extend_from_slice(&xs_batch[..d]);
+        }
+        ops[m].predict_into(lctx, &scratch.padded, pad_to,
+                            &mut scratch.op_f32, &mut scratch.mean,
+                            &mut scratch.var);
+        (&scratch.mean[..rows], &scratch.var[..rows])
+    }
+
     /// Serve a time-stamped request stream through the fit-staged
     /// operators (the fast path of [`ServedModel::serve_with`]; native
     /// math only — a PJRT deployment keeps using the backend-driven
@@ -335,7 +412,11 @@ impl ServedModel {
     /// batching decisions; per-machine scratch buffers and batcher
     /// buffer recycling make the steady-state loop allocation-free
     /// beyond the response vector. Predicted means/variances agree
-    /// with [`ServedModel::serve_with`] ≤1e-12 (tested).
+    /// with [`ServedModel::serve_with`] ≤1e-12 (tested). When the
+    /// model was staged with [`ServedModel::with_mixed_precision`],
+    /// batches run through the f32-storage operators instead, within
+    /// [`crate::gp::predictor::F32_SERVE_REL_BUDGET`] of the f64 path
+    /// (tested).
     pub fn serve_fast(
         &self,
         requests: &[PredictRequest],
@@ -366,8 +447,14 @@ impl ServedModel {
             let outs = exec.run_timed(ready.len(), |k| {
                 let b = &ready[k];
                 let mut s = scratches[b.machine].lock().unwrap();
-                self.predict_batch_fast(b.machine, &b.xs, b.ids.len(),
-                                        pad_to, &lctx, &mut s);
+                if self.ops_f32.is_some() {
+                    self.predict_batch_fast_f32(b.machine, &b.xs,
+                                                b.ids.len(), pad_to,
+                                                &lctx, &mut s);
+                } else {
+                    self.predict_batch_fast(b.machine, &b.xs, b.ids.len(),
+                                            pad_to, &lctx, &mut s);
+                }
             });
             for (batch, ((), secs)) in ready.iter().zip(outs) {
                 let done = flush_time + secs;
@@ -612,6 +699,150 @@ mod tests {
                 assert_eq!(var_u, var_p, "m={m} rows={rows}");
             }
         }
+    }
+
+    /// The mixed-precision fast path stays within
+    /// [`F32_SERVE_REL_BUDGET`] of the f64 fast path on every machine
+    /// and batch shape, its padding is bitwise-transparent, and the
+    /// unstaged model panics instead of serving garbage.
+    #[test]
+    fn mixed_precision_fast_path_within_budget() {
+        use crate::gp::predictor::F32_SERVE_REL_BUDGET;
+        let (model, _, _) = fitted(4, 3);
+        let model = model.with_mixed_precision();
+        assert!(model.mixed_precision());
+        let c0 = model.hyp.prior_var();
+        let mut rng = Pcg64::seed(29);
+        let lctx = LinalgCtx::serial();
+        let mut s64 = ServeScratch::new();
+        for m in 0..3 {
+            for rows in [1usize, 3, 5] {
+                let q: Vec<f64> = rng.normals(rows * 2);
+                let (mean_o, var_o) = {
+                    let (a, b) = model.predict_batch_fast(
+                        m, &q, rows, 8, &lctx, &mut s64);
+                    (a.to_vec(), b.to_vec())
+                };
+                let mut sf = ServeScratch::new();
+                let (mean_f, var_f) = model.predict_batch_fast_f32(
+                    m, &q, rows, 8, &lctx, &mut sf);
+                for i in 0..rows {
+                    let m_tol =
+                        F32_SERVE_REL_BUDGET * mean_o[i].abs().max(1.0);
+                    assert!((mean_f[i] - mean_o[i]).abs() <= m_tol,
+                            "m={m} rows={rows} mean {i}");
+                    let v_tol =
+                        F32_SERVE_REL_BUDGET * var_o[i].abs().max(c0);
+                    assert!((var_f[i] - var_o[i]).abs() <= v_tol,
+                            "m={m} rows={rows} var {i}");
+                }
+                // padding transparency, bitwise, on the f32 path too
+                let mut s2 = ServeScratch::new();
+                let (mean_u, var_u) = model.predict_batch_fast_f32(
+                    m, &q, rows, rows, &lctx, &mut s2);
+                let mut s3 = ServeScratch::new();
+                let (mean_p, var_p) = model.predict_batch_fast_f32(
+                    m, &q, rows, 8, &lctx, &mut s3);
+                assert_eq!(mean_u, mean_p, "m={m} rows={rows}");
+                assert_eq!(var_u, var_p, "m={m} rows={rows}");
+            }
+        }
+
+        let (plain, _, _) = fitted(4, 3);
+        assert!(!plain.mixed_precision());
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut s = ServeScratch::new();
+                plain.predict_batch_fast_f32(0, &[0.0, 0.0], 1, 1, &lctx,
+                                             &mut s);
+            }));
+        assert!(err.is_err(), "unstaged f32 path must panic");
+    }
+
+    /// A mixed-precision model's serve_fast makes the identical
+    /// batching decisions as the f64 model and every response stays
+    /// within the budget; refit and machine loss restage the f32
+    /// operators (bitwise vs a fresh mixed fit).
+    #[test]
+    fn mixed_precision_serve_and_restage() {
+        use crate::gp::predictor::F32_SERVE_REL_BUDGET;
+        let (model, _, _) = fitted(5, 3);
+        // same seed → identical fit; only the f32 staging differs
+        let mixed = fitted(5, 3).0.with_mixed_precision();
+        let c0 = model.hyp.prior_var();
+        let mut rng = Pcg64::seed(37);
+        let requests: Vec<PredictRequest> = (0..40)
+            .map(|i| PredictRequest {
+                id: i as u64,
+                x: rng.normals(2),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .collect();
+        let exec = ParallelExecutor::serial();
+        let mut b1 = DynamicBatcher::new(model.machines(), 2, 4, 5e-4);
+        let f64_rep = model.serve_fast(&requests, &mut b1, &exec);
+        let mut b2 = DynamicBatcher::new(mixed.machines(), 2, 4, 5e-4);
+        let f32_rep = mixed.serve_fast(&requests, &mut b2, &exec);
+        assert_eq!(f64_rep.responses.len(), f32_rep.responses.len());
+        assert_eq!(f64_rep.batches, f32_rep.batches);
+        for (a, b) in f64_rep.responses.iter().zip(f32_rep.responses.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert!((b.mean - a.mean).abs()
+                        <= F32_SERVE_REL_BUDGET * a.mean.abs().max(1.0),
+                    "req {} mean", a.id);
+            assert!((b.var - a.var).abs()
+                        <= F32_SERVE_REL_BUDGET * a.var.abs().max(c0),
+                    "req {} var", a.id);
+        }
+
+        // refit restages: f32 path bitwise vs a fresh mixed fit
+        let hyp2 = SeArd::isotropic(2, 1.3, 1.4, 0.06);
+        let refit = mixed.refit(&hyp2, &NativeBackend);
+        assert!(refit.mixed_precision());
+        let fresh = model.refit(&hyp2, &NativeBackend)
+            .with_mixed_precision();
+        let q: Vec<f64> = rng.normals(4 * 2);
+        let lctx = LinalgCtx::serial();
+        let mut s1 = ServeScratch::new();
+        let mut s2 = ServeScratch::new();
+        let (m_r, v_r) =
+            refit.predict_batch_fast_f32(1, &q, 4, 4, &lctx, &mut s1);
+        let (m_f, v_f) =
+            fresh.predict_batch_fast_f32(1, &q, 4, 4, &lctx, &mut s2);
+        assert_eq!(m_r, m_f);
+        assert_eq!(v_r, v_f);
+
+        // machine loss restages too
+        let mut lost = mixed;
+        lost.lose_machine(1, &NativeBackend).unwrap();
+        assert!(lost.mixed_precision());
+        assert_eq!(lost.ops_f32.as_ref().unwrap().len(), 2);
+        let mut s3 = ServeScratch::new();
+        let (m_l, _) =
+            lost.predict_batch_fast_f32(0, &q, 4, 4, &lctx, &mut s3);
+        assert!(m_l.iter().all(|v| v.is_finite()));
+    }
+
+    /// The builder flag flows through: `.mixed_precision(true).serve()`
+    /// stages the f32 operators, the default does not.
+    #[test]
+    fn builder_serve_stages_mixed_precision() {
+        let mut rng = Pcg64::seed(53);
+        let (n, d) = (16, 2);
+        let hyp = SeArd::isotropic(d, 0.8, 1.0, 0.05);
+        let xd = Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let base = crate::api::Gp::builder()
+            .hyp(hyp)
+            .data(xd, y)
+            .machines(2)
+            .support_size(4);
+        let plain = base.clone().serve().unwrap();
+        assert!(!plain.mixed_precision());
+        let mixed = base.mixed_precision(true).serve().unwrap();
+        assert!(mixed.mixed_precision());
+        assert_eq!(mixed.ops_f32.as_ref().unwrap().len(), 2);
     }
 
     /// serve_fast reproduces the backend-driven serve loop's
