@@ -8,6 +8,8 @@
 //!
 //! `PGPR_LENIENT_PERF=1` downgrades the gates to advisory on
 //! oversubscribed hosts (same convention as `linalg_bench`).
+//! `--telemetry-out=PATH` (or `PGPR_TELEMETRY_OUT`) additionally
+//! writes the run's full telemetry snapshot as JSON.
 
 use pgpr::bench_support::train_bench::{run, TrainBenchConfig};
 
@@ -17,6 +19,13 @@ fn main() {
         .skip(1)
         .find(|a| !a.starts_with('-'))
         .unwrap_or_else(|| "BENCH_train.json".to_string());
+    let telemetry_out = pgpr::bench_support::telemetry_out_from_args();
+    if telemetry_out.is_some() {
+        pgpr::obsv::set_enabled(true);
+    }
     let cfg = TrainBenchConfig::from_env();
     run(&cfg, &out);
+    if let Some(p) = telemetry_out {
+        pgpr::bench_support::write_telemetry_snapshot(&p);
+    }
 }

@@ -202,12 +202,20 @@ impl Gp {
     /// Predict with full output — see [`Regressor::predict_full`]
     /// (padding to AOT shapes included).
     pub fn predict_full(&self, spec: &PredictSpec) -> Result<PredictOutput> {
+        if crate::obsv::enabled() {
+            crate::obsv::counter_add_labeled("api.requests",
+                                             self.inner.method().name(), 1);
+        }
         self.inner.predict_full(spec)
     }
 
     /// Serve-path prediction through the staged predictive operators —
     /// see [`Regressor::predict_fast`].
     pub fn predict_fast(&self, xu: &Mat) -> Result<Prediction> {
+        if crate::obsv::enabled() {
+            crate::obsv::counter_add_labeled("api.requests",
+                                             self.inner.method().name(), 1);
+        }
         self.inner.predict_fast(xu)
     }
 

@@ -21,7 +21,12 @@
 //! In every mode (smoke included) handing a pool to any kernel must
 //! not cost more than 10% over serial at any measured size (the
 //! small-problem serial-fallback cutoffs make this hold); all checks
-//! go advisory under `PGPR_LENIENT_PERF=1`.
+//! go advisory under `PGPR_LENIENT_PERF=1`. The telemetry record
+//! sites in [`crate::linalg::LinalgCtx`]'s pool dispatch sit *inside*
+//! the measured kernels, so with `PGPR_TELEMETRY=0` this pooled ≤10%
+//! gate doubles as the disabled-mode overhead assertion (every record
+//! call must reduce to one relaxed atomic load); the run prints and
+//! records which state it measured under `config.telemetry_enabled`.
 //!
 //! The SIMD dispatch ladder is measured rung by rung at the largest
 //! size: one forced-tier single-thread case per supported tier
@@ -133,6 +138,8 @@ pub fn run(cfg: &LinalgBenchConfig, out_path: &str) -> Json {
     let mut rng = Pcg64::seed(0x11a1_6);
     let mut cases: Vec<Case> = Vec::new();
     let d = 8usize; // gram input dimensionality
+    println!("telemetry: {} (PGPR_TELEMETRY)",
+             if crate::obsv::enabled() { "on" } else { "off" });
 
     for &n in &cfg.sizes {
         let a = Mat::from_vec(n, n, rng.normals(n * n));
@@ -270,6 +277,7 @@ fn build_doc(cfg: &LinalgBenchConfig, cases: &[Case]) -> Json {
                 ("threads", Json::from(cfg.threads.clone())),
                 ("budget_s", Json::from(cfg.budget_s)),
                 ("smoke", Json::Bool(cfg.smoke)),
+                ("telemetry_enabled", Json::Bool(crate::obsv::enabled())),
             ]),
         ),
         (

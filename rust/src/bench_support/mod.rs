@@ -26,6 +26,33 @@ pub fn env_flag(name: &str) -> bool {
     }
 }
 
+/// Telemetry snapshot destination for bench mains: the
+/// `--telemetry-out=PATH` argument (equals form only, so the mains'
+/// "first non-dash argument is the out path" scanning is untouched),
+/// falling back to the `PGPR_TELEMETRY_OUT` env var. `None` when
+/// neither is given.
+pub fn telemetry_out_from_args() -> Option<String> {
+    if let Some(p) = std::env::args()
+        .skip(1)
+        .find_map(|a| a.strip_prefix("--telemetry-out=").map(String::from))
+    {
+        return Some(p);
+    }
+    std::env::var("PGPR_TELEMETRY_OUT").ok().filter(|s| !s.is_empty())
+}
+
+/// Write the global registry's full telemetry snapshot as pretty JSON
+/// to `path` (bench mains, after their sweep). Callers that take a
+/// [`telemetry_out_from_args`] destination should
+/// `crate::obsv::set_enabled(true)` *before* the sweep — an explicit
+/// `--telemetry-out` must never produce an empty document.
+pub fn write_telemetry_snapshot(path: &str) {
+    let snap = crate::obsv::snapshot(crate::obsv::SnapshotMode::Full);
+    std::fs::write(path, snap.to_json().to_string_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote telemetry snapshot {path}");
+}
+
 /// Host worker threads for bench mains, from `PGPR_BENCH_THREADS`
 /// (unset = 0 = serial). Panics on an unparsable value — mirroring
 /// `PGPR_BENCH_SCALE` — so a typo can't silently produce a serial run

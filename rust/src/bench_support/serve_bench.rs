@@ -418,4 +418,42 @@ mod tests {
         assert!(err <= crate::gp::predictor::F32_SERVE_REL_BUDGET);
         let _ = std::fs::remove_file(&path);
     }
+
+    /// The BENCH_serve percentile fields (`p50_s`/`p99_s`, via
+    /// [`DurationStats`]) ride on the shared telemetry histogram —
+    /// the tree's one percentile implementation. Pin: for identical
+    /// samples they match the sort-based oracle within the documented
+    /// tolerance of one bucket width
+    /// ([`crate::obsv::RELATIVE_BUCKET_WIDTH`]), and `min_s` stays
+    /// exact.
+    #[test]
+    fn case_percentiles_match_sort_oracle_within_bucket() {
+        let mut rng = Pcg64::seed(77);
+        for n in [5usize, 64, 300] {
+            let samples: Vec<f64> = (0..n)
+                .map(|_| 1e-6 + 1e-4 * rng.normal().abs())
+                .collect();
+            let stats = DurationStats::from_samples(&samples).unwrap();
+            let mut sorted = samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            let oracle = |q: f64| {
+                let k = ((q * n as f64).ceil() as usize).clamp(1, n);
+                sorted[k - 1]
+            };
+            for (got, q) in
+                [(stats.p50, 0.50), (stats.p95, 0.95), (stats.p99, 0.99)]
+            {
+                let want = oracle(q);
+                let tol = want.abs() * crate::obsv::RELATIVE_BUCKET_WIDTH
+                    + crate::obsv::hist::BUCKET_LO;
+                assert!(
+                    (got - want).abs() <= tol,
+                    "n={n} q={q}: histogram {got:.6e} vs oracle \
+                     {want:.6e} (tol {tol:.3e})"
+                );
+            }
+            assert_eq!(stats.min, sorted[0], "min must stay exact");
+            assert_eq!(stats.max, sorted[n - 1], "max must stay exact");
+        }
+    }
 }

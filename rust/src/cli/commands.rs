@@ -193,6 +193,7 @@ pub fn serve(args: &Args) -> Result<()> {
     // Native serving goes through the fit-staged predictive operators
     // (serve_fast); a PJRT deployment executes the AOT graphs per
     // batch through the backend-driven loop.
+    let telemetry = telemetry_sink(args);
     let (path, report) = if backend_name == "native" {
         ("fast", model.serve_fast(&requests, &mut batcher, &exec))
     } else {
@@ -201,6 +202,9 @@ pub fn serve(args: &Args) -> Result<()> {
     };
     println!("serve[{}|{}|{} threads]: {}", backend.name(), path,
              exec.workers(), report.summary());
+    if let Some(p) = telemetry {
+        write_telemetry(&p)?;
+    }
     Ok(())
 }
 
@@ -288,6 +292,7 @@ pub fn train(args: &Args) -> Result<()> {
 
     crate::info!("train: dataset={dataset} n={n} M={m} |S|={s} iters={iters} \
                   threads={}", exec.workers());
+    let telemetry = telemetry_sink(args);
     let result = Gp::builder()
         .hyp(init.clone())
         .data(train_ds.x.clone(), train_ds.y.clone())
@@ -359,6 +364,111 @@ pub fn train(args: &Args) -> Result<()> {
         t.row(vec![name.into(), fmt3(r), format!("{:.3}x", r / rmse_mle)]);
     }
     println!("{}", t.render());
+    if let Some(p) = telemetry {
+        write_telemetry(&p)?;
+    }
+    Ok(())
+}
+
+/// The miniature fit + predict + serve pass `pgpr stats` records: one
+/// facade fit and prediction per parallel protocol (pPITC, pPIC,
+/// pICF), then a short serve_fast stream — enough to exercise every
+/// instrumented layer (protocol spans, cluster phases and collectives,
+/// per-method API counters, serve latency histograms, linalg dispatch
+/// counters).
+fn stats_demo(n: usize, m: usize, s: usize, seed: u64) -> Result<()> {
+    let _root = crate::obsv::span("stats.demo")
+        .with_u64("n", n as u64)
+        .with_u64("machines", m as u64);
+    let d = 2usize;
+    let mut rng = Pcg64::seed(seed);
+    let hyp = crate::kernel::SeArd::isotropic(d, 1.0, 1.0, 0.05);
+    let xd = crate::linalg::Mat::from_vec(n, d, rng.normals(n * d));
+    let y = rng.normals(n);
+    let u = m * 4;
+    let xu = crate::linalg::Mat::from_vec(u, d, rng.normals(u * d));
+    let base = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(s)
+        .seed(seed);
+    for method in [Method::PPitc, Method::PPic, Method::PIcf] {
+        let gp = base.clone().method(method).fit()?;
+        let out = gp.predict_full(
+            &crate::api::PredictSpec::new(xu.clone()))?;
+        anyhow::ensure!(out.prediction.mean.len() == u,
+                        "{} returned {} rows", method.name(),
+                        out.prediction.mean.len());
+    }
+    let model = base.serve()?;
+    let requests: Vec<PredictRequest> = (0..16 * m)
+        .map(|i| PredictRequest {
+            id: i as u64,
+            x: rng.normals(d),
+            arrival_s: i as f64 * 1e-4,
+        })
+        .collect();
+    let mut batcher = DynamicBatcher::new(model.machines(), d, 4, 5e-4);
+    let exec = crate::cluster::ParallelExecutor::serial();
+    let report = model.serve_fast(&requests, &mut batcher, &exec);
+    anyhow::ensure!(report.responses.len() == requests.len(),
+                    "serve dropped responses");
+    Ok(())
+}
+
+/// `pgpr stats` — record a miniature fit + predict + serve pass into a
+/// fresh telemetry registry and export the snapshot (JSON by default;
+/// `--format prometheus` for scrape text, `--mode deterministic` to
+/// drop measured-time content, `--out PATH` to write a file).
+pub fn stats(args: &Args) -> Result<()> {
+    use crate::obsv::{Registry, SnapshotMode};
+    let format = args.str_or("format", "json");
+    let mode = match args.str_or("mode", "full") {
+        "full" => SnapshotMode::Full,
+        "deterministic" => SnapshotMode::Deterministic,
+        other => bail!("unknown --mode '{other}' (full|deterministic)"),
+    };
+    let m = args.usize_or("m", 4)?.max(1);
+    let n = (args.usize_or("n", 128)? / m).max(2) * m;
+    let s = args.usize_or("s", 16)?;
+    let seed = args.u64_or("seed", 1)?;
+
+    // a fresh scoped registry: the snapshot holds exactly this run
+    let reg = std::sync::Arc::new(Registry::new());
+    {
+        let _guard = reg.install();
+        stats_demo(n, m, s, seed)?;
+    }
+    let snap = reg.snapshot(mode);
+    let rendered = match format {
+        "json" => snap.to_json().to_string_pretty() + "\n",
+        "prometheus" => snap.to_prometheus(),
+        other => bail!("unknown --format '{other}' (json|prometheus)"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &rendered)?;
+            println!("wrote {path}");
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
+/// Honor a `--telemetry-out PATH` argument on long-running commands:
+/// force recording on now (before the workload) and return the writer
+/// to call after it.
+fn telemetry_sink(args: &Args) -> Option<String> {
+    let path = args.get("telemetry-out")?.to_string();
+    crate::obsv::set_enabled(true);
+    Some(path)
+}
+
+fn write_telemetry(path: &str) -> Result<()> {
+    let snap = crate::obsv::snapshot(crate::obsv::SnapshotMode::Full);
+    std::fs::write(path, snap.to_json().to_string_pretty() + "\n")?;
+    println!("wrote telemetry snapshot {path}");
     Ok(())
 }
 

@@ -7,6 +7,7 @@
 //! * `serve`     — real-time serving demo (router + batcher + backend)
 //! * `learn`     — MLE hyperparameter learning on a workload subset
 //! * `train`     — distributed PITC marginal-likelihood training
+//! * `stats`     — record a mini fit+predict+serve pass, export telemetry
 //! * `selftest`  — native vs PJRT backend agreement on the tiny profile
 //!
 //! Arg syntax: `--key value` or `--flag`; hand-rolled (no clap offline).
@@ -32,10 +33,14 @@ COMMANDS:
             [--parallel-threads N]
   serve     --profile tiny|aimpeak|sarcos [--requests 200] [--batch-wait-ms 2]
             [--backend pjrt|native] [--artifacts DIR] [--parallel-threads N]
+            [--telemetry-out PATH]
   learn     --domain aimpeak|sarcos [--n 512] [--iters 40] [--seed 1]
   train     --dataset rff|aimpeak|sarcos [--n 2048] [--m 8] [--s 96]
             [--d 4] [--test 256] [--iters 30] [--lr 0.08] [--subset 256]
             [--seed 1] [--no-backtrack] [--parallel-threads N]
+            [--telemetry-out PATH]
+  stats     [--format json|prometheus] [--mode full|deterministic]
+            [--n 128] [--m 4] [--s 16] [--seed 1] [--out PATH]
   selftest  [--artifacts DIR]
 
 --parallel-threads N (N >= 2) executes the simulated machines' work
@@ -46,7 +51,8 @@ makespan (time_s) is still measured per node, so core contention can
 inflate it; keep N <= physical cores when time_s feeds paper figures,
 or use the serial default for timing-faithful sweeps. 0/1 = serial.
 
-ENV: PGPR_ARTIFACTS (artifacts dir), PGPR_LOG (error|warn|info|debug)
+ENV: PGPR_ARTIFACTS (artifacts dir), PGPR_LOG (error|warn|info|debug),
+PGPR_TELEMETRY (1 default | 0 off — metrics registry + phase spans)
 ";
 
 /// CLI entrypoint; returns the process exit code.
@@ -75,6 +81,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve" => commands::serve(&args),
         "learn" => commands::learn(&args),
         "train" => commands::train(&args),
+        "stats" => commands::stats(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -106,6 +113,45 @@ mod tests {
     #[test]
     fn info_runs() {
         assert!(run(&["info".into()]).is_ok());
+    }
+
+    /// End-to-end `pgpr stats`: the mini fit+predict+serve pass runs,
+    /// and its JSON export parses with phase spans and per-method
+    /// request counters present.
+    #[test]
+    fn stats_smoke_writes_parsable_snapshot() {
+        let path = std::env::temp_dir().join("pgpr_stats_cli_test.json");
+        let path_s = path.to_str().unwrap().to_string();
+        let argv: Vec<String> = [
+            "stats", "--n", "32", "--m", "2", "--s", "6", "--out", &path_s,
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(run(&argv).is_ok());
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(&raw).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str().unwrap(),
+                   "pgpr-telemetry/1");
+        let counters = doc.get("counters").unwrap();
+        for method in ["pPITC", "pPIC", "pICF"] {
+            let key = format!("api.requests.{method}");
+            assert!(counters.get(&key).is_some(), "missing {key}");
+        }
+        assert!(!doc.get("spans").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_file(&path);
+
+        // prometheus render path
+        let argv: Vec<String> =
+            ["stats", "--n", "32", "--m", "2", "--s", "6", "--format",
+             "prometheus", "--out", &path_s]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run(&argv).is_ok());
+        let prom = std::fs::read_to_string(&path).unwrap();
+        assert!(prom.contains("pgpr_cluster_runs"));
+        let _ = std::fs::remove_file(&path);
     }
 
     /// End-to-end `pgpr train` on a tiny synthetic problem (the same

@@ -30,6 +30,12 @@ pub struct Cluster {
     transport: Box<dyn Transport>,
     /// Fault-counter snapshot at the last phase boundary.
     phase_mark: FaultCounters,
+    /// Telemetry: collective events `(kind, bytes, at_ns)` since the
+    /// last phase mark, re-parented under the phase span it seals
+    /// (empty while telemetry is off).
+    obsv_events: Vec<(&'static str, u64, u64)>,
+    /// Telemetry: monotonic start of the currently-open phase.
+    phase_start_ns: u64,
 }
 
 pub const MASTER: usize = 0;
@@ -65,6 +71,8 @@ impl Cluster {
             metrics: RunMetrics::default(),
             transport,
             phase_mark: FaultCounters::default(),
+            obsv_events: Vec::new(),
+            phase_start_ns: crate::obsv::now_ns(),
         }
     }
 
@@ -136,6 +144,16 @@ impl Cluster {
             }
         }
         out
+    }
+
+    /// Telemetry: buffer one collective event (kind, total bytes moved)
+    /// for re-parenting under the span of the phase that seals it. One
+    /// branch on a relaxed load when telemetry is off.
+    fn note_collective(&mut self, kind: &'static str, bytes: usize) {
+        if crate::obsv::enabled() {
+            self.obsv_events
+                .push((kind, bytes as u64, crate::obsv::now_ns()));
+        }
     }
 
     /// Apply one [`ExchangeOutcome`]: straggler delays move the
@@ -282,6 +300,7 @@ impl Cluster {
         self.metrics.bytes_sent += bytes;
         self.metrics.messages += 1;
         self.metrics.faults.rebalances += 1;
+        self.note_collective("collective.rebalance_fetch", bytes);
     }
 
     /// Synchronize alive clocks at the current (alive) makespan.
@@ -312,6 +331,7 @@ impl Cluster {
         self.nodes[root].wait_until(t_done);
         self.metrics.bytes_sent += bytes * (ma - 1);
         self.metrics.messages += ma - 1;
+        self.note_collective("collective.reduce", bytes * (ma - 1));
         failed
     }
 
@@ -335,6 +355,7 @@ impl Cluster {
         }
         self.metrics.bytes_sent += bytes * (ma - 1);
         self.metrics.messages += ma - 1;
+        self.note_collective("collective.bcast", bytes * (ma - 1));
         failed
     }
 
@@ -359,6 +380,7 @@ impl Cluster {
         self.nodes[root].wait_until(t_done);
         self.metrics.bytes_sent += bytes * (ma - 1);
         self.metrics.messages += ma - 1;
+        self.note_collective("collective.gather", bytes * (ma - 1));
         failed
     }
 
@@ -385,6 +407,7 @@ impl Cluster {
         let rounds = NetworkModel::tree_rounds(ma);
         self.metrics.bytes_sent += bytes * ma * rounds / 2;
         self.metrics.messages += ma * rounds / 2;
+        self.note_collective("collective.allreduce", bytes * ma * rounds / 2);
         failed
     }
 
@@ -407,14 +430,20 @@ impl Cluster {
         }
         self.metrics.bytes_sent += bytes_per_pair * ma * (ma - 1);
         self.metrics.messages += ma * (ma - 1);
+        self.note_collective("collective.alltoall",
+                             bytes_per_pair * ma * (ma - 1));
         failed
     }
 
     /// Mark the end of a named protocol phase. Fault counters are
     /// snapshotted so the [`Phase`] row carries the per-phase delta.
+    /// Telemetry gets a `phase.{name}` span covering `[previous mark,
+    /// now]` (parented to the caller's open protocol span) with the
+    /// buffered collective events nested under it.
     pub fn phase(&mut self, name: &str) {
         let delta = self.metrics.faults.since(&self.phase_mark);
         self.phase_mark = self.metrics.faults.clone();
+        self.emit_phase_span(name, &delta);
         self.metrics.phases.push(Phase {
             name: name.to_string(),
             end_makespan: self.makespan(),
@@ -422,7 +451,43 @@ impl Cluster {
         });
     }
 
-    /// Finish the run and take the metrics.
+    fn emit_phase_span(&mut self, name: &str, faults: &FaultCounters) {
+        if !crate::obsv::enabled() {
+            return;
+        }
+        use crate::obsv::{emit_span_at, FieldValue, Parent};
+        let end = crate::obsv::now_ns();
+        let fault_events = faults.retries
+            + faults.timeouts
+            + faults.deaths
+            + faults.rebalances
+            + faults.straggle_events;
+        let pid = emit_span_at(
+            &format!("phase.{name}"),
+            self.phase_start_ns,
+            end,
+            Parent::Current,
+            vec![
+                ("faults", FieldValue::U64(fault_events as u64)),
+                ("end_makespan_s", FieldValue::F64(self.makespan())),
+            ],
+        );
+        for (kind, bytes, at) in self.obsv_events.drain(..) {
+            emit_span_at(
+                kind,
+                at,
+                at,
+                Parent::Explicit(pid),
+                vec![("bytes", FieldValue::U64(bytes))],
+            );
+        }
+        self.phase_start_ns = end;
+    }
+
+    /// Finish the run and take the metrics. Telemetry: the run's
+    /// traffic and fault totals publish into the registry as counters
+    /// ([`RunMetrics`] itself is unchanged — the registry is the
+    /// cross-run aggregate view, `RunMetrics` the per-run report).
     pub fn finish(mut self) -> RunMetrics {
         self.metrics.makespan = self.makespan();
         self.metrics.total_compute =
@@ -434,6 +499,27 @@ impl Cluster {
             .fold(0.0, f64::max);
         self.metrics.wall_s = self.wall.elapsed();
         self.metrics.threads = self.exec.workers();
+        if crate::obsv::enabled() {
+            use crate::obsv::{counter_add, counter_add_labeled, observe, Unit};
+            let m = &self.metrics;
+            counter_add("cluster.runs", 1);
+            counter_add("cluster.bytes_sent", m.bytes_sent as u64);
+            counter_add("cluster.messages", m.messages as u64);
+            let f = &m.faults;
+            for (kind, v) in [
+                ("retries", f.retries),
+                ("timeouts", f.timeouts),
+                ("deaths", f.deaths),
+                ("rebalances", f.rebalances),
+                ("straggle_events", f.straggle_events),
+            ] {
+                if v > 0 {
+                    counter_add_labeled("cluster.faults", kind, v as u64);
+                }
+            }
+            observe("cluster.makespan_s", Unit::Seconds, m.makespan);
+            observe("cluster.wall_s", Unit::Seconds, m.wall_s);
+        }
         self.metrics
     }
 }
@@ -696,6 +782,40 @@ mod tests {
         assert_eq!(m.bytes_sent, 500);
         assert_eq!(m.messages, 1);
         assert_eq!(m.faults.rebalances, 1);
+    }
+
+    /// A scoped telemetry registry sees the phase span (nested under
+    /// the caller's protocol span, collective events inside) and the
+    /// run's traffic counters from `finish()` — while `RunMetrics`
+    /// itself stays untouched.
+    #[test]
+    fn telemetry_spans_and_counters() {
+        use crate::obsv::{Registry, SnapshotMode};
+        use std::sync::Arc;
+        let reg = Arc::new(Registry::new());
+        let _g = reg.install();
+        let proto = crate::obsv::span("protocol.test");
+        let mut c = Cluster::new(4, fast_net());
+        c.reduce_to_master(10);
+        c.phase("one");
+        let m = c.finish();
+        drop(proto);
+        let snap = reg.snapshot(SnapshotMode::Full);
+        assert_eq!(snap.counters["cluster.runs"], 1);
+        assert_eq!(snap.counters["cluster.bytes_sent"] as usize,
+                   m.bytes_sent);
+        assert_eq!(snap.counters["cluster.messages"] as usize, m.messages);
+        assert_eq!(snap.spans.len(), 1);
+        let p = &snap.spans[0];
+        assert_eq!(p.name, "protocol.test");
+        assert_eq!(p.children.len(), 1);
+        assert_eq!(p.children[0].name, "phase.one");
+        assert_eq!(p.children[0].children.len(), 1);
+        assert_eq!(p.children[0].children[0].name, "collective.reduce");
+        // the collective event carries the bytes it moved
+        let (k, v) = &p.children[0].children[0].fields[0];
+        assert_eq!(k, "bytes");
+        assert_eq!(v.as_usize().unwrap(), m.bytes_sent);
     }
 
     /// Per-phase fault rows carry deltas, not cumulative counts.

@@ -45,7 +45,9 @@
 //! dense linear algebra ([`linalg`]), covariance functions ([`kernel`]),
 //! synthetic AIMPEAK/SARCOS workloads ([`data`]), a thread pool, JSON,
 //! PRNG ([`util`]), a property-testing mini-framework ([`testkit`]), a
-//! micro-benchmark harness ([`bench_support`]) and a CLI ([`cli`]).
+//! micro-benchmark harness ([`bench_support`]), a telemetry layer
+//! ([`obsv`]: metrics registry, phase-span tracing, JSON/Prometheus
+//! exporters — `pgpr stats`) and a CLI ([`cli`]).
 
 pub mod api;
 pub mod bench_support;
@@ -56,6 +58,7 @@ pub mod gp;
 pub mod kernel;
 pub mod linalg;
 pub mod metrics;
+pub mod obsv;
 pub mod parallel;
 pub mod runtime;
 pub mod server;

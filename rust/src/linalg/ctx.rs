@@ -110,8 +110,21 @@ impl LinalgCtx {
         jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
     ) {
         match self.pool() {
-            Some(pool) if jobs.len() > 1 => pool.run_batch(jobs),
+            Some(pool) if jobs.len() > 1 => {
+                // sits inside measured kernels: one relaxed load when
+                // telemetry is off (the pooled-vs-serial bench gate
+                // doubles as the overhead assertion)
+                if crate::obsv::enabled() {
+                    crate::obsv::counter_add("linalg.pool_dispatches", 1);
+                    crate::obsv::counter_add("linalg.pool_jobs",
+                                             jobs.len() as u64);
+                }
+                pool.run_batch(jobs);
+            }
             _ => {
+                if crate::obsv::enabled() {
+                    crate::obsv::counter_add("linalg.serial_dispatches", 1);
+                }
                 for job in jobs {
                     job();
                 }

@@ -1,0 +1,280 @@
+//! Fixed-bucket log-scale histograms: the crate's one percentile
+//! implementation.
+//!
+//! 256 geometric buckets with ratio 2^(1/4) (≈19% bucket width) span
+//! `[1e-9, ~1.8e10)` — nanoseconds to hours when the unit is seconds,
+//! and any realistic batch-size/byte count when it is a plain count.
+//! Observations are lock-free atomic increments; quantiles interpolate
+//! linearly inside the bucket that contains the target rank, so they
+//! match a sort-based oracle to within one bucket width (property-
+//! tested below). `server::service::DurationStats` and the serve bench
+//! both report through this type — there is no other p50/p95/p99 math
+//! in the tree.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Number of geometric buckets (underflow clamps into bucket 0,
+/// overflow into the last bucket).
+pub const BUCKETS: usize = 256;
+
+/// Lower edge of the geometric range; bucket 0 additionally absorbs
+/// everything below it (zeros, subnormal latencies).
+pub const BUCKET_LO: f64 = 1e-9;
+
+/// Geometric bucket growth ratio, 2^(1/4).
+pub const BUCKET_RATIO: f64 = 1.189_207_115_002_721_1;
+
+/// Worst-case relative error of an interpolated quantile against the
+/// sort-based oracle: one bucket width, `BUCKET_RATIO - 1`.
+pub const RELATIVE_BUCKET_WIDTH: f64 = BUCKET_RATIO - 1.0;
+
+/// What a histogram's values measure. Snapshots keep the unit, and the
+/// deterministic snapshot mode drops `Seconds` histograms (measured
+/// wall time can never replay bitwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// Wall-clock seconds (latencies, makespans).
+    Seconds,
+    /// Dimensionless counts (batch rows, queue depths, bytes).
+    Count,
+}
+
+impl Unit {
+    /// Stable lowercase name used in snapshots.
+    pub fn name(self) -> &'static str {
+        match self {
+            Unit::Seconds => "seconds",
+            Unit::Count => "count",
+        }
+    }
+}
+
+/// Lower edge of bucket `i` (0.0 for the underflow bucket).
+pub fn bucket_lower(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        BUCKET_LO * BUCKET_RATIO.powi(i as i32)
+    }
+}
+
+/// Upper edge of bucket `i`.
+pub fn bucket_upper(i: usize) -> f64 {
+    BUCKET_LO * BUCKET_RATIO.powi(i as i32 + 1)
+}
+
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= BUCKET_LO {
+        return 0; // zeros, negatives, NaN, underflow
+    }
+    let idx = ((v / BUCKET_LO).log2() * 4.0).floor() as usize;
+    idx.min(BUCKETS - 1)
+}
+
+fn cas_f64(cell: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = cell.load(Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        if next == cur {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// A lock-free log-scale histogram. Cheap enough to sit under serve
+/// loops (one atomic increment + three CAS updates per observation, no
+/// allocation); exact count/sum/min/max, interpolated quantiles.
+pub struct Histogram {
+    unit: Unit,
+    counts: Vec<AtomicU64>,
+    n: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// Empty histogram measuring `unit` values.
+    pub fn new(unit: Unit) -> Histogram {
+        Histogram {
+            unit,
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            n: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    /// The unit this histogram measures.
+    pub fn unit(&self) -> Unit {
+        self.unit
+    }
+
+    /// Record one value.
+    pub fn observe(&self, v: f64) {
+        self.counts[bucket_of(v)].fetch_add(1, Relaxed);
+        self.n.fetch_add(1, Relaxed);
+        cas_f64(&self.sum_bits, |s| s + v);
+        cas_f64(&self.min_bits, |m| m.min(v));
+        cas_f64(&self.max_bits, |m| m.max(v));
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Relaxed)
+    }
+
+    /// Exact sum of observations.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Relaxed))
+    }
+
+    /// Exact minimum (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count() == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.min_bits.load(Relaxed))
+        }
+    }
+
+    /// Exact maximum (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count() == 0 {
+            0.0
+        } else {
+            f64::from_bits(self.max_bits.load(Relaxed))
+        }
+    }
+
+    /// Interpolated quantile, `q` in `[0, 1]`. Uses the same
+    /// nearest-rank target as a sort oracle (`ceil(q·n)`), then
+    /// interpolates linearly inside the target bucket and clamps to
+    /// the observed `[min, max]` — so the result differs from
+    /// `sorted[ceil(q·n)-1]` by at most one bucket width
+    /// ([`RELATIVE_BUCKET_WIDTH`]). Returns 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let lo = bucket_lower(i);
+                let hi = bucket_upper(i);
+                let frac = (target - cum) as f64 / c as f64;
+                let est = lo + frac * (hi - lo);
+                return est.clamp(self.min(), self.max());
+            }
+            cum += c;
+        }
+        self.max()
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs, ascending index.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let c = c.load(Relaxed);
+                (c > 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop::{prop_check, Gen};
+
+    /// Sort-based oracle with the same nearest-rank definition the
+    /// histogram targets.
+    fn oracle(samples: &[f64], q: f64) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let target = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[target - 1]
+    }
+
+    /// The tentpole's histogram contract: interpolated quantiles match
+    /// the sort oracle to within one bucket width, across magnitudes
+    /// from sub-microsecond latencies to large counts.
+    #[test]
+    fn quantile_matches_sort_oracle_within_one_bucket() {
+        prop_check("hist-vs-oracle", 40, |g: &mut Gen| {
+            let n = g.usize_in(1, 400);
+            let scale = 10f64.powi(g.usize_in(0, 9) as i32 - 7);
+            let samples: Vec<f64> =
+                (0..n).map(|_| g.f64_in(0.01, 100.0) * scale).collect();
+            let h = Histogram::new(Unit::Seconds);
+            for &v in &samples {
+                h.observe(v);
+            }
+            for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let want = oracle(&samples, q);
+                let got = h.quantile(q);
+                let tol = want.abs() * RELATIVE_BUCKET_WIDTH + BUCKET_LO;
+                assert!(
+                    (got - want).abs() <= tol,
+                    "q={q}: hist {got} vs oracle {want} (tol {tol}, n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn exact_moments_and_edges() {
+        let h = Histogram::new(Unit::Count);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        for v in [3.0, 1.0, 2.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 6.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 3.0);
+        // quantiles are clamped to the observed range
+        assert!(h.quantile(1.0) <= 3.0);
+        assert!(h.quantile(0.0) >= 1.0);
+    }
+
+    /// Underflow and overflow clamp into the end buckets instead of
+    /// being dropped, and quantiles stay within the observed range.
+    #[test]
+    fn clamps_out_of_range_values() {
+        let h = Histogram::new(Unit::Count);
+        h.observe(0.0);
+        h.observe(-5.0);
+        h.observe(1e300);
+        assert_eq!(h.count(), 3);
+        let b = h.nonzero_buckets();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].0, 0);
+        assert_eq!(b[0].1, 2);
+        assert_eq!(b[1].0, BUCKETS - 1);
+        assert!(h.quantile(1.0) <= 1e300);
+    }
+
+    #[test]
+    fn bucket_edges_are_geometric() {
+        assert_eq!(bucket_lower(0), 0.0);
+        for i in 1..BUCKETS {
+            let w = bucket_upper(i) / bucket_lower(i);
+            assert!((w - BUCKET_RATIO).abs() < 1e-12);
+        }
+    }
+}

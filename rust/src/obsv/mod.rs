@@ -1,0 +1,549 @@
+//! Repo-wide telemetry: a metrics registry, phase-span tracing, and
+//! exporters — the observability layer ROADMAP item 2 needs before
+//! anything listens on a socket.
+//!
+//! Three pillars:
+//!
+//! 1. **Metrics registry** ([`Registry`]): process-global, lock-light
+//!    named counters, gauges, and log-scale latency [`Histogram`]s
+//!    (one percentile implementation for the whole tree — see
+//!    [`hist`]). Record calls are free functions ([`counter_add`],
+//!    [`gauge_add`], [`observe`]) resolving metrics by name: atomics
+//!    on the hot path, no allocation per observation.
+//! 2. **Phase-span tracing** ([`span`], [`SpanGuard`]): RAII guards
+//!    that nest (fit → protocol phase → collective), feeding a bounded
+//!    ring-buffer journal with monotonic timestamps and structured
+//!    fields. The cluster simulator, the three parallel protocols,
+//!    distributed training, the serve loop, and the linalg pool
+//!    dispatch all record here.
+//! 3. **Exporters** ([`TelemetrySnapshot`]): deterministic JSON
+//!    (stable key order, test-pinnable) and Prometheus text, surfaced
+//!    as `pgpr stats` and the `--telemetry-out` flags.
+//!
+//! ## Enablement
+//!
+//! Telemetry is on by default; `PGPR_TELEMETRY=0` disables it, making
+//! every record call a branch on one relaxed atomic load (the
+//! disabled-mode overhead rides inside linalg_bench's pooled-vs-serial
+//! ≤1.10× gate, which measures kernels with the record sites inlined).
+//! [`set_enabled`] is the programmatic override.
+//!
+//! ## Scoped registries (tests)
+//!
+//! `cargo test` runs threads concurrently, so assertions against the
+//! process-global registry would race. [`Registry::install`] pushes a
+//! fresh registry as the *calling thread's* recorder (RAII guard);
+//! with the serial cluster executor every record lands there, giving
+//! deterministic, isolated telemetry — the chaos snapshot pin in
+//! `tests/integration_faults.rs` replays a faulted run twice into two
+//! scoped registries and asserts bitwise-equal JSON.
+
+pub mod hist;
+pub mod snapshot;
+pub mod span;
+
+pub use hist::{Histogram, Unit, RELATIVE_BUCKET_WIDTH};
+pub use snapshot::{HistSnapshot, SnapshotMode, SpanNode, TelemetrySnapshot};
+pub use span::{FieldValue, Parent, SpanGuard};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{
+    AtomicI64, AtomicU64, AtomicU8, AtomicUsize, Ordering::Relaxed,
+};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// The single hot-path gate: ON iff the global flag is on or any
+/// scoped registry is installed anywhere in the process.
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+static GLOBAL_ON: AtomicU8 = AtomicU8::new(UNINIT);
+static SCOPES: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether any recording can happen: one relaxed load in the steady
+/// state (the disabled-mode contract every record site branches on).
+#[inline]
+pub fn enabled() -> bool {
+    match ACTIVE.load(Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    recompute_active()
+}
+
+/// Resolve `GLOBAL_ON` from `PGPR_TELEMETRY` exactly once (default
+/// on; `0` disables). Needed by every recompute, not just the first
+/// `enabled()` call: a scope guard dropping before any record call
+/// must not freeze `ACTIVE` to OFF with the env never consulted.
+fn ensure_global_init() {
+    if GLOBAL_ON.load(Relaxed) == UNINIT {
+        let on =
+            !matches!(std::env::var("PGPR_TELEMETRY").as_deref(), Ok("0"));
+        let _ = GLOBAL_ON.compare_exchange(
+            UNINIT,
+            if on { ON } else { OFF },
+            Relaxed,
+            Relaxed,
+        );
+    }
+}
+
+fn recompute_active() -> bool {
+    ensure_global_init();
+    let a = GLOBAL_ON.load(Relaxed) == ON || SCOPES.load(Relaxed) > 0;
+    ACTIVE.store(if a { ON } else { OFF }, Relaxed);
+    a
+}
+
+/// Programmatic override of the `PGPR_TELEMETRY` gate (benches use it
+/// to honor `--telemetry-out` regardless of the environment).
+pub fn set_enabled(on: bool) {
+    GLOBAL_ON.store(if on { ON } else { OFF }, Relaxed);
+    recompute_active();
+}
+
+/// The telemetry registry: named metrics plus the span journal.
+///
+/// One process-global instance backs normal operation ([`global`]);
+/// tests install fresh instances per thread via [`Registry::install`].
+pub struct Registry {
+    epoch: Instant,
+    counters: RwLock<HashMap<String, AtomicU64>>,
+    gauges: RwLock<HashMap<String, AtomicI64>>,
+    hists: RwLock<HashMap<String, Histogram>>,
+    journal: span::Journal,
+    span_seq: AtomicU64,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    /// Fresh empty registry with its own monotonic epoch.
+    pub fn new() -> Registry {
+        Registry {
+            epoch: Instant::now(),
+            counters: RwLock::new(HashMap::new()),
+            gauges: RwLock::new(HashMap::new()),
+            hists: RwLock::new(HashMap::new()),
+            journal: span::Journal::new(),
+            span_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Install `self` as the calling thread's recorder until the guard
+    /// drops. Forces recording on for this thread even when
+    /// `PGPR_TELEMETRY=0` — the isolation mechanism every telemetry
+    /// test uses.
+    pub fn install(self: &Arc<Registry>) -> ScopeGuard {
+        SCOPE.with(|s| s.borrow_mut().push(self.clone()));
+        SCOPES.fetch_add(1, Relaxed);
+        recompute_active();
+        ScopeGuard {
+            _not_send: std::marker::PhantomData,
+        }
+    }
+
+    /// Monotonic nanoseconds since this registry's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub(crate) fn next_span_id(&self) -> u64 {
+        self.span_seq.fetch_add(1, Relaxed) + 1
+    }
+
+    pub(crate) fn journal(&self) -> &span::Journal {
+        &self.journal
+    }
+
+    /// Add to a named counter.
+    pub fn counter_add(&self, name: &str, v: u64) {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            c.fetch_add(v, Relaxed);
+            return;
+        }
+        self.counters
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(v, Relaxed);
+    }
+
+    /// Current value of a counter (0 if never touched).
+    pub fn counter_get(&self, name: &str) -> u64 {
+        self.counters
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Add a (possibly negative) delta to a named gauge.
+    pub fn gauge_add(&self, name: &str, delta: i64) {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            g.fetch_add(delta, Relaxed);
+            return;
+        }
+        self.gauges
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .fetch_add(delta, Relaxed);
+    }
+
+    /// Set a named gauge.
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            g.store(v, Relaxed);
+            return;
+        }
+        self.gauges
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| AtomicI64::new(0))
+            .store(v, Relaxed);
+    }
+
+    /// Current value of a gauge (0 if never touched).
+    pub fn gauge_get(&self, name: &str) -> i64 {
+        self.gauges
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|g| g.load(Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Record a value into a named histogram (created with `unit` on
+    /// first use).
+    pub fn observe(&self, name: &str, unit: Unit, v: f64) {
+        if let Some(h) = self.hists.read().unwrap().get(name) {
+            h.observe(v);
+            return;
+        }
+        self.hists
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(unit))
+            .observe(v);
+    }
+
+    /// Interpolated quantile of a named histogram, `None` if absent.
+    pub fn hist_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.hists.read().unwrap().get(name).map(|h| h.quantile(q))
+    }
+
+    pub(crate) fn counters_view<R>(
+        &self,
+        f: impl FnOnce(&HashMap<String, AtomicU64>) -> R,
+    ) -> R {
+        f(&self.counters.read().unwrap())
+    }
+
+    pub(crate) fn gauges_view<R>(
+        &self,
+        f: impl FnOnce(&HashMap<String, AtomicI64>) -> R,
+    ) -> R {
+        f(&self.gauges.read().unwrap())
+    }
+
+    pub(crate) fn hists_view<R>(
+        &self,
+        f: impl FnOnce(&HashMap<String, Histogram>) -> R,
+    ) -> R {
+        f(&self.hists.read().unwrap())
+    }
+}
+
+/// RAII guard from [`Registry::install`]; restores the previous
+/// recorder on drop. Deliberately `!Send`.
+pub struct ScopeGuard {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        SCOPE.with(|s| {
+            s.borrow_mut().pop();
+        });
+        SCOPES.fetch_sub(1, Relaxed);
+        recompute_active();
+    }
+}
+
+thread_local! {
+    static SCOPE: RefCell<Vec<Arc<Registry>>> = const { RefCell::new(Vec::new()) };
+    static LABEL_SCRATCH: RefCell<String> = const { RefCell::new(String::new()) };
+}
+
+static GLOBAL: OnceLock<Arc<Registry>> = OnceLock::new();
+
+/// The process-global registry (created on first use).
+pub fn global() -> &'static Arc<Registry> {
+    GLOBAL.get_or_init(|| Arc::new(Registry::new()))
+}
+
+/// The registry that should receive a record from this thread:
+/// innermost scoped registry first, else the global one when the
+/// `PGPR_TELEMETRY` gate is on, else `None`.
+pub(crate) fn recorder_arc() -> Option<Arc<Registry>> {
+    if !enabled() {
+        return None;
+    }
+    if let Some(r) = SCOPE.with(|s| s.borrow().last().cloned()) {
+        return Some(r);
+    }
+    if GLOBAL_ON.load(Relaxed) == ON {
+        return Some(global().clone());
+    }
+    None
+}
+
+fn with_recorder<R>(f: impl FnOnce(&Registry) -> R) -> Option<R> {
+    if !enabled() {
+        return None;
+    }
+    let scoped = SCOPE.with(|s| s.borrow().last().cloned());
+    match scoped {
+        Some(r) => Some(f(&r)),
+        None if GLOBAL_ON.load(Relaxed) == ON => Some(f(global())),
+        None => None,
+    }
+}
+
+/// Add to a named counter on the active recorder (no-op when off).
+#[inline]
+pub fn counter_add(name: &str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = with_recorder(|r| r.counter_add(name, v));
+}
+
+/// Add to the counter `"{name}.{label}"` — method-labeled request
+/// counters compose the key in a thread-local scratch buffer, so the
+/// steady state allocates nothing.
+#[inline]
+pub fn counter_add_labeled(name: &str, label: &str, v: u64) {
+    if !enabled() {
+        return;
+    }
+    LABEL_SCRATCH.with(|k| {
+        let mut k = k.borrow_mut();
+        k.clear();
+        k.push_str(name);
+        k.push('.');
+        k.push_str(label);
+        let _ = with_recorder(|r| r.counter_add(&k, v));
+    });
+}
+
+/// Add a delta to a named gauge on the active recorder.
+#[inline]
+pub fn gauge_add(name: &str, delta: i64) {
+    if !enabled() {
+        return;
+    }
+    let _ = with_recorder(|r| r.gauge_add(name, delta));
+}
+
+/// Set a named gauge on the active recorder.
+#[inline]
+pub fn gauge_set(name: &str, v: i64) {
+    if !enabled() {
+        return;
+    }
+    let _ = with_recorder(|r| r.gauge_set(name, v));
+}
+
+/// Record into a named histogram on the active recorder.
+#[inline]
+pub fn observe(name: &str, unit: Unit, v: f64) {
+    if !enabled() {
+        return;
+    }
+    let _ = with_recorder(|r| r.observe(name, unit, v));
+}
+
+/// Open an RAII span named `name` (no-op shell when off). Fields
+/// attach builder-style: `obsv::span("protocol.pPITC").with_u64("machines", m)`.
+pub fn span(name: &'static str) -> SpanGuard {
+    match recorder_arc() {
+        Some(reg) => SpanGuard::open(reg, name),
+        None => SpanGuard::disabled(),
+    }
+}
+
+/// Monotonic nanoseconds since the active recorder's epoch (0 when
+/// off). Pairs with [`emit_span_at`] for non-RAII-shaped spans.
+pub fn now_ns() -> u64 {
+    with_recorder(|r| r.now_ns()).unwrap_or(0)
+}
+
+/// Record an already-completed span with explicit times and parent;
+/// returns its id (0 when off) for use as [`Parent::Explicit`] by
+/// later events — how `Cluster::phase` nests the collective events
+/// that happened inside the phase it is sealing.
+pub fn emit_span_at(
+    name: &str,
+    start_ns: u64,
+    end_ns: u64,
+    parent: Parent,
+    fields: Vec<(&'static str, FieldValue)>,
+) -> u64 {
+    match recorder_arc() {
+        None => 0,
+        Some(reg) => {
+            let id = reg.next_span_id();
+            let parent = match parent {
+                Parent::Current => span::current_parent(),
+                Parent::Explicit(p) => p,
+                Parent::Root => 0,
+            };
+            reg.journal().push(span::SpanRecord {
+                id,
+                parent,
+                name: name.to_string(),
+                start_ns,
+                end_ns,
+                fields,
+            });
+            id
+        }
+    }
+}
+
+/// Snapshot the active recorder (empty snapshot when off).
+pub fn snapshot(mode: SnapshotMode) -> TelemetrySnapshot {
+    match recorder_arc() {
+        Some(r) => r.snapshot(mode),
+        None => TelemetrySnapshot::empty(mode),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Counters, gauges, hists, and spans land in a scoped registry
+    /// and render to stable-key-order JSON.
+    #[test]
+    fn scoped_registry_records_and_snapshots() {
+        let reg = Arc::new(Registry::new());
+        let _g = reg.install();
+        counter_add("test.counter", 2);
+        counter_add("test.counter", 3);
+        counter_add_labeled("test.requests", "pPITC", 4);
+        gauge_add("test.depth", 5);
+        gauge_add("test.depth", -2);
+        observe("test.rows", Unit::Count, 8.0);
+        {
+            let _outer = span("outer").with_u64("m", 4);
+            let _inner = span("inner");
+        }
+        let snap = reg.snapshot(SnapshotMode::Full);
+        assert_eq!(snap.counters["test.counter"], 5);
+        assert_eq!(snap.counters["test.requests.pPITC"], 4);
+        assert_eq!(snap.gauges["test.depth"], 3);
+        assert_eq!(snap.hists["test.rows"].count, 1);
+        assert_eq!(snap.spans.len(), 1);
+        assert_eq!(snap.spans[0].name, "outer");
+        assert_eq!(snap.spans[0].children.len(), 1);
+        assert_eq!(snap.spans[0].children[0].name, "inner");
+        let js = snap.to_json().to_string_compact();
+        assert!(js.contains("\"pgpr-telemetry/1\""));
+        let parsed = crate::util::json::Json::parse(&js).unwrap();
+        assert!(parsed.get("counters").is_some());
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("pgpr_test_counter 5"));
+        assert!(prom.contains("# TYPE pgpr_test_depth gauge"));
+        assert!(prom.contains("pgpr_test_rows_count 1"));
+    }
+
+    /// Deterministic mode drops measured-time content: seconds-unit
+    /// histograms, span timestamps, and F64 fields.
+    #[test]
+    fn deterministic_mode_drops_measured_time() {
+        let reg = Arc::new(Registry::new());
+        let _g = reg.install();
+        observe("t.lat", Unit::Seconds, 0.25);
+        observe("t.rows", Unit::Count, 3.0);
+        {
+            let _s = span("p").with_u64("bytes", 7).with_f64("secs", 0.5);
+        }
+        let det = reg.snapshot(SnapshotMode::Deterministic);
+        assert!(!det.hists.contains_key("t.lat"));
+        assert!(det.hists.contains_key("t.rows"));
+        assert_eq!(det.spans.len(), 1);
+        assert!(det.spans[0].start_ns.is_none());
+        assert!(det.spans[0].dur_ns.is_none());
+        let keys: Vec<&str> =
+            det.spans[0].fields.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["bytes"]);
+        let full = reg.snapshot(SnapshotMode::Full);
+        assert!(full.hists.contains_key("t.lat"));
+        assert!(full.spans[0].dur_ns.is_some());
+    }
+
+    /// `emit_span_at` re-parents: events emitted after their synthetic
+    /// parent nest under it (the `Cluster::phase` shape).
+    #[test]
+    fn explicit_parent_nests_events() {
+        let reg = Arc::new(Registry::new());
+        let _g = reg.install();
+        let _outer = span("protocol");
+        let t0 = now_ns();
+        let pid = emit_span_at("phase.x", t0, now_ns(), Parent::Current, vec![]);
+        emit_span_at(
+            "collective.reduce",
+            t0,
+            t0,
+            Parent::Explicit(pid),
+            vec![("bytes", FieldValue::U64(64))],
+        );
+        drop(_outer);
+        let snap = reg.snapshot(SnapshotMode::Deterministic);
+        assert_eq!(snap.spans.len(), 1);
+        let proto = &snap.spans[0];
+        assert_eq!(proto.name, "protocol");
+        assert_eq!(proto.children.len(), 1);
+        let phase = &proto.children[0];
+        assert_eq!(phase.name, "phase.x");
+        assert_eq!(phase.children[0].name, "collective.reduce");
+    }
+
+    /// The scope guard restores the previous recorder, and nested
+    /// scopes shadow outer ones.
+    #[test]
+    fn scopes_nest_and_restore() {
+        let a = Arc::new(Registry::new());
+        let b = Arc::new(Registry::new());
+        let _ga = a.install();
+        counter_add("n.c", 1);
+        {
+            let _gb = b.install();
+            counter_add("n.c", 10);
+        }
+        counter_add("n.c", 1);
+        assert_eq!(a.counter_get("n.c"), 2);
+        assert_eq!(b.counter_get("n.c"), 10);
+    }
+}

@@ -1,0 +1,337 @@
+//! Snapshot + exporters: the [`TelemetrySnapshot`] API, its
+//! deterministic JSON rendering (stable key order via [`crate::util::json`],
+//! suitable for test pinning), and the Prometheus text format.
+//!
+//! Two modes: [`SnapshotMode::Full`] keeps everything; (timestamps,
+//! latency histograms, measured-seconds fields), while
+//! [`SnapshotMode::Deterministic`] keeps only what a seeded replay
+//! reproduces bitwise — counters, gauges, count-unit histograms, and
+//! the span *tree* (names, nesting, integer/string fields) without
+//! timestamps. `tests/integration_faults.rs` pins a chaos run's
+//! deterministic snapshot across two replays.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::hist::{Histogram, Unit};
+use super::span::{FieldValue, SpanRecord};
+use super::Registry;
+use crate::util::json::{obj, Json};
+
+/// What survives into a snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotMode {
+    /// Everything, including measured times.
+    Full,
+    /// Only seeded-replay-stable content (for bitwise pinning).
+    Deterministic,
+}
+
+impl SnapshotMode {
+    fn name(self) -> &'static str {
+        match self {
+            SnapshotMode::Full => "full",
+            SnapshotMode::Deterministic => "deterministic",
+        }
+    }
+}
+
+/// Point-in-time view of one histogram.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    /// Unit name (`seconds` / `count`).
+    pub unit: &'static str,
+    /// Observation count.
+    pub count: u64,
+    /// Exact sum.
+    pub sum: f64,
+    /// Exact minimum.
+    pub min: f64,
+    /// Exact maximum.
+    pub max: f64,
+    /// Interpolated 50th percentile.
+    pub p50: f64,
+    /// Interpolated 95th percentile.
+    pub p95: f64,
+    /// Interpolated 99th percentile.
+    pub p99: f64,
+    /// Non-empty `(bucket index, count)` pairs.
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistSnapshot {
+    fn of(h: &Histogram) -> HistSnapshot {
+        HistSnapshot {
+            unit: h.unit().name(),
+            count: h.count(),
+            sum: h.sum(),
+            min: h.min(),
+            max: h.max(),
+            p50: h.quantile(0.50),
+            p95: h.quantile(0.95),
+            p99: h.quantile(0.99),
+            buckets: h.nonzero_buckets(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("unit", Json::from(self.unit)),
+            ("count", Json::from(self.count as usize)),
+            ("sum", Json::from(self.sum)),
+            ("min", Json::from(self.min)),
+            ("max", Json::from(self.max)),
+            ("p50", Json::from(self.p50)),
+            ("p95", Json::from(self.p95)),
+            ("p99", Json::from(self.p99)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(i, c)| {
+                            Json::Arr(vec![Json::from(i), Json::from(c as usize)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One node of the reconstructed span tree. Children appear in journal
+/// order; raw span ids are never exported.
+#[derive(Clone, Debug)]
+pub struct SpanNode {
+    /// Span name.
+    pub name: String,
+    /// Start (ns since registry epoch); `None` in deterministic mode.
+    pub start_ns: Option<u64>,
+    /// Duration in ns; `None` in deterministic mode.
+    pub dur_ns: Option<u64>,
+    /// Structured fields (deterministic mode drops `F64` fields).
+    pub fields: Vec<(String, Json)>,
+    /// Nested child spans.
+    pub children: Vec<SpanNode>,
+}
+
+impl SpanNode {
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("name", Json::from(self.name.as_str()))];
+        if let Some(s) = self.start_ns {
+            pairs.push(("start_ns", Json::from(s as usize)));
+        }
+        if let Some(d) = self.dur_ns {
+            pairs.push(("dur_ns", Json::from(d as usize)));
+        }
+        if !self.fields.is_empty() {
+            let mut f = BTreeMap::new();
+            for (k, v) in &self.fields {
+                f.insert(k.clone(), v.clone());
+            }
+            pairs.push(("fields", Json::Obj(f)));
+        }
+        if !self.children.is_empty() {
+            pairs.push((
+                "children",
+                Json::Arr(self.children.iter().map(SpanNode::to_json).collect()),
+            ));
+        }
+        obj(pairs)
+    }
+}
+
+/// A point-in-time copy of a registry: what `pgpr stats`, the
+/// `--telemetry-out` flags, and the future socket front-end serve.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    /// Mode this snapshot was taken in.
+    pub mode: SnapshotMode,
+    /// Monotonic counters by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauges by name.
+    pub gauges: BTreeMap<String, i64>,
+    /// Histograms by name.
+    pub hists: BTreeMap<String, HistSnapshot>,
+    /// Root spans of the reconstructed tree, journal order.
+    pub spans: Vec<SpanNode>,
+    /// Spans evicted from the bounded journal.
+    pub dropped_spans: u64,
+}
+
+impl TelemetrySnapshot {
+    /// An empty snapshot (what you get with telemetry disabled).
+    pub fn empty(mode: SnapshotMode) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            mode,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+            spans: Vec::new(),
+            dropped_spans: 0,
+        }
+    }
+
+    /// Stable-key-order JSON document (`pgpr-telemetry/1`).
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v as usize)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::from(v as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        obj(vec![
+            ("schema", Json::from("pgpr-telemetry/1")),
+            ("mode", Json::from(self.mode.name())),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(SpanNode::to_json).collect()),
+            ),
+            ("dropped_spans", Json::from(self.dropped_spans as usize)),
+        ])
+    }
+
+    /// Prometheus text exposition: counters and gauges as-is,
+    /// histograms as summaries (`{quantile="…"}`, `_sum`, `_count`).
+    /// Metric names are prefixed `pgpr_` with non-alphanumerics mapped
+    /// to `_`.
+    pub fn to_prometheus(&self) -> String {
+        fn mangle(name: &str) -> String {
+            let mut m = String::with_capacity(name.len() + 5);
+            m.push_str("pgpr_");
+            for ch in name.chars() {
+                m.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+            }
+            m
+        }
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let m = mangle(name);
+            out.push_str(&format!("# TYPE {m} counter\n{m} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let m = mangle(name);
+            out.push_str(&format!("# TYPE {m} gauge\n{m} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            let m = mangle(name);
+            out.push_str(&format!("# TYPE {m} summary\n"));
+            for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+                out.push_str(&format!("{m}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("{m}_sum {}\n{m}_count {}\n", h.sum, h.count));
+        }
+        out
+    }
+}
+
+fn field_to_json(v: &FieldValue, mode: SnapshotMode) -> Option<Json> {
+    match v {
+        FieldValue::U64(u) => Some(Json::from(*u as usize)),
+        FieldValue::Str(s) => Some(Json::from(s.as_str())),
+        FieldValue::F64(f) => match mode {
+            SnapshotMode::Full => Some(Json::from(*f)),
+            SnapshotMode::Deterministic => None,
+        },
+    }
+}
+
+fn build_tree(records: &[SpanRecord], mode: SnapshotMode) -> Vec<SpanNode> {
+    let ids: HashSet<u64> = records.iter().map(|r| r.id).collect();
+    let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, r) in records.iter().enumerate() {
+        if r.parent != 0 && ids.contains(&r.parent) {
+            children.entry(r.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    fn build(
+        i: usize,
+        records: &[SpanRecord],
+        children: &HashMap<u64, Vec<usize>>,
+        mode: SnapshotMode,
+    ) -> SpanNode {
+        let r = &records[i];
+        let kids = children
+            .get(&r.id)
+            .map(|ks| {
+                ks.iter().map(|&k| build(k, records, children, mode)).collect()
+            })
+            .unwrap_or_default();
+        let (start_ns, dur_ns) = match mode {
+            SnapshotMode::Full => {
+                (Some(r.start_ns), Some(r.end_ns.saturating_sub(r.start_ns)))
+            }
+            SnapshotMode::Deterministic => (None, None),
+        };
+        SpanNode {
+            name: r.name.clone(),
+            start_ns,
+            dur_ns,
+            fields: r
+                .fields
+                .iter()
+                .filter_map(|(k, v)| {
+                    field_to_json(v, mode).map(|j| (k.to_string(), j))
+                })
+                .collect(),
+            children: kids,
+        }
+    }
+    roots
+        .into_iter()
+        .map(|i| build(i, records, &children, mode))
+        .collect()
+}
+
+impl Registry {
+    /// Take a [`TelemetrySnapshot`] of everything recorded so far.
+    pub fn snapshot(&self, mode: SnapshotMode) -> TelemetrySnapshot {
+        let counters = self
+            .counters_view(|m| {
+                m.iter()
+                    .map(|(k, v)| {
+                        (k.clone(), v.load(std::sync::atomic::Ordering::Relaxed))
+                    })
+                    .collect::<BTreeMap<_, _>>()
+            });
+        let gauges = self.gauges_view(|m| {
+            m.iter()
+                .map(|(k, v)| {
+                    (k.clone(), v.load(std::sync::atomic::Ordering::Relaxed))
+                })
+                .collect::<BTreeMap<_, _>>()
+        });
+        let hists = self.hists_view(|m| {
+            m.iter()
+                .filter(|(_, h)| {
+                    mode == SnapshotMode::Full || h.unit() != Unit::Seconds
+                })
+                .map(|(k, h)| (k.clone(), HistSnapshot::of(h)))
+                .collect::<BTreeMap<_, _>>()
+        });
+        let (records, dropped) = self.journal().contents();
+        TelemetrySnapshot {
+            mode,
+            counters,
+            gauges,
+            hists,
+            spans: build_tree(&records, mode),
+            dropped_spans: dropped,
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Phase-span tracing: RAII guards feeding a bounded ring-buffer
+//! journal.
+//!
+//! A [`SpanGuard`] (from [`crate::obsv::span`]) notes the monotonic
+//! start time, pushes itself on a thread-local parent stack, and on
+//! drop appends one [`SpanRecord`] to the recording registry's
+//! journal. Guards therefore nest naturally: fit → protocol phase →
+//! collective → linalg call. The cluster simulator's phases are not
+//! RAII-shaped (they are end-marks), so [`crate::obsv::emit_span_at`]
+//! also accepts explicit start/end times and an explicit parent,
+//! letting `Cluster::phase` synthesize the span covering
+//! `[previous mark, now]` and re-parent the collective events that
+//! happened inside it.
+//!
+//! The journal is a fixed-capacity ring ([`JOURNAL_CAP`]): when full,
+//! the oldest record is dropped (and counted), never the newest —
+//! snapshots stay bounded under unbounded serve loops. Span ids are
+//! per-registry sequence numbers and never leave the process: the
+//! snapshot exports the reconstructed *tree*, which is what makes two
+//! seeded chaos replays bitwise-comparable.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::Registry;
+
+/// Structured span field value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FieldValue {
+    /// Deterministic integer payloads (bytes, machines, fault counts).
+    U64(u64),
+    /// Measured floating payloads (seconds) — dropped by the
+    /// deterministic snapshot mode.
+    F64(f64),
+    /// Small string payloads (method names, phase labels).
+    Str(String),
+}
+
+/// Parent selection for [`crate::obsv::emit_span_at`].
+#[derive(Clone, Copy, Debug)]
+pub enum Parent {
+    /// The calling thread's innermost open [`SpanGuard`] (root if none).
+    Current,
+    /// An explicit span id previously returned by `emit_span_at`.
+    Explicit(u64),
+    /// Force a root span.
+    Root,
+}
+
+/// One completed span in the journal.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Per-registry sequence number (never exported).
+    pub id: u64,
+    /// Parent span id, 0 for roots.
+    pub parent: u64,
+    /// Span name, e.g. `protocol.pPITC` or `phase.local_summary`.
+    pub name: String,
+    /// Monotonic nanoseconds since the registry epoch.
+    pub start_ns: u64,
+    /// Monotonic nanoseconds since the registry epoch.
+    pub end_ns: u64,
+    /// Structured fields attached at creation.
+    pub fields: Vec<(&'static str, FieldValue)>,
+}
+
+/// Journal capacity; the oldest records are evicted (and counted) past
+/// this.
+pub const JOURNAL_CAP: usize = 4096;
+
+/// Bounded ring buffer of completed spans.
+pub(crate) struct Journal {
+    inner: Mutex<JournalInner>,
+}
+
+struct JournalInner {
+    records: VecDeque<SpanRecord>,
+    dropped: u64,
+}
+
+impl Journal {
+    pub(crate) fn new() -> Journal {
+        Journal {
+            inner: Mutex::new(JournalInner {
+                records: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub(crate) fn push(&self, rec: SpanRecord) {
+        let mut j = self.inner.lock().unwrap();
+        if j.records.len() >= JOURNAL_CAP {
+            j.records.pop_front();
+            j.dropped += 1;
+        }
+        j.records.push_back(rec);
+    }
+
+    /// Copy out the journal (records in insertion order, drop count).
+    pub(crate) fn contents(&self) -> (Vec<SpanRecord>, u64) {
+        let j = self.inner.lock().unwrap();
+        (j.records.iter().cloned().collect(), j.dropped)
+    }
+}
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+pub(crate) fn current_parent() -> u64 {
+    SPAN_STACK.with(|s| s.borrow().last().copied().unwrap_or(0))
+}
+
+/// RAII span: records `[creation, drop]` against the registry that was
+/// recording at creation time. A no-op shell when telemetry is off.
+pub struct SpanGuard {
+    data: Option<SpanData>,
+}
+
+struct SpanData {
+    reg: Arc<Registry>,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start_ns: u64,
+    fields: Vec<(&'static str, FieldValue)>,
+}
+
+impl SpanGuard {
+    pub(crate) fn disabled() -> SpanGuard {
+        SpanGuard { data: None }
+    }
+
+    pub(crate) fn open(reg: Arc<Registry>, name: &'static str) -> SpanGuard {
+        let id = reg.next_span_id();
+        let parent = current_parent();
+        SPAN_STACK.with(|s| s.borrow_mut().push(id));
+        let start_ns = reg.now_ns();
+        SpanGuard {
+            data: Some(SpanData {
+                reg,
+                id,
+                parent,
+                name,
+                start_ns,
+                fields: Vec::new(),
+            }),
+        }
+    }
+
+    /// Attach a deterministic integer field (builder-style).
+    pub fn with_u64(mut self, key: &'static str, v: u64) -> SpanGuard {
+        if let Some(d) = &mut self.data {
+            d.fields.push((key, FieldValue::U64(v)));
+        }
+        self
+    }
+
+    /// Attach a measured floating field (builder-style).
+    pub fn with_f64(mut self, key: &'static str, v: f64) -> SpanGuard {
+        if let Some(d) = &mut self.data {
+            d.fields.push((key, FieldValue::F64(v)));
+        }
+        self
+    }
+
+    /// Attach a string field (builder-style).
+    pub fn with_str(mut self, key: &'static str, v: &str) -> SpanGuard {
+        if let Some(d) = &mut self.data {
+            d.fields.push((key, FieldValue::Str(v.to_string())));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(d) = self.data.take() {
+            SPAN_STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                if s.last() == Some(&d.id) {
+                    s.pop();
+                } else {
+                    // out-of-order drop (moved guard): drop quietly
+                    s.retain(|&x| x != d.id);
+                }
+            });
+            let end_ns = d.reg.now_ns();
+            d.reg.journal().push(SpanRecord {
+                id: d.id,
+                parent: d.parent,
+                name: d.name.to_string(),
+                start_ns: d.start_ns,
+                end_ns,
+                fields: d.fields,
+            });
+        }
+    }
+}

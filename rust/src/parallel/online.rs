@@ -202,6 +202,9 @@ impl OnlineGp {
         let sctx = self.sctx.as_ref().expect("absorb before predict");
         let l_g = self.l_g.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
+        let _obsv_span = crate::obsv::span("protocol.online")
+            .with_str("variant", "pPITC")
+            .with_u64("machines", self.spec.machines as u64);
         let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let xu_m = xu.select_rows(&u_blocks[mid]);
@@ -227,6 +230,9 @@ impl OnlineGp {
         let sctx = self.sctx.as_ref().expect("absorb before predict");
         let l_g = self.l_g.as_ref().expect("absorb before predict");
         let y_mean = self.y_mean.unwrap();
+        let _obsv_span = crate::obsv::span("protocol.online")
+            .with_str("variant", "pPIC")
+            .with_u64("machines", self.spec.machines as u64);
         let mut cluster = self.spec.cluster();
         let preds: Vec<Prediction> = cluster.compute_all(|mid| {
             let (xm, ym, loc) =

@@ -241,6 +241,9 @@ pub fn run(
     let m = spec.machines;
     assert_eq!(d_blocks.len(), m);
     let u = xu.rows;
+    let _obsv_span = crate::obsv::span("protocol.pICF")
+        .with_u64("machines", m as u64)
+        .with_u64("rank", rank as u64);
     let mut cluster = spec.cluster();
     let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
 
@@ -484,6 +487,9 @@ pub fn try_run(
     let m = spec.machines;
     assert_eq!(d_blocks.len(), m);
     let u = xu.rows;
+    let _obsv_span = crate::obsv::span("protocol.pICF")
+        .with_u64("machines", m as u64)
+        .with_u64("rank", rank as u64);
     let mut cluster = spec.cluster();
     let y_mean = y.iter().sum::<f64>() / y.len().max(1) as f64;
     let mut db: Vec<Vec<usize>> = d_blocks.to_vec();

@@ -49,6 +49,9 @@ pub fn run(
     let u = xu.rows;
     assert!(n % m == 0 && u % m == 0, "Definition 1 needs m | n and m | u");
     let s = xs.rows;
+    let _obsv_span = crate::obsv::span("protocol.pPIC")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let mut cluster = spec.cluster();
     // Master-side block math shares the executor's pool (degrades to
     // serial inside node closures / under a serial executor).
@@ -143,6 +146,9 @@ pub fn run_with_partition(
     spec: &ClusterSpec,
 ) -> ProtocolOutput {
     let s = xs.rows;
+    let _obsv_span = crate::obsv::span("protocol.pPIC")
+        .with_u64("machines", d_blocks.len() as u64)
+        .with_u64("support", s as u64);
     let mut cluster = spec.cluster();
     let lctx = spec.exec.linalg_ctx();
     cluster.phase("partition");
@@ -215,6 +221,9 @@ pub fn try_run_with_partition(
     assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
     assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
     let s = xs.rows;
+    let _obsv_span = crate::obsv::span("protocol.pPIC")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let mut cluster = spec.cluster();
     let lctx = spec.exec.linalg_ctx();
     let d_row_bytes = f64_bytes(xd.cols + 1);

@@ -39,6 +39,9 @@ pub fn run(
     assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
     assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
     let s = xs.rows;
+    let _obsv_span = crate::obsv::span("protocol.pPITC")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let mut cluster = spec.cluster();
     // Master-side block math shares the executor's pool (degrades to
     // serial inside node closures / under a serial executor).
@@ -119,6 +122,9 @@ pub fn try_run(
     assert_eq!(d_blocks.len(), m, "d_blocks vs machines");
     assert_eq!(u_blocks.len(), m, "u_blocks vs machines");
     let s = xs.rows;
+    let _obsv_span = crate::obsv::span("protocol.pPITC")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let mut cluster = spec.cluster();
     let lctx = spec.exec.linalg_ctx();
     // rebalance payload: one data row is d coords + 1 target

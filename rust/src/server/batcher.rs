@@ -69,10 +69,27 @@ impl DynamicBatcher {
         };
         batch.ids.push(id);
         batch.xs.extend_from_slice(x);
+        if crate::obsv::enabled() {
+            crate::obsv::gauge_add("serve.queue_depth", 1);
+        }
         if batch.ids.len() >= self.max_batch {
-            slot.take()
+            let full = slot.take();
+            if let Some(b) = &full {
+                Self::note_drained(b.ids.len());
+            }
+            full
         } else {
             None
+        }
+    }
+
+    /// Flushed requests leave the queue: keep the
+    /// `serve.queue_depth` gauge honest (it mirrors
+    /// [`DynamicBatcher::pending`] whenever telemetry stays enabled
+    /// for the batcher's whole lifetime).
+    fn note_drained(rows: usize) {
+        if crate::obsv::enabled() {
+            crate::obsv::gauge_add("serve.queue_depth", -(rows as i64));
         }
     }
 
@@ -97,7 +114,9 @@ impl DynamicBatcher {
                 .as_ref()
                 .is_some_and(|b| now - b.oldest_arrival >= self.max_wait_s);
             if expired {
-                out.push(slot.take().unwrap());
+                let b = slot.take().unwrap();
+                Self::note_drained(b.ids.len());
+                out.push(b);
             }
         }
         out
@@ -105,7 +124,12 @@ impl DynamicBatcher {
 
     /// Flush everything (end of stream).
     pub fn flush_all(&mut self) -> Vec<Batch> {
-        self.open.iter_mut().filter_map(Option::take).collect()
+        let out: Vec<Batch> =
+            self.open.iter_mut().filter_map(Option::take).collect();
+        for b in &out {
+            Self::note_drained(b.ids.len());
+        }
+        out
     }
 
     /// Number of requests currently waiting.
@@ -251,5 +275,66 @@ mod tests {
     fn wrong_dim_rejected() {
         let mut b = DynamicBatcher::new(1, 2, 2, 1.0);
         b.push(0, 1, &[0.0], 0.0);
+    }
+
+    fn queue_depth(reg: &crate::obsv::Registry) -> i64 {
+        reg.gauge_get("serve.queue_depth")
+    }
+
+    /// The `serve.queue_depth` gauge mirrors [`DynamicBatcher::pending`]
+    /// through every drain path: it rises on push, falls by the batch
+    /// size on a size flush, falls on expiry, and returns to zero after
+    /// the end-of-stream drain — including across recycle() reuse.
+    #[test]
+    fn queue_depth_gauge_tracks_pending() {
+        use std::sync::Arc;
+        let reg = Arc::new(crate::obsv::Registry::new());
+        let _g = reg.install();
+        let mut b = DynamicBatcher::new(2, 1, 3, 0.5);
+
+        b.push(0, 0, &[0.0], 0.0);
+        b.push(1, 1, &[0.0], 0.0);
+        assert_eq!(queue_depth(&reg), 2);
+        assert_eq!(queue_depth(&reg), b.pending() as i64);
+
+        // size flush drains machine 0's three requests at once
+        b.push(0, 2, &[0.0], 0.1);
+        let full = b.push(0, 3, &[0.0], 0.1).expect("size flush");
+        assert_eq!(full.ids.len(), 3);
+        assert_eq!(queue_depth(&reg), 1);
+        assert_eq!(queue_depth(&reg), b.pending() as i64);
+
+        // recycle must not touch the gauge (the batch already drained)
+        b.recycle(full);
+        assert_eq!(queue_depth(&reg), 1);
+
+        // expiry drains machine 1
+        let expired = b.flush_expired(1.0);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(queue_depth(&reg), 0);
+
+        // end-of-stream drain from a refilled (recycled-buffer) state
+        b.push(0, 4, &[0.0], 2.0);
+        b.push(1, 5, &[0.0], 2.0);
+        assert_eq!(queue_depth(&reg), 2);
+        let rest = b.flush_all();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(queue_depth(&reg), 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    /// max_batch == 1 never holds a request: every push flushes
+    /// immediately, so the gauge reads zero at every observation point.
+    #[test]
+    fn queue_depth_gauge_honest_at_unit_batch() {
+        use std::sync::Arc;
+        let reg = Arc::new(crate::obsv::Registry::new());
+        let _g = reg.install();
+        let mut b = DynamicBatcher::new(2, 1, 1, 100.0);
+        for i in 0..4u64 {
+            let out = b.push((i % 2) as usize, i, &[0.0], i as f64);
+            assert!(out.is_some());
+            assert_eq!(queue_depth(&reg), 0, "push {i}");
+        }
     }
 }

@@ -549,6 +549,8 @@ fn run_serve_loop(
     batcher: &mut DynamicBatcher,
     execute: impl Fn(&[Batch], f64, &mut Vec<PredictResponse>),
 ) -> ServeReport {
+    let _obsv_span = crate::obsv::span("serve.stream")
+        .with_u64("requests", requests.len() as u64);
     let mut responses: Vec<PredictResponse> =
         Vec::with_capacity(requests.len());
     let mut batches = 0usize;
@@ -563,6 +565,14 @@ fn run_serve_loop(
         }
         batches += ready.len();
         batch_rows += ready.iter().map(|b| b.ids.len()).sum::<usize>();
+        if crate::obsv::enabled() {
+            crate::obsv::counter_add("serve.batches", ready.len() as u64);
+            for b in &ready {
+                crate::obsv::observe("serve.batch_rows",
+                                     crate::obsv::Unit::Count,
+                                     b.ids.len() as f64);
+            }
+        }
         execute(&ready, flush_time, responses);
         for b in ready {
             batcher.recycle(b);
@@ -586,6 +596,15 @@ fn run_serve_loop(
     handle(rest, end, batcher, &mut responses);
 
     responses.sort_by_key(|r| r.id);
+    if crate::obsv::enabled() {
+        crate::obsv::counter_add("serve.requests", requests.len() as u64);
+        crate::obsv::counter_add("serve.responses",
+                                 responses.len() as u64);
+        for r in &responses {
+            crate::obsv::observe("serve.latency_s",
+                                 crate::obsv::Unit::Seconds, r.latency_s);
+        }
+    }
     let latencies: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
     let wall_s = wall.elapsed();
     ServeReport {

@@ -61,6 +61,9 @@ pub fn nlml_and_grad_dist(
     assert_eq!(xd.rows, y.len(), "train: x/y length");
     let s = xs.rows;
     let p = hyp.dim() + 2;
+    let _obsv_span = crate::obsv::span("train.eval")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let lctx = spec.exec.linalg_ctx();
     let mut cluster = spec.cluster();
 
@@ -156,6 +159,9 @@ pub fn nlml_and_grad_dist_ft(
     assert_eq!(xd.rows, y.len(), "train: x/y length");
     let s = xs.rows;
     let p = hyp.dim() + 2;
+    let _obsv_span = crate::obsv::span("train.eval")
+        .with_u64("machines", m as u64)
+        .with_u64("support", s as u64);
     let lctx = spec.exec.linalg_ctx();
     let mut cluster = spec.cluster();
 

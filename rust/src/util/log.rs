@@ -12,17 +12,34 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // unset
 
+/// Parse a `PGPR_LOG` value: the level, plus the rejected string when
+/// the value is not one of the accepted set (callers warn once and
+/// fall back to Info — a typo like `PGPR_LOG=trace` must not silently
+/// become "info with no explanation").
+fn parse_level(val: Option<&str>) -> (u8, Option<&str>) {
+    match val {
+        Some("error") => (Level::Error as u8, None),
+        Some("warn") => (Level::Warn as u8, None),
+        Some("info") | None => (Level::Info as u8, None),
+        Some("debug") => (Level::Debug as u8, None),
+        Some(other) => (Level::Info as u8, Some(other)),
+    }
+}
+
 fn current() -> u8 {
     let l = LEVEL.load(Ordering::Relaxed);
     if l != u8::MAX {
         return l;
     }
-    let from_env = match std::env::var("PGPR_LOG").ok().as_deref() {
-        Some("error") => Level::Error as u8,
-        Some("warn") => Level::Warn as u8,
-        Some("debug") => Level::Debug as u8,
-        Some("info") | _ => Level::Info as u8,
-    };
+    let env = std::env::var("PGPR_LOG").ok();
+    let (from_env, rejected) = parse_level(env.as_deref());
+    if let Some(bad) = rejected {
+        // One-time: LEVEL is set below, so this branch never re-runs.
+        eprintln!(
+            "[pgpr WARN ] unrecognized PGPR_LOG value {bad:?} \
+             (accepted: error|warn|info|debug); defaulting to info"
+        );
+    }
     LEVEL.store(from_env, Ordering::Relaxed);
     from_env
 }
@@ -75,6 +92,25 @@ macro_rules! debug {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Accepted values map to their level; anything else is rejected
+    /// (named, so `current()` can warn) and falls back to Info.
+    #[test]
+    fn parse_level_rejects_typos() {
+        assert_eq!(parse_level(Some("error")), (Level::Error as u8, None));
+        assert_eq!(parse_level(Some("warn")), (Level::Warn as u8, None));
+        assert_eq!(parse_level(Some("info")), (Level::Info as u8, None));
+        assert_eq!(parse_level(Some("debug")), (Level::Debug as u8, None));
+        assert_eq!(parse_level(None), (Level::Info as u8, None));
+        assert_eq!(
+            parse_level(Some("trace")),
+            (Level::Info as u8, Some("trace"))
+        );
+        assert_eq!(
+            parse_level(Some("INFO")),
+            (Level::Info as u8, Some("INFO"))
+        );
+    }
 
     #[test]
     fn levels_ordered() {

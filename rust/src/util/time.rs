@@ -53,24 +53,34 @@ pub struct DurationStats {
 }
 
 impl DurationStats {
+    /// Summarize `samples`. `n`/`mean`/`min`/`max` are exact;
+    /// `p50`/`p95`/`p99` come from the shared telemetry histogram
+    /// ([`crate::obsv::Histogram`] — the tree's one percentile
+    /// implementation), so they match a sort-based oracle to within
+    /// one bucket width ([`crate::obsv::RELATIVE_BUCKET_WIDTH`], ≈19%
+    /// relative).
     pub fn from_samples(samples: &[f64]) -> Option<DurationStats> {
         if samples.is_empty() {
             return None;
         }
-        let mut s = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            let idx = (p * (s.len() - 1) as f64).round() as usize;
-            s[idx.min(s.len() - 1)]
-        };
+        let h = crate::obsv::Histogram::new(crate::obsv::Unit::Seconds);
+        let mut sum = 0.0;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        for &v in samples {
+            h.observe(v);
+            sum += v;
+            min = min.min(v);
+            max = max.max(v);
+        }
         Some(DurationStats {
-            n: s.len(),
-            mean: s.iter().sum::<f64>() / s.len() as f64,
-            min: s[0],
-            max: s[s.len() - 1],
-            p50: pct(0.50),
-            p95: pct(0.95),
-            p99: pct(0.99),
+            n: samples.len(),
+            mean: sum / samples.len() as f64,
+            min,
+            max,
+            p50: h.quantile(0.50),
+            p95: h.quantile(0.95),
+            p99: h.quantile(0.99),
         })
     }
 }
@@ -111,7 +121,12 @@ mod tests {
         assert_eq!(s.n, 3);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
-        assert_eq!(s.p50, 2.0);
+        // p50 is histogram-interpolated: exact to one bucket width
+        assert!(
+            (s.p50 - 2.0).abs() <= 2.0 * crate::obsv::RELATIVE_BUCKET_WIDTH,
+            "p50 {} vs 2.0",
+            s.p50
+        );
         assert!((s.mean - 2.0).abs() < 1e-12);
     }
 

@@ -20,9 +20,11 @@
 //!    return the typed error, under a watchdog that turns a deadlock
 //!    into a test failure.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use pgpr::cluster::{FaultPlan, MachinesLost};
+use pgpr::obsv::{Registry, SnapshotMode};
 use pgpr::data::partition::random_partition;
 use pgpr::kernel::SeArd;
 use pgpr::linalg::Mat;
@@ -263,6 +265,47 @@ fn chaos_runs_replay_bitwise() {
         assert_eq!(a.d_blocks, b.d_blocks, "{tag}: ownership");
         assert!(a.output.metrics.faults.deaths >= 1, "{tag}: death missing");
         assert!(!a.survivors.contains(&2), "{tag}: machine 2 must be dead");
+    }
+}
+
+/// Contract 2, telemetry side: the same seeded chaos plan exports a
+/// *bitwise-identical* deterministic telemetry snapshot on every
+/// replay. Each replay records into a fresh scoped [`Registry`];
+/// [`SnapshotMode::Deterministic`] drops measured time (span
+/// timestamps, seconds-unit histograms) so what remains — counters,
+/// span structure, traffic fields — must be a pure function of the
+/// seed.
+#[test]
+fn chaos_telemetry_snapshot_replays_bitwise() {
+    let m = 4;
+    let p = problem(m, 5, 77);
+    for proto in PROTOS {
+        let tag = proto.name();
+        let plan = || {
+            FaultPlan::seeded(0xC4A05)
+                .with_drops(0.15, 6)
+                .with_stragglers(0.3, 1e-4)
+                .with_timeout(1e-4, 2.0)
+                .kill(2, proto.kill_phases()[1])
+        };
+        let replay = || {
+            let reg = Arc::new(Registry::new());
+            let _scope = reg.install();
+            let spec = ClusterSpec::new(m).with_faults(plan());
+            proto.run_ft(&p, &spec)
+                .unwrap_or_else(|e| panic!("{tag}: replay errored: {e}"));
+            reg.snapshot(SnapshotMode::Deterministic)
+                .to_json()
+                .to_string_compact()
+        };
+        let a = replay();
+        let b = replay();
+        assert_eq!(a, b, "{tag}: deterministic snapshots must be bitwise \
+                          identical across replays");
+        assert!(a.contains("\"phase."),
+                "{tag}: snapshot missing phase spans: {a}");
+        assert!(a.contains("cluster.faults.deaths"),
+                "{tag}: snapshot missing death counter");
     }
 }
 

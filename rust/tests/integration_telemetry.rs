@@ -1,0 +1,171 @@
+//! End-to-end acceptance for the telemetry subsystem (ISSUE 8).
+//!
+//! One fit + predict + serve pass recorded into a scoped registry must
+//! yield a snapshot with:
+//!
+//! 1. nested phase spans under all three protocol spans
+//!    (`protocol.pPITC` / `protocol.pPIC` / `protocol.pICF`, each with
+//!    `phase.*` children carrying collective events),
+//! 2. per-method request counters (`api.requests.<Method>`),
+//! 3. a `serve.latency_s` histogram whose interpolated p50/p99 agree
+//!    with a sort-based oracle over the actual response latencies to
+//!    within one log-scale bucket width,
+//! 4. a `serve.queue_depth` gauge that has drained back to zero,
+//! 5. a Prometheus rendering that scrapes cleanly for the same names.
+//!
+//! The serve pass uses the *serial* executor so every record lands on
+//! this thread's scoped registry (thread-pool workers would record to
+//! the process-global one).
+
+use std::sync::Arc;
+
+use pgpr::api::{Gp, Method, PredictSpec};
+use pgpr::cluster::ParallelExecutor;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::Mat;
+use pgpr::obsv::hist::BUCKET_LO;
+use pgpr::obsv::{Registry, SnapshotMode, SpanNode, RELATIVE_BUCKET_WIDTH};
+use pgpr::server::{DynamicBatcher, PredictRequest, ServeReport};
+use pgpr::util::Pcg64;
+
+/// Depth-first search for a span by name anywhere in the tree.
+fn find<'a>(nodes: &'a [SpanNode], name: &str) -> Option<&'a SpanNode> {
+    for n in nodes {
+        if n.name == name {
+            return Some(n);
+        }
+        if let Some(hit) = find(&n.children, name) {
+            return Some(hit);
+        }
+    }
+    None
+}
+
+/// The recorded workload: fit + predict with each protocol, then a
+/// serve stream through the dynamic batcher on the serial executor.
+fn fit_predict_serve(m: usize, n: usize, s: usize, seed: u64) -> ServeReport {
+    let d = 2usize;
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(d, 1.0, 1.0, 0.05);
+    let xd = Mat::from_vec(n, d, rng.normals(n * d));
+    let y = rng.normals(n);
+    let u = m * 4;
+    let xu = Mat::from_vec(u, d, rng.normals(u * d));
+    let base = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(s)
+        .seed(seed);
+    for method in [Method::PPitc, Method::PPic, Method::PIcf] {
+        let gp = base.clone().method(method).fit().unwrap();
+        let out = gp.predict_full(&PredictSpec::new(xu.clone())).unwrap();
+        assert_eq!(out.prediction.mean.len(), u, "{}", method.name());
+    }
+    let model = base.serve().unwrap();
+    let requests: Vec<PredictRequest> = (0..16 * m)
+        .map(|i| PredictRequest {
+            id: i as u64,
+            x: rng.normals(d),
+            arrival_s: i as f64 * 1e-4,
+        })
+        .collect();
+    let mut batcher = DynamicBatcher::new(model.machines(), d, 4, 5e-4);
+    let exec = ParallelExecutor::serial();
+    model.serve_fast(&requests, &mut batcher, &exec)
+}
+
+#[test]
+fn fit_predict_serve_snapshot_is_complete() {
+    let m = 4usize;
+    let reg = Arc::new(Registry::new());
+    let report;
+    {
+        let _scope = reg.install();
+        report = fit_predict_serve(m, 48, 12, 7);
+    }
+    let snap = reg.snapshot(SnapshotMode::Full);
+
+    // 1. protocol spans, each with nested phase children that in turn
+    //    carry collective events.
+    for proto in ["protocol.pPITC", "protocol.pPIC", "protocol.pICF"] {
+        let node = find(&snap.spans, proto)
+            .unwrap_or_else(|| panic!("missing span {proto}"));
+        let phases: Vec<&SpanNode> = node
+            .children
+            .iter()
+            .filter(|c| c.name.starts_with("phase."))
+            .collect();
+        assert!(!phases.is_empty(), "{proto}: no phase.* children");
+        assert!(
+            phases.iter().any(|p| p
+                .children
+                .iter()
+                .any(|c| c.name.starts_with("collective."))),
+            "{proto}: no collective events under any phase"
+        );
+    }
+    assert!(find(&snap.spans, "serve.stream").is_some(),
+            "missing serve.stream span");
+
+    // 2. per-method request counters.
+    for method in ["pPITC", "pPIC", "pICF"] {
+        let key = format!("api.requests.{method}");
+        assert_eq!(snap.counters.get(&key).copied(), Some(1), "{key}");
+    }
+    assert!(snap.counters.get("cluster.runs").copied().unwrap_or(0) >= 3);
+
+    // 3. latency histogram vs the sort oracle over the real responses.
+    let h = snap.hists.get("serve.latency_s").expect("latency hist");
+    let mut lat: Vec<f64> =
+        report.responses.iter().map(|r| r.latency_s).collect();
+    lat.sort_by(f64::total_cmp);
+    assert_eq!(h.count as usize, lat.len(), "one record per response");
+    for (q, got) in [(0.50, h.p50), (0.99, h.p99)] {
+        let idx =
+            ((q * lat.len() as f64).ceil() as usize).clamp(1, lat.len()) - 1;
+        let want = lat[idx];
+        let tol = want.abs() * RELATIVE_BUCKET_WIDTH + BUCKET_LO;
+        assert!(
+            (got - want).abs() <= tol,
+            "p{}: hist {got} vs oracle {want} (tol {tol})",
+            (q * 100.0) as u32
+        );
+    }
+    assert_eq!(h.min, lat[0], "hist min is exact");
+    assert_eq!(h.max, lat[lat.len() - 1], "hist max is exact");
+
+    // 4. queue depth gauge drained back to zero.
+    assert_eq!(snap.gauges.get("serve.queue_depth").copied().unwrap_or(0), 0);
+
+    // 5. Prometheus text carries the same names, mangled.
+    let prom = snap.to_prometheus();
+    for needle in
+        ["pgpr_api_requests_pPITC", "pgpr_serve_latency_s", "pgpr_cluster_runs"]
+    {
+        assert!(prom.contains(needle), "prometheus missing {needle}:\n{prom}");
+    }
+
+    // JSON round-trip sanity: the export parses and declares schema v1.
+    let doc = pgpr::util::json::Json::parse(&snap.to_json().to_string_pretty())
+        .expect("snapshot JSON parses");
+    assert_eq!(doc.get("schema").unwrap().as_str().unwrap(),
+               "pgpr-telemetry/1");
+}
+
+/// The scoped run leaves nothing behind: a second empty registry
+/// installed afterwards snapshots clean, proving test isolation.
+#[test]
+fn scoped_registries_do_not_leak_between_runs() {
+    {
+        let reg = Arc::new(Registry::new());
+        let _scope = reg.install();
+        fit_predict_serve(2, 16, 6, 11);
+    }
+    let reg = Arc::new(Registry::new());
+    let _scope = reg.install();
+    let snap = reg.snapshot(SnapshotMode::Full);
+    assert!(snap.counters.is_empty(), "counters leaked: {:?}", snap.counters);
+    assert!(snap.spans.is_empty(), "spans leaked");
+    assert!(snap.hists.is_empty(), "hists leaked");
+}
