@@ -14,10 +14,7 @@ use pgpr::bench_support::linalg_bench::{run, LinalgBenchConfig};
 
 fn main() {
     // skip cargo-bench's --bench flag if present; first real arg = path
-    let out = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with('-'))
-        .unwrap_or_else(|| "BENCH_linalg.json".to_string());
+    let out = pgpr::cli::args::process_out_path("BENCH_linalg.json");
     let telemetry_out = pgpr::bench_support::telemetry_out_from_args();
     if telemetry_out.is_some() {
         pgpr::obsv::set_enabled(true);

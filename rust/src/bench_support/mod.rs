@@ -27,15 +27,13 @@ pub fn env_flag(name: &str) -> bool {
 }
 
 /// Telemetry snapshot destination for bench mains: the
-/// `--telemetry-out=PATH` argument (equals form only, so the mains'
+/// `--telemetry-out=PATH` argument (equals form only — via
+/// [`crate::cli::args::process_eq`] — so the mains'
 /// "first non-dash argument is the out path" scanning is untouched),
 /// falling back to the `PGPR_TELEMETRY_OUT` env var. `None` when
 /// neither is given.
 pub fn telemetry_out_from_args() -> Option<String> {
-    if let Some(p) = std::env::args()
-        .skip(1)
-        .find_map(|a| a.strip_prefix("--telemetry-out=").map(String::from))
-    {
+    if let Some(p) = crate::cli::args::process_eq("telemetry-out") {
         return Some(p);
     }
     std::env::var("PGPR_TELEMETRY_OUT").ok().filter(|s| !s.is_empty())

@@ -84,6 +84,53 @@ impl Args {
     }
 }
 
+// ---------------------------------------------------------------------
+// Loose process-argv scanning for bench mains.
+//
+// The `cargo bench` harness passes its own flags (`--bench`) through to
+// bench mains, so they cannot use the strict `Args::parse` (which
+// rejects unknown positionals); instead they scan argv loosely for the
+// two conventions every bench main shares: `--key=value` (equals form
+// only) and "first non-dash argument is the output path". These
+// scanners are that convention in one place — the telemetry PR
+// copy-pasted both across three bench mains.
+// ---------------------------------------------------------------------
+
+/// Scan an argv iterator for `--key=value` (equals form only); first
+/// match wins. Pure core of [`process_eq`], testable without touching
+/// the real process args.
+pub fn scan_eq<I>(argv: I, key: &str) -> Option<String>
+where
+    I: IntoIterator<Item = String>,
+{
+    let prefix = format!("--{key}=");
+    argv.into_iter()
+        .find_map(|a| a.strip_prefix(prefix.as_str()).map(String::from))
+}
+
+/// [`scan_eq`] over this process's arguments (program name skipped).
+pub fn process_eq(key: &str) -> Option<String> {
+    scan_eq(std::env::args().skip(1), key)
+}
+
+/// Scan an argv iterator for the first argument that does not start
+/// with `-` (the bench mains' "first real arg = output path"
+/// convention, which skips cargo-bench's `--bench` flag), falling back
+/// to `default`. Pure core of [`process_out_path`].
+pub fn scan_out_path<I>(argv: I, default: &str) -> String
+where
+    I: IntoIterator<Item = String>,
+{
+    argv.into_iter()
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_else(|| default.to_string())
+}
+
+/// [`scan_out_path`] over this process's arguments.
+pub fn process_out_path(default: &str) -> String {
+    scan_out_path(std::env::args().skip(1), default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +173,34 @@ mod tests {
         let a = Args::parse(&sv(&["--lr", "-0.5"])).unwrap();
         // "-0.5" doesn't start with --, so it's a value
         assert_eq!(a.f64_or("lr", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn scan_eq_equals_form_only() {
+        // equals form is found, space form is (deliberately) not: the
+        // bench mains' positional out-path scan must keep seeing the
+        // value as a positional
+        let argv = sv(&["--bench", "--telemetry-out=t.json", "out.json"]);
+        assert_eq!(scan_eq(argv.clone(), "telemetry-out"),
+                   Some("t.json".to_string()));
+        assert_eq!(scan_eq(sv(&["--telemetry-out", "t.json"]),
+                           "telemetry-out"),
+                   None);
+        // first match wins
+        assert_eq!(scan_eq(sv(&["--k=a", "--k=b"]), "k"),
+                   Some("a".to_string()));
+        // a key that is a prefix of another must not match it
+        assert_eq!(scan_eq(sv(&["--telemetry-out-extra=x"]),
+                           "telemetry-out"),
+                   None);
+    }
+
+    #[test]
+    fn scan_out_path_skips_dash_args() {
+        let argv = sv(&["--bench", "--telemetry-out=t.json", "out.json"]);
+        assert_eq!(scan_out_path(argv, "dflt.json"), "out.json");
+        assert_eq!(scan_out_path(sv(&["--bench"]), "dflt.json"),
+                   "dflt.json");
+        assert_eq!(scan_out_path(sv(&[]), "dflt.json"), "dflt.json");
     }
 }

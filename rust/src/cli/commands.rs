@@ -516,3 +516,120 @@ pub fn selftest(args: &Args) -> Result<()> {
     println!("  OK");
     Ok(())
 }
+
+/// Build the synthetic serving model behind `pgpr node` (same recipe
+/// as the `stats` demo: isotropic SE on gaussian inputs, deterministic
+/// in the seed — two processes with the same knobs serve
+/// bitwise-identical models).
+fn synthetic_model(
+    n: usize,
+    m: usize,
+    s: usize,
+    d: usize,
+    seed: u64,
+    mixed: bool,
+) -> Result<crate::server::ServedModel> {
+    let mut rng = Pcg64::seed(seed);
+    let hyp = crate::kernel::SeArd::isotropic(d, 1.0, 1.0, 0.05);
+    let xd = crate::linalg::Mat::from_vec(n, d, rng.normals(n * d));
+    let y = rng.normals(n);
+    let model = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(s)
+        .seed(seed)
+        .mixed_precision(mixed)
+        .serve()?;
+    Ok(model)
+}
+
+/// `pgpr node` — serve a model over TCP; blocks until drained (POST
+/// /v1/admin/shutdown, or kill the process).
+pub fn node(args: &Args) -> Result<()> {
+    use crate::net::{NodeConfig, NodeServer};
+    let listen = args.str_or("listen", "127.0.0.1:7070");
+    let m = args.usize_or("m", 4)?.max(1);
+    let n = (args.usize_or("n", 512)? / m).max(2) * m;
+    let s = args.usize_or("s", 32)?;
+    let d = args.usize_or("d", 2)?.max(1);
+    let seed = args.u64_or("seed", 1)?;
+    let telemetry_out = args.get("telemetry-out").map(str::to_string);
+    let dflt = NodeConfig::default();
+    let cfg = NodeConfig {
+        workers: args.usize_or("workers", dflt.workers)?.max(1),
+        queue_cap: args.usize_or("queue-cap", dflt.queue_cap)?.max(1),
+        max_inflight: args
+            .usize_or("max-inflight", dflt.max_inflight)?
+            .max(1),
+        max_batch: args.usize_or("max-batch", dflt.max_batch)?.max(1),
+        batch_wait_s: args
+            .f64_or("batch-wait-ms", dflt.batch_wait_s * 1e3)?
+            * 1e-3,
+        deadline_s: args.f64_or("deadline-ms", dflt.deadline_s * 1e3)?
+            * 1e-3,
+        ..dflt
+    };
+    let model =
+        synthetic_model(n, m, s, d, seed, args.flag("mixed-precision"))?;
+    let handle = NodeServer::start(model, listen, cfg)?;
+    println!("pgpr node listening on {} (|D|={n}, m={m}, |S|={s}, d={d})",
+             handle.addr());
+    println!("  POST /v1/predict   GET /stats[?format=json]   \
+              GET /healthz   POST /v1/admin/shutdown");
+    let reg = handle.registry().clone();
+    handle.join();
+    if let Some(path) = telemetry_out {
+        let snap = reg.snapshot(crate::obsv::SnapshotMode::Full);
+        std::fs::write(&path, snap.to_json().to_string_pretty() + "\n")?;
+        println!("wrote telemetry snapshot {path}");
+    }
+    println!("pgpr node drained");
+    Ok(())
+}
+
+/// `pgpr loadgen` — open-loop qps sweep against a running node →
+/// `BENCH_e2e.json`.
+pub fn loadgen(args: &Args) -> Result<()> {
+    use crate::net::loadgen::{run_loadgen, LoadgenConfig};
+    let target = args.str_or("target", "127.0.0.1:7070").to_string();
+    let smoke = args.flag("smoke")
+        || std::env::var("PGPR_E2E_SMOKE").as_deref() == Ok("1");
+    let mut cfg = if smoke {
+        LoadgenConfig::smoke(&target)
+    } else {
+        LoadgenConfig::full(&target)
+    };
+    if let Some(q) = args.get("qps") {
+        cfg.qps_steps = q
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow!("--qps: bad number '{v}'"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+    }
+    cfg.duration_s = args.f64_or("duration-s", cfg.duration_s)?;
+    cfg.conns = args.usize_or("conns", cfg.conns)?.max(1);
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    let out = args.str_or("out", "BENCH_e2e.json");
+    let report = run_loadgen(&cfg)?;
+    println!("loadgen vs {} (m={}, queue_cap={}, max_batch={}):",
+             target, report.machines, report.queue_cap,
+             report.max_batch);
+    println!("{:>11} {:>10} {:>8} {:>7} {:>7} {:>9} {:>9} {:>9}",
+             "target_qps", "achieved", "ok", "429", "503", "p50_ms",
+             "p99_ms", "p999_ms");
+    for st in &report.steps {
+        println!(
+            "{:>11.0} {:>10.0} {:>8} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.3}",
+            st.target_qps, st.achieved_qps, st.ok, st.shed_429,
+            st.shed_503, st.p50_s * 1e3, st.p99_s * 1e3,
+            st.p999_s * 1e3
+        );
+    }
+    report.write(out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -8,6 +8,8 @@
 //! * `learn`     — MLE hyperparameter learning on a workload subset
 //! * `train`     — distributed PITC marginal-likelihood training
 //! * `stats`     — record a mini fit+predict+serve pass, export telemetry
+//! * `node`      — serve a model over TCP (predict/stats/healthz/admin)
+//! * `loadgen`   — open-loop qps sweep against a node → BENCH_e2e.json
 //! * `selftest`  — native vs PJRT backend agreement on the tiny profile
 //!
 //! Arg syntax: `--key value` or `--flag`; hand-rolled (no clap offline).
@@ -41,6 +43,12 @@ COMMANDS:
             [--telemetry-out PATH]
   stats     [--format json|prometheus] [--mode full|deterministic]
             [--n 128] [--m 4] [--s 16] [--seed 1] [--out PATH]
+  node      [--listen 127.0.0.1:7070] [--n 512] [--m 4] [--s 32] [--d 2]
+            [--seed 1] [--workers 8] [--queue-cap 256] [--max-inflight 512]
+            [--max-batch 16] [--batch-wait-ms 2] [--deadline-ms 250]
+            [--mixed-precision] [--telemetry-out PATH]
+  loadgen   [--target 127.0.0.1:7070] [--smoke] [--qps 500,1000,...]
+            [--duration-s 5] [--conns 16] [--seed 1] [--out BENCH_e2e.json]
   selftest  [--artifacts DIR]
 
 --parallel-threads N (N >= 2) executes the simulated machines' work
@@ -82,6 +90,8 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "learn" => commands::learn(&args),
         "train" => commands::train(&args),
         "stats" => commands::stats(&args),
+        "node" => commands::node(&args),
+        "loadgen" => commands::loadgen(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");

@@ -47,7 +47,10 @@
 //! PRNG ([`util`]), a property-testing mini-framework ([`testkit`]), a
 //! micro-benchmark harness ([`bench_support`]), a telemetry layer
 //! ([`obsv`]: metrics registry, phase-span tracing, JSON/Prometheus
-//! exporters — `pgpr stats`) and a CLI ([`cli`]).
+//! exporters — `pgpr stats`) and a CLI ([`cli`]). The serving stack is
+//! additionally exposed over real TCP sockets by [`net`] (`pgpr node` /
+//! `pgpr loadgen`): a hardened std-only HTTP/1.1 front-end with
+//! admission control, backpressure and an open-loop load harness.
 
 pub mod api;
 pub mod bench_support;
@@ -58,6 +61,7 @@ pub mod gp;
 pub mod kernel;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod obsv;
 pub mod parallel;
 pub mod runtime;

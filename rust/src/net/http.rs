@@ -1,0 +1,758 @@
+//! A minimal, hardened HTTP/1.1 core for the serving node.
+//!
+//! Scope: exactly what a prediction node needs and nothing more —
+//! `GET`/`POST`, `Content-Length` bodies, keep-alive — implemented
+//! over blocking [`std::io::Read`]/[`std::io::Write`] transports so it
+//! works on `std::net` sockets and on in-memory cursors in tests.
+//!
+//! Hardening posture (every cap is a [`HttpLimits`] knob):
+//! * the request line is capped ([`HttpError::UriTooLong`], 414);
+//! * header count and cumulative header bytes are capped
+//!   ([`HttpError::TooManyHeaders`] / [`HttpError::HeaderTooLarge`],
+//!   431);
+//! * declared bodies over the cap are rejected **before** reading them
+//!   ([`HttpError::PayloadTooLarge`], 413);
+//! * `POST` without `Content-Length` is rejected
+//!   ([`HttpError::LengthRequired`], 411) and `Transfer-Encoding`
+//!   (chunked) is not implemented ([`HttpError::NotImplemented`], 501)
+//!   — responses are always `Content-Length`-framed, never chunked;
+//! * slow or stalled peers surface as timeouts through the transport's
+//!   read timeout ([`HttpError::Timeout`] mid-request → 408;
+//!   [`Parsed::TimeoutIdle`] between requests so the caller can run
+//!   its idle-close policy);
+//! * a peer closing mid-request is [`HttpError::Closed`] (just drop
+//!   the connection), and closing cleanly between requests is
+//!   [`Parsed::ClosedIdle`].
+
+use std::io::{Read, Write};
+
+/// Parser caps; every limit is inclusive ("at most").
+#[derive(Debug, Clone)]
+pub struct HttpLimits {
+    /// Max request-line bytes (method + target + version).
+    pub max_line_bytes: usize,
+    /// Max number of header lines.
+    pub max_headers: usize,
+    /// Max cumulative header bytes across all header lines.
+    pub max_header_bytes: usize,
+    /// Max declared `Content-Length`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> HttpLimits {
+        HttpLimits {
+            max_line_bytes: 8 * 1024,
+            max_headers: 64,
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Supported request methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+}
+
+/// One parsed request. Header names are lowercased at parse time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: Method,
+    /// Path component of the target (before any `?`).
+    pub path: String,
+    /// Raw query string (after `?`), if any.
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Connection persistence after this request: HTTP/1.1 defaults
+    /// to true (`connection: close` clears it), HTTP/1.0 to false
+    /// (`connection: keep-alive` sets it).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Query-string flag: true when the query contains `key=value`
+    /// as one `&`-separated component.
+    pub fn query_has(&self, key: &str, value: &str) -> bool {
+        self.query
+            .as_deref()
+            .is_some_and(|q| {
+                q.split('&').any(|kv| {
+                    kv.split_once('=') == Some((key, value))
+                })
+            })
+    }
+}
+
+/// Non-request outcomes of waiting for the next request on an idle
+/// keep-alive connection.
+#[derive(Debug)]
+pub enum Parsed {
+    Request(Request),
+    /// Peer closed cleanly at a request boundary.
+    ClosedIdle,
+    /// The transport's read timeout elapsed with no request bytes:
+    /// one idle tick (the caller counts these against its idle-close
+    /// budget and otherwise just calls parse again).
+    TimeoutIdle,
+}
+
+/// Everything that can go wrong parsing one request.
+#[derive(Debug)]
+pub enum HttpError {
+    /// 400 — malformed request line / header / body framing.
+    BadRequest(&'static str),
+    /// 414 — request line exceeded [`HttpLimits::max_line_bytes`].
+    UriTooLong,
+    /// 431 — one header line or the cumulative header bytes exceeded
+    /// the cap.
+    HeaderTooLarge,
+    /// 431 — more than [`HttpLimits::max_headers`] header lines.
+    TooManyHeaders,
+    /// 411 — POST without `Content-Length`.
+    LengthRequired,
+    /// 413 — declared `Content-Length` over
+    /// [`HttpLimits::max_body_bytes`] (rejected before reading).
+    PayloadTooLarge,
+    /// 501 — a protocol feature this core deliberately omits
+    /// (chunked transfer encoding, methods beyond GET/POST).
+    NotImplemented(&'static str),
+    /// 408 — read timeout after the request started arriving.
+    Timeout,
+    /// Peer closed mid-request; no response is deliverable.
+    Closed,
+    /// Transport error; no response is deliverable.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The status line to answer with, or `None` for connection-level
+    /// conditions where no response can be delivered.
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            HttpError::BadRequest(m) => Some((400, m)),
+            HttpError::UriTooLong => Some((414, "request line too long")),
+            HttpError::HeaderTooLarge => Some((431, "headers too large")),
+            HttpError::TooManyHeaders => Some((431, "too many headers")),
+            HttpError::LengthRequired => Some((411, "content-length required")),
+            HttpError::PayloadTooLarge => Some((413, "body too large")),
+            HttpError::NotImplemented(m) => Some((501, m)),
+            HttpError::Timeout => Some((408, "request timed out")),
+            HttpError::Closed | HttpError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "transport error: {e}"),
+            HttpError::Closed => write!(f, "peer closed mid-request"),
+            other => match other.status() {
+                Some((code, msg)) => write!(f, "{code} {msg}"),
+                None => write!(f, "http error"),
+            },
+        }
+    }
+}
+
+/// Line-reading failures, before they are mapped to a position-aware
+/// [`HttpError`] by the parser (a too-long *request line* is 414, a
+/// too-long *header line* is 431).
+#[derive(Debug)]
+pub enum LineError {
+    /// The line exceeded the caller's cap.
+    TooLong,
+    /// Read timeout; `partial` is true when some bytes of the line had
+    /// already arrived.
+    Timeout { partial: bool },
+    /// EOF mid-line.
+    Closed,
+    Io(std::io::Error),
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+const READ_CHUNK: usize = 4096;
+
+/// A bounded buffered reader that owns its buffer and never reads an
+/// unbounded line (the reason this exists instead of
+/// [`std::io::BufRead::read_line`], whose accumulation is uncapped).
+/// Leftover bytes persist across calls, which is what makes pipelined
+/// keep-alive requests work.
+pub struct HttpReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+impl<R: Read> HttpReader<R> {
+    pub fn new(inner: R) -> HttpReader<R> {
+        HttpReader { inner, buf: vec![0; READ_CHUNK], start: 0, end: 0 }
+    }
+
+    fn buffered(&self) -> &[u8] {
+        &self.buf[self.start..self.end]
+    }
+
+    /// Pull more bytes from the transport; `Ok(0)` is EOF.
+    fn fill(&mut self) -> std::io::Result<usize> {
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.end == self.buf.len() {
+            self.buf.resize(self.buf.len() + READ_CHUNK, 0);
+        }
+        let n = self.inner.read(&mut self.buf[self.end..])?;
+        self.end += n;
+        Ok(n)
+    }
+
+    /// Read one LF-terminated line (CR stripped), at most `cap` bytes
+    /// long (terminator excluded). `Ok(None)` is clean EOF at a line
+    /// boundary.
+    pub fn read_line(&mut self, cap: usize)
+        -> Result<Option<Vec<u8>>, LineError>
+    {
+        let mut line: Vec<u8> = Vec::new();
+        loop {
+            if let Some(pos) =
+                self.buffered().iter().position(|&b| b == b'\n')
+            {
+                line.extend_from_slice(&self.buf[self.start..self.start + pos]);
+                self.start += pos + 1;
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if line.len() > cap {
+                    return Err(LineError::TooLong);
+                }
+                return Ok(Some(line));
+            }
+            line.extend_from_slice(self.buffered());
+            self.start = self.end;
+            if line.len() > cap {
+                return Err(LineError::TooLong);
+            }
+            match self.fill() {
+                Ok(0) => {
+                    return if line.is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(LineError::Closed)
+                    };
+                }
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => {
+                    return Err(LineError::Timeout {
+                        partial: !line.is_empty(),
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(LineError::Io(e)),
+            }
+        }
+    }
+
+    /// Read exactly `n` body bytes.
+    pub fn read_body(&mut self, n: usize) -> Result<Vec<u8>, HttpError> {
+        let mut out = Vec::with_capacity(n);
+        loop {
+            let avail = self.buffered();
+            let take = avail.len().min(n - out.len());
+            out.extend_from_slice(&avail[..take]);
+            self.start += take;
+            if out.len() == n {
+                return Ok(out);
+            }
+            match self.fill() {
+                Ok(0) => return Err(HttpError::Closed),
+                Ok(_) => {}
+                Err(e) if is_timeout(&e) => return Err(HttpError::Timeout),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+    }
+}
+
+/// Parse one request from the reader under `limits`.
+///
+/// The distinction between "nothing arrived" and "a request broke off"
+/// matters for both timeouts and closes: idle outcomes come back as
+/// [`Parsed::TimeoutIdle`] / [`Parsed::ClosedIdle`] (not errors), while
+/// the same conditions mid-request are [`HttpError::Timeout`] /
+/// [`HttpError::Closed`].
+pub fn parse_request<R: Read>(
+    r: &mut HttpReader<R>,
+    limits: &HttpLimits,
+) -> Result<Parsed, HttpError> {
+    // request line; tolerate up to 2 blank lines before it (RFC 7230
+    // robustness) — each costs one loop turn, so it cannot spin
+    let mut line = Vec::new();
+    for blanks in 0..3 {
+        match r.read_line(limits.max_line_bytes) {
+            Ok(None) => return Ok(Parsed::ClosedIdle),
+            Ok(Some(l)) if l.is_empty() && blanks < 2 => continue,
+            Ok(Some(l)) => {
+                line = l;
+                break;
+            }
+            Err(LineError::TooLong) => return Err(HttpError::UriTooLong),
+            Err(LineError::Timeout { partial: false }) => {
+                return Ok(Parsed::TimeoutIdle)
+            }
+            Err(LineError::Timeout { partial: true }) => {
+                return Err(HttpError::Timeout)
+            }
+            Err(LineError::Closed) => return Err(HttpError::Closed),
+            Err(LineError::Io(e)) => return Err(HttpError::Io(e)),
+        }
+    }
+    if line.is_empty() {
+        return Err(HttpError::BadRequest("blank request line"));
+    }
+    let line = std::str::from_utf8(&line)
+        .map_err(|_| HttpError::BadRequest("request line not utf-8"))?;
+    let mut parts = line.split_whitespace();
+    let (method_s, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => return Err(HttpError::BadRequest("malformed request line")),
+        };
+    let method = match method_s {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        _ => return Err(HttpError::NotImplemented("method not supported")),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::BadRequest("unsupported HTTP version")),
+    };
+    if !target.starts_with('/') {
+        return Err(HttpError::BadRequest("target must be origin-form"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    // headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let hl = match r.read_line(limits.max_header_bytes) {
+            Ok(Some(l)) => l,
+            Ok(None) | Err(LineError::Closed) => return Err(HttpError::Closed),
+            Err(LineError::TooLong) => return Err(HttpError::HeaderTooLarge),
+            Err(LineError::Timeout { .. }) => return Err(HttpError::Timeout),
+            Err(LineError::Io(e)) => return Err(HttpError::Io(e)),
+        };
+        if hl.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::TooManyHeaders);
+        }
+        header_bytes += hl.len();
+        if header_bytes > limits.max_header_bytes {
+            return Err(HttpError::HeaderTooLarge);
+        }
+        let hl = std::str::from_utf8(&hl)
+            .map_err(|_| HttpError::BadRequest("header not utf-8"))?;
+        let Some((name, value)) = hl.split_once(':') else {
+            return Err(HttpError::BadRequest("header without colon"));
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::BadRequest("malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let find = |name: &str| {
+        headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    };
+    if find("transfer-encoding").is_some() {
+        return Err(HttpError::NotImplemented(
+            "transfer-encoding not supported",
+        ));
+    }
+    let keep_alive = match find("connection").map(str::to_ascii_lowercase) {
+        Some(c) if c.contains("close") => false,
+        Some(c) if c.contains("keep-alive") => true,
+        _ => http11,
+    };
+
+    // body framing
+    let content_length = match find("content-length") {
+        None => None,
+        Some(v) => Some(v.trim().parse::<usize>().map_err(|_| {
+            HttpError::BadRequest("malformed content-length")
+        })?),
+    };
+    let body = match content_length {
+        Some(n) if n > limits.max_body_bytes => {
+            return Err(HttpError::PayloadTooLarge)
+        }
+        Some(0) | None if method == Method::Post => {
+            // POST bodies are how predict requests arrive; an absent
+            // Content-Length means we could not frame one
+            match content_length {
+                Some(0) => Vec::new(),
+                _ => return Err(HttpError::LengthRequired),
+            }
+        }
+        Some(n) => r.read_body(n)?,
+        None => Vec::new(),
+    };
+
+    Ok(Parsed::Request(Request {
+        method,
+        path,
+        query,
+        headers,
+        body,
+        keep_alive,
+    }))
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `Content-Length`-framed response (never chunked). The
+/// `connection` header always states the server's persistence decision
+/// explicitly so clients need not infer it from the version.
+pub fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    use std::fmt::Write as _;
+    let mut head = String::with_capacity(128);
+    let _ = write!(head, "HTTP/1.1 {} {}\r\n", status, reason_phrase(status));
+    let _ = write!(head, "content-length: {}\r\n", body.len());
+    for (k, v) in extra_headers {
+        let _ = write!(head, "{k}: {v}\r\n");
+    }
+    let _ = write!(
+        head,
+        "connection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn limits() -> HttpLimits {
+        HttpLimits::default()
+    }
+
+    fn parse_str(s: &str) -> Result<Parsed, HttpError> {
+        let mut r = HttpReader::new(Cursor::new(s.as_bytes().to_vec()));
+        parse_request(&mut r, &limits())
+    }
+
+    fn req(p: Parsed) -> Request {
+        match p {
+            Parsed::Request(r) => r,
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let r = req(parse_str("GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n")
+            .unwrap());
+        assert_eq!(r.method, Method::Get);
+        assert_eq!(r.path, "/healthz");
+        assert!(r.query.is_none());
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(r.header("Host"), Some("x"));
+
+        let r = req(parse_str(
+            "POST /v1/predict HTTP/1.1\r\ncontent-length: 11\r\n\r\n\
+             {\"x\":[1.0]}",
+        )
+        .unwrap());
+        assert_eq!(r.method, Method::Post);
+        assert_eq!(r.body, b"{\"x\":[1.0]}");
+    }
+
+    #[test]
+    fn query_string_split() {
+        let r = req(parse_str("GET /stats?format=json HTTP/1.1\r\n\r\n")
+            .unwrap());
+        assert_eq!(r.path, "/stats");
+        assert_eq!(r.query.as_deref(), Some("format=json"));
+        assert!(r.query_has("format", "json"));
+        assert!(!r.query_has("format", "prom"));
+    }
+
+    #[test]
+    fn connection_header_controls_persistence() {
+        let r = req(parse_str(
+            "GET / HTTP/1.1\r\nconnection: close\r\n\r\n",
+        )
+        .unwrap());
+        assert!(!r.keep_alive);
+        let r = req(parse_str("GET / HTTP/1.0\r\n\r\n").unwrap());
+        assert!(!r.keep_alive, "HTTP/1.0 defaults to close");
+        let r = req(parse_str(
+            "GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n",
+        )
+        .unwrap());
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for bad in [
+            "GARBAGE\r\n\r\n",
+            "GET /\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "GET / HTTP/2.0\r\n\r\n",
+            "GET noslash HTTP/1.1\r\n\r\n",
+        ] {
+            let e = parse_str(bad).unwrap_err();
+            assert_eq!(e.status().unwrap().0, 400, "{bad:?} -> {e:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_method_is_501() {
+        let e = parse_str("BREW /coffee HTTP/1.1\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::NotImplemented(_)));
+        assert_eq!(e.status().unwrap().0, 501);
+    }
+
+    #[test]
+    fn chunked_transfer_encoding_is_501() {
+        let e = parse_str(
+            "POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+        )
+        .unwrap_err();
+        assert_eq!(e.status().unwrap().0, 501);
+    }
+
+    #[test]
+    fn post_without_content_length_is_411() {
+        let e = parse_str("POST /v1/predict HTTP/1.1\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::LengthRequired));
+        assert_eq!(e.status().unwrap().0, 411);
+    }
+
+    #[test]
+    fn oversized_request_line_is_414() {
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(9000));
+        let e = parse_str(&long).unwrap_err();
+        assert!(matches!(e, HttpError::UriTooLong));
+        assert_eq!(e.status().unwrap().0, 414);
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut s = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..70 {
+            s.push_str(&format!("h{i}: v\r\n"));
+        }
+        s.push_str("\r\n");
+        let e = parse_str(&s).unwrap_err();
+        assert!(matches!(e, HttpError::TooManyHeaders));
+        assert_eq!(e.status().unwrap().0, 431);
+    }
+
+    #[test]
+    fn oversized_headers_are_431() {
+        let s = format!(
+            "GET / HTTP/1.1\r\nbig: {}\r\n\r\n",
+            "v".repeat(20_000)
+        );
+        let e = parse_str(&s).unwrap_err();
+        assert!(matches!(e, HttpError::HeaderTooLarge));
+    }
+
+    #[test]
+    fn oversized_body_is_413_without_reading_it() {
+        // the declared length alone triggers the rejection: no body
+        // bytes follow, yet the parse fails fast with 413, not a hang
+        let s = "POST / HTTP/1.1\r\ncontent-length: 1000000\r\n\r\n";
+        let e = parse_str(s).unwrap_err();
+        assert!(matches!(e, HttpError::PayloadTooLarge));
+        assert_eq!(e.status().unwrap().0, 413);
+    }
+
+    #[test]
+    fn malformed_content_length_is_400() {
+        let e = parse_str("POST / HTTP/1.1\r\ncontent-length: ten\r\n\r\n")
+            .unwrap_err();
+        assert_eq!(e.status().unwrap().0, 400);
+    }
+
+    #[test]
+    fn header_without_colon_is_400() {
+        let e = parse_str("GET / HTTP/1.1\r\nnocolonhere\r\n\r\n")
+            .unwrap_err();
+        assert_eq!(e.status().unwrap().0, 400);
+    }
+
+    #[test]
+    fn clean_eof_is_idle_close_and_mid_request_eof_is_closed() {
+        assert!(matches!(parse_str("").unwrap(), Parsed::ClosedIdle));
+        // request broke off after the request line: headers never ended
+        let e = parse_str("GET / HTTP/1.1\r\nhost: x\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::Closed));
+        assert!(e.status().is_none(), "no response deliverable");
+        // and mid-body
+        let e = parse_str("POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc")
+            .unwrap_err();
+        assert!(matches!(e, HttpError::Closed));
+    }
+
+    #[test]
+    fn leading_blank_lines_tolerated_bounded() {
+        let r = req(parse_str("\r\n\r\nGET / HTTP/1.1\r\n\r\n").unwrap());
+        assert_eq!(r.path, "/");
+        // three blank lines exhaust the tolerance
+        let e = parse_str("\r\n\r\n\r\nGET / HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(e.status().unwrap().0, 400);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let s = "GET /a HTTP/1.1\r\n\r\n\
+                 POST /b HTTP/1.1\r\ncontent-length: 2\r\n\r\nhi\
+                 GET /c HTTP/1.1\r\nconnection: close\r\n\r\n";
+        let mut r = HttpReader::new(Cursor::new(s.as_bytes().to_vec()));
+        let a = req(parse_request(&mut r, &limits()).unwrap());
+        assert_eq!(a.path, "/a");
+        let b = req(parse_request(&mut r, &limits()).unwrap());
+        assert_eq!((b.path.as_str(), b.body.as_slice()),
+                   ("/b", b"hi".as_slice()));
+        let c = req(parse_request(&mut r, &limits()).unwrap());
+        assert_eq!(c.path, "/c");
+        assert!(!c.keep_alive);
+        assert!(matches!(parse_request(&mut r, &limits()).unwrap(),
+                         Parsed::ClosedIdle));
+    }
+
+    /// A transport that yields its chunks then times out — the shape
+    /// of a slow-loris peer under a socket read timeout.
+    struct SlowThenStall {
+        chunks: Vec<Vec<u8>>,
+        i: usize,
+    }
+    impl Read for SlowThenStall {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.i < self.chunks.len() {
+                let c = std::mem::take(&mut self.chunks[self.i]);
+                self.i += 1;
+                buf[..c.len()].copy_from_slice(&c);
+                Ok(c.len())
+            } else {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::WouldBlock,
+                    "stalled",
+                ))
+            }
+        }
+    }
+
+    #[test]
+    fn idle_timeout_vs_mid_request_timeout() {
+        // no bytes at all: idle tick
+        let mut r = HttpReader::new(SlowThenStall { chunks: vec![], i: 0 });
+        assert!(matches!(parse_request(&mut r, &limits()).unwrap(),
+                         Parsed::TimeoutIdle));
+        // half a request line then stall: 408
+        let mut r = HttpReader::new(SlowThenStall {
+            chunks: vec![b"GET /heal".to_vec()],
+            i: 0,
+        });
+        let e = parse_request(&mut r, &limits()).unwrap_err();
+        assert!(matches!(e, HttpError::Timeout));
+        assert_eq!(e.status().unwrap().0, 408);
+        // full request line then stall in headers: also 408
+        let mut r = HttpReader::new(SlowThenStall {
+            chunks: vec![b"GET / HTTP/1.1\r\nhos".to_vec()],
+            i: 0,
+        });
+        assert!(matches!(parse_request(&mut r, &limits()).unwrap_err(),
+                         HttpError::Timeout));
+    }
+
+    #[test]
+    fn response_writer_frames_with_content_length() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &[("content-type", "text/plain")],
+                       b"hello", true)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 5\r\n"));
+        assert!(s.contains("connection: keep-alive\r\n"));
+        assert!(s.ends_with("\r\n\r\nhello"));
+
+        let mut out = Vec::new();
+        write_response(&mut out, 503, &[("retry-after", "1")], b"", false)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.contains("retry-after: 1\r\n"));
+        assert!(s.contains("connection: close\r\n"));
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_statuses() {
+        for code in [200, 400, 404, 405, 408, 409, 411, 413, 414, 429,
+                     431, 500, 501, 503] {
+            assert_ne!(reason_phrase(code), "Unknown", "{code}");
+        }
+    }
+}

@@ -1,0 +1,531 @@
+//! Open-loop load generator over real sockets → `BENCH_e2e.json`.
+//!
+//! Sweeps target arrival rates against a running `pgpr node`,
+//! recording achieved qps, sojourn-time percentiles (p50/p99/p999),
+//! shed counts (429/503) and the node's own queue-depth peaks scraped
+//! from `/stats?format=json` after each step.
+//!
+//! **Open loop**: every request has a scheduled send time `i / qps`
+//! fixed up front, and the generator sleeps until that instant
+//! regardless of how the previous response is doing. A closed-loop
+//! generator (send-after-response) self-throttles exactly when the
+//! server saturates and so hides the latency cliff this harness
+//! exists to measure; the classic failure mode is *coordinated
+//! omission*, which the sojourn-time definition here (response time
+//! measured from the scheduled send, not the actual send) avoids.
+//! `max_send_lag_s` reports how far behind schedule the generator
+//! itself fell, so an undersized client pool is visible in the data
+//! instead of silently shrinking the offered load.
+//!
+//! The per-step admission-bound checks (`net.queue_depth_peak` ≤
+//! `queue_cap`, batcher depth ≤ `machines × max_batch`) are hard
+//! errors: if they fail, backpressure is broken.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::http::HttpReader;
+use crate::util::json::{self, Json};
+use crate::util::Pcg64;
+
+/// Minimal blocking HTTP/1.1 client for loopback benchmarking: one
+/// keep-alive connection, `Content-Length`-framed bodies only
+/// (exactly what the node emits). Transparently reconnects before the
+/// next request when the server signalled `connection: close`.
+pub struct HttpClient {
+    target: String,
+    timeout_s: f64,
+    w: TcpStream,
+    r: HttpReader<TcpStream>,
+    close_pending: bool,
+}
+
+impl HttpClient {
+    /// Connect to `target` (`host:port`) with per-op timeouts.
+    pub fn connect(target: &str, timeout_s: f64) -> Result<HttpClient> {
+        let stream = TcpStream::connect(target)
+            .with_context(|| format!("connect {target}"))?;
+        let _ = stream.set_nodelay(true);
+        let to = Some(Duration::from_secs_f64(timeout_s));
+        stream.set_read_timeout(to)?;
+        stream.set_write_timeout(to)?;
+        let r = HttpReader::new(stream.try_clone()?);
+        Ok(HttpClient {
+            target: target.to_string(),
+            timeout_s,
+            w: stream,
+            r,
+            close_pending: false,
+        })
+    }
+
+    /// Issue one request and read the full response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
+        if self.close_pending {
+            let fresh = HttpClient::connect(&self.target.clone(),
+                                            self.timeout_s)?;
+            *self = fresh;
+        }
+        let mut head = String::with_capacity(128);
+        use std::fmt::Write as _;
+        let _ = write!(
+            head,
+            "{method} {path} HTTP/1.1\r\nhost: pgpr\r\n\
+             content-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.w.write_all(head.as_bytes())?;
+        self.w.write_all(body)?;
+        self.w.flush()?;
+        self.read_response()
+    }
+
+    /// `GET path` → `(status, body)`.
+    pub fn get(&mut self, path: &str) -> Result<(u16, Vec<u8>)> {
+        self.request("GET", path, b"")
+    }
+
+    /// `POST path` → `(status, body)`.
+    pub fn post(&mut self, path: &str, body: &[u8])
+        -> Result<(u16, Vec<u8>)>
+    {
+        self.request("POST", path, body)
+    }
+
+    /// `GET path`, require 200, parse the body as JSON.
+    pub fn get_json(&mut self, path: &str) -> Result<Json> {
+        let (status, body) = self.get(path)?;
+        anyhow::ensure!(status == 200, "GET {path}: status {status}");
+        let text = std::str::from_utf8(&body)
+            .with_context(|| format!("GET {path}: body not utf-8"))?;
+        Json::parse(text)
+            .map_err(|e| anyhow!("GET {path}: bad json: {e:?}"))
+    }
+
+    fn read_line(&mut self) -> Result<Vec<u8>> {
+        match self.r.read_line(65536) {
+            Ok(Some(l)) => Ok(l),
+            Ok(None) => Err(anyhow!("server closed connection")),
+            Err(e) => Err(anyhow!("read error: {e:?}")),
+        }
+    }
+
+    fn read_response(&mut self) -> Result<(u16, Vec<u8>)> {
+        let status_line = self.read_line()?;
+        let s = String::from_utf8_lossy(&status_line).into_owned();
+        let status: u16 = s
+            .split_whitespace()
+            .nth(1)
+            .and_then(|p| p.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line: {s:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let text = String::from_utf8_lossy(&line).into_owned();
+            if let Some((name, value)) = text.split_once(':') {
+                let value = value.trim();
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.parse().with_context(|| {
+                        format!("bad content-length {value:?}")
+                    })?;
+                } else if name.eq_ignore_ascii_case("connection")
+                    && value.eq_ignore_ascii_case("close")
+                {
+                    self.close_pending = true;
+                }
+            }
+        }
+        let body = self
+            .r
+            .read_body(content_length)
+            .map_err(|e| anyhow!("body read: {e}"))?;
+        Ok((status, body))
+    }
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// `host:port` of a running `pgpr node`.
+    pub target: String,
+    /// Target arrival rates to sweep, in requests/second.
+    pub qps_steps: Vec<f64>,
+    /// Seconds of offered load per step.
+    pub duration_s: f64,
+    /// Client connections (one thread each).
+    pub conns: usize,
+    /// Query-vector RNG seed (deterministic per step × connection).
+    pub seed: u64,
+}
+
+impl LoadgenConfig {
+    /// Small fixed sweep for CI: finishes in a few seconds.
+    pub fn smoke(target: &str) -> LoadgenConfig {
+        LoadgenConfig {
+            target: target.to_string(),
+            qps_steps: vec![200.0, 800.0],
+            duration_s: 1.0,
+            conns: 4,
+            seed: 1,
+        }
+    }
+
+    /// Full sweep to saturation for bench-full runs.
+    pub fn full(target: &str) -> LoadgenConfig {
+        LoadgenConfig {
+            target: target.to_string(),
+            qps_steps: vec![500.0, 1000.0, 2000.0, 4000.0, 8000.0,
+                            16000.0],
+            duration_s: 5.0,
+            conns: 16,
+            seed: 1,
+        }
+    }
+}
+
+/// What `/healthz` reports about the node under test.
+#[derive(Debug, Clone)]
+struct NodeInfo {
+    d: usize,
+    machines: usize,
+    queue_cap: usize,
+    max_batch: usize,
+}
+
+/// One sweep step's results.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub target_qps: f64,
+    /// Requests actually sent (offered load).
+    pub offered: usize,
+    pub ok: usize,
+    pub shed_429: usize,
+    pub shed_503: usize,
+    /// Responses with any other status.
+    pub http_errors: usize,
+    /// Transport failures (reconnected after each).
+    pub io_errors: usize,
+    pub achieved_qps: f64,
+    pub wall_s: f64,
+    /// Sojourn-time percentiles over 200s, measured from the
+    /// *scheduled* send instant (coordinated-omission safe).
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    /// How far behind schedule the generator fell (client-side).
+    pub max_send_lag_s: f64,
+    /// `net.queue_depth_peak` scraped from `/stats` after the step.
+    pub queue_depth_peak: i64,
+    /// `serve.queue_depth_peak` (batcher) scraped after the step.
+    pub batcher_depth_peak: i64,
+}
+
+impl StepStats {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("target_qps", self.target_qps.into()),
+            ("offered", self.offered.into()),
+            ("ok", self.ok.into()),
+            ("shed_429", self.shed_429.into()),
+            ("shed_503", self.shed_503.into()),
+            ("http_errors", self.http_errors.into()),
+            ("io_errors", self.io_errors.into()),
+            ("achieved_qps", self.achieved_qps.into()),
+            ("wall_s", self.wall_s.into()),
+            ("p50_s", self.p50_s.into()),
+            ("p99_s", self.p99_s.into()),
+            ("p999_s", self.p999_s.into()),
+            ("max_send_lag_s", self.max_send_lag_s.into()),
+            ("queue_depth_peak", (self.queue_depth_peak.max(0) as usize)
+                .into()),
+            ("batcher_depth_peak",
+             (self.batcher_depth_peak.max(0) as usize).into()),
+        ])
+    }
+}
+
+/// Full sweep results → `BENCH_e2e.json`.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub d: usize,
+    pub machines: usize,
+    pub queue_cap: usize,
+    pub max_batch: usize,
+    pub steps: Vec<StepStats>,
+}
+
+impl LoadgenReport {
+    /// Render with the `pgpr-bench-e2e/1` schema.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", "pgpr-bench-e2e/1".into()),
+            ("d", self.d.into()),
+            ("machines", self.machines.into()),
+            ("queue_cap", self.queue_cap.into()),
+            ("max_batch", self.max_batch.into()),
+            ("steps",
+             Json::Arr(self.steps.iter().map(StepStats::to_json)
+                 .collect())),
+        ])
+    }
+
+    /// Write the pretty-printed report to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+    }
+}
+
+/// Exact percentile by nearest-rank over an ascending-sorted slice;
+/// 0.0 for an empty slice (never NaN — the report must stay valid
+/// JSON).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn predict_body(x: &[f64]) -> String {
+    json::obj(vec![(
+        "x",
+        Json::Arr(x.iter().map(|&v| Json::Num(v)).collect()),
+    )])
+    .to_string_compact()
+}
+
+fn probe(target: &str) -> Result<NodeInfo> {
+    let mut c = HttpClient::connect(target, 10.0)?;
+    let doc = c.get_json("/healthz")?;
+    let field = |k: &str| -> Result<usize> {
+        doc.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("/healthz missing {k:?}"))
+    };
+    Ok(NodeInfo {
+        d: field("d")?,
+        machines: field("machines")?,
+        queue_cap: field("queue_cap")?,
+        max_batch: field("max_batch")?,
+    })
+}
+
+#[derive(Default)]
+struct StepRaw {
+    ok_latencies: Vec<f64>,
+    shed_429: usize,
+    shed_503: usize,
+    http_errors: usize,
+    io_errors: usize,
+    max_send_lag_s: f64,
+}
+
+fn run_step(
+    cfg: &LoadgenConfig,
+    info: &NodeInfo,
+    step_idx: usize,
+    qps: f64,
+) -> StepStats {
+    let n = ((qps * cfg.duration_s).ceil() as usize).max(1);
+    let k = cfg.conns.max(1);
+    let start = Instant::now();
+    let mut merged: Vec<StepRaw> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..k {
+            handles.push(s.spawn(move || -> StepRaw {
+                let mut raw = StepRaw::default();
+                let mut client =
+                    HttpClient::connect(&cfg.target, 10.0).ok();
+                let mut rng =
+                    Pcg64::new(cfg.seed, (step_idx * 1000 + t) as u64);
+                // connection t owns requests t, t+k, t+2k, ...
+                let mut i = t;
+                while i < n {
+                    let t_sched = i as f64 / qps;
+                    let now = start.elapsed().as_secs_f64();
+                    if t_sched > now {
+                        std::thread::sleep(Duration::from_secs_f64(
+                            t_sched - now,
+                        ));
+                    } else {
+                        raw.max_send_lag_s =
+                            raw.max_send_lag_s.max(now - t_sched);
+                    }
+                    let body = predict_body(&rng.normals(info.d));
+                    let resp = match client.as_mut() {
+                        Some(c) => c.post("/v1/predict",
+                                          body.as_bytes()),
+                        None => Err(anyhow!("not connected")),
+                    };
+                    match resp {
+                        Ok((200, _)) => {
+                            let done = start.elapsed().as_secs_f64();
+                            raw.ok_latencies.push(done - t_sched);
+                        }
+                        Ok((429, _)) => raw.shed_429 += 1,
+                        Ok((503, _)) => raw.shed_503 += 1,
+                        Ok(_) => raw.http_errors += 1,
+                        Err(_) => {
+                            raw.io_errors += 1;
+                            client =
+                                HttpClient::connect(&cfg.target, 10.0)
+                                    .ok();
+                        }
+                    }
+                    i += k;
+                }
+                raw
+            }));
+        }
+        for h in handles {
+            if let Ok(r) = h.join() {
+                merged.push(r);
+            }
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    let mut lat: Vec<f64> = merged
+        .iter()
+        .flat_map(|r| r.ok_latencies.iter().copied())
+        .collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ok = lat.len();
+    StepStats {
+        target_qps: qps,
+        offered: n,
+        ok,
+        shed_429: merged.iter().map(|r| r.shed_429).sum(),
+        shed_503: merged.iter().map(|r| r.shed_503).sum(),
+        http_errors: merged.iter().map(|r| r.http_errors).sum(),
+        io_errors: merged.iter().map(|r| r.io_errors).sum(),
+        achieved_qps: ok as f64 / wall_s,
+        wall_s,
+        p50_s: percentile(&lat, 0.50),
+        p99_s: percentile(&lat, 0.99),
+        p999_s: percentile(&lat, 0.999),
+        max_send_lag_s: merged
+            .iter()
+            .map(|r| r.max_send_lag_s)
+            .fold(0.0, f64::max),
+        queue_depth_peak: 0,
+        batcher_depth_peak: 0,
+    }
+}
+
+/// Run the sweep against `cfg.target`, scraping `/stats` after each
+/// step and hard-checking the admission bounds.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(!cfg.qps_steps.is_empty(), "no qps steps");
+    let info = probe(&cfg.target)?;
+    let mut steps = Vec::new();
+    for (idx, &qps) in cfg.qps_steps.iter().enumerate() {
+        let mut st = run_step(cfg, &info, idx, qps);
+        let mut c = HttpClient::connect(&cfg.target, 10.0)?;
+        let stats = c.get_json("/stats?format=json")?;
+        let gauge = |name: &str| -> i64 {
+            stats
+                .get("gauges")
+                .and_then(|g| g.get(name))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as i64
+        };
+        st.queue_depth_peak = gauge("net.queue_depth_peak");
+        st.batcher_depth_peak = gauge("serve.queue_depth_peak");
+        // backpressure invariants: queues stay bounded under any load
+        anyhow::ensure!(
+            st.queue_depth_peak <= info.queue_cap as i64,
+            "net.queue_depth_peak {} exceeded queue_cap {}",
+            st.queue_depth_peak,
+            info.queue_cap
+        );
+        anyhow::ensure!(
+            st.batcher_depth_peak
+                <= (info.machines * info.max_batch) as i64,
+            "batcher depth peak {} exceeded machines*max_batch {}",
+            st.batcher_depth_peak,
+            info.machines * info.max_batch
+        );
+        steps.push(st);
+    }
+    Ok(LoadgenReport {
+        d: info.d,
+        machines: info.machines,
+        queue_cap: info.queue_cap,
+        max_batch: info.max_batch,
+        steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.50), 51.0); // round(99*0.5)=50
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.999), 7.0);
+    }
+
+    #[test]
+    fn predict_body_roundtrips_exactly() {
+        let x = [1.5, -0.25, 3.0e-7];
+        let doc = Json::parse(&predict_body(&x)).unwrap();
+        let arr = doc.get("x").and_then(Json::as_arr).unwrap();
+        let back: Vec<f64> =
+            arr.iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(back, x); // shortest-roundtrip printing is exact
+    }
+
+    #[test]
+    fn report_json_has_schema_and_steps() {
+        let rep = LoadgenReport {
+            d: 2,
+            machines: 4,
+            queue_cap: 256,
+            max_batch: 16,
+            steps: vec![StepStats {
+                target_qps: 100.0,
+                offered: 100,
+                ok: 90,
+                shed_429: 4,
+                shed_503: 6,
+                http_errors: 0,
+                io_errors: 0,
+                achieved_qps: 90.0,
+                wall_s: 1.0,
+                p50_s: 0.001,
+                p99_s: 0.005,
+                p999_s: 0.009,
+                max_send_lag_s: 0.0,
+                queue_depth_peak: 12,
+                batcher_depth_peak: 30,
+            }],
+        };
+        let doc = Json::parse(&rep.to_json().to_string_pretty())
+            .unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str),
+                   Some("pgpr-bench-e2e/1"));
+        let steps =
+            doc.get("steps").and_then(Json::as_arr).unwrap();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].get("ok").and_then(Json::as_usize),
+                   Some(90));
+    }
+}

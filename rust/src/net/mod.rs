@@ -1,0 +1,43 @@
+//! TCP serving front-end: a real network edge for the serving stack.
+//!
+//! Everything upstream of this module treats serving as a library
+//! call ([`crate::server::ServedModel::predict_batch_fast`] behind a
+//! [`crate::server::DynamicBatcher`]). This module puts that stack
+//! behind a socket with the properties a real deployment needs and a
+//! benchmark can measure:
+//!
+//! - [`http`] — a minimal, hardened HTTP/1.1 core: bounded request
+//!   lines/headers/bodies, keep-alive and pipelining, slow-peer
+//!   timeouts, `Content-Length`-framed responses only. Std-only by
+//!   design — blocking `std::net` sockets and threads, no async
+//!   runtime, no new dependencies.
+//! - [`server`] — the serving node: acceptor → bounded worker pool →
+//!   bounded job queue → batch loop. Admission control sheds with
+//!   `429`/`503` + `Retry-After` instead of queueing unboundedly, and
+//!   expires requests whose deadline passed before batching; all time
+//!   arithmetic runs on a monotonic clock
+//!   ([`crate::util::MonoClock`]). Graceful drain flushes every open
+//!   batch so each admitted request gets an answer.
+//! - [`loadgen`] — an open-loop (coordinated-omission-safe) load
+//!   generator that sweeps arrival rates over real sockets and writes
+//!   `BENCH_e2e.json` with achieved qps, sojourn percentiles, shed
+//!   counts and scraped queue-depth peaks.
+//!
+//! Endpoints served by a node: `POST /v1/predict` (JSON in/out,
+//! bitwise-identical to a direct in-process
+//! `predict_batch_fast` call on the same query), `GET /stats`
+//! (Prometheus text, or the `pgpr-telemetry/1` JSON document with
+//! `?format=json`), `GET /healthz`, and the admin verbs
+//! `POST /v1/admin/lose_machine` / `POST /v1/admin/shutdown`.
+//!
+//! Exposed on the CLI as `pgpr node --listen ADDR` and
+//! `pgpr loadgen --target ADDR`.
+
+pub mod http;
+pub mod loadgen;
+pub mod server;
+
+pub use http::{HttpLimits, Method, Parsed, Request};
+pub use loadgen::{run_loadgen, HttpClient, LoadgenConfig,
+                  LoadgenReport, StepStats};
+pub use server::{NodeConfig, NodeHandle, NodeServer};

@@ -1,0 +1,828 @@
+//! The serving node: acceptor + bounded worker pool + batch loop.
+//!
+//! Thread topology (all `std::net` blocking I/O, no async runtime):
+//!
+//! ```text
+//!             acceptor ──► bounded conn queue ──► N conn workers
+//!                                                    │  POST /v1/predict
+//!                                                    ▼
+//!                              bounded job queue (sync_channel)
+//!                                                    │
+//!                                                    ▼
+//!                      batch loop: Router → DynamicBatcher →
+//!                      ServedModel::predict_batch_fast → fulfill slots
+//! ```
+//!
+//! Admission control happens at three doors, each bounded and each
+//! shedding with an explicit status instead of queueing unboundedly:
+//! the conn backlog (acceptor sheds `503`), the in-flight cap (worker
+//! sheds `429` + `Retry-After`), and the job queue (worker sheds `503`
+//! + `Retry-After`). Requests whose deadline passes before the batch
+//! loop dequeues them are expired with `503` and counted
+//! (`net.shed.deadline`). Every time decision reads one
+//! [`MonoClock`] — never the wall clock (see the batcher's
+//! clock-step pin tests for why).
+//!
+//! Graceful drain: `POST /v1/admin/shutdown` (or
+//! [`NodeHandle::shutdown`]) stops the acceptor, workers finish their
+//! current connections, the job channel disconnects, and the batch
+//! loop flushes every open batch before exiting — every admitted
+//! request gets a response. The node's own [`Registry`] is installed
+//! on every thread, so `/stats` is live regardless of the
+//! `PGPR_TELEMETRY` environment gate and isolated from other nodes in
+//! the same process.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
+                      TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::http::{parse_request, write_response, HttpLimits, Method,
+                  Parsed, Request};
+use crate::linalg::LinalgCtx;
+use crate::obsv::{Registry, SnapshotMode, Unit};
+use crate::runtime::NativeBackend;
+use crate::server::{Batch, DynamicBatcher, ServeScratch, ServedModel};
+use crate::util::json::{self, Json};
+use crate::util::MonoClock;
+
+/// Admission, batching and transport knobs for one node.
+#[derive(Debug, Clone)]
+pub struct NodeConfig {
+    /// Connection-worker threads (each owns one connection at a time).
+    pub workers: usize,
+    /// Accepted-but-unclaimed connection backlog; past it the acceptor
+    /// sheds with an immediate 503.
+    pub conn_backlog: usize,
+    /// Bounded job-queue depth between workers and the batch loop;
+    /// past it predicts shed with 503 + `Retry-After`.
+    pub queue_cap: usize,
+    /// Admitted-but-unanswered predict cap; past it predicts shed with
+    /// 429 + `Retry-After`.
+    pub max_inflight: usize,
+    /// Admission deadline (seconds, monotonic): a request still queued
+    /// this long after admission is expired with 503 instead of batched.
+    pub deadline_s: f64,
+    /// Batch size bound (the batcher's flush-on-size trigger and the
+    /// fast path's padded AOT shape).
+    pub max_batch: usize,
+    /// Batch age bound (the batcher's flush-on-age trigger).
+    pub batch_wait_s: f64,
+    /// `Retry-After` seconds advertised on 429/503 sheds.
+    pub retry_after_s: u64,
+    /// Per-read socket timeout (bounds slow-peer stalls).
+    pub read_timeout_s: f64,
+    /// Idle keep-alive connections are closed after about this long.
+    pub idle_close_s: f64,
+    /// HTTP parser caps.
+    pub limits: HttpLimits,
+}
+
+impl Default for NodeConfig {
+    fn default() -> NodeConfig {
+        NodeConfig {
+            workers: 8,
+            conn_backlog: 64,
+            queue_cap: 256,
+            max_inflight: 512,
+            deadline_s: 0.25,
+            max_batch: 16,
+            batch_wait_s: 2e-3,
+            retry_after_s: 1,
+            read_timeout_s: 5.0,
+            idle_close_s: 30.0,
+            limits: HttpLimits::default(),
+        }
+    }
+}
+
+/// Batch-loop verdict on one admitted predict request.
+enum PredictOutcome {
+    Done { mean: f64, var: f64 },
+    /// Deadline passed before the request reached a batch.
+    Expired,
+}
+
+/// One-shot rendezvous between a waiting worker and the batch loop.
+struct Slot<T> {
+    state: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Arc<Slot<T>> {
+        Arc::new(Slot { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn fulfill(&self, v: T) {
+        let mut g = self.state.lock().unwrap();
+        *g = Some(v);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        while g.is_none() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+        g.take()
+    }
+}
+
+/// Work items flowing from connection workers to the batch loop.
+/// Control messages share the queue so they serialize naturally with
+/// traffic (a rebalance happens at a well-defined point in the request
+/// stream).
+enum Job {
+    Predict {
+        x: Vec<f64>,
+        /// Monotonic expiry instant (admission time + deadline).
+        deadline_s: f64,
+        slot: Arc<Slot<PredictOutcome>>,
+    },
+    LoseMachine {
+        machine: usize,
+        done: Arc<Slot<Result<usize, String>>>,
+    },
+}
+
+/// State shared by every node thread.
+struct NodeShared {
+    cfg: NodeConfig,
+    registry: Arc<Registry>,
+    clock: MonoClock,
+    addr: SocketAddr,
+    d: usize,
+    machines: AtomicUsize,
+    inflight: AtomicUsize,
+    inflight_peak: AtomicI64,
+    queue_depth: AtomicI64,
+    queue_peak: AtomicI64,
+    shutdown: AtomicBool,
+}
+
+impl NodeShared {
+    fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Idempotent drain trigger: stop accepting and poke the acceptor
+    /// out of its blocking `accept`.
+    fn begin_shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.registry.counter_add("net.shutdowns", 1);
+        let _ = TcpStream::connect_timeout(&self.addr,
+                                           Duration::from_secs(1));
+    }
+}
+
+/// Entry point: bind, spawn the thread topology, return the handle.
+pub struct NodeServer;
+
+impl NodeServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving `model`.
+    pub fn start(
+        model: ServedModel,
+        addr: &str,
+        cfg: NodeConfig,
+    ) -> std::io::Result<NodeHandle> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_cap);
+        let (conn_tx, conn_rx) =
+            mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
+        let shared = Arc::new(NodeShared {
+            d: model.xs.cols,
+            machines: AtomicUsize::new(model.machines()),
+            cfg,
+            registry: Arc::new(Registry::new()),
+            clock: MonoClock::new(),
+            addr: local,
+            inflight: AtomicUsize::new(0),
+            inflight_peak: AtomicI64::new(0),
+            queue_depth: AtomicI64::new(0),
+            queue_peak: AtomicI64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut threads = Vec::new();
+        {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pgpr-net-batch".into())
+                    .spawn(move || batch_loop(sh, model, job_rx))?,
+            );
+        }
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        for i in 0..shared.cfg.workers.max(1) {
+            let sh = shared.clone();
+            let rx = conn_rx.clone();
+            let tx = job_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pgpr-net-worker-{i}"))
+                    .spawn(move || worker_loop(sh, rx, tx))?,
+            );
+        }
+        // workers hold the only job senders now: when they all exit
+        // (after the acceptor drops conn_tx), the batch loop sees a
+        // disconnect and drains
+        drop(job_tx);
+        {
+            let sh = shared.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("pgpr-net-accept".into())
+                    .spawn(move || acceptor_loop(sh, listener, conn_tx))?,
+            );
+        }
+        Ok(NodeHandle { shared, threads: Mutex::new(threads) })
+    }
+}
+
+/// Running node: address, registry access, shutdown/join.
+pub struct NodeHandle {
+    shared: Arc<NodeShared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl NodeHandle {
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// The node's private metrics registry (what `/stats` renders).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.shared.registry
+    }
+
+    /// True once a drain has begun.
+    pub fn draining(&self) -> bool {
+        self.shared.draining()
+    }
+
+    /// Begin a graceful drain (idempotent; also reachable over HTTP as
+    /// `POST /v1/admin/shutdown`).
+    pub fn shutdown(&self) {
+        self.shared.begin_shutdown();
+    }
+
+    /// Wait for every node thread to exit. Idempotent; returns
+    /// immediately if already joined.
+    pub fn join(&self) {
+        let hs: Vec<JoinHandle<()>> =
+            self.threads.lock().unwrap().drain(..).collect();
+        for h in hs {
+            let _ = h.join();
+        }
+    }
+
+    /// [`NodeHandle::shutdown`] then [`NodeHandle::join`].
+    pub fn shutdown_and_join(&self) {
+        self.shutdown();
+        self.join();
+    }
+}
+
+// ---------------------------------------------------------------------
+// acceptor
+// ---------------------------------------------------------------------
+
+fn acceptor_loop(
+    shared: Arc<NodeShared>,
+    listener: TcpListener,
+    conn_tx: SyncSender<TcpStream>,
+) {
+    let _g = shared.registry.install();
+    for inc in listener.incoming() {
+        if shared.draining() {
+            break;
+        }
+        let stream = match inc {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        crate::obsv::counter_add("net.conns.accepted", 1);
+        match conn_tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(s)) => {
+                // bounded backlog: shed at the door rather than queue
+                crate::obsv::counter_add("net.shed.conns", 1);
+                let retry = shared.cfg.retry_after_s.to_string();
+                let mut w = &s;
+                let _ = write_response(
+                    &mut w,
+                    503,
+                    &[("content-type", "application/json"),
+                      ("retry-after", &retry)],
+                    &error_body("connection backlog full"),
+                    false,
+                );
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+    // conn_tx drops here: workers drain queued conns, then exit
+}
+
+// ---------------------------------------------------------------------
+// connection workers
+// ---------------------------------------------------------------------
+
+const JSON_CT: &[(&str, &str)] = &[("content-type", "application/json")];
+
+fn json_body(pairs: Vec<(&str, Json)>) -> Vec<u8> {
+    json::obj(pairs).to_string_compact().into_bytes()
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    json_body(vec![("error", msg.into())])
+}
+
+/// Write a response, bumping the `net.responses.{2xx,4xx,5xx}`
+/// counter; returns whether the connection should stay open.
+fn send(
+    w: &mut dyn Write,
+    status: u16,
+    extra: &[(&str, &str)],
+    body: &[u8],
+    keep: bool,
+) -> bool {
+    let class = match status {
+        200..=299 => "2xx",
+        400..=499 => "4xx",
+        _ => "5xx",
+    };
+    crate::obsv::counter_add_labeled("net.responses", class, 1);
+    match write_response(w, status, extra, body, keep) {
+        Ok(()) => keep,
+        Err(_) => false,
+    }
+}
+
+fn worker_loop(
+    shared: Arc<NodeShared>,
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    job_tx: SyncSender<Job>,
+) {
+    let _g = shared.registry.install();
+    loop {
+        // hold the lock only while waiting for a connection; handling
+        // happens outside it so workers serve concurrently
+        let conn = {
+            let rx = conn_rx.lock().unwrap();
+            rx.recv()
+        };
+        match conn {
+            Ok(stream) => handle_conn(stream, &shared, &job_tx),
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs_f64(
+        shared.cfg.read_timeout_s,
+    )));
+    crate::obsv::gauge_add("net.conns", 1);
+    let mut reader = super::http::HttpReader::new(&stream);
+    let mut w: &TcpStream = &stream;
+    let idle_budget = (shared.cfg.idle_close_s / shared.cfg.read_timeout_s)
+        .ceil()
+        .max(1.0) as u32;
+    let mut idle = 0u32;
+    loop {
+        match parse_request(&mut reader, &shared.cfg.limits) {
+            Ok(Parsed::Request(req)) => {
+                idle = 0;
+                crate::obsv::counter_add("net.requests", 1);
+                let keep = respond(&req, &mut w, shared, job_tx);
+                if !keep || shared.draining() {
+                    break;
+                }
+            }
+            Ok(Parsed::ClosedIdle) => break,
+            Ok(Parsed::TimeoutIdle) => {
+                idle += 1;
+                if idle >= idle_budget || shared.draining() {
+                    break;
+                }
+            }
+            Err(e) => {
+                crate::obsv::counter_add("net.http.errors", 1);
+                if let Some((status, msg)) = e.status() {
+                    send(&mut w, status, JSON_CT, &error_body(msg), false);
+                }
+                break;
+            }
+        }
+    }
+    crate::obsv::gauge_add("net.conns", -1);
+}
+
+fn respond(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) -> bool {
+    const ROUTES: &[&str] = &["/healthz", "/stats", "/v1/predict",
+                              "/v1/admin/lose_machine",
+                              "/v1/admin/shutdown"];
+    match (req.method, req.path.as_str()) {
+        (Method::Get, "/healthz") => handle_healthz(req, w, shared),
+        (Method::Get, "/stats") => handle_stats(req, w, shared),
+        (Method::Post, "/v1/predict") => {
+            handle_predict(req, w, shared, job_tx)
+        }
+        (Method::Post, "/v1/admin/lose_machine") => {
+            handle_lose_machine(req, w, shared, job_tx)
+        }
+        (Method::Post, "/v1/admin/shutdown") => {
+            send(w, 200, JSON_CT,
+                 &json_body(vec![("status", "draining".into())]), false);
+            shared.begin_shutdown();
+            false
+        }
+        (_, p) if ROUTES.contains(&p) => {
+            send(w, 405, JSON_CT, &error_body("method not allowed"),
+                 req.keep_alive)
+        }
+        _ => send(w, 404, JSON_CT, &error_body("not found"),
+                  req.keep_alive),
+    }
+}
+
+fn handle_healthz(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+) -> bool {
+    let status = if shared.draining() { "draining" } else { "ok" };
+    let body = json_body(vec![
+        ("status", status.into()),
+        ("d", shared.d.into()),
+        ("machines", shared.machines.load(Ordering::Acquire).into()),
+        ("queue_cap", shared.cfg.queue_cap.into()),
+        ("max_batch", shared.cfg.max_batch.into()),
+        ("max_inflight", shared.cfg.max_inflight.into()),
+        ("deadline_s", shared.cfg.deadline_s.into()),
+    ]);
+    send(w, 200, JSON_CT, &body, req.keep_alive)
+}
+
+fn handle_stats(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+) -> bool {
+    let snap = shared.registry.snapshot(SnapshotMode::Full);
+    if req.query_has("format", "json") {
+        let body = snap.to_json().to_string_pretty() + "\n";
+        send(w, 200, JSON_CT, body.as_bytes(), req.keep_alive)
+    } else {
+        send(w, 200,
+             &[("content-type", "text/plain; version=0.0.4")],
+             snap.to_prometheus().as_bytes(), req.keep_alive)
+    }
+}
+
+fn parse_predict_body(
+    body: &[u8],
+    d: usize,
+) -> Result<Vec<f64>, &'static str> {
+    let s = std::str::from_utf8(body).map_err(|_| "body not utf-8")?;
+    let doc = Json::parse(s).map_err(|_| "body not valid json")?;
+    let arr = doc
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or("body must be {\"x\": [f64; d]}")?;
+    if arr.len() != d {
+        return Err("wrong query dimension");
+    }
+    let mut x = Vec::with_capacity(arr.len());
+    for v in arr {
+        x.push(v.as_f64().ok_or("non-numeric x element")?);
+    }
+    Ok(x)
+}
+
+fn release_inflight(shared: &NodeShared) {
+    shared.inflight.fetch_sub(1, Ordering::AcqRel);
+    crate::obsv::gauge_add("net.inflight", -1);
+}
+
+fn handle_predict(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) -> bool {
+    let retry = shared.cfg.retry_after_s.to_string();
+    let shed_headers: [(&str, &str); 2] =
+        [("content-type", "application/json"), ("retry-after", &retry)];
+    let x = match parse_predict_body(&req.body, shared.d) {
+        Ok(x) => x,
+        Err(msg) => {
+            return send(w, 400, JSON_CT, &error_body(msg), req.keep_alive)
+        }
+    };
+    if shared.draining() {
+        return send(w, 503, &shed_headers, &error_body("draining"), false);
+    }
+
+    // door 1: in-flight cap (429 — the client itself should back off)
+    let cur = shared.inflight.fetch_add(1, Ordering::AcqRel);
+    if cur >= shared.cfg.max_inflight {
+        shared.inflight.fetch_sub(1, Ordering::AcqRel);
+        crate::obsv::counter_add("net.shed.inflight", 1);
+        return send(w, 429, &shed_headers,
+                    &error_body("too many requests in flight"),
+                    req.keep_alive);
+    }
+    shared.inflight_peak.fetch_max(cur as i64 + 1, Ordering::AcqRel);
+    crate::obsv::gauge_add("net.inflight", 1);
+
+    // door 2: bounded job queue (503 — the node is saturated)
+    let enq_s = shared.clock.now_s();
+    let slot = Slot::new();
+    let job = Job::Predict {
+        x,
+        deadline_s: enq_s + shared.cfg.deadline_s,
+        slot: slot.clone(),
+    };
+    match job_tx.try_send(job) {
+        Ok(()) => {}
+        Err(TrySendError::Full(_)) => {
+            release_inflight(shared);
+            crate::obsv::counter_add("net.shed.queue", 1);
+            return send(w, 503, &shed_headers,
+                        &error_body("request queue full"), req.keep_alive);
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            release_inflight(shared);
+            return send(w, 503, &shed_headers,
+                        &error_body("serving loop stopped"), false);
+        }
+    }
+    let depth = shared.queue_depth.fetch_add(1, Ordering::AcqRel) + 1;
+    shared.queue_peak.fetch_max(depth, Ordering::AcqRel);
+    crate::obsv::gauge_add("net.queue_depth", 1);
+
+    // the batch loop owes every admitted request an answer; the extra
+    // margin covers batching wait + compute on a loaded host
+    let budget = Duration::from_secs_f64(
+        shared.cfg.deadline_s + shared.cfg.batch_wait_s + 30.0,
+    );
+    let outcome = slot.wait(budget);
+    release_inflight(shared);
+    match outcome {
+        Some(PredictOutcome::Done { mean, var }) => {
+            let lat = shared.clock.now_s() - enq_s;
+            crate::obsv::observe("net.latency_s", Unit::Seconds, lat);
+            crate::obsv::counter_add("net.predict.ok", 1);
+            let body =
+                json_body(vec![("mean", mean.into()), ("var", var.into())]);
+            send(w, 200, JSON_CT, &body, req.keep_alive)
+        }
+        Some(PredictOutcome::Expired) => send(
+            w, 503, &shed_headers,
+            &error_body("deadline expired before batching"),
+            req.keep_alive,
+        ),
+        None => {
+            crate::obsv::counter_add("net.serve.stuck", 1);
+            send(w, 500, JSON_CT, &error_body("serving timeout"), false)
+        }
+    }
+}
+
+fn handle_lose_machine(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) -> bool {
+    let machine = match std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .and_then(|d| d.get("machine").and_then(Json::as_usize))
+    {
+        Some(m) => m,
+        None => {
+            return send(w, 400, JSON_CT,
+                        &error_body("body must be {\"machine\": k}"),
+                        req.keep_alive)
+        }
+    };
+    let done = Slot::new();
+    let job = Job::LoseMachine { machine, done: done.clone() };
+    if job_tx.try_send(job).is_err() {
+        return send(w, 503, JSON_CT,
+                    &error_body("serving loop unavailable"),
+                    req.keep_alive);
+    }
+    // the rebalance refits every survivor's summaries — allow for it
+    match done.wait(Duration::from_secs(120)) {
+        Some(Ok(survivors)) => {
+            let body = json_body(vec![("machines", survivors.into())]);
+            send(w, 200, JSON_CT, &body, req.keep_alive)
+        }
+        Some(Err(msg)) => {
+            send(w, 409, JSON_CT, &error_body(&msg), req.keep_alive)
+        }
+        None => send(w, 500, JSON_CT, &error_body("rebalance timed out"),
+                     false),
+    }
+}
+
+// ---------------------------------------------------------------------
+// batch loop
+// ---------------------------------------------------------------------
+
+fn execute_batch(
+    model: &ServedModel,
+    batch: &Batch,
+    pad_to: usize,
+    lctx: &LinalgCtx,
+    scratch: &mut ServeScratch,
+    pending: &mut HashMap<u64, Arc<Slot<PredictOutcome>>>,
+) {
+    let rows = batch.ids.len();
+    let (mean, var) = if model.mixed_precision() {
+        model.predict_batch_fast_f32(batch.machine, &batch.xs, rows,
+                                     pad_to, lctx, scratch)
+    } else {
+        model.predict_batch_fast(batch.machine, &batch.xs, rows, pad_to,
+                                 lctx, scratch)
+    };
+    crate::obsv::counter_add("net.batches", 1);
+    crate::obsv::observe("net.batch_rows", Unit::Count, rows as f64);
+    for (k, id) in batch.ids.iter().enumerate() {
+        if let Some(slot) = pending.remove(id) {
+            slot.fulfill(PredictOutcome::Done {
+                mean: mean[k],
+                var: var[k],
+            });
+        }
+    }
+}
+
+fn batch_loop(
+    shared: Arc<NodeShared>,
+    mut model: ServedModel,
+    rx: Receiver<Job>,
+) {
+    let _g = shared.registry.install();
+    let pad_to = shared.cfg.max_batch;
+    let lctx = LinalgCtx::serial();
+    let mut scratch = ServeScratch::new();
+    let mut batcher = DynamicBatcher::new(
+        model.machines(),
+        shared.d,
+        shared.cfg.max_batch,
+        shared.cfg.batch_wait_s,
+    );
+    let mut pending: HashMap<u64, Arc<Slot<PredictOutcome>>> =
+        HashMap::new();
+    let mut next_id = 0u64;
+    let mut batcher_peak = 0i64;
+    // wake at least as often as the age bound so expiry flushes are
+    // prompt, but never busy-spin
+    let tick = Duration::from_secs_f64(
+        shared.cfg.batch_wait_s.clamp(1e-4, 0.05),
+    );
+    loop {
+        match rx.recv_timeout(tick) {
+            Ok(Job::Predict { x, deadline_s, slot }) => {
+                shared.queue_depth.fetch_sub(1, Ordering::AcqRel);
+                crate::obsv::gauge_add("net.queue_depth", -1);
+                let now = shared.clock.now_s();
+                if now >= deadline_s {
+                    crate::obsv::counter_add("net.shed.deadline", 1);
+                    slot.fulfill(PredictOutcome::Expired);
+                } else {
+                    let m = model.router.route(&x);
+                    let id = next_id;
+                    next_id += 1;
+                    pending.insert(id, slot);
+                    if let Some(full) = batcher.push(m, id, &x, now) {
+                        execute_batch(&model, &full, pad_to, &lctx,
+                                      &mut scratch, &mut pending);
+                        batcher.recycle(full);
+                    }
+                }
+            }
+            Ok(Job::LoseMachine { machine, done }) => {
+                // finish open batches against the pre-loss model so no
+                // admitted request straddles the swap
+                for b in batcher.flush_all() {
+                    execute_batch(&model, &b, pad_to, &lctx, &mut scratch,
+                                  &mut pending);
+                    batcher.recycle(b);
+                }
+                match model.lose_machine(machine, &NativeBackend) {
+                    Ok(()) => {
+                        shared.machines
+                            .store(model.machines(), Ordering::Release);
+                        batcher = DynamicBatcher::new(
+                            model.machines(),
+                            shared.d,
+                            shared.cfg.max_batch,
+                            shared.cfg.batch_wait_s,
+                        );
+                        crate::obsv::counter_add("net.machines.lost", 1);
+                        done.fulfill(Ok(model.machines()));
+                    }
+                    Err(e) => done.fulfill(Err(e.to_string())),
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        let now = shared.clock.now_s();
+        for b in batcher.flush_expired(now) {
+            execute_batch(&model, &b, pad_to, &lctx, &mut scratch,
+                          &mut pending);
+            batcher.recycle(b);
+        }
+        let depth = batcher.pending() as i64;
+        if depth > batcher_peak {
+            batcher_peak = depth;
+            crate::obsv::gauge_set("serve.queue_depth_peak", batcher_peak);
+        }
+        crate::obsv::gauge_set(
+            "net.queue_depth_peak",
+            shared.queue_peak.load(Ordering::Acquire),
+        );
+        crate::obsv::gauge_set(
+            "net.inflight_peak",
+            shared.inflight_peak.load(Ordering::Acquire),
+        );
+    }
+    // drain: every admitted request still open gets its answer
+    for b in batcher.flush_all() {
+        execute_batch(&model, &b, pad_to, &lctx, &mut scratch,
+                      &mut pending);
+        batcher.recycle(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_bounded() {
+        let c = NodeConfig::default();
+        assert!(c.queue_cap > 0 && c.max_inflight > 0);
+        assert!(c.conn_backlog > 0 && c.workers > 0);
+        assert!(c.deadline_s > 0.0 && c.batch_wait_s > 0.0);
+        assert!(c.limits.max_body_bytes > 0);
+    }
+
+    #[test]
+    fn slot_rendezvous_and_timeout() {
+        let s: Arc<Slot<u32>> = Slot::new();
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            s2.fulfill(7);
+        });
+        assert_eq!(s.wait(Duration::from_secs(5)), Some(7));
+        t.join().unwrap();
+        // an unfulfilled slot times out with None
+        let empty: Arc<Slot<u32>> = Slot::new();
+        assert_eq!(empty.wait(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn predict_body_parsing() {
+        assert_eq!(parse_predict_body(b"{\"x\":[1.0,2.0]}", 2).unwrap(),
+                   vec![1.0, 2.0]);
+        assert!(parse_predict_body(b"{\"x\":[1.0]}", 2).is_err());
+        assert!(parse_predict_body(b"{\"y\":[1.0,2.0]}", 2).is_err());
+        assert!(parse_predict_body(b"not json", 2).is_err());
+        assert!(parse_predict_body(b"{\"x\":[1.0,\"a\"]}", 2).is_err());
+        assert!(parse_predict_body(&[0xff, 0xfe], 2).is_err());
+    }
+}

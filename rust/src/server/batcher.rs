@@ -17,6 +17,16 @@ pub struct Batch {
 
 /// Size-or-age batcher with one open batch per machine.
 ///
+/// Timestamps (`now` on [`DynamicBatcher::push`] /
+/// [`DynamicBatcher::flush_expired`]) are caller-supplied seconds on
+/// whatever clock the caller chooses, and the age math trusts them
+/// verbatim. Trace-replay drivers exploit this (simulated arrival
+/// times), but a live serving loop must NOT feed wall-clock time: an
+/// NTP step backward stalls expiry and a step forward prematurely
+/// flushes (both pinned in the tests below). The network loop
+/// ([`crate::net`]) reads every timestamp from one
+/// [`crate::util::time::MonoClock`] instead.
+///
 /// Executed batches can be handed back via [`DynamicBatcher::recycle`]:
 /// their `ids`/`xs` buffers go on a free list that [`DynamicBatcher::push`]
 /// drains before allocating, so a steady-state serve loop reuses the
@@ -275,6 +285,56 @@ mod tests {
     fn wrong_dim_rejected() {
         let mut b = DynamicBatcher::new(1, 2, 2, 1.0);
         b.push(0, 1, &[0.0], 0.0);
+    }
+
+    /// Pin the wall-clock hazard that motivates the monotonic path: the
+    /// batcher trusts caller timestamps verbatim, so a clock stepped
+    /// BACKWARD (NTP correction) stalls expiry — the batch sits past
+    /// its real age bound until the clock re-passes `oldest + max_wait`.
+    /// This is the documented caller contract, not a batcher bug; the
+    /// live network loop avoids it by timestamping from
+    /// [`crate::util::time::MonoClock`].
+    #[test]
+    fn wall_clock_step_backward_stalls_expiry() {
+        let mut b = DynamicBatcher::new(1, 1, 10, 0.5);
+        b.push(0, 1, &[0.0], 100.0);
+        // clock steps back 10s: even though >0.5s of real time may have
+        // passed, the age math sees a negative age and never flushes
+        assert!(b.flush_expired(90.0).is_empty(), "stalled by back-step");
+        assert!(b.flush_expired(100.4).is_empty(), "still under bound");
+        assert_eq!(b.flush_expired(100.5).len(), 1,
+                   "flushes only once the clock re-passes the bound");
+    }
+
+    /// The mirror hazard: a clock stepped FORWARD prematurely flushes a
+    /// batch that has waited almost no real time.
+    #[test]
+    fn wall_clock_step_forward_prematurely_flushes() {
+        let mut b = DynamicBatcher::new(1, 1, 10, 0.5);
+        b.push(0, 1, &[0.0], 100.0);
+        // an NTP step jumps the wall clock +1h: the age math reads
+        // 3600s >= 0.5s and flushes immediately
+        let out = b.flush_expired(3700.0);
+        assert_eq!(out.len(), 1, "premature flush on forward step");
+    }
+
+    /// The monotonic path: driving the same batcher from a
+    /// [`crate::util::time::MonoClock`] gives non-decreasing timestamps
+    /// by construction, so neither hazard above can occur — a batch
+    /// never flushes before its real age reaches the bound.
+    #[test]
+    fn mono_clock_drives_age_math_safely() {
+        let clock = crate::util::time::MonoClock::new();
+        let mut b = DynamicBatcher::new(1, 1, 10, 0.05);
+        let t0 = clock.now_s();
+        b.push(0, 1, &[0.0], t0);
+        // immediately after push, the real age is ~0 — no flush
+        assert!(b.flush_expired(clock.now_s()).is_empty());
+        // after sleeping past the bound, it must flush
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let out = b.flush_expired(clock.now_s());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].oldest_arrival, t0);
     }
 
     fn queue_depth(reg: &crate::obsv::Registry) -> i64 {

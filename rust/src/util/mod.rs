@@ -7,4 +7,4 @@ pub mod rng;
 pub mod time;
 
 pub use rng::Pcg64;
-pub use time::Stopwatch;
+pub use time::{MonoClock, Stopwatch};

@@ -40,6 +40,38 @@ impl Stopwatch {
     }
 }
 
+/// A monotonic seconds-since-anchor clock for serving-loop age math.
+///
+/// [`crate::server::DynamicBatcher`] takes caller-supplied `now`
+/// timestamps; feeding it wall-clock time makes batch expiry hostage
+/// to NTP steps (a backward step stalls flushes, a forward step
+/// prematurely flushes — both pinned in the batcher tests). The
+/// network serving loop reads every timestamp from one `MonoClock`
+/// instead: `Instant`-anchored, so readings only ever move forward
+/// regardless of what the system wall clock does.
+#[derive(Debug, Clone)]
+pub struct MonoClock {
+    anchor: Instant,
+}
+
+impl Default for MonoClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MonoClock {
+    /// Anchor the clock at the current instant (readings start near 0).
+    pub fn new() -> MonoClock {
+        MonoClock { anchor: Instant::now() }
+    }
+
+    /// Monotone non-decreasing seconds since the anchor.
+    pub fn now_s(&self) -> f64 {
+        self.anchor.elapsed().as_secs_f64()
+    }
+}
+
 /// Summary statistics over a set of duration samples (seconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DurationStats {
@@ -140,6 +172,27 @@ mod tests {
         let samples: Vec<f64> = (0..100).map(|i| i as f64).collect();
         let s = DurationStats::from_samples(&samples).unwrap();
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn mono_clock_is_monotone_and_nonnegative() {
+        let c = MonoClock::new();
+        let mut prev = c.now_s();
+        assert!(prev >= 0.0);
+        for _ in 0..100 {
+            let t = c.now_s();
+            assert!(t >= prev, "clock went backward: {t} < {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn mono_clocks_have_independent_anchors() {
+        let a = MonoClock::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = MonoClock::new();
+        // `a` was anchored earlier, so it has strictly more elapsed time
+        assert!(a.now_s() > b.now_s());
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Integration: the TCP serving front-end over real loopback sockets.
+//!
+//! Covers the net/ subsystem end to end: HTTP hardening against
+//! malformed/oversized input arriving over actual sockets, keep-alive
+//! pipelining, socket-vs-direct bitwise prediction equivalence,
+//! admission control under overload (bounded queues, 429/503 sheds,
+//! counters in `/stats`), deadline expiry, `lose_machine` under live
+//! traffic, graceful drain, and the `loadgen` smoke sweep writing a
+//! parseable `BENCH_e2e.json`.
+//!
+//! Every test binds `127.0.0.1:0` (kernel-assigned port), so the suite
+//! is safe under the default parallel test runner.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use pgpr::api::Gp;
+use pgpr::kernel::SeArd;
+use pgpr::linalg::{LinalgCtx, Mat};
+use pgpr::net::loadgen::{run_loadgen, HttpClient, LoadgenConfig};
+use pgpr::net::{NodeConfig, NodeHandle, NodeServer};
+use pgpr::runtime::NativeBackend;
+use pgpr::server::{ServeScratch, ServedModel};
+use pgpr::util::json::{self, Json};
+use pgpr::util::Pcg64;
+
+const D: usize = 2;
+
+/// Deterministic tiny model: two builds with the same knobs are
+/// bitwise-identical (pinned by `service.rs` tests), which is what
+/// lets these tests compare socket responses against a local twin.
+fn model(n: usize, m: usize, s: usize, seed: u64) -> ServedModel {
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(D, 1.0, 1.0, 0.05);
+    let xd = Mat::from_vec(n, D, rng.normals(n * D));
+    let y = rng.normals(n);
+    Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(s)
+        .seed(seed)
+        .serve()
+        .expect("fit")
+}
+
+/// Fast-drain config so tests never wait on the 5 s default read
+/// timeout.
+fn quick_cfg() -> NodeConfig {
+    NodeConfig {
+        workers: 4,
+        read_timeout_s: 0.25,
+        idle_close_s: 1.0,
+        ..NodeConfig::default()
+    }
+}
+
+fn start(m: usize, seed: u64, cfg: NodeConfig) -> NodeHandle {
+    NodeServer::start(model(48, m, 8, seed), "127.0.0.1:0", cfg)
+        .expect("bind")
+}
+
+fn predict_body(x: &[f64]) -> String {
+    json::obj(vec![(
+        "x",
+        Json::Arr(x.iter().map(|&v| Json::Num(v)).collect()),
+    )])
+    .to_string_compact()
+}
+
+/// Send raw bytes, read until the server closes, return the response
+/// text (parser-level errors always close the connection).
+fn raw_roundtrip(addr: &str, req: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(req).expect("write");
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+// ---------------------------------------------------------------------
+
+#[test]
+fn healthz_stats_and_routing() {
+    let h = start(3, 5, quick_cfg());
+    let t = h.addr().to_string();
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+
+    let doc = c.get_json("/healthz").unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(doc.get("d").and_then(Json::as_usize), Some(D));
+    assert_eq!(doc.get("machines").and_then(Json::as_usize), Some(3));
+    assert!(doc.get("queue_cap").and_then(Json::as_usize).unwrap() > 0);
+
+    // JSON scrape: the shared telemetry schema, with net counters live
+    let stats = c.get_json("/stats?format=json").unwrap();
+    assert_eq!(stats.get("schema").and_then(Json::as_str),
+               Some("pgpr-telemetry/1"));
+    let requests = stats
+        .get("counters")
+        .and_then(|cs| cs.get("net.requests"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(requests >= 2, "net.requests = {requests}");
+
+    // prometheus scrape: mangled name present
+    let (status, body) = c.get("/stats").unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("pgpr_net_requests"), "prometheus:\n{text}");
+
+    // unknown path and wrong method
+    assert_eq!(c.get("/nope").unwrap().0, 404);
+    assert_eq!(c.get("/v1/predict").unwrap().0, 405);
+    assert_eq!(c.post("/healthz", b"").unwrap().0, 405);
+
+    h.shutdown_and_join();
+}
+
+#[test]
+fn socket_predictions_match_direct_calls_bitwise() {
+    let h = start(3, 9, quick_cfg());
+    let t = h.addr().to_string();
+    let twin = model(48, 3, 8, 9);
+    let lctx = LinalgCtx::serial();
+    let mut scratch = ServeScratch::new();
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    let mut rng = Pcg64::seed(77);
+    for _ in 0..20 {
+        let x = rng.normals(D);
+        let (status, body) =
+            c.post("/v1/predict", predict_body(&x).as_bytes()).unwrap();
+        assert_eq!(status, 200, "{}",
+                   String::from_utf8_lossy(&body));
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap();
+        let got_mean = doc.get("mean").and_then(Json::as_f64).unwrap();
+        let got_var = doc.get("var").and_then(Json::as_f64).unwrap();
+        let m = twin.router.route(&x);
+        let (mean, var) =
+            twin.predict_batch_fast(m, &x, 1, 1, &lctx, &mut scratch);
+        // bitwise: padding transparency + shortest-roundtrip JSON f64
+        assert_eq!(got_mean.to_bits(), mean[0].to_bits());
+        assert_eq!(got_var.to_bits(), var[0].to_bits());
+    }
+    h.shutdown_and_join();
+}
+
+#[test]
+fn malformed_inputs_over_real_sockets() {
+    let h = start(2, 3, quick_cfg());
+    let t = h.addr().to_string();
+
+    let cases: &[(&[u8], &str)] = &[
+        (b"GARBAGE\r\n\r\n", "HTTP/1.1 400"),
+        (b"GET /healthz HTTP/2.0\r\n\r\n", "HTTP/1.1 400"),
+        (b"DELETE /healthz HTTP/1.1\r\n\r\n", "HTTP/1.1 501"),
+        (b"POST /v1/predict HTTP/1.1\r\nhost: a\r\n\r\n",
+         "HTTP/1.1 411"),
+        (b"POST /v1/predict HTTP/1.1\r\ncontent-length: 99999999\r\n\r\n",
+         "HTTP/1.1 413"),
+        (b"POST /v1/predict HTTP/1.1\r\ncontent-length: ten\r\n\r\n",
+         "HTTP/1.1 400"),
+        (b"GET /healthz HTTP/1.1\r\nbroken header line\r\n\r\n",
+         "HTTP/1.1 400"),
+        (b"POST /v1/predict HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+         "HTTP/1.1 501"),
+    ];
+    for (req, want) in cases {
+        let resp = raw_roundtrip(&t, req);
+        assert!(resp.starts_with(want),
+                "request {:?} → {:?}, want {want}",
+                String::from_utf8_lossy(req), resp);
+    }
+
+    // oversized request line → 414
+    let mut long = b"GET /".to_vec();
+    long.extend(std::iter::repeat_n(b'a', 9000));
+    long.extend_from_slice(b" HTTP/1.1\r\n\r\n");
+    assert!(raw_roundtrip(&t, &long).starts_with("HTTP/1.1 414"));
+
+    // too many headers → 431
+    let mut many = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    for i in 0..70 {
+        many.extend_from_slice(format!("x-h{i}: v\r\n").as_bytes());
+    }
+    many.extend_from_slice(b"\r\n");
+    assert!(raw_roundtrip(&t, &many).starts_with("HTTP/1.1 431"));
+
+    // premature close mid-request never wedges the node...
+    {
+        let mut s = TcpStream::connect(&t).unwrap();
+        s.write_all(b"POST /v1/predict HTTP/1.1\r\ncontent-le").unwrap();
+        // drop: peer disappears mid-header
+    }
+    // ...and a bad predict body is a 400 on a *kept-alive* connection
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    assert_eq!(c.post("/v1/predict", b"{\"x\":[1.0]}").unwrap().0, 400);
+    assert_eq!(c.post("/v1/predict", b"not json").unwrap().0, 400);
+    let doc = c.get_json("/healthz").unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+
+    h.shutdown_and_join();
+}
+
+#[test]
+fn pipelined_keep_alive_requests_all_answered() {
+    let h = start(2, 3, quick_cfg());
+    let t = h.addr().to_string();
+    let mut s = TcpStream::connect(&t).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let one = b"GET /healthz HTTP/1.1\r\nhost: a\r\n\r\n";
+    let mut pipelined = Vec::new();
+    for _ in 0..3 {
+        pipelined.extend_from_slice(one);
+    }
+    s.write_all(&pipelined).unwrap();
+    let mut text = String::new();
+    let mut buf = [0u8; 4096];
+    while text.matches("HTTP/1.1 200").count() < 3 {
+        let n = s.read(&mut buf).expect("read");
+        assert!(n > 0, "server closed early:\n{text}");
+        text.push_str(&String::from_utf8_lossy(&buf[..n]));
+    }
+    assert_eq!(text.matches("\"status\"").count(), 3);
+    h.shutdown_and_join();
+}
+
+#[test]
+fn overload_sheds_bounded_and_observable() {
+    // tiny doors + slow batching: saturation is certain
+    let cfg = NodeConfig {
+        queue_cap: 4,
+        max_inflight: 2,
+        batch_wait_s: 0.05,
+        deadline_s: 10.0,
+        conn_backlog: 64,
+        workers: 8,
+        ..quick_cfg()
+    };
+    let h = start(2, 3, cfg);
+    let t = h.addr().to_string();
+
+    let (ok, shed, other) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|ti| {
+                let t = &t;
+                s.spawn(move || {
+                    let mut rng = Pcg64::seed(100 + ti);
+                    let mut c = HttpClient::connect(t, 10.0).unwrap();
+                    let (mut ok, mut shed, mut other) = (0u32, 0u32, 0u32);
+                    for _ in 0..25 {
+                        let body = predict_body(&rng.normals(D));
+                        match c.post("/v1/predict", body.as_bytes()) {
+                            Ok((200, _)) => ok += 1,
+                            Ok((429, _)) | Ok((503, _)) => shed += 1,
+                            _ => other += 1,
+                        }
+                    }
+                    (ok, shed, other)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).fold(
+            (0, 0, 0),
+            |(a, b, c), (x, y, z)| (a + x, b + y, c + z),
+        )
+    });
+    assert!(ok > 0, "no request survived admission");
+    assert!(shed > 0, "overload never shed (ok={ok}, other={other})");
+    assert_eq!(other, 0, "unexpected statuses/transport errors");
+
+    // sheds and peaks are observable in /stats, and the peaks honor
+    // the configured bounds: backpressure stayed bounded
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    let stats = c.get_json("/stats?format=json").unwrap();
+    let counter = |name: &str| {
+        stats
+            .get("counters")
+            .and_then(|cs| cs.get(name))
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    };
+    assert!(counter("net.shed.inflight") + counter("net.shed.queue")
+                >= shed as usize,
+            "shed counters under-report");
+    let gauge = |name: &str| {
+        stats
+            .get("gauges")
+            .and_then(|g| g.get(name))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    assert!(gauge("net.queue_depth_peak") <= 4.0);
+    assert!(gauge("net.inflight_peak") <= 2.0);
+    h.shutdown_and_join();
+}
+
+#[test]
+fn zero_deadline_expires_every_predict() {
+    let cfg = NodeConfig { deadline_s: 0.0, ..quick_cfg() };
+    let h = start(2, 3, cfg);
+    let t = h.addr().to_string();
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    let mut rng = Pcg64::seed(4);
+    for _ in 0..5 {
+        let (status, body) = c
+            .post("/v1/predict", predict_body(&rng.normals(D)).as_bytes())
+            .unwrap();
+        assert_eq!(status, 503);
+        assert!(String::from_utf8_lossy(&body).contains("deadline"));
+    }
+    let stats = c.get_json("/stats?format=json").unwrap();
+    let expired = stats
+        .get("counters")
+        .and_then(|cs| cs.get("net.shed.deadline"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(expired >= 5, "net.shed.deadline = {expired}");
+    // non-predict endpoints are unaffected
+    assert_eq!(c.get("/healthz").unwrap().0, 200);
+    h.shutdown_and_join();
+}
+
+#[test]
+fn lose_machine_under_live_traffic() {
+    let cfg = NodeConfig { deadline_s: 5.0, ..quick_cfg() };
+    let h = start(3, 21, cfg);
+    let t = h.addr().to_string();
+
+    let statuses = std::thread::scope(|s| {
+        let t2 = &t;
+        // live traffic: sequential predicts throughout the rebalance
+        let traffic = s.spawn(move || {
+            let mut rng = Pcg64::seed(55);
+            let mut c = HttpClient::connect(t2, 10.0).unwrap();
+            let mut statuses = Vec::new();
+            for _ in 0..120 {
+                let body = predict_body(&rng.normals(D));
+                let (status, _) =
+                    c.post("/v1/predict", body.as_bytes()).unwrap();
+                statuses.push(status);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            statuses
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        let mut admin = HttpClient::connect(&t, 30.0).unwrap();
+        // out-of-range machine is a clean 409, cluster unchanged
+        assert_eq!(
+            admin.post("/v1/admin/lose_machine", b"{\"machine\":9}")
+                .unwrap().0,
+            409
+        );
+        let (status, body) = admin
+            .post("/v1/admin/lose_machine", b"{\"machine\":1}")
+            .unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let doc =
+            Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(doc.get("machines").and_then(Json::as_usize),
+                   Some(2));
+        traffic.join().unwrap()
+    });
+    // continued 2xx from survivors: no request saw an error
+    assert!(statuses.iter().all(|&s| s == 200),
+            "non-200 during rebalance: {statuses:?}");
+
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    let doc = c.get_json("/healthz").unwrap();
+    assert_eq!(doc.get("machines").and_then(Json::as_usize), Some(2));
+
+    // post-loss predictions are bitwise those of a twin that lost the
+    // same machine (lose_machine ≡ fresh fit on the merged partition)
+    let mut twin = model(48, 3, 8, 21);
+    twin.lose_machine(1, &NativeBackend).unwrap();
+    let lctx = LinalgCtx::serial();
+    let mut scratch = ServeScratch::new();
+    let mut rng = Pcg64::seed(91);
+    for _ in 0..10 {
+        let x = rng.normals(D);
+        let (status, body) =
+            c.post("/v1/predict", predict_body(&x).as_bytes()).unwrap();
+        assert_eq!(status, 200);
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap())
+            .unwrap();
+        let m = twin.router.route(&x);
+        let (mean, var) =
+            twin.predict_batch_fast(m, &x, 1, 1, &lctx, &mut scratch);
+        assert_eq!(doc.get("mean").and_then(Json::as_f64).unwrap()
+                       .to_bits(),
+                   mean[0].to_bits());
+        assert_eq!(doc.get("var").and_then(Json::as_f64).unwrap()
+                       .to_bits(),
+                   var[0].to_bits());
+    }
+    h.shutdown_and_join();
+}
+
+#[test]
+fn graceful_drain_stops_listening_and_joins() {
+    let h = start(2, 3, quick_cfg());
+    let t = h.addr().to_string();
+
+    std::thread::scope(|s| {
+        let t2 = &t;
+        let traffic: Vec<_> = (0..4)
+            .map(|ti| {
+                s.spawn(move || {
+                    let mut rng = Pcg64::seed(200 + ti);
+                    let mut c = match HttpClient::connect(t2, 5.0) {
+                        Ok(c) => c,
+                        Err(_) => return,
+                    };
+                    for _ in 0..10 {
+                        let body = predict_body(&rng.normals(D));
+                        // responses may stop mid-stream once the drain
+                        // begins; transport errors are expected then
+                        if let Ok((status, _)) =
+                            c.post("/v1/predict", body.as_bytes())
+                        {
+                            assert!(
+                                matches!(status, 200 | 429 | 503),
+                                "unexpected status {status}"
+                            );
+                        } else {
+                            return;
+                        }
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        let mut admin = HttpClient::connect(&t, 10.0).unwrap();
+        let (status, body) =
+            admin.post("/v1/admin/shutdown", b"").unwrap();
+        assert_eq!(status, 200);
+        assert!(String::from_utf8_lossy(&body).contains("draining"));
+        for th in traffic {
+            th.join().unwrap();
+        }
+    });
+
+    // every thread exits: drain flushed all open work
+    h.join();
+    // and the final snapshot is still scrapeable in-process
+    let snap = h.registry()
+        .snapshot(pgpr::obsv::SnapshotMode::Full);
+    assert!(snap.to_json().to_string_compact()
+        .contains("net.requests"));
+}
+
+#[test]
+fn loadgen_smoke_writes_bench_e2e_report() {
+    let h = start(2, 11, quick_cfg());
+    let t = h.addr().to_string();
+    let cfg = LoadgenConfig {
+        target: t.clone(),
+        qps_steps: vec![50.0],
+        duration_s: 0.3,
+        conns: 2,
+        seed: 1,
+    };
+    let report = run_loadgen(&cfg).expect("loadgen");
+    assert_eq!(report.steps.len(), 1);
+    let st = &report.steps[0];
+    assert!(st.ok > 0, "no successful request in smoke sweep");
+    assert!(st.ok + st.shed_429 + st.shed_503 + st.http_errors
+                + st.io_errors
+                <= st.offered + 1);
+
+    let path = std::env::temp_dir().join("pgpr_bench_e2e_test.json");
+    let path_s = path.to_str().unwrap().to_string();
+    report.write(&path_s).unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap())
+        .unwrap();
+    assert_eq!(doc.get("schema").and_then(Json::as_str),
+               Some("pgpr-bench-e2e/1"));
+    assert_eq!(
+        doc.get("steps").and_then(Json::as_arr).map(<[Json]>::len),
+        Some(1)
+    );
+    let _ = std::fs::remove_file(&path);
+    h.shutdown_and_join();
+}

@@ -112,6 +112,24 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] when a condition does not hold,
+/// like anyhow's `ensure!` (message form and bare-condition form).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
