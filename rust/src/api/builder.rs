@@ -293,6 +293,15 @@ impl GpBuilder {
         Gp::fit(&self.spec()?)
     }
 
+    /// Restore a fitted model from a checkpoint file written by
+    /// [`crate::api::Regressor::save`] (ignores the builder's own recipe — the
+    /// checkpoint carries the full resolved spec). Corrupt or
+    /// mismatched files come back as [`ApiError::Store`], never a
+    /// panic.
+    pub fn from_checkpoint(path: &str) -> Result<Gp> {
+        Gp::load(path)
+    }
+
     /// Fit an unboxed streaming session ([`Method::Online`] implied) so
     /// the caller keeps access to [`OnlineSession::absorb`].
     pub fn online(&self) -> Result<OnlineSession> {

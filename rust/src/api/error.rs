@@ -3,6 +3,7 @@
 //! instead of panics deep inside [`crate::linalg`].
 
 use crate::linalg::cholesky::NotSpd;
+use crate::store::StoreError;
 use std::fmt;
 
 /// `Result` specialized to the facade's error type.
@@ -61,6 +62,10 @@ pub enum ApiError {
     InvalidSpec(String),
     /// The operation is not defined for this method.
     Unsupported(&'static str),
+    /// Saving or loading a checkpoint failed (see
+    /// [`crate::store::StoreError`] — corrupt input surfaces here as a
+    /// typed value, never a panic).
+    Store(StoreError),
 }
 
 impl ApiError {
@@ -103,6 +108,7 @@ impl fmt::Display for ApiError {
             ApiError::Unsupported(op) => {
                 write!(f, "operation not supported by this method: {op}")
             }
+            ApiError::Store(e) => write!(f, "{e}"),
         }
     }
 }
@@ -112,6 +118,12 @@ impl std::error::Error for ApiError {}
 impl From<crate::cluster::MachinesLost> for ApiError {
     fn from(e: crate::cluster::MachinesLost) -> ApiError {
         ApiError::MachinesLost { phase: e.phase, machines: e.machines }
+    }
+}
+
+impl From<StoreError> for ApiError {
+    fn from(e: StoreError) -> ApiError {
+        ApiError::Store(e)
     }
 }
 

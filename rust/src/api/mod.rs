@@ -65,6 +65,7 @@ pub use spec::{FitSpec, PartitionSpec, PredictOutput, PredictSpec,
 use crate::gp::Prediction;
 use crate::kernel::SeArd;
 use crate::linalg::Mat;
+use crate::store::Checkpoint;
 
 /// The one interface every GP regression method implements.
 ///
@@ -151,6 +152,21 @@ pub trait Regressor: Send + Sync {
     /// support set, partition and executor (the serving hot-swap path
     /// for trained hypers).
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>>;
+
+    /// Snapshot this model's durable state as a [`Checkpoint`]
+    /// (versioned, checksummed, deterministic — see [`crate::store`]).
+    /// Every in-crate method implements this; the default exists only
+    /// for external `Regressor` implementations that opt out.
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Err(ApiError::Unsupported("checkpoint"))
+    }
+
+    /// Atomically persist this model to `path` (temp file + fsync +
+    /// rename); returns the byte count written. Reload through
+    /// [`Gp::load`] / [`GpBuilder::from_checkpoint`].
+    fn save(&self, path: &str) -> Result<u64> {
+        Ok(self.checkpoint()?.write_file(path)?)
+    }
 
     /// Number of (simulated) machines holding the data.
     fn machines(&self) -> usize;
@@ -242,6 +258,46 @@ impl Gp {
     #[must_use]
     pub fn as_regressor(&self) -> &dyn Regressor {
         self.inner.as_ref()
+    }
+
+    /// Snapshot the model's durable state — see [`Regressor::checkpoint`].
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        self.inner.checkpoint()
+    }
+
+    /// Atomically persist to `path`; returns bytes written — see
+    /// [`Regressor::save`].
+    pub fn save(&self, path: &str) -> Result<u64> {
+        self.inner.save(path)
+    }
+
+    /// Rebuild a fitted model from a decoded [`Checkpoint`]. Batch
+    /// checkpoints re-run the deterministic fit from their resolved
+    /// ingredients; online checkpoints restore the stream state
+    /// verbatim. Either way the rebuilt model predicts bitwise what the
+    /// saved one did, and re-serializing it reproduces the checkpoint
+    /// byte-for-byte (pinned in `tests/integration_store.rs`). A served
+    /// checkpoint belongs to [`crate::server::ServedModel::load`] and
+    /// is reported as a typed mismatch here.
+    pub fn from_checkpoint(ckpt: Checkpoint) -> Result<Gp> {
+        match ckpt {
+            Checkpoint::Batch(b) => Gp::fit(&models::spec_of_batch(&b)),
+            Checkpoint::Online(o) => Ok(Gp {
+                inner: Box::new(OnlineSession::from_checkpoint(o)?),
+            }),
+            Checkpoint::Served(_) => {
+                Err(ApiError::Store(crate::store::StoreError::MethodMismatch {
+                    expected: "an api::Method model",
+                    found: "served",
+                }))
+            }
+        }
+    }
+
+    /// Read, validate and rebuild a model from a checkpoint file —
+    /// corrupt input yields a typed [`ApiError::Store`], never a panic.
+    pub fn load(path: &str) -> Result<Gp> {
+        Gp::from_checkpoint(Checkpoint::read_file(path)?)
     }
 }
 

@@ -10,8 +10,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use super::error::{ApiError, Result};
 use super::method::Method;
-use super::spec::{validate_test_partition, FitSpec, PredictOutput,
-                  PredictSpec};
+use super::spec::{validate_test_partition, FitSpec, PartitionSpec,
+                  PredictOutput, PredictSpec, SupportSpec};
 use super::Regressor;
 use crate::cluster::{Cluster, NetworkModel, ParallelExecutor};
 use crate::gp::icf_gp::IcfGp;
@@ -23,7 +23,10 @@ use crate::kernel::SeArd;
 use crate::linalg::{LinalgCtx, Mat};
 use crate::parallel::online::OnlineGp;
 use crate::parallel::{picf, ppic, ppitc, ClusterSpec};
+use crate::runtime::NativeBackend;
 use crate::server::Router;
+use crate::store::{BatchCheckpoint, Checkpoint, OnlineCheckpoint,
+                   StoreError};
 
 /// Shape-check a test matrix against the training dimensionality.
 fn check_xu_mat(d: usize, xu: &Mat) -> Result<()> {
@@ -133,6 +136,62 @@ fn refit_of<T: Regressor + 'static>(spec: &FitSpec, hyp: &SeArd)
     Ok(Box::new(T::fit(&s)?))
 }
 
+/// Checkpoint a batch model: the *resolved fit ingredients* go to disk
+/// (hyperparameters, data, materialized support/partition, rank,
+/// threads, seed, precision mode), not the fitted factors — fitting
+/// from a resolved spec is bitwise-reproducible, so rerunning the
+/// deterministic fit on load reproduces the model exactly while the
+/// file format stays independent of internal factor layouts.
+fn batch_checkpoint(spec: &FitSpec, method: Method) -> Checkpoint {
+    Checkpoint::Batch(BatchCheckpoint {
+        method,
+        hyp: spec.hyp.clone(),
+        xd: spec.xd.clone(),
+        y: spec.y.clone(),
+        machines: spec.machines,
+        support: match &spec.support {
+            SupportSpec::Points(xs) => Some(xs.clone()),
+            _ => None,
+        },
+        partition: match &spec.partition {
+            PartitionSpec::Blocks(b) => Some(b.clone()),
+            PartitionSpec::Random => None,
+        },
+        rank: spec.rank,
+        threads: spec.threads,
+        seed: spec.seed,
+        mixed_precision: spec.mixed_precision,
+    })
+}
+
+/// Rebuild the fit spec a [`BatchCheckpoint`] describes (native
+/// backend, no fault plan — persistence captures the model, not the
+/// chaos harness around it).
+pub(crate) fn spec_of_batch(ck: &BatchCheckpoint) -> FitSpec {
+    FitSpec {
+        method: ck.method,
+        hyp: ck.hyp.clone(),
+        xd: ck.xd.clone(),
+        y: ck.y.clone(),
+        machines: ck.machines,
+        support: match &ck.support {
+            Some(xs) => SupportSpec::Points(xs.clone()),
+            None => SupportSpec::Unset,
+        },
+        partition: match &ck.partition {
+            Some(b) => PartitionSpec::Blocks(b.clone()),
+            None => PartitionSpec::Random,
+        },
+        rank: ck.rank,
+        threads: ck.threads,
+        seed: ck.seed,
+        backend: Arc::new(NativeBackend),
+        exec: None,
+        faults: None,
+        mixed_precision: ck.mixed_precision,
+    }
+}
+
 // ------------------------------------------------------- centralized
 
 /// Exact full GP behind the facade.
@@ -164,6 +223,10 @@ impl Regressor for FgpModel {
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<FgpModel>(&self.spec, hyp)
+    }
+
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::Fgp))
     }
 
     fn machines(&self) -> usize {
@@ -205,6 +268,10 @@ impl Regressor for PitcModel {
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<PitcModel>(&self.spec, hyp)
+    }
+
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::Pitc))
     }
 
     fn machines(&self) -> usize {
@@ -260,6 +327,10 @@ impl Regressor for PicModel {
         refit_of::<PicModel>(&self.spec, hyp)
     }
 
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::Pic))
+    }
+
     fn machines(&self) -> usize {
         self.spec.machines
     }
@@ -303,6 +374,10 @@ impl Regressor for IcfModel {
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<IcfModel>(&self.spec, hyp)
+    }
+
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::Icf))
     }
 
     fn machines(&self) -> usize {
@@ -383,6 +458,10 @@ impl Regressor for PPitcModel {
         refit_of::<PPitcModel>(&self.spec, hyp)
     }
 
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::PPitc))
+    }
+
     fn machines(&self) -> usize {
         self.spec.machines
     }
@@ -459,6 +538,10 @@ impl Regressor for PPicModel {
 
     fn refit(&self, hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         refit_of::<PPicModel>(&self.spec, hyp)
+    }
+
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::PPic))
     }
 
     fn machines(&self) -> usize {
@@ -552,6 +635,10 @@ impl Regressor for PIcfModel {
         refit_of::<PIcfModel>(&self.spec, hyp)
     }
 
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(batch_checkpoint(&self.spec, Method::PIcf))
+    }
+
     fn machines(&self) -> usize {
         self.spec.machines
     }
@@ -637,6 +724,90 @@ impl OnlineSession {
         self.gp.absorb_makespan
     }
 
+    /// Rebuild a session from a decoded [`OnlineCheckpoint`]: the fit
+    /// spec is reconstructed from the stored ingredients, the
+    /// [`OnlineGp`] stream state is restored verbatim (its support
+    /// context recomputed with the same execution context `absorb`
+    /// uses), and the router is rebuilt over the restored latest
+    /// blocks. Absorbing the remaining batches afterwards is
+    /// bitwise-identical to a process that never stopped; structural
+    /// inconsistencies in a crafted checkpoint surface as typed
+    /// [`ApiError::Store`] values, never a panic.
+    pub fn from_checkpoint(ck: OnlineCheckpoint) -> Result<OnlineSession> {
+        let corrupt = |reason: String| {
+            ApiError::Store(StoreError::Corrupt { section: "latest", reason })
+        };
+        if ck.y_mean.is_none() || ck.global.is_none() || ck.l_g.is_none() {
+            return Err(ApiError::Store(StoreError::Corrupt {
+                section: "stream",
+                reason: "session checkpoint has no absorbed state".into(),
+            }));
+        }
+        let d = ck.xd.cols;
+        if ck.support.cols != d {
+            return Err(ApiError::Store(StoreError::Corrupt {
+                section: "support",
+                reason: format!(
+                    "support cols {} != input dim {d}",
+                    ck.support.cols
+                ),
+            }));
+        }
+        let mut latest_inputs = Vec::with_capacity(ck.latest.len());
+        for (m, slot) in ck.latest.iter().enumerate() {
+            let Some((xm, ym, _)) = slot else {
+                return Err(corrupt(format!("machine {m} has no block")));
+            };
+            if xm.cols != d {
+                return Err(corrupt(format!(
+                    "machine {m} block cols {} != input dim {d}",
+                    xm.cols
+                )));
+            }
+            if xm.rows == 0 || xm.rows != ym.len() {
+                return Err(corrupt(format!(
+                    "machine {m} block has {} rows but {} targets",
+                    xm.rows,
+                    ym.len()
+                )));
+            }
+            latest_inputs.push(xm.clone());
+        }
+        let (spec, exec) = prepared(&spec_of_batch(&BatchCheckpoint {
+            method: Method::Online,
+            hyp: ck.hyp.clone(),
+            xd: ck.xd.clone(),
+            y: ck.y.clone(),
+            machines: ck.machines,
+            support: Some(ck.support.clone()),
+            partition: Some(ck.partition.clone()),
+            rank: None,
+            threads: ck.threads,
+            seed: ck.seed,
+            mixed_precision: ck.mixed_precision,
+        }))?;
+        let cluster = cluster_of(&spec, &exec);
+        let gp = OnlineGp::restore(
+            &spec.hyp,
+            &ck.support,
+            Arc::clone(&spec.backend),
+            cluster,
+            ck.y_mean,
+            ck.global,
+            ck.l_g,
+            ck.latest,
+            ck.batches,
+        )
+        .map_err(|e| ApiError::not_spd("Σ_SS", &e))?;
+        let router = router_over(&spec.hyp, &latest_inputs);
+        Ok(OnlineSession {
+            spec,
+            gp,
+            latest_inputs,
+            router,
+            staged: Mutex::new(None),
+        })
+    }
 }
 
 /// Nearest-centroid router over a set of machine blocks.
@@ -701,6 +872,29 @@ impl Regressor for OnlineSession {
     /// reconstruct — rebuild via the builder instead.
     fn refit(&self, _hyp: &SeArd) -> Result<Box<dyn Regressor>> {
         Err(ApiError::Unsupported("refit of an online session"))
+    }
+
+    /// Mid-stream snapshot: fit ingredients + the assimilated summaries
+    /// and every machine's latest block. Restore with
+    /// [`OnlineSession::from_checkpoint`] and keep absorbing — the
+    /// stream continues bitwise as if the process never stopped.
+    fn checkpoint(&self) -> Result<Checkpoint> {
+        Ok(Checkpoint::Online(OnlineCheckpoint {
+            hyp: self.spec.hyp.clone(),
+            xd: self.spec.xd.clone(),
+            y: self.spec.y.clone(),
+            machines: self.spec.machines,
+            support: self.spec.support_points().clone(),
+            partition: self.spec.blocks().to_vec(),
+            threads: self.spec.threads,
+            seed: self.spec.seed,
+            mixed_precision: self.spec.mixed_precision,
+            y_mean: self.gp.stream_y_mean(),
+            global: self.gp.stream_global().cloned(),
+            l_g: self.gp.stream_l_g().cloned(),
+            latest: self.gp.stream_latest().to_vec(),
+            batches: self.gp.batches,
+        }))
     }
 
     fn machines(&self) -> usize {

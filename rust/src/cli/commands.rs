@@ -555,6 +555,8 @@ pub fn node(args: &Args) -> Result<()> {
     let d = args.usize_or("d", 2)?.max(1);
     let seed = args.u64_or("seed", 1)?;
     let telemetry_out = args.get("telemetry-out").map(str::to_string);
+    let checkpoint = args.get("checkpoint").map(str::to_string);
+    let snapshot_every_s = args.f64_or("snapshot-every-s", 0.0)?;
     let dflt = NodeConfig::default();
     let cfg = NodeConfig {
         workers: args.usize_or("workers", dflt.workers)?.max(1),
@@ -568,15 +570,39 @@ pub fn node(args: &Args) -> Result<()> {
             * 1e-3,
         deadline_s: args.f64_or("deadline-ms", dflt.deadline_s * 1e3)?
             * 1e-3,
+        checkpoint_path: checkpoint.clone(),
+        snapshot_every_s,
         ..dflt
     };
-    let model =
-        synthetic_model(n, m, s, d, seed, args.flag("mixed-precision"))?;
+    // cold start: an existing checkpoint restores the model without a
+    // refit (serving within the restore + staging time); otherwise fit
+    // fresh and, when a --checkpoint path is given, seed it so the
+    // first crash already has an image to come back to
+    let model = match &checkpoint {
+        Some(path) if std::path::Path::new(path).exists() => {
+            let t0 = std::time::Instant::now();
+            let model = crate::server::ServedModel::load(path)
+                .map_err(|e| anyhow!("restore {path}: {e}"))?;
+            println!("restored checkpoint {path} ({} machines, {:.3}s)",
+                     model.machines(), t0.elapsed().as_secs_f64());
+            model
+        }
+        _ => {
+            let model = synthetic_model(n, m, s, d, seed,
+                                        args.flag("mixed-precision"))?;
+            if let Some(path) = &checkpoint {
+                let bytes = model.save(path)
+                    .map_err(|e| anyhow!("save {path}: {e}"))?;
+                println!("wrote initial checkpoint {path} ({bytes} bytes)");
+            }
+            model
+        }
+    };
     let handle = NodeServer::start(model, listen, cfg)?;
     println!("pgpr node listening on {} (|D|={n}, m={m}, |S|={s}, d={d})",
              handle.addr());
     println!("  POST /v1/predict   GET /stats[?format=json]   \
-              GET /healthz   POST /v1/admin/shutdown");
+              GET /healthz   POST /v1/admin/{{snapshot,reload,shutdown}}");
     let reg = handle.registry().clone();
     handle.join();
     if let Some(path) = telemetry_out {
@@ -585,6 +611,101 @@ pub fn node(args: &Args) -> Result<()> {
         println!("wrote telemetry snapshot {path}");
     }
     println!("pgpr node drained");
+    Ok(())
+}
+
+/// `pgpr save` — fit a model on the node's synthetic workload and
+/// write its checkpoint: the staged serving model by default
+/// (`--method served`), or any batch method. Online sessions
+/// checkpoint mid-stream through the API instead.
+pub fn save(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out PATH required"))?;
+    let method_name = args.str_or("method", "served");
+    let m = args.usize_or("m", 4)?.max(1);
+    let n = (args.usize_or("n", 512)? / m).max(2) * m;
+    let s = args.usize_or("s", 32)?;
+    let d = args.usize_or("d", 2)?.max(1);
+    let seed = args.u64_or("seed", 1)?;
+    let bytes = if method_name == "served" {
+        let model = synthetic_model(n, m, s, d, seed,
+                                    args.flag("mixed-precision"))?;
+        model.save(out)?
+    } else {
+        let method = Method::parse(method_name)
+            .ok_or_else(|| anyhow!("unknown method '{method_name}'"))?;
+        if method == Method::Online {
+            bail!("online sessions checkpoint mid-stream through the \
+                   API; `pgpr save` covers batch methods and 'served'");
+        }
+        let mut rng = Pcg64::seed(seed);
+        let hyp = crate::kernel::SeArd::isotropic(d, 1.0, 1.0, 0.05);
+        let xd = crate::linalg::Mat::from_vec(n, d, rng.normals(n * d));
+        let y = rng.normals(n);
+        let mut b = Gp::builder()
+            .method(method)
+            .hyp(hyp)
+            .data(xd, y)
+            .machines(m)
+            .seed(seed);
+        if method.needs_support() {
+            b = b.support_size(s);
+        }
+        if method.needs_rank() {
+            b = b.rank(s);
+        }
+        b.fit()?.save(out)?
+    };
+    println!("wrote {out} ({bytes} bytes, method {method_name})");
+    Ok(())
+}
+
+/// `pgpr load` — verify a checkpoint: decode it (CRC + structural
+/// checks), restore the model, and run one probe prediction.
+pub fn load(args: &Args) -> Result<()> {
+    let path = args
+        .get("path")
+        .ok_or_else(|| anyhow!("--path PATH required"))?;
+    let ck = crate::store::Checkpoint::read_file(path)
+        .map_err(|e| anyhow!("{e}"))?;
+    let bytes = std::fs::metadata(path)?.len();
+    println!("{path}: {} checkpoint, {bytes} bytes, format v{}, \
+              version {:08x}",
+             ck.method_name(), crate::store::FORMAT_VERSION,
+             ck.version_hash());
+    match ck {
+        crate::store::Checkpoint::Served(sc) => {
+            let t0 = std::time::Instant::now();
+            let model = crate::server::ServedModel::from_checkpoint(sc)?;
+            let d = model.xs.cols;
+            let lctx = crate::linalg::LinalgCtx::serial();
+            let mut scratch = crate::server::ServeScratch::new();
+            let probe = vec![0.0; d];
+            let (mean, var) = model.predict_batch_fast(0, &probe, 1, 1,
+                                                       &lctx, &mut scratch);
+            println!("restored serving model: {} machines, d={d}, \
+                      {:.3}s; probe mean={:.6} var={:.6}",
+                     model.machines(), t0.elapsed().as_secs_f64(),
+                     mean[0], var[0]);
+        }
+        other => {
+            let d = match &other {
+                crate::store::Checkpoint::Batch(b) => b.xd.cols,
+                crate::store::Checkpoint::Online(o) => o.xd.cols,
+                crate::store::Checkpoint::Served(_) => unreachable!(),
+            };
+            let t0 = std::time::Instant::now();
+            let gp = Gp::from_checkpoint(other)?;
+            let xu = crate::linalg::Mat::from_vec(1, d, vec![0.0; d]);
+            let pred = gp.predict(&xu)?;
+            println!("restored {} model: {} machines, d={d}, {:.3}s; \
+                      probe mean={:.6} var={:.6}",
+                     gp.method().name(), gp.machines(),
+                     t0.elapsed().as_secs_f64(), pred.mean[0],
+                     pred.var[0]);
+        }
+    }
     Ok(())
 }
 

@@ -9,6 +9,8 @@
 //! * `train`     — distributed PITC marginal-likelihood training
 //! * `stats`     — record a mini fit+predict+serve pass, export telemetry
 //! * `node`      — serve a model over TCP (predict/stats/healthz/admin)
+//! * `save`      — fit a model and write its versioned checkpoint
+//! * `load`      — verify a checkpoint: decode, restore, probe predict
 //! * `loadgen`   — open-loop qps sweep against a node → BENCH_e2e.json
 //! * `selftest`  — native vs PJRT backend agreement on the tiny profile
 //!
@@ -47,6 +49,10 @@ COMMANDS:
             [--seed 1] [--workers 8] [--queue-cap 256] [--max-inflight 512]
             [--max-batch 16] [--batch-wait-ms 2] [--deadline-ms 250]
             [--mixed-precision] [--telemetry-out PATH]
+            [--checkpoint PATH] [--snapshot-every-s 30]
+  save      --out PATH [--method served|ppic|pitc|...] [--n 512] [--m 4]
+            [--s 32] [--d 2] [--seed 1] [--mixed-precision]
+  load      --path PATH
   loadgen   [--target 127.0.0.1:7070] [--smoke] [--qps 500,1000,...]
             [--duration-s 5] [--conns 16] [--seed 1] [--out BENCH_e2e.json]
   selftest  [--artifacts DIR]
@@ -91,6 +97,8 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "train" => commands::train(&args),
         "stats" => commands::stats(&args),
         "node" => commands::node(&args),
+        "save" => commands::save(&args),
+        "load" => commands::load(&args),
         "loadgen" => commands::loadgen(&args),
         "selftest" => commands::selftest(&args),
         "help" | "--help" | "-h" => {
@@ -161,6 +169,31 @@ mod tests {
         assert!(run(&argv).is_ok());
         let prom = std::fs::read_to_string(&path).unwrap();
         assert!(prom.contains("pgpr_cluster_runs"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// End-to-end `pgpr save` → `pgpr load` for the served model and a
+    /// batch method: the checkpoint writes, decodes, restores and
+    /// answers a probe prediction.
+    #[test]
+    fn save_load_roundtrip_cli() {
+        let path = std::env::temp_dir().join("pgpr_cli_ckpt_test.bin");
+        let p = path.to_str().unwrap().to_string();
+        let save: Vec<String> =
+            ["save", "--out", &p, "--n", "32", "--m", "2", "--s", "6"]
+                .iter().map(|s| s.to_string()).collect();
+        assert!(run(&save).is_ok());
+        let load: Vec<String> =
+            ["load", "--path", &p].iter().map(|s| s.to_string()).collect();
+        assert!(run(&load).is_ok());
+        let save_pitc: Vec<String> =
+            ["save", "--out", &p, "--method", "pitc", "--n", "32", "--m",
+             "2", "--s", "6"].iter().map(|s| s.to_string()).collect();
+        assert!(run(&save_pitc).is_ok());
+        assert!(run(&load).is_ok());
+        // a garbage file is a typed error, not a panic
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(run(&load).is_err());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -171,6 +171,49 @@ impl PredictOperator {
         Prediction { mean, var }
     }
 
+    /// Order-stable FNV-1a fingerprint of the staged numeric state
+    /// (mean weights, constants, quadratic term — the exact f64 bit
+    /// patterns). Two operators staged from the same fitted state hash
+    /// equal; the serving layer aggregates these into the model
+    /// identity reported by `/healthz` and asserted by the hot-swap
+    /// tests. Not cryptographic.
+    #[must_use]
+    pub fn state_digest(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        fn eat(h: &mut u64, bits: u64) {
+            for b in bits.to_le_bytes() {
+                *h = (*h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+        }
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        eat(&mut h, self.w.len() as u64);
+        for &v in &self.w {
+            eat(&mut h, v.to_bits());
+        }
+        eat(&mut h, self.y_mean.to_bits());
+        eat(&mut h, self.c0.to_bits());
+        match &self.quad {
+            QuadTerm::Dense(a) => {
+                eat(&mut h, 1);
+                eat(&mut h, a.rows as u64);
+                eat(&mut h, a.cols as u64);
+                for &v in &a.data {
+                    eat(&mut h, v.to_bits());
+                }
+            }
+            QuadTerm::LowRank { diag_coef, vt } => {
+                eat(&mut h, 2);
+                eat(&mut h, diag_coef.to_bits());
+                eat(&mut h, vt.rows as u64);
+                eat(&mut h, vt.cols as u64);
+                for &v in &vt.data {
+                    eat(&mut h, v.to_bits());
+                }
+            }
+        }
+        h
+    }
+
     /// Demote to the opt-in mixed-precision serve form (f32 storage,
     /// f64 accumulation — see [`PredictOperatorF32`]). The one lossy
     /// step of that pipeline: every staged array is rounded to f32

@@ -14,7 +14,11 @@ use crate::linalg::{
 
 /// Machine m's local summary (Definition 2) plus the cached Cholesky
 /// factor of `Σ_{D_m D_m | S}` reused by pPIC.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is bitwise on the `f64` payloads — it exists for the
+/// checkpoint layer ([`crate::store`]), where "equal" must mean
+/// "serializes identically".
+#[derive(Debug, Clone, PartialEq)]
 pub struct LocalSummary {
     /// `ẏ_S^m` — eq. (3)
     pub y_dot: Vec<f64>,
@@ -33,7 +37,7 @@ impl LocalSummary {
 }
 
 /// The global summary (Definition 3): `(ÿ_S, Σ̈_SS)`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GlobalSummary {
     pub y: Vec<f64>,
     pub s: Mat,

@@ -51,6 +51,9 @@
 //! additionally exposed over real TCP sockets by [`net`] (`pgpr node` /
 //! `pgpr loadgen`): a hardened std-only HTTP/1.1 front-end with
 //! admission control, backpressure and an open-loop load harness.
+//! Fitted models outlive their process through [`store`]: versioned,
+//! checksummed checkpoints for every method (plus `OnlineGp` stream
+//! state), crash-safe snapshots, cold-start and atomic hot-swap.
 
 pub mod api;
 pub mod bench_support;
@@ -66,6 +69,7 @@ pub mod obsv;
 pub mod parallel;
 pub mod runtime;
 pub mod server;
+pub mod store;
 pub mod testkit;
 pub mod train;
 pub mod util;

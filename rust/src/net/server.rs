@@ -31,11 +31,22 @@
 //! on every thread, so `/stats` is live regardless of the
 //! `PGPR_TELEMETRY` environment gate and isolated from other nodes in
 //! the same process.
+//!
+//! Durability: with [`NodeConfig::checkpoint_path`] set the batch loop
+//! snapshots the serving state periodically (atomic temp + fsync +
+//! rename), `POST /v1/admin/snapshot` forces one, and `POST
+//! /v1/admin/reload` hot-swaps in a checkpoint from disk — open
+//! batches are flushed against the outgoing model first and predicts
+//! arriving during the restore window shed `503` + `Retry-After`, so
+//! every admitted request is answered by exactly one model. `/healthz`
+//! reports the model family, checkpoint version hash, model age and
+//! swap count.
 
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize,
+                        Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
                       TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -81,6 +92,15 @@ pub struct NodeConfig {
     pub idle_close_s: f64,
     /// HTTP parser caps.
     pub limits: HttpLimits,
+    /// Checkpoint file this node snapshots to, and the default target
+    /// of `POST /v1/admin/snapshot` / `/v1/admin/reload`. `None`
+    /// disables periodic snapshotting.
+    pub checkpoint_path: Option<String>,
+    /// Seconds between periodic background snapshots (0 disables;
+    /// needs a `checkpoint_path`). Snapshots run on the batch loop
+    /// between batches, write-to-temp + fsync + atomic rename, so a
+    /// crash at any instant leaves the last complete image on disk.
+    pub snapshot_every_s: f64,
 }
 
 impl Default for NodeConfig {
@@ -97,6 +117,8 @@ impl Default for NodeConfig {
             read_timeout_s: 5.0,
             idle_close_s: 30.0,
             limits: HttpLimits::default(),
+            checkpoint_path: None,
+            snapshot_every_s: 0.0,
         }
     }
 }
@@ -155,6 +177,21 @@ enum Job {
         machine: usize,
         done: Arc<Slot<Result<usize, String>>>,
     },
+    /// Write the live model to `path`. Read-only; runs on the batch
+    /// loop so the image is a consistent point-in-time state. Fulfills
+    /// (bytes written, version hash).
+    Snapshot {
+        path: String,
+        done: Arc<Slot<Result<(u64, u32), String>>>,
+    },
+    /// Replace the live model with the checkpoint at `path`. Open
+    /// batches are flushed against the outgoing model first, so no
+    /// admitted request straddles the swap. Fulfills (machine count,
+    /// version hash).
+    Reload {
+        path: String,
+        done: Arc<Slot<Result<(u64, u32), String>>>,
+    },
 }
 
 /// State shared by every node thread.
@@ -170,11 +207,34 @@ struct NodeShared {
     queue_depth: AtomicI64,
     queue_peak: AtomicI64,
     shutdown: AtomicBool,
+    /// True from reload admission until the new model serves; predicts
+    /// shed 503 + `Retry-After` for the duration.
+    restoring: AtomicBool,
+    /// Completed hot-swaps (reloads) since start.
+    swaps: AtomicU64,
+    /// CRC-32 of the serving state's checkpoint image (the `/healthz`
+    /// "model_version"); widened into an atomic for lock-free reads.
+    version: AtomicU64,
+    /// Monotonic instant the serving state was installed, as f64 bits.
+    born_bits: AtomicU64,
 }
 
 impl NodeShared {
     fn draining(&self) -> bool {
         self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Seconds since the current serving state was installed.
+    fn model_age_s(&self) -> f64 {
+        let born = f64::from_bits(self.born_bits.load(Ordering::Acquire));
+        (self.clock.now_s() - born).max(0.0)
+    }
+
+    /// Record a new serving state: version hash + birth instant.
+    fn set_model(&self, version: u32) {
+        self.version.store(u64::from(version), Ordering::Release);
+        self.born_bits
+            .store(self.clock.now_s().to_bits(), Ordering::Release);
     }
 
     /// Idempotent drain trigger: stop accepting and poke the acceptor
@@ -204,6 +264,7 @@ impl NodeServer {
         let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_cap);
         let (conn_tx, conn_rx) =
             mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
+        let version0 = model.to_checkpoint().version_hash();
         let shared = Arc::new(NodeShared {
             d: model.xs.cols,
             machines: AtomicUsize::new(model.machines()),
@@ -216,6 +277,10 @@ impl NodeServer {
             queue_depth: AtomicI64::new(0),
             queue_peak: AtomicI64::new(0),
             shutdown: AtomicBool::new(false),
+            restoring: AtomicBool::new(false),
+            swaps: AtomicU64::new(0),
+            version: AtomicU64::new(u64::from(version0)),
+            born_bits: AtomicU64::new(0.0f64.to_bits()),
         });
         let mut threads = Vec::new();
         {
@@ -447,6 +512,7 @@ fn respond(
 ) -> bool {
     const ROUTES: &[&str] = &["/healthz", "/stats", "/v1/predict",
                               "/v1/admin/lose_machine",
+                              "/v1/admin/snapshot", "/v1/admin/reload",
                               "/v1/admin/shutdown"];
     match (req.method, req.path.as_str()) {
         (Method::Get, "/healthz") => handle_healthz(req, w, shared),
@@ -456,6 +522,12 @@ fn respond(
         }
         (Method::Post, "/v1/admin/lose_machine") => {
             handle_lose_machine(req, w, shared, job_tx)
+        }
+        (Method::Post, "/v1/admin/snapshot") => {
+            handle_snapshot(req, w, shared, job_tx)
+        }
+        (Method::Post, "/v1/admin/reload") => {
+            handle_reload(req, w, shared, job_tx)
         }
         (Method::Post, "/v1/admin/shutdown") => {
             send(w, 200, JSON_CT,
@@ -477,9 +549,20 @@ fn handle_healthz(
     w: &mut dyn Write,
     shared: &Arc<NodeShared>,
 ) -> bool {
-    let status = if shared.draining() { "draining" } else { "ok" };
+    let status = if shared.draining() {
+        "draining"
+    } else if shared.restoring.load(Ordering::Acquire) {
+        "restoring"
+    } else {
+        "ok"
+    };
+    let version = shared.version.load(Ordering::Acquire) as u32;
     let body = json_body(vec![
         ("status", status.into()),
+        ("method", "served".into()),
+        ("model_version", format!("{version:08x}").into()),
+        ("model_age_s", shared.model_age_s().into()),
+        ("swaps", (shared.swaps.load(Ordering::Acquire) as usize).into()),
         ("d", shared.d.into()),
         ("machines", shared.machines.load(Ordering::Acquire).into()),
         ("queue_cap", shared.cfg.queue_cap.into()),
@@ -548,6 +631,13 @@ fn handle_predict(
     };
     if shared.draining() {
         return send(w, 503, &shed_headers, &error_body("draining"), false);
+    }
+    // restore window: a reload is in flight; the client retries after
+    // the swap rather than waiting on a model that is being replaced
+    if shared.restoring.load(Ordering::Acquire) {
+        crate::obsv::counter_add("net.shed.restoring", 1);
+        return send(w, 503, &shed_headers, &error_body("model restoring"),
+                    req.keep_alive);
     }
 
     // door 1: in-flight cap (429 — the client itself should back off)
@@ -655,6 +745,102 @@ fn handle_lose_machine(
     }
 }
 
+/// Resolve the checkpoint path for an admin snapshot/reload request:
+/// explicit `{"path": "..."}` body, else the node's configured
+/// `checkpoint_path`.
+fn admin_ckpt_path(
+    req: &Request,
+    shared: &NodeShared,
+) -> Result<String, &'static str> {
+    let explicit = std::str::from_utf8(&req.body)
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .and_then(|s| Json::parse(s).ok())
+        .and_then(|d| {
+            d.get("path").and_then(|p| p.as_str().map(str::to_string))
+        });
+    match explicit.or_else(|| shared.cfg.checkpoint_path.clone()) {
+        Some(p) => Ok(p),
+        None => Err("no path given and node has no --checkpoint"),
+    }
+}
+
+fn handle_snapshot(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) -> bool {
+    let path = match admin_ckpt_path(req, shared) {
+        Ok(p) => p,
+        Err(msg) => {
+            return send(w, 400, JSON_CT, &error_body(msg), req.keep_alive)
+        }
+    };
+    let done = Slot::new();
+    if job_tx.try_send(Job::Snapshot { path, done: done.clone() }).is_err()
+    {
+        return send(w, 503, JSON_CT,
+                    &error_body("serving loop unavailable"),
+                    req.keep_alive);
+    }
+    match done.wait(Duration::from_secs(120)) {
+        Some(Ok((bytes, version))) => {
+            let body = json_body(vec![
+                ("bytes", (bytes as usize).into()),
+                ("version", format!("{version:08x}").into()),
+            ]);
+            send(w, 200, JSON_CT, &body, req.keep_alive)
+        }
+        Some(Err(msg)) => {
+            send(w, 500, JSON_CT, &error_body(&msg), req.keep_alive)
+        }
+        None => send(w, 500, JSON_CT, &error_body("snapshot timed out"),
+                     false),
+    }
+}
+
+fn handle_reload(
+    req: &Request,
+    w: &mut dyn Write,
+    shared: &Arc<NodeShared>,
+    job_tx: &SyncSender<Job>,
+) -> bool {
+    let path = match admin_ckpt_path(req, shared) {
+        Ok(p) => p,
+        Err(msg) => {
+            return send(w, 400, JSON_CT, &error_body(msg), req.keep_alive)
+        }
+    };
+    // close the predict door for the restore window; the batch loop
+    // reopens it once the swap (or the failure) is complete
+    shared.restoring.store(true, Ordering::Release);
+    let done = Slot::new();
+    if job_tx.try_send(Job::Reload { path, done: done.clone() }).is_err() {
+        shared.restoring.store(false, Ordering::Release);
+        return send(w, 503, JSON_CT,
+                    &error_body("serving loop unavailable"),
+                    req.keep_alive);
+    }
+    match done.wait(Duration::from_secs(120)) {
+        Some(Ok((machines, version))) => {
+            let body = json_body(vec![
+                ("machines", (machines as usize).into()),
+                ("version", format!("{version:08x}").into()),
+                ("swaps",
+                 (shared.swaps.load(Ordering::Acquire) as usize).into()),
+            ]);
+            send(w, 200, JSON_CT, &body, req.keep_alive)
+        }
+        Some(Err(msg)) => {
+            send(w, 409, JSON_CT, &error_body(&msg), req.keep_alive)
+        }
+        None => {
+            send(w, 500, JSON_CT, &error_body("reload timed out"), false)
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // batch loop
 // ---------------------------------------------------------------------
@@ -706,6 +892,9 @@ fn batch_loop(
         HashMap::new();
     let mut next_id = 0u64;
     let mut batcher_peak = 0i64;
+    let snap_path = shared.cfg.checkpoint_path.clone();
+    let snap_every = shared.cfg.snapshot_every_s;
+    let mut last_snap_s = 0.0f64;
     // wake at least as often as the age bound so expiry flushes are
     // prompt, but never busy-spin
     let tick = Duration::from_secs_f64(
@@ -744,6 +933,8 @@ fn batch_loop(
                     Ok(()) => {
                         shared.machines
                             .store(model.machines(), Ordering::Release);
+                        shared.set_model(
+                            model.to_checkpoint().version_hash());
                         batcher = DynamicBatcher::new(
                             model.machines(),
                             shared.d,
@@ -755,6 +946,55 @@ fn batch_loop(
                     }
                     Err(e) => done.fulfill(Err(e.to_string())),
                 }
+            }
+            Ok(Job::Snapshot { path, done }) => {
+                // read-only: open batches keep their model; the image
+                // is the state every in-flight request is served from
+                let ck = model.to_checkpoint();
+                match ck.write_file(&path) {
+                    Ok(bytes) => {
+                        let vh = ck.version_hash();
+                        shared.version
+                            .store(u64::from(vh), Ordering::Release);
+                        done.fulfill(Ok((bytes, vh)));
+                    }
+                    Err(e) => done.fulfill(Err(e.to_string())),
+                }
+            }
+            Ok(Job::Reload { path, done }) => {
+                // finish open batches against the outgoing model first:
+                // every admitted request is answered by exactly one
+                // model, never a half-swapped state
+                for b in batcher.flush_all() {
+                    execute_batch(&model, &b, pad_to, &lctx, &mut scratch,
+                                  &mut pending);
+                    batcher.recycle(b);
+                }
+                match ServedModel::load(&path) {
+                    Ok(next) if next.xs.cols != shared.d => {
+                        done.fulfill(Err(format!(
+                            "checkpoint dim {} != serving dim {}",
+                            next.xs.cols, shared.d)));
+                    }
+                    Ok(next) => {
+                        let vh = next.to_checkpoint().version_hash();
+                        let _retired = model.swap_in(next);
+                        shared.machines
+                            .store(model.machines(), Ordering::Release);
+                        shared.swaps.fetch_add(1, Ordering::AcqRel);
+                        shared.set_model(vh);
+                        batcher = DynamicBatcher::new(
+                            model.machines(),
+                            shared.d,
+                            shared.cfg.max_batch,
+                            shared.cfg.batch_wait_s,
+                        );
+                        crate::obsv::counter_add("net.reloads", 1);
+                        done.fulfill(Ok((model.machines() as u64, vh)));
+                    }
+                    Err(e) => done.fulfill(Err(e.to_string())),
+                }
+                shared.restoring.store(false, Ordering::Release);
             }
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
@@ -777,6 +1017,36 @@ fn batch_loop(
         crate::obsv::gauge_set(
             "net.inflight_peak",
             shared.inflight_peak.load(Ordering::Acquire),
+        );
+        // periodic background snapshot: same atomic write path as the
+        // admin endpoint, between batches so the image is consistent
+        if snap_every > 0.0 && now - last_snap_s >= snap_every {
+            if let Some(path) = &snap_path {
+                last_snap_s = now;
+                let ck = model.to_checkpoint();
+                match ck.write_file(path) {
+                    Ok(_) => {
+                        shared.version.store(
+                            u64::from(ck.version_hash()),
+                            Ordering::Release,
+                        );
+                        crate::obsv::counter_add("net.snapshot.auto", 1);
+                    }
+                    Err(_) => {
+                        crate::obsv::counter_add("net.snapshot.errors", 1);
+                    }
+                }
+            }
+        }
+        crate::obsv::gauge_set("net.model.age_s",
+                               shared.model_age_s() as i64);
+        crate::obsv::gauge_set(
+            "net.model.version",
+            shared.version.load(Ordering::Acquire) as i64,
+        );
+        crate::obsv::gauge_set(
+            "net.model.swaps",
+            shared.swaps.load(Ordering::Acquire) as i64,
         );
     }
     // drain: every admitted request still open gets its answer

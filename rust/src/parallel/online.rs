@@ -111,6 +111,72 @@ impl OnlineGp {
         self.spec.machines
     }
 
+    // --- checkpoint support (PR 10, `crate::store`) -----------------
+    //
+    // The durable stream state is exactly: y_mean, the assimilated
+    // global summary, its Cholesky factor, and each machine's latest
+    // block. `sctx` is a pure function of (hyp, xs) and is recomputed
+    // at restore with the *same* execution context `absorb` uses, so
+    // the restored factors are bitwise what the original process held.
+    // `absorb_makespan` is wall-clock measurement, not model state,
+    // and deliberately restarts at zero.
+
+    pub(crate) fn stream_y_mean(&self) -> Option<f64> {
+        self.y_mean
+    }
+
+    pub(crate) fn stream_global(&self) -> Option<&GlobalSummary> {
+        self.global.as_ref()
+    }
+
+    pub(crate) fn stream_l_g(&self) -> Option<&Mat> {
+        self.l_g.as_ref()
+    }
+
+    pub(crate) fn stream_latest(&self)
+        -> &[Option<(Mat, Vec<f64>, LocalSummary)>]
+    {
+        &self.latest
+    }
+
+    /// Rebuild an [`OnlineGp`] from checkpointed stream state; the next
+    /// [`OnlineGp::absorb`] continues bitwise-identically to a process
+    /// that never stopped (pinned in `tests/integration_store.rs`).
+    /// A non-SPD support matrix (possible only in a crafted checkpoint)
+    /// is reported, not panicked on.
+    pub(crate) fn restore(
+        hyp: &SeArd,
+        xs: &Mat,
+        backend: Arc<dyn Backend>,
+        spec: ClusterSpec,
+        y_mean: Option<f64>,
+        global: Option<GlobalSummary>,
+        l_g: Option<Mat>,
+        latest: Vec<Option<(Mat, Vec<f64>, LocalSummary)>>,
+        batches: usize,
+    ) -> Result<OnlineGp, crate::linalg::cholesky::NotSpd> {
+        assert_eq!(latest.len(), spec.machines, "one latest slot per machine");
+        let sctx = if global.is_some() {
+            let lctx = spec.exec.linalg_ctx();
+            Some(SupportContext::try_new_ctx(&lctx, hyp, xs)?)
+        } else {
+            None
+        };
+        Ok(OnlineGp {
+            hyp: hyp.clone(),
+            xs: xs.clone(),
+            backend,
+            spec,
+            y_mean,
+            global,
+            sctx,
+            l_g,
+            latest,
+            batches,
+            absorb_makespan: 0.0,
+        })
+    }
+
     /// Absorb one batch: `blocks[m]` is machine m's new local data.
     /// Costs only the new blocks' summaries + one reduce (no recompute
     /// of history) — the §5.2 saving.

@@ -31,6 +31,14 @@
 //! steady-state loop allocates nothing per request beyond the
 //! responses (see `BENCH_serve.json` for the measured old-vs-fast
 //! per-batch latency sweep).
+//!
+//! Serving state is durable: [`service::ServedModel::save`] /
+//! [`service::ServedModel::load`] checkpoint the fitted summaries
+//! through [`crate::store`] (operators are re-staged on load, so a
+//! cold-started node serves bitwise what the original served), and
+//! [`service::ServedModel::swap_in`] atomically replaces the live
+//! model — the hot-swap primitive behind `pgpr node`'s refit/reload
+//! paths.
 
 pub mod batcher;
 pub mod router;

@@ -9,11 +9,12 @@ use crate::api::ApiError;
 use crate::cluster::{MachinesLost, ParallelExecutor};
 use crate::gp::predictor::{ppic_operators, OpScratch, OpScratchF32,
                            PredictOperator, PredictOperatorF32};
-use crate::gp::summaries::{chol_global, GlobalSummary, LocalSummary,
-                           SupportContext};
+use crate::gp::summaries::{chol_global, try_chol_global_ctx, GlobalSummary,
+                           LocalSummary, SupportContext};
 use crate::kernel::SeArd;
 use crate::linalg::{LinalgCtx, Mat};
 use crate::runtime::Backend;
+use crate::store::{Checkpoint, ServedCheckpoint, StoreError};
 use crate::util::time::{fmt_secs, DurationStats};
 use crate::util::Stopwatch;
 
@@ -304,6 +305,130 @@ impl ServedModel {
                 self.ops.iter().map(PredictOperator::demote).collect());
         }
         Ok(())
+    }
+
+    /// Snapshot the fitted serving state as a [`Checkpoint`]. The
+    /// staged operators are *not* serialized — [`ServedModel::from_checkpoint`]
+    /// re-stages them through the same pure constructors `fit` uses, so
+    /// a restored model predicts bitwise what this one predicts
+    /// (tested). Encoding is a pure function of the state: two
+    /// snapshots of the same model are byte-identical.
+    #[must_use]
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        Checkpoint::Served(ServedCheckpoint {
+            hyp: self.hyp.clone(),
+            xs: self.xs.clone(),
+            y_mean: self.y_mean,
+            global: self.global.clone(),
+            blocks: self.blocks.clone(),
+            mixed_precision: self.mixed_precision(),
+        })
+    }
+
+    /// Rebuild a serving model from a decoded [`ServedCheckpoint`]:
+    /// validate structural coherence, rebuild the router, and re-stage
+    /// the predictive operators (restoring the mixed-precision mode if
+    /// it was staged at snapshot time). No refit — cold start costs one
+    /// support factorization plus the operator staging. Crafted but
+    /// CRC-valid images that are internally inconsistent (mismatched
+    /// block dims, non-SPD support matrix) come back as typed
+    /// [`ApiError::Store`] errors, never a panic.
+    pub fn from_checkpoint(ck: ServedCheckpoint) -> Result<ServedModel, ApiError> {
+        let corrupt = |section: &'static str, reason: String| {
+            ApiError::Store(StoreError::Corrupt { section, reason })
+        };
+        let (s, d) = (ck.xs.rows, ck.xs.cols);
+        if ck.blocks.is_empty() {
+            return Err(corrupt("blocks", "no machine blocks".into()));
+        }
+        for (m, (xm, ym, loc)) in ck.blocks.iter().enumerate() {
+            if xm.cols != d {
+                return Err(corrupt("blocks", format!(
+                    "machine {m}: input dim {} != support dim {d}", xm.cols)));
+            }
+            if xm.rows != ym.len() || xm.rows == 0 {
+                return Err(corrupt("blocks", format!(
+                    "machine {m}: {} inputs vs {} targets", xm.rows, ym.len())));
+            }
+            if loc.y_dot.len() != s || loc.s_dot.rows != s || loc.s_dot.cols != s
+            {
+                return Err(corrupt("blocks", format!(
+                    "machine {m}: local summary dim != support size {s}")));
+            }
+            if loc.l_m.rows != xm.rows || loc.l_m.cols != xm.rows {
+                return Err(corrupt("blocks", format!(
+                    "machine {m}: block factor is {}x{} for {} rows",
+                    loc.l_m.rows, loc.l_m.cols, xm.rows)));
+            }
+        }
+        let lctx = LinalgCtx::serial();
+        let ctx = SupportContext::try_new_ctx(&lctx, &ck.hyp, &ck.xs)
+            .map_err(|e| corrupt("support", format!("Σ_SS not SPD: {e}")))?;
+        let l_g = try_chol_global_ctx(&lctx, &ck.global)
+            .map_err(|e| corrupt("moments", format!("Σ̈_SS not SPD: {e}")))?;
+        let ops = ppic_operators(&lctx, &ck.hyp, &ctx, &ck.global, &l_g,
+                                 &ck.blocks, ck.y_mean);
+        let xms: Vec<&Mat> = ck.blocks.iter().map(|(x, _, _)| x).collect();
+        let router = Router::from_blocks(&ck.hyp, &xms);
+        let mixed = ck.mixed_precision;
+        let model = ServedModel {
+            hyp: ck.hyp,
+            xs: ck.xs,
+            y_mean: ck.y_mean,
+            global: ck.global,
+            blocks: ck.blocks,
+            router,
+            ops,
+            ops_f32: None,
+        };
+        Ok(if mixed { model.with_mixed_precision() } else { model })
+    }
+
+    /// Atomically persist the serving state to `path`
+    /// ([`Checkpoint::write_file`]: temp file + fsync + rename).
+    /// Returns the byte count written.
+    pub fn save(&self, path: &str) -> Result<u64, ApiError> {
+        Ok(self.to_checkpoint().write_file(path)?)
+    }
+
+    /// Restore a serving model from a checkpoint file written by
+    /// [`ServedModel::save`]. A checkpoint of any other model family is
+    /// a typed [`StoreError::MethodMismatch`], not a mis-served model.
+    pub fn load(path: &str) -> Result<ServedModel, ApiError> {
+        match Checkpoint::read_file(path)? {
+            Checkpoint::Served(s) => ServedModel::from_checkpoint(s),
+            other => Err(ApiError::Store(StoreError::MethodMismatch {
+                expected: "served",
+                found: other.method_name(),
+            })),
+        }
+    }
+
+    /// Atomically replace this serving state with `next`, returning the
+    /// retired model. The swap is a pointer-sized move under `&mut
+    /// self` — any request already dispatched against the old model
+    /// finishes on it (the caller holds it via the return value or a
+    /// prior borrow), and every request dispatched after this call sees
+    /// only `next`; there is no half-swapped state a request can
+    /// observe (pinned in `tests/integration_store.rs`). Exported as
+    /// `serve.swap.count`.
+    pub fn swap_in(&mut self, next: ServedModel) -> ServedModel {
+        let _span = crate::obsv::span("serve.swap");
+        crate::obsv::counter_add("serve.swap.count", 1);
+        std::mem::replace(self, next)
+    }
+
+    /// Order-sensitive digest of the staged operator state — two models
+    /// digest equal iff their served predictions are bitwise-identical
+    /// on every input. Cheap enough for `/healthz`.
+    #[must_use]
+    pub fn state_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for op in &self.ops {
+            h ^= op.state_digest();
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
     }
 
     /// Predict one padded batch on machine `m` (pPIC block prediction).
@@ -862,6 +987,91 @@ mod tests {
         let mixed = base.mixed_precision(true).serve().unwrap();
         assert!(mixed.mixed_precision());
         assert_eq!(mixed.ops_f32.as_ref().unwrap().len(), 2);
+    }
+
+    /// save → load reproduces the fast path bitwise, re-serialization
+    /// is byte-identical, the mixed-precision mode survives the trip,
+    /// and `swap_in` retires the old model whole.
+    #[test]
+    fn checkpoint_roundtrip_and_swap() {
+        let (model, _, _) = fitted(8, 3);
+        let bytes = model.to_checkpoint().encode();
+        let loaded = match Checkpoint::decode(&bytes).unwrap() {
+            Checkpoint::Served(s) => ServedModel::from_checkpoint(s).unwrap(),
+            _ => unreachable!("served checkpoint decoded to another family"),
+        };
+        assert_eq!(loaded.to_checkpoint().encode(), bytes,
+                   "re-serialization must be byte-identical");
+        assert_eq!(loaded.state_digest(), model.state_digest());
+        let mut rng = Pcg64::seed(61);
+        let q: Vec<f64> = rng.normals(4 * 2);
+        let lctx = LinalgCtx::serial();
+        for m in 0..3 {
+            let mut s1 = ServeScratch::new();
+            let mut s2 = ServeScratch::new();
+            let (m_a, v_a) =
+                model.predict_batch_fast(m, &q, 4, 4, &lctx, &mut s1);
+            let (m_b, v_b) =
+                loaded.predict_batch_fast(m, &q, 4, 4, &lctx, &mut s2);
+            assert_eq!(m_a, m_b, "restored mean drifted on machine {m}");
+            assert_eq!(v_a, v_b, "restored var drifted on machine {m}");
+        }
+
+        let mixed = fitted(8, 3).0.with_mixed_precision();
+        let ck = mixed.to_checkpoint();
+        let back = match ck {
+            Checkpoint::Served(s) => ServedModel::from_checkpoint(s).unwrap(),
+            _ => unreachable!(),
+        };
+        assert!(back.mixed_precision(), "mixed mode must survive the trip");
+
+        // swap: the retired model comes back whole, the live slot holds
+        // exactly the replacement
+        let (next, _, _) = fitted(9, 3);
+        let next_digest = next.state_digest();
+        let mut live = loaded;
+        let retired = live.swap_in(next);
+        assert_eq!(retired.state_digest(), model.state_digest());
+        assert_eq!(live.state_digest(), next_digest);
+    }
+
+    /// A batch-family checkpoint refuses to load as a serving model,
+    /// and internally inconsistent served images are typed errors.
+    #[test]
+    fn load_rejects_wrong_family_and_incoherent_images() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pgpr_served_mismatch.ckpt");
+        let ck = crate::store::Checkpoint::Batch(crate::store::BatchCheckpoint {
+            method: crate::api::Method::Fgp,
+            hyp: SeArd::isotropic(1, 1.0, 1.0, 0.1),
+            xd: Mat::from_vec(2, 1, vec![0.0, 1.0]),
+            y: vec![0.5, -0.5],
+            machines: 1,
+            support: None,
+            partition: None,
+            rank: None,
+            threads: 0,
+            seed: 1,
+            mixed_precision: false,
+        });
+        ck.write_file(&path).unwrap();
+        let err = ServedModel::load(path.to_str().unwrap()).unwrap_err();
+        assert_eq!(err, ApiError::Store(StoreError::MethodMismatch {
+            expected: "served",
+            found: "FGP",
+        }));
+        let _ = std::fs::remove_file(&path);
+
+        let (model, _, _) = fitted(8, 2);
+        let mut sc = match model.to_checkpoint() {
+            Checkpoint::Served(s) => s,
+            _ => unreachable!(),
+        };
+        sc.blocks[1].1.pop(); // one target short on machine 1
+        let err = ServedModel::from_checkpoint(sc).unwrap_err();
+        assert!(matches!(err, ApiError::Store(
+                    StoreError::Corrupt { section: "blocks", .. })),
+                "got {err:?}");
     }
 
     /// serve_fast reproduces the backend-driven serve loop's

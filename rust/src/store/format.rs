@@ -1,0 +1,608 @@
+//! Binary checkpoint framing: magic, format version, method tag, named
+//! length-prefixed sections of little-endian scalars, trailing CRC-32.
+//!
+//! The framing is deliberately dumb — no compression, no alignment, no
+//! implicit defaults. Every byte is written explicitly, so encoding the
+//! same state twice yields the same bytes (the round-trip pin in
+//! `tests/integration_store.rs` holds re-serialization to byte
+//! identity). Readers never trust a length field: every primitive read
+//! is bounds-checked against its enclosing section and vector/matrix
+//! lengths are validated *before* allocation, so corrupt or truncated
+//! input yields a typed [`StoreError`] naming the failing section —
+//! never a panic, never an unbounded allocation.
+//!
+//! Layout:
+//!
+//! ```text
+//! [ magic "PGPRCKPT" : 8 ]
+//! [ format version   : u32 LE ]
+//! [ method tag       : u8 ]
+//! [ section ]*
+//! [ crc32 of all preceding bytes : u32 LE ]
+//!
+//! section := [ name len : u16 LE ][ name : utf-8 ]
+//!            [ payload len : u64 LE ][ payload ]
+//! ```
+//!
+//! Open-check order (pinned by the corruption tests): minimum length →
+//! magic → version → CRC → method tag. The CRC check runs before any
+//! section parsing, so a random bit flip anywhere in the file is caught
+//! as [`StoreError::Checksum`] without touching the payload decoders.
+
+use crate::linalg::Mat;
+
+/// File magic: the first 8 bytes of every pgpr checkpoint.
+pub const MAGIC: [u8; 8] = *b"PGPRCKPT";
+
+/// Current (and only) format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Header bytes before the first section: magic + version + method tag.
+pub const HEADER_LEN: usize = 8 + 4 + 1;
+
+/// Smallest well-formed file: header plus the trailing CRC.
+pub const MIN_LEN: usize = HEADER_LEN + 4;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Typed checkpoint failure. Everything the decoder can object to maps
+/// to one of these — the store layer never panics on hostile input.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    /// Filesystem failure (message carries the path and the OS error).
+    Io(String),
+    /// The first 8 bytes are not `PGPRCKPT` (or the file is shorter
+    /// than a header).
+    BadMagic,
+    /// A format version this build does not understand.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// A method tag outside the known range.
+    UnknownMethodTag(u8),
+    /// The checkpoint decodes fine but holds a different model family
+    /// than the caller asked for.
+    MethodMismatch { expected: &'static str, found: &'static str },
+    /// Trailing CRC-32 does not match the bytes on disk.
+    Checksum { stored: u32, computed: u32 },
+    /// A read ran off the end of the named section (or the file).
+    Truncated { section: &'static str },
+    /// A section decoded but its contents are inconsistent.
+    Corrupt { section: &'static str, reason: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(msg) => write!(f, "checkpoint io: {msg}"),
+            StoreError::BadMagic => write!(f, "not a pgpr checkpoint (bad magic)"),
+            StoreError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "checkpoint format v{found} not supported (this build reads v{supported})"
+            ),
+            StoreError::UnknownMethodTag(t) => {
+                write!(f, "unknown checkpoint method tag {t}")
+            }
+            StoreError::MethodMismatch { expected, found } => write!(
+                f,
+                "checkpoint holds a {found} model, expected {expected}"
+            ),
+            StoreError::Checksum { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+            ),
+            StoreError::Truncated { section } => {
+                write!(f, "checkpoint truncated in section '{section}'")
+            }
+            StoreError::Corrupt { section, reason } => {
+                write!(f, "checkpoint corrupt in section '{section}': {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE, reflected, poly 0xEDB88320) — table-driven, no deps.
+// ---------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 of `bytes`. Public so the corruption tests can re-stamp
+/// hand-mangled checkpoints and reach the decoders behind the CRC gate.
+#[must_use]
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ u32::from(b)) & 0xFF) as usize];
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Append-only checkpoint encoder. Sections are framed by
+/// [`Writer::section`]; [`Writer::finish`] stamps the trailing CRC.
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Start a checkpoint with the given method tag.
+    #[must_use]
+    pub fn new(tag: u8) -> Writer {
+        let mut buf = Vec::with_capacity(256);
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf.push(tag);
+        Writer { buf }
+    }
+
+    /// Write one named section; the payload length prefix is
+    /// back-patched after `f` runs, so sections nest arbitrary writes.
+    pub fn section(&mut self, name: &str, f: impl FnOnce(&mut SectionWriter<'_>)) {
+        let nb = name.as_bytes();
+        debug_assert!(nb.len() <= u16::MAX as usize);
+        self.buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(nb);
+        let len_at = self.buf.len();
+        self.buf.extend_from_slice(&0u64.to_le_bytes());
+        let start = self.buf.len();
+        f(&mut SectionWriter { buf: &mut self.buf });
+        let len = (self.buf.len() - start) as u64;
+        self.buf[len_at..len_at + 8].copy_from_slice(&len.to_le_bytes());
+    }
+
+    /// Append the CRC and return the finished byte image.
+    #[must_use]
+    pub fn finish(mut self) -> Vec<u8> {
+        let c = crc32(&self.buf);
+        self.buf.extend_from_slice(&c.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Payload writer handed to [`Writer::section`] closures.
+pub struct SectionWriter<'a> {
+    buf: &'a mut Vec<u8>,
+}
+
+impl SectionWriter<'_> {
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(u8::from(v));
+    }
+
+    /// f64 as its exact little-endian bit pattern (no text round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn put_vec_f64(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_vec_usize(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    pub fn put_mat(&mut self, m: &Mat) {
+        self.put_u64(m.rows as u64);
+        self.put_u64(m.cols as u64);
+        for &x in &m.data {
+            self.put_f64(x);
+        }
+    }
+
+    pub fn put_opt_mat(&mut self, m: Option<&Mat>) {
+        match m {
+            Some(m) => {
+                self.put_bool(true);
+                self.put_mat(m);
+            }
+            None => self.put_bool(false),
+        }
+    }
+
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(v) => {
+                self.put_bool(true);
+                self.put_f64(v);
+            }
+            None => self.put_bool(false),
+        }
+    }
+
+    pub fn put_opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(v) => {
+                self.put_bool(true);
+                self.put_u64(v as u64);
+            }
+            None => self.put_bool(false),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Bounds-checked checkpoint decoder over a validated byte image.
+///
+/// [`Reader::open`] performs the header checks (min length → magic →
+/// version → CRC) and returns the method tag; sections are then read in
+/// writer order via [`Reader::section`], and every primitive read is
+/// checked against the current section's end.
+pub struct Reader<'a> {
+    /// Body bytes: everything except the trailing CRC.
+    buf: &'a [u8],
+    pos: usize,
+    /// Name of the section currently being read (for error reporting).
+    section: &'static str,
+    /// End offset of the current section's payload.
+    sec_end: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Validate the header and CRC; returns the method tag and a reader
+    /// positioned at the first section.
+    pub fn open(bytes: &'a [u8]) -> Result<(u8, Reader<'a>), StoreError> {
+        if bytes.len() < MIN_LEN {
+            return Err(StoreError::Truncated { section: "header" });
+        }
+        if bytes[..8] != MAGIC {
+            return Err(StoreError::BadMagic);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(StoreError::UnsupportedVersion {
+                found: version,
+                supported: FORMAT_VERSION,
+            });
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let stored =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(StoreError::Checksum { stored, computed });
+        }
+        let tag = bytes[12];
+        Ok((
+            tag,
+            Reader { buf: body, pos: HEADER_LEN, section: "header", sec_end: HEADER_LEN },
+        ))
+    }
+
+    /// Enter the next section, which must be named `name` (sections are
+    /// positional; a name mismatch means a corrupt or foreign file).
+    /// The previous section must have been consumed exactly.
+    pub fn section(&mut self, name: &'static str) -> Result<(), StoreError> {
+        if self.pos != self.sec_end {
+            return Err(StoreError::Corrupt {
+                section: self.section,
+                reason: format!(
+                    "{} unconsumed payload bytes",
+                    self.sec_end - self.pos
+                ),
+            });
+        }
+        self.section = name;
+        if self.pos + 2 > self.buf.len() {
+            return Err(StoreError::Truncated { section: name });
+        }
+        let nlen =
+            u16::from_le_bytes(self.buf[self.pos..self.pos + 2].try_into().unwrap())
+                as usize;
+        self.pos += 2;
+        if self.pos + nlen > self.buf.len() {
+            return Err(StoreError::Truncated { section: name });
+        }
+        let found = &self.buf[self.pos..self.pos + nlen];
+        if found != name.as_bytes() {
+            return Err(StoreError::Corrupt {
+                section: name,
+                reason: format!(
+                    "expected section '{name}', found '{}'",
+                    String::from_utf8_lossy(found)
+                ),
+            });
+        }
+        self.pos += nlen;
+        if self.pos + 8 > self.buf.len() {
+            return Err(StoreError::Truncated { section: name });
+        }
+        let plen =
+            u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        let plen = usize::try_from(plen).map_err(|_| StoreError::Corrupt {
+            section: name,
+            reason: "section length exceeds address space".into(),
+        })?;
+        let end = self.pos.checked_add(plen).ok_or(StoreError::Corrupt {
+            section: name,
+            reason: "section length overflow".into(),
+        })?;
+        if end > self.buf.len() {
+            return Err(StoreError::Truncated { section: name });
+        }
+        self.sec_end = end;
+        Ok(())
+    }
+
+    /// All sections read and nothing left over.
+    pub fn finish(self) -> Result<(), StoreError> {
+        if self.pos != self.sec_end {
+            return Err(StoreError::Corrupt {
+                section: self.section,
+                reason: "unconsumed payload bytes".into(),
+            });
+        }
+        if self.pos != self.buf.len() {
+            return Err(StoreError::Corrupt {
+                section: self.section,
+                reason: "trailing bytes after last section".into(),
+            });
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(StoreError::Truncated { section: self.section })?;
+        if end > self.sec_end {
+            return Err(StoreError::Truncated { section: self.section });
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, StoreError> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| StoreError::Corrupt {
+            section: self.section,
+            reason: format!("value {v} exceeds address space"),
+        })
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, StoreError> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(StoreError::Corrupt {
+                section: self.section,
+                reason: format!("invalid bool byte {b}"),
+            }),
+        }
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, StoreError> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.take(8)?.try_into().unwrap(),
+        )))
+    }
+
+    /// Length-validated f64 vector: the count is checked against the
+    /// bytes actually remaining in the section before any allocation.
+    pub fn get_vec_f64(&mut self) -> Result<Vec<f64>, StoreError> {
+        let n = self.get_usize()?;
+        let nbytes = n.checked_mul(8).ok_or(StoreError::Corrupt {
+            section: self.section,
+            reason: "vector length overflow".into(),
+        })?;
+        if self.pos + nbytes > self.sec_end {
+            return Err(StoreError::Truncated { section: self.section });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_vec_usize(&mut self) -> Result<Vec<usize>, StoreError> {
+        let n = self.get_usize()?;
+        let nbytes = n.checked_mul(8).ok_or(StoreError::Corrupt {
+            section: self.section,
+            reason: "vector length overflow".into(),
+        })?;
+        if self.pos + nbytes > self.sec_end {
+            return Err(StoreError::Truncated { section: self.section });
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_usize()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_mat(&mut self) -> Result<Mat, StoreError> {
+        let rows = self.get_usize()?;
+        let cols = self.get_usize()?;
+        let n = rows.checked_mul(cols).ok_or(StoreError::Corrupt {
+            section: self.section,
+            reason: "matrix shape overflow".into(),
+        })?;
+        let nbytes = n.checked_mul(8).ok_or(StoreError::Corrupt {
+            section: self.section,
+            reason: "matrix shape overflow".into(),
+        })?;
+        if self.pos + nbytes > self.sec_end {
+            return Err(StoreError::Truncated { section: self.section });
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.get_f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub fn get_opt_mat(&mut self) -> Result<Option<Mat>, StoreError> {
+        Ok(if self.get_bool()? { Some(self.get_mat()?) } else { None })
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>, StoreError> {
+        Ok(if self.get_bool()? { Some(self.get_f64()?) } else { None })
+    }
+
+    pub fn get_opt_usize(&mut self) -> Result<Option<usize>, StoreError> {
+        Ok(if self.get_bool()? { Some(self.get_usize()?) } else { None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut w = Writer::new(7);
+        w.section("nums", |s| {
+            s.put_u8(3);
+            s.put_u64(1 << 40);
+            s.put_f64(-0.0);
+            s.put_bool(true);
+            s.put_vec_f64(&[1.5, f64::MIN_POSITIVE]);
+            s.put_vec_usize(&[0, 9, 2]);
+            s.put_mat(&Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+            s.put_opt_f64(None);
+            s.put_opt_usize(Some(5));
+        });
+        let bytes = w.finish();
+        let (tag, mut r) = Reader::open(&bytes).unwrap();
+        assert_eq!(tag, 7);
+        r.section("nums").unwrap();
+        assert_eq!(r.get_u8().unwrap(), 3);
+        assert_eq!(r.get_u64().unwrap(), 1 << 40);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_vec_f64().unwrap(), vec![1.5, f64::MIN_POSITIVE]);
+        assert_eq!(r.get_vec_usize().unwrap(), vec![0, 9, 2]);
+        let m = r.get_mat().unwrap();
+        assert_eq!((m.rows, m.cols), (2, 2));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_opt_f64().unwrap(), None);
+        assert_eq!(r.get_opt_usize().unwrap(), Some(5));
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn open_rejects_garbage_in_order() {
+        // Too short.
+        assert_eq!(
+            Reader::open(&[0; 4]).unwrap_err(),
+            StoreError::Truncated { section: "header" }
+        );
+        // Wrong magic (long enough otherwise).
+        let mut bad = Writer::new(1).finish();
+        bad[0] ^= 0xFF;
+        assert_eq!(Reader::open(&bad).unwrap_err(), StoreError::BadMagic);
+        // Future version, CRC re-stamped so the version check fires.
+        let mut fut = Writer::new(1).finish();
+        let body_len = fut.len() - 4;
+        fut[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let c = crc32(&fut[..body_len]);
+        fut[body_len..].copy_from_slice(&c.to_le_bytes());
+        assert_eq!(
+            Reader::open(&fut).unwrap_err(),
+            StoreError::UnsupportedVersion { found: 99, supported: FORMAT_VERSION }
+        );
+        // Flipped payload bit → checksum.
+        let mut w = Writer::new(1);
+        w.section("s", |s| s.put_f64(1.0));
+        let mut bytes = w.finish();
+        let mid = bytes.len() - 8;
+        bytes[mid] ^= 0x01;
+        assert!(matches!(
+            Reader::open(&bytes).unwrap_err(),
+            StoreError::Checksum { .. }
+        ));
+    }
+
+    #[test]
+    fn section_errors_name_the_section() {
+        let mut w = Writer::new(1);
+        w.section("alpha", |s| s.put_u64(1));
+        let bytes = w.finish();
+        let (_, mut r) = Reader::open(&bytes).unwrap();
+        // Wrong expected name.
+        assert!(matches!(
+            r.section("beta").unwrap_err(),
+            StoreError::Corrupt { section: "beta", .. }
+        ));
+        // Reading past a section end names it.
+        let (_, mut r) = Reader::open(&bytes).unwrap();
+        r.section("alpha").unwrap();
+        r.get_u64().unwrap();
+        assert_eq!(
+            r.get_u64().unwrap_err(),
+            StoreError::Truncated { section: "alpha" }
+        );
+    }
+
+    #[test]
+    fn oversize_vector_length_is_rejected_before_allocation() {
+        let mut w = Writer::new(1);
+        w.section("v", |s| s.put_u64(u64::MAX)); // claimed length, no data
+        let bytes = w.finish();
+        let (_, mut r) = Reader::open(&bytes).unwrap();
+        r.section("v").unwrap();
+        assert!(r.get_vec_f64().is_err());
+    }
+}

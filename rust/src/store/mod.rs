@@ -1,0 +1,591 @@
+//! Durable model state: deterministic, versioned, checksummed
+//! checkpoints for every `api::Method` plus the staged serving model
+//! (ROADMAP item 3).
+//!
+//! Three checkpoint families cover the system:
+//!
+//! * [`BatchCheckpoint`] — the seven batch methods. The checkpoint
+//!   carries the *resolved fit ingredients* (hyperparameters, data,
+//!   machine count, materialized support set and partition, rank,
+//!   threads, seed, precision mode) rather than the fitted factors:
+//!   fitting from a resolved spec is bitwise-reproducible in this
+//!   crate, so re-running the deterministic fit on load reproduces the
+//!   original model exactly while keeping the file format independent
+//!   of every internal factor layout.
+//! * [`ServedCheckpoint`] — a [`crate::server::ServedModel`]'s fitted
+//!   state (support set, global/local summaries, centered targets).
+//!   Loading re-stages the predictive operators through the same pure
+//!   constructors `fit` uses, so a cold-started node serves bitwise
+//!   what the original process served — without refitting.
+//! * [`OnlineCheckpoint`] — an [`crate::api::OnlineSession`] mid-stream:
+//!   fit ingredients plus the assimilated global summary, its Cholesky
+//!   factor, and each machine's latest block. Restoring and absorbing
+//!   the remaining batches is bitwise-identical to an uninterrupted
+//!   run (pinned in `tests/integration_store.rs`). The wall-clock
+//!   `absorb_makespan` accumulator is deliberately *not* persisted —
+//!   it is measurement, not model state, and would break byte-identity
+//!   of checkpoints across runs.
+//!
+//! File format and error taxonomy live in [`format`]; writes go through
+//! [`write_bytes_atomic`] (temp file + fsync + rename) so a crash
+//! mid-snapshot never clobbers the last good checkpoint.
+
+pub mod format;
+
+pub use format::{crc32, StoreError, FORMAT_VERSION, MAGIC};
+
+use crate::api::Method;
+use crate::gp::summaries::{GlobalSummary, LocalSummary};
+use crate::kernel::SeArd;
+use crate::linalg::Mat;
+use format::{Reader, SectionWriter, Writer};
+use std::path::Path;
+
+/// One machine's durable block: inputs, centered targets, and the
+/// Definition-2 local summary.
+pub type BlockState = (Mat, Vec<f64>, LocalSummary);
+
+// ---------------------------------------------------------------------
+// Method tags
+// ---------------------------------------------------------------------
+
+/// Stable on-disk tag for each model family. Tags are append-only —
+/// never renumber.
+#[must_use]
+pub fn tag_of(method: Method) -> u8 {
+    match method {
+        Method::Fgp => 1,
+        Method::Pitc => 2,
+        Method::Pic => 3,
+        Method::Icf => 4,
+        Method::PPitc => 5,
+        Method::PPic => 6,
+        Method::PIcf => 7,
+        Method::Online => 8,
+    }
+}
+
+/// Tag for the staged serving model (not an `api::Method`).
+pub const SERVED_TAG: u8 = 9;
+
+fn method_of(tag: u8) -> Option<Method> {
+    Some(match tag {
+        1 => Method::Fgp,
+        2 => Method::Pitc,
+        3 => Method::Pic,
+        4 => Method::Icf,
+        5 => Method::PPitc,
+        6 => Method::PPic,
+        7 => Method::PIcf,
+        8 => Method::Online,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint payloads
+// ---------------------------------------------------------------------
+
+/// Resolved fit ingredients for one of the seven batch methods.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchCheckpoint {
+    pub method: Method,
+    pub hyp: SeArd,
+    pub xd: Mat,
+    pub y: Vec<f64>,
+    pub machines: usize,
+    /// Materialized support points (None for methods without S).
+    pub support: Option<Mat>,
+    /// Materialized Definition-1 partition (None for FGP).
+    pub partition: Option<Vec<Vec<usize>>>,
+    pub rank: Option<usize>,
+    pub threads: usize,
+    pub seed: u64,
+    pub mixed_precision: bool,
+}
+
+/// A `ServedModel`'s fitted state (operators are re-staged on load).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServedCheckpoint {
+    pub hyp: SeArd,
+    pub xs: Mat,
+    pub y_mean: f64,
+    pub global: GlobalSummary,
+    /// Per-machine (inputs, centered targets, local summary).
+    pub blocks: Vec<BlockState>,
+    pub mixed_precision: bool,
+}
+
+/// An `OnlineSession` mid-stream: fit ingredients + assimilated state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OnlineCheckpoint {
+    pub hyp: SeArd,
+    pub xd: Mat,
+    pub y: Vec<f64>,
+    pub machines: usize,
+    pub support: Mat,
+    pub partition: Vec<Vec<usize>>,
+    pub threads: usize,
+    pub seed: u64,
+    pub mixed_precision: bool,
+    /// Target mean fixed by the first absorbed batch (None before it).
+    pub y_mean: Option<f64>,
+    pub global: Option<GlobalSummary>,
+    /// chol of the assimilated global summary matrix.
+    pub l_g: Option<Mat>,
+    /// Each machine's latest absorbed block (None if it never got one).
+    pub latest: Vec<Option<BlockState>>,
+    pub batches: usize,
+}
+
+/// Any pgpr checkpoint. Encode/decode are exact inverses and encoding
+/// is a pure function of the state — the same state always produces the
+/// same bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Checkpoint {
+    Batch(BatchCheckpoint),
+    Served(ServedCheckpoint),
+    Online(OnlineCheckpoint),
+}
+
+impl Checkpoint {
+    /// On-disk method tag.
+    #[must_use]
+    pub fn tag(&self) -> u8 {
+        match self {
+            Checkpoint::Batch(b) => tag_of(b.method),
+            Checkpoint::Online(_) => tag_of(Method::Online),
+            Checkpoint::Served(_) => SERVED_TAG,
+        }
+    }
+
+    /// Human name of the stored model family (paper terminology).
+    #[must_use]
+    pub fn method_name(&self) -> &'static str {
+        match self {
+            Checkpoint::Batch(b) => b.method.name(),
+            Checkpoint::Online(_) => Method::Online.name(),
+            Checkpoint::Served(_) => "served",
+        }
+    }
+
+    /// Serialize to the versioned byte format (deterministic).
+    #[must_use]
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new(self.tag());
+        match self {
+            Checkpoint::Batch(b) => encode_batch(&mut w, b),
+            Checkpoint::Served(s) => encode_served(&mut w, s),
+            Checkpoint::Online(o) => encode_online(&mut w, o),
+        }
+        w.finish()
+    }
+
+    /// Parse + validate a checkpoint image.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, StoreError> {
+        let (tag, mut r) = Reader::open(bytes)?;
+        let ckpt = if tag == SERVED_TAG {
+            Checkpoint::Served(decode_served(&mut r)?)
+        } else {
+            match method_of(tag) {
+                None => return Err(StoreError::UnknownMethodTag(tag)),
+                Some(Method::Online) => Checkpoint::Online(decode_online(&mut r)?),
+                Some(m) => Checkpoint::Batch(decode_batch(&mut r, m)?),
+            }
+        };
+        r.finish()?;
+        Ok(ckpt)
+    }
+
+    /// CRC-32 of the encoded image — the "checkpoint version hash"
+    /// surfaced by `/healthz`.
+    #[must_use]
+    pub fn version_hash(&self) -> u32 {
+        crc32(&self.encode())
+    }
+
+    /// Atomically write to `path`; returns the byte count written.
+    /// Instrumented once here so every snapshot path (CLI, periodic,
+    /// admin endpoint, facade `save`) exports the same telemetry.
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<u64, StoreError> {
+        let _span = crate::obsv::span("store.snapshot")
+            .with_str("method", self.method_name());
+        let t0 = std::time::Instant::now();
+        let bytes = self.encode();
+        write_bytes_atomic(path, &bytes)?;
+        if crate::obsv::enabled() {
+            crate::obsv::counter_add("store.snapshot.count", 1);
+            crate::obsv::counter_add("store.snapshot.bytes",
+                                     bytes.len() as u64);
+            crate::obsv::observe("store.snapshot.latency_s",
+                                 crate::obsv::Unit::Seconds,
+                                 t0.elapsed().as_secs_f64());
+        }
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read + decode a checkpoint file.
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Checkpoint, StoreError> {
+        let _span = crate::obsv::span("store.restore");
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))?;
+        let ck = Checkpoint::decode(&bytes)?;
+        crate::obsv::counter_add("store.restore.count", 1);
+        Ok(ck)
+    }
+}
+
+/// Crash-safe file write: temp sibling + fsync + atomic rename, so the
+/// destination always holds either the old image or the complete new
+/// one — never a torn write.
+pub fn write_bytes_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<(), StoreError> {
+    use std::io::Write;
+    let path = path.as_ref();
+    let mut tmp_os = path.as_os_str().to_os_string();
+    tmp_os.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_os);
+    let ctx = |e: std::io::Error| StoreError::Io(format!("{}: {e}", tmp.display()));
+    let mut f = std::fs::File::create(&tmp).map_err(ctx)?;
+    f.write_all(bytes).map_err(ctx)?;
+    f.sync_all().map_err(ctx)?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .map_err(|e| StoreError::Io(format!("{}: {e}", path.display())))
+}
+
+// ---------------------------------------------------------------------
+// Shared field codecs
+// ---------------------------------------------------------------------
+
+fn put_hyp(s: &mut SectionWriter<'_>, hyp: &SeArd) {
+    s.put_vec_f64(&hyp.log_ls);
+    s.put_f64(hyp.log_sf2);
+    s.put_f64(hyp.log_sn2);
+}
+
+fn get_hyp(r: &mut Reader<'_>) -> Result<SeArd, StoreError> {
+    Ok(SeArd {
+        log_ls: r.get_vec_f64()?,
+        log_sf2: r.get_f64()?,
+        log_sn2: r.get_f64()?,
+    })
+}
+
+fn put_partition(s: &mut SectionWriter<'_>, blocks: &[Vec<usize>]) {
+    s.put_usize(blocks.len());
+    for b in blocks {
+        s.put_vec_usize(b);
+    }
+}
+
+fn get_partition(r: &mut Reader<'_>) -> Result<Vec<Vec<usize>>, StoreError> {
+    let n = r.get_usize()?;
+    let mut blocks = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        blocks.push(r.get_vec_usize()?);
+    }
+    Ok(blocks)
+}
+
+fn put_block(s: &mut SectionWriter<'_>, (xm, ym, loc): &BlockState) {
+    s.put_mat(xm);
+    s.put_vec_f64(ym);
+    s.put_vec_f64(&loc.y_dot);
+    s.put_mat(&loc.s_dot);
+    s.put_mat(&loc.l_m);
+}
+
+fn get_block(r: &mut Reader<'_>) -> Result<BlockState, StoreError> {
+    let xm = r.get_mat()?;
+    let ym = r.get_vec_f64()?;
+    let loc = LocalSummary {
+        y_dot: r.get_vec_f64()?,
+        s_dot: r.get_mat()?,
+        l_m: r.get_mat()?,
+    };
+    Ok((xm, ym, loc))
+}
+
+fn put_global(s: &mut SectionWriter<'_>, g: &GlobalSummary) {
+    s.put_vec_f64(&g.y);
+    s.put_mat(&g.s);
+}
+
+fn get_global(r: &mut Reader<'_>) -> Result<GlobalSummary, StoreError> {
+    Ok(GlobalSummary { y: r.get_vec_f64()?, s: r.get_mat()? })
+}
+
+// ---------------------------------------------------------------------
+// Batch
+// ---------------------------------------------------------------------
+
+fn encode_batch(w: &mut Writer, b: &BatchCheckpoint) {
+    w.section("spec", |s| {
+        s.put_usize(b.machines);
+        s.put_usize(b.threads);
+        s.put_u64(b.seed);
+        s.put_opt_usize(b.rank);
+        s.put_bool(b.mixed_precision);
+    });
+    w.section("hyp", |s| put_hyp(s, &b.hyp));
+    w.section("data", |s| {
+        s.put_mat(&b.xd);
+        s.put_vec_f64(&b.y);
+    });
+    w.section("support", |s| s.put_opt_mat(b.support.as_ref()));
+    w.section("partition", |s| match &b.partition {
+        Some(p) => {
+            s.put_bool(true);
+            put_partition(s, p);
+        }
+        None => s.put_bool(false),
+    });
+}
+
+fn decode_batch(r: &mut Reader<'_>, method: Method) -> Result<BatchCheckpoint, StoreError> {
+    r.section("spec")?;
+    let machines = r.get_usize()?;
+    let threads = r.get_usize()?;
+    let seed = r.get_u64()?;
+    let rank = r.get_opt_usize()?;
+    let mixed_precision = r.get_bool()?;
+    r.section("hyp")?;
+    let hyp = get_hyp(r)?;
+    r.section("data")?;
+    let xd = r.get_mat()?;
+    let y = r.get_vec_f64()?;
+    r.section("support")?;
+    let support = r.get_opt_mat()?;
+    r.section("partition")?;
+    let partition = if r.get_bool()? { Some(get_partition(r)?) } else { None };
+    Ok(BatchCheckpoint {
+        method,
+        hyp,
+        xd,
+        y,
+        machines,
+        support,
+        partition,
+        rank,
+        threads,
+        seed,
+        mixed_precision,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Served
+// ---------------------------------------------------------------------
+
+fn encode_served(w: &mut Writer, m: &ServedCheckpoint) {
+    w.section("hyp", |s| put_hyp(s, &m.hyp));
+    w.section("support", |s| s.put_mat(&m.xs));
+    w.section("moments", |s| {
+        s.put_f64(m.y_mean);
+        put_global(s, &m.global);
+    });
+    w.section("blocks", |s| {
+        s.put_usize(m.blocks.len());
+        for b in &m.blocks {
+            put_block(s, b);
+        }
+    });
+    w.section("serve", |s| s.put_bool(m.mixed_precision));
+}
+
+fn decode_served(r: &mut Reader<'_>) -> Result<ServedCheckpoint, StoreError> {
+    r.section("hyp")?;
+    let hyp = get_hyp(r)?;
+    r.section("support")?;
+    let xs = r.get_mat()?;
+    r.section("moments")?;
+    let y_mean = r.get_f64()?;
+    let global = get_global(r)?;
+    r.section("blocks")?;
+    let n = r.get_usize()?;
+    let mut blocks = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        blocks.push(get_block(r)?);
+    }
+    r.section("serve")?;
+    let mixed_precision = r.get_bool()?;
+    if global.y.len() != xs.rows {
+        return Err(StoreError::Corrupt {
+            section: "moments",
+            reason: format!(
+                "global summary dim {} != support size {}",
+                global.y.len(),
+                xs.rows
+            ),
+        });
+    }
+    Ok(ServedCheckpoint { hyp, xs, y_mean, global, blocks, mixed_precision })
+}
+
+// ---------------------------------------------------------------------
+// Online
+// ---------------------------------------------------------------------
+
+fn encode_online(w: &mut Writer, o: &OnlineCheckpoint) {
+    w.section("spec", |s| {
+        s.put_usize(o.machines);
+        s.put_usize(o.threads);
+        s.put_u64(o.seed);
+        s.put_bool(o.mixed_precision);
+    });
+    w.section("hyp", |s| put_hyp(s, &o.hyp));
+    w.section("data", |s| {
+        s.put_mat(&o.xd);
+        s.put_vec_f64(&o.y);
+    });
+    w.section("support", |s| s.put_mat(&o.support));
+    w.section("partition", |s| put_partition(s, &o.partition));
+    w.section("stream", |s| {
+        s.put_opt_f64(o.y_mean);
+        s.put_usize(o.batches);
+    });
+    w.section("global", |s| {
+        match &o.global {
+            Some(g) => {
+                s.put_bool(true);
+                put_global(s, g);
+            }
+            None => s.put_bool(false),
+        }
+        s.put_opt_mat(o.l_g.as_ref());
+    });
+    w.section("latest", |s| {
+        s.put_usize(o.latest.len());
+        for slot in &o.latest {
+            match slot {
+                Some(b) => {
+                    s.put_bool(true);
+                    put_block(s, b);
+                }
+                None => s.put_bool(false),
+            }
+        }
+    });
+}
+
+fn decode_online(r: &mut Reader<'_>) -> Result<OnlineCheckpoint, StoreError> {
+    r.section("spec")?;
+    let machines = r.get_usize()?;
+    let threads = r.get_usize()?;
+    let seed = r.get_u64()?;
+    let mixed_precision = r.get_bool()?;
+    r.section("hyp")?;
+    let hyp = get_hyp(r)?;
+    r.section("data")?;
+    let xd = r.get_mat()?;
+    let y = r.get_vec_f64()?;
+    r.section("support")?;
+    let support = r.get_mat()?;
+    r.section("partition")?;
+    let partition = get_partition(r)?;
+    r.section("stream")?;
+    let y_mean = r.get_opt_f64()?;
+    let batches = r.get_usize()?;
+    r.section("global")?;
+    let global = if r.get_bool()? { Some(get_global(r)?) } else { None };
+    let l_g = r.get_opt_mat()?;
+    r.section("latest")?;
+    let n = r.get_usize()?;
+    let mut latest = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        latest.push(if r.get_bool()? { Some(get_block(r)?) } else { None });
+    }
+    if latest.len() != machines {
+        return Err(StoreError::Corrupt {
+            section: "latest",
+            reason: format!("{} slots for {} machines", latest.len(), machines),
+        });
+    }
+    Ok(OnlineCheckpoint {
+        hyp,
+        xd,
+        y,
+        machines,
+        support,
+        partition,
+        threads,
+        seed,
+        mixed_precision,
+        y_mean,
+        global,
+        l_g,
+        latest,
+        batches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> Checkpoint {
+        Checkpoint::Batch(BatchCheckpoint {
+            method: Method::PPic,
+            hyp: SeArd::isotropic(2, 1.0, 1.0, 0.05),
+            xd: Mat::from_vec(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]),
+            y: vec![1.0, -2.0, 3.0],
+            machines: 2,
+            support: Some(Mat::from_vec(1, 2, vec![0.5, 0.5])),
+            partition: Some(vec![vec![0, 2], vec![1]]),
+            rank: None,
+            threads: 0,
+            seed: 7,
+            mixed_precision: false,
+        })
+    }
+
+    #[test]
+    fn batch_roundtrip_and_determinism() {
+        let ck = sample_batch();
+        let a = ck.encode();
+        let b = ck.encode();
+        assert_eq!(a, b, "encoding must be deterministic");
+        let back = Checkpoint::decode(&a).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.encode(), a, "re-serialization must be byte-identical");
+        assert_eq!(ck.method_name(), "pPIC");
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let mut bytes = sample_batch().encode();
+        bytes[12] = 42;
+        let len = bytes.len();
+        let c = crc32(&bytes[..len - 4]);
+        bytes[len - 4..].copy_from_slice(&c.to_le_bytes());
+        assert_eq!(
+            Checkpoint::decode(&bytes).unwrap_err(),
+            StoreError::UnknownMethodTag(42)
+        );
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_temp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("pgpr_store_unit.ckpt");
+        let ck = sample_batch();
+        let n = ck.write_file(&path).unwrap();
+        assert_eq!(n, ck.encode().len() as u64);
+        assert!(!path.with_extension("ckpt.tmp").exists());
+        let back = Checkpoint::read_file(&path).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncation_every_prefix_yields_typed_error() {
+        let bytes = sample_batch().encode();
+        for cut in 0..bytes.len() {
+            match Checkpoint::decode(&bytes[..cut]) {
+                Err(_) => {}
+                Ok(_) => panic!("prefix of {cut} bytes decoded successfully"),
+            }
+        }
+    }
+}

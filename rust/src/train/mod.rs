@@ -29,6 +29,11 @@
 //! [`crate::server::ServedModel::refit`] — same jitter conventions
 //! end-to-end. Entry points: `pgpr train` (CLI) and
 //! [`dist::train_pitc`].
+//!
+//! A live deployment consumes a training run without downtime through
+//! [`refit_for_swap`]: refit off the serving thread, then hand the
+//! replacement to [`crate::server::ServedModel::swap_in`] (or checkpoint
+//! it and `POST /v1/admin/reload` a running `pgpr node`).
 
 pub mod dist;
 pub mod nlml;
@@ -40,3 +45,20 @@ pub use dist::{
 };
 pub use nlml::{pitc_nlml_and_grad, LocalStats, TrainSupport};
 pub use optim::{minimize, AdamConfig, OptimResult};
+
+/// Turn a finished training run into a swap-ready serving model: refit
+/// `live`'s summaries under the trained hyperparameters — same data
+/// partition, same routing topology, mixed-precision staging preserved
+/// — and return the replacement for
+/// [`crate::server::ServedModel::swap_in`]. The refit runs on the
+/// caller's thread, so a deployment trains + refits off the serving
+/// loop and the swap itself is one pointer-sized move: in-flight
+/// requests finish on the old model, later ones see only the new one.
+#[must_use]
+pub fn refit_for_swap(
+    live: &crate::server::ServedModel,
+    trained: &TrainResult,
+    backend: &dyn crate::runtime::Backend,
+) -> crate::server::ServedModel {
+    live.refit(&trained.hyp, backend)
+}

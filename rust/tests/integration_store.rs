@@ -1,0 +1,430 @@
+//! Integration: durable model state — `store/` checkpoints end to end.
+//!
+//! Pins the PR's durability contract:
+//! * **Round-trip**: every `api::Method` (7 batch + online) at
+//!   M ∈ {1, 4, 8} saves, loads, and predicts bitwise what the original
+//!   predicted — and re-serializing the loaded model reproduces the
+//!   on-disk image byte for byte (checkpoints are deterministic).
+//! * **Crash recovery**: an online session checkpointed mid-stream and
+//!   restored "in a new process" continues bitwise-identically to a run
+//!   that was never interrupted.
+//! * **Hot-swap under live traffic**: a `pgpr node` snapshots and
+//!   reloads while predicts stream in; every admitted request is
+//!   answered, every answer matches exactly one model, and the swap is
+//!   visible in `/healthz`.
+//! * **Corruption**: bit flips, truncations, wrong magic, future
+//!   versions, unknown tags and family mismatches all come back as
+//!   typed `StoreError`s — never a panic.
+
+use std::time::Duration;
+
+use pgpr::api::{ApiError, Gp, Method, OnlineSession, PredictSpec,
+                Regressor};
+use pgpr::kernel::SeArd;
+use pgpr::linalg::{LinalgCtx, Mat};
+use pgpr::net::loadgen::HttpClient;
+use pgpr::net::{NodeConfig, NodeServer};
+use pgpr::server::{ServeScratch, ServedModel};
+use pgpr::store::{crc32, Checkpoint, StoreError, FORMAT_VERSION};
+use pgpr::util::json::{self, Json};
+use pgpr::util::Pcg64;
+
+const D: usize = 2;
+
+fn problem(n: usize, seed: u64) -> (SeArd, Mat, Vec<f64>, Mat, Mat) {
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(D, 0.9, 1.0, 0.08);
+    let xd = Mat::from_vec(n, D, rng.normals(n * D));
+    let y = rng.normals(n);
+    let xs = Mat::from_vec(6, D, rng.normals(6 * D));
+    let xu = Mat::from_vec(5, D, rng.normals(5 * D));
+    (hyp, xd, y, xs, xu)
+}
+
+/// Deterministic served model — two builds with the same knobs are
+/// bitwise-identical (pinned by `service.rs` tests).
+fn served_model(n: usize, m: usize, s: usize, seed: u64) -> ServedModel {
+    let mut rng = Pcg64::seed(seed);
+    let hyp = SeArd::isotropic(D, 1.0, 1.0, 0.05);
+    let xd = Mat::from_vec(n, D, rng.normals(n * D));
+    let y = rng.normals(n);
+    Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support_size(s)
+        .seed(seed)
+        .serve()
+        .expect("fit")
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+fn predict_body(x: &[f64]) -> String {
+    json::obj(vec![(
+        "x",
+        Json::Arr(x.iter().map(|&v| Json::Num(v)).collect()),
+    )])
+    .to_string_compact()
+}
+
+// ---------------------------------------------------------------------
+
+/// Save → load → predict is bitwise-identical for every batch method at
+/// every machine count, and the loaded model re-serializes to the exact
+/// on-disk bytes.
+#[test]
+fn roundtrip_pins_every_batch_method() {
+    let (hyp, xd, y, xs, xu) = problem(24, 3);
+    for m in [1usize, 4, 8] {
+        for method in Method::ALL {
+            let gp = Gp::builder()
+                .method(method)
+                .hyp(hyp.clone())
+                .data(xd.clone(), y.clone())
+                .machines(m)
+                .support(xs.clone())
+                .rank(12)
+                .seed(5)
+                .fit()
+                .unwrap();
+            let want = gp.predict(&xu).unwrap();
+            let bytes0 = gp.checkpoint().unwrap().encode();
+
+            let path =
+                tmp(&format!("pgpr_store_rt_{}_{m}.bin", method.name()));
+            let written = gp.save(&path).unwrap();
+            let on_disk = std::fs::read(&path).unwrap();
+            assert_eq!(written as usize, on_disk.len());
+            assert_eq!(on_disk, bytes0,
+                       "{} M={m}: file differs from encode()",
+                       method.name());
+
+            let loaded = Gp::load(&path).unwrap();
+            assert_eq!(loaded.method(), method);
+            let got = loaded.predict(&xu).unwrap();
+            assert_eq!(got.mean, want.mean, "{} M={m} mean",
+                       method.name());
+            assert_eq!(got.var, want.var, "{} M={m} var", method.name());
+
+            // the loaded model's own checkpoint is the same image
+            let bytes1 = loaded.checkpoint().unwrap().encode();
+            assert_eq!(bytes1, bytes0,
+                       "{} M={m}: re-serialization drifted",
+                       method.name());
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// The online session round-trips too: absorb a batch, save through the
+/// `Regressor` trait, reload through the facade, predict bitwise.
+#[test]
+fn roundtrip_pins_online_session() {
+    let (hyp, xd, y, xs, xu) = problem(24, 13);
+    for m in [1usize, 4, 8] {
+        let mut sess = Gp::builder()
+            .hyp(hyp.clone())
+            .data(xd.clone(), y.clone())
+            .machines(m)
+            .support(xs.clone())
+            .seed(13)
+            .online()
+            .unwrap();
+        let mut rng = Pcg64::seed(29 + m as u64);
+        let batch: Vec<(Mat, Vec<f64>)> = (0..m)
+            .map(|_| (Mat::from_vec(3, D, rng.normals(3 * D)),
+                      rng.normals(3)))
+            .collect();
+        sess.absorb(&batch).unwrap();
+        let want = sess.predict(&PredictSpec::new(xu.clone())).unwrap();
+
+        let path = tmp(&format!("pgpr_store_rt_online_{m}.bin"));
+        sess.save(&path).unwrap();
+        let bytes0 = sess.checkpoint().unwrap().encode();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes0);
+
+        let loaded = Gp::load(&path).unwrap();
+        assert_eq!(loaded.method(), Method::Online);
+        assert_eq!(loaded.machines(), m);
+        let got = loaded.predict(&xu).unwrap();
+        assert_eq!(got.mean, want.mean, "online M={m} mean");
+        assert_eq!(got.var, want.var, "online M={m} var");
+        assert_eq!(loaded.checkpoint().unwrap().encode(), bytes0,
+                   "online M={m}: re-serialization drifted");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+/// §5.2 crash recovery: checkpoint an online session mid-stream, drop
+/// it ("the process dies"), restore from bytes alone, stream the rest —
+/// predictions and the final checkpoint are bitwise those of a run that
+/// was never interrupted.
+#[test]
+fn online_midstream_restore_matches_uninterrupted_run() {
+    let (hyp, xd, y, xs, xu) = problem(16, 7);
+    let m = 2;
+    let b = Gp::builder()
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(m)
+        .support(xs)
+        .seed(7);
+    // one fixed stream of four batch rounds, replayed on both paths
+    let mut rng = Pcg64::seed(41);
+    let rounds: Vec<Vec<(Mat, Vec<f64>)>> = (0..4)
+        .map(|_| {
+            (0..m)
+                .map(|_| (Mat::from_vec(3, D, rng.normals(3 * D)),
+                          rng.normals(3)))
+                .collect()
+        })
+        .collect();
+
+    let mut straight = b.online().unwrap();
+    for round in &rounds {
+        straight.absorb(round).unwrap();
+    }
+
+    let mut first = b.online().unwrap();
+    for round in &rounds[..2] {
+        first.absorb(round).unwrap();
+    }
+    let bytes = first.checkpoint().unwrap().encode();
+    drop(first); // the crash: nothing survives but the bytes
+
+    let ck = match Checkpoint::decode(&bytes).unwrap() {
+        Checkpoint::Online(o) => o,
+        other => panic!("wrong family {}", other.method_name()),
+    };
+    let mut resumed = OnlineSession::from_checkpoint(ck).unwrap();
+    assert_eq!(resumed.batches(), 3); // fit batch + two absorbed
+    for round in &rounds[2..] {
+        resumed.absorb(round).unwrap();
+    }
+    assert_eq!(resumed.batches(), straight.batches());
+
+    let ps = PredictSpec::new(xu);
+    let want = straight.predict(&ps).unwrap();
+    let got = resumed.predict(&ps).unwrap();
+    assert_eq!(got.mean, want.mean);
+    assert_eq!(got.var, want.var);
+    // even the durable state re-converges byte for byte
+    assert_eq!(resumed.checkpoint().unwrap().encode(),
+               straight.checkpoint().unwrap().encode());
+}
+
+/// Hot-swap under live traffic: `POST /v1/admin/snapshot` then
+/// `/v1/admin/reload` while predicts stream in. Every admitted request
+/// is answered (200, or 503 inside the restore window — never dropped),
+/// every answer is bitwise one model's, and `/healthz` reports the swap
+/// with the new model's version hash.
+#[test]
+fn node_snapshot_reload_hot_swap_under_live_traffic() {
+    let p = tmp("pgpr_store_node_ck.bin");
+    let _ = std::fs::remove_file(&p);
+    let twin = served_model(48, 3, 8, 17);
+    let cfg = NodeConfig {
+        workers: 4,
+        read_timeout_s: 0.25,
+        idle_close_s: 1.0,
+        deadline_s: 5.0,
+        checkpoint_path: Some(p.clone()),
+        ..NodeConfig::default()
+    };
+    let h = NodeServer::start(served_model(48, 3, 8, 17),
+                              "127.0.0.1:0", cfg)
+        .expect("bind");
+    let t = h.addr().to_string();
+
+    let (answers, _shed) = std::thread::scope(|s| {
+        let t2 = &t;
+        let traffic = s.spawn(move || {
+            let mut rng = Pcg64::seed(71);
+            let mut c = HttpClient::connect(t2, 10.0).unwrap();
+            let mut answers = Vec::new();
+            let mut shed = 0u32;
+            for _ in 0..150 {
+                let x = rng.normals(D);
+                let (status, resp) = c
+                    .post("/v1/predict", predict_body(&x).as_bytes())
+                    .unwrap();
+                match status {
+                    200 => {
+                        let doc = Json::parse(
+                            std::str::from_utf8(&resp).unwrap())
+                            .unwrap();
+                        let mean = doc.get("mean")
+                            .and_then(Json::as_f64).unwrap();
+                        let var = doc.get("var")
+                            .and_then(Json::as_f64).unwrap();
+                        answers.push((x, mean, var));
+                    }
+                    503 => shed += 1, // restore window: shed, not dropped
+                    other => panic!("unexpected status {other}"),
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            (answers, shed)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let mut admin = HttpClient::connect(&t, 30.0).unwrap();
+
+        let (status, body) = admin.post("/v1/admin/snapshot", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert!(doc.get("bytes").and_then(Json::as_usize).unwrap() > 0);
+        // snapshots are deterministic across processes: the on-disk
+        // image is bitwise the local twin's encoding
+        assert_eq!(std::fs::read(&p).unwrap(),
+                   twin.to_checkpoint().encode());
+
+        let (status, body) = admin.post("/v1/admin/reload", b"").unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(doc.get("machines").and_then(Json::as_usize), Some(3));
+
+        traffic.join().unwrap()
+    });
+
+    // every answered request matches the one model, bitwise — no
+    // response came from a half-swapped state
+    assert!(!answers.is_empty(), "no request was answered");
+    let lctx = LinalgCtx::serial();
+    let mut scratch = ServeScratch::new();
+    for (x, mean, var) in &answers {
+        let m = twin.router.route(x);
+        let (mv, vv) =
+            twin.predict_batch_fast(m, x, 1, 1, &lctx, &mut scratch);
+        assert_eq!(mean.to_bits(), mv[0].to_bits());
+        assert_eq!(var.to_bits(), vv[0].to_bits());
+    }
+
+    // the swap is visible in /healthz with the new model's identity
+    let mut c = HttpClient::connect(&t, 10.0).unwrap();
+    let doc = c.get_json("/healthz").unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(doc.get("method").and_then(Json::as_str), Some("served"));
+    assert_eq!(doc.get("swaps").and_then(Json::as_usize), Some(1));
+    let vh = doc.get("model_version").and_then(Json::as_str).unwrap();
+    assert_eq!(vh.len(), 8, "model_version {vh:?} not 8 hex digits");
+    assert_eq!(u32::from_str_radix(vh, 16).unwrap(),
+               twin.to_checkpoint().version_hash());
+
+    h.shutdown_and_join();
+    let _ = std::fs::remove_file(&p);
+}
+
+/// Corrupt input is a typed error, never a panic: every single-bit flip
+/// and every truncation of a valid image is rejected, and each header
+/// field failure names itself.
+#[test]
+fn corrupt_checkpoints_fail_typed_never_panic() {
+    let (hyp, xd, y, xs, _xu) = problem(16, 11);
+    let gp = Gp::builder()
+        .method(Method::PPitc)
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(2)
+        .support(xs)
+        .seed(11)
+        .fit()
+        .unwrap();
+    let good = gp.checkpoint().unwrap().encode();
+    assert!(Checkpoint::decode(&good).is_ok());
+
+    // single-bit flips anywhere in the image: the CRC (or an earlier
+    // header check) catches every one
+    for i in 0..good.len() {
+        for bit in [0x01u8, 0x80] {
+            let mut bad = good.clone();
+            bad[i] ^= bit;
+            let err = Checkpoint::decode(&bad).expect_err(
+                &format!("flip of byte {i} (mask {bit:#x}) accepted"));
+            assert!(
+                matches!(err,
+                         StoreError::BadMagic
+                         | StoreError::UnsupportedVersion { .. }
+                         | StoreError::Checksum { .. }),
+                "flip of byte {i}: unexpected error {err:?}"
+            );
+        }
+    }
+
+    // truncation at every prefix length
+    for len in 0..good.len() {
+        assert!(Checkpoint::decode(&good[..len]).is_err(),
+                "truncation to {len} bytes accepted");
+    }
+
+    // restamp the trailing CRC so only the field under test is at fault
+    fn restamp(bytes: &mut [u8]) {
+        let n = bytes.len();
+        let c = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&c.to_le_bytes());
+    }
+
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    restamp(&mut bad);
+    assert_eq!(Checkpoint::decode(&bad).unwrap_err(),
+               StoreError::BadMagic);
+
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&9u32.to_le_bytes());
+    restamp(&mut bad);
+    assert_eq!(Checkpoint::decode(&bad).unwrap_err(),
+               StoreError::UnsupportedVersion {
+                   found: 9,
+                   supported: FORMAT_VERSION,
+               });
+
+    let mut bad = good.clone();
+    bad[12] = 0xEE;
+    restamp(&mut bad);
+    assert_eq!(Checkpoint::decode(&bad).unwrap_err(),
+               StoreError::UnknownMethodTag(0xEE));
+}
+
+/// Family mismatches are typed at both doors: a batch checkpoint won't
+/// load as a served model, and a served checkpoint won't load through
+/// the facade.
+#[test]
+fn family_mismatch_is_typed_at_both_doors() {
+    let (hyp, xd, y, xs, _xu) = problem(16, 19);
+    let gp = Gp::builder()
+        .method(Method::PPitc)
+        .hyp(hyp)
+        .data(xd, y)
+        .machines(2)
+        .support(xs)
+        .seed(19)
+        .fit()
+        .unwrap();
+
+    let p = tmp("pgpr_store_family_batch.bin");
+    gp.save(&p).unwrap();
+    let Err(err) = ServedModel::load(&p) else {
+        panic!("served load accepted a batch checkpoint");
+    };
+    assert_eq!(err,
+               ApiError::Store(StoreError::MethodMismatch {
+                   expected: "served",
+                   found: "pPITC",
+               }));
+    let _ = std::fs::remove_file(&p);
+
+    let p = tmp("pgpr_store_family_served.bin");
+    served_model(32, 2, 6, 23).save(&p).unwrap();
+    let Err(err) = Gp::load(&p) else {
+        panic!("facade load accepted a served checkpoint");
+    };
+    assert_eq!(err,
+               ApiError::Store(StoreError::MethodMismatch {
+                   expected: "an api::Method model",
+                   found: "served",
+               }));
+    let _ = std::fs::remove_file(&p);
+}
